@@ -1,0 +1,63 @@
+//! Reliability features live (paper §4): a hard node failure at step 6
+//! and a soft (NaN) failure at step 4 of the relaunched run, both
+//! recovered automatically from buffer nodes + dual checkpoints.
+//!
+//! Run: `cargo run --release --example fault_tolerance`
+
+use optimus::ckpt::DualCheckpointer;
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, StepHook, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::ft::{CkptHook, HardKillHook, Launcher, NanInjectHook};
+use std::sync::Arc;
+
+struct Chain(Vec<Arc<dyn StepHook>>);
+impl StepHook for Chain {
+    fn on_step(&self, r: usize, s: usize, l: f32, p: &mut [f32]) -> optimus::Result<()> {
+        self.0.iter().try_for_each(|h| h.on_step(r, s, l, p))
+    }
+}
+
+fn main() -> optimus::Result<()> {
+    let data_dir = std::env::temp_dir().join("optimus-ft-demo-data");
+    if !data_dir.exists() {
+        preprocess::preprocess(&corpus::data_files(42, 3, 16), 64, 7, &data_dir, 256)?;
+    }
+    let ckroot = std::env::temp_dir().join("optimus-ft-demo-ckpt");
+    let _ = std::fs::remove_dir_all(&ckroot);
+
+    let manifest = Manifest::load(&optimus::artifacts_dir())?;
+    let hard = Arc::new(HardKillHook::once(1, 6));
+    let soft = Arc::new(NanInjectHook::once(0, 4));
+    // 2 active "nodes" + 2 buffer nodes
+    let launcher = Launcher::new(2, 2);
+
+    let report = launcher.run(|attempt, nodes| {
+        println!("\n=== attempt {attempt} on nodes {nodes:?} ===");
+        let dual = DualCheckpointer::new(&ckroot);
+        if let Some(c) = dual.load_latest() {
+            println!("resuming from checkpoint at step {}", c.step);
+        }
+        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir.clone());
+        o.run.steps = 12;
+        o.run.warmup_steps = 2;
+        o.hook = Arc::new(Chain(vec![
+            hard.clone(),
+            soft.clone(),
+            Arc::new(CkptHook { every: 3, dual: DualCheckpointer::new(&ckroot) }),
+        ]));
+        coordinator::train(&manifest, &o)
+    })?;
+
+    println!(
+        "\nrecovered after {} relaunch(es); {} buffer nodes left; failed: {:?}",
+        launcher.relaunches.load(std::sync::atomic::Ordering::Relaxed),
+        launcher.pool.buffer_len(),
+        launcher.pool.failed_nodes(),
+    );
+    println!("final loss: {:.4}", report.loss.last().unwrap());
+    let latest = DualCheckpointer::new(&ckroot).load_latest().unwrap();
+    println!("latest valid checkpoint: step {}", latest.step);
+    Ok(())
+}

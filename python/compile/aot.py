@@ -1,0 +1,211 @@
+"""AOT compilation: lower every artifact to HLO *text* + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5's 64-bit-instruction-id protos, while
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with ``return_tuple=True``; the Rust
+side unwraps the tuple.
+
+Python runs ONCE (`make artifacts`); the Rust binary is self-contained
+afterwards. The manifest records, per config: the flat parameter layout
+(offset/shape/is_expert/layer — everything SO/EPSO sharding and PP/EP
+segmenting need) and, per artifact: the HLO file plus input/output shapes.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text()
+    # Version-skew shim: jax 0.8's HLO printer emits `topk(..., k=K,
+    # largest=true)`; the xla_extension 0.5.1 text parser predates the
+    # `largest` attribute (its TopK is always largest-first, which is what
+    # router top-k needs). Strip it.
+    assert "largest=false" not in text, "descending topk unsupported by shim"
+    return text.replace(", largest=true", "")
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_plan(cfg: configs.ModelConfig):
+    """(name, fn, example_args) for every artifact of one config."""
+    p_total = model.param_count(cfg)
+    b, s = cfg.batch, cfg.seq
+    h = cfg.hidden
+    toks = _spec((b, s + 1), jnp.int32)
+    flat = _spec((p_total,))
+    plan = [
+        ("train_step", model.make_train_step(cfg, "fsmoe" if cfg.is_moe else "naive"),
+         (flat, toks)),
+        ("eval_step", model.make_eval_step(cfg, "fsmoe" if cfg.is_moe else "naive"),
+         (flat, toks)),
+    ]
+    if cfg.is_moe:
+        t = b * s
+        x = _spec((t, h))
+        fs_step, blk_n = model.make_moe_block_step(cfg, "fsmoe")
+        nv_step, _ = model.make_moe_block_step(cfg, "naive")
+        plan += [
+            ("moe_block_fsmoe", fs_step, (_spec((blk_n,)), x, x)),
+            ("moe_block_naive", nv_step, (_spec((blk_n,)), x, x)),
+        ]
+    return plan
+
+
+def pp_artifact_plan(cfg, pp):
+    """Pipeline-stage artifacts (SAC-native fwdbwd; DESIGN.md §6)."""
+    b, s, h = cfg.batch, cfg.seq, cfg.hidden
+    toks = _spec((b, s + 1), jnp.int32)
+    act = _spec((b, s, h))
+    plan = []
+    for st in range(pp):
+        specs = model.stage_param_specs(cfg, pp, st)
+        pn = specs[-1]["offset"] + specs[-1]["numel"]
+        pf = _spec((pn,))
+        if st == 0:
+            plan.append((f"pp{pp}_stage{st}_fwd",
+                         model.make_stage_fwd(cfg, pp, st), (pf, toks)))
+            plan.append((f"pp{pp}_stage{st}_fwdbwd",
+                         model.make_stage_fwdbwd(cfg, pp, st), (pf, toks, act)))
+        elif st == pp - 1:
+            plan.append((f"pp{pp}_stage{st}_fwdbwd",
+                         model.make_stage_fwdbwd(cfg, pp, st), (pf, act, toks)))
+        else:
+            plan.append((f"pp{pp}_stage{st}_fwd",
+                         model.make_stage_fwd(cfg, pp, st), (pf, act)))
+            plan.append((f"pp{pp}_stage{st}_fwdbwd",
+                         model.make_stage_fwdbwd(cfg, pp, st), (pf, act, act)))
+    return plan
+
+
+def ep_artifact_plan(cfg, ep):
+    """Per-layer EP artifacts (Algorithm 1 split at Stage 1)."""
+    b, s, h, k = cfg.batch, cfg.seq, cfg.hidden, cfg.top_k
+    v = cfg.vocab_size
+    t_local = b * s
+    t_all = ep * t_local
+    toks = _spec((b, s + 1), jnp.int32)
+    act = _spec((b, s, h))
+    x_all = _spec((t_all, h))
+    w_all = _spec((t_all, k))
+    i_all = _spec((t_all, k), jnp.int32)
+    ne = model.layer_nonexpert_specs(cfg)
+    pn_layer = ne[-1]["offset"] + ne[-1]["numel"]
+    pe_n = model.layer_expert_numel(cfg, ep)
+    x2d_local = _spec((t_local, h))
+    w_local = _spec((t_local, k))
+    return [
+        (f"ep{ep}_embed_fwd", model.make_ep_embed_fwd(cfg),
+         (_spec((v * h,)), toks)),
+        (f"ep{ep}_embed_bwd", model.make_ep_embed_bwd(cfg),
+         (_spec((v * h,)), toks, act)),
+        (f"ep{ep}_layer_pre_fwd", model.make_ep_layer_pre_fwd(cfg),
+         (_spec((pn_layer,)), act)),
+        (f"ep{ep}_layer_pre_bwd", model.make_ep_layer_pre_bwd(cfg),
+         (_spec((pn_layer,)), act, act, x2d_local, w_local)),
+        (f"ep{ep}_expert_fwd", model.make_ep_expert_fwd(cfg, ep),
+         (_spec((pe_n,)), x_all, w_all, i_all)),
+        (f"ep{ep}_expert_bwd", model.make_ep_expert_bwd(cfg, ep),
+         (_spec((pe_n,)), x_all, w_all, i_all, x_all)),
+        (f"ep{ep}_head_fwdbwd", model.make_ep_head_fwdbwd(cfg),
+         (_spec((h + h * v,)), act, toks)),
+    ]
+
+
+# Which extra decompositions get lowered, per config (tiny = tests,
+# mini = runnable demos/examples; bigger configs use the fused path).
+PP_FOR = {"mula-tiny": [2], "mula-mini": [2]}
+EP_FOR = {"mula-tiny": [2], "mula-mini": [2]}
+DEFAULT_CONFIGS = [c.name for c in configs.RUNNABLE]
+
+
+def lower_all(out_dir, names):
+    manifest = {"configs": {}}
+    for name in names:
+        cfg = configs.get(name)
+        cdir = os.path.join(out_dir, cfg.name)
+        os.makedirs(cdir, exist_ok=True)
+        plan = list(artifact_plan(cfg))
+        for pp in PP_FOR.get(cfg.name, []):
+            plan += pp_artifact_plan(cfg, pp)
+        for ep in EP_FOR.get(cfg.name, []):
+            if cfg.is_moe:
+                plan += ep_artifact_plan(cfg, ep)
+        arts = {}
+        for art_name, fn, args in plan:
+            t0 = time.time()
+            lowered = jax.jit(fn, keep_unused=True).lower(*args)
+            text = to_hlo_text(lowered)
+            rel = os.path.join(cfg.name, art_name + ".hlo.txt")
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(text)
+            out_info = jax.eval_shape(fn, *args)
+            outs = [dict(shape=list(o.shape), dtype=str(o.dtype))
+                    for o in jax.tree.leaves(out_info)]
+            arts[art_name] = dict(
+                file=rel,
+                inputs=[dict(shape=list(a.shape), dtype=str(a.dtype))
+                        for a in args],
+                outputs=outs,
+            )
+            print(f"  [{cfg.name}] {art_name}: {len(text)/1e6:.2f} MB "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+        specs = [dict(name=s["name"], shape=list(s["shape"]),
+                      offset=s["offset"], numel=s["numel"],
+                      is_expert=s["is_expert"], layer=s["layer"])
+                 for s in model.param_specs(cfg)]
+        manifest["configs"][cfg.name] = dict(
+            params=specs,
+            param_count=model.param_count(cfg),
+            hyper=dict(
+                n_layers=cfg.n_layers, hidden=cfg.hidden,
+                n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                intermediate=cfg.intermediate, n_experts=cfg.n_experts,
+                top_k=cfg.top_k, vocab_size=cfg.vocab_size,
+                context=cfg.context, batch=cfg.batch, seq=cfg.seq,
+                aux_coef=cfg.aux_coef, tbs=cfg.tbs, tile=cfg.tile,
+            ),
+            pp=PP_FOR.get(cfg.name, []),
+            ep=EP_FOR.get(cfg.name, []) if cfg.is_moe else [],
+            artifacts=arts,
+        )
+    # paper configs: hyper only (cluster model projections)
+    manifest["paper_configs"] = {
+        c.name: dict(n_layers=c.n_layers, hidden=c.hidden, n_heads=c.n_heads,
+                     head_dim=c.head_dim, intermediate=c.intermediate,
+                     n_experts=c.n_experts, top_k=c.top_k,
+                     vocab_size=c.vocab_size, context=c.context,
+                     param_count=c.param_count(),
+                     active_param_count=c.active_param_count())
+        for c in configs.PAPER}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['configs'])} configs -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_CONFIGS))
+    args = ap.parse_args()
+    lower_all(args.out, [c for c in args.configs.split(",") if c])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Mula model configuration family.
+
+Paper Table 1 configs are kept verbatim (used by the Rust cluster/perf model
+for projections); runnable analogs scale hidden/layers down while preserving
+the architecture family (OLMo dense / OLMoE MoE), expert ratios and
+active/total parameter ratios. See DESIGN.md §3.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    hidden: int
+    n_heads: int
+    head_dim: int
+    intermediate: int          # dense MLP intermediate, or per-expert intermediate
+    n_experts: int             # 0 => dense model
+    top_k: int
+    vocab_size: int
+    context: int
+    aux_coef: float = 0.01     # expert load-balancing auxiliary loss coefficient
+    rope_theta: float = 10000.0
+    # Artifact shapes (micro-batch x sequence the AOT module is lowered for).
+    batch: int = 8
+    seq: int = 128
+    # FastSparseMoE kernel blocking (paper TBS; stage-4 row tile)
+    tbs: int = 8
+    tile: int = 8
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Total parameter count (matches the flat layout in model.py)."""
+        h, v = self.hidden, self.vocab_size
+        emb = v * h
+        attn = 4 * h * h  # q,k,v,o (n_heads*head_dim == hidden by construction)
+        norms = 2 * h  # two RMSNorm gains per layer
+        if self.is_moe:
+            mlp = self.n_experts * 3 * h * self.intermediate + self.n_experts * h  # experts + router
+        else:
+            mlp = 3 * h * self.intermediate
+        final = h  # final norm
+        head = v * h
+        return emb + self.n_layers * (attn + norms + mlp) + final + head
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k experts instead of all)."""
+        if not self.is_moe:
+            return self.param_count()
+        h = self.hidden
+        inactive = (self.n_experts - self.top_k) * 3 * h * self.intermediate
+        return self.param_count() - self.n_layers * inactive
+
+
+def _cfg(**kw) -> ModelConfig:
+    kw.setdefault("head_dim", kw["hidden"] // kw["n_heads"])
+    return ModelConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Runnable analogs (lowered to HLO artifacts; see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+MULA_TINY = _cfg(
+    name="mula-tiny", n_layers=2, hidden=64, n_heads=2, intermediate=32,
+    n_experts=8, top_k=2, vocab_size=256, context=64, batch=4, seq=32,
+)
+MULA_TINY_DENSE = _cfg(
+    name="mula-tiny-dense", n_layers=2, hidden=64, n_heads=2, intermediate=256,
+    n_experts=0, top_k=0, vocab_size=256, context=64, batch=4, seq=32,
+)
+MULA_MINI = _cfg(
+    name="mula-mini", n_layers=4, hidden=128, n_heads=4, intermediate=64,
+    n_experts=16, top_k=4, vocab_size=1024, context=128, batch=8, seq=128,
+)
+MULA_MINI_DENSE = _cfg(
+    name="mula-mini-dense", n_layers=4, hidden=128, n_heads=4, intermediate=512,
+    n_experts=0, top_k=0, vocab_size=1024, context=128, batch=8, seq=128,
+)
+MULA_SMALL = _cfg(
+    name="mula-small", n_layers=6, hidden=192, n_heads=6, intermediate=96,
+    n_experts=24, top_k=4, vocab_size=1024, context=128, batch=8, seq=128,
+)
+MULA_MED = _cfg(
+    name="mula-med", n_layers=8, hidden=256, n_heads=8, intermediate=128,
+    n_experts=32, top_k=4, vocab_size=1024, context=128, batch=8, seq=128,
+    tbs=32, tile=32,
+)
+MULA_100M = _cfg(
+    name="mula-100m", n_layers=10, hidden=640, n_heads=10, intermediate=320,
+    n_experts=16, top_k=4, vocab_size=8192, context=256, batch=2, seq=256,
+    tbs=64, tile=64,
+)
+
+RUNNABLE = [
+    MULA_TINY, MULA_TINY_DENSE, MULA_MINI, MULA_MINI_DENSE,
+    MULA_SMALL, MULA_MED, MULA_100M,
+]
+
+# ---------------------------------------------------------------------------
+# Paper Table 1 configs (projection-only; never lowered)
+# ---------------------------------------------------------------------------
+
+PAPER = [
+    _cfg(name="mula-1b", n_layers=16, hidden=2048, n_heads=16, head_dim=128,
+         intermediate=8192, n_experts=0, top_k=0, vocab_size=50304, context=2048),
+    _cfg(name="mula-7b-a1b", n_layers=16, hidden=2048, n_heads=16, head_dim=128,
+         intermediate=1024, n_experts=64, top_k=8, vocab_size=50304, context=2048),
+    _cfg(name="mula-20b-a2b", n_layers=32, hidden=2048, n_heads=16, head_dim=128,
+         intermediate=1024, n_experts=96, top_k=8, vocab_size=50304, context=2048),
+    _cfg(name="mula-100b-a7b", n_layers=48, hidden=3072, n_heads=24, head_dim=128,
+         intermediate=1536, n_experts=144, top_k=8, vocab_size=50304, context=2048),
+    _cfg(name="mula-220b-a10b", n_layers=64, hidden=3072, n_heads=24, head_dim=128,
+         intermediate=1536, n_experts=240, top_k=8, vocab_size=50304, context=2048),
+]
+
+BY_NAME = {c.name: c for c in RUNNABLE + PAPER}
+
+
+def get(name: str) -> ModelConfig:
+    return BY_NAME[name]

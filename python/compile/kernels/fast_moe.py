@@ -1,0 +1,527 @@
+"""FastSparseMoE — Pallas kernels for Algorithm 1 (paper §3.1), stages 2-5.
+
+The paper's five-stage SYCL data plane, re-thought for a TPU-style machine
+(see DESIGN.md §7 Hardware-Adaptation):
+
+  Stage 1 (token communication)  lives in Rust (allgather / reduce-scatter
+           over the EP process group) — this module computes the *local*
+           partial output of one EP rank, i.e. everything between the
+           allgather and the reduce-scatter.
+  Stage 2 (token counting)       `token_counts` Pallas kernel: the paper's
+           thread↦row-block mapping becomes a grid over row-blocks with
+           per-program partial-count rows; prefix sums as a jnp epilogue.
+  Stage 3 (index generation)     `index_gen` Pallas kernel: base+offset
+           layout identical to the paper (Figure 5), trash-slot stores give
+           static shapes.
+  Stage 4 (expert computation)   tile-aligned grouped GEMM ("merged expert
+           weights", megablocks-style): routed tokens are laid out
+           expert-sorted with each expert's segment padded to a tile
+           multiple, so every tile multiplies against exactly one expert's
+           weights and compute scales with *routed* tokens (T*K + NR*TILE),
+           not with NR*T like the naive baseline.
+  Stage 5 (output reduction)     forward and backward Pallas kernels,
+           transcribing Algorithm 1 lines 82-113.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); they lower to plain HLO inside the same module as the L2
+model, which is what the Rust runtime loads.
+
+Static-shape capacities (XLA requirement):
+  RTCAP  = T*K       upper bound on routed entries for this rank
+  RTPAD  = T*K + NR*TILE   padded (tile-aligned) stage-4 row count
+  trash slot         index RTCAP used as the target of masked-out stores
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_TBS = 8     # token block size (paper line 16)
+DEFAULT_TILE = 8    # stage-4 row-tile (MXU-shaped on real hw; small for tests)
+
+_INTERPRET = True   # CPU PJRT cannot run Mosaic custom-calls; see DESIGN.md
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+# ===========================================================================
+# Stage 2 — token counting
+# ===========================================================================
+
+def _token_counts_kernel(indices_ref, partial_ref, expert_counts_ref, *,
+                         n_start, nr):
+    """One program per row-block: partial counts for the NR local experts.
+
+    The paper's per-SYCL-thread counters (lines 25-37) become one VMEM row
+    of the [TH, NR] partial-count matrix per grid program.
+    """
+    idx = indices_ref[...]                       # [TBS, K]
+    local = (idx >= n_start) & (idx <= n_start + nr - 1)
+    ln = jnp.clip(idx - n_start, 0, nr - 1)
+    onehot = jax.nn.one_hot(ln, nr, dtype=jnp.int32) * local[..., None].astype(jnp.int32)
+    partial_ref[...] = jnp.sum(onehot, axis=(0, 1))[None, :]       # [1, NR]
+    expert_counts_ref[...] = jnp.sum(local.astype(jnp.int32), axis=1)  # [TBS]
+
+
+def token_counts(indices, n_start, nr, tbs=DEFAULT_TBS):
+    """Stage 2. indices [T,K] int32 -> routing count metadata.
+
+    Returns (partial_token_counts [NR*TH], partial_cum [NR*TH+1],
+    cum_token_counts [NR+1], expert_counts [T], cum_expert_counts [T+1]),
+    in the paper's expert-major ``ln*TH + tid`` layout.
+    """
+    t_tot, k = indices.shape
+    assert t_tot % tbs == 0, (t_tot, tbs)
+    th = t_tot // tbs
+    partial_2d, expert_counts = pl.pallas_call(
+        functools.partial(_token_counts_kernel, n_start=n_start, nr=nr),
+        grid=(th,),
+        in_specs=[pl.BlockSpec((tbs, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, nr), lambda i: (i, 0)),
+            pl.BlockSpec((tbs,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((th, nr), jnp.int32),
+            jax.ShapeDtypeStruct((t_tot,), jnp.int32),
+        ],
+        interpret=_INTERPRET,
+    )(indices)
+    # epilogue (paper lines 39-43): expert-major flatten + prefix sums
+    partial = jnp.transpose(partial_2d).reshape(nr * th)          # ln*TH+tid
+    pcum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(partial)])
+    cum_token = pcum[jnp.arange(nr + 1) * th]
+    cum_expert = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(expert_counts)])
+    return partial, pcum, cum_token, expert_counts, cum_expert
+
+
+# ===========================================================================
+# Stage 3 — index generation
+# ===========================================================================
+
+def _index_gen_kernel(indices_ref, pcum_ref, cum_expert_ref,
+                      input_idx_ref, output_idx_ref, sel_k_ref, *,
+                      n_start, nr, tbs, k, th, rtcap):
+    """One program per row-block; scattered stores into the full arrays.
+
+    Positions are global (base from the stage-2 prefix sums + per-program
+    running offset), so the output refs are whole-array blocks; masked-out
+    (non-local) entries are redirected to the trash slot RTCAP. Grid
+    programs write disjoint positions — the revisiting semantics of a
+    whole-array output block keep earlier programs' writes.
+    """
+    tid = pl.program_id(0)
+
+    @pl.when(tid == 0)
+    def _init():
+        input_idx_ref[...] = jnp.full((rtcap + 1,), -1, jnp.int32)
+        output_idx_ref[...] = jnp.full((rtcap + 1,), -1, jnp.int32)
+        sel_k_ref[...] = jnp.full((rtcap + 1,), -1, jnp.int32)
+
+    pcum = pcum_ref[...]
+    cum_expert = cum_expert_ref[...]
+
+    def body(i, counter):
+        t = tid * tbs + i
+        idx = indices_ref[i, :]                                   # [K]
+        local = (idx >= n_start) & (idx <= n_start + nr - 1)
+        ln = jnp.clip(idx - n_start, 0, nr - 1)
+        base = pcum[ln * th + tid]                                # [K]
+        offset = counter[ln]                                      # [K]
+        pos = jnp.where(local, base + offset, rtcap)              # [K]
+        o_base = cum_expert[t]
+        o_off = jnp.cumsum(local.astype(jnp.int32)) - local.astype(jnp.int32)
+        o_pos = jnp.where(local, o_base + o_off, rtcap)           # [K]
+        for kk in range(k):  # K is small & static: unrolled
+            input_idx_ref[pos[kk]] = t
+            output_idx_ref[o_pos[kk]] = pos[kk]
+            sel_k_ref[o_pos[kk]] = kk
+        return counter.at[ln].add(local.astype(jnp.int32))
+
+    jax.lax.fori_loop(0, tbs, body, jnp.zeros((nr,), jnp.int32))
+
+
+def index_generation(indices, pcum, cum_expert, n_start, nr, tbs=DEFAULT_TBS):
+    """Stage 3. Returns (input_indices, output_indices, selected_expert_k),
+    each of length RTCAP+1 (= T*K + trash slot), -1 in unused slots."""
+    t_tot, k = indices.shape
+    th = t_tot // tbs
+    rtcap = t_tot * k
+    full1 = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    outs = pl.pallas_call(
+        functools.partial(_index_gen_kernel, n_start=n_start, nr=nr,
+                          tbs=tbs, k=k, th=th, rtcap=rtcap),
+        grid=(th,),
+        in_specs=[
+            pl.BlockSpec((tbs, k), lambda i: (i, 0)),
+            full1(nr * th + 1),
+            full1(t_tot + 1),
+        ],
+        out_specs=[full1(rtcap + 1)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((rtcap + 1,), jnp.int32)] * 3,
+        interpret=_INTERPRET,
+    )(indices, pcum, cum_expert)
+    return outs
+
+
+def routing_metadata(indices, n_start, nr, tbs=DEFAULT_TBS):
+    """Stages 2+3 packaged: all integer routing metadata for this EP rank.
+
+    Everything here is non-differentiable plumbing; callers treat the
+    returned dict as constants (ints carry no tangents in JAX).
+    """
+    partial, pcum, cum_token, expert_counts, cum_expert = token_counts(
+        indices, n_start, nr, tbs)
+    input_idx, output_idx, sel_k = index_generation(
+        indices, pcum, cum_expert, n_start, nr, tbs)
+    return dict(
+        partial_token_counts=partial,
+        partial_cum_token_counts=pcum,
+        cum_token_counts=cum_token,
+        expert_counts=expert_counts,
+        cum_expert_counts=cum_expert,
+        input_indices=input_idx,
+        output_indices=output_idx,
+        selected_expert_indices=sel_k,
+    )
+
+
+# ===========================================================================
+# Stage 4 — expert computation (tile-aligned grouped GEMM)
+# ===========================================================================
+
+def _grouped_mlp_fwd_kernel(x_ref, gate_ref, up_ref, down_ref, y_ref):
+    """One program per row-tile; the tile's expert weights are selected by
+    the BlockSpec index_map (every row in a tile belongs to one expert,
+    guaranteed by the tile-aligned padding)."""
+    x = x_ref[...]                                    # [TILE, H]
+    g = jnp.dot(x, gate_ref[0], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, up_ref[0], preferred_element_type=jnp.float32)
+    act = (g * jax.nn.sigmoid(g)) * u                 # SwiGLU
+    y_ref[...] = jnp.dot(act, down_ref[0],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _grouped_mlp_bwd_kernel(x_ref, gate_ref, up_ref, down_ref, dy_ref,
+                            first_ref, dx_ref, dgate_ref, dup_ref, ddown_ref):
+    """Backward per row-tile, recomputing the forward activations from the
+    stashed tile input (SAC-style, mirrors the paper's recompute policy).
+    dW blocks are revisited by consecutive tiles of the same expert and
+    accumulated; `first_ref` flags the first tile of each expert."""
+    x = x_ref[...]
+    gw, uw, dw = gate_ref[0], up_ref[0], down_ref[0]
+    dy = dy_ref[...]
+    g = jnp.dot(x, gw, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, uw, preferred_element_type=jnp.float32)
+    sig = jax.nn.sigmoid(g)
+    silu_g = g * sig
+    act = silu_g * u
+    dact = jnp.dot(dy, dw.T, preferred_element_type=jnp.float32)
+    ddown_t = jnp.dot(act.T, dy, preferred_element_type=jnp.float32)
+    du_pre = dact * silu_g                            # d(up_out)
+    dsilu = dact * u * (sig + g * sig * (1 - sig))    # d(gate_out)
+    dgate_t = jnp.dot(x.T, dsilu, preferred_element_type=jnp.float32)
+    dup_t = jnp.dot(x.T, du_pre, preferred_element_type=jnp.float32)
+    dx_ref[...] = (jnp.dot(dsilu, gw.T, preferred_element_type=jnp.float32)
+                   + jnp.dot(du_pre, uw.T,
+                             preferred_element_type=jnp.float32)).astype(x.dtype)
+    first = first_ref[0] == 1
+
+    @pl.when(first)
+    def _():
+        dgate_ref[0] = dgate_t
+        dup_ref[0] = dup_t
+        ddown_ref[0] = ddown_t
+
+    @pl.when(jnp.logical_not(first))
+    def _():
+        dgate_ref[0] += dgate_t
+        dup_ref[0] += dup_t
+        ddown_ref[0] += ddown_t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def grouped_mlp(xpad, gate_t, up_t, down_t, tile):
+    """Tile-aligned grouped expert MLP.
+
+    xpad   [RTPAD, H]  expert-sorted, tile-padded routed tokens
+    gate_t/up_t [n_tiles, H, I], down_t [n_tiles, I, H]
+        per-tile expert weights (jnp gather of the merged weight by
+        tile_expert — the VMEM-resident weight block of DESIGN.md §7)
+    Returns ypad [RTPAD, H].
+    """
+    return _grouped_mlp_fwd(xpad, gate_t, up_t, down_t, tile)[0]
+
+
+def _grouped_mlp_fwd(xpad, gate_t, up_t, down_t, tile):
+    rtpad, h = xpad.shape
+    n_tiles = rtpad // tile
+    i_dim = gate_t.shape[2]
+    y = pl.pallas_call(
+        _grouped_mlp_fwd_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, i_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, i_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, i_dim, h), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rtpad, h), xpad.dtype),
+        interpret=_INTERPRET,
+    )(xpad, gate_t, up_t, down_t)
+    return y, (xpad, gate_t, up_t, down_t)
+
+
+def _grouped_mlp_bwd(tile, res, dy):
+    xpad, gate_t, up_t, down_t = res
+    rtpad, h = xpad.shape
+    n_tiles = rtpad // tile
+    i_dim = gate_t.shape[2]
+    # every tile owns its own dW block here (weights were gathered
+    # per-tile); the caller segment-sums dW back onto experts.
+    first = jnp.ones((n_tiles,), jnp.int32)
+    dx, dgate_t, dup_t, ddown_t = pl.pallas_call(
+        _grouped_mlp_bwd_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, i_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, i_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, i_dim, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, h), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, i_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, i_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, i_dim, h), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rtpad, h), xpad.dtype),
+            jax.ShapeDtypeStruct((n_tiles, h, i_dim), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, h, i_dim), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, i_dim, h), jnp.float32),
+        ],
+        interpret=_INTERPRET,
+    )(xpad, gate_t, up_t, down_t, dy, first)
+    return dx, dgate_t, dup_t, ddown_t
+
+
+grouped_mlp.defvjp(_grouped_mlp_fwd, _grouped_mlp_bwd)
+
+
+# ===========================================================================
+# Stage 5 — output reduction (paper lines 82-113, fwd + bwd kernels)
+# ===========================================================================
+
+def _output_reduction_fwd_kernel(yflat_ref, weights_ref, sel_k_ref,
+                                 out_idx_ref, cum_expert_ref, out_ref, *,
+                                 k, tt, rtcap):
+    """One program per token-tile; K-slot weighted accumulate (vectorized
+    over the hidden dim — the natural VPU layout, DESIGN.md §7)."""
+    tile = pl.program_id(0)
+    yflat = yflat_ref[...]                         # [RTCAP+1, H] (trash row 0s)
+    w = weights_ref[...]                           # [TT, K]
+    sel_k = sel_k_ref[...]
+    out_idx = out_idx_ref[...]
+    cum_expert = cum_expert_ref[...]
+    t0 = tile * tt
+    toks = t0 + jnp.arange(tt)
+    base = cum_expert[toks]                        # [TT]
+    size = cum_expert[toks + 1] - base
+    acc = jnp.zeros((tt, yflat.shape[1]), jnp.float32)
+    for i in range(k):                             # K static, unrolled
+        valid = i < size                           # [TT]
+        j = jnp.where(valid, base + i, rtcap)      # [TT] entry ids
+        kk = jnp.clip(sel_k[j], 0, k - 1)          # [TT]
+        idx = jnp.where(valid, out_idx[j], rtcap)
+        wv = jnp.where(valid, jnp.take_along_axis(w, kk[:, None], 1)[:, 0], 0.0)
+        acc = acc + wv[:, None].astype(jnp.float32) * yflat[idx].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _output_reduction_bwd_kernel(dout_ref, yflat_ref, weights_ref, sel_k_ref,
+                                 out_idx_ref, cum_expert_ref,
+                                 dy_ref, dw_ref, *, k, tt, rtcap):
+    """Backward per token-tile (paper lines 98-113): scatter d(mlp_out) and
+    d(weights). Entries are unique per (token, slot) so stores never race;
+    trash-slot redirection keeps masked lanes harmless."""
+    tile = pl.program_id(0)
+
+    @pl.when(tile == 0)
+    def _init():
+        dy_ref[...] = jnp.zeros_like(dy_ref)
+
+    dout = dout_ref[...]                           # [TT, H]
+    w = weights_ref[...]                           # [TT, K]
+    sel_k = sel_k_ref[...]
+    out_idx = out_idx_ref[...]
+    cum_expert = cum_expert_ref[...]
+    dw_acc = jnp.zeros((tt, k), jnp.float32)
+    t0 = tile * tt
+    toks = t0 + jnp.arange(tt)
+    base = cum_expert[toks]
+    size = cum_expert[toks + 1] - base
+    yflat = yflat_ref[...]
+    for i in range(k):
+        valid = i < size
+        j = jnp.where(valid, base + i, rtcap)
+        kk = jnp.clip(sel_k[j], 0, k - 1)
+        idx = jnp.where(valid, out_idx[j], rtcap)
+        wv = jnp.where(valid, jnp.take_along_axis(w, kk[:, None], 1)[:, 0], 0.0)
+        contrib = wv[:, None].astype(jnp.float32) * dout.astype(jnp.float32)
+        # scatter rows: each (token,slot) entry owns a distinct y row
+        for r in range(tt):  # TT small & static
+            dy_ref[idx[r]] = contrib[r].astype(dy_ref.dtype)
+        wgrad = jnp.sum(yflat[idx].astype(jnp.float32)
+                        * dout.astype(jnp.float32), axis=1)       # [TT]
+        wgrad = jnp.where(valid, wgrad, 0.0)
+        dw_acc = dw_acc + wgrad[:, None] * jax.nn.one_hot(kk, k, dtype=jnp.float32)
+    dw_ref[...] = dw_acc.astype(dw_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def output_reduction(yflat, weights, sel_k, out_idx, cum_expert, tt):
+    """Stage 5: weighted average of local expert outputs per token.
+
+    yflat [RTCAP+1, H] (trash row at RTCAP), weights [T, K]
+    -> partial output [T, H] (to be reduce-scattered across EP by Rust).
+    """
+    return _output_reduction_fwd(yflat, weights, sel_k, out_idx,
+                                 cum_expert, tt)[0]
+
+
+def _or_specs(t_tot, k, h, rtcap, tt):
+    full1 = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    return dict(
+        yflat=pl.BlockSpec((rtcap + 1, h), lambda i: (0, 0)),
+        weights=pl.BlockSpec((tt, k), lambda i: (i, 0)),
+        sel_k=full1(rtcap + 1),
+        out_idx=full1(rtcap + 1),
+        cum_expert=full1(t_tot + 1),
+        out=pl.BlockSpec((tt, h), lambda i: (i, 0)),
+    )
+
+
+def _output_reduction_fwd(yflat, weights, sel_k, out_idx, cum_expert, tt):
+    rtcap = yflat.shape[0] - 1
+    h = yflat.shape[1]
+    t_tot, k = weights.shape
+    s = _or_specs(t_tot, k, h, rtcap, tt)
+    out = pl.pallas_call(
+        functools.partial(_output_reduction_fwd_kernel, k=k, tt=tt,
+                          rtcap=rtcap),
+        grid=(t_tot // tt,),
+        in_specs=[s["yflat"], s["weights"], s["sel_k"], s["out_idx"],
+                  s["cum_expert"]],
+        out_specs=s["out"],
+        out_shape=jax.ShapeDtypeStruct((t_tot, h), yflat.dtype),
+        interpret=_INTERPRET,
+    )(yflat, weights, sel_k, out_idx, cum_expert)
+    return out, (yflat, weights, sel_k, out_idx, cum_expert)
+
+
+def _output_reduction_bwd(tt, res, dout):
+    yflat, weights, sel_k, out_idx, cum_expert = res
+    rtcap = yflat.shape[0] - 1
+    h = yflat.shape[1]
+    t_tot, k = weights.shape
+    s = _or_specs(t_tot, k, h, rtcap, tt)
+    dy, dw = pl.pallas_call(
+        functools.partial(_output_reduction_bwd_kernel, k=k, tt=tt,
+                          rtcap=rtcap),
+        grid=(t_tot // tt,),
+        in_specs=[s["out"], s["yflat"], s["weights"], s["sel_k"],
+                  s["out_idx"], s["cum_expert"]],
+        out_specs=[s["yflat"], s["weights"]],
+        out_shape=[
+            jax.ShapeDtypeStruct((rtcap + 1, h), yflat.dtype),
+            jax.ShapeDtypeStruct((t_tot, k), weights.dtype),
+        ],
+        interpret=_INTERPRET,
+    )(dout, yflat, weights, sel_k, out_idx, cum_expert)
+    return dy, dw, None, None, None
+
+
+output_reduction.defvjp(_output_reduction_fwd, _output_reduction_bwd)
+
+
+# ===========================================================================
+# Assembled FastSparseMoE partial block (stages 2-5 for one EP rank)
+# ===========================================================================
+
+def fast_sparse_moe_partial(x_all, weights_all, indices_all,
+                            gate_w, up_w, down_w, n_start,
+                            tbs=DEFAULT_TBS, tile=DEFAULT_TILE):
+    """Partial MoE output of one EP rank (Algorithm 1 stages 2-5).
+
+    x_all [T,H], weights_all [T,K], indices_all [T,K] — the post-Stage-1
+    (allgathered) tensors. gate_w/up_w [NR,H,I], down_w [NR,I,H] — merged
+    local expert weights. Returns partial output [T,H] (float32 path),
+    to be reduce-scattered by the coordinator.
+    """
+    t_tot, h = x_all.shape
+    k = weights_all.shape[1]
+    nr = gate_w.shape[0]
+    i_dim = gate_w.shape[2]
+    rtcap = t_tot * k
+    rtpad = rtcap + nr * tile
+
+    # integer routing plumbing is non-differentiable; sever any tangent
+    # tracers so jax never tries to jvp through the stage-2/3 pallas calls
+    meta = routing_metadata(jax.lax.stop_gradient(indices_all),
+                            n_start, nr, tbs)
+    cum = meta["cum_token_counts"]                      # [NR+1]
+    counts = cum[1:] - cum[:-1]                         # [NR]
+    input_idx = meta["input_indices"]                   # [RTCAP+1]
+
+    # ---- tile-aligned padded layout (megablocks-style; DESIGN.md §7) ----
+    pad_counts = ((counts + tile - 1) // tile) * tile
+    pad_cum = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(pad_counts)])             # [NR+1]
+    p = jnp.arange(rtpad, dtype=jnp.int32)
+    e_of_p = jnp.searchsorted(pad_cum[1:], p, side="right").astype(jnp.int32)
+    e_of_p = jnp.clip(e_of_p, 0, nr - 1)
+    j_of_p = p - pad_cum[e_of_p]
+    valid_p = (j_of_p < counts[e_of_p]) & (p < pad_cum[nr])
+    flat_of_p = jnp.where(valid_p, cum[e_of_p] + j_of_p, rtcap)
+
+    # token ids feeding each padded row (invalid -> zero row T)
+    tok_of_p = jnp.where(valid_p,
+                         jnp.clip(input_idx[flat_of_p], 0, t_tot), t_tot)
+    x_pad_src = jnp.concatenate(
+        [x_all, jnp.zeros((1, h), x_all.dtype)], axis=0)
+    xpad = x_pad_src[tok_of_p]                          # [RTPAD, H]
+
+    # per-tile expert weights (the VMEM-resident weight block per tile)
+    n_tiles = rtpad // tile
+    tile_expert = e_of_p[jnp.arange(n_tiles) * tile]
+    gate_t = gate_w[tile_expert]
+    up_t = up_w[tile_expert]
+    down_t = down_w[tile_expert]
+
+    ypad = grouped_mlp(xpad, gate_t, up_t, down_t, tile)  # [RTPAD, H]
+
+    # padded -> flat (exact RT positions used by the stage-5 kernels)
+    f = jnp.arange(rtcap, dtype=jnp.int32)
+    e_of_f = jnp.searchsorted(cum[1:], f, side="right").astype(jnp.int32)
+    e_of_f = jnp.clip(e_of_f, 0, nr - 1)
+    pad_of_f = pad_cum[e_of_f] + (f - cum[e_of_f])
+    valid_f = f < cum[nr]
+    yflat = jnp.where(valid_f[:, None],
+                      ypad[jnp.clip(pad_of_f, 0, rtpad - 1)], 0.0)
+    yflat = jnp.concatenate([yflat, jnp.zeros((1, h), yflat.dtype)], axis=0)
+
+    out = output_reduction(
+        yflat, weights_all, meta["selected_expert_indices"],
+        meta["output_indices"], meta["cum_expert_counts"],
+        min(DEFAULT_TBS, t_tot))
+    return out

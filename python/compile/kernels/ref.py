@@ -1,0 +1,219 @@
+"""Pure-jnp / numpy correctness oracles for the FastSparseMoE kernels.
+
+Two references live here:
+
+1. ``naive_sparse_moe`` — the HuggingFace-OLMoE-style implementation the
+   paper uses as its baseline (a python loop over experts, each expert
+   gathering its tokens through a dense mask). This is both the pytest
+   oracle for the Pallas path and the **baseline side of Table 3 (FSMOE)**.
+
+2. ``ref_token_counts`` / ``ref_index_generation`` — plain-numpy transcripts
+   of Algorithm 1 stages 2-3, used to check the Pallas integer kernels
+   entry-by-entry (including the exact base+offset layout of
+   ``input_indices`` / ``output_indices`` from the paper's Figure 5).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def topk_sorted(probs, k):
+    """top-k via stable argsort (ties -> lowest index, matching
+    jax.lax.top_k). Lowers to HLO `sort`, which the xla_extension 0.5.1
+    text parser accepts — jax 0.8's native `topk` op does not exist in
+    that parser (version-skew shim, see aot.py). The VJP is a one-hot
+    scatter: take_along_axis's native VJP emits gathers with
+    operand_batching_dims, which the legacy HLO converter rejects."""
+    order = jnp.argsort(-probs, axis=-1, stable=True)[..., :k]
+    vals = jnp.take_along_axis(probs, order, axis=-1)
+    return vals, order.astype(jnp.int32)
+
+
+def _topk_fwd(probs, k):
+    vals, order = topk_sorted(probs, k)
+    return (vals, order), (order, probs.shape[-1])
+
+
+def _topk_bwd(k, res, cts):
+    order, n = res
+    d_vals, _ = cts  # indices carry no tangent
+    onehot = jax.nn.one_hot(order, n, dtype=d_vals.dtype)  # [T,K,N]
+    d_probs = jnp.einsum("tk,tkn->tn", d_vals, onehot)
+    return (d_probs,)
+
+
+topk_sorted.defvjp(_topk_fwd, _topk_bwd)
+
+
+def router_topk(x, router_w, top_k):
+    """OLMoE routing: softmax over expert logits, then top-k (no renorm).
+
+    Returns (weights [T,K], indices [T,K] int32, probs [T,N]).
+    """
+    logits = x @ router_w  # [T, N]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, indices = topk_sorted(probs, top_k)
+    return weights.astype(x.dtype), indices.astype(jnp.int32), probs
+
+
+def expert_mlp(x, gate_w, up_w, down_w):
+    """One expert: SwiGLU MLP. x [t,H], gate/up [H,I], down [I,H]."""
+    return (silu(x @ gate_w) * (x @ up_w)) @ down_w
+
+
+def naive_sparse_moe(x, weights, indices, gate_w, up_w, down_w,
+                     n_start=0, n_end=None):
+    """HF-style per-expert loop over the experts local to [n_start, n_end].
+
+    x        [T, H]   tokens (already allgathered across EP in the EP case)
+    weights  [T, K]   top-k routing weights
+    indices  [T, K]   top-k expert ids (global ids)
+    gate_w/up_w [NR, H, I], down_w [NR, I, H]  merged local expert weights
+    Returns the *partial* output [T, H] contributed by local experts
+    (paper Algorithm 1: rank r's contribution before the reduce-scatter).
+    """
+    nr = gate_w.shape[0]
+    if n_end is None:
+        n_end = n_start + nr - 1
+    t, h = x.shape
+    out = jnp.zeros((t, h), dtype=jnp.float32)
+    for ln in range(nr):
+        n = n_start + ln
+        # mask[t] = routing weight of expert n for token t (0 if unrouted)
+        sel = (indices == n)                      # [T, K]
+        w_tok = jnp.sum(jnp.where(sel, weights, 0.0), axis=1)  # [T]
+        y = expert_mlp(x, gate_w[ln], up_w[ln], down_w[ln])    # dense: all T
+        out = out + w_tok[:, None] * y.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Numpy transcripts of Algorithm 1 stages 2-3 (exact, including layout)
+# ---------------------------------------------------------------------------
+
+def ref_token_counts(indices: np.ndarray, n_start: int, n_end: int, tbs: int):
+    """Stage 2: per-(local-expert, thread) partial counts + expert counts.
+
+    indices [T, K]; T must be divisible by tbs. Returns dict with
+    partial_token_counts [NR*TH], partial_cum_token_counts [NR*TH+1],
+    cum_token_counts [NR+1], expert_counts [T], cum_expert_counts [T+1].
+    """
+    t_tot, k = indices.shape
+    assert t_tot % tbs == 0
+    th = t_tot // tbs
+    nr = n_end - n_start + 1
+    partial = np.zeros(nr * th, dtype=np.int32)
+    expert_counts = np.zeros(t_tot, dtype=np.int32)
+    for tid in range(th):
+        for i in range(tbs):
+            t = tid * tbs + i
+            for kk in range(k):
+                n = int(indices[t, kk])
+                if n_start <= n <= n_end:
+                    ln = n - n_start
+                    partial[ln * th + tid] += 1
+                    expert_counts[t] += 1
+    pcum = np.zeros(nr * th + 1, dtype=np.int32)
+    pcum[1:] = np.cumsum(partial)
+    cum_expert = np.zeros(t_tot + 1, dtype=np.int32)
+    cum_expert[1:] = np.cumsum(expert_counts)
+    cum_token = np.zeros(nr + 1, dtype=np.int32)
+    for n in range(nr + 1):
+        cum_token[n] = pcum[n * th]
+    return dict(
+        partial_token_counts=partial,
+        partial_cum_token_counts=pcum,
+        cum_token_counts=cum_token,
+        expert_counts=expert_counts,
+        cum_expert_counts=cum_expert,
+    )
+
+
+def ref_index_generation(indices: np.ndarray, n_start: int, n_end: int,
+                         tbs: int):
+    """Stage 3: input_indices / output_indices / selected_expert_indices.
+
+    Follows Algorithm 1 lines 45-72 verbatim (same iteration order), so the
+    produced layout matches the paper's Figure 5 example exactly.
+    """
+    counts = ref_token_counts(indices, n_start, n_end, tbs)
+    pcum = counts["partial_cum_token_counts"]
+    cum_expert = counts["cum_expert_counts"]
+    t_tot, k = indices.shape
+    th = t_tot // tbs
+    nr = n_end - n_start + 1
+    rt = int(counts["cum_token_counts"][-1])
+    input_indices = np.zeros(rt, dtype=np.int32)
+    output_indices = np.zeros(rt, dtype=np.int32)
+    sel_k = np.zeros(rt, dtype=np.int32)
+    counter = np.zeros((nr, th), dtype=np.int32)
+    for tid in range(th):
+        for i in range(tbs):
+            t = tid * tbs + i
+            o_ind = int(cum_expert[t])
+            for kk in range(k):
+                n = int(indices[t, kk])
+                if n_start <= n <= n_end:
+                    ln = n - n_start
+                    base = int(pcum[ln * th + tid])
+                    offset = int(counter[ln, tid])
+                    i_ind = base + offset
+                    input_indices[i_ind] = t
+                    output_indices[o_ind] = i_ind
+                    sel_k[o_ind] = kk
+                    counter[ln, tid] += 1
+                    o_ind += 1
+    return dict(counts, input_indices=input_indices,
+                output_indices=output_indices,
+                selected_expert_indices=sel_k, rt=rt)
+
+
+def ref_output_reduction(mlp_out_flat, weights, sel_k, output_indices,
+                         cum_expert_counts):
+    """Stage 5 forward oracle (Algorithm 1 lines 82-96), numpy."""
+    t_tot, k = weights.shape
+    h = mlp_out_flat.shape[1]
+    out = np.zeros((t_tot, h), dtype=np.float64)
+    for t in range(t_tot):
+        base = int(cum_expert_counts[t])
+        size = int(cum_expert_counts[t + 1]) - base
+        for i in range(size):
+            kk = int(sel_k[base + i])
+            idx = int(output_indices[base + i])
+            out[t] += float(weights[t, kk]) * mlp_out_flat[idx].astype(np.float64)
+    return out.astype(np.float32)
+
+
+def ref_output_reduction_bwd(output_grad, mlp_out_flat, weights, sel_k,
+                             output_indices, cum_expert_counts, rt):
+    """Stage 5 backward oracle (Algorithm 1 lines 98-113), numpy.
+
+    Entries for token t occupy positions [cum_expert_counts[t],
+    cum_expert_counts[t+1]) of the selected-expert arrays; the paper's
+    per-rt loop visits exactly these (token, slot) pairs.
+    """
+    t_tot, k = weights.shape
+    h = mlp_out_flat.shape[1]
+    mlp_out_grad = np.zeros((rt, h), dtype=np.float64)
+    weights_grad = np.zeros((t_tot, k), dtype=np.float64)
+    for t in range(t_tot):
+        base = int(cum_expert_counts[t])
+        size = int(cum_expert_counts[t + 1]) - base
+        for i in range(size):
+            j = base + i
+            kk = int(sel_k[j])
+            idx = int(output_indices[j])
+            mlp_out_grad[idx] = float(weights[t, kk]) * output_grad[t].astype(np.float64)
+            weights_grad[t, kk] = np.dot(
+                mlp_out_flat[idx].astype(np.float64),
+                output_grad[t].astype(np.float64))
+    return mlp_out_grad.astype(np.float32), weights_grad.astype(np.float32)

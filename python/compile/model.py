@@ -1,0 +1,517 @@
+"""L2 — OLMo/OLMoE-family transformer in JAX (build-time only).
+
+Mirrors the paper's reference models (allenai/OLMo-1B-hf dense,
+allenai/OLMoE-1B-7B-0924 MoE): RMSNorm, rotary attention, SwiGLU MLP /
+SparseMoE with softmax-then-topk routing (no renorm) and the switch-style
+load-balancing auxiliary loss.
+
+Parameters live in a single flat f32 vector whose layout is described by
+``param_specs`` — the same layout the Rust coordinator sees through
+``manifest.json`` (offset, shape, is_expert, layer). The is_expert flag is
+what EPSO (paper §3.2) keys its two-group sharding on.
+
+Three MoE execution paths:
+  * ``moe_impl="fsmoe"``  — the FastSparseMoE Pallas path (Algorithm 1
+     stages 2-5), used in the fused train_step and the EP artifacts;
+  * ``moe_impl="naive"``  — the HuggingFace-style all-experts loop, the
+     paper's baseline side of Table 3;
+  * dense configs skip routing entirely.
+"""
+
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs
+from .kernels import fast_moe, ref as kref
+
+
+# ===========================================================================
+# Flat parameter layout
+# ===========================================================================
+
+def param_specs(cfg: configs.ModelConfig) -> List[dict]:
+    """Ordered parameter spec: name, shape, offset, is_expert, layer."""
+    specs = []
+    off = 0
+
+    def add(name, shape, is_expert=False, layer=-1):
+        nonlocal off
+        n = int(np.prod(shape))
+        specs.append(dict(name=name, shape=tuple(shape), offset=off,
+                          numel=n, is_expert=is_expert, layer=layer))
+        off += n
+
+    h, v, i = cfg.hidden, cfg.vocab_size, cfg.intermediate
+    add("embed", (v, h))
+    for l in range(cfg.n_layers):
+        add(f"layer{l}.wq", (h, h), layer=l)
+        add(f"layer{l}.wk", (h, h), layer=l)
+        add(f"layer{l}.wv", (h, h), layer=l)
+        add(f"layer{l}.wo", (h, h), layer=l)
+        add(f"layer{l}.norm1", (h,), layer=l)
+        add(f"layer{l}.norm2", (h,), layer=l)
+        if cfg.is_moe:
+            add(f"layer{l}.router", (h, cfg.n_experts), layer=l)
+            add(f"layer{l}.gate", (cfg.n_experts, h, i), True, l)
+            add(f"layer{l}.up", (cfg.n_experts, h, i), True, l)
+            add(f"layer{l}.down", (cfg.n_experts, i, h), True, l)
+        else:
+            add(f"layer{l}.gate", (h, i), layer=l)
+            add(f"layer{l}.up", (h, i), layer=l)
+            add(f"layer{l}.down", (i, h), layer=l)
+    add("final_norm", (h,))
+    add("head", (h, v))
+    return specs
+
+
+def param_count(cfg) -> int:
+    s = param_specs(cfg)
+    return s[-1]["offset"] + s[-1]["numel"]
+
+
+def unflatten(cfg, flat) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for s in param_specs(cfg):
+        seg = jax.lax.dynamic_slice(flat, (s["offset"],), (s["numel"],))
+        out[s["name"]] = seg.reshape(s["shape"])
+    return out
+
+
+def init_params(cfg, seed=0) -> np.ndarray:
+    """Reference initializer (tests / python-side experiments). The Rust
+    coordinator re-implements the same scheme with its own PRNG; value
+    parity is not required, only distribution parity."""
+    rng = np.random.default_rng(seed)
+    flat = np.empty(param_count(cfg), dtype=np.float32)
+    for s in param_specs(cfg):
+        o, n = s["offset"], s["numel"]
+        if "norm" in s["name"]:
+            flat[o:o + n] = 1.0
+        else:
+            flat[o:o + n] = rng.standard_normal(n).astype(np.float32) * 0.02
+    return flat
+
+
+# ===========================================================================
+# Model pieces
+# ===========================================================================
+
+def rms_norm(x, gain, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * gain.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(q, k, theta):
+    """Rotary embeddings. q,k [B,S,NH,HD]."""
+    b, s, nh, hd = q.shape
+    pos = jnp.arange(s, dtype=jnp.float32)
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = pos[:, None] * freqs[None, :]                  # [S, HD/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def rot(x):
+        x1, x2 = x[..., 0::2], x[..., 1::2]
+        xr1 = x1 * cos[None, :, None, :] - x2 * sin[None, :, None, :]
+        xr2 = x1 * sin[None, :, None, :] + x2 * cos[None, :, None, :]
+        return jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+
+    return rot(q), rot(k)
+
+
+def attention(p, prefix, x, cfg):
+    """Causal multi-head attention with RoPE. x [B,S,H]."""
+    b, s, h = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p[f"{prefix}.wq"]).reshape(b, s, nh, hd)
+    k = (x @ p[f"{prefix}.wk"]).reshape(b, s, nh, hd)
+    v = (x @ p[f"{prefix}.wv"]).reshape(b, s, nh, hd)
+    q, k = rope(q, k, cfg.rope_theta)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, h)
+    return o @ p[f"{prefix}.wo"]
+
+
+def aux_loss(probs, indices, n_experts):
+    """Switch-transformer load-balancing loss: N * sum_i f_i * P_i.
+
+    probs [T,N] softmax router probabilities, indices [T,K] chosen ids.
+    """
+    t = probs.shape[0]
+    k = indices.shape[1]
+    onehot = jax.nn.one_hot(indices, n_experts, dtype=jnp.float32)  # [T,K,N]
+    f = jnp.sum(onehot, axis=(0, 1)) / (t * k)          # fraction per expert
+    p_mean = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * p_mean)
+
+
+def moe_layer(p, prefix, x2d, cfg, moe_impl):
+    """SparseMoE over flattened tokens x2d [T,H]. Returns (out, aux).
+    Kernel blocking (tbs, tile) comes from the config."""
+    w, idx, probs = kref.router_topk(x2d, p[f"{prefix}.router"], cfg.top_k)
+    a = aux_loss(probs, idx, cfg.n_experts)
+    gate, up, down = p[f"{prefix}.gate"], p[f"{prefix}.up"], p[f"{prefix}.down"]
+    if moe_impl == "fsmoe":
+        out = fast_moe.fast_sparse_moe_partial(
+            x2d, w, idx, gate, up, down, 0,
+            tbs=cfg.tbs, tile=cfg.tile)
+    elif moe_impl == "naive":
+        out = kref.naive_sparse_moe(x2d, w, idx, gate, up, down, 0)
+    else:
+        raise ValueError(moe_impl)
+    return out, a
+
+
+def dense_mlp(p, prefix, x):
+    return (kref.silu(x @ p[f"{prefix}.gate"]) * (x @ p[f"{prefix}.up"])) \
+        @ p[f"{prefix}.down"]
+
+
+def decoder_layer(p, l, h, cfg, moe_impl):
+    """One decoder block. h [B,S,H] -> (h', aux)."""
+    b, s, hd = h.shape
+    prefix = f"layer{l}"
+    a = h + attention(p, prefix, rms_norm(h, p[f"{prefix}.norm1"]), cfg)
+    moe_in = rms_norm(a, p[f"{prefix}.norm2"])
+    if cfg.is_moe:
+        out2d, aux = moe_layer(p, prefix, moe_in.reshape(b * s, hd), cfg,
+                               moe_impl)
+        return a + out2d.reshape(b, s, hd), aux
+    return a + dense_mlp(p, prefix, moe_in), jnp.float32(0.0)
+
+
+def forward(cfg, flat, tokens, moe_impl="fsmoe"):
+    """Full forward. tokens [B, S+1] (inputs || shifted targets).
+
+    Returns (lm_loss, aux_total, logits).
+    """
+    p = unflatten(cfg, flat)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    h = p["embed"][inp]                                  # [B,S,H]
+    aux_total = jnp.float32(0.0)
+    for l in range(cfg.n_layers):
+        h, aux = decoder_layer(p, l, h, cfg, moe_impl)
+        aux_total = aux_total + aux
+    h = rms_norm(h, p["final_norm"])
+    logits = h @ p["head"]                               # [B,S,V]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), aux_total, logits
+
+
+# ===========================================================================
+# Artifact entry points (lowered by aot.py)
+# ===========================================================================
+
+def make_train_step(cfg, moe_impl="fsmoe"):
+    """(params_flat [P], tokens [B,S+1] i32) ->
+       (loss_total, lm_loss, aux_loss, grads_flat [P])"""
+
+    def train_step(flat, tokens):
+        def loss_fn(f):
+            lm, aux, _ = forward(cfg, f, tokens, moe_impl)
+            return lm + cfg.aux_coef * aux, (lm, aux)
+        (total, (lm, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(flat)
+        return total, lm, aux, grads
+
+    return train_step
+
+
+def make_eval_step(cfg, moe_impl="fsmoe"):
+    """(params_flat, tokens [B,S+1]) -> (nll [B,S], preds [B,S] i32)"""
+
+    def eval_step(flat, tokens):
+        p = unflatten(cfg, flat)
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        h = p["embed"][inp]
+        for l in range(cfg.n_layers):
+            h, _ = decoder_layer(p, l, h, cfg, moe_impl)
+        h = rms_norm(h, p["final_norm"])
+        logits = h @ p["head"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nll, preds
+
+    return eval_step
+
+
+def make_moe_block_step(cfg, moe_impl):
+    """Single SparseMoE block fwd+bwd — the Table 3 (FSMOE) benchmark unit.
+
+    (block_params [Pb], x [T,H], dy [T,H]) -> (y, dx, dparams)
+    block_params layout: router || gate || up || down of layer 0.
+    """
+    h, n, i, k = cfg.hidden, cfg.n_experts, cfg.intermediate, cfg.top_k
+    sizes = [h * n, n * h * i, n * h * i, n * i * h]
+    offs = np.cumsum([0] + sizes)
+
+    def block(bp, x):
+        p = {
+            "blk.router": jax.lax.dynamic_slice(bp, (int(offs[0]),), (sizes[0],)).reshape(h, n),
+            "blk.gate": jax.lax.dynamic_slice(bp, (int(offs[1]),), (sizes[1],)).reshape(n, h, i),
+            "blk.up": jax.lax.dynamic_slice(bp, (int(offs[2]),), (sizes[2],)).reshape(n, h, i),
+            "blk.down": jax.lax.dynamic_slice(bp, (int(offs[3]),), (sizes[3],)).reshape(n, i, h),
+        }
+        out, aux = moe_layer(p, "blk", x, cfg, moe_impl)
+        return out, aux
+
+    def step(bp, x, dy):
+        def obj(bp_, x_):
+            out, aux = block(bp_, x_)
+            return jnp.sum(out * dy) + cfg.aux_coef * aux, out
+        (_, y), (dbp, dx) = jax.value_and_grad(
+            obj, argnums=(0, 1), has_aux=True)(bp, x)
+        return y, dx, dbp
+
+    return step, int(offs[-1])
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-parallel stage functions (SAC-native: bwd recomputes from the
+# stashed stage input — paper §1 "Selective Activation Checkpointing")
+# ---------------------------------------------------------------------------
+
+def stage_layers(cfg, pp, stage):
+    lps = cfg.n_layers // pp
+    return range(stage * lps, (stage + 1) * lps)
+
+
+def stage_param_specs(cfg, pp, stage) -> List[dict]:
+    """Specs (with stage-local offsets) owned by a pipeline stage.
+    Stage 0 additionally owns the embedding; the last stage owns the final
+    norm + head."""
+    layers = set(stage_layers(cfg, pp, stage))
+    out, off = [], 0
+    for s in param_specs(cfg):
+        owned = (s["layer"] in layers
+                 or (stage == 0 and s["name"] == "embed")
+                 or (stage == pp - 1 and s["name"] in ("final_norm", "head")))
+        if owned:
+            t = dict(s)
+            t["offset"] = off
+            off += s["numel"]
+            out.append(t)
+    return out
+
+
+def _stage_unflatten(cfg, pp, stage, flat):
+    return {s["name"]: jax.lax.dynamic_slice(
+        flat, (s["offset"],), (s["numel"],)).reshape(s["shape"])
+        for s in stage_param_specs(cfg, pp, stage)}
+
+
+def _stage_forward(cfg, pp, stage, p, x, tokens, moe_impl):
+    """x: stage input activations ([B,S,H]) or None for stage 0 (tokens)."""
+    aux_total = jnp.float32(0.0)
+    if stage == 0:
+        h = p["embed"][tokens[:, :-1]]
+    else:
+        h = x
+    for l in stage_layers(cfg, pp, stage):
+        h, aux = decoder_layer(p, l, h, cfg, moe_impl)
+        aux_total = aux_total + aux
+    if stage == pp - 1:
+        h = rms_norm(h, p["final_norm"])
+        logits = h @ p["head"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll), aux_total
+    return h, aux_total
+
+
+def make_stage_fwd(cfg, pp, stage, moe_impl="fsmoe"):
+    """Forward-only stage pass.
+    stage 0:        (p_stage, tokens) -> (h_out, aux)
+    middle stages:  (p_stage, h_in)   -> (h_out, aux)
+    last stage:     (p_stage, h_in, tokens) -> (loss, aux)
+    """
+    def fwd(p_flat, *args):
+        p = _stage_unflatten(cfg, pp, stage, p_flat)
+        if stage == 0:
+            tokens, x = args[0], None
+        elif stage == pp - 1:
+            x, tokens = args
+        else:
+            x, tokens = args[0], None
+        return _stage_forward(cfg, pp, stage, p, x, tokens, moe_impl)
+    return fwd
+
+
+def make_stage_fwdbwd(cfg, pp, stage, moe_impl="fsmoe"):
+    """Recompute-forward + backward for one stage (1F1B unit of work).
+
+    stage 0:  (p, tokens, d_out)      -> (dp,)           [no dx]
+    middle:   (p, h_in, d_out)        -> (dx, dp)
+    last:     (p, h_in, tokens)       -> (loss, aux, dx, dp)
+    d_out is the cotangent of h_out; the aux-loss cotangent is folded in
+    with coefficient cfg.aux_coef (DESIGN.md §6).
+    """
+    def fwdbwd(p_flat, *args):
+        if stage == pp - 1:
+            x, tokens = args
+
+            def obj(pf, x_):
+                loss, aux = make_stage_fwd(cfg, pp, stage, moe_impl)(pf, x_, tokens)
+                return loss + cfg.aux_coef * aux, (loss, aux)
+            (_, (loss, aux)), (dp, dx) = jax.value_and_grad(
+                obj, argnums=(0, 1), has_aux=True)(p_flat, x)
+            return loss, aux, dx, dp
+        if stage == 0:
+            tokens, d_out = args
+
+            def obj(pf):
+                h, aux = make_stage_fwd(cfg, pp, stage, moe_impl)(pf, tokens)
+                return jnp.sum(h * d_out) + cfg.aux_coef * aux
+            dp = jax.grad(obj)(p_flat)
+            return (dp,)
+        x, d_out = args
+
+        def obj(pf, x_):
+            h, aux = make_stage_fwd(cfg, pp, stage, moe_impl)(pf, x_)
+            return jnp.sum(h * d_out) + cfg.aux_coef * aux
+        dp, dx = jax.grad(obj, argnums=(0, 1))(p_flat, x)
+        return dx, dp
+
+    return fwdbwd
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel per-layer functions (Algorithm 1 split at Stage 1):
+# rust does allgather / reduce-scatter between these artifacts.
+# ---------------------------------------------------------------------------
+
+def layer_nonexpert_specs(cfg) -> List[dict]:
+    """Per-layer non-expert params (attn + norms + router), layer 0 offsets
+    — all layers share shapes, so one artifact serves every layer."""
+    out, off = [], 0
+    for s in param_specs(cfg):
+        if s["layer"] == 0 and not s["is_expert"]:
+            t = dict(s); t["offset"] = off
+            off += s["numel"]
+            out.append(t)
+    return out
+
+
+def layer_expert_numel(cfg, ep) -> int:
+    nr = cfg.n_experts // ep
+    return 3 * nr * cfg.hidden * cfg.intermediate
+
+
+def make_ep_embed_fwd(cfg):
+    def f(emb_flat, tokens):
+        emb = emb_flat.reshape(cfg.vocab_size, cfg.hidden)
+        return emb[tokens[:, :-1]]
+    return f
+
+
+def make_ep_embed_bwd(cfg):
+    def f(emb_flat, tokens, dh):
+        def obj(e):
+            return jnp.sum(make_ep_embed_fwd(cfg)(e, tokens) * dh)
+        return jax.grad(obj)(emb_flat)
+    return f
+
+
+def _layer_pre(cfg, p_flat, h, moe_impl):
+    """Attention half + router of one MoE layer (pre-Stage-1)."""
+    specs = layer_nonexpert_specs(cfg)
+    p = {s["name"].replace("layer0.", ""): jax.lax.dynamic_slice(
+        p_flat, (s["offset"],), (s["numel"],)).reshape(s["shape"])
+        for s in specs}
+    b, s_, hd = h.shape
+    pp_ = {f"layer0.{k}": v for k, v in p.items()}
+    a = h + attention(pp_, "layer0", rms_norm(h, p["norm1"]), cfg)
+    moe_in = rms_norm(a, p["norm2"])
+    x2d = moe_in.reshape(b * s_, hd)
+    w, idx, probs = kref.router_topk(x2d, p["router"], cfg.top_k)
+    aux = aux_loss(probs, idx, cfg.n_experts)
+    return a, x2d, w, idx, aux
+
+
+def make_ep_layer_pre_fwd(cfg, moe_impl="fsmoe"):
+    """(p_layer_ne, h [B,S,H]) -> (a, moe_in2d, w, idx, aux)."""
+    def f(p_flat, h):
+        a, x2d, w, idx, aux = _layer_pre(cfg, p_flat, h, moe_impl)
+        return a, x2d, w, idx.astype(jnp.int32), aux
+    return f
+
+
+def make_ep_layer_pre_bwd(cfg, moe_impl="fsmoe"):
+    """Recompute+backward of the pre half.
+    (p, h, d_a_total, d_moe_in, d_w) -> (dh, dp)
+    d_a_total already includes the residual path cotangent of `a`.
+    """
+    def f(p_flat, h, d_a, d_x2d, d_w):
+        def obj(pf, h_):
+            a, x2d, w, idx, aux = _layer_pre(cfg, pf, h_, moe_impl)
+            return (jnp.sum(a * d_a) + jnp.sum(x2d * d_x2d)
+                    + jnp.sum(w * d_w) + cfg.aux_coef * aux)
+        dp, dh = jax.grad(obj, argnums=(0, 1))(p_flat, h)
+        return dh, dp
+    return f
+
+
+def _expert_partial(cfg, ep, pe_flat, x_all, w_all, idx_all, tile=None):
+    nr = cfg.n_experts // ep
+    h, i = cfg.hidden, cfg.intermediate
+    sz = nr * h * i
+    gate = jax.lax.dynamic_slice(pe_flat, (0,), (sz,)).reshape(nr, h, i)
+    up = jax.lax.dynamic_slice(pe_flat, (sz,), (sz,)).reshape(nr, h, i)
+    down = jax.lax.dynamic_slice(pe_flat, (2 * sz,), (sz,)).reshape(nr, i, h)
+    # n_start is rank-dependent: shift global expert ids so that local
+    # experts occupy [0, NR) — the coordinator passes pre-shifted indices.
+    return fast_moe.fast_sparse_moe_partial(
+        x_all, w_all, idx_all, gate, up, down, 0,
+        tbs=cfg.tbs, tile=tile if tile is not None else cfg.tile)
+
+
+def make_ep_expert_fwd(cfg, ep, tile=None):
+    """(p_experts_local, x_all [T,H], w_all [T,K], idx_local [T,K])
+       -> partial_out [T,H].
+    idx_local = global_idx - n_start (coordinator shifts; non-local ids
+    fall outside [0,NR) and are ignored by the kernels)."""
+    def f(pe, x, w, idx):
+        return _expert_partial(cfg, ep, pe, x, w, idx, tile)
+    return f
+
+
+def make_ep_expert_bwd(cfg, ep, tile=None):
+    """(p_experts, x_all, w_all, idx_local, d_partial_full)
+       -> (dx_partial, dw_partial, dp_experts)"""
+    def f(pe, x, w, idx, dy):
+        def obj(pe_, x_, w_):
+            out = _expert_partial(cfg, ep, pe_, x_, w_, idx, tile)
+            return jnp.sum(out * dy)
+        dpe, dx, dw = jax.grad(obj, argnums=(0, 1, 2))(pe, x, w)
+        return dx, dw, dpe
+    return f
+
+
+def make_ep_head_fwdbwd(cfg):
+    """(p_head_flat [H + H*V], h [B,S,H], tokens) -> (loss, dh, dp)."""
+    h_, v = cfg.hidden, cfg.vocab_size
+
+    def f(p_flat, h, tokens):
+        def obj(pf, h_in):
+            fn = jax.lax.dynamic_slice(pf, (0,), (h_,))
+            head = jax.lax.dynamic_slice(pf, (h_,), (h_ * v,)).reshape(h_, v)
+            x = rms_norm(h_in, fn)
+            logits = x @ head
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            tgt = tokens[:, 1:]
+            nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+            return jnp.mean(nll)
+        loss, (dp, dh) = jax.value_and_grad(obj, argnums=(0, 1))(p_flat, h)
+        return loss, dh, dp
+    return f

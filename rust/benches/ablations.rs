@@ -1,0 +1,104 @@
+//! Ablations DESIGN.md calls out:
+//! 1. EP Stage-1 exchange: allgather vs all2all (paper §3.1 Stage 1)
+//! 2. PP schedule: gpipe vs 1f1b (activation memory + time)
+//! 3. gradient-reduction dtype: bf16 vs f32 (paper §2.1 recipe)
+//! 4. dual vs single checkpointing overhead
+
+use optimus::ckpt::{Checkpoint, DualCheckpointer};
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::pipeline::Schedule;
+use optimus::coordinator::{self, ep::EpComm, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::util::bench::{bench, fmt_dur, Report};
+
+fn main() -> optimus::Result<()> {
+    let m = Manifest::load(&optimus::artifacts_dir())?;
+    let data_dir = std::env::temp_dir().join("optimus-ablate-data");
+    if !data_dir.exists() {
+        preprocess::preprocess(&corpus::data_files(42, 4, 32), 64, 7, &data_dir, 512)?;
+    }
+
+    // --- 1. EP exchange policy ---
+    let mut t1 = Report::new(
+        "Ablation: EP Stage-1 exchange (mula-tiny, EP=2, 8 steps)",
+        &["policy", "loss@last", "step secs", "comm secs"],
+    );
+    for (policy, name) in [(EpComm::Allgather, "allgather"), (EpComm::All2All, "all2all")] {
+        let mut o = TrainOptions::new(
+            "mula-tiny", Topology { dp: 1, ep: 2, pp: 1 }, data_dir.clone());
+        o.run.steps = 6;
+        o.ep_comm = policy;
+        let r = coordinator::train(&m, &o)?;
+        t1.row(&[
+            name.into(),
+            format!("{:.4}", r.loss.last().unwrap()),
+            format!("{:.3}", r.mean_step_secs()),
+            format!("{:.3}", r.breakdown.comm_secs),
+        ]);
+    }
+    t1.print();
+    t1.write_csv("ablation_ep_comm").ok();
+
+    // --- 2. PP schedule ---
+    let mut t2 = Report::new(
+        "Ablation: PP schedule (mula-tiny, PP=2, 4 microbatches, 8 steps)",
+        &["schedule", "loss@last", "step secs", "peak stashed acts (stage0)"],
+    );
+    for sched in [Schedule::GPipe, Schedule::OneFOneB] {
+        let mut o = TrainOptions::new(
+            "mula-tiny", Topology { dp: 1, ep: 1, pp: 2 }, data_dir.clone());
+        o.run.steps = 6;
+        o.micro_batches = 4;
+        o.schedule = sched;
+        let r = coordinator::train(&m, &o)?;
+        t2.row(&[
+            sched.name().into(),
+            format!("{:.4}", r.loss.last().unwrap()),
+            format!("{:.3}", r.mean_step_secs()),
+            sched.peak_in_flight(0, 2, 4).to_string(),
+        ]);
+    }
+    t2.print();
+    t2.write_csv("ablation_pp_schedule").ok();
+
+    // --- 3. grad-reduce dtype ---
+    let mut t3 = Report::new(
+        "Ablation: gradient-reduction dtype (mula-tiny, DP=2, 12 steps)",
+        &["dtype", "loss@last"],
+    );
+    for (bf16, name) in [(true, "bf16 (paper)"), (false, "f32")] {
+        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir.clone());
+        o.run.steps = 8;
+        o.run.bf16_grad_reduce = bf16;
+        let r = coordinator::train(&m, &o)?;
+        t3.row(&[name.into(), format!("{:.4}", r.loss.last().unwrap())]);
+    }
+    t3.print();
+    t3.write_csv("ablation_grad_dtype").ok();
+
+    // --- 4. checkpoint write cost: dual vs single slot ---
+    let params = vec![0.5f32; 2_000_000];
+    let moments = vec![0.1f32; 4_000_000];
+    let root = std::env::temp_dir().join("optimus-ablate-ckpt");
+    let _ = std::fs::remove_dir_all(&root);
+    let dual = DualCheckpointer::new(&root);
+    let ck = Checkpoint { step: 1, params, moments };
+    let s_dual = bench(1, 5, || {
+        dual.save(&ck).unwrap();
+    });
+    let single_dir = root.join("single");
+    let s_single = bench(1, 5, || {
+        ck.write(&single_dir).unwrap();
+    });
+    let mut t4 = Report::new(
+        "Ablation: checkpoint write cost (6M-f32 state)",
+        &["strategy", "median write"],
+    );
+    t4.row(&["single slot".into(), fmt_dur(s_single.median)]);
+    t4.row(&["dual (alternating)".into(), fmt_dur(s_dual.median)]);
+    t4.print();
+    t4.write_csv("ablation_ckpt").ok();
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}

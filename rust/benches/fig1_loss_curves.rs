@@ -1,0 +1,78 @@
+//! Figure 1: (a) dense vs MoE training loss at iso-compute
+//! (mula-mini-dense vs mula-mini — same active compute, MoE has 2x total
+//! params); (b) loss vs model size for the MoE family to a fixed token
+//! budget. Paper shape to match: MoE below dense at equal steps; larger
+//! models lower.
+
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::util::bench::Report;
+
+fn run(m: &Manifest, model: &str, steps: usize, data: &std::path::Path)
+    -> optimus::Result<optimus::coordinator::TrainReport>
+{
+    let mut o = TrainOptions::new(model, Topology::dp_only(2), data.to_path_buf());
+    o.run.steps = steps;
+    o.run.warmup_steps = steps / 8;
+    o.run.peak_lr = 1.5e-3;
+    o.run.min_lr = 1.5e-4;
+    o.engine_pool = 2;
+    coordinator::train(m, &o)
+}
+
+fn main() -> optimus::Result<()> {
+    let m = Manifest::load(&optimus::artifacts_dir())?;
+    let data_dir = std::env::temp_dir().join("optimus-fig1-data");
+    if !data_dir.exists() {
+        preprocess::preprocess(&corpus::data_files(42, 8, 64), 192, 7, &data_dir, 2048)?;
+    }
+
+    // --- Fig 1a: dense vs MoE, iso-compute ---
+    let steps = 14;
+    let dense = run(&m, "mula-tiny-dense", steps, &data_dir)?;
+    let moe = run(&m, "mula-tiny", steps, &data_dir)?;
+    let mut a = Report::new(
+        "Fig 1a: training loss, dense vs iso-compute MoE (mula-tiny scale)",
+        &["step", "dense", "moe"],
+    );
+    for i in (0..steps).step_by(3).chain([steps - 1]) {
+        a.row(&[
+            i.to_string(),
+            format!("{:.4}", dense.loss.points[i].1),
+            format!("{:.4}", moe.loss.points[i].1),
+        ]);
+    }
+    a.print();
+    a.write_csv("fig1a_dense_vs_moe").ok();
+    let d_end = dense.loss.tail_mean(5);
+    let m_end = moe.loss.tail_mean(5);
+    println!("final: dense {d_end:.4} vs moe {m_end:.4} — paper shape: moe <= dense");
+
+    // --- Fig 1b: model scaling to a fixed token budget ---
+    let mut b = Report::new(
+        "Fig 1b: loss at fixed token budget vs model size (full sweep: OPTIMUS_BENCH_FULL=1)",
+        &["model", "total params", "loss(tail)"],
+    );
+    // full sweep (mini/small/med) only when explicitly requested: their
+    // interpret-mode MoE steps take minutes each on a single-core host
+    let full = std::env::var("OPTIMUS_BENCH_FULL").is_ok();
+    let sweep: &[(&str, usize)] = if full {
+        &[("mula-tiny", 8), ("mula-mini", 8), ("mula-small", 8), ("mula-med", 8)]
+    } else {
+        &[("mula-tiny", 14), ("mula-tiny-dense", 14)]
+    };
+    for &(name, steps) in sweep {
+        let r = run(&m, name, steps, &data_dir)?;
+        let mm = m.config(name)?;
+        b.row(&[
+            name.into(),
+            format!("{:.1}M", mm.param_count as f64 / 1e6),
+            format!("{:.4}", r.loss.tail_mean(3)),
+        ]);
+    }
+    b.print();
+    b.write_csv("fig1b_model_scaling").ok();
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Figure 2: benchmark-score progression during training, dense vs MoE
+//! (the paper's lm-eval progression, substituted by the synthetic suite).
+//! Shape to match: scores improve with tokens; MoE >= dense late in
+//! training at iso-compute.
+
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, StepHook, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::eval;
+use optimus::runtime::Engine;
+use optimus::util::bench::Report;
+use std::sync::{Arc, Mutex};
+
+/// Hook that snapshots parameters every `every` steps (rank 0).
+struct SnapHook {
+    every: usize,
+    snaps: Mutex<Vec<(usize, Vec<f32>)>>,
+}
+impl StepHook for SnapHook {
+    fn on_step(&self, r: usize, s: usize, _l: f32, p: &mut [f32]) -> optimus::Result<()> {
+        if r == 0 && (s % self.every == 0 || s == 0) {
+            self.snaps.lock().unwrap().push((s, p.to_vec()));
+        }
+        Ok(())
+    }
+}
+
+fn main() -> optimus::Result<()> {
+    let m = Manifest::load(&optimus::artifacts_dir())?;
+    let data_dir = std::env::temp_dir().join("optimus-fig2-data");
+    if !data_dir.exists() {
+        preprocess::preprocess(&corpus::data_files(42, 6, 48), 64, 7, &data_dir, 2048)?;
+    }
+    let engine = Engine::new_pool(2)?;
+    let steps = 24;
+    let every = 8;
+
+    let mut table = Report::new(
+        "Fig 2: synthetic-suite average during training (dense vs MoE)",
+        &["step", "mula-tiny-dense", "mula-tiny (MoE)"],
+    );
+    let mut curves = Vec::new();
+    for model in ["mula-tiny-dense", "mula-tiny"] {
+        let snaps = Arc::new(SnapHook { every, snaps: Mutex::new(Vec::new()) });
+        let mut o = TrainOptions::new(model, Topology::dp_only(2), data_dir.clone());
+        o.run.steps = steps;
+        o.run.warmup_steps = 5;
+        o.run.peak_lr = 3e-3;
+        o.hook = snaps.clone();
+        coordinator::train(&m, &o)?;
+        let mm = m.config(model)?;
+        let mut pts = Vec::new();
+        for (s, params) in snaps.snaps.lock().unwrap().iter() {
+            let scores = eval::run_suite(&engine, mm, params, 8)?;
+            pts.push((*s, eval::average(&scores)));
+        }
+        curves.push(pts);
+    }
+    for i in 0..curves[0].len().min(curves[1].len()) {
+        table.row(&[
+            curves[0][i].0.to_string(),
+            format!("{:.1}", curves[0][i].1),
+            format!("{:.1}", curves[1][i].1),
+        ]);
+    }
+    table.print();
+    table.write_csv("fig2_progression").ok();
+    Ok(())
+}

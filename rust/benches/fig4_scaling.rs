@@ -1,0 +1,68 @@
+//! Figure 4: (a) measured loss vs compute scale (global batch grows with
+//! DP, mula-tiny); (b) Aurora-model scaling efficiency of Mula-220B-A10B
+//! from 384 to 12288 tiles, with and without Forced Uniform Routing.
+
+use optimus::cluster::{scaling_efficiency, step_time, Aurora, ParallelPlan};
+use optimus::comm::Topology;
+use optimus::config::models::MULA_220B;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::pipeline::Schedule;
+use optimus::data::{corpus, preprocess};
+use optimus::util::bench::Report;
+
+fn main() -> optimus::Result<()> {
+    let m = Manifest::load(&optimus::artifacts_dir())?;
+    let data_dir = std::env::temp_dir().join("optimus-fig4-data");
+    if !data_dir.exists() {
+        preprocess::preprocess(&corpus::data_files(42, 6, 64), 64, 7, &data_dir, 2048)?;
+    }
+
+    let mut a = Report::new(
+        "Fig 4a (measured analog): loss decreases with compute scale",
+        &["dp", "tokens/step", "loss@18-20"],
+    );
+    for dp in [1usize, 2, 4] {
+        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(dp), data_dir.clone());
+        o.run.steps = 12;
+        o.run.warmup_steps = 4;
+        o.run.peak_lr = 2e-3;
+        o.engine_pool = dp.min(4);
+        let r = coordinator::train(&m, &o)?;
+        a.row(&[
+            dp.to_string(),
+            r.tokens_per_step.to_string(),
+            format!("{:.4}", r.loss.tail_mean(2)),
+        ]);
+    }
+    a.print();
+    a.write_csv("fig4a_loss_vs_scale").ok();
+
+    let hw = Aurora::default();
+    let mut b = Report::new(
+        "Fig 4b (modeled): Mula-220B-A10B weak-scaling efficiency",
+        &["tiles", "regular", "FUR"],
+    );
+    for tiles in [384usize, 768, 1536, 3072, 6144, 12288] {
+        b.row(&[
+            tiles.to_string(),
+            format!("{:.3}", scaling_efficiency(&MULA_220B, &hw, 384, tiles, false)),
+            format!("{:.3}", scaling_efficiency(&MULA_220B, &hw, 384, tiles, true)),
+        ]);
+    }
+    b.print();
+    b.write_csv("fig4b_scaling_efficiency").ok();
+
+    // step-time breakdown at the paper's 220B plan (sanity/bookkeeping)
+    let plan = ParallelPlan {
+        dp: 128, ep: 12, pp: 8, micro_batches: 16,
+        schedule: Schedule::OneFOneB, tokens_per_tile: 4096, fur: false,
+    };
+    let s = step_time(&MULA_220B, &hw, &plan, true);
+    println!(
+        "\nmodeled 220B step @12288 tiles: compute {:.2}s dp_comm {:.2}s \
+         ep_comm {:.3}s bubble {:.2}s opt {:.3}s (total {:.2}s)",
+        s.compute, s.dp_comm, s.ep_comm, s.pp_bubble, s.optimizer, s.total()
+    );
+    Ok(())
+}

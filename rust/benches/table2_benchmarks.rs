@@ -1,0 +1,54 @@
+//! Table 2: final benchmark scores, dense vs iso-compute MoE. The paper's
+//! lm-eval rows are substituted by the synthetic probe suite (DESIGN.md
+//! §1); the claim reproduced is the *ordering*: at iso-compute the MoE
+//! model matches or beats the dense one on the suite average.
+
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::eval;
+use optimus::runtime::Engine;
+use optimus::util::bench::Report;
+
+fn main() -> optimus::Result<()> {
+    let m = Manifest::load(&optimus::artifacts_dir())?;
+    let data_dir = std::env::temp_dir().join("optimus-table2-data");
+    if !data_dir.exists() {
+        preprocess::preprocess(&corpus::data_files(42, 8, 64), 64, 7, &data_dir, 2048)?;
+    }
+    let engine = Engine::new_pool(2)?;
+    let steps = 36;
+
+    let mut results = Vec::new();
+    for model in ["mula-tiny-dense", "mula-tiny"] {
+        let mut o = TrainOptions::new(model, Topology::dp_only(2), data_dir.clone());
+        o.run.steps = steps;
+        o.run.warmup_steps = 6;
+        o.run.peak_lr = 3e-3;
+        o.run.min_lr = 3e-4;
+        let r = coordinator::train(&m, &o)?;
+        let mm = m.config(model)?;
+        results.push((model, eval::run_suite(&engine, mm, &r.final_params, 24)?));
+    }
+
+    let mut t = Report::new(
+        "Table 2: benchmark scores after training (dense vs MoE, iso-compute)",
+        &["benchmark", results[0].0, results[1].0],
+    );
+    for task in eval::TASKS {
+        t.row(&[
+            task.into(),
+            format!("{:.1}", results[0].1[task]),
+            format!("{:.1}", results[1].1[task]),
+        ]);
+    }
+    t.row(&[
+        "average".into(),
+        format!("{:.1}", eval::average(&results[0].1)),
+        format!("{:.1}", eval::average(&results[1].1)),
+    ]);
+    t.print();
+    t.write_csv("table2_benchmarks").ok();
+    Ok(())
+}

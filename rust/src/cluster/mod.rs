@@ -1,0 +1,294 @@
+//! Aurora analytic performance model — regenerates the paper's scaling
+//! and speedup *shapes* at scales this testbed cannot run (Fig 4b,
+//! Table 3 projections). See DESIGN.md §1 for the substitution argument.
+//!
+//! Machine constants come from the Aurora architecture paper ([1] in the
+//! paper): 12 PVC tiles/node, ~22.6 TFLOP/s bf16 achievable per tile,
+//! 2×Slingshot-11 NICs/node (~25 GB/s each), dragonfly topology. The
+//! collective model is hierarchical (intra-node fast, inter-node
+//! ring/tree with α-β costs).
+
+use crate::config::models::MulaSpec;
+use crate::coordinator::pipeline::{bubble_fraction, Schedule};
+use crate::util::prng::Prng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Aurora {
+    pub tiles_per_node: usize,
+    /// achievable bf16 FLOP/s per tile (not peak)
+    pub tile_flops: f64,
+    /// inter-node bandwidth per node (2 NICs)
+    pub node_bw: f64,
+    /// intra-node (Xe-Link) bandwidth per tile pair
+    pub xelink_bw: f64,
+    /// inter-node collective latency per hop
+    pub alpha: f64,
+    /// achievable fraction of peak on expert GEMMs (small-K penalty)
+    pub gemm_eff: f64,
+}
+
+impl Default for Aurora {
+    fn default() -> Self {
+        Aurora {
+            tiles_per_node: 12,
+            tile_flops: 22.6e12,
+            node_bw: 50e9,
+            xelink_bw: 30e9,
+            alpha: 15e-6,
+            gemm_eff: 0.45,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelPlan {
+    pub dp: usize,
+    pub ep: usize,
+    pub pp: usize,
+    pub micro_batches: usize,
+    pub schedule: Schedule,
+    /// tokens per tile per step (sequence × local batch)
+    pub tokens_per_tile: usize,
+    pub fur: bool,
+}
+
+/// Expert-load imbalance factor: max/mean load over experts when routing
+/// T·K selections over E experts. FUR forces exactly 1.0; otherwise we
+/// sample a multinomial with a mild hot-expert skew (softmax routers are
+/// never perfectly balanced even with the aux loss).
+pub fn imbalance_factor(tokens_k: usize, experts: usize, fur: bool, seed: u64) -> f64 {
+    if fur || experts <= 1 {
+        return 1.0;
+    }
+    let mut rng = Prng::new(seed);
+    // per-expert probabilities with ±20% systematic skew
+    let probs: Vec<f64> = (0..experts)
+        .map(|e| 1.0 + 0.2 * ((e as f64 * 2.39996).sin()))
+        .collect();
+    let total: f64 = probs.iter().sum();
+    let mut counts = vec![0u64; experts];
+    // sample in expectation + binomial noise (cheap approximation of the
+    // multinomial for large T)
+    for (e, p) in probs.iter().enumerate() {
+        let mean = tokens_k as f64 * p / total;
+        let noise = rng.normal() * mean.sqrt();
+        counts[e] = (mean + noise).max(0.0) as u64;
+    }
+    let max = *counts.iter().max().unwrap() as f64;
+    let mean = counts.iter().sum::<u64>() as f64 / experts as f64;
+    (max / mean).max(1.0)
+}
+
+/// Modeled time for one training step (seconds) with its breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct StepModel {
+    pub compute: f64,
+    pub dp_comm: f64,
+    pub ep_comm: f64,
+    pub pp_bubble: f64,
+    pub optimizer: f64,
+}
+
+impl StepModel {
+    pub fn total(&self) -> f64 {
+        self.compute + self.dp_comm + self.ep_comm + self.pp_bubble + self.optimizer
+    }
+}
+
+pub fn step_time(m: &MulaSpec, hw: &Aurora, plan: &ParallelPlan, epso: bool) -> StepModel {
+    let tiles = plan.dp * plan.ep * plan.pp;
+    let nodes = (tiles + hw.tiles_per_node - 1) / hw.tiles_per_node;
+    let tokens_local = plan.tokens_per_tile as f64;
+
+    // ---- compute: fwd+bwd FLOPs on the tile's share of the model ----
+    let flops_per_token = m.train_flops_per_token() / plan.pp as f64;
+    let imb = imbalance_factor(
+        (plan.tokens_per_tile * m.top_k.max(1)) as usize,
+        m.n_experts.max(1),
+        plan.fur,
+        tiles as u64,
+    );
+    // expert share of compute rides the imbalance factor
+    let e_frac = m.expert_param_fraction();
+    let compute = tokens_local * flops_per_token
+        * (1.0 - e_frac + e_frac * imb)
+        / (hw.tile_flops * hw.gemm_eff);
+
+    // ---- DP gradient reduce-scatter + param allgather ----
+    // bf16 gradients over the model's per-stage parameters
+    let bytes = 2.0 * (m.param_count() / plan.pp) as f64;
+    // DP spans node groups (EP fills the node, PP spans nodes), so the
+    // gradient ring runs over the DP degree itself; its bandwidth term
+    // saturates at 2V/BW — this saturation is what produces the paper's
+    // ~90% plateau from 1.5k to 12k tiles
+    let ring = |n: f64, v: f64| {
+        if n <= 1.0 {
+            0.0
+        } else {
+            2.0 * (n - 1.0) / n * v / hw.node_bw + 2.0 * (n - 1.0).log2().max(0.0) * hw.alpha * 40.0
+        }
+    };
+    let dp_comm = ring(plan.dp as f64, bytes) // RS + AG (2V(n-1)/n total)
+        + bytes / hw.xelink_bw; // intra-node staging
+
+    // ---- EP Stage-1 exchange (allgather within the node) ----
+    let h = m.hidden as f64;
+    let ep_bytes = tokens_local * plan.ep as f64 * h * 2.0 * 2.0; // x + grads
+    let ep_comm = if plan.ep > 1 { ep_bytes / hw.xelink_bw } else { 0.0 };
+
+    // ---- PP bubble ----
+    let bubble = bubble_fraction(plan.schedule, plan.pp, plan.micro_batches);
+    let pp_bubble = compute * bubble / (1.0 - bubble);
+
+    // ---- optimizer: memory-bound AdamW over the rank's shard ----
+    let (e_params, ne_params) = {
+        let e = (m.param_count() as f64) * e_frac;
+        (e, m.param_count() as f64 - e)
+    };
+    let shard = if epso {
+        ne_params / (plan.dp * plan.ep) as f64 + e_params / plan.ep as f64 / plan.dp as f64
+    } else {
+        // SO: NE states replicated EP times
+        ne_params / plan.dp as f64 + e_params / plan.ep as f64 / plan.dp as f64
+    } / plan.pp as f64;
+    // 16 bytes/param state traffic at ~0.5 TB/s effective HBM
+    let optimizer = shard * 16.0 / 0.5e12 + if nodes > 1 { ring(nodes as f64, 0.0) } else { 0.0 };
+    let _ = nodes;
+
+    StepModel { compute, dp_comm, ep_comm, pp_bubble, optimizer }
+}
+
+/// Weak-scaling efficiency vs the 384-tile baseline (Fig 4b): global batch
+/// grows with tiles, per-tile work constant, so efficiency =
+/// t_step(384) / t_step(tiles).
+pub fn scaling_efficiency(
+    m: &MulaSpec,
+    hw: &Aurora,
+    base_tiles: usize,
+    tiles: usize,
+    fur: bool,
+) -> f64 {
+    let plan = |t: usize| ParallelPlan {
+        dp: t / 8 / 12 * 12, // PP=8, EP=12 within node (paper's 220B plan)
+        ep: 12,
+        pp: 8,
+        micro_batches: 16,
+        schedule: Schedule::OneFOneB,
+        tokens_per_tile: 4096,
+        fur,
+    };
+    let fix = |t: usize| {
+        let mut p = plan(t);
+        // dp degree = tiles / (ep*pp)
+        p.dp = (t / (p.ep * p.pp)).max(1);
+        p
+    };
+    let t0 = step_time(m, hw, &fix(base_tiles), true).total();
+    let t1 = step_time(m, hw, &fix(tiles), true).total();
+    t0 / t1
+}
+
+/// Table 3 projection: EPSO optimizer-component speedup = SO shard size /
+/// EPSO shard size (memory-bound update).
+pub fn epso_optimizer_speedup(m: &MulaSpec, ep: usize) -> f64 {
+    let e = m.expert_param_fraction();
+    let ne = 1.0 - e;
+    let e_loc = e / ep as f64;
+    (ne + e_loc) / (ne / ep as f64 + e_loc)
+}
+
+/// Table 3 projection: FSMOE fwd+bwd speedup — naive computes every
+/// expert on every token (N/K times the routed FLOPs) plus dispatch
+/// overhead; FSMOE computes routed tokens with tile padding.
+pub fn fsmoe_fwdbwd_speedup(m: &MulaSpec, ep: usize, tile_rows: usize) -> f64 {
+    if !m.is_moe() {
+        return 1.0;
+    }
+    let t = 4096.0; // tokens in flight per rank
+    let k = m.top_k as f64;
+    let n_local = (m.n_experts / ep) as f64;
+    let routed = t * k; // routed token-expert pairs
+    // HF baseline: same routed FLOPs but many small per-expert GEMMs at
+    // ~half efficiency plus a fixed dispatch/indexing overhead per expert
+    let naive = routed * 2.0 + n_local * 0.3 * t;
+    let pad = n_local * tile_rows as f64; // FSMOE tile-padding overhead
+    let e_frac = m.expert_param_fraction();
+    // non-expert (attention/router) time shared by both paths
+    let rest = (1.0 - e_frac) / e_frac * routed;
+    (naive + rest) / (routed + pad + rest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::*;
+
+    #[test]
+    fn epso_speedup_matches_table3() {
+        // paper Table 3 optimizer column: 1.36 / 1.23 / 1.07
+        let cases = [(&MULA_20B, 1.36), (&MULA_100B, 1.23), (&MULA_220B, 1.07)];
+        for (m, want) in cases {
+            let got = epso_optimizer_speedup(m, 12);
+            assert!(
+                (got - want).abs() < 0.08,
+                "{}: modeled {got:.3} vs paper {want}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn fsmoe_speedup_is_in_paper_band() {
+        // paper Table 3 F+B column: 1.33-2.83x; shape: fewer experts per
+        // rank and fewer layers -> bigger win for mula-7b (EP=1)
+        let s7 = fsmoe_fwdbwd_speedup(&MULA_7B, 1, 64);
+        let s20 = fsmoe_fwdbwd_speedup(&MULA_20B, 12, 64);
+        assert!(s7 > 1.5 && s7 < 4.0, "{s7}");
+        assert!(s20 > 1.1 && s20 < s7, "{s20} vs {s7}");
+    }
+
+    #[test]
+    fn scaling_efficiency_shape_matches_fig4b() {
+        let hw = Aurora::default();
+        let m = &MULA_220B;
+        let e768 = scaling_efficiency(m, &hw, 384, 768, false);
+        let e1536 = scaling_efficiency(m, &hw, 384, 1536, false);
+        let e12288 = scaling_efficiency(m, &hw, 384, 12288, false);
+        // paper: ~97% at 768, ~90% plateau from 1536 to 12288
+        assert!(e768 > 0.93 && e768 <= 1.0, "{e768}");
+        assert!(e1536 > 0.82 && e1536 < 0.97, "{e1536}");
+        assert!(e12288 > 0.80 && e12288 < 0.95, "{e12288}");
+        // plateau: the drop from 1536 to 12288 is small
+        assert!((e1536 - e12288).abs() < 0.06, "{e1536} vs {e12288}");
+    }
+
+    #[test]
+    fn fur_removes_imbalance() {
+        let with = imbalance_factor(1 << 16, 240, false, 1);
+        let without = imbalance_factor(1 << 16, 240, true, 1);
+        assert_eq!(without, 1.0);
+        assert!(with > 1.05, "{with}");
+        // FUR and non-FUR show similar *scaling* dynamics (paper Fig 4b):
+        let hw = Aurora::default();
+        let ef = scaling_efficiency(&MULA_220B, &hw, 384, 12288, true);
+        let en = scaling_efficiency(&MULA_220B, &hw, 384, 12288, false);
+        assert!((ef - en).abs() < 0.05, "FUR {ef} vs regular {en}");
+    }
+
+    #[test]
+    fn step_breakdown_is_positive_and_dominated_by_compute() {
+        let hw = Aurora::default();
+        let plan = ParallelPlan {
+            dp: 32,
+            ep: 12,
+            pp: 8,
+            micro_batches: 16,
+            schedule: Schedule::OneFOneB,
+            tokens_per_tile: 4096,
+            fur: false,
+        };
+        let s = step_time(&MULA_220B, &hw, &plan, true);
+        assert!(s.compute > 0.0 && s.total() > s.compute);
+        assert!(s.compute / s.total() > 0.35, "{s:?}");
+    }
+}

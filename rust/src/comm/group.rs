@@ -1,0 +1,452 @@
+//! A process group: rendezvous collectives among `size` participants.
+//!
+//! Each collective is a two-phase rendezvous guarded by a mutex+condvar:
+//! all members deposit their contribution; the last arrival computes the
+//! result; everyone picks up their share; the last departure resets the
+//! slot for the next round. Rounds are strictly ordered per group, which
+//! matches the deterministic program order of collectives in SPMD
+//! training.
+
+use crate::util::bf16_round;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Gradient-reduction dtype (paper §2.1 trains with bfloat16 gradient
+/// reduction; f32 is the ablation baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceDtype {
+    F32,
+    Bf16,
+}
+
+#[derive(Default)]
+struct RoundState {
+    round: u64,
+    arrived: usize,
+    departed: usize,
+    contribs: Vec<Option<Vec<f32>>>,
+    /// full result (allreduce/allgather) — members slice their share
+    result: Option<Arc<Vec<f32>>>,
+    /// all2all transposed buffers, one per destination
+    a2a: Vec<Option<Vec<f32>>>,
+}
+
+/// Byte/operation counters for calibration of the cluster model.
+#[derive(Default, Debug, Clone)]
+pub struct CommStats {
+    pub ops: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+pub struct Group {
+    size: usize,
+    state: Mutex<RoundState>,
+    cv: Condvar,
+    ops: AtomicU64,
+    bytes: AtomicU64,
+    /// set when a member died: all waiting/future members panic instead
+    /// of blocking forever (a dead node hangs its peers; the launcher
+    /// classifies the resulting abort as a hard failure)
+    poisoned: std::sync::atomic::AtomicBool,
+}
+
+impl Group {
+    pub fn new(size: usize) -> Arc<Group> {
+        assert!(size > 0);
+        let mut st = RoundState::default();
+        st.contribs = vec![None; size];
+        st.a2a = vec![None; size];
+        Arc::new(Group {
+            size,
+            state: Mutex::new(st),
+            cv: Condvar::new(),
+            ops: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Mark the group dead (a member rank failed). Wakes all waiters,
+    /// which panic out of their collectives.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        let _guard = self.state.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    fn check_poison(&self) {
+        if self.poisoned.load(Ordering::SeqCst) {
+            panic!("comm group poisoned: a peer rank failed");
+        }
+    }
+
+    pub fn stats(&self) -> CommStats {
+        CommStats {
+            ops: self.ops.load(Ordering::Relaxed),
+            bytes_in: self.bytes.load(Ordering::Relaxed),
+            bytes_out: 0,
+        }
+    }
+
+    fn account(&self, bytes: usize) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Core rendezvous: deposit `mine`, the last arrival runs `combine`
+    /// over all contributions, everyone receives the shared result.
+    ///
+    /// Rounds are strictly ordered: an early finisher re-entering for
+    /// round r+1 parks until round r has fully drained (a departure
+    /// requires the result to be set, and the reset only happens after
+    /// all `size` departures — so deposits can never leak across rounds).
+    fn rendezvous<F>(&self, rank: usize, mine: Vec<f32>, combine: F) -> Arc<Vec<f32>>
+    where
+        F: FnOnce(&mut Vec<Option<Vec<f32>>>) -> Vec<f32>,
+    {
+        assert!(rank < self.size);
+        self.check_poison();
+        self.account(mine.len() * 4);
+        let mut st = self.state.lock().unwrap();
+        // Previous round still draining (result published but not all
+        // members have departed): wait for the reset.
+        while st.result.is_some() {
+            st = self.cv.wait(st).unwrap();
+            self.check_poison();
+        }
+        debug_assert!(st.contribs[rank].is_none(),
+            "rank {rank} deposited twice in one round");
+        let my_round = st.round;
+        st.contribs[rank] = Some(mine);
+        st.arrived += 1;
+        if st.arrived == self.size {
+            let res = combine(&mut st.contribs);
+            st.result = Some(Arc::new(res));
+            self.cv.notify_all();
+        } else {
+            while !(st.result.is_some() && st.round == my_round) {
+                st = self.cv.wait(st).unwrap();
+                self.check_poison();
+            }
+        }
+        let out = Arc::clone(st.result.as_ref().unwrap());
+        st.departed += 1;
+        if st.departed == self.size {
+            st.arrived = 0;
+            st.departed = 0;
+            st.result = None;
+            st.round += 1;
+            for c in st.contribs.iter_mut() {
+                *c = None;
+            }
+            self.cv.notify_all();
+        }
+        out
+    }
+
+    /// Sum-allreduce (optionally rounding each contribution to bf16,
+    /// reproducing the paper's bf16 gradient reduction).
+    pub fn allreduce(&self, rank: usize, mut mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
+        if dt == ReduceDtype::Bf16 {
+            for v in mine.iter_mut() {
+                *v = bf16_round(*v);
+            }
+        }
+        let res = self.rendezvous(rank, mine, |contribs| {
+            let mut acc = contribs[0].take().unwrap();
+            for c in contribs.iter_mut().skip(1) {
+                let c = c.take().unwrap();
+                for (a, b) in acc.iter_mut().zip(c.iter()) {
+                    *a += *b;
+                }
+            }
+            if dt == ReduceDtype::Bf16 {
+                for v in acc.iter_mut() {
+                    *v = bf16_round(*v);
+                }
+            }
+            acc
+        });
+        res.as_ref().clone()
+    }
+
+    /// Mean-allreduce (gradient averaging across data-parallel ranks).
+    pub fn allreduce_mean(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
+        let n = self.size as f32;
+        let mut out = self.allreduce(rank, mine, dt);
+        for v in out.iter_mut() {
+            *v /= n;
+        }
+        out
+    }
+
+    /// Reduce-scatter with mean: rank r receives shard r of the averaged
+    /// sum, shards per [`crate::util::shard_ranges`]. Input length may not
+    /// divide evenly; shards are ZeRO-style contiguous ranges.
+    pub fn reduce_scatter_mean(
+        &self,
+        rank: usize,
+        mine: Vec<f32>,
+        dt: ReduceDtype,
+    ) -> Vec<f32> {
+        let n = mine.len();
+        let ranges = crate::util::shard_ranges(n, self.size);
+        let summed = self.allreduce(rank, mine, dt); // semantics: same result
+        let (s, l) = ranges[rank];
+        let inv = 1.0 / self.size as f32;
+        summed[s..s + l].iter().map(|v| v * inv).collect()
+    }
+
+    /// Reduce-scatter with sum over equal `1/size` slices: rank r receives
+    /// slice r of the elementwise sum (Algorithm 1 line 116 — partial
+    /// expert outputs are *summed*, and each EP rank keeps its own token
+    /// segment).
+    pub fn reduce_scatter_sum_even(
+        &self,
+        rank: usize,
+        mine: Vec<f32>,
+        dt: ReduceDtype,
+    ) -> Vec<f32> {
+        let n = mine.len();
+        assert_eq!(n % self.size, 0, "even reduce-scatter needs divisible length");
+        let per = n / self.size;
+        let summed = self.allreduce(rank, mine, dt);
+        summed[rank * per..(rank + 1) * per].to_vec()
+    }
+
+    /// Allgather: concatenation of every rank's (equal-length or ragged)
+    /// contribution, in rank order.
+    pub fn allgather(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
+        let res = self.rendezvous(rank, mine, |contribs| {
+            let mut out = Vec::new();
+            for c in contribs.iter_mut() {
+                out.extend_from_slice(c.take().unwrap().as_slice());
+            }
+            out
+        });
+        res.as_ref().clone()
+    }
+
+    /// Allgather for i32 payloads (routing indices) — transported as f32
+    /// bit patterns to reuse the same fabric.
+    pub fn allgather_i32(&self, rank: usize, mine: &[i32]) -> Vec<i32> {
+        let enc: Vec<f32> = mine.iter().map(|v| f32::from_bits(*v as u32)).collect();
+        self.allgather(rank, enc)
+            .into_iter()
+            .map(|v| v.to_bits() as i32)
+            .collect()
+    }
+
+    /// Ragged-aware gather of variable-length shards followed by local
+    /// concatenation — the inverse of `reduce_scatter_mean` (ZeRO param
+    /// allgather).
+    pub fn allgather_shards(&self, rank: usize, mine: Vec<f32>, total: usize) -> Vec<f32> {
+        let out = self.allgather(rank, mine);
+        debug_assert_eq!(out.len(), total);
+        out
+    }
+
+    /// All-to-all: `mine[d]` goes to rank d; returns the buffers destined
+    /// to `rank`, in source order. Used by the EP `ep_comm=all2all`
+    /// ablation (paper Stage 1 compares all2all vs allgather).
+    pub fn all2all(&self, rank: usize, mine: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        assert_eq!(mine.len(), self.size);
+        // flatten with a length header per destination
+        let mut flat = Vec::new();
+        for d in mine.iter() {
+            flat.push(d.len() as f32);
+        }
+        for d in mine.iter() {
+            flat.extend_from_slice(d);
+        }
+        let all = self.rendezvous(rank, flat, |contribs| {
+            // concatenate everyone's flattened frame, with a per-source
+            // offset directory at the front
+            let mut out = Vec::new();
+            let frames: Vec<Vec<f32>> =
+                contribs.iter_mut().map(|c| c.take().unwrap()).collect();
+            out.push(frames.len() as f32);
+            let mut off = Vec::new();
+            let mut pos = 1.0 + frames.len() as f32;
+            for f in &frames {
+                off.push(pos);
+                pos += f.len() as f32;
+            }
+            out.extend_from_slice(&off);
+            for f in &frames {
+                out.extend_from_slice(f);
+            }
+            out
+        });
+        // decode: for each source frame, pick the chunk destined to us
+        let all = all.as_ref();
+        let nsrc = all[0] as usize;
+        let mut result = Vec::with_capacity(nsrc);
+        for s in 0..nsrc {
+            let fstart = all[1 + s] as usize;
+            let sizes: Vec<usize> = (0..self.size)
+                .map(|d| all[fstart + d] as usize)
+                .collect();
+            let mut chunk_start = fstart + self.size;
+            for d in 0..rank {
+                chunk_start += sizes[d];
+            }
+            result.push(all[chunk_start..chunk_start + sizes[rank]].to_vec());
+        }
+        result
+    }
+
+    /// Broadcast from `root` (model broadcasting, paper §4).
+    pub fn broadcast(&self, rank: usize, root: usize, mine: Vec<f32>) -> Vec<f32> {
+        let payload = if rank == root { mine } else { Vec::new() };
+        let res = self.rendezvous(rank, payload, |contribs| {
+            contribs[root].take().unwrap()
+        });
+        res.as_ref().clone()
+    }
+
+    /// Barrier.
+    pub fn barrier(&self, rank: usize) {
+        let _ = self.rendezvous(rank, Vec::new(), |_| Vec::new());
+    }
+
+    /// Max-allreduce (used for global NaN/overflow voting in ft).
+    pub fn allreduce_max(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
+        let res = self.rendezvous(rank, mine, |contribs| {
+            let mut acc = contribs[0].take().unwrap();
+            for c in contribs.iter_mut().skip(1) {
+                let c = c.take().unwrap();
+                for (a, b) in acc.iter_mut().zip(c.iter()) {
+                    *a = a.max(*b);
+                }
+            }
+            acc
+        });
+        res.as_ref().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_ranks<F, T>(n: usize, f: F) -> Vec<T>
+    where
+        F: Fn(usize) -> T + Send + Sync + 'static + Clone,
+        T: Send + 'static,
+    {
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let f = f.clone();
+                std::thread::spawn(move || f(r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        let g = Group::new(4);
+        let outs = spawn_ranks(4, move |r| {
+            g.allreduce(r, vec![r as f32, 1.0], ReduceDtype::F32)
+        });
+        for o in outs {
+            assert_eq!(o, vec![6.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_allgather_is_mean() {
+        let g = Group::new(3);
+        let n = 10; // not divisible by 3: ragged shards
+        let outs = spawn_ranks(3, move |r| {
+            let mine: Vec<f32> = (0..n).map(|i| (i + r) as f32).collect();
+            let shard = g.reduce_scatter_mean(r, mine, ReduceDtype::F32);
+            g.allgather_shards(r, shard, n)
+        });
+        let want: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        for o in outs {
+            assert_eq!(o, want);
+        }
+    }
+
+    #[test]
+    fn allgather_concats_in_rank_order() {
+        let g = Group::new(3);
+        let outs = spawn_ranks(3, move |r| g.allgather(r, vec![r as f32; r + 1]));
+        for o in outs {
+            assert_eq!(o, vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn all2all_routes_chunks() {
+        let g = Group::new(2);
+        let outs = spawn_ranks(2, move |r| {
+            // rank r sends [r*10+d] to rank d
+            let mine: Vec<Vec<f32>> =
+                (0..2).map(|d| vec![(r * 10 + d) as f32]).collect();
+            g.all2all(r, mine)
+        });
+        assert_eq!(outs[0], vec![vec![0.0], vec![10.0]]);
+        assert_eq!(outs[1], vec![vec![1.0], vec![11.0]]);
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let g = Group::new(4);
+        let outs = spawn_ranks(4, move |r| {
+            let mine = if r == 2 { vec![9.0, 8.0] } else { vec![] };
+            g.broadcast(r, 2, mine)
+        });
+        for o in outs {
+            assert_eq!(o, vec![9.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_stay_ordered() {
+        let g = Group::new(3);
+        let outs = spawn_ranks(3, move |r| {
+            let mut acc = Vec::new();
+            for round in 0..50 {
+                let o = g.allreduce(r, vec![round as f32], ReduceDtype::F32);
+                acc.push(o[0]);
+            }
+            acc
+        });
+        for o in outs {
+            for (round, v) in o.iter().enumerate() {
+                assert_eq!(*v, 3.0 * round as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_reduction_rounds() {
+        let g = Group::new(2);
+        let outs = spawn_ranks(2, move |r| {
+            g.allreduce(r, vec![1.0009765625f32], ReduceDtype::Bf16)
+        });
+        for o in outs {
+            // bf16(1.0009765625) = 1.0 -> sum 2.0
+            assert_eq!(o, vec![2.0]);
+        }
+    }
+
+    #[test]
+    fn i32_allgather_roundtrips() {
+        let g = Group::new(2);
+        let outs = spawn_ranks(2, move |r| {
+            g.allgather_i32(r, &[r as i32 * 100 - 5, i32::MAX])
+        });
+        for o in outs {
+            assert_eq!(o, vec![-5, i32::MAX, 95, i32::MAX]);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! N-D device mesh (DP × EP × PP) and its process groups.
+//!
+//! Mirrors the paper's placement: EP innermost (within a node, 12 tiles),
+//! PP across nodes, DP across node groups. Rank numbering:
+//! `rank = (dp * EP + ep) * PP + pp`.
+//!
+//! Groups exposed per rank:
+//! - **dp group**  — ranks sharing (ep, pp): gradient sync + SO sharding
+//! - **ep group**  — ranks sharing (dp, pp): Stage-1 token exchange
+//! - **dpep group** — ranks sharing pp: EPSO's non-expert sharding domain
+//! - **world**     — everything (barriers, health votes)
+
+use super::group::Group;
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub dp: usize,
+    pub ep: usize,
+    pub pp: usize,
+}
+
+impl Topology {
+    pub fn dp_only(dp: usize) -> Topology {
+        Topology { dp, ep: 1, pp: 1 }
+    }
+
+    pub fn world(&self) -> usize {
+        self.dp * self.ep * self.pp
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MeshCoord {
+    pub dp: usize,
+    pub ep: usize,
+    pub pp: usize,
+}
+
+pub struct Mesh {
+    pub topo: Topology,
+    /// indexed by ep * PP + pp
+    dp_groups: Vec<Arc<Group>>,
+    /// indexed by dp * PP + pp
+    ep_groups: Vec<Arc<Group>>,
+    /// indexed by pp
+    dpep_groups: Vec<Arc<Group>>,
+    world: Arc<Group>,
+}
+
+impl Mesh {
+    pub fn new(topo: Topology) -> Arc<Mesh> {
+        let dp_groups = (0..topo.ep * topo.pp).map(|_| Group::new(topo.dp)).collect();
+        let ep_groups = (0..topo.dp * topo.pp).map(|_| Group::new(topo.ep)).collect();
+        let dpep_groups = (0..topo.pp).map(|_| Group::new(topo.dp * topo.ep)).collect();
+        Arc::new(Mesh {
+            topo,
+            dp_groups,
+            ep_groups,
+            dpep_groups,
+            world: Group::new(topo.world()),
+        })
+    }
+
+    pub fn rank(&self, c: MeshCoord) -> usize {
+        (c.dp * self.topo.ep + c.ep) * self.topo.pp + c.pp
+    }
+
+    pub fn coord(&self, rank: usize) -> MeshCoord {
+        let pp = rank % self.topo.pp;
+        let rest = rank / self.topo.pp;
+        let ep = rest % self.topo.ep;
+        let dp = rest / self.topo.ep;
+        MeshCoord { dp, ep, pp }
+    }
+
+    /// (group, my index within it) for the data-parallel dimension.
+    pub fn dp_group(&self, rank: usize) -> (&Arc<Group>, usize) {
+        let c = self.coord(rank);
+        (&self.dp_groups[c.ep * self.topo.pp + c.pp], c.dp)
+    }
+
+    /// (group, my index) for the expert-parallel dimension.
+    pub fn ep_group(&self, rank: usize) -> (&Arc<Group>, usize) {
+        let c = self.coord(rank);
+        (&self.ep_groups[c.dp * self.topo.pp + c.pp], c.ep)
+    }
+
+    /// (group, my index) for the combined DP×EP domain (same pp stage).
+    /// Index is `dp * EP + ep` — contiguous in dp-major order.
+    pub fn dpep_group(&self, rank: usize) -> (&Arc<Group>, usize) {
+        let c = self.coord(rank);
+        (&self.dpep_groups[c.pp], c.dp * self.topo.ep + c.ep)
+    }
+
+    pub fn world_group(&self) -> &Arc<Group> {
+        &self.world
+    }
+
+    /// Poison every group (used when a rank aborts so surviving ranks
+    /// fail fast instead of hanging — paper §4 hard-failure semantics).
+    pub fn poison_all(&self) {
+        for g in self
+            .dp_groups
+            .iter()
+            .chain(self.ep_groups.iter())
+            .chain(self.dpep_groups.iter())
+        {
+            g.poison();
+        }
+        self.world.poison();
+    }
+
+    /// Pipeline neighbours (same dp, ep): (prev, next) ranks if any.
+    pub fn pp_neighbours(&self, rank: usize) -> (Option<usize>, Option<usize>) {
+        let c = self.coord(rank);
+        let prev = (c.pp > 0).then(|| self.rank(MeshCoord { pp: c.pp - 1, ..c }));
+        let next =
+            (c.pp + 1 < self.topo.pp).then(|| self.rank(MeshCoord { pp: c.pp + 1, ..c }));
+        (prev, next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let m = Mesh::new(Topology { dp: 3, ep: 4, pp: 2 });
+        for r in 0..24 {
+            assert_eq!(m.rank(m.coord(r)), r);
+        }
+    }
+
+    #[test]
+    fn group_memberships_are_consistent() {
+        let m = Mesh::new(Topology { dp: 2, ep: 2, pp: 2 });
+        for r in 0..8 {
+            let c = m.coord(r);
+            let (dg, di) = m.dp_group(r);
+            assert_eq!(dg.size(), 2);
+            assert_eq!(di, c.dp);
+            let (eg, ei) = m.ep_group(r);
+            assert_eq!(eg.size(), 2);
+            assert_eq!(ei, c.ep);
+            let (xg, xi) = m.dpep_group(r);
+            assert_eq!(xg.size(), 4);
+            assert_eq!(xi, c.dp * 2 + c.ep);
+        }
+    }
+
+    #[test]
+    fn dp_groups_are_disjoint_by_ep_pp() {
+        let m = Mesh::new(Topology { dp: 2, ep: 2, pp: 1 });
+        let (g0, _) = m.dp_group(m.rank(MeshCoord { dp: 0, ep: 0, pp: 0 }));
+        let (g1, _) = m.dp_group(m.rank(MeshCoord { dp: 0, ep: 1, pp: 0 }));
+        assert!(!Arc::ptr_eq(g0, g1));
+        let (g0b, _) = m.dp_group(m.rank(MeshCoord { dp: 1, ep: 0, pp: 0 }));
+        assert!(Arc::ptr_eq(g0, g0b));
+    }
+
+    #[test]
+    fn pp_neighbours_chain() {
+        let m = Mesh::new(Topology { dp: 1, ep: 1, pp: 4 });
+        assert_eq!(m.pp_neighbours(0), (None, Some(1)));
+        assert_eq!(m.pp_neighbours(2), (Some(1), Some(3)));
+        assert_eq!(m.pp_neighbours(3), (Some(2), None));
+    }
+
+    #[test]
+    fn cross_thread_dp_allreduce_via_mesh() {
+        use crate::comm::ReduceDtype;
+        let m = Mesh::new(Topology { dp: 2, ep: 2, pp: 1 });
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    let (g, i) = m.dp_group(r);
+                    g.allreduce(i, vec![m.coord(r).dp as f32], ReduceDtype::F32)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![1.0]); // 0 + 1
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! In-process collective communication over an N-D device mesh.
+//!
+//! Substitution for OneCCL (see DESIGN.md §1): rank threads rendezvous on
+//! shared state. The *semantics* — process groups, who contributes what,
+//! reduce/scatter/gather layouts, bf16 reduction rounding — match the
+//! paper's usage exactly; only the transport differs. Every operation also
+//! accounts bytes moved so the cluster model can be calibrated against the
+//! runnable scale.
+//!
+//! Supported ops (all used by the trainer):
+//! allreduce, reduce_scatter, allgather, all2all, broadcast, barrier,
+//! and point-to-point send/recv (pipeline activations).
+
+mod group;
+mod mesh;
+
+pub use group::{CommStats, Group, ReduceDtype};
+pub use mesh::{Mesh, MeshCoord, Topology};
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Point-to-point channel fabric for pipeline send/recv. Channels are
+/// keyed by (src, dst, tag).
+pub struct P2p {
+    n: usize,
+    senders: Vec<Vec<Mutex<Vec<mpsc::Sender<P2pMsg>>>>>,
+    receivers: Vec<Vec<Mutex<Vec<mpsc::Receiver<P2pMsg>>>>>,
+    /// out-of-order stash per (src, dst): schedules may retire receives in
+    /// a different order than sends (e.g. GPipe's reverse-order backward
+    /// against the last stage's in-order cotangent sends)
+    stash: Mutex<std::collections::HashMap<(usize, usize, usize, u64), Vec<f32>>>,
+}
+
+type P2pMsg = (u64, Vec<f32>);
+
+impl P2p {
+    pub fn new(n: usize, tags: usize) -> Arc<P2p> {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _src in 0..n {
+            let mut srow = Vec::with_capacity(n);
+            let mut rrow = Vec::with_capacity(n);
+            for _dst in 0..n {
+                let mut stags = Vec::with_capacity(tags);
+                let mut rtags = Vec::with_capacity(tags);
+                for _ in 0..tags {
+                    let (tx, rx) = mpsc::channel();
+                    stags.push(tx);
+                    rtags.push(rx);
+                }
+                srow.push(Mutex::new(stags));
+                rrow.push(Mutex::new(rtags));
+            }
+            senders.push(srow);
+            receivers.push(rrow);
+        }
+        Arc::new(P2p { n, senders, receivers, stash: Mutex::new(Default::default()) })
+    }
+
+    /// Send `data` from `src` to `dst` on `tag` with a sequence id for
+    /// sanity checking.
+    pub fn send(&self, src: usize, dst: usize, tag: usize, seq: u64, data: Vec<f32>) {
+        assert!(src < self.n && dst < self.n);
+        let guard = self.senders[src][dst].lock().unwrap();
+        guard[tag].send((seq, data)).expect("p2p receiver gone");
+    }
+
+    /// Blocking receive at `dst` from `src` on `tag` for a specific seq
+    /// id; out-of-order arrivals are stashed until requested.
+    pub fn recv(&self, src: usize, dst: usize, tag: usize, expect_seq: u64) -> Vec<f32> {
+        if let Some(d) = self.stash.lock().unwrap().remove(&(src, dst, tag, expect_seq)) {
+            return d;
+        }
+        let guard = self.receivers[src][dst].lock().unwrap();
+        loop {
+            let (seq, data) = guard[tag].recv().expect("p2p sender gone");
+            if seq == expect_seq {
+                return data;
+            }
+            self.stash.lock().unwrap().insert((src, dst, tag, seq), data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let p = P2p::new(2, 2);
+        let p2 = Arc::clone(&p);
+        let h = std::thread::spawn(move || {
+            p2.send(0, 1, 1, 7, vec![1.0, 2.0]);
+        });
+        let got = p.recv(0, 1, 1, 7);
+        assert_eq!(got, vec![1.0, 2.0]);
+        h.join().unwrap();
+    }
+}

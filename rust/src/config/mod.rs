@@ -1,0 +1,339 @@
+//! Model/run configuration: the artifact manifest written by
+//! `python/compile/aot.py` (flat parameter layout + artifact inventory)
+//! and the training run configuration (paper §2.1 recipe, scaled down).
+
+pub mod models;
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor in the flat layout (mirrors model.param_specs).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+    /// EPSO's grouping key (paper §3.2): expert params shard over DP,
+    /// non-expert params shard over DP×EP.
+    pub is_expert: bool,
+    /// owning decoder layer, -1 for embed/final_norm/head
+    pub layer: i64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model hyperparameters (manifest `hyper` block).
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub vocab_size: usize,
+    pub context: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub aux_coef: f64,
+}
+
+impl Hyper {
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+}
+
+/// Everything the coordinator knows about one model config.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    pub param_count: usize,
+    pub hyper: Hyper,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub pp_degrees: Vec<usize>,
+    pub ep_degrees: Vec<usize>,
+    pub dir: PathBuf,
+}
+
+impl ModelManifest {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("config `{}` has no artifact `{name}`", self.name))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Ranges (offset, numel) of expert vs non-expert params — the two
+    /// EPSO groups. Order follows the flat layout.
+    pub fn expert_split(&self) -> (Vec<(usize, usize)>, Vec<(usize, usize)>) {
+        let mut e = Vec::new();
+        let mut ne = Vec::new();
+        for p in &self.params {
+            if p.is_expert {
+                e.push((p.offset, p.numel));
+            } else {
+                ne.push((p.offset, p.numel));
+            }
+        }
+        (e, ne)
+    }
+
+    /// Total expert / non-expert parameter counts.
+    pub fn expert_param_counts(&self) -> (usize, usize) {
+        let (e, ne) = self.expert_split();
+        (
+            e.iter().map(|x| x.1).sum(),
+            ne.iter().map(|x| x.1).sum(),
+        )
+    }
+}
+
+/// Paper-scale config (projection-only; Table 1).
+#[derive(Clone, Debug)]
+pub struct PaperConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub vocab_size: usize,
+    pub context: usize,
+    pub param_count: usize,
+    pub active_param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ModelManifest>,
+    pub paper: BTreeMap<String, PaperConfig>,
+}
+
+fn tensor_specs(j: &Json) -> Vec<TensorSpec> {
+    j.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|t| TensorSpec {
+            shape: t
+                .req("shape")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect(),
+            dtype: t.req("dtype").as_str().unwrap().to_string(),
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.req("configs").as_obj().unwrap() {
+            let params = c
+                .req("params")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| ParamSpec {
+                    name: p.req("name").as_str().unwrap().into(),
+                    shape: p
+                        .req("shape")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                    offset: p.req("offset").as_usize().unwrap(),
+                    numel: p.req("numel").as_usize().unwrap(),
+                    is_expert: p.req("is_expert").as_bool().unwrap(),
+                    layer: p.req("layer").as_i64().unwrap(),
+                })
+                .collect();
+            let h = c.req("hyper");
+            let hyper = Hyper {
+                n_layers: h.req("n_layers").as_usize().unwrap(),
+                hidden: h.req("hidden").as_usize().unwrap(),
+                n_heads: h.req("n_heads").as_usize().unwrap(),
+                head_dim: h.req("head_dim").as_usize().unwrap(),
+                intermediate: h.req("intermediate").as_usize().unwrap(),
+                n_experts: h.req("n_experts").as_usize().unwrap(),
+                top_k: h.req("top_k").as_usize().unwrap(),
+                vocab_size: h.req("vocab_size").as_usize().unwrap(),
+                context: h.req("context").as_usize().unwrap(),
+                batch: h.req("batch").as_usize().unwrap(),
+                seq: h.req("seq").as_usize().unwrap(),
+                aux_coef: h.req("aux_coef").as_f64().unwrap(),
+            };
+            let artifacts = c
+                .req("artifacts")
+                .as_obj()
+                .unwrap()
+                .iter()
+                .map(|(an, a)| {
+                    (
+                        an.clone(),
+                        ArtifactInfo {
+                            file: a.req("file").as_str().unwrap().into(),
+                            inputs: tensor_specs(a.req("inputs")),
+                            outputs: tensor_specs(a.req("outputs")),
+                        },
+                    )
+                })
+                .collect();
+            let degrees = |key: &str| {
+                c.get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default()
+            };
+            configs.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    params,
+                    param_count: c.req("param_count").as_usize().unwrap(),
+                    hyper,
+                    artifacts,
+                    pp_degrees: degrees("pp"),
+                    ep_degrees: degrees("ep"),
+                    dir: dir.to_path_buf(),
+                },
+            );
+        }
+        let mut paper = BTreeMap::new();
+        if let Some(pc) = j.get("paper_configs").and_then(|p| p.as_obj()) {
+            for (name, c) in pc {
+                paper.insert(
+                    name.clone(),
+                    PaperConfig {
+                        name: name.clone(),
+                        n_layers: c.req("n_layers").as_usize().unwrap(),
+                        hidden: c.req("hidden").as_usize().unwrap(),
+                        n_heads: c.req("n_heads").as_usize().unwrap(),
+                        head_dim: c.req("head_dim").as_usize().unwrap(),
+                        intermediate: c.req("intermediate").as_usize().unwrap(),
+                        n_experts: c.req("n_experts").as_usize().unwrap(),
+                        top_k: c.req("top_k").as_usize().unwrap(),
+                        vocab_size: c.req("vocab_size").as_usize().unwrap(),
+                        context: c.req("context").as_usize().unwrap(),
+                        param_count: c.req("param_count").as_usize().unwrap(),
+                        active_param_count: c.req("active_param_count").as_usize().unwrap(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { configs, paper })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelManifest> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model config `{name}` (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+}
+
+/// Training run configuration — the paper §2.1 recipe, scaled down.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub peak_lr: f64,
+    pub min_lr: f64,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub grad_clip: f64,
+    /// clip only after warmup (paper: "apply clipping only after the
+    /// warmup steps")
+    pub clip_after_warmup_only: bool,
+    /// bf16 round-trip on gradient reduction (paper: bfloat16 gradient
+    /// reduction instead of float32)
+    pub bf16_grad_reduce: bool,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        // paper: peak 4e-4, min 4e-5, warmup 2500 (scaled), cosine decay,
+        // wd 0.1 on all params, AdamW (0.9, 0.99, 1e-8), clip 1.0.
+        RunConfig {
+            steps: 200,
+            warmup_steps: 20,
+            peak_lr: 4e-4,
+            min_lr: 4e-5,
+            weight_decay: 0.1,
+            beta1: 0.9,
+            beta2: 0.99,
+            eps: 1e-8,
+            grad_clip: 1.0,
+            clip_after_warmup_only: true,
+            bf16_grad_reduce: true,
+            seed: 1234,
+            log_every: 10,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Linear warmup to peak, then cosine decay to min (paper §2.1).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if step < self.warmup_steps {
+            return self.peak_lr * (step + 1) as f64 / self.warmup_steps as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let t = t.min(1.0);
+        self.min_lr
+            + 0.5 * (self.peak_lr - self.min_lr) * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let rc = RunConfig { steps: 100, warmup_steps: 10, ..Default::default() };
+        assert!(rc.lr_at(0) < rc.lr_at(5));
+        assert!((rc.lr_at(9) - rc.peak_lr).abs() / rc.peak_lr < 0.11);
+        assert!(rc.lr_at(50) < rc.peak_lr);
+        assert!((rc.lr_at(99) - rc.min_lr) / rc.min_lr < 0.05);
+        // monotone decay after warmup
+        for s in 10..99 {
+            assert!(rc.lr_at(s) >= rc.lr_at(s + 1));
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Paper Table 1 model configurations, kept in Rust for the analytic
+//! cluster model (no artifacts are lowered for these). Mirrors
+//! `python/compile/configs.py::PAPER`.
+
+/// FLOP/byte-level description of a Mula model for the cluster model.
+#[derive(Clone, Copy, Debug)]
+pub struct MulaSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub vocab_size: usize,
+    pub context: usize,
+}
+
+pub const MULA_1B: MulaSpec = MulaSpec {
+    name: "mula-1b", n_layers: 16, hidden: 2048, n_heads: 16, head_dim: 128,
+    intermediate: 8192, n_experts: 0, top_k: 0, vocab_size: 50304, context: 2048,
+};
+pub const MULA_7B: MulaSpec = MulaSpec {
+    name: "mula-7b-a1b", n_layers: 16, hidden: 2048, n_heads: 16, head_dim: 128,
+    intermediate: 1024, n_experts: 64, top_k: 8, vocab_size: 50304, context: 2048,
+};
+pub const MULA_20B: MulaSpec = MulaSpec {
+    name: "mula-20b-a2b", n_layers: 32, hidden: 2048, n_heads: 16, head_dim: 128,
+    intermediate: 1024, n_experts: 96, top_k: 8, vocab_size: 50304, context: 2048,
+};
+pub const MULA_100B: MulaSpec = MulaSpec {
+    name: "mula-100b-a7b", n_layers: 48, hidden: 3072, n_heads: 24, head_dim: 128,
+    intermediate: 1536, n_experts: 144, top_k: 8, vocab_size: 50304, context: 2048,
+};
+pub const MULA_220B: MulaSpec = MulaSpec {
+    name: "mula-220b-a10b", n_layers: 64, hidden: 3072, n_heads: 24, head_dim: 128,
+    intermediate: 1536, n_experts: 240, top_k: 8, vocab_size: 50304, context: 2048,
+};
+
+pub const PAPER_MODELS: [MulaSpec; 5] =
+    [MULA_1B, MULA_7B, MULA_20B, MULA_100B, MULA_220B];
+
+impl MulaSpec {
+    pub fn by_name(name: &str) -> Option<&'static MulaSpec> {
+        PAPER_MODELS.iter().find(|m| m.name == name)
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// Total parameters (same layout as python configs.param_count).
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let v = self.vocab_size;
+        let emb = v * h;
+        let attn = 4 * h * h;
+        let norms = 2 * h;
+        let mlp = if self.is_moe() {
+            self.n_experts * 3 * h * self.intermediate + self.n_experts * h
+        } else {
+            3 * h * self.intermediate
+        };
+        emb + self.n_layers * (attn + norms + mlp) + h + v * h
+    }
+
+    /// Parameters touched per token.
+    pub fn active_param_count(&self) -> usize {
+        if !self.is_moe() {
+            return self.param_count();
+        }
+        let inactive =
+            (self.n_experts - self.top_k) * 3 * self.hidden * self.intermediate;
+        self.param_count() - self.n_layers * inactive
+    }
+
+    /// Training FLOPs per token (fwd+bwd ≈ 6 × active params, plus
+    /// attention quadratic term).
+    pub fn train_flops_per_token(&self) -> f64 {
+        let act = self.active_param_count() as f64;
+        let attn_quad = (self.n_layers * self.context * self.hidden * 2) as f64;
+        6.0 * act + 3.0 * 2.0 * attn_quad
+    }
+
+    /// Expert parameter fraction — drives EPSO's speedup (paper §3.2).
+    pub fn expert_param_fraction(&self) -> f64 {
+        if !self.is_moe() {
+            return 0.0;
+        }
+        let e = self.n_layers * self.n_experts * 3 * self.hidden * self.intermediate;
+        e as f64 / self.param_count() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_counts() {
+        // Table 1 total / active parameters (within ~12%/15% — embedding
+        // conventions differ slightly from the paper's exact tokenizer)
+        let cases: [(&MulaSpec, f64, f64); 5] = [
+            (&MULA_1B, 1.3e9, 1.3e9),
+            (&MULA_7B, 6.9e9, 1.3e9),
+            (&MULA_20B, 20e9, 2.4e9),
+            (&MULA_100B, 100e9, 7.6e9),
+            (&MULA_220B, 220e9, 10e9),
+        ];
+        for (m, tot, act) in cases {
+            let t = m.param_count() as f64;
+            let a = m.active_param_count() as f64;
+            assert!((t - tot).abs() / tot < 0.12, "{}: total {t:.3e}", m.name);
+            assert!((a - act).abs() / act < 0.15, "{}: active {a:.3e}", m.name);
+        }
+    }
+
+    #[test]
+    fn expert_fraction_grows_with_model() {
+        assert!(MULA_220B.expert_param_fraction() > MULA_7B.expert_param_fraction() * 0.9);
+        assert!(MULA_7B.expert_param_fraction() > 0.8);
+        assert_eq!(MULA_1B.expert_param_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Rank-local parameter layout for expert parallelism.
+//!
+//! Global layout (manifest order): embed | per-layer [attn, norms, router,
+//! gate, up, down] | final_norm | head. An EP rank keeps all non-expert
+//! params and only its `NR = N/EP` expert slice, packed as
+//! `[NE block || E block]`:
+//!
+//! NE block: embed | per-layer [wq wk wv wo norm1 norm2 router] | final_norm | head
+//! E block:  per-layer [gate_local up_local down_local]
+//!
+//! These orders make every artifact input a contiguous local slice.
+
+use crate::config::ModelManifest;
+use std::ops::Range;
+
+#[derive(Clone, Debug)]
+pub struct EpLayout {
+    pub ep: usize,
+    pub ep_rank: usize,
+    pub n_local_experts: usize,
+    pub ne_len: usize,
+    pub e_len: usize,
+    /// local range of the embedding table
+    pub emb: Range<usize>,
+    /// local range of each layer's non-expert params
+    pub layer_ne: Vec<Range<usize>>,
+    /// local range of [final_norm || head]
+    pub head: Range<usize>,
+    /// local range of each layer's local expert params [gate|up|down]
+    pub layer_e: Vec<Range<usize>>,
+    /// copy plan: (global_offset, local_offset, len)
+    copies: Vec<(usize, usize, usize)>,
+}
+
+impl EpLayout {
+    pub fn new(mm: &ModelManifest, ep: usize, ep_rank: usize) -> EpLayout {
+        let h = &mm.hyper;
+        assert!(h.n_experts % ep == 0, "EP must divide expert count");
+        let nr = h.n_experts / ep;
+        let mut copies = Vec::new();
+        let mut local = 0usize;
+
+        let push = |copies: &mut Vec<(usize, usize, usize)>,
+                        local: &mut usize,
+                        goff: usize,
+                        len: usize| {
+            copies.push((goff, *local, len));
+            *local += len;
+        };
+
+        let by_name = |name: &str| {
+            mm.params
+                .iter()
+                .find(|p| p.name == name)
+                .unwrap_or_else(|| panic!("missing param {name}"))
+        };
+
+        // --- NE block ---
+        let emb_spec = by_name("embed");
+        let emb_start = local;
+        push(&mut copies, &mut local, emb_spec.offset, emb_spec.numel);
+        let emb = emb_start..local;
+
+        let mut layer_ne = Vec::with_capacity(h.n_layers);
+        for l in 0..h.n_layers {
+            let start = local;
+            for part in ["wq", "wk", "wv", "wo", "norm1", "norm2", "router"] {
+                let s = by_name(&format!("layer{l}.{part}"));
+                push(&mut copies, &mut local, s.offset, s.numel);
+            }
+            layer_ne.push(start..local);
+        }
+
+        let head_start = local;
+        for name in ["final_norm", "head"] {
+            let s = by_name(name);
+            push(&mut copies, &mut local, s.offset, s.numel);
+        }
+        let head = head_start..local;
+        let ne_len = local;
+
+        // --- E block: local slice of each expert tensor ---
+        let mut layer_e = Vec::with_capacity(h.n_layers);
+        for l in 0..h.n_layers {
+            let start = local;
+            for part in ["gate", "up", "down"] {
+                let s = by_name(&format!("layer{l}.{part}"));
+                let per_expert = s.numel / h.n_experts;
+                let goff = s.offset + ep_rank * nr * per_expert;
+                push(&mut copies, &mut local, goff, nr * per_expert);
+            }
+            layer_e.push(start..local);
+        }
+        let e_len = local - ne_len;
+
+        EpLayout {
+            ep,
+            ep_rank,
+            n_local_experts: nr,
+            ne_len,
+            e_len,
+            emb,
+            layer_ne,
+            head,
+            layer_e,
+            copies,
+        }
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.ne_len + self.e_len
+    }
+
+    /// Extract the rank-local vector from a global parameter vector.
+    pub fn extract(&self, global: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.local_len()];
+        for &(g, l, n) in &self.copies {
+            out[l..l + n].copy_from_slice(&global[g..g + n]);
+        }
+        out
+    }
+
+    /// Scatter a rank-local vector back into a global vector (expert
+    /// slices land in this rank's rows; NE overwrites).
+    pub fn scatter(&self, local: &[f32], global: &mut [f32]) {
+        for &(g, l, n) in &self.copies {
+            global[g..g + n].copy_from_slice(&local[l..l + n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+
+    #[test]
+    fn layout_partitions_params() {
+        let m = Manifest::load(&crate::artifacts_dir()).unwrap();
+        let mm = m.config("mula-tiny").unwrap();
+        let (e_total, ne_total) = mm.expert_param_counts();
+        let ep = 2;
+        let l0 = EpLayout::new(mm, ep, 0);
+        let l1 = EpLayout::new(mm, ep, 1);
+        assert_eq!(l0.ne_len, ne_total);
+        assert_eq!(l0.e_len, e_total / ep);
+        assert_eq!(l0.local_len(), l1.local_len());
+        // extraction round-trips: scatter from both ranks rebuilds global
+        let global: Vec<f32> = (0..mm.param_count).map(|i| i as f32).collect();
+        let a = l0.extract(&global);
+        let b = l1.extract(&global);
+        let mut rebuilt = vec![-1.0f32; mm.param_count];
+        l0.scatter(&a, &mut rebuilt);
+        l1.scatter(&b, &mut rebuilt);
+        assert_eq!(rebuilt, global, "EP slices + NE must cover everything");
+        // NE block identical across ranks
+        assert_eq!(a[..l0.ne_len], b[..l1.ne_len]);
+        // expert blocks disjoint
+        assert_ne!(a[l0.ne_len..], b[l1.ne_len..]);
+    }
+
+    #[test]
+    fn artifact_slices_are_contiguous_and_sized() {
+        let m = Manifest::load(&crate::artifacts_dir()).unwrap();
+        let mm = m.config("mula-tiny").unwrap();
+        let h = &mm.hyper;
+        let l = EpLayout::new(mm, 2, 1);
+        // ep2_layer_pre_fwd expects 4h² + 2h + h*N params
+        let want_ne = 4 * h.hidden * h.hidden + 2 * h.hidden + h.hidden * h.n_experts;
+        for r in &l.layer_ne {
+            assert_eq!(r.len(), want_ne);
+        }
+        // ep2_expert_fwd expects 3 * NR * hidden * intermediate
+        let want_e = 3 * (h.n_experts / 2) * h.hidden * h.intermediate;
+        for r in &l.layer_e {
+            assert_eq!(r.len(), want_e);
+        }
+        assert_eq!(l.head.len(), h.hidden + h.hidden * h.vocab_size);
+        assert_eq!(l.emb.len(), h.vocab_size * h.hidden);
+    }
+}

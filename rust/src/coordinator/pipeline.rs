@@ -1,0 +1,256 @@
+//! Pipeline-parallel microbatch schedules: GPipe, 1F1B, interleaved-1F1B
+//! (paper §1: "We implemented gpipe, 1f1b, and interleaved-1f1b
+//! schedules").
+//!
+//! A schedule is pure data — `Vec<PipeOp>` per stage — so correctness
+//! (every microbatch forwarded before its backward, bounded in-flight
+//! count, chunk ordering) is property-tested without running any HLO.
+//! The runnable PP engine executes GPipe and 1F1B; interleaved-1F1B
+//! (which requires ≥2 model chunks per rank) is exercised by the cluster
+//! performance model.
+
+/// One unit of work for a stage. `chunk` is the model-chunk index
+/// (always 0 except interleaved schedules).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipeOp {
+    Fwd { mb: usize, chunk: usize },
+    Bwd { mb: usize, chunk: usize },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    GPipe,
+    OneFOneB,
+    Interleaved1F1B { chunks: usize },
+}
+
+impl Schedule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::GPipe => "gpipe",
+            Schedule::OneFOneB => "1f1b",
+            Schedule::Interleaved1F1B { .. } => "interleaved-1f1b",
+        }
+    }
+
+    /// Op list for `stage` of `stages`, with `micro` microbatches.
+    pub fn ops(&self, stage: usize, stages: usize, micro: usize) -> Vec<PipeOp> {
+        match *self {
+            Schedule::GPipe => gpipe(micro),
+            Schedule::OneFOneB => one_f_one_b(stage, stages, micro),
+            Schedule::Interleaved1F1B { chunks } => {
+                interleaved(stage, stages, micro, chunks)
+            }
+        }
+    }
+
+    /// Peak number of stashed forward activations for `stage` — the
+    /// memory the schedule trades (GPipe stashes all M, 1F1B at most
+    /// `stages - stage`).
+    pub fn peak_in_flight(&self, stage: usize, stages: usize, micro: usize) -> usize {
+        let mut live = 0usize;
+        let mut peak = 0usize;
+        for op in self.ops(stage, stages, micro) {
+            match op {
+                PipeOp::Fwd { .. } => {
+                    live += 1;
+                    peak = peak.max(live);
+                }
+                PipeOp::Bwd { .. } => live = live.saturating_sub(1),
+            }
+        }
+        peak
+    }
+}
+
+/// GPipe: all forwards, then all backwards in reverse microbatch order.
+fn gpipe(micro: usize) -> Vec<PipeOp> {
+    let mut v: Vec<PipeOp> =
+        (0..micro).map(|mb| PipeOp::Fwd { mb, chunk: 0 }).collect();
+    v.extend((0..micro).rev().map(|mb| PipeOp::Bwd { mb, chunk: 0 }));
+    v
+}
+
+/// Non-interleaved 1F1B (PipeDream-flush): `stages - stage - 1` warmup
+/// forwards, steady 1F1B phase, cooldown backwards. Backwards retire in
+/// forward order (FIFO).
+fn one_f_one_b(stage: usize, stages: usize, micro: usize) -> Vec<PipeOp> {
+    let warmup = (stages - stage - 1).min(micro);
+    let mut v = Vec::with_capacity(2 * micro);
+    let mut next_f = 0usize;
+    let mut next_b = 0usize;
+    for _ in 0..warmup {
+        v.push(PipeOp::Fwd { mb: next_f, chunk: 0 });
+        next_f += 1;
+    }
+    while next_f < micro {
+        v.push(PipeOp::Fwd { mb: next_f, chunk: 0 });
+        next_f += 1;
+        v.push(PipeOp::Bwd { mb: next_b, chunk: 0 });
+        next_b += 1;
+    }
+    while next_b < micro {
+        v.push(PipeOp::Bwd { mb: next_b, chunk: 0 });
+        next_b += 1;
+    }
+    v
+}
+
+/// Interleaved 1F1B (Megatron-LM): each stage owns `chunks` model chunks;
+/// microbatches are processed in groups of `stages`, cycling chunks on a
+/// "virtual pipeline". Simplified faithful variant: warmup
+/// `(chunks-1)*stages + stages-stage-1` forwards.
+fn interleaved(stage: usize, stages: usize, micro: usize, chunks: usize) -> Vec<PipeOp> {
+    assert!(chunks >= 1);
+    let total = micro * chunks;
+    // forward order: rounds of `stages` microbatches per chunk
+    let mut fwd_order = Vec::with_capacity(total);
+    let groups = (micro + stages - 1) / stages;
+    for g in 0..groups {
+        for c in 0..chunks {
+            for m in 0..stages {
+                let mb = g * stages + m;
+                if mb < micro {
+                    fwd_order.push((mb, c));
+                }
+            }
+        }
+    }
+    // backward order mirrors forward order with chunks reversed
+    let mut bwd_order = Vec::with_capacity(total);
+    for g in 0..groups {
+        for c in (0..chunks).rev() {
+            for m in 0..stages {
+                let mb = g * stages + m;
+                if mb < micro {
+                    bwd_order.push((mb, c));
+                }
+            }
+        }
+    }
+    let warmup = ((chunks - 1) * stages + stages - stage - 1).min(total);
+    let mut v = Vec::with_capacity(2 * total);
+    let mut fi = 0usize;
+    let mut bi = 0usize;
+    for _ in 0..warmup {
+        let (mb, c) = fwd_order[fi];
+        v.push(PipeOp::Fwd { mb, chunk: c });
+        fi += 1;
+    }
+    while fi < total {
+        let (mb, c) = fwd_order[fi];
+        v.push(PipeOp::Fwd { mb, chunk: c });
+        fi += 1;
+        let (mb, c) = bwd_order[bi];
+        v.push(PipeOp::Bwd { mb, chunk: c });
+        bi += 1;
+    }
+    while bi < total {
+        let (mb, c) = bwd_order[bi];
+        v.push(PipeOp::Bwd { mb, chunk: c });
+        bi += 1;
+    }
+    v
+}
+
+/// Pipeline bubble fraction for the analytic model:
+/// (stages-1)/(micro + stages - 1) for GPipe/1F1B; interleaving divides
+/// the bubble by the chunk count (Megatron-LM eq. 2).
+pub fn bubble_fraction(s: Schedule, stages: usize, micro: usize) -> f64 {
+    let base = (stages - 1) as f64 / (micro as f64 + stages as f64 - 1.0);
+    match s {
+        Schedule::Interleaved1F1B { chunks } => base / chunks as f64,
+        _ => base,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+
+    fn check_complete(s: Schedule, stages: usize, micro: usize) {
+        let chunks = match s {
+            Schedule::Interleaved1F1B { chunks } => chunks,
+            _ => 1,
+        };
+        for stage in 0..stages {
+            let ops = s.ops(stage, stages, micro);
+            assert_eq!(ops.len(), 2 * micro * chunks, "{s:?} st{stage}");
+            for mb in 0..micro {
+                for c in 0..chunks {
+                    let f = ops
+                        .iter()
+                        .position(|o| *o == PipeOp::Fwd { mb, chunk: c })
+                        .expect("missing fwd");
+                    let b = ops
+                        .iter()
+                        .position(|o| *o == PipeOp::Bwd { mb, chunk: c })
+                        .expect("missing bwd");
+                    assert!(f < b, "{s:?} stage {stage}: bwd before fwd for mb {mb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_schedules_complete() {
+        for stages in [1usize, 2, 4] {
+            for micro in [1usize, 2, 4, 8] {
+                check_complete(Schedule::GPipe, stages, micro);
+                check_complete(Schedule::OneFOneB, stages, micro);
+                check_complete(Schedule::Interleaved1F1B { chunks: 2 }, stages, micro);
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_activation_memory() {
+        // 1F1B peak in-flight <= stages - stage; GPipe peaks at M
+        for stages in [2usize, 4] {
+            for micro in [4usize, 8, 16] {
+                for stage in 0..stages {
+                    let p1 = Schedule::OneFOneB.peak_in_flight(stage, stages, micro);
+                    let pg = Schedule::GPipe.peak_in_flight(stage, stages, micro);
+                    assert_eq!(pg, micro);
+                    assert!(p1 <= stages - stage, "{p1} > {}", stages - stage);
+                    if micro > stages - stage {
+                        assert!(p1 < pg, "1f1b should beat gpipe memory");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_stage_warmup_is_longest() {
+        let ops0 = Schedule::OneFOneB.ops(0, 4, 8);
+        let leading_fwds =
+            ops0.iter().take_while(|o| matches!(o, PipeOp::Fwd { .. })).count();
+        assert_eq!(leading_fwds, 4); // warmup (stages-1) + first steady F
+        let last = Schedule::OneFOneB.ops(3, 4, 8);
+        assert!(matches!(last[0], PipeOp::Fwd { .. }));
+        assert!(matches!(last[1], PipeOp::Bwd { .. }), "last stage strict 1F1B");
+    }
+
+    #[test]
+    fn bubble_shrinks_with_interleaving() {
+        let b1 = bubble_fraction(Schedule::OneFOneB, 8, 16);
+        let b2 = bubble_fraction(Schedule::Interleaved1F1B { chunks: 4 }, 8, 16);
+        assert!(b2 < b1 / 3.0);
+    }
+
+    #[test]
+    fn property_schedules_valid_under_random_shapes() {
+        run_cases(60, |g| {
+            let stages = *g.choose(&[1usize, 2, 3, 4, 6]);
+            let micro = g.range(1, 17);
+            let sched = match g.below(3) {
+                0 => Schedule::GPipe,
+                1 => Schedule::OneFOneB,
+                _ => Schedule::Interleaved1F1B { chunks: g.range(1, 4) },
+            };
+            check_complete(sched, stages, micro);
+        });
+    }
+}

@@ -1,0 +1,180 @@
+//! Data-parallel training with the fused `train_step` artifact.
+//!
+//! Per step and rank: contiguous data slice → fused fwd+bwd (HLO) →
+//! sharded optimizer (reduce-scatter grads / AdamW shard / allgather
+//! params). Model broadcasting (paper §4): rank 0 initializes, everyone
+//! else receives via the world group broadcast.
+
+use super::{clip_now, init_global_params, TrainOptions, TrainReport};
+use crate::comm::Mesh;
+use crate::config::ModelManifest;
+use crate::data::{BatchPlan, Dataset};
+use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::optim::sharded::{build_segments, ShardedOptimizer};
+use crate::runtime::{Engine, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::Arc;
+
+pub fn run(
+    mm: &ModelManifest,
+    ds: Arc<Dataset>,
+    engine: Engine,
+    mesh: Arc<Mesh>,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    let dp = opts.topo.dp;
+    let plan = BatchPlan { dp, micro_batch: mm.hyper.batch, micro_batches: 1 };
+    let art = mm.artifact_path("train_step")?;
+
+    let handles: Vec<_> = (0..dp)
+        .map(|rank| {
+            let mm = mm.clone();
+            let ds = Arc::clone(&ds);
+            let engine = engine.clone();
+            let mesh = Arc::clone(&mesh);
+            let opts = opts.clone();
+            let art = art.clone();
+            std::thread::Builder::new()
+                .name(format!("dp-rank-{rank}"))
+                .spawn(move || {
+                    let m2 = Arc::clone(&mesh);
+                    let r = rank_main(rank, &mm, ds, engine, mesh, &opts, art, plan);
+                    if r.is_err() {
+                        // dead node: unblock peers (paper §4 hard failure)
+                        m2.poison_all();
+                    }
+                    r
+                })
+                .expect("spawn rank")
+        })
+        .collect();
+
+    let mut report = None;
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut panic_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(Some(r))) => report = Some(r),
+            Ok(Ok(None)) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            // panics are usually peers aborted by group poisoning —
+            // prefer the root-cause error returned by the failed rank
+            Err(_) => panic_err = panic_err.or(Some(anyhow!("rank thread panicked"))),
+        }
+    }
+    if let Some(e) = first_err.or(panic_err) {
+        return Err(e);
+    }
+    report.ok_or_else(|| anyhow!("rank 0 produced no report"))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_main(
+    rank: usize,
+    mm: &ModelManifest,
+    ds: Arc<Dataset>,
+    engine: Engine,
+    mesh: Arc<Mesh>,
+    opts: &TrainOptions,
+    art: std::path::PathBuf,
+    plan: BatchPlan,
+) -> Result<Option<TrainReport>> {
+    let world = mesh.world_group();
+    // --- model broadcasting (paper §4): only rank 0 materializes init ---
+    let mut params = if rank == 0 {
+        let p = init_global_params(mm, opts.run.seed);
+        world.broadcast(rank, 0, p.clone());
+        p
+    } else {
+        world.broadcast(rank, 0, Vec::new())
+    };
+
+    let (dp_group, dp_rank) = mesh.dp_group(rank);
+    let (xg, xr) = mesh.dpep_group(rank);
+    let segs = build_segments(
+        opts.mode,
+        mm.param_count, // whole model is "non-expert" wrt EP=1
+        0,
+        dp_group,
+        dp_rank,
+        xg,
+        xr,
+        1,
+    );
+    let mut opt = ShardedOptimizer::new(
+        segs,
+        Arc::clone(xg),
+        xr,
+        opts.adam(),
+        opts.reduce_dtype(),
+        opts.run.grad_clip,
+    );
+
+    let (b, s) = (mm.hyper.batch, mm.hyper.seq);
+    let mut loss_curve = Curve::new("loss");
+    let mut gn_curve = Curve::new("grad_norm");
+    let mut breakdown = StepBreakdown::default();
+    let mut step_secs = Vec::with_capacity(opts.run.steps);
+
+    for step in 0..opts.run.steps {
+        let t_step = std::time::Instant::now();
+        let tokens = {
+            let _t = Scoped::new(&mut breakdown.data_secs);
+            ds.batch_i32(plan.start(step, rank, 0), b, s)
+        };
+        let outs = {
+            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+            engine.exec(
+                &format!("{}:train_step", mm.name),
+                art.clone(),
+                vec![
+                    Tensor::f32(params.clone(), vec![mm.param_count]),
+                    Tensor::i32(tokens, vec![b, s + 1]),
+                ],
+            )?
+        };
+        // curve uses the LM cross-entropy (outs[1]); outs[0] is the
+        // training objective (lm + aux) used for gradients only.
+        let loss = outs[1].scalar()?;
+        let grads = outs[3].as_f32()?;
+        // soft-failure guard (paper §4): NaN loss/grads abort the rank
+        if !loss.is_finite() {
+            return Err(anyhow!("rank {rank}: non-finite loss at step {step}"));
+        }
+        let lr = opts.run.lr_at(step) as f32;
+        let gn = {
+            let _t = Scoped::new(&mut breakdown.optimizer_secs);
+            opt.step(&mut params, grads, lr, clip_now(&opts.run, step))
+        };
+        opts.hook.on_step(rank, step, loss, &mut params)?;
+
+        if rank == 0 {
+            // loss is rank-local; average across DP for the curve
+            let mean =
+                world.allreduce_mean(rank, vec![loss], crate::comm::ReduceDtype::F32)[0];
+            loss_curve.push(step, mean as f64);
+            gn_curve.push(step, gn);
+        } else {
+            world.allreduce_mean(rank, vec![loss], crate::comm::ReduceDtype::F32);
+        }
+        step_secs.push(t_step.elapsed().as_secs_f64());
+    }
+
+    if rank != 0 {
+        return Ok(None);
+    }
+    breakdown.comm_secs = opt.comm_secs;
+    breakdown.optimizer_secs = opt.update_secs;
+    Ok(Some(TrainReport {
+        loss: loss_curve,
+        grad_norm: gn_curve,
+        breakdown,
+        step_secs,
+        tokens_per_step: plan.instances_per_step() * s,
+        final_params: params,
+        opt_state_bytes: opt.state_bytes(),
+        optimizer_update_secs: opt.update_secs,
+        optimizer_comm_secs: opt.comm_secs,
+    }))
+}

@@ -1,0 +1,395 @@
+//! Expert-parallel training: Algorithm 1 with Stage 1 in Rust.
+//!
+//! Per layer and step, each EP rank:
+//!   1. runs `ep_layer_pre_fwd` (attention + router) on its local tokens,
+//!   2. exchanges tokens/weights/indices across the EP group (allgather —
+//!      the paper's choice — or all2all, ablation),
+//!   3. runs `ep_expert_fwd` (Pallas stages 2-5) over its local experts,
+//!   4. reduce-scatters the partial outputs (line 116) and adds the
+//!      residual.
+//! The backward pass mirrors it: allgather d(moe_out) (line "allgather on
+//! the gradients"), `ep_expert_bwd`, reduce-scatter dx/dw, then
+//! `ep_layer_pre_bwd` recomputes the attention half from the stashed layer
+//! input (SAC).
+//!
+//! Gradient/optimizer sharding is where SO vs EPSO differ (§3.2):
+//! * SO: NE grads allreduced over EP (to stay correct), then sharded over
+//!   DP only — NE optimizer states replicated EP times;
+//! * EPSO: NE grads reduce-scattered over the whole DP×EP group.
+
+use super::ep::{exchange_all2all, exchange_allgather, fur_indices, EpComm};
+use super::ep_layout::EpLayout;
+use super::{clip_now, init_global_params, TrainOptions, TrainReport};
+use crate::comm::{Mesh, ReduceDtype};
+use crate::config::ModelManifest;
+use crate::data::{BatchPlan, Dataset};
+use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::optim::sharded::{build_segments, ShardedOptimizer};
+use crate::runtime::{Engine, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::Arc;
+
+pub fn run(
+    mm: &ModelManifest,
+    ds: Arc<Dataset>,
+    engine: Engine,
+    mesh: Arc<Mesh>,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    let ep = opts.topo.ep;
+    if !mm.ep_degrees.contains(&ep) {
+        return Err(anyhow!(
+            "no EP={ep} artifacts for {} (built: {:?})",
+            mm.name,
+            mm.ep_degrees
+        ));
+    }
+    let world_n = opts.topo.world();
+    // EP scales the global batch like DP (paper §1): data-rank = dp*EP+ep
+    let plan = BatchPlan {
+        dp: world_n,
+        micro_batch: mm.hyper.batch,
+        micro_batches: 1,
+    };
+
+    let handles: Vec<_> = (0..world_n)
+        .map(|rank| {
+            let mm = mm.clone();
+            let ds = Arc::clone(&ds);
+            let engine = engine.clone();
+            let mesh = Arc::clone(&mesh);
+            let opts = opts.clone();
+            std::thread::Builder::new()
+                .name(format!("ep-rank-{rank}"))
+                .spawn(move || {
+                    let m2 = Arc::clone(&mesh);
+                    let r = rank_main(rank, &mm, ds, engine, mesh, &opts, plan);
+                    if r.is_err() {
+                        m2.poison_all();
+                    }
+                    r
+                })
+                .expect("spawn rank")
+        })
+        .collect();
+
+    let mut report = None;
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut panic_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(Some(r))) => report = Some(r),
+            Ok(Ok(None)) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => panic_err = panic_err.or(Some(anyhow!("ep rank panicked"))),
+        }
+    }
+    if let Some(e) = first_err.or(panic_err) {
+        return Err(e);
+    }
+    report.ok_or_else(|| anyhow!("rank 0 produced no report"))
+}
+
+struct Arts {
+    embed_fwd: std::path::PathBuf,
+    embed_bwd: std::path::PathBuf,
+    pre_fwd: std::path::PathBuf,
+    pre_bwd: std::path::PathBuf,
+    expert_fwd: std::path::PathBuf,
+    expert_bwd: std::path::PathBuf,
+    head: std::path::PathBuf,
+}
+
+impl Arts {
+    fn load(mm: &ModelManifest, ep: usize) -> Result<Arts> {
+        let p = |n: &str| mm.artifact_path(&format!("ep{ep}_{n}"));
+        Ok(Arts {
+            embed_fwd: p("embed_fwd")?,
+            embed_bwd: p("embed_bwd")?,
+            pre_fwd: p("layer_pre_fwd")?,
+            pre_bwd: p("layer_pre_bwd")?,
+            expert_fwd: p("expert_fwd")?,
+            expert_bwd: p("expert_bwd")?,
+            head: p("head_fwdbwd")?,
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_main(
+    rank: usize,
+    mm: &ModelManifest,
+    ds: Arc<Dataset>,
+    engine: Engine,
+    mesh: Arc<Mesh>,
+    opts: &TrainOptions,
+    plan: BatchPlan,
+) -> Result<Option<TrainReport>> {
+    let h = &mm.hyper;
+    let ep = opts.topo.ep;
+    let c = mesh.coord(rank);
+    let layout = EpLayout::new(mm, ep, c.ep);
+    let arts = Arts::load(mm, ep)?;
+    let world = mesh.world_group();
+    let (ep_group, ep_rank) = mesh.ep_group(rank);
+    let (dp_group, dp_rank) = mesh.dp_group(rank);
+    let (dpep_group, dpep_rank) = mesh.dpep_group(rank);
+    let nr = layout.n_local_experts;
+
+    // model broadcasting: rank 0 initializes the *global* vector, all
+    // ranks extract their local layout from the broadcast copy.
+    let global0 = if rank == 0 {
+        let p = init_global_params(mm, opts.run.seed);
+        world.broadcast(rank, 0, p.clone());
+        p
+    } else {
+        world.broadcast(rank, 0, Vec::new())
+    };
+    let mut params = layout.extract(&global0);
+    drop(global0);
+
+    let segs = build_segments(
+        opts.mode,
+        layout.ne_len,
+        layout.e_len,
+        dp_group,
+        dp_rank,
+        dpep_group,
+        dpep_rank,
+        ep,
+    );
+    let mut opt = ShardedOptimizer::new(
+        segs,
+        Arc::clone(dpep_group),
+        dpep_rank,
+        opts.adam(),
+        opts.reduce_dtype(),
+        opts.run.grad_clip,
+    );
+
+    let (b, s) = (h.batch, h.seq);
+    let t_local = b * s;
+    let t_all = ep * t_local;
+    let k = h.top_k;
+    let hid = h.hidden;
+    let data_rank = c.dp * ep + c.ep;
+
+    let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
+        engine.exec(&format!("{}:{key}", mm.name), path.to_path_buf(), inputs)
+    };
+    let pslice = |params: &[f32], r: &std::ops::Range<usize>| {
+        Tensor::f32(params[r.clone()].to_vec(), vec![r.len()])
+    };
+
+    let mut loss_curve = Curve::new("loss");
+    let mut gn_curve = Curve::new("grad_norm");
+    let mut breakdown = StepBreakdown::default();
+    let mut step_secs = Vec::with_capacity(opts.run.steps);
+
+    for step in 0..opts.run.steps {
+        let t_step = std::time::Instant::now();
+        let tokens = {
+            let _t = Scoped::new(&mut breakdown.data_secs);
+            ds.batch_i32(plan.start(step, data_rank, 0), b, s)
+        };
+        let tokens_t = Tensor::i32(tokens, vec![b, s + 1]);
+
+        // ---------------- forward ----------------
+        let mut hcur = {
+            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+            exec("embed_fwd", &arts.embed_fwd,
+                 vec![pslice(&params, &layout.emb), tokens_t.clone()])?
+                .remove(0)
+        };
+        // stashes for backward (SAC: inputs only)
+        let mut stash_h: Vec<Tensor> = Vec::with_capacity(h.n_layers);
+        let mut stash_x: Vec<Vec<f32>> = Vec::with_capacity(h.n_layers);
+        let mut stash_w: Vec<Vec<f32>> = Vec::with_capacity(h.n_layers);
+        let mut stash_i: Vec<Vec<i32>> = Vec::with_capacity(h.n_layers);
+        let mut aux_total = 0.0f32;
+
+        for l in 0..h.n_layers {
+            stash_h.push(hcur.clone());
+            let outs = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                exec("pre_fwd", &arts.pre_fwd,
+                     vec![pslice(&params, &layout.layer_ne[l]), hcur])?
+            };
+            let mut it = outs.into_iter();
+            let a = it.next().unwrap();
+            let x2d = it.next().unwrap().into_f32()?;
+            let w2d = it.next().unwrap().into_f32()?;
+            let idx = it.next().unwrap();
+            let aux = it.next().unwrap().scalar()?;
+            aux_total += aux;
+            let mut idx = idx.as_i32()?.to_vec();
+            if opts.fur {
+                idx = fur_indices(t_local, k, h.n_experts);
+            }
+            // ---- Stage 1: token exchange across EP ----
+            let (x_all, w_all, idx_all) = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                match opts.ep_comm {
+                    EpComm::Allgather => {
+                        exchange_allgather(ep_group, ep_rank, x2d, w2d, &idx)
+                    }
+                    EpComm::All2All => exchange_all2all(
+                        ep_group, ep_rank, ep, nr, hid, x2d, w2d, &idx,
+                    ),
+                }
+            };
+            // shift indices so local experts occupy [0, NR)
+            let idx_shift: Vec<i32> = idx_all
+                .iter()
+                .map(|&v| v - (ep_rank * nr) as i32)
+                .collect();
+            // ---- Stages 2-5 (Pallas) ----
+            let partial = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                exec("expert_fwd", &arts.expert_fwd, vec![
+                    pslice(&params, &layout.layer_e[l]),
+                    Tensor::f32(x_all.clone(), vec![t_all, hid]),
+                    Tensor::f32(w_all.clone(), vec![t_all, k]),
+                    Tensor::i32(idx_shift.clone(), vec![t_all, k]),
+                ])?
+                .remove(0)
+                .into_f32()?
+            };
+            // ---- line 116: reduce-scatter of partial outputs ----
+            let moe_local = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                ep_group.reduce_scatter_sum_even(ep_rank, partial, ReduceDtype::F32)
+            };
+            // residual: h = a + moe_out
+            let mut a_data = a.into_f32()?;
+            for (av, mv) in a_data.iter_mut().zip(moe_local.iter()) {
+                *av += *mv;
+            }
+            hcur = Tensor::f32(a_data, vec![b, s, hid]);
+            stash_x.push(x_all);
+            stash_w.push(w_all);
+            stash_i.push(idx_shift);
+        }
+
+        // ---- head + loss ----
+        let outs = {
+            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+            exec("head", &arts.head,
+                 vec![pslice(&params, &layout.head), hcur, tokens_t.clone()])?
+        };
+        let loss = outs[0].scalar()?;
+        let mut dh = outs[1].clone().into_f32()?;
+        let dp_head = outs[2].as_f32()?.to_vec();
+        if !loss.is_finite() {
+            return Err(anyhow!("rank {rank}: non-finite loss at step {step}"));
+        }
+
+        // ---------------- backward ----------------
+        let mut grads = vec![0.0f32; layout.local_len()];
+        grads[layout.head.clone()].copy_from_slice(&dp_head);
+
+        for l in (0..h.n_layers).rev() {
+            // d(out) = dh: residual gives d_a = dh and d(moe_out) = dh
+            let d_moe_full = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                ep_group.allgather(ep_rank, dh.clone())
+            };
+            let outs = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                exec("expert_bwd", &arts.expert_bwd, vec![
+                    pslice(&params, &layout.layer_e[l]),
+                    Tensor::f32(stash_x[l].clone(), vec![t_all, hid]),
+                    Tensor::f32(stash_w[l].clone(), vec![t_all, k]),
+                    Tensor::i32(stash_i[l].clone(), vec![t_all, k]),
+                    Tensor::f32(d_moe_full, vec![t_all, hid]),
+                ])?
+            };
+            let dx_partial = outs[0].as_f32()?.to_vec();
+            let dw_partial = outs[1].as_f32()?.to_vec();
+            let dpe = outs[2].as_f32()?;
+            grads[layout.layer_e[l].clone()].copy_from_slice(dpe);
+            let (dx_local, dw_local) = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                (
+                    ep_group.reduce_scatter_sum_even(ep_rank, dx_partial, ReduceDtype::F32),
+                    ep_group.reduce_scatter_sum_even(ep_rank, dw_partial, ReduceDtype::F32),
+                )
+            };
+            let outs = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                exec("pre_bwd", &arts.pre_bwd, vec![
+                    pslice(&params, &layout.layer_ne[l]),
+                    stash_h[l].clone(),
+                    Tensor::f32(dh.clone(), vec![b, s, hid]),
+                    Tensor::f32(dx_local, vec![t_local, hid]),
+                    Tensor::f32(dw_local, vec![t_local, k]),
+                ])?
+            };
+            dh = outs[0].as_f32()?.to_vec();
+            grads[layout.layer_ne[l].clone()].copy_from_slice(outs[1].as_f32()?);
+        }
+        // embedding backward
+        let outs = {
+            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+            exec("embed_bwd", &arts.embed_bwd, vec![
+                pslice(&params, &layout.emb),
+                tokens_t.clone(),
+                Tensor::f32(dh.clone(), vec![b, s, hid]),
+            ])?
+        };
+        grads[layout.emb.clone()].copy_from_slice(outs[0].as_f32()?);
+
+        // ---- SO correctness step: NE grads must average over EP too ----
+        if opts.mode == crate::optim::ShardingMode::So && ep > 1 {
+            let _t = Scoped::new(&mut breakdown.comm_secs);
+            let ne = grads[..layout.ne_len].to_vec();
+            let avg = ep_group.allreduce_mean(ep_rank, ne, opts.reduce_dtype());
+            grads[..layout.ne_len].copy_from_slice(&avg);
+        }
+
+        let lr = opts.run.lr_at(step) as f32;
+        let gn = opt.step(&mut params, &grads, lr, clip_now(&opts.run, step));
+        opts.hook.on_step(rank, step, loss, &mut params)?;
+
+        // loss averaged over all ranks (each saw distinct tokens)
+        let mean_loss =
+            world.allreduce_mean(rank, vec![loss], ReduceDtype::F32)[0];
+        if rank == 0 {
+            loss_curve.push(step, mean_loss as f64);
+            gn_curve.push(step, gn);
+        }
+        step_secs.push(t_step.elapsed().as_secs_f64());
+        let _ = aux_total;
+    }
+
+    // reassemble rank 0's global view (rank 0 holds ep=0 experts; other
+    // experts live on sibling ep ranks: gather via dpep allgather of local
+    // vectors is overkill — scatter local and gather expert blocks)
+    if rank == 0 {
+        let mut final_params = vec![0.0f32; mm.param_count];
+        // collect every ep rank's local vector via the ep group
+        let all_locals = ep_group.allgather(ep_rank, params.clone());
+        for (r, chunk) in all_locals.chunks(layout.local_len()).enumerate() {
+            let lay_r = EpLayout::new(mm, ep, r);
+            lay_r.scatter(chunk, &mut final_params);
+        }
+        breakdown.comm_secs += opt.comm_secs;
+        return Ok(Some(TrainReport {
+            loss: loss_curve,
+            grad_norm: gn_curve,
+            breakdown,
+            step_secs,
+            tokens_per_step: plan.instances_per_step() * s,
+            final_params,
+            opt_state_bytes: opt.state_bytes(),
+            optimizer_update_secs: opt.update_secs,
+            optimizer_comm_secs: opt.comm_secs,
+        }));
+    }
+    // non-zero ranks must still participate in the final gather above
+    if mesh.coord(rank).dp == 0 {
+        ep_group.allgather(ep_rank, params.clone());
+    }
+    Ok(None)
+}

@@ -1,0 +1,393 @@
+//! Pipeline-parallel training over stage artifacts.
+//!
+//! Stage ranks execute the schedule's op list; activations/cotangents move
+//! over point-to-point channels. The backward artifacts recompute their
+//! stage forward from the stashed stage *input* (tokens for stage 0,
+//! received activations otherwise) — i.e. selective activation
+//! checkpointing is the engine's native execution mode (paper §1, used
+//! for Mula-100B/220B).
+//!
+//! Gradients accumulate over microbatches and are averaged before the
+//! sharded optimizer step (per-stage DP group).
+
+use super::pipeline::{PipeOp, Schedule};
+use super::{clip_now, init_global_params, TrainOptions, TrainReport};
+use crate::comm::{Mesh, P2p, ReduceDtype};
+use crate::config::{ModelManifest, ParamSpec};
+use crate::data::{BatchPlan, Dataset};
+use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
+use crate::runtime::{Engine, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::Arc;
+
+/// Stage-owned parameter specs (mirrors python model.stage_param_specs:
+/// same filter, same order, local offsets).
+pub fn stage_specs(mm: &ModelManifest, pp: usize, stage: usize) -> Vec<ParamSpec> {
+    let lps = mm.hyper.n_layers / pp;
+    let lo = (stage * lps) as i64;
+    let hi = ((stage + 1) * lps) as i64;
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for p in &mm.params {
+        let owned = (p.layer >= lo && p.layer < hi)
+            || (stage == 0 && p.name == "embed")
+            || (stage == pp - 1 && (p.name == "final_norm" || p.name == "head"));
+        if owned {
+            let mut q = p.clone();
+            let goff = p.offset;
+            q.offset = off;
+            off += p.numel;
+            out.push(ParamSpec { name: format!("{}@{goff}", q.name), ..q });
+        }
+    }
+    out
+}
+
+fn stage_len(specs: &[ParamSpec]) -> usize {
+    specs.iter().map(|s| s.numel).sum()
+}
+
+fn extract_stage(global: &[f32], specs: &[ParamSpec]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(stage_len(specs));
+    for s in specs {
+        let goff: usize = s
+            .name
+            .rsplit('@')
+            .next()
+            .unwrap()
+            .parse()
+            .expect("stage spec global offset");
+        out.extend_from_slice(&global[goff..goff + s.numel]);
+    }
+    out
+}
+
+fn scatter_stage(local: &[f32], specs: &[ParamSpec], global: &mut [f32]) {
+    let mut off = 0usize;
+    for s in specs {
+        let goff: usize = s.name.rsplit('@').next().unwrap().parse().unwrap();
+        global[goff..goff + s.numel].copy_from_slice(&local[off..off + s.numel]);
+        off += s.numel;
+    }
+}
+
+pub fn run(
+    mm: &ModelManifest,
+    ds: Arc<Dataset>,
+    engine: Engine,
+    mesh: Arc<Mesh>,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    let pp = opts.topo.pp;
+    if !mm.pp_degrees.contains(&pp) {
+        return Err(anyhow!(
+            "no PP={pp} artifacts for {} (built: {:?})",
+            mm.name,
+            mm.pp_degrees
+        ));
+    }
+    if matches!(opts.schedule, Schedule::Interleaved1F1B { .. }) {
+        return Err(anyhow!(
+            "interleaved-1f1b needs multi-chunk artifacts; runnable engine \
+             supports gpipe/1f1b (interleaved is covered by the schedule \
+             property tests and the cluster model)"
+        ));
+    }
+    let world_n = opts.topo.world();
+    let p2p = P2p::new(world_n, 2); // tag 0 = fwd activations, 1 = cotangents
+    let plan = BatchPlan {
+        dp: opts.topo.dp,
+        micro_batch: mm.hyper.batch,
+        micro_batches: opts.micro_batches,
+    };
+
+    let handles: Vec<_> = (0..world_n)
+        .map(|rank| {
+            let mm = mm.clone();
+            let ds = Arc::clone(&ds);
+            let engine = engine.clone();
+            let mesh = Arc::clone(&mesh);
+            let opts = opts.clone();
+            let p2p = Arc::clone(&p2p);
+            std::thread::Builder::new()
+                .name(format!("pp-rank-{rank}"))
+                .spawn(move || {
+                    let m2 = Arc::clone(&mesh);
+                    let r = rank_main(rank, &mm, ds, engine, mesh, p2p, &opts, plan);
+                    if r.is_err() {
+                        m2.poison_all();
+                    }
+                    r
+                })
+                .expect("spawn rank")
+        })
+        .collect();
+
+    let mut report: Option<TrainReport> = None;
+    let mut stage0_params: Option<Vec<f32>> = None;
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut panic_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(RankOut::Last(r))) => report = Some(r),
+            Ok(Ok(RankOut::Stage { stage: 0, params })) => stage0_params = Some(params),
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => panic_err = panic_err.or(Some(anyhow!("pp rank panicked"))),
+        }
+    }
+    if let Some(e) = first_err.or(panic_err) {
+        return Err(e);
+    }
+    let mut rep = report.ok_or_else(|| anyhow!("last stage produced no report"))?;
+    // assemble a full parameter vector from stage segments (pp=2 case:
+    // stage 0 params + the last stage's own, already scattered into rep)
+    if let Some(p0) = stage0_params {
+        let specs0 = stage_specs(mm, pp, 0);
+        let mut global = rep.final_params.clone();
+        scatter_stage(&p0, &specs0, &mut global);
+        rep.final_params = global;
+    }
+    Ok(rep)
+}
+
+enum RankOut {
+    Last(TrainReport),
+    Stage { stage: usize, params: Vec<f32> },
+    None,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_main(
+    rank: usize,
+    mm: &ModelManifest,
+    ds: Arc<Dataset>,
+    engine: Engine,
+    mesh: Arc<Mesh>,
+    p2p: Arc<P2p>,
+    opts: &TrainOptions,
+    plan: BatchPlan,
+) -> Result<RankOut> {
+    let h = &mm.hyper;
+    let pp = opts.topo.pp;
+    let c = mesh.coord(rank);
+    let stage = c.pp;
+    let last = stage == pp - 1;
+    let specs = stage_specs(mm, pp, stage);
+    let my_len = stage_len(&specs);
+    let world = mesh.world_group();
+    let (dp_group, dp_rank) = mesh.dp_group(rank);
+    let (prev, next) = mesh.pp_neighbours(rank);
+
+    // model broadcasting, then stage extraction
+    let global0 = if rank == 0 {
+        let p = init_global_params(mm, opts.run.seed);
+        world.broadcast(rank, 0, p.clone());
+        p
+    } else {
+        world.broadcast(rank, 0, Vec::new())
+    };
+    let mut params = extract_stage(&global0, &specs);
+    drop(global0);
+
+    let segs = vec![SegmentSpec {
+        local_offset: 0,
+        len: my_len,
+        group: Arc::clone(dp_group),
+        group_rank: dp_rank,
+        norm_weight: 1.0,
+    }];
+    let mut opt = ShardedOptimizer::new(
+        segs,
+        Arc::clone(dp_group),
+        dp_rank,
+        opts.adam(),
+        opts.reduce_dtype(),
+        opts.run.grad_clip,
+    );
+
+    let art_fwd = if last {
+        None
+    } else {
+        Some(mm.artifact_path(&format!("pp{pp}_stage{stage}_fwd"))?)
+    };
+    let art_fwdbwd = mm.artifact_path(&format!("pp{pp}_stage{stage}_fwdbwd"))?;
+
+    let (b, s) = (h.batch, h.seq);
+    let _act_len = b * s * h.hidden;
+    let ops = opts.schedule.ops(stage, pp, opts.micro_batches);
+    let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
+        engine.exec(
+            &format!("{}:pp{pp}s{stage}:{key}", mm.name),
+            path.to_path_buf(),
+            inputs,
+        )
+    };
+
+    let mut loss_curve = Curve::new("loss");
+    let mut gn_curve = Curve::new("grad_norm");
+    let mut breakdown = StepBreakdown::default();
+    let mut step_secs = Vec::with_capacity(opts.run.steps);
+
+    for step in 0..opts.run.steps {
+        let t_step = std::time::Instant::now();
+        let mut grads = vec![0.0f32; my_len];
+        let mut step_loss = 0.0f32;
+        // stashed stage inputs per microbatch (SAC)
+        let mut stash: Vec<Option<Tensor>> = vec![None; opts.micro_batches];
+
+        for op in &ops {
+            match *op {
+                PipeOp::Fwd { mb, .. } => {
+                    let tokens = {
+                        let _t = Scoped::new(&mut breakdown.data_secs);
+                        ds.batch_i32(plan.start(step, c.dp, mb), b, s)
+                    };
+                    let tokens_t = Tensor::i32(tokens, vec![b, s + 1]);
+                    if stage == 0 {
+                        let outs = {
+                            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                            exec("fwd", art_fwd.as_ref().unwrap(), vec![
+                                Tensor::f32(params.clone(), vec![my_len]),
+                                tokens_t.clone(),
+                            ])?
+                        };
+                        let hout = outs[0].as_f32()?.to_vec();
+                        stash[mb] = Some(tokens_t);
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        p2p.send(rank, next.unwrap(), 0, (step * 64 + mb) as u64, hout);
+                    } else if last {
+                        // recv + fused fwdbwd + send cotangent immediately
+                        let hin = {
+                            let _t = Scoped::new(&mut breakdown.comm_secs);
+                            p2p.recv(prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
+                        };
+                        let outs = {
+                            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                            exec("fwdbwd", &art_fwdbwd, vec![
+                                Tensor::f32(params.clone(), vec![my_len]),
+                                Tensor::f32(hin, vec![b, s, h.hidden]),
+                                tokens_t,
+                            ])?
+                        };
+                        let loss = outs[0].scalar()?;
+                        if !loss.is_finite() {
+                            return Err(anyhow!(
+                                "rank {rank}: non-finite loss at step {step}"
+                            ));
+                        }
+                        step_loss += loss;
+                        let dx = outs[2].as_f32()?.to_vec();
+                        for (g, d) in grads.iter_mut().zip(outs[3].as_f32()?) {
+                            *g += d;
+                        }
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        p2p.send(rank, prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
+                    } else {
+                        let hin = {
+                            let _t = Scoped::new(&mut breakdown.comm_secs);
+                            p2p.recv(prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
+                        };
+                        let hin_t = Tensor::f32(hin, vec![b, s, h.hidden]);
+                        let outs = {
+                            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                            exec("fwd", art_fwd.as_ref().unwrap(), vec![
+                                Tensor::f32(params.clone(), vec![my_len]),
+                                hin_t.clone(),
+                            ])?
+                        };
+                        stash[mb] = Some(hin_t);
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        p2p.send(
+                            rank,
+                            next.unwrap(),
+                            0,
+                            (step * 64 + mb) as u64,
+                            outs[0].as_f32()?.to_vec(),
+                        );
+                    }
+                }
+                PipeOp::Bwd { mb, .. } => {
+                    if last {
+                        continue; // fused into Fwd above
+                    }
+                    let d_out = {
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        p2p.recv(next.unwrap(), rank, 1, (step * 64 + mb) as u64)
+                    };
+                    let d_out_t = Tensor::f32(d_out, vec![b, s, h.hidden]);
+                    let input = stash[mb].take().expect("bwd before fwd");
+                    let outs = {
+                        let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                        exec("fwdbwd", &art_fwdbwd, vec![
+                            Tensor::f32(params.clone(), vec![my_len]),
+                            input,
+                            d_out_t,
+                        ])?
+                    };
+                    if stage == 0 {
+                        for (g, d) in grads.iter_mut().zip(outs[0].as_f32()?) {
+                            *g += d;
+                        }
+                    } else {
+                        let dx = outs[0].as_f32()?.to_vec();
+                        for (g, d) in grads.iter_mut().zip(outs[1].as_f32()?) {
+                            *g += d;
+                        }
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        p2p.send(rank, prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
+                    }
+                }
+            }
+        }
+
+        // average gradient over microbatches
+        let inv = 1.0 / opts.micro_batches as f32;
+        for g in grads.iter_mut() {
+            *g *= inv;
+        }
+        let lr = opts.run.lr_at(step) as f32;
+        let gn = {
+            let _t = Scoped::new(&mut breakdown.optimizer_secs);
+            opt.step(&mut params, &grads, lr, clip_now(&opts.run, step))
+        };
+        opts.hook.on_step(rank, step, step_loss / opts.micro_batches as f32, &mut params)?;
+
+        // loss lives on the last stage; average over its DP replicas
+        if last {
+            let mean = dp_group.allreduce_mean(
+                dp_rank,
+                vec![step_loss / opts.micro_batches as f32],
+                ReduceDtype::F32,
+            )[0];
+            if c.dp == 0 {
+                loss_curve.push(step, mean as f64);
+                gn_curve.push(step, gn);
+            }
+        }
+        step_secs.push(t_step.elapsed().as_secs_f64());
+    }
+
+    if last && c.dp == 0 {
+        let mut final_params = vec![0.0f32; mm.param_count];
+        scatter_stage(&params, &specs, &mut final_params);
+        breakdown.comm_secs += opt.comm_secs;
+        return Ok(RankOut::Last(TrainReport {
+            loss: loss_curve,
+            grad_norm: gn_curve,
+            breakdown,
+            step_secs,
+            tokens_per_step: plan.instances_per_step() * s,
+            final_params,
+            opt_state_bytes: opt.state_bytes(),
+            optimizer_update_secs: opt.update_secs,
+            optimizer_comm_secs: opt.comm_secs,
+        }));
+    }
+    if stage == 0 && c.dp == 0 {
+        return Ok(RankOut::Stage { stage, params });
+    }
+    Ok(RankOut::None)
+}

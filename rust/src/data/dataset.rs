@@ -1,0 +1,246 @@
+//! Mmap shard reader + deterministic global batch plan.
+//!
+//! Shards are mapped read-only with `libc::mmap` (lazy, zero-copy) — the
+//! paper's "loaded in mmap mode in a lazy manner". The batch plan gives
+//! every (step, dp_rank, row) a unique instance id so all ranks consume
+//! disjoint, contiguous slices of the shuffled instance stream.
+
+use super::preprocess::{MAGIC, VERSION};
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::path::{Path, PathBuf};
+
+struct Mmap {
+    ptr: *mut libc::c_void,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only (PROT_READ, MAP_PRIVATE) for its whole
+// lifetime; concurrent reads from multiple rank threads are safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    fn open(path: &Path) -> Result<Mmap> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            return Err(anyhow!("empty shard {path:?}"));
+        }
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(anyhow!("mmap failed for {path:?}"));
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+struct Shard {
+    map: Mmap,
+    n_instances: usize,
+    context: usize,
+}
+
+impl Shard {
+    fn open(path: &Path) -> Result<Shard> {
+        let map = Mmap::open(path)?;
+        let b = map.bytes();
+        if b.len() < 20 || &b[0..4] != MAGIC {
+            return Err(anyhow!("bad shard magic in {path:?}"));
+        }
+        let version = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(anyhow!("unsupported shard version {version}"));
+        }
+        let context = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+        let n = u64::from_le_bytes(b[12..20].try_into().unwrap()) as usize;
+        let want = 20 + n * context * 4;
+        if b.len() < want {
+            return Err(anyhow!("truncated shard {path:?}: {} < {want}", b.len()));
+        }
+        Ok(Shard { map, n_instances: n, context })
+    }
+
+    fn instance(&self, i: usize) -> Vec<u32> {
+        let c = self.context;
+        let start = 20 + i * c * 4;
+        let b = &self.map.bytes()[start..start + c * 4];
+        b.chunks_exact(4)
+            .map(|w| u32::from_le_bytes(w.try_into().unwrap()))
+            .collect()
+    }
+}
+
+/// A directory of `.oshard` files seen as one flat instance array.
+pub struct Dataset {
+    shards: Vec<Shard>,
+    /// prefix sums of shard instance counts
+    offsets: Vec<usize>,
+    pub context: usize,
+}
+
+impl Dataset {
+    pub fn open(dir: &Path) -> Result<Dataset> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading shard dir {dir:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|e| e == "oshard").unwrap_or(false))
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(anyhow!("no .oshard files in {dir:?}"));
+        }
+        let shards: Vec<Shard> =
+            paths.iter().map(|p| Shard::open(p)).collect::<Result<_>>()?;
+        let context = shards[0].context;
+        let mut offsets = vec![0usize];
+        for s in &shards {
+            if s.context != context {
+                return Err(anyhow!("mixed context sizes across shards"));
+            }
+            offsets.push(offsets.last().unwrap() + s.n_instances);
+        }
+        Ok(Dataset { shards, offsets, context })
+    }
+
+    pub fn len(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Instance `i` as tokens (length = context). Instances wrap around
+    /// for multi-epoch training.
+    pub fn instance(&self, i: usize) -> Vec<u32> {
+        let i = i % self.len();
+        // binary search the shard
+        let s = match self.offsets.binary_search(&i) {
+            Ok(k) => k,
+            Err(k) => k - 1,
+        };
+        self.shards[s].instance(i - self.offsets[s])
+    }
+
+    /// Batch of `rows` consecutive instances starting at `start`, each
+    /// extended to `seq+1` tokens (input+shifted target; the +1th token is
+    /// the first of the next instance slot, or EOS-padded).
+    pub fn batch_i32(&self, start: usize, rows: usize, seq: usize) -> Vec<i32> {
+        let c = self.context;
+        let mut out = Vec::with_capacity(rows * (seq + 1));
+        for r in 0..rows {
+            let inst = self.instance(start + r);
+            for j in 0..(seq + 1) {
+                let v = if j < c { inst[j] } else { super::tokenizer::EOS };
+                out.push(v as i32);
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic mapping (step, dp_rank, microbatch row) → instance id.
+/// All DP ranks at a step consume one contiguous block of the (already
+/// shuffled) instance stream — the paper's contiguous-read property.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPlan {
+    pub dp: usize,
+    pub micro_batch: usize,
+    pub micro_batches: usize,
+}
+
+impl BatchPlan {
+    pub fn instances_per_step(&self) -> usize {
+        self.dp * self.micro_batch * self.micro_batches
+    }
+
+    /// Start instance for (step, dp_rank, micro step).
+    pub fn start(&self, step: usize, dp_rank: usize, micro: usize) -> usize {
+        step * self.instances_per_step()
+            + dp_rank * self.micro_batch * self.micro_batches
+            + micro * self.micro_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corpus, preprocess};
+
+    fn build(tag: &str, context: usize) -> (std::path::PathBuf, Dataset) {
+        let dir = std::env::temp_dir()
+            .join(format!("optimus-ds-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = corpus::data_files(5, 3, 8);
+        preprocess::preprocess(&files, context, 11, &dir, 64).unwrap();
+        let ds = Dataset::open(&dir).unwrap();
+        (dir, ds)
+    }
+
+    #[test]
+    fn instances_read_across_shards() {
+        let (dir, ds) = build("multi", 32);
+        assert!(ds.len() > 64, "need multiple shards");
+        for i in [0, 1, 63, 64, ds.len() - 1] {
+            let inst = ds.instance(i);
+            assert_eq!(inst.len(), 32);
+            assert!(inst.iter().all(|&t| t < 300));
+        }
+        // wraparound
+        assert_eq!(ds.instance(ds.len()), ds.instance(0));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn batch_shapes_and_determinism() {
+        let (dir, ds) = build("batch", 32);
+        let b1 = ds.batch_i32(5, 4, 31);
+        let b2 = ds.batch_i32(5, 4, 31);
+        assert_eq!(b1, b2);
+        assert_eq!(b1.len(), 4 * 32);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn plan_assigns_disjoint_contiguous_blocks() {
+        let p = BatchPlan { dp: 4, micro_batch: 2, micro_batches: 3 };
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..3 {
+            for rank in 0..4 {
+                for m in 0..3 {
+                    let s = p.start(step, rank, m);
+                    for r in 0..2 {
+                        assert!(seen.insert(s + r), "instance reused");
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len(), 3 * p.instances_per_step());
+        // contiguity: the full set is an interval
+        let max = *seen.iter().max().unwrap();
+        assert_eq!(max + 1, seen.len());
+    }
+}

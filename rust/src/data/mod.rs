@@ -1,0 +1,18 @@
+//! Data pipeline (paper §4 "Data preprocessing"):
+//! tokenize → shuffle → shard, then mmap'd lazy loading so every DP rank
+//! reads contiguous memory with "bare minimal overhead".
+//!
+//! - [`tokenizer`] — byte-level tokenizer (+EOS), document framing
+//! - [`corpus`]    — deterministic synthetic corpus generator (the
+//!   OLMoE-Mix substitution; see DESIGN.md §1)
+//! - [`preprocess`] — offline pipeline producing `.oshard` files
+//! - [`dataset`]   — mmap shard reader + deterministic global batch plan
+
+pub mod corpus;
+pub mod dataset;
+pub mod preprocess;
+pub mod tokenizer;
+
+pub use dataset::{BatchPlan, Dataset};
+pub use preprocess::{preprocess, PreprocessStats};
+pub use tokenizer::Tokenizer;

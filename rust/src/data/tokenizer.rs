@@ -1,0 +1,82 @@
+//! Byte-level tokenizer with reserved specials.
+//!
+//! The paper tokenizes with the OLMoE tokenizer; our substitution keeps the
+//! same *pipeline contract* (documents → token ids → EOS-joined arrays)
+//! with a byte vocabulary. Ids: 0 = PAD, 1 = EOS, 2 = BOS, bytes map to
+//! 3..259. All model vocab sizes (>=256) cover this range.
+
+pub const PAD: u32 = 0;
+pub const EOS: u32 = 1;
+pub const BOS: u32 = 2;
+pub const BYTE_OFFSET: u32 = 3;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        Tokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + BYTE_OFFSET as usize
+    }
+
+    /// Encode one document (no EOS; the pipeline appends it when packing).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32 + BYTE_OFFSET).collect()
+    }
+
+    /// Decode ids back to text (specials are dropped).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&id| id >= BYTE_OFFSET && id < BYTE_OFFSET + 256)
+            .map(|&id| (id - BYTE_OFFSET) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Tokenize a data file (list of documents) into one token array,
+    /// documents joined with EOS — paper §4: "generate a token array Ti
+    /// corresponding to the data file Di by tokenizing individual
+    /// documents in Di and concatenating them with EOS token".
+    pub fn tokenize_file(&self, docs: &[String]) -> Vec<u32> {
+        let mut out = Vec::new();
+        for d in docs {
+            out.extend(self.encode(d));
+            out.push(EOS);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let s = "hello, Aurora! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokenize_file_joins_with_eos() {
+        let t = Tokenizer::new();
+        let docs = vec!["ab".to_string(), "c".to_string()];
+        let ids = t.tokenize_file(&docs);
+        assert_eq!(ids.len(), 5);
+        assert_eq!(ids[2], EOS);
+        assert_eq!(ids[4], EOS);
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let t = Tokenizer::new();
+        for id in t.encode("\u{00ff}\u{0000}xyz") {
+            assert!((id as usize) < t.vocab_size());
+        }
+    }
+}

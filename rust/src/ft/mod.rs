@@ -1,0 +1,304 @@
+//! Reliability / fault tolerance (paper §4): buffer-node pool, hard and
+//! soft node-failure handling, NaN detection, automatic relaunch.
+//!
+//! The launcher wraps a training attempt; on a **hard failure** (rank
+//! aborts / "node" dies) or a **soft failure** (rank produces local NaNs)
+//! it marks the node, swaps in a buffer node, and relaunches from the
+//! latest valid checkpoint. Failure *injection* hooks drive the tests and
+//! the fault_tolerance example.
+
+use crate::ckpt::DualCheckpointer;
+use crate::coordinator::StepHook;
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Kinds of node failure the paper distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// training run exits immediately (ping failure, segfault, OS error)
+    Hard,
+    /// run continues but produces local NaNs on the failed node
+    Soft,
+}
+
+/// Pool of nodes with spares ("launch the training run with some extra
+/// buffer nodes and restart by replacing the failed node").
+#[derive(Debug)]
+pub struct NodePool {
+    active: Mutex<Vec<usize>>,
+    buffer: Mutex<Vec<usize>>,
+    failed: Mutex<Vec<usize>>,
+}
+
+impl NodePool {
+    pub fn new(active: usize, buffer: usize) -> NodePool {
+        NodePool {
+            active: Mutex::new((0..active).collect()),
+            buffer: Mutex::new((active..active + buffer).collect()),
+            failed: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn active_nodes(&self) -> Vec<usize> {
+        self.active.lock().unwrap().clone()
+    }
+
+    pub fn buffer_len(&self) -> usize {
+        self.buffer.lock().unwrap().len()
+    }
+
+    pub fn failed_nodes(&self) -> Vec<usize> {
+        self.failed.lock().unwrap().clone()
+    }
+
+    /// Replace `node` with a buffer node; returns the replacement or an
+    /// error when the pool is exhausted.
+    pub fn replace(&self, node: usize) -> Result<usize> {
+        let mut active = self.active.lock().unwrap();
+        let pos = active
+            .iter()
+            .position(|&n| n == node)
+            .ok_or_else(|| anyhow!("node {node} is not active"))?;
+        let mut buffer = self.buffer.lock().unwrap();
+        let replacement = buffer
+            .pop()
+            .ok_or_else(|| anyhow!("buffer-node pool exhausted"))?;
+        active[pos] = replacement;
+        self.failed.lock().unwrap().push(node);
+        Ok(replacement)
+    }
+}
+
+/// A detected failure: which rank, which kind, at which step.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub rank: usize,
+    pub step: usize,
+    pub kind: FailureKind,
+}
+
+/// Classify a rank error string back into a failure (the trainers abort
+/// ranks with recognizable messages).
+pub fn classify(err: &anyhow::Error) -> FailureKind {
+    let s = format!("{err:#}");
+    if s.contains("non-finite") || s.contains("NaN") {
+        FailureKind::Soft
+    } else {
+        FailureKind::Hard
+    }
+}
+
+/// Relaunch policy: run `attempt` until it succeeds or nodes run out.
+/// Each failure consumes one buffer node ("restart the run by replacing
+/// the failed node with one of the buffer nodes").
+pub struct Launcher {
+    pub pool: NodePool,
+    pub max_relaunches: usize,
+    pub relaunches: AtomicUsize,
+}
+
+impl Launcher {
+    pub fn new(active: usize, buffer: usize) -> Launcher {
+        Launcher {
+            pool: NodePool::new(active, buffer),
+            max_relaunches: buffer,
+            relaunches: AtomicUsize::new(0),
+        }
+    }
+
+    /// `attempt(relaunch_index, active_nodes)` runs one training attempt.
+    /// Errors are classified; the offending node (hashed from the error
+    /// rank if encoded, else node 0) is replaced and the attempt retried.
+    pub fn run<T>(
+        &self,
+        mut attempt: impl FnMut(usize, &[usize]) -> Result<T>,
+    ) -> Result<T> {
+        loop {
+            let nodes = self.pool.active_nodes();
+            let n_try = self.relaunches.load(Ordering::Relaxed);
+            match attempt(n_try, &nodes) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let kind = classify(&e);
+                    if n_try >= self.max_relaunches {
+                        return Err(anyhow!(
+                            "giving up after {n_try} relaunches: {e:#}"
+                        ));
+                    }
+                    // failed node: encoded as "rank N" in trainer errors,
+                    // mapped 1:1 onto nodes here
+                    let failed = parse_rank(&e).unwrap_or(0).min(nodes.len() - 1);
+                    let replacement = self.pool.replace(nodes[failed])?;
+                    eprintln!(
+                        "[launcher] {kind:?} failure on node {} -> replaced \
+                         with buffer node {replacement}; relaunching",
+                        nodes[failed]
+                    );
+                    self.relaunches.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+fn parse_rank(e: &anyhow::Error) -> Option<usize> {
+    let s = format!("{e:#}");
+    let i = s.find("rank ")?;
+    s[i + 5..]
+        .split(|c: char| !c.is_ascii_digit())
+        .next()?
+        .parse()
+        .ok()
+}
+
+/// Scan for non-finite values (soft-failure detection on loss/grads/
+/// params — paper: "we check local loss and gradients for NaN in each
+/// rank").
+pub fn has_nan(xs: &[f32]) -> bool {
+    xs.iter().any(|v| !v.is_finite())
+}
+
+// ---------------------------------------------------------------------
+// Failure-injection hooks (drive tests + the fault_tolerance example)
+// ---------------------------------------------------------------------
+
+/// Hard failure: the rank aborts at a given step (segfault analog).
+pub struct HardKillHook {
+    pub rank: usize,
+    pub step: usize,
+    pub armed: std::sync::atomic::AtomicBool,
+}
+
+impl HardKillHook {
+    pub fn once(rank: usize, step: usize) -> HardKillHook {
+        HardKillHook { rank, step, armed: std::sync::atomic::AtomicBool::new(true) }
+    }
+}
+
+impl StepHook for HardKillHook {
+    fn on_step(&self, rank: usize, step: usize, _loss: f32, _p: &mut [f32]) -> Result<()> {
+        if rank == self.rank
+            && step == self.step
+            && self.armed.swap(false, Ordering::SeqCst)
+        {
+            return Err(anyhow!("rank {rank}: injected hard failure (os error)"));
+        }
+        Ok(())
+    }
+}
+
+/// Soft failure: poisons the rank's parameters with NaNs; detection then
+/// aborts the run before the NaNs contaminate a checkpoint.
+pub struct NanInjectHook {
+    pub rank: usize,
+    pub step: usize,
+    pub armed: std::sync::atomic::AtomicBool,
+}
+
+impl NanInjectHook {
+    pub fn once(rank: usize, step: usize) -> NanInjectHook {
+        NanInjectHook { rank, step, armed: std::sync::atomic::AtomicBool::new(true) }
+    }
+}
+
+impl StepHook for NanInjectHook {
+    fn on_step(&self, rank: usize, step: usize, loss: f32, params: &mut [f32]) -> Result<()> {
+        if rank == self.rank
+            && step == self.step
+            && self.armed.swap(false, Ordering::SeqCst)
+        {
+            params[0] = f32::NAN; // the soft node corrupts local state
+        }
+        // detection path: every rank checks local values every step
+        if has_nan(params) || !loss.is_finite() {
+            return Err(anyhow!(
+                "rank {rank}: NaN detected at step {step} (soft node failure)"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Checkpoint-on-interval hook (used with the launcher so relaunches
+/// resume from the latest valid checkpoint).
+pub struct CkptHook {
+    pub every: usize,
+    pub dual: DualCheckpointer,
+}
+
+impl StepHook for CkptHook {
+    fn on_step(&self, rank: usize, step: usize, _loss: f32, params: &mut [f32]) -> Result<()> {
+        if rank == 0 && step > 0 && step % self.every == 0 {
+            self.dual
+                .save(&crate::ckpt::Checkpoint {
+                    step,
+                    params: params.to_vec(),
+                    moments: Vec::new(),
+                })
+                .map(|_| ())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_replaces_until_exhausted() {
+        let pool = NodePool::new(4, 2);
+        let a0 = pool.active_nodes();
+        assert_eq!(a0, vec![0, 1, 2, 3]);
+        let r = pool.replace(2).unwrap();
+        assert_eq!(r, 5);
+        assert_eq!(pool.active_nodes(), vec![0, 1, 5, 3]);
+        pool.replace(0).unwrap();
+        assert_eq!(pool.buffer_len(), 0);
+        assert!(pool.replace(1).is_err(), "pool exhausted");
+        assert_eq!(pool.failed_nodes(), vec![2, 0]);
+    }
+
+    #[test]
+    fn launcher_relaunches_on_hard_failure() {
+        let l = Launcher::new(2, 2);
+        let mut fails = 2;
+        let out = l
+            .run(|attempt, nodes| {
+                assert_eq!(nodes.len(), 2);
+                if fails > 0 {
+                    fails -= 1;
+                    Err(anyhow!("rank 1: injected hard failure"))
+                } else {
+                    Ok(attempt)
+                }
+            })
+            .unwrap();
+        assert_eq!(out, 2, "succeeded on third attempt");
+        assert_eq!(l.pool.buffer_len(), 0);
+    }
+
+    #[test]
+    fn launcher_gives_up_without_buffers() {
+        let l = Launcher::new(2, 1);
+        let r: Result<()> = l.run(|_, _| Err(anyhow!("rank 0: boom")));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn classify_kinds() {
+        assert_eq!(classify(&anyhow!("rank 3: NaN detected at step 5")), FailureKind::Soft);
+        assert_eq!(classify(&anyhow!("rank 0: non-finite loss at step 2")), FailureKind::Soft);
+        assert_eq!(classify(&anyhow!("rank 1: os error")), FailureKind::Hard);
+        assert_eq!(parse_rank(&anyhow!("rank 7: x")), Some(7));
+    }
+
+    #[test]
+    fn nan_scan() {
+        assert!(!has_nan(&[1.0, -2.0]));
+        assert!(has_nan(&[1.0, f32::NAN]));
+        assert!(has_nan(&[f32::INFINITY]));
+    }
+}

@@ -1,0 +1,54 @@
+//! # Optimus-RS
+//!
+//! Reproduction of *"Scalable Pretraining of Large Mixture of Experts
+//! Language Models on Aurora Super Computer"* as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3: the distributed-training coordinator (the paper's
+//! **Optimus** library). Python/JAX/Pallas exist only at build time
+//! (`make artifacts`); at runtime this crate loads the AOT-lowered HLO-text
+//! artifacts through PJRT and owns everything else: the multi-rank runtime,
+//! collectives, DP/EP/PP orchestration, the sharded optimizers (SO and the
+//! paper's EP-aware EPSO), the data pipeline, checkpointing, and the
+//! reliability features of paper §4.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`runtime`]  — PJRT executor pool: load + execute HLO artifacts
+//! - [`comm`]     — in-process collectives over an N-D device mesh
+//! - [`config`]   — manifest (param layout / artifacts) + run configs
+//! - [`coordinator`] — trainer, pipeline schedules, EP token exchange
+//! - [`optim`]    — AdamW, sharded optimizer (SO), EPSO (paper §3.2)
+//! - [`data`]     — tokenize → shuffle → shard pipeline + mmap loader
+//! - [`ckpt`]     — dual / persistent / DP-scattered checkpointing (§4)
+//! - [`ft`]       — hard/soft node-failure handling with buffer nodes (§4)
+//! - [`cluster`]  — Aurora analytic performance model (Fig 4b)
+//! - [`eval`]     — synthetic benchmark suite (Table 2, Figs 2-3)
+//! - [`metrics`]  — step timers, loss logs, CSV emitters
+//! - [`util`]     — PRNG, JSON, CLI, micro-bench + property-test harnesses
+
+pub mod ckpt;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod ft;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifacts directory (overridable for tests).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("OPTIMUS_ARTIFACTS") {
+        return d.into();
+    }
+    // crate root/artifacts — works from `cargo test`, benches and examples
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}

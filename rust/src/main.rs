@@ -1,0 +1,160 @@
+//! `optimus` — CLI for the Optimus-RS training stack.
+//!
+//! Subcommands:
+//!   models                      list model configs (paper Table 1 + analogs)
+//!   preprocess --out DIR        run tokenize->shuffle->shard on the corpus
+//!   train --model M [--dp N --ep N --pp N --steps N --mode so|epso --fur]
+//!   eval --model M              run the synthetic benchmark suite
+//!   scaling [--fur]             Aurora-model Fig 4b sweep
+
+use optimus::cluster::{scaling_efficiency, Aurora};
+use optimus::comm::Topology;
+use optimus::config::models::{MulaSpec, MULA_220B, PAPER_MODELS};
+use optimus::config::Manifest;
+use optimus::coordinator::{self, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::eval;
+use optimus::optim::ShardingMode;
+use optimus::runtime::Engine;
+use optimus::util::cli::Args;
+
+fn main() -> optimus::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("models") => models(),
+        Some("preprocess") => do_preprocess(&args),
+        Some("train") => do_train(&args),
+        Some("eval") => do_eval(&args),
+        Some("scaling") => do_scaling(&args),
+        _ => {
+            eprintln!(
+                "usage: optimus <models|preprocess|train|eval|scaling> [flags]\n\
+                 see rust/src/main.rs header for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn models() -> optimus::Result<()> {
+    println!("paper configs (Table 1, projection-only):");
+    for m in PAPER_MODELS {
+        println!(
+            "  {:<16} layers {:<3} hidden {:<5} experts {:<4} top-{} — {:.1}B total / {:.1}B active",
+            m.name, m.n_layers, m.hidden, m.n_experts, m.top_k,
+            m.param_count() as f64 / 1e9,
+            m.active_param_count() as f64 / 1e9
+        );
+    }
+    let man = Manifest::load(&optimus::artifacts_dir())?;
+    println!("\nrunnable analogs (artifacts built):");
+    for (name, mm) in &man.configs {
+        println!(
+            "  {:<16} {:>8.2}M params, {} artifacts, pp={:?} ep={:?}",
+            name,
+            mm.param_count as f64 / 1e6,
+            mm.artifacts.len(),
+            mm.pp_degrees,
+            mm.ep_degrees
+        );
+    }
+    Ok(())
+}
+
+fn default_data(args: &Args, context: usize) -> optimus::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(
+        args.str_or("data", &format!("{}/optimus-cli-data-{context}",
+            std::env::temp_dir().display())));
+    if !dir.exists() {
+        let st = preprocess::preprocess(
+            &corpus::data_files(42, 8, 64), context, 7, &dir, 2048)?;
+        println!("preprocessed {} instances into {} shards", st.n_instances, st.n_shards);
+    }
+    Ok(dir)
+}
+
+fn do_preprocess(args: &Args) -> optimus::Result<()> {
+    let out = std::path::PathBuf::from(args.str_or("out", "data/shards"));
+    let files = corpus::data_files(
+        args.usize_or("seed", 42) as u64,
+        args.usize_or("files", 8),
+        args.usize_or("docs", 64),
+    );
+    let st = preprocess::preprocess(
+        &files,
+        args.usize_or("context", 192),
+        args.usize_or("shuffle-seed", 7) as u64,
+        &out,
+        args.usize_or("per-shard", 2048),
+    )?;
+    println!("{st:?}");
+    Ok(())
+}
+
+fn do_train(args: &Args) -> optimus::Result<()> {
+    let model = args.str_or("model", "mula-tiny");
+    let man = Manifest::load(&optimus::artifacts_dir())?;
+    let mm = man.config(&model)?;
+    let data = default_data(args, mm.hyper.seq + 1)?;
+    let topo = Topology {
+        dp: args.usize_or("dp", 2),
+        ep: args.usize_or("ep", 1),
+        pp: args.usize_or("pp", 1),
+    };
+    let mut o = TrainOptions::new(&model, topo, data);
+    o.run.steps = args.usize_or("steps", 50);
+    o.run.warmup_steps = args.usize_or("warmup", o.run.steps / 10);
+    o.run.peak_lr = args.f64_or("lr", 2e-3);
+    o.run.min_lr = o.run.peak_lr / 10.0;
+    o.mode = if args.str_or("mode", "epso") == "so" {
+        ShardingMode::So
+    } else {
+        ShardingMode::Epso
+    };
+    o.fur = args.bool_or("fur", false);
+    o.micro_batches = args.usize_or("micro", 2);
+    o.engine_pool = args.usize_or("pool", 2);
+    let r = coordinator::train(&man, &o)?;
+    for (s, l) in &r.loss.points {
+        if s % args.usize_or("log-every", 5) == 0 {
+            println!("step {s:>5}  loss {l:.4}");
+        }
+    }
+    println!(
+        "done: {:.0} tok/s, optimizer state {}B/rank, final loss {:.4}",
+        r.tokens_per_sec(),
+        r.opt_state_bytes,
+        r.loss.last().unwrap_or(f64::NAN)
+    );
+    Ok(())
+}
+
+fn do_eval(args: &Args) -> optimus::Result<()> {
+    let model = args.str_or("model", "mula-tiny");
+    let man = Manifest::load(&optimus::artifacts_dir())?;
+    let mm = man.config(&model)?;
+    let engine = Engine::new_pool(2)?;
+    let params = coordinator::init_global_params(mm, args.usize_or("seed", 0) as u64);
+    let scores = eval::run_suite(&engine, mm, &params, args.usize_or("cases", 16))?;
+    for (t, s) in &scores {
+        println!("{t:<14} {s:6.1}");
+    }
+    println!("{:<14} {:6.1}", "average", eval::average(&scores));
+    Ok(())
+}
+
+fn do_scaling(args: &Args) -> optimus::Result<()> {
+    let hw = Aurora::default();
+    let fur = args.bool_or("fur", false);
+    let model = args.str_or("model", "mula-220b-a10b");
+    let spec: &MulaSpec = MulaSpec::by_name(&model).unwrap_or(&MULA_220B);
+    println!("tiles  nodes  efficiency (fur={fur})");
+    for tiles in [384usize, 768, 1536, 3072, 6144, 12288] {
+        println!(
+            "{tiles:>6} {:>6} {:>8.3}",
+            tiles / 12,
+            scaling_efficiency(spec, &hw, 384, tiles, fur)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Step timing breakdown + loss logging.
+//!
+//! A training step decomposes into the paper's three components —
+//! forward, backward (fused here as fwd+bwd artifacts), and optimizer —
+//! plus communication and data time. Table 3's speedups are ratios of
+//! these component times.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug, Default)]
+pub struct StepBreakdown {
+    pub fwd_bwd_secs: f64,
+    pub optimizer_secs: f64,
+    pub comm_secs: f64,
+    pub data_secs: f64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.fwd_bwd_secs + self.optimizer_secs + self.comm_secs + self.data_secs
+    }
+
+    pub fn add(&mut self, other: &StepBreakdown) {
+        self.fwd_bwd_secs += other.fwd_bwd_secs;
+        self.optimizer_secs += other.optimizer_secs;
+        self.comm_secs += other.comm_secs;
+        self.data_secs += other.data_secs;
+    }
+}
+
+/// Scoped timer: `let _t = Scoped::new(&mut acc);`
+pub struct Scoped<'a> {
+    start: Instant,
+    sink: &'a mut f64,
+}
+
+impl<'a> Scoped<'a> {
+    pub fn new(sink: &'a mut f64) -> Scoped<'a> {
+        Scoped { start: Instant::now(), sink }
+    }
+}
+
+impl<'a> Drop for Scoped<'a> {
+    fn drop(&mut self) {
+        *self.sink += self.start.elapsed().as_secs_f64();
+    }
+}
+
+/// Loss / metric curve: (step, value) pairs with CSV export.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Curve {
+    pub fn new(name: &str) -> Curve {
+        Curve { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: usize, v: f64) {
+        self.points.push((step, v));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    /// Mean of the final `n` points (smoothed terminal loss).
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        let k = self.points.len().saturating_sub(n);
+        let tail = &self.points[k..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|p| p.1).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("step,{}\n", self.name);
+        for (st, v) in &self.points {
+            s.push_str(&format!("{st},{v}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_accumulates() {
+        let mut acc = 0.0;
+        {
+            let _t = Scoped::new(&mut acc);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(acc >= 0.004);
+    }
+
+    #[test]
+    fn curve_tail_mean() {
+        let mut c = Curve::new("loss");
+        for i in 0..10 {
+            c.push(i, i as f64);
+        }
+        assert_eq!(c.tail_mean(2), 8.5);
+        assert_eq!(c.last(), Some(9.0));
+        assert!(c.to_csv().contains("9,9"));
+    }
+}

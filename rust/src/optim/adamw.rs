@@ -1,0 +1,184 @@
+//! Fused AdamW update over a flat f32 shard.
+//!
+//! The paper trains BF16 mixed precision with FP32 master weights and FP32
+//! optimizer states (16 bytes/param: 2P weights + 2P grads + 4P master +
+//! 8P moments). On the CPU path weights are f32 throughout; the state
+//! layout (m, v, master) and the update math match AdamW exactly:
+//!
+//! m ← β₁m + (1-β₁)g;  v ← β₂v + (1-β₂)g²
+//! p ← p − lr·( m̂/(√v̂+ε) + wd·p )   with bias-corrected m̂, v̂.
+//!
+//! The decoupled weight decay is applied to all parameters (paper §2.1).
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        // paper §2.1: beta1=0.9, beta2=0.99, eps=1e-8, wd=0.1
+        AdamParams { beta1: 0.9, beta2: 0.99, eps: 1e-8, weight_decay: 0.1 }
+    }
+}
+
+/// First/second moment state for one shard.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> AdamState {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// Bytes held by optimizer state (8 bytes/param) — what SO vs EPSO
+    /// trades (paper Figure 6).
+    pub fn bytes(&self) -> usize {
+        self.m.len() * 8
+    }
+
+    /// One update step on `params` (master weights) with `grads`
+    /// (already averaged & clipped via `grad_scale`). Hot path: plain
+    /// indexed loop that LLVM auto-vectorizes.
+    pub fn update(
+        &mut self,
+        hp: AdamParams,
+        lr: f32,
+        grad_scale: f32,
+        params: &mut [f32],
+        grads: &[f32],
+    ) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.step += 1;
+        let b1 = hp.beta1;
+        let b2 = hp.beta2;
+        let bc1 = 1.0 - b1.powi(self.step as i32);
+        let bc2 = 1.0 - b2.powi(self.step as i32);
+        let inv_bc1 = 1.0 / bc1;
+        let inv_bc2 = 1.0 / bc2;
+        let (m, v) = (&mut self.m, &mut self.v);
+        for i in 0..params.len() {
+            let g = grads[i] * grad_scale;
+            let mi = b1 * m[i] + (1.0 - b1) * g;
+            let vi = b2 * v[i] + (1.0 - b2) * g * g;
+            m[i] = mi;
+            v[i] = vi;
+            let mhat = mi * inv_bc1;
+            let vhat = vi * inv_bc2;
+            params[i] -=
+                lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * params[i]);
+        }
+    }
+}
+
+/// Global gradient-norm clipping factor: returns the scale s such that
+/// ‖s·g‖ ≤ max_norm (paper: clip at 1.0, applied only after warmup).
+pub fn clip_scale(grad_sumsq: f64, max_norm: f64) -> f32 {
+    let norm = grad_sumsq.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        (max_norm / norm) as f32
+    } else {
+        1.0
+    }
+}
+
+pub fn sumsq(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar AdamW reference (independent transcription).
+    fn reference_step(
+        hp: AdamParams,
+        lr: f32,
+        p: f32,
+        g: f32,
+        m: f32,
+        v: f32,
+        t: u64,
+    ) -> (f32, f32, f32) {
+        let m2 = hp.beta1 * m + (1.0 - hp.beta1) * g;
+        let v2 = hp.beta2 * v + (1.0 - hp.beta2) * g * g;
+        let mhat = m2 / (1.0 - hp.beta1.powi(t as i32));
+        let vhat = v2 / (1.0 - hp.beta2.powi(t as i32));
+        let p2 = p - lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * p);
+        (p2, m2, v2)
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        let hp = AdamParams::default();
+        let mut st = AdamState::new(3);
+        let mut p = vec![1.0f32, -2.0, 0.5];
+        let g = vec![0.1f32, -0.2, 0.0];
+        let p0 = p.clone();
+        st.update(hp, 1e-2, 1.0, &mut p, &g);
+        for i in 0..3 {
+            let (want, wm, wv) = reference_step(hp, 1e-2, p0[i], g[i], 0.0, 0.0, 1);
+            assert!((p[i] - want).abs() < 1e-6, "{} vs {}", p[i], want);
+            assert!((st.m[i] - wm).abs() < 1e-7);
+            assert!((st.v[i] - wv).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn multiple_steps_track_reference() {
+        let hp = AdamParams { weight_decay: 0.0, ..Default::default() };
+        let mut st = AdamState::new(1);
+        let mut p = vec![2.0f32];
+        let (mut rp, mut rm, mut rv) = (2.0f32, 0.0f32, 0.0f32);
+        for t in 1..=20u64 {
+            let g = 0.3 * (t as f32).sin();
+            st.update(hp, 5e-3, 1.0, &mut p, &[g]);
+            let (a, b, c) = reference_step(hp, 5e-3, rp, g, rm, rv, t);
+            rp = a;
+            rm = b;
+            rv = c;
+            assert!((p[0] - rp).abs() < 1e-5, "step {t}");
+        }
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // minimize (x-3)^2: grad = 2(x-3)
+        let hp = AdamParams { weight_decay: 0.0, ..Default::default() };
+        let mut st = AdamState::new(1);
+        let mut p = vec![0.0f32];
+        for _ in 0..800 {
+            let g = 2.0 * (p[0] - 3.0);
+            st.update(hp, 0.05, 1.0, &mut p, &[g]);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{}", p[0]);
+    }
+
+    #[test]
+    fn clip_scale_behaviour() {
+        assert_eq!(clip_scale(0.25, 1.0), 1.0); // norm 0.5 < 1
+        let s = clip_scale(4.0, 1.0); // norm 2
+        assert!((s - 0.5).abs() < 1e-6);
+        assert_eq!(clip_scale(0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn grad_scale_is_applied() {
+        let hp = AdamParams { weight_decay: 0.0, ..Default::default() };
+        let mut a = AdamState::new(1);
+        let mut b = AdamState::new(1);
+        let mut pa = vec![1.0f32];
+        let mut pb = vec![1.0f32];
+        a.update(hp, 1e-3, 0.5, &mut pa, &[2.0]);
+        b.update(hp, 1e-3, 1.0, &mut pb, &[1.0]);
+        assert!((pa[0] - pb[0]).abs() < 1e-7);
+    }
+}

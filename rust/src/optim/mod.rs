@@ -1,0 +1,9 @@
+//! Optimizers: fused AdamW on flat shards, the standard sharded optimizer
+//! (SO, ZeRO-1-style) and the paper's EP-Aware Sharded Optimizer (EPSO,
+//! §3.2).
+
+pub mod adamw;
+pub mod sharded;
+
+pub use adamw::{AdamParams, AdamState};
+pub use sharded::{ShardedOptimizer, ShardingMode};

@@ -1,0 +1,203 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The `xla` crate's types hold `Rc`s and raw pointers (`!Send`), so all
+//! XLA objects live on dedicated **executor threads**; rank threads talk
+//! to them through channels with plain `Tensor` values (safe, no
+//! `unsafe impl Send`). An [`Engine`] is a clonable handle over a pool of
+//! executors — each executor owns its own `PjRtClient` and executable
+//! cache, so executions proceed in parallel across the pool.
+//!
+//! Interchange format: HLO *text* (see DESIGN.md / aot.py) loaded with
+//! `HloModuleProto::from_text_file`, compiled once per (executor,
+//! artifact) and cached.
+
+mod tensor;
+
+pub use tensor::Tensor;
+
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+struct Request {
+    key: String,
+    path: PathBuf,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Handle to the executor pool. Cheap to clone; `exec` blocks until the
+/// artifact has run and returns host tensors.
+#[derive(Clone)]
+pub struct Engine {
+    tx: mpsc::Sender<Request>,
+    // stats
+    calls: Arc<AtomicU64>,
+    exec_nanos: Arc<AtomicU64>,
+}
+
+impl Engine {
+    /// Pool with `n` executor threads (each with its own PJRT CPU client).
+    pub fn new_pool(n: usize) -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..n.max(1) {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("pjrt-exec-{i}"))
+                .spawn(move || executor_loop(rx))
+                .expect("spawn executor");
+        }
+        Ok(Engine {
+            tx,
+            calls: Arc::new(AtomicU64::new(0)),
+            exec_nanos: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn new() -> Result<Engine> {
+        Self::new_pool(1)
+    }
+
+    /// Execute artifact at `path` (cache key `key`) on the pool.
+    pub fn exec(&self, key: &str, path: PathBuf, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let t0 = std::time::Instant::now();
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request { key: key.to_string(), path, inputs, reply: rtx })
+            .map_err(|_| anyhow!("executor pool is gone"))?;
+        let out = rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// (total artifact calls, total seconds inside exec)
+    pub fn stats(&self) -> (u64, f64) {
+        (
+            self.calls.load(Ordering::Relaxed),
+            self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
+fn executor_loop(rx: Arc<Mutex<mpsc::Receiver<Request>>>) {
+    // One PJRT client + executable cache per executor thread; all xla
+    // objects stay on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fatal: cannot create PJRT CPU client: {e}");
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(r) => r,
+                Err(_) => return, // engine dropped
+            }
+        };
+        let reply = req.reply.clone();
+        let _ = reply.send(run_one(&client, &mut cache, req));
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: Request,
+) -> Result<Vec<Tensor>> {
+    if !cache.contains_key(&req.key) {
+        let proto = xla::HloModuleProto::from_text_file(&req.path)
+            .map_err(|e| anyhow!("loading {:?}: {e}", req.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", req.key))?;
+        cache.insert(req.key.clone(), exe);
+    }
+    let exe = cache.get(&req.key).unwrap();
+    let lits: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(tensor::to_literal)
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| anyhow!("executing {}: {e}", req.key))?;
+    // single replica, single partition; aot lowers with return_tuple=True
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result of {}: {e}", req.key))?;
+    let parts = lit
+        .to_tuple()
+        .map_err(|e| anyhow!("detupling result of {}: {e}", req.key))?;
+    parts.iter().map(tensor::from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_art(name: &str) -> PathBuf {
+        crate::artifacts_dir().join("mula-tiny").join(format!("{name}.hlo.txt"))
+    }
+
+    #[test]
+    fn engine_runs_eval_step() {
+        let m = crate::config::Manifest::load(&crate::artifacts_dir()).unwrap();
+        let cfg = m.config("mula-tiny").unwrap();
+        let eng = Engine::new().unwrap();
+        let p = Tensor::zeros_f32(vec![cfg.param_count]);
+        let toks = Tensor::I32 {
+            data: vec![1; cfg.hyper.batch * (cfg.hyper.seq + 1)],
+            shape: vec![cfg.hyper.batch, cfg.hyper.seq + 1],
+        };
+        let out = eng
+            .exec("eval", tiny_art("eval_step"), vec![p, toks])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape(), &[cfg.hyper.batch, cfg.hyper.seq]);
+        // zero params -> uniform logits -> nll == ln(V)
+        let nll = out[0].as_f32().unwrap();
+        let want = (cfg.hyper.vocab_size as f32).ln();
+        for v in nll {
+            assert!((v - want).abs() < 1e-3, "{v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn parallel_execs_from_many_threads() {
+        let m = crate::config::Manifest::load(&crate::artifacts_dir()).unwrap();
+        let cfg = m.config("mula-tiny").unwrap();
+        let eng = Engine::new_pool(2).unwrap();
+        let pc = cfg.param_count;
+        let (b, s) = (cfg.hyper.batch, cfg.hyper.seq);
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let eng = eng.clone();
+                let path = tiny_art("eval_step");
+                std::thread::spawn(move || {
+                    let p = Tensor::zeros_f32(vec![pc]);
+                    let toks = Tensor::I32 {
+                        data: vec![(i % 7) as i32; b * (s + 1)],
+                        shape: vec![b, s + 1],
+                    };
+                    eng.exec("eval", path, vec![p, toks]).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out.len(), 2);
+        }
+        assert_eq!(eng.stats().0, 4);
+    }
+}

@@ -1,0 +1,149 @@
+//! Host tensors: the plain-data currency between rank threads and the
+//! PJRT executor threads (xla::Literal is !Send, so it never leaves the
+//! executor).
+
+use crate::Result;
+use anyhow::anyhow;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32 { data, shape }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::F32 { data: vec![0.0; n], shape }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// First element as f32 (scalar outputs like losses).
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow!("empty tensor")),
+            Tensor::I32 { data, .. } => data
+                .first()
+                .map(|v| *v as f32)
+                .ok_or_else(|| anyhow!("empty tensor")),
+        }
+    }
+}
+
+pub(super) fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64>;
+    let lit = match t {
+        Tensor::F32 { data, shape } => {
+            dims = shape.iter().map(|d| *d as i64).collect();
+            xla::Literal::vec1(data)
+        }
+        Tensor::I32 { data, shape } => {
+            dims = shape.iter().map(|d| *d as i64).collect();
+            xla::Literal::vec1(data)
+        }
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e}"))
+}
+
+pub(super) fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::F32 {
+            data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            shape: dims,
+        }),
+        xla::ElementType::S32 => Ok(Tensor::I32 {
+            data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?,
+            shape: dims,
+        }),
+        // predicates / other ints: fetch via conversion
+        other => {
+            let conv = lit
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("convert {other:?}: {e}"))?;
+            Ok(Tensor::F32 {
+                data: conv.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+                shape: dims,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_and_accessors() {
+        let t = Tensor::f32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.scalar().unwrap(), 1.0);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(t.as_i32().is_err());
+        let i = Tensor::i32(vec![3], vec![1]);
+        assert_eq!(i.scalar().unwrap(), 3.0);
+    }
+}

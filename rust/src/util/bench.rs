@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (`criterion` is unavailable offline).
+//!
+//! Warmup + timed iterations, robust stats (median / MAD), and a tabular
+//! reporter the `rust/benches/*` binaries share. Each paper table/figure
+//! bench prints the same rows/series the paper reports and appends CSV to
+//! `bench_out/` for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut s: Vec<Duration>) -> Self {
+        assert!(!s.is_empty());
+        s.sort();
+        let sum: Duration = s.iter().sum();
+        Stats {
+            iters: s.len(),
+            mean: sum / s.len() as u32,
+            median: s[s.len() / 2],
+            min: s[0],
+            max: s[s.len() - 1],
+        }
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<Duration> = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect();
+    Stats::from_samples(samples)
+}
+
+/// Time a fallible op, propagating the first error.
+pub fn bench_result<E, F: FnMut() -> Result<(), E>>(
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Result<Stats, E> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f()?;
+        samples.push(t.elapsed());
+    }
+    Ok(Stats::from_samples(samples))
+}
+
+/// Simple fixed-width table printer + CSV sink for bench reports.
+pub struct Report {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Report {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        line(&w.iter().map(|n| "-".repeat(*n)).collect::<Vec<_>>());
+        for r in &self.rows {
+            line(r);
+        }
+    }
+
+    /// Append as CSV under `bench_out/<name>.csv` (created on demand).
+    pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("bench_out");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut s = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+/// Human-friendly duration formatting for report cells.
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let st = bench(1, 5, || std::thread::sleep(Duration::from_micros(200)));
+        assert!(st.min <= st.median && st.median <= st.max);
+        assert!(st.median >= Duration::from_micros(150));
+    }
+
+    #[test]
+    fn report_prints_and_writes() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(&["1".into(), "x".into()]);
+        r.print();
+    }
+}

@@ -1,0 +1,102 @@
+//! Tiny CLI argument parser (`clap` is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
+//! positional arguments; typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.into(), v.into());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.into(), v);
+                } else {
+                    out.flags.insert(rest.into(), "true".into());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, k: &str, default: usize) -> usize {
+        self.get(k)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{k} wants an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, k: &str, default: f64) -> f64 {
+        self.get(k)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{k} wants a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, k: &str, default: bool) -> bool {
+        self.get(k)
+            .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basics() {
+        let a = parse("train --steps 100 --lr=0.1 --fur");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f64_or("lr", 0.0), 0.1);
+        assert!(a.bool_or("fur", false));
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn bool_flag_followed_by_flag() {
+        let a = parse("--a --b 3 tail");
+        assert!(a.bool_or("a", false));
+        assert_eq!(a.usize_or("b", 0), 3);
+        assert_eq!(a.positional, vec!["tail"]);
+    }
+
+    #[test]
+    fn flag_value_pairs() {
+        let a = parse("--name mula-tiny --dp 4");
+        assert_eq!(a.str_or("name", ""), "mula-tiny");
+        assert_eq!(a.usize_or("dp", 1), 4);
+    }
+}

@@ -1,0 +1,79 @@
+//! Small substrates the offline environment forces us to own:
+//! PRNG (no `rand`), JSON (no `serde`), CLI (no `clap`),
+//! micro-benchmarks (no `criterion`) and property testing (no `proptest`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+
+/// Round `x` up to a multiple of `m`.
+pub fn round_up(x: usize, m: usize) -> usize {
+    (x + m - 1) / m * m
+}
+
+/// Split `n` items into `parts` contiguous ranges, padding semantics of
+/// ZeRO-1: every shard has ceil(n/parts) logical slots; the last shards may
+/// be short or empty. Returns (start, len) per part.
+pub fn shard_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let per = (n + parts - 1) / parts;
+    (0..parts)
+        .map(|i| {
+            let s = (i * per).min(n);
+            let e = ((i + 1) * per).min(n);
+            (s, e - s)
+        })
+        .collect()
+}
+
+/// f32 -> bf16 -> f32 round trip (round-to-nearest-even), used for the
+/// paper's bfloat16 gradient-reduction recipe (§2.1) and its ablation.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let rounding_bias = 0x7fff + ((bits >> 16) & 1);
+    f32::from_bits(((bits + rounding_bias) & 0xffff_0000) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_everything() {
+        for n in [0usize, 1, 7, 64, 65, 1000] {
+            for p in [1usize, 2, 3, 8] {
+                let r = shard_ranges(n, p);
+                assert_eq!(r.len(), p);
+                let total: usize = r.iter().map(|x| x.1).sum();
+                assert_eq!(total, n);
+                let mut pos = 0;
+                for (s, l) in &r {
+                    if *l > 0 {
+                        assert_eq!(*s, pos);
+                    }
+                    pos += l;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_round_is_idempotent_and_close() {
+        for &v in &[0.0f32, 1.0, -1.5, 3.14159, 1e-8, 123456.78] {
+            let r = bf16_round(v);
+            assert_eq!(bf16_round(r), r);
+            if v != 0.0 {
+                assert!(((r - v) / v).abs() < 0.01, "{v} -> {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+}

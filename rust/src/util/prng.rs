@@ -1,0 +1,138 @@
+//! Deterministic PRNG: SplitMix64 core with normal/uniform helpers.
+//!
+//! Used for parameter init, data shuffling and the property-test harness.
+//! Quality is plenty for simulation; determinism across runs (seeded) is
+//! the property the trainer and tests rely on.
+
+#[derive(Clone, Debug)]
+pub struct Prng {
+    state: u64,
+    /// cached second Box-Muller sample
+    spare: Option<f64>,
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), spare: None }
+    }
+
+    /// Derive an independent stream (e.g. per rank, per layer).
+    pub fn fork(&self, stream: u64) -> Self {
+        let mut p = Prng::new(self.state ^ stream.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        p.next_u64();
+        p
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            if u > 1e-12 {
+                let r = (-2.0 * u.ln()).sqrt();
+                let t = 2.0 * std::f64::consts::PI * v;
+                self.spare = Some(r * t.sin());
+                return r * t.cos();
+            }
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<u64> {
+        let mut v: Vec<u64> = (0..n as u64).collect();
+        self.shuffle(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut p = Prng::new(7);
+        let n = 20_000;
+        let m: f64 = (0..n).map(|_| p.next_f64()).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(9);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut p = Prng::new(3);
+        let mut perm = p.permutation(1000);
+        perm.sort_unstable();
+        assert_eq!(perm, (0..1000).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let p = Prng::new(5);
+        let mut a = p.fork(1);
+        let mut b = p.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,94 @@
+//! Seeded randomized property-test runner (`proptest` is unavailable
+//! offline). No shrinking — failures report the seed so a case can be
+//! replayed deterministically:
+//!
+//! ```ignore
+//! run_cases(200, |g| {
+//!     let n = g.range(1, 64);
+//!     let xs = g.vec_f32(n, -1.0, 1.0);
+//!     prop_assert(xs.len() == n, g, "len mismatch");
+//! });
+//! ```
+
+use super::prng::Prng;
+
+pub struct Gen {
+    pub rng: Prng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn below(&mut self, n: usize) -> usize {
+        self.rng.below(n)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.range(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` property cases with deterministic per-case seeds. Panics
+/// (with the seed) on the first failing case.
+pub fn run_cases<F: FnMut(&mut Gen)>(cases: usize, mut f: F) {
+    let base = std::env::var("OPTIMUS_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Prng::new(seed), seed };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g)
+        }));
+        if let Err(e) = r {
+            eprintln!(
+                "property failed at case {i} (replay with OPTIMUS_PROPTEST_SEED={base} case seed {seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        run_cases(50, |g| {
+            let n = g.range(1, 10);
+            assert!((1..10).contains(&n));
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failures() {
+        run_cases(10, |g| {
+            assert!(g.range(0, 100) < 50, "eventually fails");
+        });
+    }
+}

@@ -1,0 +1,51 @@
+//! Integration: train dense vs MoE at iso-compute and check Table 2's
+//! qualitative claim — training improves probe scores, and the synthetic
+//! suite produces a full table (Figs 2-3 machinery).
+
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::eval;
+use optimus::runtime::Engine;
+use std::path::PathBuf;
+
+fn data_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("optimus-eval-data-{}", std::process::id()));
+    if !dir.exists() {
+        let files = corpus::data_files(42, 6, 40);
+        preprocess::preprocess(&files, 64, 7, &dir, 512).unwrap();
+    }
+    dir
+}
+
+#[test]
+fn training_improves_probe_scores() {
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let mm = m.config("mula-tiny").unwrap();
+    let engine = Engine::new_pool(2).unwrap();
+
+    let base_params = coordinator::init_global_params(mm, 1234);
+    let before = eval::run_suite(&engine, mm, &base_params, 16).unwrap();
+
+    let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir());
+    o.run.steps = 60;
+    o.run.warmup_steps = 6;
+    o.run.peak_lr = 3e-3;
+    o.run.min_lr = 3e-4;
+    o.engine_pool = 2;
+    let r = coordinator::train(&m, &o).unwrap();
+    let after = eval::run_suite(&engine, mm, &r.final_params, 16).unwrap();
+
+    assert_eq!(before.len(), eval::TASKS.len());
+    // the held-out score (bounded ppl transform) must improve with
+    // training; probe accuracies must not regress on average
+    assert!(
+        after["held_out_ppl"] > before["held_out_ppl"] + 1.0,
+        "no ppl gain: {before:?} -> {after:?}"
+    );
+    assert!(
+        eval::average(&after) >= eval::average(&before) - 1.0,
+        "suite regressed: {before:?} -> {after:?}"
+    );
+}

@@ -1,0 +1,130 @@
+//! Integration: paper §4 reliability features against the real trainer —
+//! hard/soft node-failure handling with buffer nodes, relaunch from dual
+//! checkpoints, NaN containment.
+
+use optimus::ckpt::{Checkpoint, DualCheckpointer};
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, StepHook, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::ft::{CkptHook, HardKillHook, Launcher, NanInjectHook};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn data_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("optimus-rel-data-{}", std::process::id()));
+    if !dir.exists() {
+        let files = corpus::data_files(42, 3, 16);
+        preprocess::preprocess(&files, 64, 7, &dir, 256).unwrap();
+    }
+    dir
+}
+
+fn opts(steps: usize) -> TrainOptions {
+    let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir());
+    o.run.steps = steps;
+    o.run.warmup_steps = 2;
+    o.engine_pool = 2;
+    o
+}
+
+/// Composite hook: injection + checkpointing together.
+struct Chain(Vec<Arc<dyn StepHook>>);
+impl StepHook for Chain {
+    fn on_step(&self, r: usize, s: usize, l: f32, p: &mut [f32]) -> optimus::Result<()> {
+        for h in &self.0 {
+            h.on_step(r, s, l, p)?;
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn hard_failure_relaunches_from_checkpoint_and_finishes() {
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let ckroot =
+        std::env::temp_dir().join(format!("optimus-rel-ck-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckroot);
+    let kill = Arc::new(HardKillHook::once(1, 6));
+    let launcher = Launcher::new(2, 2);
+
+    let report = launcher
+        .run(|attempt, nodes| {
+            assert_eq!(nodes.len(), 2, "active set stays at world size");
+            let mut o = opts(10);
+            o.hook = Arc::new(Chain(vec![
+                kill.clone(),
+                Arc::new(CkptHook { every: 3, dual: DualCheckpointer::new(&ckroot) }),
+            ]));
+            // resume from the latest valid checkpoint if any
+            if let Some(c) = DualCheckpointer::new(&ckroot).load_latest() {
+                assert!(attempt > 0);
+                assert!(c.step >= 3, "checkpoint from before the crash");
+            }
+            coordinator::train(&m, &o)
+        })
+        .unwrap();
+    assert_eq!(launcher.relaunches.load(std::sync::atomic::Ordering::Relaxed), 1);
+    assert_eq!(launcher.pool.buffer_len(), 1, "one buffer node consumed");
+    assert_eq!(report.loss.points.len(), 10);
+    // checkpoints written and valid
+    let latest = DualCheckpointer::new(&ckroot).load_latest().unwrap();
+    assert!(latest.step >= 6);
+    let _ = std::fs::remove_dir_all(&ckroot);
+}
+
+#[test]
+fn soft_failure_is_detected_before_contaminating_checkpoints() {
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let ckroot =
+        std::env::temp_dir().join(format!("optimus-rel-soft-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckroot);
+    let mut o = opts(10);
+    o.hook = Arc::new(Chain(vec![
+        Arc::new(NanInjectHook::once(0, 4)),
+        Arc::new(CkptHook { every: 3, dual: DualCheckpointer::new(&ckroot) }),
+    ]));
+    let err = coordinator::train(&m, &o).unwrap_err();
+    let kind = optimus::ft::classify(&err);
+    assert_eq!(kind, optimus::ft::FailureKind::Soft, "{err:#}");
+    // every surviving checkpoint must be NaN-free
+    let dual = DualCheckpointer::new(&ckroot);
+    if let Some(c) = dual.load_latest() {
+        assert!(!optimus::ft::has_nan(&c.params), "checkpoint contaminated");
+        assert!(c.step < 4);
+    }
+    let _ = std::fs::remove_dir_all(&ckroot);
+}
+
+#[test]
+fn training_resumes_from_model_only_checkpoint() {
+    // persistent model-only checkpoints restart with fresh optimizer
+    // state; training continues sanely afterwards (paper: "does not alter
+    // the training in any significant manner")
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let mut o1 = opts(8);
+    o1.run.peak_lr = 2e-3;
+    let r1 = coordinator::train(&m, &o1).unwrap();
+
+    struct LoadHook(Vec<f32>);
+    impl StepHook for LoadHook {
+        fn on_step(&self, _r: usize, s: usize, _l: f32, p: &mut [f32]) -> optimus::Result<()> {
+            if s == 0 {
+                p.copy_from_slice(&self.0);
+            }
+            Ok(())
+        }
+    }
+    let ck = Checkpoint { step: 8, params: r1.final_params.clone(), moments: vec![] };
+    assert!(ck.is_model_only());
+    let mut o2 = opts(8);
+    o2.run.peak_lr = 2e-3;
+    o2.hook = Arc::new(LoadHook(ck.params.clone()));
+    let r2 = coordinator::train(&m, &o2).unwrap();
+    assert!(
+        r2.loss.tail_mean(2) < r1.loss.tail_mean(2) + 0.3,
+        "resume regressed: {:?} vs {:?}",
+        r2.loss.tail_mean(2),
+        r1.loss.tail_mean(2)
+    );
+}

@@ -1,0 +1,159 @@
+//! Integration: the three runnable engines (DP-fused, EP, PP) implement
+//! the *same* training semantics — first-step losses agree across
+//! decompositions on identical data, and every mode learns.
+
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, ep::EpComm, pipeline::Schedule, TrainOptions};
+use optimus::data::{corpus, preprocess};
+use optimus::optim::ShardingMode;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn data_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir()
+            .join(format!("optimus-it-data-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = corpus::data_files(42, 4, 24);
+        preprocess::preprocess(&files, 64, 7, &dir, 256).unwrap();
+        dir
+    })
+    .clone()
+}
+
+fn base_opts(topo: Topology, steps: usize) -> TrainOptions {
+    let mut o = TrainOptions::new("mula-tiny", topo, data_dir());
+    o.run.steps = steps;
+    o.run.warmup_steps = 4;
+    o.run.peak_lr = 2e-3;
+    o.run.min_lr = 2e-4;
+    o.engine_pool = 2;
+    o
+}
+
+#[test]
+fn dp_ep_pp_first_step_losses_agree() {
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+
+    let dp = coordinator::train(&m, &base_opts(Topology::dp_only(2), 2)).unwrap();
+    let mut ep_opts = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, 2);
+    ep_opts.mode = ShardingMode::Epso;
+    let ep = coordinator::train(&m, &ep_opts).unwrap();
+    let mut pp_opts = base_opts(Topology { dp: 1, ep: 1, pp: 2 }, 2);
+    pp_opts.micro_batches = 2;
+    pp_opts.schedule = Schedule::OneFOneB;
+    let pp = coordinator::train(&m, &pp_opts).unwrap();
+
+    let l_dp = dp.loss.points[0].1;
+    let l_ep = ep.loss.points[0].1;
+    let l_pp = pp.loss.points[0].1;
+    // identical params + identical data: decompositions must agree
+    assert!((l_dp - l_ep).abs() < 5e-4, "DP {l_dp} vs EP {l_ep}");
+    assert!((l_dp - l_pp).abs() < 5e-4, "DP {l_dp} vs PP {l_pp}");
+    // random init on vocab 256 -> ~ln(256)
+    assert!((l_dp - 256f64.ln()).abs() < 0.5, "{l_dp}");
+}
+
+#[test]
+fn every_mode_learns() {
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let steps = 25;
+
+    let dp = coordinator::train(&m, &base_opts(Topology::dp_only(2), steps)).unwrap();
+    assert!(
+        dp.loss.tail_mean(3) < dp.loss.points[0].1 - 0.5,
+        "DP no learning: {:?}",
+        dp.loss.points
+    );
+
+    let mut ep_opts = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, steps);
+    ep_opts.mode = ShardingMode::Epso;
+    let ep = coordinator::train(&m, &ep_opts).unwrap();
+    assert!(
+        ep.loss.tail_mean(3) < ep.loss.points[0].1 - 0.5,
+        "EP no learning: {:?}",
+        ep.loss.points
+    );
+
+    let mut pp_opts = base_opts(Topology { dp: 1, ep: 1, pp: 2 }, steps);
+    pp_opts.micro_batches = 2;
+    let pp = coordinator::train(&m, &pp_opts).unwrap();
+    assert!(
+        pp.loss.tail_mean(3) < pp.loss.points[0].1 - 0.5,
+        "PP no learning: {:?}",
+        pp.loss.points
+    );
+}
+
+#[test]
+fn ep_so_and_epso_trajectories_match() {
+    // EPSO is a resharding, not a different optimizer: loss curves must
+    // coincide while EPSO holds strictly less optimizer state.
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let mk = |mode| {
+        let mut o = base_opts(Topology { dp: 2, ep: 2, pp: 1 }, 6);
+        o.mode = mode;
+        o.run.bf16_grad_reduce = false; // keep reductions exactly associative-ish
+        coordinator::train(&m, &o).unwrap()
+    };
+    let so = mk(ShardingMode::So);
+    let epso = mk(ShardingMode::Epso);
+    for ((s1, a), (s2, b)) in so.loss.points.iter().zip(epso.loss.points.iter()) {
+        assert_eq!(s1, s2);
+        assert!((a - b).abs() < 2e-3, "step {s1}: SO {a} vs EPSO {b}");
+    }
+    assert!(
+        epso.opt_state_bytes < so.opt_state_bytes,
+        "EPSO must hold less state: {} vs {}",
+        epso.opt_state_bytes,
+        so.opt_state_bytes
+    );
+}
+
+#[test]
+fn ep_allgather_and_all2all_agree() {
+    // paper §3.1 Stage 1: the two exchange policies are numerically
+    // identical (they differ in communication volume only).
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let mk = |policy| {
+        let mut o = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, 3);
+        o.ep_comm = policy;
+        o.run.bf16_grad_reduce = false;
+        coordinator::train(&m, &o).unwrap()
+    };
+    let ag = mk(EpComm::Allgather);
+    let aa = mk(EpComm::All2All);
+    for ((_, a), (_, b)) in ag.loss.points.iter().zip(aa.loss.points.iter()) {
+        assert!((a - b).abs() < 1e-4, "allgather {a} vs all2all {b}");
+    }
+}
+
+#[test]
+fn gpipe_and_1f1b_agree() {
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let mk = |sched| {
+        let mut o = base_opts(Topology { dp: 1, ep: 1, pp: 2 }, 3);
+        o.schedule = sched;
+        o.micro_batches = 4;
+        o.run.bf16_grad_reduce = false;
+        coordinator::train(&m, &o).unwrap()
+    };
+    let g = mk(Schedule::GPipe);
+    let f = mk(Schedule::OneFOneB);
+    for ((_, a), (_, b)) in g.loss.points.iter().zip(f.loss.points.iter()) {
+        assert!((a - b).abs() < 1e-4, "gpipe {a} vs 1f1b {b}");
+    }
+}
+
+#[test]
+fn fur_runs_and_stays_finite() {
+    let m = Manifest::load(&optimus::artifacts_dir()).unwrap();
+    let mut o = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, 4);
+    o.fur = true;
+    let r = coordinator::train(&m, &o).unwrap();
+    for (_, l) in &r.loss.points {
+        assert!(l.is_finite());
+    }
+}
