@@ -48,7 +48,8 @@ fn main() -> optimus::Result<()> {
         coordinator::train(&m, &o)?;
         let mut pts = Vec::new();
         for (s, params) in snaps.snaps.lock().unwrap().iter() {
-            let scores = eval::run_suite(&engine, mm, params, 8)?;
+            let pt = optimus::runtime::Tensor::f32(params.clone(), vec![mm.param_count]);
+            let scores = eval::run_suite(&engine, mm, &pt, 8)?;
             pts.push((*s, eval::average(&scores)));
         }
         traj.push(pts);

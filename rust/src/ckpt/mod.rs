@@ -47,6 +47,13 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Model-only checkpoint from an `Arc`-backed parameter tensor (e.g.
+    /// [`crate::coordinator::TrainReport::final_params`]). The single copy
+    /// here is the serialization boundary — nothing upstream cloned.
+    pub fn model_only(step: usize, params: &crate::runtime::Tensor) -> Result<Checkpoint> {
+        Ok(Checkpoint { step, params: params.to_f32_vec()?, moments: Vec::new() })
+    }
+
     pub fn is_model_only(&self) -> bool {
         self.moments.is_empty()
     }

@@ -17,8 +17,10 @@ mod mesh;
 pub use group::{CommStats, Group, ReduceDtype};
 pub use mesh::{Mesh, MeshCoord, Topology};
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Point-to-point channel fabric for pipeline send/recv. Channels are
 /// keyed by (src, dst, tag).
@@ -30,6 +32,10 @@ pub struct P2p {
     /// a different order than sends (e.g. GPipe's reverse-order backward
     /// against the last stage's in-order cotangent sends)
     stash: Mutex<std::collections::HashMap<(usize, usize, usize, u64), Vec<f32>>>,
+    /// set when a rank died: blocked receivers panic instead of waiting
+    /// forever for a message the dead rank will never send (mirrors
+    /// [`Group`] poisoning — paper §4 hard-failure semantics)
+    poisoned: AtomicBool,
 }
 
 type P2pMsg = (u64, Vec<f32>);
@@ -55,13 +61,32 @@ impl P2p {
             senders.push(srow);
             receivers.push(rrow);
         }
-        Arc::new(P2p { n, senders, receivers, stash: Mutex::new(Default::default()) })
+        Arc::new(P2p {
+            n,
+            senders,
+            receivers,
+            stash: Mutex::new(Default::default()),
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// Mark the fabric dead (a rank failed). Receivers blocked on a
+    /// message from the dead rank panic out on their next poll.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+    }
+
+    fn check_poison(&self) {
+        if self.poisoned.load(Ordering::SeqCst) {
+            panic!("p2p fabric poisoned: a peer rank failed");
+        }
     }
 
     /// Send `data` from `src` to `dst` on `tag` with a sequence id for
     /// sanity checking.
     pub fn send(&self, src: usize, dst: usize, tag: usize, seq: u64, data: Vec<f32>) {
         assert!(src < self.n && dst < self.n);
+        self.check_poison();
         let guard = self.senders[src][dst].lock().unwrap();
         guard[tag].send((seq, data)).expect("p2p receiver gone");
     }
@@ -74,11 +99,17 @@ impl P2p {
         }
         let guard = self.receivers[src][dst].lock().unwrap();
         loop {
-            let (seq, data) = guard[tag].recv().expect("p2p sender gone");
-            if seq == expect_seq {
-                return data;
+            self.check_poison();
+            match guard[tag].recv_timeout(Duration::from_millis(20)) {
+                Ok((seq, data)) => {
+                    if seq == expect_seq {
+                        return data;
+                    }
+                    self.stash.lock().unwrap().insert((src, dst, tag, seq), data);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => panic!("p2p sender gone"),
             }
-            self.stash.lock().unwrap().insert((src, dst, tag, seq), data);
         }
     }
 }

@@ -132,11 +132,12 @@ impl EpLayout {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Manifest;
 
     #[test]
     fn layout_partitions_params() {
-        let m = Manifest::load(&crate::artifacts_dir()).unwrap();
+        let Some(m) = crate::manifest_or_skip("ep_layout::layout_partitions_params") else {
+            return;
+        };
         let mm = m.config("mula-tiny").unwrap();
         let (e_total, ne_total) = mm.expert_param_counts();
         let ep = 2;
@@ -161,7 +162,10 @@ mod tests {
 
     #[test]
     fn artifact_slices_are_contiguous_and_sized() {
-        let m = Manifest::load(&crate::artifacts_dir()).unwrap();
+        let Some(m) = crate::manifest_or_skip("ep_layout::artifact_slices_are_contiguous_and_sized")
+        else {
+            return;
+        };
         let mm = m.config("mula-tiny").unwrap();
         let h = &mm.hyper;
         let l = EpLayout::new(mm, 2, 1);

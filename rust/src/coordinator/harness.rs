@@ -1,0 +1,351 @@
+//! Shared rank-execution harness: the scaffolding every parallelism
+//! engine (DP, EP, PP — and any future combination) runs on.
+//!
+//! The harness is the single owner of everything the paper's Optimus
+//! trainer does identically regardless of topology:
+//!
+//! * rank thread spawning + naming (`<label>-rank-<r>`),
+//! * join + error aggregation — the *root-cause* error returned by the
+//!   failed rank wins over the panics of peers it took down,
+//! * poison-on-failure: a dead rank poisons the mesh groups (and the
+//!   trainer's shared fabric, e.g. PP's p2p channels) so peers fail fast
+//!   instead of hanging (paper §4 hard-failure semantics),
+//! * rank-0 model broadcast (paper §4 "model broadcasting"),
+//! * the per-step driver loop: step fn → NaN guard → step hook → loss
+//!   allreduce → curve recording → step timing,
+//! * [`TrainReport`] assembly, including the [`StepBreakdown`]: trainers
+//!   accumulate fwd/bwd, data and exchange-comm time during `step`; the
+//!   optimizer's update/comm split is folded in exactly once from the
+//!   optimizer's own counters at `finish` (the seed trainers each did
+//!   this slightly differently — and DP double-booked it).
+//!
+//! A parallelism engine implements [`RankTrainer`] and contains *only*
+//! its genuinely distinct logic: the fused-artifact step (DP), the
+//! per-layer Stage-1 exchange loop (EP), or the microbatch pipeline
+//! schedule (PP). See DESIGN.md §4 for the trait contract.
+
+use super::{init_global_params, StepHook as _, TrainOptions, TrainReport};
+use crate::comm::{Group, Mesh, ReduceDtype};
+use crate::config::ModelManifest;
+use crate::data::{BatchPlan, Dataset};
+use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::runtime::{Engine, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::Arc;
+
+/// Everything a rank thread needs, cloned per rank before spawn.
+pub struct RankCtx {
+    pub rank: usize,
+    pub mm: ModelManifest,
+    pub ds: Arc<Dataset>,
+    pub engine: Engine,
+    pub mesh: Arc<Mesh>,
+    pub opts: TrainOptions,
+    pub plan: BatchPlan,
+}
+
+impl RankCtx {
+    /// Timed batch fetch: the `[b, s+1]` token tensor for
+    /// (step, data_rank, microbatch), accounted under `data_secs`.
+    pub fn fetch_tokens(
+        &self,
+        step: usize,
+        data_rank: usize,
+        mb: usize,
+        breakdown: &mut StepBreakdown,
+    ) -> Tensor {
+        let (b, s) = (self.mm.hyper.batch, self.mm.hyper.seq);
+        let _t = Scoped::new(&mut breakdown.data_secs);
+        Tensor::i32(
+            self.ds.batch_i32(self.plan.start(step, data_rank, mb), b, s),
+            vec![b, s + 1],
+        )
+    }
+
+    /// The canonical rank-abort error for a non-finite loss. Trainers use
+    /// it when they bail out mid-step; the harness uses it as the
+    /// post-step backstop. The format is load-bearing: `crate::ft`
+    /// classifies it as a *soft* failure and parses the rank out of it.
+    pub fn non_finite(&self, step: usize) -> anyhow::Error {
+        anyhow!("rank {}: non-finite loss at step {step}", self.rank)
+    }
+}
+
+/// What one training step produced on this rank.
+pub struct StepOutcome {
+    /// rank-local loss (last PP stage: microbatch mean; other PP stages
+    /// report 0.0 and opt out of the loss domain below)
+    pub loss: f32,
+    /// global gradient norm from the sharded optimizer (pre-clip)
+    pub grad_norm: f64,
+}
+
+/// Which group averages this rank's loss each step, and whether this rank
+/// records the averaged curves. `None` ⇒ the rank neither contributes nor
+/// records (e.g. non-last PP stages, which never see a loss).
+pub struct LossDomain {
+    pub group: Arc<Group>,
+    pub group_rank: usize,
+    pub record: bool,
+}
+
+/// Report ingredients only the reporting rank can supply. The optimizer
+/// timing split comes from the optimizer's own counters so the harness can
+/// fold it into the breakdown exactly once.
+pub struct ReportParts {
+    /// assembled full-model parameter vector (rank 0's view)
+    pub final_params: Tensor,
+    pub opt_state_bytes: usize,
+    pub optimizer_update_secs: f64,
+    pub optimizer_comm_secs: f64,
+}
+
+/// Auxiliary per-rank payload merged into the report after join — e.g. a
+/// non-last PP stage's parameters, scattered into `final_params` by
+/// [`RankTrainer::merge_aux`].
+pub struct AuxParams {
+    pub tag: usize,
+    pub params: Vec<f32>,
+}
+
+/// What a rank hands back when training ends.
+pub enum RankFinish {
+    Report(Box<ReportParts>),
+    Aux(AuxParams),
+    None,
+}
+
+/// One parallelism engine. `setup` → `step`× → `finish` runs inside a
+/// rank thread the harness owns; associated functions configure the run
+/// before any thread exists.
+///
+/// Contract (see DESIGN.md §4):
+/// * exactly one rank must return [`RankFinish::Report`];
+/// * `step` accumulates fwd/bwd, data and exchange-comm time into the
+///   breakdown but must NOT time the optimizer — the harness folds the
+///   optimizer's own `update_secs`/`comm_secs` in at finish;
+/// * a rank that fails returns `Err` (never panics): the harness poisons
+///   the mesh + shared fabric so peers unblock, and `train()` surfaces
+///   the root-cause error, not a peer's panic.
+pub trait RankTrainer: Sized {
+    /// Thread-name prefix ("dp" → `dp-rank-3`).
+    const LABEL: &'static str;
+
+    /// Cross-rank fabric built once before spawning (e.g. PP's [`crate::comm::P2p`]).
+    type Shared: Send + Sync + 'static;
+
+    /// Validate artifacts/options before any thread spawns.
+    fn preflight(_mm: &ModelManifest, _opts: &TrainOptions) -> Result<()> {
+        Ok(())
+    }
+
+    /// Deterministic global batch plan for this topology.
+    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan;
+
+    fn shared(mm: &ModelManifest, opts: &TrainOptions) -> Result<Arc<Self::Shared>>;
+
+    /// Unblock peers waiting on the shared fabric after a rank died.
+    fn poison_shared(_shared: &Self::Shared) {}
+
+    /// Build per-rank state. `global_params` is the full initial model
+    /// vector every rank holds right after the rank-0 broadcast; the
+    /// trainer extracts its local view (all of it for DP, the EP layout
+    /// slice, the PP stage segment).
+    fn setup(ctx: &RankCtx, shared: &Arc<Self::Shared>, global_params: Vec<f32>)
+        -> Result<Self>;
+
+    /// One optimizer step.
+    fn step(
+        &mut self,
+        ctx: &RankCtx,
+        step: usize,
+        breakdown: &mut StepBreakdown,
+    ) -> Result<StepOutcome>;
+
+    /// Rank-local parameters, mutably — step hooks may rewrite them
+    /// (checkpoint restore, NaN injection).
+    fn params_mut(&mut self) -> Result<&mut [f32]>;
+
+    fn loss_domain(&self) -> Option<&LossDomain>;
+
+    /// Tear down: final collectives + the rank's contribution to the
+    /// report. Runs on every rank (so gather collectives can rendezvous).
+    fn finish(self, ctx: &RankCtx) -> Result<RankFinish>;
+
+    /// Merge auxiliary rank payloads into the assembled report (PP
+    /// scatters non-last stage params into `final_params`).
+    fn merge_aux(
+        _mm: &ModelManifest,
+        _opts: &TrainOptions,
+        _report: &mut TrainReport,
+        _aux: Vec<AuxParams>,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+enum RankOut {
+    Report(TrainReport),
+    Aux(AuxParams),
+    None,
+}
+
+/// Poisons the mesh + shared fabric on drop unless disarmed — so peers
+/// unblock even when a rank *panics* (unwinds) rather than returning
+/// `Err` through the normal path.
+struct PoisonGuard<'a, S> {
+    mesh: &'a Mesh,
+    shared: &'a S,
+    poison: fn(&S),
+    armed: bool,
+}
+
+impl<S> Drop for PoisonGuard<'_, S> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.mesh.poison_all();
+            (self.poison)(self.shared);
+        }
+    }
+}
+
+/// Run a [`RankTrainer`] over the full mesh: spawn one thread per rank,
+/// drive the per-step loop, aggregate errors, assemble the report.
+pub fn run<T: RankTrainer + 'static>(
+    mm: &ModelManifest,
+    ds: Arc<Dataset>,
+    engine: Engine,
+    mesh: Arc<Mesh>,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    T::preflight(mm, opts)?;
+    let plan = T::plan(mm, opts);
+    let shared = T::shared(mm, opts)?;
+    let world_n = opts.topo.world();
+
+    let handles: Vec<_> = (0..world_n)
+        .map(|rank| {
+            let ctx = RankCtx {
+                rank,
+                mm: mm.clone(),
+                ds: Arc::clone(&ds),
+                engine: engine.clone(),
+                mesh: Arc::clone(&mesh),
+                opts: opts.clone(),
+                plan,
+            };
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("{}-rank-{rank}", T::LABEL))
+                .spawn(move || {
+                    let mesh = Arc::clone(&ctx.mesh);
+                    // dead node — by `Err` *or* panic — unblocks peers
+                    // (paper §4 hard failure): the guard poisons on drop
+                    // unless the rank finished cleanly
+                    let mut guard = PoisonGuard {
+                        mesh: mesh.as_ref(),
+                        shared: shared.as_ref(),
+                        poison: T::poison_shared,
+                        armed: true,
+                    };
+                    let r = rank_loop::<T>(ctx, &shared);
+                    guard.armed = r.is_err();
+                    drop(guard);
+                    r
+                })
+                .expect("spawn rank")
+        })
+        .collect();
+
+    let mut report: Option<TrainReport> = None;
+    let mut aux: Vec<AuxParams> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut panicked = false;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(RankOut::Report(r))) => report = Some(r),
+            Ok(Ok(RankOut::Aux(a))) => aux.push(a),
+            Ok(Ok(RankOut::None)) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            // panics are usually peers aborted by poisoning — prefer the
+            // root-cause error returned by the rank that actually failed
+            Err(_) => panicked = true,
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if panicked {
+        return Err(anyhow!("a rank thread panicked without a root-cause error"));
+    }
+    let mut report = report.ok_or_else(|| anyhow!("no rank produced a report"))?;
+    T::merge_aux(mm, opts, &mut report, aux)?;
+    Ok(report)
+}
+
+fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<RankOut> {
+    let rank = ctx.rank;
+
+    // --- model broadcasting (paper §4): only rank 0 materializes init ---
+    let world = ctx.mesh.world_group();
+    let global0 = if rank == 0 {
+        let p = init_global_params(&ctx.mm, ctx.opts.run.seed);
+        world.broadcast(rank, 0, p.clone());
+        p
+    } else {
+        world.broadcast(rank, 0, Vec::new())
+    };
+    let mut trainer = T::setup(&ctx, shared, global0)?;
+
+    let mut loss_curve = Curve::new("loss");
+    let mut gn_curve = Curve::new("grad_norm");
+    let mut breakdown = StepBreakdown::default();
+    let mut step_secs = Vec::with_capacity(ctx.opts.run.steps);
+
+    for step in 0..ctx.opts.run.steps {
+        let t_step = std::time::Instant::now();
+        let out = trainer.step(&ctx, step, &mut breakdown)?;
+        // soft-failure backstop (paper §4): a NaN loss aborts the rank
+        // even if the trainer didn't bail out itself
+        if !out.loss.is_finite() {
+            return Err(ctx.non_finite(step));
+        }
+        ctx.opts
+            .hook
+            .on_step(rank, step, out.loss, trainer.params_mut()?)?;
+        if let Some(dom) = trainer.loss_domain() {
+            // loss is rank-local; average across the domain for the curve
+            let mean =
+                dom.group.allreduce_mean(dom.group_rank, vec![out.loss], ReduceDtype::F32)[0];
+            if dom.record {
+                loss_curve.push(step, mean as f64);
+                gn_curve.push(step, out.grad_norm);
+            }
+        }
+        step_secs.push(t_step.elapsed().as_secs_f64());
+    }
+
+    match trainer.finish(&ctx)? {
+        RankFinish::Report(parts) => {
+            let parts = *parts;
+            // breakdown assembly: the optimizer's update/comm split comes
+            // from its own counters, folded in exactly once
+            breakdown.optimizer_secs += parts.optimizer_update_secs;
+            breakdown.comm_secs += parts.optimizer_comm_secs;
+            Ok(RankOut::Report(TrainReport {
+                loss: loss_curve,
+                grad_norm: gn_curve,
+                breakdown,
+                step_secs,
+                tokens_per_step: ctx.plan.instances_per_step() * ctx.mm.hyper.seq,
+                final_params: parts.final_params,
+                opt_state_bytes: parts.opt_state_bytes,
+                optimizer_update_secs: parts.optimizer_update_secs,
+                optimizer_comm_secs: parts.optimizer_comm_secs,
+            }))
+        }
+        RankFinish::Aux(a) => Ok(RankOut::Aux(a)),
+        RankFinish::None => Ok(RankOut::None),
+    }
+}

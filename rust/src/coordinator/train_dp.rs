@@ -1,180 +1,128 @@
-//! Data-parallel training with the fused `train_step` artifact.
+//! Data-parallel engine: the fused `train_step` artifact on every rank.
 //!
 //! Per step and rank: contiguous data slice → fused fwd+bwd (HLO) →
 //! sharded optimizer (reduce-scatter grads / AdamW shard / allgather
-//! params). Model broadcasting (paper §4): rank 0 initializes, everyone
-//! else receives via the world group broadcast.
+//! params). Everything else — spawning, broadcast, NaN guard, loss
+//! averaging, report assembly — lives in the shared
+//! [`harness`](super::harness).
+//!
+//! The parameter vector is an `Arc`-backed [`Tensor`]: re-submitting it to
+//! the engine each step is a refcount bump, and the optimizer mutates it
+//! in place via copy-on-write once the engine has dropped its handle.
 
-use super::{clip_now, init_global_params, TrainOptions, TrainReport};
-use crate::comm::Mesh;
+use super::harness::{LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome};
+use super::{clip_now, TrainOptions};
 use crate::config::ModelManifest;
-use crate::data::{BatchPlan, Dataset};
-use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::data::BatchPlan;
+use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{build_segments, ShardedOptimizer};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::Tensor;
 use crate::Result;
-use anyhow::anyhow;
+use std::path::PathBuf;
 use std::sync::Arc;
 
-pub fn run(
-    mm: &ModelManifest,
-    ds: Arc<Dataset>,
-    engine: Engine,
-    mesh: Arc<Mesh>,
-    opts: &TrainOptions,
-) -> Result<TrainReport> {
-    let dp = opts.topo.dp;
-    let plan = BatchPlan { dp, micro_batch: mm.hyper.batch, micro_batches: 1 };
-    let art = mm.artifact_path("train_step")?;
-
-    let handles: Vec<_> = (0..dp)
-        .map(|rank| {
-            let mm = mm.clone();
-            let ds = Arc::clone(&ds);
-            let engine = engine.clone();
-            let mesh = Arc::clone(&mesh);
-            let opts = opts.clone();
-            let art = art.clone();
-            std::thread::Builder::new()
-                .name(format!("dp-rank-{rank}"))
-                .spawn(move || {
-                    let m2 = Arc::clone(&mesh);
-                    let r = rank_main(rank, &mm, ds, engine, mesh, &opts, art, plan);
-                    if r.is_err() {
-                        // dead node: unblock peers (paper §4 hard failure)
-                        m2.poison_all();
-                    }
-                    r
-                })
-                .expect("spawn rank")
-        })
-        .collect();
-
-    let mut report = None;
-    let mut first_err: Option<anyhow::Error> = None;
-    let mut panic_err: Option<anyhow::Error> = None;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(Some(r))) => report = Some(r),
-            Ok(Ok(None)) => {}
-            Ok(Err(e)) => first_err = first_err.or(Some(e)),
-            // panics are usually peers aborted by group poisoning —
-            // prefer the root-cause error returned by the failed rank
-            Err(_) => panic_err = panic_err.or(Some(anyhow!("rank thread panicked"))),
-        }
-    }
-    if let Some(e) = first_err.or(panic_err) {
-        return Err(e);
-    }
-    report.ok_or_else(|| anyhow!("rank 0 produced no report"))
+pub(super) struct DpTrainer {
+    params: Tensor,
+    opt: ShardedOptimizer,
+    art: PathBuf,
+    key: String,
+    loss_dom: LossDomain,
 }
 
-#[allow(clippy::too_many_arguments)]
-fn rank_main(
-    rank: usize,
-    mm: &ModelManifest,
-    ds: Arc<Dataset>,
-    engine: Engine,
-    mesh: Arc<Mesh>,
-    opts: &TrainOptions,
-    art: std::path::PathBuf,
-    plan: BatchPlan,
-) -> Result<Option<TrainReport>> {
-    let world = mesh.world_group();
-    // --- model broadcasting (paper §4): only rank 0 materializes init ---
-    let mut params = if rank == 0 {
-        let p = init_global_params(mm, opts.run.seed);
-        world.broadcast(rank, 0, p.clone());
-        p
-    } else {
-        world.broadcast(rank, 0, Vec::new())
-    };
+impl RankTrainer for DpTrainer {
+    const LABEL: &'static str = "dp";
+    type Shared = ();
 
-    let (dp_group, dp_rank) = mesh.dp_group(rank);
-    let (xg, xr) = mesh.dpep_group(rank);
-    let segs = build_segments(
-        opts.mode,
-        mm.param_count, // whole model is "non-expert" wrt EP=1
-        0,
-        dp_group,
-        dp_rank,
-        xg,
-        xr,
-        1,
-    );
-    let mut opt = ShardedOptimizer::new(
-        segs,
-        Arc::clone(xg),
-        xr,
-        opts.adam(),
-        opts.reduce_dtype(),
-        opts.run.grad_clip,
-    );
+    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan {
+        BatchPlan { dp: opts.topo.dp, micro_batch: mm.hyper.batch, micro_batches: 1 }
+    }
 
-    let (b, s) = (mm.hyper.batch, mm.hyper.seq);
-    let mut loss_curve = Curve::new("loss");
-    let mut gn_curve = Curve::new("grad_norm");
-    let mut breakdown = StepBreakdown::default();
-    let mut step_secs = Vec::with_capacity(opts.run.steps);
+    fn shared(_mm: &ModelManifest, _opts: &TrainOptions) -> Result<Arc<()>> {
+        Ok(Arc::new(()))
+    }
 
-    for step in 0..opts.run.steps {
-        let t_step = std::time::Instant::now();
-        let tokens = {
-            let _t = Scoped::new(&mut breakdown.data_secs);
-            ds.batch_i32(plan.start(step, rank, 0), b, s)
-        };
+    fn setup(ctx: &RankCtx, _shared: &Arc<()>, global_params: Vec<f32>) -> Result<DpTrainer> {
+        let rank = ctx.rank;
+        let (dp_group, dp_rank) = ctx.mesh.dp_group(rank);
+        let (xg, xr) = ctx.mesh.dpep_group(rank);
+        let segs = build_segments(
+            ctx.opts.mode,
+            ctx.mm.param_count, // whole model is "non-expert" wrt EP=1
+            0,
+            dp_group,
+            dp_rank,
+            xg,
+            xr,
+            1,
+        );
+        let opt = ShardedOptimizer::new(
+            segs,
+            Arc::clone(xg),
+            xr,
+            ctx.opts.adam(),
+            ctx.opts.reduce_dtype(),
+            ctx.opts.run.grad_clip,
+        );
+        Ok(DpTrainer {
+            params: Tensor::f32(global_params, vec![ctx.mm.param_count]),
+            opt,
+            art: ctx.mm.artifact_path("train_step")?,
+            key: format!("{}:train_step", ctx.mm.name),
+            loss_dom: LossDomain {
+                group: Arc::clone(ctx.mesh.world_group()),
+                group_rank: rank,
+                record: rank == 0,
+            },
+        })
+    }
+
+    fn step(
+        &mut self,
+        ctx: &RankCtx,
+        step: usize,
+        breakdown: &mut StepBreakdown,
+    ) -> Result<StepOutcome> {
+        let tokens = ctx.fetch_tokens(step, ctx.rank, 0, breakdown);
         let outs = {
             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-            engine.exec(
-                &format!("{}:train_step", mm.name),
-                art.clone(),
-                vec![
-                    Tensor::f32(params.clone(), vec![mm.param_count]),
-                    Tensor::i32(tokens, vec![b, s + 1]),
-                ],
-            )?
+            // zero-copy: params is Arc-backed, clone() bumps a refcount
+            ctx.engine
+                .exec(&self.key, self.art.clone(), vec![self.params.clone(), tokens])?
         };
         // curve uses the LM cross-entropy (outs[1]); outs[0] is the
         // training objective (lm + aux) used for gradients only.
         let loss = outs[1].scalar()?;
-        let grads = outs[3].as_f32()?;
-        // soft-failure guard (paper §4): NaN loss/grads abort the rank
         if !loss.is_finite() {
-            return Err(anyhow!("rank {rank}: non-finite loss at step {step}"));
+            return Err(ctx.non_finite(step));
         }
-        let lr = opts.run.lr_at(step) as f32;
-        let gn = {
-            let _t = Scoped::new(&mut breakdown.optimizer_secs);
-            opt.step(&mut params, grads, lr, clip_now(&opts.run, step))
-        };
-        opts.hook.on_step(rank, step, loss, &mut params)?;
-
-        if rank == 0 {
-            // loss is rank-local; average across DP for the curve
-            let mean =
-                world.allreduce_mean(rank, vec![loss], crate::comm::ReduceDtype::F32)[0];
-            loss_curve.push(step, mean as f64);
-            gn_curve.push(step, gn);
-        } else {
-            world.allreduce_mean(rank, vec![loss], crate::comm::ReduceDtype::F32);
-        }
-        step_secs.push(t_step.elapsed().as_secs_f64());
+        let grads = outs[3].as_f32()?;
+        let lr = ctx.opts.run.lr_at(step) as f32;
+        let gn = self.opt.step(
+            self.params.as_f32_mut()?,
+            grads,
+            lr,
+            clip_now(&ctx.opts.run, step),
+        );
+        Ok(StepOutcome { loss, grad_norm: gn })
     }
 
-    if rank != 0 {
-        return Ok(None);
+    fn params_mut(&mut self) -> Result<&mut [f32]> {
+        Ok(self.params.as_f32_mut()?.as_mut_slice())
     }
-    breakdown.comm_secs = opt.comm_secs;
-    breakdown.optimizer_secs = opt.update_secs;
-    Ok(Some(TrainReport {
-        loss: loss_curve,
-        grad_norm: gn_curve,
-        breakdown,
-        step_secs,
-        tokens_per_step: plan.instances_per_step() * s,
-        final_params: params,
-        opt_state_bytes: opt.state_bytes(),
-        optimizer_update_secs: opt.update_secs,
-        optimizer_comm_secs: opt.comm_secs,
-    }))
+
+    fn loss_domain(&self) -> Option<&LossDomain> {
+        Some(&self.loss_dom)
+    }
+
+    fn finish(self, ctx: &RankCtx) -> Result<RankFinish> {
+        if ctx.rank != 0 {
+            return Ok(RankFinish::None);
+        }
+        Ok(RankFinish::Report(Box::new(ReportParts {
+            final_params: self.params,
+            opt_state_bytes: self.opt.state_bytes(),
+            optimizer_update_secs: self.opt.update_secs,
+            optimizer_comm_secs: self.opt.comm_secs,
+        })))
+    }
 }

@@ -1,4 +1,4 @@
-//! Expert-parallel training: Algorithm 1 with Stage 1 in Rust.
+//! Expert-parallel engine: Algorithm 1 with Stage 1 in Rust.
 //!
 //! Per layer and step, each EP rank:
 //!   1. runs `ep_layer_pre_fwd` (attention + router) on its local tokens,
@@ -16,80 +16,27 @@
 //! * SO: NE grads allreduced over EP (to stay correct), then sharded over
 //!   DP only — NE optimizer states replicated EP times;
 //! * EPSO: NE grads reduce-scattered over the whole DP×EP group.
+//!
+//! Scaffolding (spawn/join/poison/broadcast/curves/report) lives in the
+//! shared [`harness`](super::harness). Parameter slices handed to the
+//! artifacts are materialized once per step and shared between the
+//! forward and backward passes (the parameters only change at the
+//! optimizer step), halving the seed's host-side copy volume; the full
+//! local vector is never cloned inside the step.
 
 use super::ep::{exchange_all2all, exchange_allgather, fur_indices, EpComm};
 use super::ep_layout::EpLayout;
-use super::{clip_now, init_global_params, TrainOptions, TrainReport};
-use crate::comm::{Mesh, ReduceDtype};
+use super::harness::{LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome};
+use super::{clip_now, TrainOptions};
+use crate::comm::{Group, ReduceDtype};
 use crate::config::ModelManifest;
-use crate::data::{BatchPlan, Dataset};
-use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::data::BatchPlan;
+use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{build_segments, ShardedOptimizer};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::Tensor;
 use crate::Result;
 use anyhow::anyhow;
 use std::sync::Arc;
-
-pub fn run(
-    mm: &ModelManifest,
-    ds: Arc<Dataset>,
-    engine: Engine,
-    mesh: Arc<Mesh>,
-    opts: &TrainOptions,
-) -> Result<TrainReport> {
-    let ep = opts.topo.ep;
-    if !mm.ep_degrees.contains(&ep) {
-        return Err(anyhow!(
-            "no EP={ep} artifacts for {} (built: {:?})",
-            mm.name,
-            mm.ep_degrees
-        ));
-    }
-    let world_n = opts.topo.world();
-    // EP scales the global batch like DP (paper §1): data-rank = dp*EP+ep
-    let plan = BatchPlan {
-        dp: world_n,
-        micro_batch: mm.hyper.batch,
-        micro_batches: 1,
-    };
-
-    let handles: Vec<_> = (0..world_n)
-        .map(|rank| {
-            let mm = mm.clone();
-            let ds = Arc::clone(&ds);
-            let engine = engine.clone();
-            let mesh = Arc::clone(&mesh);
-            let opts = opts.clone();
-            std::thread::Builder::new()
-                .name(format!("ep-rank-{rank}"))
-                .spawn(move || {
-                    let m2 = Arc::clone(&mesh);
-                    let r = rank_main(rank, &mm, ds, engine, mesh, &opts, plan);
-                    if r.is_err() {
-                        m2.poison_all();
-                    }
-                    r
-                })
-                .expect("spawn rank")
-        })
-        .collect();
-
-    let mut report = None;
-    let mut first_err: Option<anyhow::Error> = None;
-    let mut panic_err: Option<anyhow::Error> = None;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(Some(r))) => report = Some(r),
-            Ok(Ok(None)) => {}
-            Ok(Err(e)) => first_err = first_err.or(Some(e)),
-            Err(_) => panic_err = panic_err.or(Some(anyhow!("ep rank panicked"))),
-        }
-    }
-    if let Some(e) = first_err.or(panic_err) {
-        return Err(e);
-    }
-    report.ok_or_else(|| anyhow!("rank 0 produced no report"))
-}
 
 struct Arts {
     embed_fwd: std::path::PathBuf,
@@ -116,105 +63,164 @@ impl Arts {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn rank_main(
-    rank: usize,
-    mm: &ModelManifest,
-    ds: Arc<Dataset>,
-    engine: Engine,
-    mesh: Arc<Mesh>,
-    opts: &TrainOptions,
-    plan: BatchPlan,
-) -> Result<Option<TrainReport>> {
-    let h = &mm.hyper;
-    let ep = opts.topo.ep;
-    let c = mesh.coord(rank);
-    let layout = EpLayout::new(mm, ep, c.ep);
-    let arts = Arts::load(mm, ep)?;
-    let world = mesh.world_group();
-    let (ep_group, ep_rank) = mesh.ep_group(rank);
-    let (dp_group, dp_rank) = mesh.dp_group(rank);
-    let (dpep_group, dpep_rank) = mesh.dpep_group(rank);
-    let nr = layout.n_local_experts;
+/// Per-step parameter slices (shared by fwd and bwd — params are constant
+/// within a step). Cloning one of these into an exec call is an Arc bump.
+struct ParamSlices {
+    emb: Tensor,
+    head: Tensor,
+    layer_ne: Vec<Tensor>,
+    layer_e: Vec<Tensor>,
+}
 
-    // model broadcasting: rank 0 initializes the *global* vector, all
-    // ranks extract their local layout from the broadcast copy.
-    let global0 = if rank == 0 {
-        let p = init_global_params(mm, opts.run.seed);
-        world.broadcast(rank, 0, p.clone());
-        p
-    } else {
-        world.broadcast(rank, 0, Vec::new())
-    };
-    let mut params = layout.extract(&global0);
-    drop(global0);
+impl ParamSlices {
+    fn new(params: &[f32], layout: &EpLayout) -> ParamSlices {
+        let t = |r: &std::ops::Range<usize>| Tensor::f32(params[r.clone()].to_vec(), vec![r.len()]);
+        ParamSlices {
+            emb: t(&layout.emb),
+            head: t(&layout.head),
+            layer_ne: layout.layer_ne.iter().map(&t).collect(),
+            layer_e: layout.layer_e.iter().map(&t).collect(),
+        }
+    }
+}
 
-    let segs = build_segments(
-        opts.mode,
-        layout.ne_len,
-        layout.e_len,
-        dp_group,
-        dp_rank,
-        dpep_group,
-        dpep_rank,
-        ep,
-    );
-    let mut opt = ShardedOptimizer::new(
-        segs,
-        Arc::clone(dpep_group),
-        dpep_rank,
-        opts.adam(),
-        opts.reduce_dtype(),
-        opts.run.grad_clip,
-    );
+pub(super) struct EpTrainer {
+    layout: EpLayout,
+    arts: Arts,
+    params: Vec<f32>,
+    opt: ShardedOptimizer,
+    ep_group: Arc<Group>,
+    ep_rank: usize,
+    /// this rank keeps participating in the final expert gather
+    gathers_at_finish: bool,
+    data_rank: usize,
+    loss_dom: LossDomain,
+}
 
-    let (b, s) = (h.batch, h.seq);
-    let t_local = b * s;
-    let t_all = ep * t_local;
-    let k = h.top_k;
-    let hid = h.hidden;
-    let data_rank = c.dp * ep + c.ep;
+impl RankTrainer for EpTrainer {
+    const LABEL: &'static str = "ep";
+    type Shared = ();
 
-    let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
-        engine.exec(&format!("{}:{key}", mm.name), path.to_path_buf(), inputs)
-    };
-    let pslice = |params: &[f32], r: &std::ops::Range<usize>| {
-        Tensor::f32(params[r.clone()].to_vec(), vec![r.len()])
-    };
+    fn preflight(mm: &ModelManifest, opts: &TrainOptions) -> Result<()> {
+        let ep = opts.topo.ep;
+        if !mm.ep_degrees.contains(&ep) {
+            return Err(anyhow!(
+                "no EP={ep} artifacts for {} (built: {:?})",
+                mm.name,
+                mm.ep_degrees
+            ));
+        }
+        Ok(())
+    }
 
-    let mut loss_curve = Curve::new("loss");
-    let mut gn_curve = Curve::new("grad_norm");
-    let mut breakdown = StepBreakdown::default();
-    let mut step_secs = Vec::with_capacity(opts.run.steps);
+    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan {
+        // EP scales the global batch like DP (paper §1): data-rank = dp*EP+ep
+        BatchPlan {
+            dp: opts.topo.world(),
+            micro_batch: mm.hyper.batch,
+            micro_batches: 1,
+        }
+    }
 
-    for step in 0..opts.run.steps {
-        let t_step = std::time::Instant::now();
-        let tokens = {
-            let _t = Scoped::new(&mut breakdown.data_secs);
-            ds.batch_i32(plan.start(step, data_rank, 0), b, s)
+    fn shared(_mm: &ModelManifest, _opts: &TrainOptions) -> Result<Arc<()>> {
+        Ok(Arc::new(()))
+    }
+
+    fn setup(ctx: &RankCtx, _shared: &Arc<()>, global_params: Vec<f32>) -> Result<EpTrainer> {
+        let rank = ctx.rank;
+        let ep = ctx.opts.topo.ep;
+        let c = ctx.mesh.coord(rank);
+        let layout = EpLayout::new(&ctx.mm, ep, c.ep);
+        let arts = Arts::load(&ctx.mm, ep)?;
+        let (ep_group, ep_rank) = ctx.mesh.ep_group(rank);
+        let (dp_group, dp_rank) = ctx.mesh.dp_group(rank);
+        let (dpep_group, dpep_rank) = ctx.mesh.dpep_group(rank);
+
+        // every rank extracts its local view from the broadcast global
+        let params = layout.extract(&global_params);
+        drop(global_params);
+
+        let segs = build_segments(
+            ctx.opts.mode,
+            layout.ne_len,
+            layout.e_len,
+            dp_group,
+            dp_rank,
+            dpep_group,
+            dpep_rank,
+            ep,
+        );
+        let opt = ShardedOptimizer::new(
+            segs,
+            Arc::clone(dpep_group),
+            dpep_rank,
+            ctx.opts.adam(),
+            ctx.opts.reduce_dtype(),
+            ctx.opts.run.grad_clip,
+        );
+        Ok(EpTrainer {
+            ep_group: Arc::clone(ep_group),
+            ep_rank,
+            gathers_at_finish: c.dp == 0,
+            data_rank: c.dp * ep + c.ep,
+            layout,
+            arts,
+            params,
+            opt,
+            loss_dom: LossDomain {
+                group: Arc::clone(ctx.mesh.world_group()),
+                group_rank: rank,
+                record: rank == 0,
+            },
+        })
+    }
+
+    fn step(
+        &mut self,
+        ctx: &RankCtx,
+        step: usize,
+        breakdown: &mut StepBreakdown,
+    ) -> Result<StepOutcome> {
+        let mm = &ctx.mm;
+        let h = &mm.hyper;
+        let ep = ctx.opts.topo.ep;
+        let layout = &self.layout;
+        let arts = &self.arts;
+        let (ep_group, ep_rank) = (&self.ep_group, self.ep_rank);
+        let nr = layout.n_local_experts;
+        let (b, s) = (h.batch, h.seq);
+        let t_local = b * s;
+        let t_all = ep * t_local;
+        let k = h.top_k;
+        let hid = h.hidden;
+
+        let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
+            ctx.engine
+                .exec(&format!("{}:{key}", mm.name), path.to_path_buf(), inputs)
         };
-        let tokens_t = Tensor::i32(tokens, vec![b, s + 1]);
+
+        let tokens_t = ctx.fetch_tokens(step, self.data_rank, 0, breakdown);
+        // parameter slices for this step, shared by fwd and bwd
+        let ps = ParamSlices::new(&self.params, layout);
 
         // ---------------- forward ----------------
         let mut hcur = {
             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-            exec("embed_fwd", &arts.embed_fwd,
-                 vec![pslice(&params, &layout.emb), tokens_t.clone()])?
+            exec("embed_fwd", &arts.embed_fwd, vec![ps.emb.clone(), tokens_t.clone()])?
                 .remove(0)
         };
         // stashes for backward (SAC: inputs only)
         let mut stash_h: Vec<Tensor> = Vec::with_capacity(h.n_layers);
-        let mut stash_x: Vec<Vec<f32>> = Vec::with_capacity(h.n_layers);
-        let mut stash_w: Vec<Vec<f32>> = Vec::with_capacity(h.n_layers);
-        let mut stash_i: Vec<Vec<i32>> = Vec::with_capacity(h.n_layers);
+        let mut stash_x: Vec<Tensor> = Vec::with_capacity(h.n_layers);
+        let mut stash_w: Vec<Tensor> = Vec::with_capacity(h.n_layers);
+        let mut stash_i: Vec<Tensor> = Vec::with_capacity(h.n_layers);
         let mut aux_total = 0.0f32;
 
         for l in 0..h.n_layers {
             stash_h.push(hcur.clone());
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-                exec("pre_fwd", &arts.pre_fwd,
-                     vec![pslice(&params, &layout.layer_ne[l]), hcur])?
+                exec("pre_fwd", &arts.pre_fwd, vec![ps.layer_ne[l].clone(), hcur])?
             };
             let mut it = outs.into_iter();
             let a = it.next().unwrap();
@@ -224,13 +230,13 @@ fn rank_main(
             let aux = it.next().unwrap().scalar()?;
             aux_total += aux;
             let mut idx = idx.as_i32()?.to_vec();
-            if opts.fur {
+            if ctx.opts.fur {
                 idx = fur_indices(t_local, k, h.n_experts);
             }
             // ---- Stage 1: token exchange across EP ----
             let (x_all, w_all, idx_all) = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                match opts.ep_comm {
+                match ctx.opts.ep_comm {
                     EpComm::Allgather => {
                         exchange_allgather(ep_group, ep_rank, x2d, w2d, &idx)
                     }
@@ -244,14 +250,17 @@ fn rank_main(
                 .iter()
                 .map(|&v| v - (ep_rank * nr) as i32)
                 .collect();
+            let x_all = Tensor::f32(x_all, vec![t_all, hid]);
+            let w_all = Tensor::f32(w_all, vec![t_all, k]);
+            let idx_shift = Tensor::i32(idx_shift, vec![t_all, k]);
             // ---- Stages 2-5 (Pallas) ----
             let partial = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
                 exec("expert_fwd", &arts.expert_fwd, vec![
-                    pslice(&params, &layout.layer_e[l]),
-                    Tensor::f32(x_all.clone(), vec![t_all, hid]),
-                    Tensor::f32(w_all.clone(), vec![t_all, k]),
-                    Tensor::i32(idx_shift.clone(), vec![t_all, k]),
+                    ps.layer_e[l].clone(),
+                    x_all.clone(),
+                    w_all.clone(),
+                    idx_shift.clone(),
                 ])?
                 .remove(0)
                 .into_f32()?
@@ -275,14 +284,13 @@ fn rank_main(
         // ---- head + loss ----
         let outs = {
             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-            exec("head", &arts.head,
-                 vec![pslice(&params, &layout.head), hcur, tokens_t.clone()])?
+            exec("head", &arts.head, vec![ps.head.clone(), hcur, tokens_t.clone()])?
         };
         let loss = outs[0].scalar()?;
         let mut dh = outs[1].clone().into_f32()?;
         let dp_head = outs[2].as_f32()?.to_vec();
         if !loss.is_finite() {
-            return Err(anyhow!("rank {rank}: non-finite loss at step {step}"));
+            return Err(ctx.non_finite(step));
         }
 
         // ---------------- backward ----------------
@@ -298,10 +306,10 @@ fn rank_main(
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
                 exec("expert_bwd", &arts.expert_bwd, vec![
-                    pslice(&params, &layout.layer_e[l]),
-                    Tensor::f32(stash_x[l].clone(), vec![t_all, hid]),
-                    Tensor::f32(stash_w[l].clone(), vec![t_all, k]),
-                    Tensor::i32(stash_i[l].clone(), vec![t_all, k]),
+                    ps.layer_e[l].clone(),
+                    stash_x[l].clone(),
+                    stash_w[l].clone(),
+                    stash_i[l].clone(),
                     Tensor::f32(d_moe_full, vec![t_all, hid]),
                 ])?
             };
@@ -319,7 +327,7 @@ fn rank_main(
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
                 exec("pre_bwd", &arts.pre_bwd, vec![
-                    pslice(&params, &layout.layer_ne[l]),
+                    ps.layer_ne[l].clone(),
                     stash_h[l].clone(),
                     Tensor::f32(dh.clone(), vec![b, s, hid]),
                     Tensor::f32(dx_local, vec![t_local, hid]),
@@ -333,63 +341,58 @@ fn rank_main(
         let outs = {
             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
             exec("embed_bwd", &arts.embed_bwd, vec![
-                pslice(&params, &layout.emb),
+                ps.emb.clone(),
                 tokens_t.clone(),
-                Tensor::f32(dh.clone(), vec![b, s, hid]),
+                Tensor::f32(dh, vec![b, s, hid]),
             ])?
         };
         grads[layout.emb.clone()].copy_from_slice(outs[0].as_f32()?);
 
         // ---- SO correctness step: NE grads must average over EP too ----
-        if opts.mode == crate::optim::ShardingMode::So && ep > 1 {
+        if ctx.opts.mode == crate::optim::ShardingMode::So && ep > 1 {
             let _t = Scoped::new(&mut breakdown.comm_secs);
             let ne = grads[..layout.ne_len].to_vec();
-            let avg = ep_group.allreduce_mean(ep_rank, ne, opts.reduce_dtype());
+            let avg = ep_group.allreduce_mean(ep_rank, ne, ctx.opts.reduce_dtype());
             grads[..layout.ne_len].copy_from_slice(&avg);
         }
 
-        let lr = opts.run.lr_at(step) as f32;
-        let gn = opt.step(&mut params, &grads, lr, clip_now(&opts.run, step));
-        opts.hook.on_step(rank, step, loss, &mut params)?;
-
-        // loss averaged over all ranks (each saw distinct tokens)
-        let mean_loss =
-            world.allreduce_mean(rank, vec![loss], ReduceDtype::F32)[0];
-        if rank == 0 {
-            loss_curve.push(step, mean_loss as f64);
-            gn_curve.push(step, gn);
-        }
-        step_secs.push(t_step.elapsed().as_secs_f64());
+        let lr = ctx.opts.run.lr_at(step) as f32;
+        let gn = self.opt.step(&mut self.params, &grads, lr, clip_now(&ctx.opts.run, step));
         let _ = aux_total;
+        Ok(StepOutcome { loss, grad_norm: gn })
     }
 
-    // reassemble rank 0's global view (rank 0 holds ep=0 experts; other
-    // experts live on sibling ep ranks: gather via dpep allgather of local
-    // vectors is overkill — scatter local and gather expert blocks)
-    if rank == 0 {
-        let mut final_params = vec![0.0f32; mm.param_count];
-        // collect every ep rank's local vector via the ep group
-        let all_locals = ep_group.allgather(ep_rank, params.clone());
-        for (r, chunk) in all_locals.chunks(layout.local_len()).enumerate() {
-            let lay_r = EpLayout::new(mm, ep, r);
-            lay_r.scatter(chunk, &mut final_params);
+    fn params_mut(&mut self) -> Result<&mut [f32]> {
+        Ok(&mut self.params)
+    }
+
+    fn loss_domain(&self) -> Option<&LossDomain> {
+        Some(&self.loss_dom)
+    }
+
+    fn finish(self, ctx: &RankCtx) -> Result<RankFinish> {
+        // reassemble rank 0's global view: rank 0 holds ep=0 experts;
+        // sibling ep ranks contribute theirs via the ep-group allgather
+        if ctx.rank == 0 {
+            let mm = &ctx.mm;
+            let ep = ctx.opts.topo.ep;
+            let mut final_params = vec![0.0f32; mm.param_count];
+            let all_locals = self.ep_group.allgather(self.ep_rank, self.params);
+            for (r, chunk) in all_locals.chunks(self.layout.local_len()).enumerate() {
+                let lay_r = EpLayout::new(mm, ep, r);
+                lay_r.scatter(chunk, &mut final_params);
+            }
+            return Ok(RankFinish::Report(Box::new(ReportParts {
+                final_params: Tensor::f32(final_params, vec![mm.param_count]),
+                opt_state_bytes: self.opt.state_bytes(),
+                optimizer_update_secs: self.opt.update_secs,
+                optimizer_comm_secs: self.opt.comm_secs,
+            })));
         }
-        breakdown.comm_secs += opt.comm_secs;
-        return Ok(Some(TrainReport {
-            loss: loss_curve,
-            grad_norm: gn_curve,
-            breakdown,
-            step_secs,
-            tokens_per_step: plan.instances_per_step() * s,
-            final_params,
-            opt_state_bytes: opt.state_bytes(),
-            optimizer_update_secs: opt.update_secs,
-            optimizer_comm_secs: opt.comm_secs,
-        }));
+        // non-zero ranks of rank 0's ep group must still rendezvous
+        if self.gathers_at_finish {
+            self.ep_group.allgather(self.ep_rank, self.params);
+        }
+        Ok(RankFinish::None)
     }
-    // non-zero ranks must still participate in the final gather above
-    if mesh.coord(rank).dp == 0 {
-        ep_group.allgather(ep_rank, params.clone());
-    }
-    Ok(None)
 }

@@ -1,4 +1,4 @@
-//! Pipeline-parallel training over stage artifacts.
+//! Pipeline-parallel engine: microbatch schedules over stage artifacts.
 //!
 //! Stage ranks execute the schedule's op list; activations/cotangents move
 //! over point-to-point channels. The backward artifacts recompute their
@@ -8,23 +8,29 @@
 //! for Mula-100B/220B).
 //!
 //! Gradients accumulate over microbatches and are averaged before the
-//! sharded optimizer step (per-stage DP group).
+//! sharded optimizer step (per-stage DP group). Scaffolding lives in the
+//! shared [`harness`](super::harness); the stage parameter vector is an
+//! `Arc`-backed [`Tensor`], so handing it to every microbatch execution
+//! is a refcount bump instead of the seed's per-op full-stage copy.
 
+use super::harness::{
+    AuxParams, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
+};
 use super::pipeline::{PipeOp, Schedule};
-use super::{clip_now, init_global_params, TrainOptions, TrainReport};
-use crate::comm::{Mesh, P2p, ReduceDtype};
+use super::{clip_now, TrainOptions, TrainReport};
+use crate::comm::P2p;
 use crate::config::{ModelManifest, ParamSpec};
-use crate::data::{BatchPlan, Dataset};
-use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::data::BatchPlan;
+use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::Tensor;
 use crate::Result;
 use anyhow::anyhow;
 use std::sync::Arc;
 
 /// Stage-owned parameter specs (mirrors python model.stage_param_specs:
 /// same filter, same order, local offsets).
-pub fn stage_specs(mm: &ModelManifest, pp: usize, stage: usize) -> Vec<ParamSpec> {
+pub(super) fn stage_specs(mm: &ModelManifest, pp: usize, stage: usize) -> Vec<ParamSpec> {
     let lps = mm.hyper.n_layers / pp;
     let lo = (stage * lps) as i64;
     let hi = ((stage + 1) * lps) as i64;
@@ -73,210 +79,191 @@ fn scatter_stage(local: &[f32], specs: &[ParamSpec], global: &mut [f32]) {
     }
 }
 
-pub fn run(
-    mm: &ModelManifest,
-    ds: Arc<Dataset>,
-    engine: Engine,
-    mesh: Arc<Mesh>,
-    opts: &TrainOptions,
-) -> Result<TrainReport> {
-    let pp = opts.topo.pp;
-    if !mm.pp_degrees.contains(&pp) {
-        return Err(anyhow!(
-            "no PP={pp} artifacts for {} (built: {:?})",
-            mm.name,
-            mm.pp_degrees
-        ));
-    }
-    if matches!(opts.schedule, Schedule::Interleaved1F1B { .. }) {
-        return Err(anyhow!(
-            "interleaved-1f1b needs multi-chunk artifacts; runnable engine \
-             supports gpipe/1f1b (interleaved is covered by the schedule \
-             property tests and the cluster model)"
-        ));
-    }
-    let world_n = opts.topo.world();
-    let p2p = P2p::new(world_n, 2); // tag 0 = fwd activations, 1 = cotangents
-    let plan = BatchPlan {
-        dp: opts.topo.dp,
-        micro_batch: mm.hyper.batch,
-        micro_batches: opts.micro_batches,
-    };
+pub(super) struct PpTrainer {
+    params: Tensor,
+    specs: Vec<ParamSpec>,
+    my_len: usize,
+    opt: ShardedOptimizer,
+    p2p: Arc<P2p>,
+    stage: usize,
+    last: bool,
+    dp_coord: usize,
+    prev: Option<usize>,
+    next: Option<usize>,
+    ops: Vec<PipeOp>,
+    art_fwd: Option<std::path::PathBuf>,
+    art_fwdbwd: std::path::PathBuf,
+    key_prefix: String,
+    loss_dom: Option<LossDomain>,
+}
 
-    let handles: Vec<_> = (0..world_n)
-        .map(|rank| {
-            let mm = mm.clone();
-            let ds = Arc::clone(&ds);
-            let engine = engine.clone();
-            let mesh = Arc::clone(&mesh);
-            let opts = opts.clone();
-            let p2p = Arc::clone(&p2p);
-            std::thread::Builder::new()
-                .name(format!("pp-rank-{rank}"))
-                .spawn(move || {
-                    let m2 = Arc::clone(&mesh);
-                    let r = rank_main(rank, &mm, ds, engine, mesh, p2p, &opts, plan);
-                    if r.is_err() {
-                        m2.poison_all();
-                    }
-                    r
-                })
-                .expect("spawn rank")
-        })
-        .collect();
+impl RankTrainer for PpTrainer {
+    const LABEL: &'static str = "pp";
+    type Shared = P2p;
 
-    let mut report: Option<TrainReport> = None;
-    let mut stage0_params: Option<Vec<f32>> = None;
-    let mut first_err: Option<anyhow::Error> = None;
-    let mut panic_err: Option<anyhow::Error> = None;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(RankOut::Last(r))) => report = Some(r),
-            Ok(Ok(RankOut::Stage { stage: 0, params })) => stage0_params = Some(params),
-            Ok(Ok(_)) => {}
-            Ok(Err(e)) => first_err = first_err.or(Some(e)),
-            Err(_) => panic_err = panic_err.or(Some(anyhow!("pp rank panicked"))),
+    fn preflight(mm: &ModelManifest, opts: &TrainOptions) -> Result<()> {
+        let pp = opts.topo.pp;
+        if !mm.pp_degrees.contains(&pp) {
+            return Err(anyhow!(
+                "no PP={pp} artifacts for {} (built: {:?})",
+                mm.name,
+                mm.pp_degrees
+            ));
+        }
+        if matches!(opts.schedule, Schedule::Interleaved1F1B { .. }) {
+            return Err(anyhow!(
+                "interleaved-1f1b needs multi-chunk artifacts; runnable engine \
+                 supports gpipe/1f1b (interleaved is covered by the schedule \
+                 property tests and the cluster model)"
+            ));
+        }
+        // p2p sequence ids are step * 64 + mb: more microbatches would
+        // silently collide across steps
+        if opts.micro_batches == 0 || opts.micro_batches > 64 {
+            return Err(anyhow!(
+                "PP supports 1..=64 microbatches per step (p2p sequence ids \
+                 reserve 64 slots); got {}",
+                opts.micro_batches
+            ));
+        }
+        Ok(())
+    }
+
+    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan {
+        BatchPlan {
+            dp: opts.topo.dp,
+            micro_batch: mm.hyper.batch,
+            micro_batches: opts.micro_batches,
         }
     }
-    if let Some(e) = first_err.or(panic_err) {
-        return Err(e);
+
+    fn shared(_mm: &ModelManifest, opts: &TrainOptions) -> Result<Arc<P2p>> {
+        // tag 0 = fwd activations, 1 = cotangents
+        Ok(P2p::new(opts.topo.world(), 2))
     }
-    let mut rep = report.ok_or_else(|| anyhow!("last stage produced no report"))?;
-    // assemble a full parameter vector from stage segments (pp=2 case:
-    // stage 0 params + the last stage's own, already scattered into rep)
-    if let Some(p0) = stage0_params {
-        let specs0 = stage_specs(mm, pp, 0);
-        let mut global = rep.final_params.clone();
-        scatter_stage(&p0, &specs0, &mut global);
-        rep.final_params = global;
+
+    fn poison_shared(shared: &P2p) {
+        shared.poison();
     }
-    Ok(rep)
-}
 
-enum RankOut {
-    Last(TrainReport),
-    Stage { stage: usize, params: Vec<f32> },
-    None,
-}
+    fn setup(ctx: &RankCtx, shared: &Arc<P2p>, global_params: Vec<f32>) -> Result<PpTrainer> {
+        let rank = ctx.rank;
+        let mm = &ctx.mm;
+        let pp = ctx.opts.topo.pp;
+        let c = ctx.mesh.coord(rank);
+        let stage = c.pp;
+        let last = stage == pp - 1;
+        let specs = stage_specs(mm, pp, stage);
+        let my_len = stage_len(&specs);
+        let (dp_group, dp_rank) = ctx.mesh.dp_group(rank);
+        let (prev, next) = ctx.mesh.pp_neighbours(rank);
 
-#[allow(clippy::too_many_arguments)]
-fn rank_main(
-    rank: usize,
-    mm: &ModelManifest,
-    ds: Arc<Dataset>,
-    engine: Engine,
-    mesh: Arc<Mesh>,
-    p2p: Arc<P2p>,
-    opts: &TrainOptions,
-    plan: BatchPlan,
-) -> Result<RankOut> {
-    let h = &mm.hyper;
-    let pp = opts.topo.pp;
-    let c = mesh.coord(rank);
-    let stage = c.pp;
-    let last = stage == pp - 1;
-    let specs = stage_specs(mm, pp, stage);
-    let my_len = stage_len(&specs);
-    let world = mesh.world_group();
-    let (dp_group, dp_rank) = mesh.dp_group(rank);
-    let (prev, next) = mesh.pp_neighbours(rank);
+        let params = extract_stage(&global_params, &specs);
+        drop(global_params);
 
-    // model broadcasting, then stage extraction
-    let global0 = if rank == 0 {
-        let p = init_global_params(mm, opts.run.seed);
-        world.broadcast(rank, 0, p.clone());
-        p
-    } else {
-        world.broadcast(rank, 0, Vec::new())
-    };
-    let mut params = extract_stage(&global0, &specs);
-    drop(global0);
+        let segs = vec![SegmentSpec {
+            local_offset: 0,
+            len: my_len,
+            group: Arc::clone(dp_group),
+            group_rank: dp_rank,
+            norm_weight: 1.0,
+        }];
+        let opt = ShardedOptimizer::new(
+            segs,
+            Arc::clone(dp_group),
+            dp_rank,
+            ctx.opts.adam(),
+            ctx.opts.reduce_dtype(),
+            ctx.opts.run.grad_clip,
+        );
 
-    let segs = vec![SegmentSpec {
-        local_offset: 0,
-        len: my_len,
-        group: Arc::clone(dp_group),
-        group_rank: dp_rank,
-        norm_weight: 1.0,
-    }];
-    let mut opt = ShardedOptimizer::new(
-        segs,
-        Arc::clone(dp_group),
-        dp_rank,
-        opts.adam(),
-        opts.reduce_dtype(),
-        opts.run.grad_clip,
-    );
+        let art_fwd = if last {
+            None
+        } else {
+            Some(mm.artifact_path(&format!("pp{pp}_stage{stage}_fwd"))?)
+        };
+        let art_fwdbwd = mm.artifact_path(&format!("pp{pp}_stage{stage}_fwdbwd"))?;
 
-    let art_fwd = if last {
-        None
-    } else {
-        Some(mm.artifact_path(&format!("pp{pp}_stage{stage}_fwd"))?)
-    };
-    let art_fwdbwd = mm.artifact_path(&format!("pp{pp}_stage{stage}_fwdbwd"))?;
+        Ok(PpTrainer {
+            params: Tensor::f32(params, vec![my_len]),
+            specs,
+            my_len,
+            opt,
+            p2p: Arc::clone(shared),
+            stage,
+            last,
+            dp_coord: c.dp,
+            prev,
+            next,
+            ops: ctx.opts.schedule.ops(stage, pp, ctx.opts.micro_batches),
+            art_fwd,
+            art_fwdbwd,
+            key_prefix: format!("{}:pp{pp}s{stage}", mm.name),
+            loss_dom: last.then(|| LossDomain {
+                group: Arc::clone(dp_group),
+                group_rank: dp_rank,
+                record: c.dp == 0,
+            }),
+        })
+    }
 
-    let (b, s) = (h.batch, h.seq);
-    let _act_len = b * s * h.hidden;
-    let ops = opts.schedule.ops(stage, pp, opts.micro_batches);
-    let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
-        engine.exec(
-            &format!("{}:pp{pp}s{stage}:{key}", mm.name),
-            path.to_path_buf(),
-            inputs,
-        )
-    };
+    fn step(
+        &mut self,
+        ctx: &RankCtx,
+        step: usize,
+        breakdown: &mut StepBreakdown,
+    ) -> Result<StepOutcome> {
+        let rank = ctx.rank;
+        let h = &ctx.mm.hyper;
+        let (b, s) = (h.batch, h.seq);
+        let micro = ctx.opts.micro_batches;
+        let p2p = &self.p2p;
+        let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
+            ctx.engine.exec(
+                &format!("{}:{key}", self.key_prefix),
+                path.to_path_buf(),
+                inputs,
+            )
+        };
 
-    let mut loss_curve = Curve::new("loss");
-    let mut gn_curve = Curve::new("grad_norm");
-    let mut breakdown = StepBreakdown::default();
-    let mut step_secs = Vec::with_capacity(opts.run.steps);
-
-    for step in 0..opts.run.steps {
-        let t_step = std::time::Instant::now();
-        let mut grads = vec![0.0f32; my_len];
+        let mut grads = vec![0.0f32; self.my_len];
         let mut step_loss = 0.0f32;
         // stashed stage inputs per microbatch (SAC)
-        let mut stash: Vec<Option<Tensor>> = vec![None; opts.micro_batches];
+        let mut stash: Vec<Option<Tensor>> = vec![None; micro];
 
-        for op in &ops {
+        for op in &self.ops {
             match *op {
                 PipeOp::Fwd { mb, .. } => {
-                    let tokens = {
-                        let _t = Scoped::new(&mut breakdown.data_secs);
-                        ds.batch_i32(plan.start(step, c.dp, mb), b, s)
-                    };
-                    let tokens_t = Tensor::i32(tokens, vec![b, s + 1]);
-                    if stage == 0 {
+                    let tokens_t = ctx.fetch_tokens(step, self.dp_coord, mb, breakdown);
+                    if self.stage == 0 {
                         let outs = {
                             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-                            exec("fwd", art_fwd.as_ref().unwrap(), vec![
-                                Tensor::f32(params.clone(), vec![my_len]),
+                            exec("fwd", self.art_fwd.as_ref().unwrap(), vec![
+                                self.params.clone(),
                                 tokens_t.clone(),
                             ])?
                         };
                         let hout = outs[0].as_f32()?.to_vec();
                         stash[mb] = Some(tokens_t);
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, next.unwrap(), 0, (step * 64 + mb) as u64, hout);
-                    } else if last {
+                        p2p.send(rank, self.next.unwrap(), 0, (step * 64 + mb) as u64, hout);
+                    } else if self.last {
                         // recv + fused fwdbwd + send cotangent immediately
                         let hin = {
                             let _t = Scoped::new(&mut breakdown.comm_secs);
-                            p2p.recv(prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
+                            p2p.recv(self.prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
                         };
                         let outs = {
                             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-                            exec("fwdbwd", &art_fwdbwd, vec![
-                                Tensor::f32(params.clone(), vec![my_len]),
+                            exec("fwdbwd", &self.art_fwdbwd, vec![
+                                self.params.clone(),
                                 Tensor::f32(hin, vec![b, s, h.hidden]),
                                 tokens_t,
                             ])?
                         };
                         let loss = outs[0].scalar()?;
                         if !loss.is_finite() {
-                            return Err(anyhow!(
-                                "rank {rank}: non-finite loss at step {step}"
-                            ));
+                            return Err(ctx.non_finite(step));
                         }
                         step_loss += loss;
                         let dx = outs[2].as_f32()?.to_vec();
@@ -284,17 +271,17 @@ fn rank_main(
                             *g += d;
                         }
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
+                        p2p.send(rank, self.prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
                     } else {
                         let hin = {
                             let _t = Scoped::new(&mut breakdown.comm_secs);
-                            p2p.recv(prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
+                            p2p.recv(self.prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
                         };
                         let hin_t = Tensor::f32(hin, vec![b, s, h.hidden]);
                         let outs = {
                             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-                            exec("fwd", art_fwd.as_ref().unwrap(), vec![
-                                Tensor::f32(params.clone(), vec![my_len]),
+                            exec("fwd", self.art_fwd.as_ref().unwrap(), vec![
+                                self.params.clone(),
                                 hin_t.clone(),
                             ])?
                         };
@@ -302,7 +289,7 @@ fn rank_main(
                         let _t = Scoped::new(&mut breakdown.comm_secs);
                         p2p.send(
                             rank,
-                            next.unwrap(),
+                            self.next.unwrap(),
                             0,
                             (step * 64 + mb) as u64,
                             outs[0].as_f32()?.to_vec(),
@@ -310,24 +297,24 @@ fn rank_main(
                     }
                 }
                 PipeOp::Bwd { mb, .. } => {
-                    if last {
+                    if self.last {
                         continue; // fused into Fwd above
                     }
                     let d_out = {
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.recv(next.unwrap(), rank, 1, (step * 64 + mb) as u64)
+                        p2p.recv(self.next.unwrap(), rank, 1, (step * 64 + mb) as u64)
                     };
                     let d_out_t = Tensor::f32(d_out, vec![b, s, h.hidden]);
                     let input = stash[mb].take().expect("bwd before fwd");
                     let outs = {
                         let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
-                        exec("fwdbwd", &art_fwdbwd, vec![
-                            Tensor::f32(params.clone(), vec![my_len]),
+                        exec("fwdbwd", &self.art_fwdbwd, vec![
+                            self.params.clone(),
                             input,
                             d_out_t,
                         ])?
                     };
-                    if stage == 0 {
+                    if self.stage == 0 {
                         for (g, d) in grads.iter_mut().zip(outs[0].as_f32()?) {
                             *g += d;
                         }
@@ -337,57 +324,66 @@ fn rank_main(
                             *g += d;
                         }
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
+                        p2p.send(rank, self.prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
                     }
                 }
             }
         }
 
         // average gradient over microbatches
-        let inv = 1.0 / opts.micro_batches as f32;
+        let inv = 1.0 / micro as f32;
         for g in grads.iter_mut() {
             *g *= inv;
         }
-        let lr = opts.run.lr_at(step) as f32;
-        let gn = {
-            let _t = Scoped::new(&mut breakdown.optimizer_secs);
-            opt.step(&mut params, &grads, lr, clip_now(&opts.run, step))
-        };
-        opts.hook.on_step(rank, step, step_loss / opts.micro_batches as f32, &mut params)?;
+        let lr = ctx.opts.run.lr_at(step) as f32;
+        let gn = self.opt.step(
+            self.params.as_f32_mut()?,
+            &grads,
+            lr,
+            clip_now(&ctx.opts.run, step),
+        );
+        Ok(StepOutcome { loss: step_loss / micro as f32, grad_norm: gn })
+    }
 
-        // loss lives on the last stage; average over its DP replicas
-        if last {
-            let mean = dp_group.allreduce_mean(
-                dp_rank,
-                vec![step_loss / opts.micro_batches as f32],
-                ReduceDtype::F32,
-            )[0];
-            if c.dp == 0 {
-                loss_curve.push(step, mean as f64);
-                gn_curve.push(step, gn);
-            }
+    fn params_mut(&mut self) -> Result<&mut [f32]> {
+        Ok(self.params.as_f32_mut()?.as_mut_slice())
+    }
+
+    fn loss_domain(&self) -> Option<&LossDomain> {
+        self.loss_dom.as_ref()
+    }
+
+    fn finish(self, ctx: &RankCtx) -> Result<RankFinish> {
+        if self.dp_coord != 0 {
+            return Ok(RankFinish::None);
         }
-        step_secs.push(t_step.elapsed().as_secs_f64());
+        if self.last {
+            // seed the global vector with this stage's segment; the other
+            // stages' Aux payloads are scattered in by merge_aux
+            let mut final_params = vec![0.0f32; ctx.mm.param_count];
+            scatter_stage(self.params.as_f32()?, &self.specs, &mut final_params);
+            return Ok(RankFinish::Report(Box::new(ReportParts {
+                final_params: Tensor::f32(final_params, vec![ctx.mm.param_count]),
+                opt_state_bytes: self.opt.state_bytes(),
+                optimizer_update_secs: self.opt.update_secs,
+                optimizer_comm_secs: self.opt.comm_secs,
+            })));
+        }
+        Ok(RankFinish::Aux(AuxParams { tag: self.stage, params: self.params.into_f32()? }))
     }
 
-    if last && c.dp == 0 {
-        let mut final_params = vec![0.0f32; mm.param_count];
-        scatter_stage(&params, &specs, &mut final_params);
-        breakdown.comm_secs += opt.comm_secs;
-        return Ok(RankOut::Last(TrainReport {
-            loss: loss_curve,
-            grad_norm: gn_curve,
-            breakdown,
-            step_secs,
-            tokens_per_step: plan.instances_per_step() * s,
-            final_params,
-            opt_state_bytes: opt.state_bytes(),
-            optimizer_update_secs: opt.update_secs,
-            optimizer_comm_secs: opt.comm_secs,
-        }));
+    fn merge_aux(
+        mm: &ModelManifest,
+        opts: &TrainOptions,
+        report: &mut TrainReport,
+        aux: Vec<AuxParams>,
+    ) -> Result<()> {
+        // assemble the full parameter vector from every stage's segment
+        let global = report.final_params.as_f32_mut()?;
+        for a in aux {
+            let specs = stage_specs(mm, opts.topo.pp, a.tag);
+            scatter_stage(&a.params, &specs, global);
+        }
+        Ok(())
     }
-    if stage == 0 && c.dp == 0 {
-        return Ok(RankOut::Stage { stage, params });
-    }
-    Ok(RankOut::None)
 }

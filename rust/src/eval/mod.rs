@@ -73,12 +73,13 @@ fn cases_for(task: &str, n: usize, seed: u64) -> Vec<Case> {
     out
 }
 
-/// Run the suite against a parameter vector via the `eval_step` artifact.
-/// Returns task → score in [0, 100].
+/// Run the suite against a parameter tensor via the `eval_step` artifact.
+/// `params` is `Arc`-backed: every batch submission is a refcount bump,
+/// not a copy of the full model. Returns task → score in [0, 100].
 pub fn run_suite(
     engine: &Engine,
     mm: &ModelManifest,
-    params: &[f32],
+    params: &Tensor,
     cases_per_task: usize,
 ) -> Result<BTreeMap<String, f64>> {
     let (b, s) = (mm.hyper.batch, mm.hyper.seq);
@@ -107,10 +108,7 @@ pub fn run_suite(
             let outs = engine.exec(
                 &format!("{}:eval_step", mm.name),
                 art.clone(),
-                vec![
-                    Tensor::f32(params.to_vec(), vec![mm.param_count]),
-                    Tensor::i32(toks.clone(), vec![b, s + 1]),
-                ],
+                vec![params.clone(), Tensor::i32(toks.clone(), vec![b, s + 1])],
             )?;
             let nll = outs[0].as_f32()?;
             let preds = outs[1].as_i32()?;
@@ -181,10 +179,16 @@ mod tests {
 
     #[test]
     fn random_params_score_near_zero_on_probes() {
-        let m = crate::config::Manifest::load(&crate::artifacts_dir()).unwrap();
+        let Some(m) = crate::manifest_or_skip("eval::random_params_score_near_zero_on_probes")
+        else {
+            return;
+        };
         let mm = m.config("mula-tiny").unwrap();
         let engine = Engine::new().unwrap();
-        let params = crate::coordinator::init_global_params(mm, 3);
+        let params = Tensor::f32(
+            crate::coordinator::init_global_params(mm, 3),
+            vec![mm.param_count],
+        );
         let scores = run_suite(&engine, mm, &params, 8).unwrap();
         assert_eq!(scores.len(), TASKS.len());
         // an untrained byte model almost never emits a full correct answer

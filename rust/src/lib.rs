@@ -12,11 +12,12 @@
 //! paper's EP-aware EPSO), the data pipeline, checkpointing, and the
 //! reliability features of paper §4.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! Module map (see `rust/DESIGN.md` for the full inventory):
 //! - [`runtime`]  — PJRT executor pool: load + execute HLO artifacts
 //! - [`comm`]     — in-process collectives over an N-D device mesh
 //! - [`config`]   — manifest (param layout / artifacts) + run configs
-//! - [`coordinator`] — trainer, pipeline schedules, EP token exchange
+//! - [`coordinator`] — rank-execution harness, DP/EP/PP engines,
+//!   pipeline schedules, EP token exchange
 //! - [`optim`]    — AdamW, sharded optimizer (SO), EPSO (paper §3.2)
 //! - [`data`]     — tokenize → shuffle → shard pipeline + mmap loader
 //! - [`ckpt`]     — dual / persistent / DP-scattered checkpointing (§4)
@@ -51,4 +52,22 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     p.push("artifacts");
     p
+}
+
+/// Artifact manifest for tests that need built HLO artifacts, or `None`
+/// (with a SKIP note on stderr) when `artifacts/` hasn't been built — so
+/// `cargo test -q` gives signal on a fresh clone instead of a wall of
+/// unwrap panics. Build artifacts with:
+/// `python python/compile/aot.py --out rust/artifacts`.
+pub fn manifest_or_skip(test: &str) -> Option<config::Manifest> {
+    match config::Manifest::load(&artifacts_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!(
+                "SKIP {test}: artifacts not built ({e:#}); \
+                 run `python python/compile/aot.py --out rust/artifacts`"
+            );
+            None
+        }
+    }
 }

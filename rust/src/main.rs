@@ -134,7 +134,10 @@ fn do_eval(args: &Args) -> optimus::Result<()> {
     let man = Manifest::load(&optimus::artifacts_dir())?;
     let mm = man.config(&model)?;
     let engine = Engine::new_pool(2)?;
-    let params = coordinator::init_global_params(mm, args.usize_or("seed", 0) as u64);
+    let params = optimus::runtime::Tensor::f32(
+        coordinator::init_global_params(mm, args.usize_or("seed", 0) as u64),
+        vec![mm.param_count],
+    );
     let scores = eval::run_suite(&engine, mm, &params, args.usize_or("cases", 16))?;
     for (t, s) in &scores {
         println!("{t:<14} {s:6.1}");

@@ -152,14 +152,16 @@ mod tests {
 
     #[test]
     fn engine_runs_eval_step() {
-        let m = crate::config::Manifest::load(&crate::artifacts_dir()).unwrap();
+        let Some(m) = crate::manifest_or_skip("runtime::engine_runs_eval_step") else {
+            return;
+        };
         let cfg = m.config("mula-tiny").unwrap();
         let eng = Engine::new().unwrap();
         let p = Tensor::zeros_f32(vec![cfg.param_count]);
-        let toks = Tensor::I32 {
-            data: vec![1; cfg.hyper.batch * (cfg.hyper.seq + 1)],
-            shape: vec![cfg.hyper.batch, cfg.hyper.seq + 1],
-        };
+        let toks = Tensor::i32(
+            vec![1; cfg.hyper.batch * (cfg.hyper.seq + 1)],
+            vec![cfg.hyper.batch, cfg.hyper.seq + 1],
+        );
         let out = eng
             .exec("eval", tiny_art("eval_step"), vec![p, toks])
             .unwrap();
@@ -175,7 +177,10 @@ mod tests {
 
     #[test]
     fn parallel_execs_from_many_threads() {
-        let m = crate::config::Manifest::load(&crate::artifacts_dir()).unwrap();
+        let Some(m) = crate::manifest_or_skip("runtime::parallel_execs_from_many_threads")
+        else {
+            return;
+        };
         let cfg = m.config("mula-tiny").unwrap();
         let eng = Engine::new_pool(2).unwrap();
         let pc = cfg.param_count;
@@ -186,10 +191,8 @@ mod tests {
                 let path = tiny_art("eval_step");
                 std::thread::spawn(move || {
                     let p = Tensor::zeros_f32(vec![pc]);
-                    let toks = Tensor::I32 {
-                        data: vec![(i % 7) as i32; b * (s + 1)],
-                        shape: vec![b, s + 1],
-                    };
+                    let toks =
+                        Tensor::i32(vec![(i % 7) as i32; b * (s + 1)], vec![b, s + 1]);
                     eng.exec("eval", path, vec![p, toks]).unwrap()
                 })
             })

@@ -1,34 +1,51 @@
 //! Host tensors: the plain-data currency between rank threads and the
 //! PJRT executor threads (xla::Literal is !Send, so it never leaves the
 //! executor).
+//!
+//! Storage is `Arc`-backed (copy-on-write): cloning a `Tensor` — e.g. to
+//! re-submit the same parameter vector to [`crate::runtime::Engine::exec`]
+//! every step — bumps a refcount instead of copying megabytes of floats.
+//! Mutation goes through [`Tensor::as_f32_mut`], which uses
+//! `Arc::make_mut`: in-place when this handle is the sole owner (the
+//! steady state — the engine drops its clones before `exec` returns),
+//! a deep copy only when another live handle still shares the buffer.
+//! See DESIGN.md §3 for the full ownership rules.
 
 use crate::Result;
 use anyhow::anyhow;
+use std::sync::Arc;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
-    F32 { data: Vec<f32>, shape: Vec<usize> },
-    I32 { data: Vec<i32>, shape: Vec<usize> },
+    F32 { data: Arc<Vec<f32>>, shape: Vec<usize> },
+    I32 { data: Arc<Vec<i32>>, shape: Vec<usize> },
+}
+
+impl Default for Tensor {
+    /// Empty f32 tensor (placeholder for `TrainReport::default()` et al).
+    fn default() -> Tensor {
+        Tensor::F32 { data: Arc::new(Vec::new()), shape: vec![0] }
+    }
 }
 
 impl Tensor {
     pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        Tensor::F32 { data, shape }
+        Tensor::F32 { data: Arc::new(data), shape }
     }
 
     pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        Tensor::I32 { data, shape }
+        Tensor::I32 { data: Arc::new(data), shape }
     }
 
     pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
-        Tensor::F32 { data: vec![0.0; n], shape }
+        Tensor::F32 { data: Arc::new(vec![0.0; n]), shape }
     }
 
     pub fn scalar_f32(v: f32) -> Tensor {
-        Tensor::F32 { data: vec![v], shape: vec![] }
+        Tensor::F32 { data: Arc::new(vec![v]), shape: vec![] }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -48,32 +65,62 @@ impl Tensor {
         self.len() == 0
     }
 
+    /// True when `self` and `other` share the same underlying buffer —
+    /// i.e. no data was copied between them (zero-copy witness).
+    pub fn ptr_eq(&self, other: &Tensor) -> bool {
+        match (self, other) {
+            (Tensor::F32 { data: a, .. }, Tensor::F32 { data: b, .. }) => Arc::ptr_eq(a, b),
+            (Tensor::I32 { data: a, .. }, Tensor::I32 { data: b, .. }) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// Address of the first element — stable across `Arc` clones, changes
+    /// only when copy-on-write actually copies.
+    pub fn data_ptr(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.as_ptr() as usize,
+            Tensor::I32 { data, .. } => data.as_ptr() as usize,
+        }
+    }
+
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
-            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::F32 { data, .. } => Ok(data.as_slice()),
             _ => Err(anyhow!("tensor is not f32")),
         }
     }
 
+    /// Copy-on-write mutable access: in-place when uniquely owned, deep
+    /// copy when clones of this tensor are still alive elsewhere.
     pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
         match self {
-            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::F32 { data, .. } => Ok(Arc::make_mut(data)),
             _ => Err(anyhow!("tensor is not f32")),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
-            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::I32 { data, .. } => Ok(data.as_slice()),
             _ => Err(anyhow!("tensor is not i32")),
         }
     }
 
+    /// Take the f32 buffer: by move when uniquely owned, by copy otherwise.
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
-            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::F32 { data, .. } => {
+                Ok(Arc::try_unwrap(data).unwrap_or_else(|a| a.as_ref().clone()))
+            }
             _ => Err(anyhow!("tensor is not f32")),
         }
+    }
+
+    /// Owned copy of the f32 buffer (for serialization boundaries like
+    /// [`crate::ckpt::Checkpoint`]).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.as_f32()?.to_vec())
     }
 
     /// First element as f32 (scalar outputs like losses).
@@ -96,11 +143,11 @@ pub(super) fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = match t {
         Tensor::F32 { data, shape } => {
             dims = shape.iter().map(|d| *d as i64).collect();
-            xla::Literal::vec1(data)
+            xla::Literal::vec1(data.as_slice())
         }
         Tensor::I32 { data, shape } => {
             dims = shape.iter().map(|d| *d as i64).collect();
-            xla::Literal::vec1(data)
+            xla::Literal::vec1(data.as_slice())
         }
     };
     lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e}"))
@@ -113,11 +160,11 @@ pub(super) fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
     let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
     match shape.ty() {
         xla::ElementType::F32 => Ok(Tensor::F32 {
-            data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            data: Arc::new(lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?),
             shape: dims,
         }),
         xla::ElementType::S32 => Ok(Tensor::I32 {
-            data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?,
+            data: Arc::new(lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?),
             shape: dims,
         }),
         // predicates / other ints: fetch via conversion
@@ -126,7 +173,7 @@ pub(super) fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
                 .convert(xla::PrimitiveType::F32)
                 .map_err(|e| anyhow!("convert {other:?}: {e}"))?;
             Ok(Tensor::F32 {
-                data: conv.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+                data: Arc::new(conv.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?),
                 shape: dims,
             })
         }
@@ -145,5 +192,41 @@ mod tests {
         assert!(t.as_i32().is_err());
         let i = Tensor::i32(vec![3], vec![1]);
         assert_eq!(i.scalar().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn clone_shares_storage() {
+        let t = Tensor::f32(vec![0.5; 1024], vec![1024]);
+        let c = t.clone();
+        assert!(t.ptr_eq(&c), "clone must be an Arc bump, not a copy");
+        assert_eq!(t.data_ptr(), c.data_ptr());
+        let i = Tensor::i32(vec![1, 2], vec![2]);
+        assert!(!t.ptr_eq(&i));
+    }
+
+    #[test]
+    fn cow_mutation_in_place_when_unique() {
+        let mut t = Tensor::f32(vec![1.0; 64], vec![64]);
+        let before = t.data_ptr();
+        t.as_f32_mut().unwrap()[0] = 9.0;
+        assert_eq!(t.data_ptr(), before, "sole owner must mutate in place");
+    }
+
+    #[test]
+    fn cow_mutation_copies_when_shared() {
+        let mut t = Tensor::f32(vec![1.0; 64], vec![64]);
+        let snapshot = t.clone();
+        t.as_f32_mut().unwrap()[0] = 9.0;
+        assert!(!t.ptr_eq(&snapshot), "shared buffer must copy on write");
+        assert_eq!(snapshot.as_f32().unwrap()[0], 1.0, "snapshot unchanged");
+        assert_eq!(t.as_f32().unwrap()[0], 9.0);
+    }
+
+    #[test]
+    fn into_f32_moves_when_unique() {
+        let t = Tensor::f32(vec![3.0; 8], vec![8]);
+        let ptr = t.data_ptr();
+        let v = t.into_f32().unwrap();
+        assert_eq!(v.as_ptr() as usize, ptr, "unique owner must move, not copy");
     }
 }

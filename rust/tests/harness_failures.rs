@@ -1,0 +1,122 @@
+//! Integration: shared-harness failure semantics, identical across all
+//! three topologies (paper §4 hard-failure handling) — a rank returning
+//! `Err` mid-step poisons the mesh, peers unblock instead of hanging, and
+//! `train()` surfaces the *root-cause* error (never a peer's panic) —
+//! plus the zero-copy contract of the `Arc`-backed parameter tensor.
+
+use optimus::comm::Topology;
+use optimus::coordinator::{self, TrainOptions};
+use optimus::ft::{classify, FailureKind, HardKillHook};
+use optimus::runtime::{Engine, Tensor};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::sync::OnceLock;
+
+fn data_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir()
+            .join(format!("optimus-hf-data-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = optimus::data::corpus::data_files(42, 3, 16);
+        optimus::data::preprocess::preprocess(&files, 64, 7, &dir, 256).unwrap();
+        dir
+    })
+    .clone()
+}
+
+/// Kill rank 1 at step 2 and check the harness's failure contract.
+fn assert_root_cause_surfaces(topo: Topology, label: &str) {
+    let Some(m) = optimus::manifest_or_skip(&format!("harness_failures::{label}")) else {
+        return;
+    };
+    let mut o = TrainOptions::new("mula-tiny", topo, data_dir());
+    o.run.steps = 6;
+    o.run.warmup_steps = 2;
+    o.engine_pool = 2;
+    o.hook = Arc::new(HardKillHook::once(1, 2));
+    let t0 = std::time::Instant::now();
+    let err = coordinator::train(&m, &o).unwrap_err();
+    let msg = format!("{err:#}");
+    // root cause, not a peer panic
+    assert!(msg.contains("rank 1"), "{label}: wrong rank in `{msg}`");
+    assert!(
+        msg.contains("injected hard failure"),
+        "{label}: not the root cause: `{msg}`"
+    );
+    assert!(!msg.contains("panicked"), "{label}: peer panic surfaced: `{msg}`");
+    assert_eq!(classify(&err), FailureKind::Hard, "{label}: {msg}");
+    // peers unblocked: join returned promptly rather than hanging on a
+    // collective / p2p recv that will never complete
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(60),
+        "{label}: peers took {:?} to unblock",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn dp_failure_poisons_mesh_and_surfaces_root_cause() {
+    assert_root_cause_surfaces(Topology::dp_only(2), "dp");
+}
+
+#[test]
+fn ep_failure_poisons_mesh_and_surfaces_root_cause() {
+    assert_root_cause_surfaces(Topology { dp: 1, ep: 2, pp: 1 }, "ep");
+}
+
+#[test]
+fn pp_failure_poisons_mesh_and_surfaces_root_cause() {
+    assert_root_cause_surfaces(Topology { dp: 1, ep: 1, pp: 2 }, "pp");
+}
+
+#[test]
+fn resubmitted_params_tensor_is_never_copied() {
+    let Some(m) = optimus::manifest_or_skip("harness_failures::zero_copy_exec") else {
+        return;
+    };
+    let mm = m.config("mula-tiny").unwrap();
+    let engine = Engine::new().unwrap();
+    let params = Tensor::f32(
+        coordinator::init_global_params(mm, 7),
+        vec![mm.param_count],
+    );
+    let ptr = params.data_ptr();
+    let toks = Tensor::i32(
+        vec![1; mm.hyper.batch * (mm.hyper.seq + 1)],
+        vec![mm.hyper.batch, mm.hyper.seq + 1],
+    );
+    let art = mm.artifact_path("eval_step").unwrap();
+    for _ in 0..3 {
+        let submitted = params.clone();
+        assert!(
+            submitted.ptr_eq(&params),
+            "submitting to exec must be an Arc bump, not a data copy"
+        );
+        engine
+            .exec("zc:eval", art.clone(), vec![submitted, toks.clone()])
+            .unwrap();
+    }
+    assert_eq!(params.data_ptr(), ptr, "re-submission must not reallocate");
+    // the engine dropped its handles when exec returned, so the optimizer's
+    // copy-on-write mutation path stays in place — the zero-copy steady state
+    let mut params = params;
+    params.as_f32_mut().unwrap()[0] += 1.0;
+    assert_eq!(params.data_ptr(), ptr, "sole-owner mutation must not copy");
+}
+
+#[test]
+fn training_report_params_share_storage_with_eval_submissions() {
+    let Some(m) = optimus::manifest_or_skip("harness_failures::report_params_zero_copy")
+    else {
+        return;
+    };
+    let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir());
+    o.run.steps = 3;
+    o.run.warmup_steps = 1;
+    o.engine_pool = 2;
+    let r = coordinator::train(&m, &o).unwrap();
+    // the report's final params flow into eval without a copy
+    let handed_to_eval = r.final_params.clone();
+    assert!(handed_to_eval.ptr_eq(&r.final_params));
+}
