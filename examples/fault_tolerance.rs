@@ -5,9 +5,8 @@
 //! Run: `cargo run --release --example fault_tolerance`
 
 use optimus::ckpt::DualCheckpointer;
-use optimus::comm::Topology;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, StepHook, TrainOptions};
+use optimus::coordinator::{self, JobSpec, StepHook};
 use optimus::data::{corpus, preprocess};
 use optimus::ft::{CkptHook, HardKillHook, Launcher, NanInjectHook};
 use std::sync::Arc;
@@ -35,19 +34,28 @@ fn main() -> optimus::Result<()> {
 
     let report = launcher.run(|attempt, nodes| {
         println!("\n=== attempt {attempt} on nodes {nodes:?} ===");
+        let mut spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(2, 1, 1)
+            .steps(12)
+            .warmup_steps(2)
+            .build()?;
         let dual = DualCheckpointer::new(&ckroot);
         if let Some(c) = dual.load_latest() {
+            // resharding guard: the recorded plan must match ours
+            c.ensure_plan(&spec.fingerprint())?;
             println!("resuming from checkpoint at step {}", c.step);
         }
-        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir.clone());
-        o.run.steps = 12;
-        o.run.warmup_steps = 2;
-        o.hook = Arc::new(Chain(vec![
+        spec.hook = Arc::new(Chain(vec![
             hard.clone(),
             soft.clone(),
-            Arc::new(CkptHook { every: 3, dual: DualCheckpointer::new(&ckroot) }),
+            Arc::new(CkptHook {
+                every: 3,
+                dual: DualCheckpointer::new(&ckroot),
+                plan: Some(spec.fingerprint()),
+            }),
         ]));
-        coordinator::train(&manifest, &o)
+        coordinator::train(&manifest, &spec)
     })?;
 
     println!(

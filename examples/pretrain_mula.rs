@@ -11,9 +11,8 @@
 //!      [--steps 300] [--dp 2] [--out runs/pretrain]`
 //! Smaller/faster: `--model mula-mini --steps 200`.
 
-use optimus::comm::Topology;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::runtime::Engine;
@@ -48,15 +47,18 @@ fn main() -> optimus::Result<()> {
         println!("corpus: {} tokens, {} instances", st.total_tokens, st.n_instances);
     }
 
-    let mut opts = TrainOptions::new(&model, Topology::dp_only(dp), data_dir);
-    opts.run.steps = steps;
-    opts.run.warmup_steps = (steps / 10).max(5);
-    opts.run.peak_lr = 4e-4 * 2.0; // tiny-scale analog of the paper's 4e-4
-    opts.run.min_lr = 4e-5;
-    opts.engine_pool = dp.min(4);
+    let spec = JobSpec::new(&model)
+        .data_dir(data_dir)
+        .topology(dp, 1, 1)
+        .steps(steps)
+        .warmup_steps((steps / 10).max(5))
+        .peak_lr(4e-4 * 2.0) // tiny-scale analog of the paper's 4e-4
+        .min_lr(4e-5)
+        .engine_pool(dp.min(4))
+        .build()?;
 
     let t0 = std::time::Instant::now();
-    let report = coordinator::train(&manifest, &opts)?;
+    let report = coordinator::train(&manifest, &spec)?;
     let wall = t0.elapsed();
 
     println!("\nstep  loss");

@@ -5,9 +5,8 @@
 //! Run: `cargo run --release --example quickstart`
 //! (requires `make artifacts` first)
 
-use optimus::comm::Topology;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::data::{corpus, preprocess};
 
 fn main() -> optimus::Result<()> {
@@ -24,12 +23,15 @@ fn main() -> optimus::Result<()> {
 
     // 2. train: DP=2, sharded AdamW, paper §2.1 recipe scaled down
     let manifest = Manifest::load(&optimus::artifacts_dir())?;
-    let mut opts = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir);
-    opts.run.steps = 30;
-    opts.run.warmup_steps = 4;
-    opts.run.peak_lr = 2e-3;
-    opts.run.min_lr = 2e-4;
-    let report = coordinator::train(&manifest, &opts)?;
+    let spec = JobSpec::new("mula-tiny")
+        .data_dir(data_dir)
+        .topology(2, 1, 1)
+        .steps(30)
+        .warmup_steps(4)
+        .peak_lr(2e-3)
+        .min_lr(2e-4)
+        .build()?;
+    let report = coordinator::train(&manifest, &spec)?;
 
     // 3. results
     println!("\nstep  loss    grad_norm");

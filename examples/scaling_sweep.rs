@@ -6,10 +6,9 @@
 //! Run: `cargo run --release --example scaling_sweep`
 
 use optimus::cluster::{scaling_efficiency, Aurora};
-use optimus::comm::Topology;
 use optimus::config::models::MULA_220B;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::data::{corpus, preprocess};
 use optimus::util::bench::Report;
 
@@ -26,11 +25,14 @@ fn main() -> optimus::Result<()> {
         &["dp_ranks", "global_batch_tokens", "loss@20"],
     );
     for dp in [1usize, 2, 4] {
-        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(dp), data_dir.clone());
-        o.run.steps = 20;
-        o.run.warmup_steps = 4;
-        o.run.peak_lr = 2e-3;
-        let r = coordinator::train(&manifest, &o)?;
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(dp, 1, 1)
+            .steps(20)
+            .warmup_steps(4)
+            .peak_lr(2e-3)
+            .build()?;
+        let r = coordinator::train(&manifest, &spec)?;
         fig4a.row(&[
             dp.to_string(),
             r.tokens_per_step.to_string(),

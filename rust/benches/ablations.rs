@@ -5,10 +5,9 @@
 //! 4. dual vs single checkpointing overhead
 
 use optimus::ckpt::{Checkpoint, DualCheckpointer};
-use optimus::comm::Topology;
 use optimus::config::Manifest;
 use optimus::coordinator::pipeline::Schedule;
-use optimus::coordinator::{self, ep::EpComm, TrainOptions};
+use optimus::coordinator::{self, ep::EpComm, JobSpec};
 use optimus::data::{corpus, preprocess};
 use optimus::util::bench::{bench, fmt_dur, Report};
 
@@ -25,11 +24,13 @@ fn main() -> optimus::Result<()> {
         &["policy", "loss@last", "step secs", "comm secs"],
     );
     for (policy, name) in [(EpComm::Allgather, "allgather"), (EpComm::All2All, "all2all")] {
-        let mut o = TrainOptions::new(
-            "mula-tiny", Topology { dp: 1, ep: 2, pp: 1 }, data_dir.clone());
-        o.run.steps = 6;
-        o.ep_comm = policy;
-        let r = coordinator::train(&m, &o)?;
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(1, 2, 1)
+            .steps(6)
+            .ep_comm(policy)
+            .build()?;
+        let r = coordinator::train(&m, &spec)?;
         t1.row(&[
             name.into(),
             format!("{:.4}", r.loss.last().unwrap()),
@@ -46,12 +47,14 @@ fn main() -> optimus::Result<()> {
         &["schedule", "loss@last", "step secs", "peak stashed acts (stage0)"],
     );
     for sched in [Schedule::GPipe, Schedule::OneFOneB] {
-        let mut o = TrainOptions::new(
-            "mula-tiny", Topology { dp: 1, ep: 1, pp: 2 }, data_dir.clone());
-        o.run.steps = 6;
-        o.micro_batches = 4;
-        o.schedule = sched;
-        let r = coordinator::train(&m, &o)?;
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(1, 1, 2)
+            .steps(6)
+            .micro_batches(4)
+            .schedule(sched)
+            .build()?;
+        let r = coordinator::train(&m, &spec)?;
         t2.row(&[
             sched.name().into(),
             format!("{:.4}", r.loss.last().unwrap()),
@@ -68,10 +71,13 @@ fn main() -> optimus::Result<()> {
         &["dtype", "loss@last"],
     );
     for (bf16, name) in [(true, "bf16 (paper)"), (false, "f32")] {
-        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir.clone());
-        o.run.steps = 8;
-        o.run.bf16_grad_reduce = bf16;
-        let r = coordinator::train(&m, &o)?;
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(2, 1, 1)
+            .steps(8)
+            .bf16_grad_reduce(bf16)
+            .build()?;
+        let r = coordinator::train(&m, &spec)?;
         t3.row(&[name.into(), format!("{:.4}", r.loss.last().unwrap())]);
     }
     t3.print();
@@ -83,7 +89,7 @@ fn main() -> optimus::Result<()> {
     let root = std::env::temp_dir().join("optimus-ablate-ckpt");
     let _ = std::fs::remove_dir_all(&root);
     let dual = DualCheckpointer::new(&root);
-    let ck = Checkpoint { step: 1, params, moments };
+    let ck = Checkpoint { step: 1, params, moments, plan: None };
     let s_dual = bench(1, 5, || {
         dual.save(&ck).unwrap();
     });

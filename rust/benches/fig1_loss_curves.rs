@@ -4,22 +4,24 @@
 //! budget. Paper shape to match: MoE below dense at equal steps; larger
 //! models lower.
 
-use optimus::comm::Topology;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::data::{corpus, preprocess};
 use optimus::util::bench::Report;
 
 fn run(m: &Manifest, model: &str, steps: usize, data: &std::path::Path)
     -> optimus::Result<optimus::coordinator::TrainReport>
 {
-    let mut o = TrainOptions::new(model, Topology::dp_only(2), data.to_path_buf());
-    o.run.steps = steps;
-    o.run.warmup_steps = steps / 8;
-    o.run.peak_lr = 1.5e-3;
-    o.run.min_lr = 1.5e-4;
-    o.engine_pool = 2;
-    coordinator::train(m, &o)
+    let spec = JobSpec::new(model)
+        .data_dir(data.to_path_buf())
+        .topology(2, 1, 1)
+        .steps(steps)
+        .warmup_steps(steps / 8)
+        .peak_lr(1.5e-3)
+        .min_lr(1.5e-4)
+        .engine_pool(2)
+        .build()?;
+    coordinator::train(m, &spec)
 }
 
 fn main() -> optimus::Result<()> {

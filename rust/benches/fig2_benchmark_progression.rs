@@ -3,9 +3,8 @@
 //! Shape to match: scores improve with tokens; MoE >= dense late in
 //! training at iso-compute.
 
-use optimus::comm::Topology;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, StepHook, TrainOptions};
+use optimus::coordinator::{self, JobSpec, StepHook};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::runtime::Engine;
@@ -43,12 +42,15 @@ fn main() -> optimus::Result<()> {
     let mut curves = Vec::new();
     for model in ["mula-tiny-dense", "mula-tiny"] {
         let snaps = Arc::new(SnapHook { every, snaps: Mutex::new(Vec::new()) });
-        let mut o = TrainOptions::new(model, Topology::dp_only(2), data_dir.clone());
-        o.run.steps = steps;
-        o.run.warmup_steps = 5;
-        o.run.peak_lr = 3e-3;
-        o.hook = snaps.clone();
-        coordinator::train(&m, &o)?;
+        let spec = JobSpec::new(model)
+            .data_dir(data_dir.clone())
+            .topology(2, 1, 1)
+            .steps(steps)
+            .warmup_steps(5)
+            .peak_lr(3e-3)
+            .hook(snaps.clone())
+            .build()?;
+        coordinator::train(&m, &spec)?;
         let mm = m.config(model)?;
         let mut pts = Vec::new();
         for (s, params) in snaps.snaps.lock().unwrap().iter() {

@@ -5,9 +5,8 @@
 //! reproduced is *tracking*, i.e. same-architecture runs on the same data
 //! follow the same score trajectory).
 
-use optimus::comm::Topology;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, StepHook, TrainOptions};
+use optimus::coordinator::{self, JobSpec, StepHook};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::runtime::Engine;
@@ -39,13 +38,16 @@ fn main() -> optimus::Result<()> {
     let mut traj = Vec::new();
     for seed in [1234u64, 777] {
         let snaps = Arc::new(SnapHook { every: 8, snaps: Mutex::new(Vec::new()) });
-        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir.clone());
-        o.run.steps = 24;
-        o.run.warmup_steps = 5;
-        o.run.peak_lr = 3e-3;
-        o.run.seed = seed;
-        o.hook = snaps.clone();
-        coordinator::train(&m, &o)?;
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(2, 1, 1)
+            .steps(24)
+            .warmup_steps(5)
+            .peak_lr(3e-3)
+            .seed(seed)
+            .hook(snaps.clone())
+            .build()?;
+        coordinator::train(&m, &spec)?;
         let mut pts = Vec::new();
         for (s, params) in snaps.snaps.lock().unwrap().iter() {
             let pt = optimus::runtime::Tensor::f32(params.clone(), vec![mm.param_count]);

@@ -3,10 +3,9 @@
 //! from 384 to 12288 tiles, with and without Forced Uniform Routing.
 
 use optimus::cluster::{scaling_efficiency, step_time, Aurora, ParallelPlan};
-use optimus::comm::Topology;
 use optimus::config::models::MULA_220B;
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::coordinator::pipeline::Schedule;
 use optimus::data::{corpus, preprocess};
 use optimus::util::bench::Report;
@@ -23,12 +22,15 @@ fn main() -> optimus::Result<()> {
         &["dp", "tokens/step", "loss@18-20"],
     );
     for dp in [1usize, 2, 4] {
-        let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(dp), data_dir.clone());
-        o.run.steps = 12;
-        o.run.warmup_steps = 4;
-        o.run.peak_lr = 2e-3;
-        o.engine_pool = dp.min(4);
-        let r = coordinator::train(&m, &o)?;
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(dp, 1, 1)
+            .steps(12)
+            .warmup_steps(4)
+            .peak_lr(2e-3)
+            .engine_pool(dp.min(4))
+            .build()?;
+        let r = coordinator::train(&m, &spec)?;
         a.row(&[
             dp.to_string(),
             r.tokens_per_step.to_string(),

@@ -3,9 +3,9 @@
 //! §1); the claim reproduced is the *ordering*: at iso-compute the MoE
 //! model matches or beats the dense one on the suite average.
 
-use optimus::comm::Topology;
+
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::runtime::Engine;
@@ -22,12 +22,15 @@ fn main() -> optimus::Result<()> {
 
     let mut results = Vec::new();
     for model in ["mula-tiny-dense", "mula-tiny"] {
-        let mut o = TrainOptions::new(model, Topology::dp_only(2), data_dir.clone());
-        o.run.steps = steps;
-        o.run.warmup_steps = 6;
-        o.run.peak_lr = 3e-3;
-        o.run.min_lr = 3e-4;
-        let r = coordinator::train(&m, &o)?;
+        let spec = JobSpec::new(model)
+            .data_dir(data_dir.clone())
+            .topology(2, 1, 1)
+            .steps(steps)
+            .warmup_steps(6)
+            .peak_lr(3e-3)
+            .min_lr(3e-4)
+            .build()?;
+        let r = coordinator::train(&m, &spec)?;
         let mm = m.config(model)?;
         results.push((model, eval::run_suite(&engine, mm, &r.final_params, 24)?));
     }

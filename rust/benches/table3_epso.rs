@@ -4,10 +4,9 @@
 //! reproduces the paper's 1.36 / 1.23 / 1.07 almost exactly.
 
 use optimus::cluster::epso_optimizer_speedup;
-use optimus::comm::Topology;
 use optimus::config::models::{MULA_100B, MULA_20B, MULA_220B};
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::data::{corpus, preprocess};
 use optimus::optim::ShardingMode;
 use optimus::util::bench::Report;
@@ -24,14 +23,13 @@ fn main() -> optimus::Result<()> {
         &["mode", "opt state bytes/rank", "optimizer secs", "speedup"],
     );
     let mut run = |mode: ShardingMode| -> optimus::Result<(usize, f64)> {
-        let mut o = TrainOptions::new(
-            "mula-tiny",
-            Topology { dp: 2, ep: 2, pp: 1 },
-            data_dir.clone(),
-        );
-        o.run.steps = 8;
-        o.mode = mode;
-        let r = coordinator::train(&m, &o)?;
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data_dir.clone())
+            .topology(2, 2, 1)
+            .steps(8)
+            .sharding(mode)
+            .build()?;
+        let r = coordinator::train(&m, &spec)?;
         Ok((r.opt_state_bytes, r.optimizer_update_secs))
     };
     let (so_bytes, so_secs) = run(ShardingMode::So)?;

@@ -44,6 +44,10 @@ pub struct Checkpoint {
     /// optimizer moments (empty for model-only checkpoints; the paper
     /// restarts such checkpoints with fresh optimizer state)
     pub moments: Vec<f32>,
+    /// serialized parallelism-plan fingerprint (see
+    /// [`crate::coordinator::JobSpec::fingerprint`]); `None` for legacy
+    /// checkpoints written before plans were recorded
+    pub plan: Option<String>,
 }
 
 impl Checkpoint {
@@ -51,7 +55,37 @@ impl Checkpoint {
     /// [`crate::coordinator::TrainReport::final_params`]). The single copy
     /// here is the serialization boundary — nothing upstream cloned.
     pub fn model_only(step: usize, params: &crate::runtime::Tensor) -> Result<Checkpoint> {
-        Ok(Checkpoint { step, params: params.to_f32_vec()?, moments: Vec::new() })
+        Ok(Checkpoint { step, params: params.to_f32_vec()?, moments: Vec::new(), plan: None })
+    }
+
+    /// Record the plan fingerprint this checkpoint was trained under.
+    pub fn with_plan(mut self, fingerprint: &str) -> Checkpoint {
+        self.plan = Some(fingerprint.to_string());
+        self
+    }
+
+    /// Resume-compatibility gate: a checkpoint that recorded a plan must
+    /// match the plan resuming it on every *state-relevant* field —
+    /// model, dp×ep×pp topology and sharding mode (the first three
+    /// segments of the fingerprint). Execution knobs that don't shape
+    /// checkpoint state (schedule, microbatch count, exchange policy) may
+    /// differ freely. Resharding is out of scope — a mismatch is a clear
+    /// error, never silent corruption. Legacy checkpoints (no recorded
+    /// plan) pass.
+    pub fn ensure_plan(&self, expected: &str) -> Result<()> {
+        let state_key = |fp: &str| -> Vec<String> {
+            // fingerprint shape: model/dpX-epY-ppZ/mode/schedule/mbN/comm
+            fp.split('/').take(3).map(str::to_string).collect()
+        };
+        match &self.plan {
+            Some(p) if state_key(p) != state_key(expected) => Err(anyhow!(
+                "checkpoint parallelism plan mismatch: saved under `{p}`, \
+                 resuming with `{expected}` — resharding is not supported; \
+                 resume with the matching model/topology/sharding or \
+                 restart from a model-only checkpoint"
+            )),
+            _ => Ok(()),
+        }
     }
 
     pub fn is_model_only(&self) -> bool {
@@ -68,6 +102,9 @@ impl Checkpoint {
         meta.insert("step".to_string(), Json::Num(self.step as f64));
         meta.insert("params_len".to_string(), Json::Num(self.params.len() as f64));
         meta.insert("moments_len".to_string(), Json::Num(self.moments.len() as f64));
+        if let Some(plan) = &self.plan {
+            meta.insert("plan".to_string(), Json::Str(plan.clone()));
+        }
         meta.insert(
             "checksum".to_string(),
             Json::Str(format!("{:016x}", checksum(&pbytes) ^ checksum(&mbytes))),
@@ -93,6 +130,10 @@ impl Checkpoint {
             step: meta.req("step").as_usize().unwrap(),
             params: bytes_to_f32s(&pbytes),
             moments: bytes_to_f32s(&mbytes),
+            plan: meta
+                .get("plan")
+                .and_then(|p| p.as_str())
+                .map(|s| s.to_string()),
         })
     }
 }
@@ -167,7 +208,8 @@ impl PersistentCheckpointer {
 
     pub fn save(&self, step: usize, params: &[f32]) -> Result<PathBuf> {
         let dir = self.root.join(format!("model-{step:08}"));
-        Checkpoint { step, params: params.to_vec(), moments: Vec::new() }.write(&dir)?;
+        Checkpoint { step, params: params.to_vec(), moments: Vec::new(), plan: None }
+            .write(&dir)?;
         Ok(dir)
     }
 
@@ -245,7 +287,33 @@ mod tests {
             step,
             params: (0..64).map(|i| i as f32 + step as f32).collect(),
             moments: vec![0.5; 128],
+            plan: None,
         }
+    }
+
+    #[test]
+    fn plan_fingerprint_roundtrips_and_gates_resume() {
+        let d = tmp("plan");
+        let fp = "mula-tiny/dp1-ep2-pp2/epso/1f1b/mb2/allgather";
+        ck(5).with_plan(fp).write(&d).unwrap();
+        let c = Checkpoint::read(&d).unwrap();
+        assert_eq!(c.plan.as_deref(), Some(fp));
+        // matching plan resumes
+        c.ensure_plan(fp).unwrap();
+        // execution knobs that don't shape checkpoint state may change
+        c.ensure_plan("mula-tiny/dp1-ep2-pp2/epso/gpipe/mb4/all2all")
+            .unwrap();
+        // topology changes are a clear error, not corruption
+        let e = c
+            .ensure_plan("mula-tiny/dp2-ep1-pp1/so/1f1b/mb2/allgather")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("parallelism plan mismatch"), "{e}");
+        assert!(e.contains(fp), "{e}");
+        // legacy checkpoints without a recorded plan always pass
+        let legacy = ck(5);
+        legacy.ensure_plan(fp).unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
     }
 
     #[test]

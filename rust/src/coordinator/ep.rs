@@ -16,6 +16,17 @@ pub enum EpComm {
     All2All,
 }
 
+impl EpComm {
+    /// Parse a CLI policy name.
+    pub fn parse(s: &str) -> Option<EpComm> {
+        match s {
+            "allgather" => Some(EpComm::Allgather),
+            "all2all" => Some(EpComm::All2All),
+            _ => None,
+        }
+    }
+}
+
 /// Forced Uniform Routing (paper §2.3): replace routed expert ids with a
 /// fixed round-robin pattern so every expert receives the same number of
 /// tokens in the same pattern — used to decouple scaling measurements from

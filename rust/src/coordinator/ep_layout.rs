@@ -5,10 +5,15 @@
 //! params and only its `NR = N/EP` expert slice, packed as
 //! `[NE block || E block]`:
 //!
-//! NE block: embed | per-layer [wq wk wv wo norm1 norm2 router] | final_norm | head
+//! NE block: [embed] | per-layer [wq wk wv wo norm1 norm2 router] | [final_norm | head]
 //! E block:  per-layer [gate_local up_local down_local]
 //!
 //! These orders make every artifact input a contiguous local slice.
+//!
+//! [`EpLayout::for_stage`] restricts the layout to a pipeline stage's
+//! layer range (embedding only on the first stage, final-norm/head only on
+//! the last) — the parameter geometry of the hybrid PP×EP engine. The
+//! whole-model layout of the EP engine is the single-stage special case.
 
 use crate::config::ModelManifest;
 use std::ops::Range;
@@ -18,22 +23,40 @@ pub struct EpLayout {
     pub ep: usize,
     pub ep_rank: usize,
     pub n_local_experts: usize,
+    /// global decoder layers covered by this layout
+    pub layers: Range<usize>,
     pub ne_len: usize,
     pub e_len: usize,
-    /// local range of the embedding table
+    /// local range of the embedding table (empty unless the layout holds it)
     pub emb: Range<usize>,
-    /// local range of each layer's non-expert params
+    /// local range of each covered layer's non-expert params
     pub layer_ne: Vec<Range<usize>>,
-    /// local range of [final_norm || head]
+    /// local range of [final_norm || head] (empty unless held)
     pub head: Range<usize>,
-    /// local range of each layer's local expert params [gate|up|down]
+    /// local range of each covered layer's local expert params [gate|up|down]
     pub layer_e: Vec<Range<usize>>,
     /// copy plan: (global_offset, local_offset, len)
     copies: Vec<(usize, usize, usize)>,
 }
 
 impl EpLayout {
+    /// Whole-model layout (the EP engine's view: one stage owning
+    /// everything).
     pub fn new(mm: &ModelManifest, ep: usize, ep_rank: usize) -> EpLayout {
+        EpLayout::for_stage(mm, ep, ep_rank, 0..mm.hyper.n_layers, true, true)
+    }
+
+    /// Layout restricted to a pipeline stage: `layers` is the stage's
+    /// global layer range; `has_embed`/`has_head` mark the boundary
+    /// stages.
+    pub fn for_stage(
+        mm: &ModelManifest,
+        ep: usize,
+        ep_rank: usize,
+        layers: Range<usize>,
+        has_embed: bool,
+        has_head: bool,
+    ) -> EpLayout {
         let h = &mm.hyper;
         assert!(h.n_experts % ep == 0, "EP must divide expert count");
         let nr = h.n_experts / ep;
@@ -56,13 +79,15 @@ impl EpLayout {
         };
 
         // --- NE block ---
-        let emb_spec = by_name("embed");
         let emb_start = local;
-        push(&mut copies, &mut local, emb_spec.offset, emb_spec.numel);
+        if has_embed {
+            let emb_spec = by_name("embed");
+            push(&mut copies, &mut local, emb_spec.offset, emb_spec.numel);
+        }
         let emb = emb_start..local;
 
-        let mut layer_ne = Vec::with_capacity(h.n_layers);
-        for l in 0..h.n_layers {
+        let mut layer_ne = Vec::with_capacity(layers.len());
+        for l in layers.clone() {
             let start = local;
             for part in ["wq", "wk", "wv", "wo", "norm1", "norm2", "router"] {
                 let s = by_name(&format!("layer{l}.{part}"));
@@ -72,16 +97,18 @@ impl EpLayout {
         }
 
         let head_start = local;
-        for name in ["final_norm", "head"] {
-            let s = by_name(name);
-            push(&mut copies, &mut local, s.offset, s.numel);
+        if has_head {
+            for name in ["final_norm", "head"] {
+                let s = by_name(name);
+                push(&mut copies, &mut local, s.offset, s.numel);
+            }
         }
         let head = head_start..local;
         let ne_len = local;
 
-        // --- E block: local slice of each expert tensor ---
-        let mut layer_e = Vec::with_capacity(h.n_layers);
-        for l in 0..h.n_layers {
+        // --- E block: local slice of each covered expert tensor ---
+        let mut layer_e = Vec::with_capacity(layers.len());
+        for l in layers.clone() {
             let start = local;
             for part in ["gate", "up", "down"] {
                 let s = by_name(&format!("layer{l}.{part}"));
@@ -97,6 +124,7 @@ impl EpLayout {
             ep,
             ep_rank,
             n_local_experts: nr,
+            layers,
             ne_len,
             e_len,
             emb,
@@ -158,6 +186,49 @@ mod tests {
         assert_eq!(a[..l0.ne_len], b[..l1.ne_len]);
         // expert blocks disjoint
         assert_ne!(a[l0.ne_len..], b[l1.ne_len..]);
+    }
+
+    #[test]
+    fn stage_layouts_partition_params() {
+        let Some(m) = crate::manifest_or_skip("ep_layout::stage_layouts_partition_params")
+        else {
+            return;
+        };
+        let mm = m.config("mula-tiny").unwrap();
+        let n_layers = mm.hyper.n_layers;
+        assert!(n_layers % 2 == 0, "test assumes an even layer count");
+        let (ep, pp) = (2usize, 2usize);
+        let lps = n_layers / pp;
+        let global: Vec<f32> = (0..mm.param_count).map(|i| i as f32).collect();
+        // every (stage, ep_rank) extracts its slice; scattering all of
+        // them back must rebuild the full vector exactly once
+        let mut rebuilt = vec![-1.0f32; mm.param_count];
+        for stage in 0..pp {
+            for r in 0..ep {
+                let lay = EpLayout::for_stage(
+                    mm,
+                    ep,
+                    r,
+                    stage * lps..(stage + 1) * lps,
+                    stage == 0,
+                    stage == pp - 1,
+                );
+                assert_eq!(lay.layer_ne.len(), lps);
+                assert_eq!(lay.layer_e.len(), lps);
+                assert_eq!(lay.emb.is_empty(), stage != 0);
+                assert_eq!(lay.head.is_empty(), stage != pp - 1);
+                let local = lay.extract(&global);
+                lay.scatter(&local, &mut rebuilt);
+            }
+        }
+        assert_eq!(rebuilt, global, "stage slices must cover every param");
+        // the two stages of one ep rank add up to the whole-model layout
+        let whole = EpLayout::new(mm, ep, 0);
+        let s0 = EpLayout::for_stage(mm, ep, 0, 0..lps, true, false);
+        let s1 = EpLayout::for_stage(mm, ep, 0, lps..n_layers, false, true);
+        assert_eq!(s0.local_len() + s1.local_len(), whole.local_len());
+        assert_eq!(s0.ne_len + s1.ne_len, whole.ne_len);
+        assert_eq!(s0.e_len + s1.e_len, whole.e_len);
     }
 
     #[test]

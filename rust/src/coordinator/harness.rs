@@ -24,7 +24,8 @@
 //! per-layer Stage-1 exchange loop (EP), or the microbatch pipeline
 //! schedule (PP). See DESIGN.md §4 for the trait contract.
 
-use super::{init_global_params, StepHook as _, TrainOptions, TrainReport};
+use super::plan::ParallelismPlan;
+use super::{init_global_params, JobSpec, StepHook as _, TrainReport};
 use crate::comm::{Group, Mesh, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::{BatchPlan, Dataset};
@@ -41,8 +42,10 @@ pub struct RankCtx {
     pub ds: Arc<Dataset>,
     pub engine: Engine,
     pub mesh: Arc<Mesh>,
-    pub opts: TrainOptions,
-    pub plan: BatchPlan,
+    pub spec: JobSpec,
+    /// the validated + materialized placement this run executes
+    pub plan: Arc<ParallelismPlan>,
+    pub batches: BatchPlan,
 }
 
 impl RankCtx {
@@ -58,7 +61,7 @@ impl RankCtx {
         let (b, s) = (self.mm.hyper.batch, self.mm.hyper.seq);
         let _t = Scoped::new(&mut breakdown.data_secs);
         Tensor::i32(
-            self.ds.batch_i32(self.plan.start(step, data_rank, mb), b, s),
+            self.ds.batch_i32(self.batches.start(step, data_rank, mb), b, s),
             vec![b, s + 1],
         )
     }
@@ -127,7 +130,10 @@ pub enum RankFinish {
 ///   optimizer's own `update_secs`/`comm_secs` in at finish;
 /// * a rank that fails returns `Err` (never panics): the harness poisons
 ///   the mesh + shared fabric so peers unblock, and `train()` surfaces
-///   the root-cause error, not a peer's panic.
+///   the root-cause error, not a peer's panic;
+/// * configuration validation does NOT live here — the single preflight
+///   gate is [`ParallelismPlan::validate`], which `coordinator::train`
+///   runs before anything spawns.
 pub trait RankTrainer: Sized {
     /// Thread-name prefix ("dp" → `dp-rank-3`).
     const LABEL: &'static str;
@@ -135,15 +141,10 @@ pub trait RankTrainer: Sized {
     /// Cross-rank fabric built once before spawning (e.g. PP's [`crate::comm::P2p`]).
     type Shared: Send + Sync + 'static;
 
-    /// Validate artifacts/options before any thread spawns.
-    fn preflight(_mm: &ModelManifest, _opts: &TrainOptions) -> Result<()> {
-        Ok(())
-    }
-
     /// Deterministic global batch plan for this topology.
-    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan;
+    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan;
 
-    fn shared(mm: &ModelManifest, opts: &TrainOptions) -> Result<Arc<Self::Shared>>;
+    fn shared(mm: &ModelManifest, plan: &ParallelismPlan) -> Result<Arc<Self::Shared>>;
 
     /// Unblock peers waiting on the shared fabric after a rank died.
     fn poison_shared(_shared: &Self::Shared) {}
@@ -177,7 +178,7 @@ pub trait RankTrainer: Sized {
     /// scatters non-last stage params into `final_params`).
     fn merge_aux(
         _mm: &ModelManifest,
-        _opts: &TrainOptions,
+        _plan: &ParallelismPlan,
         _report: &mut TrainReport,
         _aux: Vec<AuxParams>,
     ) -> Result<()> {
@@ -217,12 +218,21 @@ pub fn run<T: RankTrainer + 'static>(
     ds: Arc<Dataset>,
     engine: Engine,
     mesh: Arc<Mesh>,
-    opts: &TrainOptions,
+    spec: &JobSpec,
+    plan: &Arc<ParallelismPlan>,
 ) -> Result<TrainReport> {
-    T::preflight(mm, opts)?;
-    let plan = T::plan(mm, opts);
-    let shared = T::shared(mm, opts)?;
-    let world_n = opts.topo.world();
+    let batches = T::batches(mm, plan);
+    let shared = T::shared(mm, plan)?;
+    let world_n = plan.topo.world();
+
+    // one source of placement truth: the spec carried into rank threads
+    // holds the same materialized plan as ctx.plan, regardless of what
+    // the caller's spec.plan contained
+    let spec = {
+        let mut s = spec.clone();
+        s.plan = (**plan).clone();
+        s
+    };
 
     let handles: Vec<_> = (0..world_n)
         .map(|rank| {
@@ -232,8 +242,9 @@ pub fn run<T: RankTrainer + 'static>(
                 ds: Arc::clone(&ds),
                 engine: engine.clone(),
                 mesh: Arc::clone(&mesh),
-                opts: opts.clone(),
-                plan,
+                spec: spec.clone(),
+                plan: Arc::clone(plan),
+                batches,
             };
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
@@ -280,7 +291,7 @@ pub fn run<T: RankTrainer + 'static>(
         return Err(anyhow!("a rank thread panicked without a root-cause error"));
     }
     let mut report = report.ok_or_else(|| anyhow!("no rank produced a report"))?;
-    T::merge_aux(mm, opts, &mut report, aux)?;
+    T::merge_aux(mm, plan, &mut report, aux)?;
     Ok(report)
 }
 
@@ -290,7 +301,7 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
     // --- model broadcasting (paper §4): only rank 0 materializes init ---
     let world = ctx.mesh.world_group();
     let global0 = if rank == 0 {
-        let p = init_global_params(&ctx.mm, ctx.opts.run.seed);
+        let p = init_global_params(&ctx.mm, ctx.spec.run.seed);
         world.broadcast(rank, 0, p.clone());
         p
     } else {
@@ -301,9 +312,9 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
     let mut loss_curve = Curve::new("loss");
     let mut gn_curve = Curve::new("grad_norm");
     let mut breakdown = StepBreakdown::default();
-    let mut step_secs = Vec::with_capacity(ctx.opts.run.steps);
+    let mut step_secs = Vec::with_capacity(ctx.spec.run.steps);
 
-    for step in 0..ctx.opts.run.steps {
+    for step in 0..ctx.spec.run.steps {
         let t_step = std::time::Instant::now();
         let out = trainer.step(&ctx, step, &mut breakdown)?;
         // soft-failure backstop (paper §4): a NaN loss aborts the rank
@@ -311,7 +322,7 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
         if !out.loss.is_finite() {
             return Err(ctx.non_finite(step));
         }
-        ctx.opts
+        ctx.spec
             .hook
             .on_step(rank, step, out.loss, trainer.params_mut()?)?;
         if let Some(dom) = trainer.loss_domain() {
@@ -338,7 +349,7 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
                 grad_norm: gn_curve,
                 breakdown,
                 step_secs,
-                tokens_per_step: ctx.plan.instances_per_step() * ctx.mm.hyper.seq,
+                tokens_per_step: ctx.batches.instances_per_step() * ctx.mm.hyper.seq,
                 final_params: parts.final_params,
                 opt_state_bytes: parts.opt_state_bytes,
                 optimizer_update_secs: parts.optimizer_update_secs,

@@ -1,0 +1,384 @@
+//! The training job specification: a validated, builder-constructed
+//! replacement for the old flat `TrainOptions`.
+//!
+//! ```no_run
+//! use optimus::coordinator::JobSpec;
+//! use optimus::coordinator::pipeline::Schedule;
+//! use optimus::optim::ShardingMode;
+//!
+//! let spec = JobSpec::new("mula-tiny")
+//!     .data_dir("data/shards")
+//!     .topology(4, 2, 2)
+//!     .sharding(ShardingMode::Epso)
+//!     .schedule(Schedule::OneFOneB)
+//!     .micro_batches(4)
+//!     .build()?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! `build()` runs the plan-level subset of the validation table (axis
+//! sanity, micro-batch bounds, explicit-EPSO feasibility, world-size
+//! consistency); `coordinator::train` then runs the full
+//! [`ParallelismPlan::validate`] preflight against the model manifest and
+//! dataset before any rank thread spawns.
+
+use super::ep::EpComm;
+use super::pipeline::Schedule;
+use super::plan::ParallelismPlan;
+use super::{NoHook, StepHook};
+use crate::comm::{ReduceDtype, Topology};
+use crate::config::RunConfig;
+use crate::optim::{AdamParams, ShardingMode};
+use crate::Result;
+use anyhow::anyhow;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A validated training job: model + run recipe + [`ParallelismPlan`].
+/// Constructed through [`JobSpec::new`] (the builder); the fields stay
+/// readable everywhere the old `TrainOptions` fields were.
+#[derive(Clone)]
+pub struct JobSpec {
+    pub model: String,
+    pub plan: ParallelismPlan,
+    pub run: RunConfig,
+    /// forced uniform routing (paper §2.3)
+    pub fur: bool,
+    /// PJRT executor threads
+    pub engine_pool: usize,
+    /// preprocessed shard directory
+    pub data_dir: PathBuf,
+    pub hook: Arc<dyn StepHook>,
+    /// private marker: construction goes through the builder (or the
+    /// deprecated `TrainOptions` shim), never a struct literal
+    _built: (),
+}
+
+impl JobSpec {
+    /// Start building a job for `model`. Finish with
+    /// [`JobSpecBuilder::build`].
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(model: &str) -> JobSpecBuilder {
+        JobSpecBuilder {
+            model: model.to_string(),
+            topo: Topology::dp_only(2),
+            mode: None,
+            run: RunConfig::default(),
+            fur: false,
+            ep_comm: EpComm::Allgather,
+            schedule: Schedule::OneFOneB,
+            micro_batches: 2,
+            engine_pool: 2,
+            data_dir: None,
+            hook: Arc::new(NoHook),
+            expected_world: None,
+        }
+    }
+
+    pub fn topo(&self) -> Topology {
+        self.plan.topo
+    }
+
+    pub fn adam(&self) -> AdamParams {
+        AdamParams {
+            beta1: self.run.beta1 as f32,
+            beta2: self.run.beta2 as f32,
+            eps: self.run.eps as f32,
+            weight_decay: self.run.weight_decay as f32,
+        }
+    }
+
+    pub fn reduce_dtype(&self) -> ReduceDtype {
+        if self.run.bf16_grad_reduce {
+            ReduceDtype::Bf16
+        } else {
+            ReduceDtype::F32
+        }
+    }
+
+    /// Stable identity recorded in checkpoints and compared on resume.
+    pub fn fingerprint(&self) -> String {
+        format!("{}/{}", self.model, self.plan.fingerprint())
+    }
+}
+
+/// Fluent builder for [`JobSpec`].
+pub struct JobSpecBuilder {
+    model: String,
+    topo: Topology,
+    mode: Option<ShardingMode>,
+    run: RunConfig,
+    fur: bool,
+    ep_comm: EpComm,
+    schedule: Schedule,
+    micro_batches: usize,
+    engine_pool: usize,
+    data_dir: Option<PathBuf>,
+    hook: Arc<dyn StepHook>,
+    expected_world: Option<usize>,
+}
+
+impl JobSpecBuilder {
+    /// Mesh axes: data-, expert- and pipeline-parallel degrees.
+    pub fn topology(mut self, dp: usize, ep: usize, pp: usize) -> Self {
+        self.topo = Topology { dp, ep, pp };
+        self
+    }
+
+    /// Mesh axes from an existing [`Topology`] value.
+    pub fn topo(mut self, t: Topology) -> Self {
+        self.topo = t;
+        self
+    }
+
+    /// Assert the mesh matches a launcher-provided world size
+    /// (`dp*ep*pp == n` is then part of validation).
+    pub fn world_size(mut self, n: usize) -> Self {
+        self.expected_world = Some(n);
+        self
+    }
+
+    /// Explicit optimizer sharding mode. Without this, the plan defaults
+    /// to EPSO when ep > 1 and SO otherwise; an explicit EPSO at ep = 1
+    /// fails validation.
+    pub fn sharding(mut self, mode: ShardingMode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    /// Stage-1 token-exchange policy (paper §3.1).
+    pub fn ep_comm(mut self, c: EpComm) -> Self {
+        self.ep_comm = c;
+        self
+    }
+
+    /// Pipeline microbatch schedule.
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    /// Microbatches per optimizer step (pipeline topologies).
+    pub fn micro_batches(mut self, n: usize) -> Self {
+        self.micro_batches = n;
+        self
+    }
+
+    /// Forced uniform routing (paper §2.3).
+    pub fn fur(mut self, on: bool) -> Self {
+        self.fur = on;
+        self
+    }
+
+    /// PJRT executor pool size.
+    pub fn engine_pool(mut self, n: usize) -> Self {
+        self.engine_pool = n;
+        self
+    }
+
+    /// Preprocessed shard directory (required).
+    pub fn data_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.data_dir = Some(dir.into());
+        self
+    }
+
+    /// Per-step hook (checkpointing, fault injection, snapshots).
+    pub fn hook(mut self, h: Arc<dyn StepHook>) -> Self {
+        self.hook = h;
+        self
+    }
+
+    /// Replace the whole run recipe.
+    pub fn run(mut self, run: RunConfig) -> Self {
+        self.run = run;
+        self
+    }
+
+    // -- run-recipe conveniences (the commonly tuned knobs) --
+
+    pub fn steps(mut self, n: usize) -> Self {
+        self.run.steps = n;
+        self
+    }
+
+    pub fn warmup_steps(mut self, n: usize) -> Self {
+        self.run.warmup_steps = n;
+        self
+    }
+
+    pub fn peak_lr(mut self, lr: f64) -> Self {
+        self.run.peak_lr = lr;
+        self
+    }
+
+    pub fn min_lr(mut self, lr: f64) -> Self {
+        self.run.min_lr = lr;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.run.seed = seed;
+        self
+    }
+
+    pub fn bf16_grad_reduce(mut self, on: bool) -> Self {
+        self.run.bf16_grad_reduce = on;
+        self
+    }
+
+    /// Validate the plan-level invariants and produce the spec.
+    pub fn build(self) -> Result<JobSpec> {
+        let data_dir = self
+            .data_dir
+            .ok_or_else(|| anyhow!("JobSpec for `{}` needs .data_dir(..)", self.model))?;
+        let mut plan = ParallelismPlan::new(self.topo);
+        if let Some(mode) = self.mode {
+            plan.mode = mode;
+            plan.mode_explicit = true;
+        }
+        plan.schedule = self.schedule;
+        plan.micro_batches = self.micro_batches;
+        plan.ep_comm = self.ep_comm;
+        plan.expected_world = self.expected_world;
+        plan.validate_spec()?;
+        Ok(JobSpec {
+            model: self.model,
+            plan,
+            run: self.run,
+            fur: self.fur,
+            engine_pool: self.engine_pool,
+            data_dir,
+            hook: self.hook,
+            _built: (),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deprecated flat-options shim (one release of source compatibility)
+// ---------------------------------------------------------------------
+
+/// The old flat, unvalidated options bag. Superseded by [`JobSpec`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use `JobSpec::new(model).data_dir(..).topology(dp, ep, pp)...build()?`"
+)]
+#[derive(Clone)]
+pub struct TrainOptions {
+    pub model: String,
+    pub topo: Topology,
+    pub mode: ShardingMode,
+    pub run: RunConfig,
+    pub fur: bool,
+    pub ep_comm: EpComm,
+    pub schedule: Schedule,
+    pub micro_batches: usize,
+    pub engine_pool: usize,
+    pub data_dir: PathBuf,
+    pub hook: Arc<dyn StepHook>,
+}
+
+#[allow(deprecated)]
+impl TrainOptions {
+    pub fn new(model: &str, topo: Topology, data_dir: PathBuf) -> TrainOptions {
+        TrainOptions {
+            model: model.into(),
+            topo,
+            mode: ShardingMode::Epso,
+            run: RunConfig::default(),
+            fur: false,
+            ep_comm: EpComm::Allgather,
+            schedule: Schedule::OneFOneB,
+            micro_batches: 2,
+            engine_pool: 2,
+            data_dir,
+            hook: Arc::new(NoHook),
+        }
+    }
+}
+
+#[allow(deprecated)]
+impl From<TrainOptions> for JobSpec {
+    fn from(o: TrainOptions) -> JobSpec {
+        let mut plan = ParallelismPlan::new(o.topo);
+        // the old default mode was EPSO everywhere; at ep = 1 that is
+        // numerically identical to SO, so resolve it implicitly instead
+        // of tripping the explicit-EPSO check
+        plan.mode = if o.topo.ep > 1 { o.mode } else { ShardingMode::So };
+        plan.mode_explicit = false;
+        plan.schedule = o.schedule;
+        plan.micro_batches = o.micro_batches;
+        plan.ep_comm = o.ep_comm;
+        JobSpec {
+            model: o.model,
+            plan,
+            run: o.run,
+            fur: o.fur,
+            engine_pool: o.engine_pool,
+            data_dir: o.data_dir,
+            hook: o.hook,
+            _built: (),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_plan_level_invariants() {
+        let base = || JobSpec::new("mula-tiny").data_dir("/tmp/x");
+        assert!(base().topology(1, 2, 2).micro_batches(4).build().is_ok());
+
+        let e = base().topology(1, 2, 2).micro_batches(0).build().unwrap_err();
+        assert!(e.to_string().contains("[micro-batches]"), "{e}");
+
+        let e = base().topology(2, 2, 1).world_size(8).build().unwrap_err();
+        assert!(e.to_string().contains("[world-size]"), "{e}");
+
+        let e = base()
+            .topology(2, 1, 1)
+            .sharding(ShardingMode::Epso)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("[sharding]"), "{e}");
+
+        let e = JobSpec::new("m").topology(2, 1, 1).build().unwrap_err();
+        assert!(e.to_string().contains("data_dir"), "{e}");
+    }
+
+    #[test]
+    fn default_sharding_tracks_ep_degree() {
+        let d = |dp, ep, pp| {
+            JobSpec::new("m")
+                .data_dir("/tmp/x")
+                .topology(dp, ep, pp)
+                .build()
+                .unwrap()
+                .plan
+                .mode
+        };
+        assert_eq!(d(2, 1, 1), ShardingMode::So);
+        assert_eq!(d(1, 2, 1), ShardingMode::Epso);
+        assert_eq!(d(1, 2, 2), ShardingMode::Epso);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn train_options_shim_converts() {
+        let o = TrainOptions::new(
+            "mula-tiny",
+            Topology { dp: 1, ep: 2, pp: 1 },
+            PathBuf::from("/tmp/x"),
+        );
+        let spec: JobSpec = o.into();
+        assert_eq!(spec.topo(), Topology { dp: 1, ep: 2, pp: 1 });
+        assert_eq!(spec.plan.mode, ShardingMode::Epso);
+        // at ep = 1 the legacy EPSO default resolves to SO
+        let o = TrainOptions::new("mula-tiny", Topology::dp_only(2), PathBuf::from("/tmp/x"));
+        let spec: JobSpec = o.into();
+        assert_eq!(spec.plan.mode, ShardingMode::So);
+        assert!(spec.plan.validate_spec().is_ok());
+    }
+}

@@ -1,12 +1,17 @@
-//! The Optimus trainer: multi-rank DP / EP / PP training orchestration.
+//! The Optimus trainer: multi-rank DP / EP / PP / PP×EP training
+//! orchestration.
 //!
 //! One OS thread per rank; real HLO execution per rank through the PJRT
 //! [`crate::runtime::Engine`]; real collectives through [`crate::comm`].
+//! The public entry point is a [`JobSpec`] (builder-constructed) whose
+//! [`ParallelismPlan`] is the single validated source of placement truth;
+//! [`train`] materializes the plan — one table-driven preflight, before
+//! any rank thread spawns — and dispatches on [`plan::EngineKind`].
 //! All topologies run on the shared rank-execution [`harness`], which owns
 //! spawning, failure poisoning, model broadcasting, the per-step driver
 //! loop and report assembly; a parallelism engine is one
 //! [`harness::RankTrainer`] impl holding only its distinct logic.
-//! Three runnable engines (matching the paper's experiments, §2):
+//! Four runnable engines (matching the paper's experiments, §2):
 //!
 //! * **DP (fused)** — every rank runs the fused `train_step` artifact;
 //!   gradient sync + sharded AdamW via [`crate::optim::ShardedOptimizer`].
@@ -16,28 +21,35 @@
 //! * **PP** — GPipe / 1F1B microbatch schedules over stage artifacts with
 //!   activations over point-to-point channels; backward recomputes from
 //!   stashed stage inputs (selective activation checkpointing, §1).
+//! * **PP×EP** — pipeline stages running the EP exchange loop over each
+//!   stage's dp×ep mesh slice on the per-layer EP artifacts; the
+//!   composition the paper's 12,288-tile runs rely on.
 
 pub mod ep;
 pub mod harness;
 pub mod pipeline;
+pub mod plan;
 
 mod ep_layout;
+mod jobspec;
 mod train_dp;
 mod train_ep;
 mod train_pp;
+mod train_pp_ep;
 
 pub use ep_layout::EpLayout;
+#[allow(deprecated)]
+pub use jobspec::TrainOptions;
+pub use jobspec::{JobSpec, JobSpecBuilder};
+pub use plan::{EngineKind, ParallelismPlan, StagePlan};
 
-use crate::comm::{Mesh, ReduceDtype, Topology};
+use crate::comm::Mesh;
 use crate::config::{Manifest, ModelManifest, RunConfig};
 use crate::data::Dataset;
 use crate::metrics::{Curve, StepBreakdown};
-use crate::optim::{AdamParams, ShardingMode};
 use crate::runtime::{Engine, Tensor};
 use crate::util::prng::Prng;
 use crate::Result;
-use anyhow::anyhow;
-use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Per-step callback for checkpointing / fault injection / NaN handling.
@@ -59,61 +71,6 @@ pub trait StepHook: Send + Sync {
 /// No-op hook.
 pub struct NoHook;
 impl StepHook for NoHook {}
-
-#[derive(Clone)]
-pub struct TrainOptions {
-    pub model: String,
-    pub topo: Topology,
-    pub mode: ShardingMode,
-    pub run: RunConfig,
-    /// forced uniform routing (paper §2.3)
-    pub fur: bool,
-    /// Stage-1 exchange policy (paper §3.1 Stage 1 ablation)
-    pub ep_comm: ep::EpComm,
-    pub schedule: pipeline::Schedule,
-    /// microbatches per step (PP)
-    pub micro_batches: usize,
-    /// PJRT executor threads
-    pub engine_pool: usize,
-    /// preprocessed shard directory
-    pub data_dir: PathBuf,
-    pub hook: Arc<dyn StepHook>,
-}
-
-impl TrainOptions {
-    pub fn new(model: &str, topo: Topology, data_dir: PathBuf) -> TrainOptions {
-        TrainOptions {
-            model: model.into(),
-            topo,
-            mode: ShardingMode::Epso,
-            run: RunConfig::default(),
-            fur: false,
-            ep_comm: ep::EpComm::Allgather,
-            schedule: pipeline::Schedule::OneFOneB,
-            micro_batches: 2,
-            engine_pool: 2,
-            data_dir,
-            hook: Arc::new(NoHook),
-        }
-    }
-
-    pub fn adam(&self) -> AdamParams {
-        AdamParams {
-            beta1: self.run.beta1 as f32,
-            beta2: self.run.beta2 as f32,
-            eps: self.run.eps as f32,
-            weight_decay: self.run.weight_decay as f32,
-        }
-    }
-
-    pub fn reduce_dtype(&self) -> ReduceDtype {
-        if self.run.bf16_grad_reduce {
-            ReduceDtype::Bf16
-        } else {
-            ReduceDtype::F32
-        }
-    }
-}
 
 /// Result of a training run (aggregated over ranks).
 #[derive(Clone, Debug, Default)]
@@ -173,34 +130,33 @@ pub fn init_global_params(mm: &ModelManifest, seed: u64) -> Vec<f32> {
     flat
 }
 
-/// Entry point: dispatch on topology. Every topology runs through the
-/// shared [`harness`]; the dispatch only picks which [`harness::RankTrainer`]
-/// impl drives the ranks.
-pub fn train(manifest: &Manifest, opts: &TrainOptions) -> Result<TrainReport> {
-    let mm = manifest.config(&opts.model)?;
-    let ds = Arc::new(Dataset::open(&opts.data_dir)?);
-    if ds.context < mm.hyper.seq + 1 {
-        return Err(anyhow!(
-            "data context {} < model seq+1 {}",
-            ds.context,
-            mm.hyper.seq + 1
-        ));
-    }
-    let engine = Engine::new_pool(opts.engine_pool)?;
-    let mesh = Mesh::new(opts.topo);
-    if opts.topo.pp > 1 {
-        if opts.topo.ep > 1 {
-            return Err(anyhow!(
-                "runnable engine supports PP×EP separately; combined PP×EP \
-                 is covered by the cluster model (see DESIGN.md §9)"
-            ));
+/// Entry point: materialize the [`ParallelismPlan`] — the single
+/// table-driven preflight; every invalid configuration fails here, before
+/// any engine executor or rank thread exists — then dispatch on
+/// [`EngineKind`]. Every topology runs through the shared [`harness`];
+/// the dispatch only picks which [`harness::RankTrainer`] impl drives the
+/// ranks.
+pub fn train(manifest: &Manifest, spec: &JobSpec) -> Result<TrainReport> {
+    let mm = manifest.config(&spec.model)?;
+    let ds = Arc::new(Dataset::open(&spec.data_dir)?);
+    let plan = Arc::new(spec.plan.clone().materialized(mm, &ds)?);
+    let engine = Engine::new_pool(spec.engine_pool)?;
+    let mesh = Mesh::new(plan.topo);
+    match plan.kind() {
+        EngineKind::Dp => harness::run::<train_dp::DpTrainer>(mm, ds, engine, mesh, spec, &plan),
+        EngineKind::Ep => harness::run::<train_ep::EpTrainer>(mm, ds, engine, mesh, spec, &plan),
+        EngineKind::Pp => harness::run::<train_pp::PpTrainer>(mm, ds, engine, mesh, spec, &plan),
+        EngineKind::PpEp => {
+            harness::run::<train_pp_ep::PpEpTrainer>(mm, ds, engine, mesh, spec, &plan)
         }
-        harness::run::<train_pp::PpTrainer>(mm, ds, engine, mesh, opts)
-    } else if opts.topo.ep > 1 {
-        harness::run::<train_ep::EpTrainer>(mm, ds, engine, mesh, opts)
-    } else {
-        harness::run::<train_dp::DpTrainer>(mm, ds, engine, mesh, opts)
     }
+}
+
+/// Deprecated entry point for the old flat options bag.
+#[deprecated(since = "0.2.0", note = "build a `JobSpec` and call `train`")]
+#[allow(deprecated)]
+pub fn train_with_options(manifest: &Manifest, opts: &TrainOptions) -> Result<TrainReport> {
+    train(manifest, &JobSpec::from(opts.clone()))
 }
 
 /// Should this step clip (paper: clipping only after warmup)?

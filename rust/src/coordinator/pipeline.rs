@@ -17,6 +17,18 @@ pub enum PipeOp {
     Bwd { mb: usize, chunk: usize },
 }
 
+/// P2p sequence-id slots reserved per step. This single constant pins
+/// the cross-cutting invariant together: [`seq_id`] strides by it (used
+/// by every pipeline engine) and the plan's `[micro-batches]` validation
+/// bounds `micro_batches` by it — so ids can never collide across steps.
+pub const SEQ_SLOTS: usize = 64;
+
+/// The p2p sequence id for (step, microbatch) on any tag.
+pub fn seq_id(step: usize, mb: usize) -> u64 {
+    debug_assert!(mb < SEQ_SLOTS);
+    (step * SEQ_SLOTS + mb) as u64
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
     GPipe,
@@ -30,6 +42,15 @@ impl Schedule {
             Schedule::GPipe => "gpipe",
             Schedule::OneFOneB => "1f1b",
             Schedule::Interleaved1F1B { .. } => "interleaved-1f1b",
+        }
+    }
+
+    /// Parse a CLI schedule name (the runnable choices).
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "gpipe" => Some(Schedule::GPipe),
+            "1f1b" => Some(Schedule::OneFOneB),
+            _ => None,
         }
     }
 

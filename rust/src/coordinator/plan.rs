@@ -1,0 +1,414 @@
+//! The validated parallelism plan: how a job maps onto the dp×ep×pp mesh.
+//!
+//! A [`ParallelismPlan`] is the single source of truth for placement —
+//! mesh axes, per-stage layer ranges, expert placement per stage, the loss
+//! domain and the optimizer segment layout — and the single place every
+//! configuration invariant is checked. [`ParallelismPlan::validate`] runs
+//! a table-driven list of checks (micro-batch bounds, artifact
+//! availability per ep/pp degree, axis/world consistency, model
+//! divisibility, data context vs sequence length, sharding-mode
+//! feasibility) and fails with a stable `plan validation failed [<check>]`
+//! error string *before* any engine executor or rank thread exists.
+//! `crate::ft::classify` maps that prefix to a non-relaunchable
+//! [`crate::ft::FailureKind::Config`] failure.
+//!
+//! [`ParallelismPlan::enumerate`] lists every dp×ep×pp factorization of a
+//! world size — the sweep-tooling entry point (`optimus plans --world N`).
+
+use super::ep::EpComm;
+use super::ep_layout::EpLayout;
+use super::pipeline::{Schedule, SEQ_SLOTS};
+use crate::comm::Topology;
+use crate::config::{ModelManifest, ParamSpec};
+use crate::data::Dataset;
+use crate::optim::sharded::SegmentLayout;
+use crate::optim::ShardingMode;
+use crate::Result;
+use anyhow::anyhow;
+use std::ops::Range;
+
+/// Which runnable engine drives the ranks for a given topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// dp ≥ 1, ep = pp = 1: fused `train_step` artifact per rank
+    Dp,
+    /// ep > 1, pp = 1: per-layer Stage-1 exchange loop
+    Ep,
+    /// pp > 1, ep = 1: microbatch pipeline over stage artifacts
+    Pp,
+    /// pp > 1 and ep > 1: pipeline stages running the EP exchange loop
+    /// over each stage's mesh slice
+    PpEp,
+}
+
+/// Placement of one pipeline stage: which layers it owns, whether it holds
+/// the embedding/head, how many experts each of its ranks keeps, and the
+/// `[non-expert || expert]` segment layout its sharded optimizer uses.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    pub stage: usize,
+    /// global decoder-layer range owned by this stage
+    pub layers: Range<usize>,
+    pub has_embed: bool,
+    pub has_head: bool,
+    /// experts held per rank within this stage's EP groups (N/EP)
+    pub experts_per_rank: usize,
+    /// rank-local optimizer segment layout for this stage
+    pub seg: SegmentLayout,
+}
+
+/// Validated dp×ep×pp placement. Built by the
+/// [`JobSpecBuilder`](super::JobSpecBuilder); the public fields allow
+/// tests and sweep tooling to construct plans directly — such plans are
+/// *unvalidated* until [`ParallelismPlan::validate`] passes.
+#[derive(Clone, Debug)]
+pub struct ParallelismPlan {
+    pub topo: Topology,
+    pub mode: ShardingMode,
+    /// whether `mode` was an explicit user choice — EPSO at ep=1 is
+    /// rejected only when explicitly requested (the implicit default
+    /// degrades to SO, which is identical there)
+    pub mode_explicit: bool,
+    pub schedule: Schedule,
+    pub micro_batches: usize,
+    pub ep_comm: EpComm,
+    /// expected world size (e.g. from a launcher); checked against
+    /// `topo.world()` when set
+    pub expected_world: Option<usize>,
+    /// per-stage placement, filled by [`ParallelismPlan::materialized`]
+    pub stages: Vec<StagePlan>,
+}
+
+type SpecCheck = fn(&ParallelismPlan) -> Option<String>;
+type ModelCheck = fn(&ParallelismPlan, &ModelManifest) -> Option<String>;
+type DataCheck = fn(&ParallelismPlan, &ModelManifest, &Dataset) -> Option<String>;
+
+/// Checks that need only the plan itself (run by `JobSpecBuilder::build`).
+const SPEC_CHECKS: &[(&str, SpecCheck)] = &[
+    ("topology", |p| {
+        (p.topo.dp == 0 || p.topo.ep == 0 || p.topo.pp == 0).then(|| {
+            format!(
+                "every mesh axis must be >= 1; got dp={} ep={} pp={}",
+                p.topo.dp, p.topo.ep, p.topo.pp
+            )
+        })
+    }),
+    ("world-size", |p| match p.expected_world {
+        Some(w) if p.topo.world() != w => Some(format!(
+            "dp*ep*pp = {}*{}*{} = {} does not equal the requested world size {w}",
+            p.topo.dp,
+            p.topo.ep,
+            p.topo.pp,
+            p.topo.world()
+        )),
+        _ => None,
+    }),
+    ("micro-batches", |p| {
+        (p.micro_batches == 0 || p.micro_batches > SEQ_SLOTS).then(|| {
+            format!(
+                "micro_batches must be in 1..={SEQ_SLOTS} (p2p sequence ids \
+                 reserve {SEQ_SLOTS} slots per step); got {}",
+                p.micro_batches
+            )
+        })
+    }),
+    ("sharding", |p| {
+        (p.mode_explicit && p.mode == ShardingMode::Epso && p.topo.ep == 1).then(|| {
+            "EPSO requires ep > 1 (its expert sharding domain is empty at \
+             ep=1); use SO or raise the ep degree"
+                .to_string()
+        })
+    }),
+    ("schedule", |p| {
+        (p.topo.pp > 1 && matches!(p.schedule, Schedule::Interleaved1F1B { .. })).then(|| {
+            "interleaved-1f1b needs multi-chunk artifacts; the runnable \
+             engines support gpipe and 1f1b"
+                .to_string()
+        })
+    }),
+];
+
+/// Checks against the model manifest (layer/expert divisibility, artifact
+/// availability per parallelism degree).
+const MODEL_CHECKS: &[(&str, ModelCheck)] = &[
+    ("layer-split", |p, mm| {
+        (p.topo.pp > 1 && mm.hyper.n_layers % p.topo.pp != 0).then(|| {
+            format!(
+                "pp={} does not divide n_layers={} of {}",
+                p.topo.pp, mm.hyper.n_layers, mm.name
+            )
+        })
+    }),
+    ("expert-split", |p, mm| {
+        (p.topo.ep > 1 && (mm.hyper.n_experts == 0 || mm.hyper.n_experts % p.topo.ep != 0))
+            .then(|| {
+                format!(
+                    "ep={} does not divide n_experts={} of {}",
+                    p.topo.ep, mm.hyper.n_experts, mm.name
+                )
+            })
+    }),
+    ("pp-artifacts", |p, mm| {
+        // the hybrid PP×EP engine runs on the per-layer EP artifacts, so
+        // stage artifacts are only required for PP-without-EP
+        (p.topo.pp > 1 && p.topo.ep == 1 && !mm.pp_degrees.contains(&p.topo.pp)).then(|| {
+            format!(
+                "no PP={} stage artifacts for {} (built: {:?})",
+                p.topo.pp, mm.name, mm.pp_degrees
+            )
+        })
+    }),
+    ("ep-artifacts", |p, mm| {
+        (p.topo.ep > 1 && !mm.ep_degrees.contains(&p.topo.ep)).then(|| {
+            format!(
+                "no EP={} artifacts for {} (built: {:?})",
+                p.topo.ep, mm.name, mm.ep_degrees
+            )
+        })
+    }),
+];
+
+/// Checks against the dataset.
+const DATA_CHECKS: &[(&str, DataCheck)] = &[("data-context", |_, mm, ds| {
+    (ds.context < mm.hyper.seq + 1).then(|| {
+        format!(
+            "data context {} < model seq+1 = {}",
+            ds.context,
+            mm.hyper.seq + 1
+        )
+    })
+})];
+
+impl ParallelismPlan {
+    /// Unvalidated plan with engine defaults. The usual constructor is
+    /// [`JobSpecBuilder`](super::JobSpecBuilder); tests and sweep tooling
+    /// may mutate the public fields directly and call `validate`.
+    pub fn new(topo: Topology) -> ParallelismPlan {
+        ParallelismPlan {
+            topo,
+            mode: if topo.ep > 1 { ShardingMode::Epso } else { ShardingMode::So },
+            mode_explicit: false,
+            schedule: Schedule::OneFOneB,
+            micro_batches: 2,
+            ep_comm: EpComm::Allgather,
+            expected_world: None,
+            stages: Vec::new(),
+        }
+    }
+
+    /// Which runnable engine this plan selects.
+    pub fn kind(&self) -> EngineKind {
+        match (self.topo.ep > 1, self.topo.pp > 1) {
+            (false, false) => EngineKind::Dp,
+            (true, false) => EngineKind::Ep,
+            (false, true) => EngineKind::Pp,
+            (true, true) => EngineKind::PpEp,
+        }
+    }
+
+    /// The pipeline stage whose ranks see the loss (owns the LM head).
+    pub fn loss_stage(&self) -> usize {
+        self.topo.pp - 1
+    }
+
+    /// Plan-only subset of the validation table (no manifest/dataset
+    /// needed) — what `JobSpecBuilder::build` runs.
+    pub fn validate_spec(&self) -> Result<()> {
+        for (name, check) in SPEC_CHECKS {
+            if let Some(msg) = check(self) {
+                return Err(anyhow!("plan validation failed [{name}]: {msg}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Spec + model subset of the table (no dataset needed) — what sweep
+    /// tooling uses to label placements runnable for a model.
+    pub fn validate_model(&self, mm: &ModelManifest) -> Result<()> {
+        self.validate_spec()?;
+        for (name, check) in MODEL_CHECKS {
+            if let Some(msg) = check(self, mm) {
+                return Err(anyhow!("plan validation failed [{name}]: {msg}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Full preflight: every configuration invariant, checked in one
+    /// table-driven pass with stable error strings, before any engine
+    /// executor or rank thread exists.
+    pub fn validate(&self, mm: &ModelManifest, ds: &Dataset) -> Result<()> {
+        self.validate_model(mm)?;
+        for (name, check) in DATA_CHECKS {
+            if let Some(msg) = check(self, mm, ds) {
+                return Err(anyhow!("plan validation failed [{name}]: {msg}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate and fill the per-stage placement table.
+    pub fn materialized(mut self, mm: &ModelManifest, ds: &Dataset) -> Result<ParallelismPlan> {
+        self.validate(mm, ds)?;
+        let h = &mm.hyper;
+        let (ep, pp) = (self.topo.ep, self.topo.pp);
+        let lps = h.n_layers / pp;
+        let kind = self.kind();
+        self.stages = (0..pp)
+            .map(|s| {
+                let layers = s * lps..(s + 1) * lps;
+                let has_embed = s == 0;
+                let has_head = s == pp - 1;
+                let seg = match kind {
+                    EngineKind::Dp => {
+                        // the whole model is one "non-expert" segment
+                        SegmentLayout { ne_len: mm.param_count, e_len: 0 }
+                    }
+                    EngineKind::Pp => SegmentLayout {
+                        ne_len: stage_specs(mm, pp, s).iter().map(|p| p.numel).sum(),
+                        e_len: 0,
+                    },
+                    EngineKind::Ep | EngineKind::PpEp => {
+                        // lengths are ep_rank-independent; probe rank 0
+                        let lay =
+                            EpLayout::for_stage(mm, ep, 0, layers.clone(), has_embed, has_head);
+                        SegmentLayout { ne_len: lay.ne_len, e_len: lay.e_len }
+                    }
+                };
+                StagePlan {
+                    stage: s,
+                    layers,
+                    has_embed,
+                    has_head,
+                    // ep >= 1 and divisibility already validated above
+                    experts_per_rank: h.n_experts / ep,
+                    seg,
+                }
+            })
+            .collect();
+        Ok(self)
+    }
+
+    /// Stable serialized form recorded in checkpoint metadata and compared
+    /// on resume (see [`crate::ckpt::Checkpoint::ensure_plan`]).
+    pub fn fingerprint(&self) -> String {
+        let mode = match self.mode {
+            ShardingMode::So => "so",
+            ShardingMode::Epso => "epso",
+        };
+        let comm = match self.ep_comm {
+            EpComm::Allgather => "allgather",
+            EpComm::All2All => "all2all",
+        };
+        format!(
+            "dp{}-ep{}-pp{}/{mode}/{}/mb{}/{comm}",
+            self.topo.dp,
+            self.topo.ep,
+            self.topo.pp,
+            self.schedule.name(),
+            self.micro_batches
+        )
+    }
+
+    /// Every dp×ep×pp factorization of `world` (sweep tooling; filter by
+    /// [`ParallelismPlan::validate`] against a manifest for runnability).
+    pub fn enumerate(world: usize) -> Vec<Topology> {
+        let mut out = Vec::new();
+        for dp in 1..=world {
+            if world % dp != 0 {
+                continue;
+            }
+            let rest = world / dp;
+            for ep in 1..=rest {
+                if rest % ep == 0 {
+                    out.push(Topology { dp, ep, pp: rest / ep });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Stage-owned parameter specs for the PP stage artifacts (mirrors
+/// python `model.stage_param_specs`: same filter, same order, local
+/// offsets; the original global offset rides along in the name).
+pub(crate) fn stage_specs(mm: &ModelManifest, pp: usize, stage: usize) -> Vec<ParamSpec> {
+    let lps = mm.hyper.n_layers / pp;
+    let lo = (stage * lps) as i64;
+    let hi = ((stage + 1) * lps) as i64;
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for p in &mm.params {
+        let owned = (p.layer >= lo && p.layer < hi)
+            || (stage == 0 && p.name == "embed")
+            || (stage == pp - 1 && (p.name == "final_norm" || p.name == "head"));
+        if owned {
+            let mut q = p.clone();
+            let goff = p.offset;
+            q.offset = off;
+            off += p.numel;
+            out.push(ParamSpec { name: format!("{}@{goff}", q.name), ..q });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerate_covers_all_factorizations() {
+        let topos = ParallelismPlan::enumerate(12);
+        // sum over dp|12 of d(12/dp) = 6+4+3+2+2+1
+        assert_eq!(topos.len(), 18);
+        for t in &topos {
+            assert_eq!(t.world(), 12);
+        }
+        assert!(topos.contains(&Topology { dp: 12, ep: 1, pp: 1 }));
+        assert!(topos.contains(&Topology { dp: 1, ep: 12, pp: 1 }));
+        assert!(topos.contains(&Topology { dp: 2, ep: 3, pp: 2 }));
+        // no duplicates
+        for (i, a) in topos.iter().enumerate() {
+            assert!(!topos[i + 1..].contains(a), "duplicate {a:?}");
+        }
+    }
+
+    #[test]
+    fn spec_checks_fire_with_stable_strings() {
+        let mut p = ParallelismPlan::new(Topology { dp: 2, ep: 2, pp: 2 });
+        p.micro_batches = 0;
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [micro-batches]"), "{e}");
+
+        let mut p = ParallelismPlan::new(Topology { dp: 2, ep: 1, pp: 1 });
+        p.expected_world = Some(8);
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [world-size]"), "{e}");
+
+        let mut p = ParallelismPlan::new(Topology::dp_only(2));
+        p.mode = ShardingMode::Epso;
+        p.mode_explicit = true;
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [sharding]"), "{e}");
+        // implicit default never trips the same check
+        let mut p = ParallelismPlan::new(Topology::dp_only(2));
+        p.mode_explicit = false;
+        assert!(p.validate_spec().is_ok());
+    }
+
+    #[test]
+    fn kind_dispatch_matches_axes() {
+        let k = |dp, ep, pp| ParallelismPlan::new(Topology { dp, ep, pp }).kind();
+        assert_eq!(k(4, 1, 1), EngineKind::Dp);
+        assert_eq!(k(1, 2, 1), EngineKind::Ep);
+        assert_eq!(k(1, 1, 2), EngineKind::Pp);
+        assert_eq!(k(2, 2, 2), EngineKind::PpEp);
+    }
+
+    #[test]
+    fn fingerprint_is_stable() {
+        let p = ParallelismPlan::new(Topology { dp: 1, ep: 2, pp: 2 });
+        assert_eq!(p.fingerprint(), "dp1-ep2-pp2/epso/1f1b/mb2/allgather");
+    }
+}

@@ -4,18 +4,20 @@
 //! sharded optimizer (reduce-scatter grads / AdamW shard / allgather
 //! params). Everything else — spawning, broadcast, NaN guard, loss
 //! averaging, report assembly — lives in the shared
-//! [`harness`](super::harness).
+//! [`harness`](super::harness); the optimizer segment layout comes from
+//! the [`ParallelismPlan`](super::ParallelismPlan).
 //!
 //! The parameter vector is an `Arc`-backed [`Tensor`]: re-submitting it to
 //! the engine each step is a refcount bump, and the optimizer mutates it
 //! in place via copy-on-write once the engine has dropped its handle.
 
+use super::clip_now;
 use super::harness::{LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome};
-use super::{clip_now, TrainOptions};
+use super::plan::ParallelismPlan;
 use crate::config::ModelManifest;
 use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
-use crate::optim::sharded::{build_segments, ShardedOptimizer};
+use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::runtime::Tensor;
 use crate::Result;
 use std::path::PathBuf;
@@ -33,11 +35,11 @@ impl RankTrainer for DpTrainer {
     const LABEL: &'static str = "dp";
     type Shared = ();
 
-    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan {
-        BatchPlan { dp: opts.topo.dp, micro_batch: mm.hyper.batch, micro_batches: 1 }
+    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
+        BatchPlan { dp: plan.topo.dp, micro_batch: mm.hyper.batch, micro_batches: 1 }
     }
 
-    fn shared(_mm: &ModelManifest, _opts: &TrainOptions) -> Result<Arc<()>> {
+    fn shared(_mm: &ModelManifest, _plan: &ParallelismPlan) -> Result<Arc<()>> {
         Ok(Arc::new(()))
     }
 
@@ -45,10 +47,9 @@ impl RankTrainer for DpTrainer {
         let rank = ctx.rank;
         let (dp_group, dp_rank) = ctx.mesh.dp_group(rank);
         let (xg, xr) = ctx.mesh.dpep_group(rank);
-        let segs = build_segments(
-            ctx.opts.mode,
-            ctx.mm.param_count, // whole model is "non-expert" wrt EP=1
-            0,
+        let segs = plan_segments(
+            ctx.plan.mode,
+            ctx.plan.stages[0].seg,
             dp_group,
             dp_rank,
             xg,
@@ -57,11 +58,11 @@ impl RankTrainer for DpTrainer {
         );
         let opt = ShardedOptimizer::new(
             segs,
-            Arc::clone(xg),
-            xr,
-            ctx.opts.adam(),
-            ctx.opts.reduce_dtype(),
-            ctx.opts.run.grad_clip,
+            Arc::clone(ctx.mesh.world_group()),
+            rank,
+            ctx.spec.adam(),
+            ctx.spec.reduce_dtype(),
+            ctx.spec.run.grad_clip,
         );
         Ok(DpTrainer {
             params: Tensor::f32(global_params, vec![ctx.mm.param_count]),
@@ -96,12 +97,12 @@ impl RankTrainer for DpTrainer {
             return Err(ctx.non_finite(step));
         }
         let grads = outs[3].as_f32()?;
-        let lr = ctx.opts.run.lr_at(step) as f32;
+        let lr = ctx.spec.run.lr_at(step) as f32;
         let gn = self.opt.step(
             self.params.as_f32_mut()?,
             grads,
             lr,
-            clip_now(&ctx.opts.run, step),
+            clip_now(&ctx.spec.run, step),
         );
         Ok(StepOutcome { loss, grad_norm: gn })
     }

@@ -17,6 +17,12 @@
 //!   DP only — NE optimizer states replicated EP times;
 //! * EPSO: NE grads reduce-scattered over the whole DP×EP group.
 //!
+//! Expert gradients come back from `ep_expert_bwd` as a **sum** over every
+//! EP peer's tokens (each peer's cotangents ride in through the gathered
+//! `d_moe`); they are scaled by `1/EP` before the optimizer so all engines
+//! share the DP convention — the mean gradient of the global batch. The
+//! PP×EP hybrid engine relies on the same convention.
+//!
 //! Scaffolding (spawn/join/poison/broadcast/curves/report) lives in the
 //! shared [`harness`](super::harness). Parameter slices handed to the
 //! artifacts are materialized once per step and shared between the
@@ -24,32 +30,34 @@
 //! optimizer step), halving the seed's host-side copy volume; the full
 //! local vector is never cloned inside the step.
 
+use super::clip_now;
 use super::ep::{exchange_all2all, exchange_allgather, fur_indices, EpComm};
 use super::ep_layout::EpLayout;
 use super::harness::{LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome};
-use super::{clip_now, TrainOptions};
+use super::plan::ParallelismPlan;
 use crate::comm::{Group, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
-use crate::optim::sharded::{build_segments, ShardedOptimizer};
+use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::runtime::Tensor;
 use crate::Result;
-use anyhow::anyhow;
 use std::sync::Arc;
 
-struct Arts {
-    embed_fwd: std::path::PathBuf,
-    embed_bwd: std::path::PathBuf,
-    pre_fwd: std::path::PathBuf,
-    pre_bwd: std::path::PathBuf,
-    expert_fwd: std::path::PathBuf,
-    expert_bwd: std::path::PathBuf,
-    head: std::path::PathBuf,
+/// Per-layer EP artifact paths (shared with the PP×EP hybrid engine,
+/// which runs the same artifacts per pipeline stage).
+pub(super) struct Arts {
+    pub(super) embed_fwd: std::path::PathBuf,
+    pub(super) embed_bwd: std::path::PathBuf,
+    pub(super) pre_fwd: std::path::PathBuf,
+    pub(super) pre_bwd: std::path::PathBuf,
+    pub(super) expert_fwd: std::path::PathBuf,
+    pub(super) expert_bwd: std::path::PathBuf,
+    pub(super) head: std::path::PathBuf,
 }
 
 impl Arts {
-    fn load(mm: &ModelManifest, ep: usize) -> Result<Arts> {
+    pub(super) fn load(mm: &ModelManifest, ep: usize) -> Result<Arts> {
         let p = |n: &str| mm.artifact_path(&format!("ep{ep}_{n}"));
         Ok(Arts {
             embed_fwd: p("embed_fwd")?,
@@ -65,15 +73,16 @@ impl Arts {
 
 /// Per-step parameter slices (shared by fwd and bwd — params are constant
 /// within a step). Cloning one of these into an exec call is an Arc bump.
-struct ParamSlices {
-    emb: Tensor,
-    head: Tensor,
-    layer_ne: Vec<Tensor>,
-    layer_e: Vec<Tensor>,
+/// Layer slices are indexed by the layout's *local* layer index.
+pub(super) struct ParamSlices {
+    pub(super) emb: Tensor,
+    pub(super) head: Tensor,
+    pub(super) layer_ne: Vec<Tensor>,
+    pub(super) layer_e: Vec<Tensor>,
 }
 
 impl ParamSlices {
-    fn new(params: &[f32], layout: &EpLayout) -> ParamSlices {
+    pub(super) fn new(params: &[f32], layout: &EpLayout) -> ParamSlices {
         let t = |r: &std::ops::Range<usize>| Tensor::f32(params[r.clone()].to_vec(), vec![r.len()]);
         ParamSlices {
             emb: t(&layout.emb),
@@ -101,34 +110,22 @@ impl RankTrainer for EpTrainer {
     const LABEL: &'static str = "ep";
     type Shared = ();
 
-    fn preflight(mm: &ModelManifest, opts: &TrainOptions) -> Result<()> {
-        let ep = opts.topo.ep;
-        if !mm.ep_degrees.contains(&ep) {
-            return Err(anyhow!(
-                "no EP={ep} artifacts for {} (built: {:?})",
-                mm.name,
-                mm.ep_degrees
-            ));
-        }
-        Ok(())
-    }
-
-    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan {
+    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
         // EP scales the global batch like DP (paper §1): data-rank = dp*EP+ep
         BatchPlan {
-            dp: opts.topo.world(),
+            dp: plan.topo.world(),
             micro_batch: mm.hyper.batch,
             micro_batches: 1,
         }
     }
 
-    fn shared(_mm: &ModelManifest, _opts: &TrainOptions) -> Result<Arc<()>> {
+    fn shared(_mm: &ModelManifest, _plan: &ParallelismPlan) -> Result<Arc<()>> {
         Ok(Arc::new(()))
     }
 
     fn setup(ctx: &RankCtx, _shared: &Arc<()>, global_params: Vec<f32>) -> Result<EpTrainer> {
         let rank = ctx.rank;
-        let ep = ctx.opts.topo.ep;
+        let ep = ctx.plan.topo.ep;
         let c = ctx.mesh.coord(rank);
         let layout = EpLayout::new(&ctx.mm, ep, c.ep);
         let arts = Arts::load(&ctx.mm, ep)?;
@@ -140,10 +137,12 @@ impl RankTrainer for EpTrainer {
         let params = layout.extract(&global_params);
         drop(global_params);
 
-        let segs = build_segments(
-            ctx.opts.mode,
-            layout.ne_len,
-            layout.e_len,
+        let stage = &ctx.plan.stages[0];
+        debug_assert_eq!(stage.seg.ne_len, layout.ne_len);
+        debug_assert_eq!(stage.seg.e_len, layout.e_len);
+        let segs = plan_segments(
+            ctx.plan.mode,
+            stage.seg,
             dp_group,
             dp_rank,
             dpep_group,
@@ -152,11 +151,11 @@ impl RankTrainer for EpTrainer {
         );
         let opt = ShardedOptimizer::new(
             segs,
-            Arc::clone(dpep_group),
-            dpep_rank,
-            ctx.opts.adam(),
-            ctx.opts.reduce_dtype(),
-            ctx.opts.run.grad_clip,
+            Arc::clone(ctx.mesh.world_group()),
+            rank,
+            ctx.spec.adam(),
+            ctx.spec.reduce_dtype(),
+            ctx.spec.run.grad_clip,
         );
         Ok(EpTrainer {
             ep_group: Arc::clone(ep_group),
@@ -183,7 +182,7 @@ impl RankTrainer for EpTrainer {
     ) -> Result<StepOutcome> {
         let mm = &ctx.mm;
         let h = &mm.hyper;
-        let ep = ctx.opts.topo.ep;
+        let ep = ctx.plan.topo.ep;
         let layout = &self.layout;
         let arts = &self.arts;
         let (ep_group, ep_rank) = (&self.ep_group, self.ep_rank);
@@ -230,13 +229,13 @@ impl RankTrainer for EpTrainer {
             let aux = it.next().unwrap().scalar()?;
             aux_total += aux;
             let mut idx = idx.as_i32()?.to_vec();
-            if ctx.opts.fur {
+            if ctx.spec.fur {
                 idx = fur_indices(t_local, k, h.n_experts);
             }
             // ---- Stage 1: token exchange across EP ----
             let (x_all, w_all, idx_all) = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                match ctx.opts.ep_comm {
+                match ctx.plan.ep_comm {
                     EpComm::Allgather => {
                         exchange_allgather(ep_group, ep_rank, x2d, w2d, &idx)
                     }
@@ -349,15 +348,26 @@ impl RankTrainer for EpTrainer {
         grads[layout.emb.clone()].copy_from_slice(outs[0].as_f32()?);
 
         // ---- SO correctness step: NE grads must average over EP too ----
-        if ctx.opts.mode == crate::optim::ShardingMode::So && ep > 1 {
+        if ctx.plan.mode == crate::optim::ShardingMode::So && ep > 1 {
             let _t = Scoped::new(&mut breakdown.comm_secs);
             let ne = grads[..layout.ne_len].to_vec();
-            let avg = ep_group.allreduce_mean(ep_rank, ne, ctx.opts.reduce_dtype());
+            let avg = ep_group.allreduce_mean(ep_rank, ne, ctx.spec.reduce_dtype());
             grads[..layout.ne_len].copy_from_slice(&avg);
         }
 
-        let lr = ctx.opts.run.lr_at(step) as f32;
-        let gn = self.opt.step(&mut self.params, &grads, lr, clip_now(&ctx.opts.run, step));
+        // expert_bwd sums cotangents over every EP peer's tokens; scale by
+        // 1/EP so expert grads follow the same mean-over-global-batch
+        // convention as DP (NE grads get their mean from the optimizer's
+        // reduce-scatter over the DP×EP group)
+        if ep > 1 {
+            let inv = 1.0 / ep as f32;
+            for g in grads[layout.ne_len..].iter_mut() {
+                *g *= inv;
+            }
+        }
+
+        let lr = ctx.spec.run.lr_at(step) as f32;
+        let gn = self.opt.step(&mut self.params, &grads, lr, clip_now(&ctx.spec.run, step));
         let _ = aux_total;
         Ok(StepOutcome { loss, grad_norm: gn })
     }
@@ -375,7 +385,7 @@ impl RankTrainer for EpTrainer {
         // sibling ep ranks contribute theirs via the ep-group allgather
         if ctx.rank == 0 {
             let mm = &ctx.mm;
-            let ep = ctx.opts.topo.ep;
+            let ep = ctx.plan.topo.ep;
             let mut final_params = vec![0.0f32; mm.param_count];
             let all_locals = self.ep_group.allgather(self.ep_rank, self.params);
             for (r, chunk) in all_locals.chunks(self.layout.local_len()).enumerate() {

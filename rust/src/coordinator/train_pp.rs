@@ -8,48 +8,30 @@
 //! for Mula-100B/220B).
 //!
 //! Gradients accumulate over microbatches and are averaged before the
-//! sharded optimizer step (per-stage DP group). Scaffolding lives in the
-//! shared [`harness`](super::harness); the stage parameter vector is an
-//! `Arc`-backed [`Tensor`], so handing it to every microbatch execution
-//! is a refcount bump instead of the seed's per-op full-stage copy.
+//! sharded optimizer step (per-stage DP group); the gradient-norm domain
+//! is the *world* group, so clipping sees the true global norm exactly as
+//! the DP engine does. Stage ownership comes from the
+//! [`ParallelismPlan`](super::ParallelismPlan)'s `stage_specs`;
+//! scaffolding lives in the shared [`harness`](super::harness). The stage
+//! parameter vector is an `Arc`-backed [`Tensor`], so handing it to every
+//! microbatch execution is a refcount bump instead of the seed's per-op
+//! full-stage copy.
 
+use super::clip_now;
 use super::harness::{
     AuxParams, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
 };
-use super::pipeline::{PipeOp, Schedule};
-use super::{clip_now, TrainOptions, TrainReport};
+use super::pipeline::{seq_id, PipeOp};
+use super::plan::{stage_specs, ParallelismPlan};
+use super::TrainReport;
 use crate::comm::P2p;
 use crate::config::{ModelManifest, ParamSpec};
 use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
-use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
+use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::runtime::Tensor;
 use crate::Result;
-use anyhow::anyhow;
 use std::sync::Arc;
-
-/// Stage-owned parameter specs (mirrors python model.stage_param_specs:
-/// same filter, same order, local offsets).
-pub(super) fn stage_specs(mm: &ModelManifest, pp: usize, stage: usize) -> Vec<ParamSpec> {
-    let lps = mm.hyper.n_layers / pp;
-    let lo = (stage * lps) as i64;
-    let hi = ((stage + 1) * lps) as i64;
-    let mut out = Vec::new();
-    let mut off = 0usize;
-    for p in &mm.params {
-        let owned = (p.layer >= lo && p.layer < hi)
-            || (stage == 0 && p.name == "embed")
-            || (stage == pp - 1 && (p.name == "final_norm" || p.name == "head"));
-        if owned {
-            let mut q = p.clone();
-            let goff = p.offset;
-            q.offset = off;
-            off += p.numel;
-            out.push(ParamSpec { name: format!("{}@{goff}", q.name), ..q });
-        }
-    }
-    out
-}
 
 fn stage_len(specs: &[ParamSpec]) -> usize {
     specs.iter().map(|s| s.numel).sum()
@@ -101,45 +83,17 @@ impl RankTrainer for PpTrainer {
     const LABEL: &'static str = "pp";
     type Shared = P2p;
 
-    fn preflight(mm: &ModelManifest, opts: &TrainOptions) -> Result<()> {
-        let pp = opts.topo.pp;
-        if !mm.pp_degrees.contains(&pp) {
-            return Err(anyhow!(
-                "no PP={pp} artifacts for {} (built: {:?})",
-                mm.name,
-                mm.pp_degrees
-            ));
-        }
-        if matches!(opts.schedule, Schedule::Interleaved1F1B { .. }) {
-            return Err(anyhow!(
-                "interleaved-1f1b needs multi-chunk artifacts; runnable engine \
-                 supports gpipe/1f1b (interleaved is covered by the schedule \
-                 property tests and the cluster model)"
-            ));
-        }
-        // p2p sequence ids are step * 64 + mb: more microbatches would
-        // silently collide across steps
-        if opts.micro_batches == 0 || opts.micro_batches > 64 {
-            return Err(anyhow!(
-                "PP supports 1..=64 microbatches per step (p2p sequence ids \
-                 reserve 64 slots); got {}",
-                opts.micro_batches
-            ));
-        }
-        Ok(())
-    }
-
-    fn plan(mm: &ModelManifest, opts: &TrainOptions) -> BatchPlan {
+    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
         BatchPlan {
-            dp: opts.topo.dp,
+            dp: plan.topo.dp,
             micro_batch: mm.hyper.batch,
-            micro_batches: opts.micro_batches,
+            micro_batches: plan.micro_batches,
         }
     }
 
-    fn shared(_mm: &ModelManifest, opts: &TrainOptions) -> Result<Arc<P2p>> {
+    fn shared(_mm: &ModelManifest, plan: &ParallelismPlan) -> Result<Arc<P2p>> {
         // tag 0 = fwd activations, 1 = cotangents
-        Ok(P2p::new(opts.topo.world(), 2))
+        Ok(P2p::new(plan.topo.world(), 2))
     }
 
     fn poison_shared(shared: &P2p) {
@@ -149,32 +103,37 @@ impl RankTrainer for PpTrainer {
     fn setup(ctx: &RankCtx, shared: &Arc<P2p>, global_params: Vec<f32>) -> Result<PpTrainer> {
         let rank = ctx.rank;
         let mm = &ctx.mm;
-        let pp = ctx.opts.topo.pp;
+        let pp = ctx.plan.topo.pp;
         let c = ctx.mesh.coord(rank);
         let stage = c.pp;
         let last = stage == pp - 1;
         let specs = stage_specs(mm, pp, stage);
         let my_len = stage_len(&specs);
         let (dp_group, dp_rank) = ctx.mesh.dp_group(rank);
+        let (dpep_group, dpep_rank) = ctx.mesh.dpep_group(rank);
         let (prev, next) = ctx.mesh.pp_neighbours(rank);
 
         let params = extract_stage(&global_params, &specs);
         drop(global_params);
 
-        let segs = vec![SegmentSpec {
-            local_offset: 0,
-            len: my_len,
-            group: Arc::clone(dp_group),
-            group_rank: dp_rank,
-            norm_weight: 1.0,
-        }];
+        let sp = &ctx.plan.stages[stage];
+        debug_assert_eq!(sp.seg.ne_len, my_len);
+        let segs = plan_segments(
+            ctx.plan.mode,
+            sp.seg,
+            dp_group,
+            dp_rank,
+            dpep_group,
+            dpep_rank,
+            1,
+        );
         let opt = ShardedOptimizer::new(
             segs,
-            Arc::clone(dp_group),
-            dp_rank,
-            ctx.opts.adam(),
-            ctx.opts.reduce_dtype(),
-            ctx.opts.run.grad_clip,
+            Arc::clone(ctx.mesh.world_group()),
+            rank,
+            ctx.spec.adam(),
+            ctx.spec.reduce_dtype(),
+            ctx.spec.run.grad_clip,
         );
 
         let art_fwd = if last {
@@ -195,7 +154,7 @@ impl RankTrainer for PpTrainer {
             dp_coord: c.dp,
             prev,
             next,
-            ops: ctx.opts.schedule.ops(stage, pp, ctx.opts.micro_batches),
+            ops: ctx.plan.schedule.ops(stage, pp, ctx.plan.micro_batches),
             art_fwd,
             art_fwdbwd,
             key_prefix: format!("{}:pp{pp}s{stage}", mm.name),
@@ -216,7 +175,7 @@ impl RankTrainer for PpTrainer {
         let rank = ctx.rank;
         let h = &ctx.mm.hyper;
         let (b, s) = (h.batch, h.seq);
-        let micro = ctx.opts.micro_batches;
+        let micro = ctx.plan.micro_batches;
         let p2p = &self.p2p;
         let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
             ctx.engine.exec(
@@ -246,12 +205,12 @@ impl RankTrainer for PpTrainer {
                         let hout = outs[0].as_f32()?.to_vec();
                         stash[mb] = Some(tokens_t);
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, self.next.unwrap(), 0, (step * 64 + mb) as u64, hout);
+                        p2p.send(rank, self.next.unwrap(), 0, seq_id(step, mb), hout);
                     } else if self.last {
                         // recv + fused fwdbwd + send cotangent immediately
                         let hin = {
                             let _t = Scoped::new(&mut breakdown.comm_secs);
-                            p2p.recv(self.prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
+                            p2p.recv(self.prev.unwrap(), rank, 0, seq_id(step, mb))
                         };
                         let outs = {
                             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
@@ -271,11 +230,11 @@ impl RankTrainer for PpTrainer {
                             *g += d;
                         }
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, self.prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
+                        p2p.send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dx);
                     } else {
                         let hin = {
                             let _t = Scoped::new(&mut breakdown.comm_secs);
-                            p2p.recv(self.prev.unwrap(), rank, 0, (step * 64 + mb) as u64)
+                            p2p.recv(self.prev.unwrap(), rank, 0, seq_id(step, mb))
                         };
                         let hin_t = Tensor::f32(hin, vec![b, s, h.hidden]);
                         let outs = {
@@ -291,7 +250,7 @@ impl RankTrainer for PpTrainer {
                             rank,
                             self.next.unwrap(),
                             0,
-                            (step * 64 + mb) as u64,
+                            seq_id(step, mb),
                             outs[0].as_f32()?.to_vec(),
                         );
                     }
@@ -302,7 +261,7 @@ impl RankTrainer for PpTrainer {
                     }
                     let d_out = {
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.recv(self.next.unwrap(), rank, 1, (step * 64 + mb) as u64)
+                        p2p.recv(self.next.unwrap(), rank, 1, seq_id(step, mb))
                     };
                     let d_out_t = Tensor::f32(d_out, vec![b, s, h.hidden]);
                     let input = stash[mb].take().expect("bwd before fwd");
@@ -324,7 +283,7 @@ impl RankTrainer for PpTrainer {
                             *g += d;
                         }
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, self.prev.unwrap(), 1, (step * 64 + mb) as u64, dx);
+                        p2p.send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dx);
                     }
                 }
             }
@@ -335,12 +294,12 @@ impl RankTrainer for PpTrainer {
         for g in grads.iter_mut() {
             *g *= inv;
         }
-        let lr = ctx.opts.run.lr_at(step) as f32;
+        let lr = ctx.spec.run.lr_at(step) as f32;
         let gn = self.opt.step(
             self.params.as_f32_mut()?,
             &grads,
             lr,
-            clip_now(&ctx.opts.run, step),
+            clip_now(&ctx.spec.run, step),
         );
         Ok(StepOutcome { loss: step_loss / micro as f32, grad_norm: gn })
     }
@@ -374,14 +333,14 @@ impl RankTrainer for PpTrainer {
 
     fn merge_aux(
         mm: &ModelManifest,
-        opts: &TrainOptions,
+        plan: &ParallelismPlan,
         report: &mut TrainReport,
         aux: Vec<AuxParams>,
     ) -> Result<()> {
         // assemble the full parameter vector from every stage's segment
         let global = report.final_params.as_f32_mut()?;
         for a in aux {
-            let specs = stage_specs(mm, opts.topo.pp, a.tag);
+            let specs = stage_specs(mm, plan.topo.pp, a.tag);
             scatter_stage(&a.params, &specs, global);
         }
         Ok(())

@@ -1,0 +1,563 @@
+//! Hybrid PP×EP engine: pipeline stages whose per-stage step runs the EP
+//! per-layer Stage-1 exchange loop over the stage's EP subgroup.
+//!
+//! The mesh slice of pipeline stage `s` is a dp×ep grid. Each microbatch
+//! flows through the stages exactly as in [`train_pp`](super): hidden
+//! states forward on p2p tag 0, cotangents back on tag 1, last stage
+//! fuses its backward into the forward op. Inside a stage, each layer
+//! executes the [`train_ep`](super) loop — `ep_layer_pre_fwd`, Stage-1
+//! token exchange across the stage's EP group, `ep_expert_fwd`,
+//! reduce-scatter of partials — on the same per-layer EP artifacts, so no
+//! dedicated PP×EP artifacts are needed; the plan only requires the EP
+//! degree to be built.
+//!
+//! Placement comes entirely from the [`ParallelismPlan`]: the stage's
+//! layer range and embed/head ownership select the rank-local
+//! [`EpLayout`], and the plan's per-stage segment layout drives the
+//! sharded optimizer — experts shard over the stage's DP group, non-expert
+//! params over DP (SO) or the stage's DP×EP group (EPSO), with the
+//! grad-norm/clip domain spanning the whole world so clipping sees the
+//! same global norm as a DP run.
+//!
+//! Gradient convention matches DP and EP: microbatch-mean everywhere,
+//! expert gradients additionally scaled by 1/EP (the gathered backward
+//! sums every EP peer's token cotangents).
+
+use super::clip_now;
+use super::ep::{exchange_all2all, exchange_allgather, fur_indices, EpComm};
+use super::ep_layout::EpLayout;
+use super::harness::{
+    AuxParams, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
+};
+use super::pipeline::{seq_id, PipeOp};
+use super::plan::ParallelismPlan;
+use super::train_ep::{Arts, ParamSlices};
+use super::TrainReport;
+use crate::comm::{Group, P2p, ReduceDtype};
+use crate::config::ModelManifest;
+use crate::data::BatchPlan;
+use crate::metrics::{Scoped, StepBreakdown};
+use crate::optim::sharded::{plan_segments, ShardedOptimizer};
+use crate::optim::ShardingMode;
+use crate::runtime::Tensor;
+use crate::Result;
+use std::sync::Arc;
+
+/// Per-microbatch forward stash (SAC: layer inputs + Stage-1 exchange
+/// products, everything the stage backward recomputes from).
+struct MbStash {
+    /// stage-0 token batch (needed for the embedding backward)
+    tokens: Option<Tensor>,
+    /// per local layer: `pre_fwd` input
+    h_in: Vec<Tensor>,
+    /// per local layer: gathered tokens / routing weights / shifted ids
+    x_all: Vec<Tensor>,
+    w_all: Vec<Tensor>,
+    idx: Vec<Tensor>,
+}
+
+impl MbStash {
+    fn new(n_layers: usize) -> MbStash {
+        MbStash {
+            tokens: None,
+            h_in: Vec::with_capacity(n_layers),
+            x_all: Vec::with_capacity(n_layers),
+            w_all: Vec::with_capacity(n_layers),
+            idx: Vec::with_capacity(n_layers),
+        }
+    }
+}
+
+pub(super) struct PpEpTrainer {
+    layout: EpLayout,
+    arts: Arts,
+    params: Vec<f32>,
+    opt: ShardedOptimizer,
+    p2p: Arc<P2p>,
+    ep_group: Arc<Group>,
+    ep_rank: usize,
+    stage: usize,
+    first: bool,
+    last: bool,
+    dp_coord: usize,
+    ep_coord: usize,
+    data_rank: usize,
+    prev: Option<usize>,
+    next: Option<usize>,
+    ops: Vec<PipeOp>,
+    loss_dom: Option<LossDomain>,
+}
+
+impl PpEpTrainer {
+    fn exec(
+        &self,
+        ctx: &RankCtx,
+        key: &str,
+        path: &std::path::Path,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        // same cache keys as the EP engine: the artifacts are identical
+        // files, so stages share compiled executables
+        ctx.engine
+            .exec(&format!("{}:{key}", ctx.mm.name), path.to_path_buf(), inputs)
+    }
+
+    /// Forward through this stage's layers, stashing SAC inputs into `st`.
+    fn fwd_through_layers(
+        &self,
+        ctx: &RankCtx,
+        ps: &ParamSlices,
+        mut hcur: Tensor,
+        st: &mut MbStash,
+        breakdown: &mut StepBreakdown,
+    ) -> Result<Tensor> {
+        let h = &ctx.mm.hyper;
+        let ep = ctx.plan.topo.ep;
+        let nr = self.layout.n_local_experts;
+        let (b, s) = (h.batch, h.seq);
+        let t_local = b * s;
+        let t_all = ep * t_local;
+        let k = h.top_k;
+        let hid = h.hidden;
+
+        for l in 0..self.layout.layer_ne.len() {
+            st.h_in.push(hcur.clone());
+            let outs = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                self.exec(ctx, "pre_fwd", &self.arts.pre_fwd, vec![
+                    ps.layer_ne[l].clone(),
+                    hcur,
+                ])?
+            };
+            let mut it = outs.into_iter();
+            let a = it.next().unwrap();
+            let x2d = it.next().unwrap().into_f32()?;
+            let w2d = it.next().unwrap().into_f32()?;
+            let idx_t = it.next().unwrap();
+            let _aux = it.next().unwrap().scalar()?;
+            let mut idx = idx_t.as_i32()?.to_vec();
+            if ctx.spec.fur {
+                idx = fur_indices(t_local, k, h.n_experts);
+            }
+            // ---- Stage 1: token exchange across the stage's EP group ----
+            let (x_all, w_all, idx_all) = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                match ctx.plan.ep_comm {
+                    EpComm::Allgather => {
+                        exchange_allgather(&self.ep_group, self.ep_rank, x2d, w2d, &idx)
+                    }
+                    EpComm::All2All => exchange_all2all(
+                        &self.ep_group,
+                        self.ep_rank,
+                        ep,
+                        nr,
+                        hid,
+                        x2d,
+                        w2d,
+                        &idx,
+                    ),
+                }
+            };
+            let idx_shift: Vec<i32> = idx_all
+                .iter()
+                .map(|&v| v - (self.ep_rank * nr) as i32)
+                .collect();
+            let x_all = Tensor::f32(x_all, vec![t_all, hid]);
+            let w_all = Tensor::f32(w_all, vec![t_all, k]);
+            let idx_shift = Tensor::i32(idx_shift, vec![t_all, k]);
+            let partial = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                self.exec(ctx, "expert_fwd", &self.arts.expert_fwd, vec![
+                    ps.layer_e[l].clone(),
+                    x_all.clone(),
+                    w_all.clone(),
+                    idx_shift.clone(),
+                ])?
+                .remove(0)
+                .into_f32()?
+            };
+            let moe_local = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                self.ep_group
+                    .reduce_scatter_sum_even(self.ep_rank, partial, ReduceDtype::F32)
+            };
+            let mut a_data = a.into_f32()?;
+            for (av, mv) in a_data.iter_mut().zip(moe_local.iter()) {
+                *av += *mv;
+            }
+            hcur = Tensor::f32(a_data, vec![b, s, hid]);
+            st.x_all.push(x_all);
+            st.w_all.push(w_all);
+            st.idx.push(idx_shift);
+        }
+        Ok(hcur)
+    }
+
+    /// Backward through this stage's layers (reverse order), accumulating
+    /// into `grads`; returns the cotangent of the stage *input*.
+    fn bwd_through_layers(
+        &self,
+        ctx: &RankCtx,
+        ps: &ParamSlices,
+        st: &MbStash,
+        mut dh: Vec<f32>,
+        grads: &mut [f32],
+        breakdown: &mut StepBreakdown,
+    ) -> Result<Vec<f32>> {
+        let h = &ctx.mm.hyper;
+        let ep = ctx.plan.topo.ep;
+        let (b, s) = (h.batch, h.seq);
+        let t_local = b * s;
+        let t_all = ep * t_local;
+        let k = h.top_k;
+        let hid = h.hidden;
+
+        for l in (0..self.layout.layer_ne.len()).rev() {
+            let d_moe_full = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                self.ep_group.allgather(self.ep_rank, dh.clone())
+            };
+            let outs = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                self.exec(ctx, "expert_bwd", &self.arts.expert_bwd, vec![
+                    ps.layer_e[l].clone(),
+                    st.x_all[l].clone(),
+                    st.w_all[l].clone(),
+                    st.idx[l].clone(),
+                    Tensor::f32(d_moe_full, vec![t_all, hid]),
+                ])?
+            };
+            let dx_partial = outs[0].as_f32()?.to_vec();
+            let dw_partial = outs[1].as_f32()?.to_vec();
+            for (g, d) in grads[self.layout.layer_e[l].clone()]
+                .iter_mut()
+                .zip(outs[2].as_f32()?)
+            {
+                *g += d;
+            }
+            let (dx_local, dw_local) = {
+                let _t = Scoped::new(&mut breakdown.comm_secs);
+                (
+                    self.ep_group.reduce_scatter_sum_even(
+                        self.ep_rank,
+                        dx_partial,
+                        ReduceDtype::F32,
+                    ),
+                    self.ep_group.reduce_scatter_sum_even(
+                        self.ep_rank,
+                        dw_partial,
+                        ReduceDtype::F32,
+                    ),
+                )
+            };
+            let outs = {
+                let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                self.exec(ctx, "pre_bwd", &self.arts.pre_bwd, vec![
+                    ps.layer_ne[l].clone(),
+                    st.h_in[l].clone(),
+                    Tensor::f32(dh.clone(), vec![b, s, hid]),
+                    Tensor::f32(dx_local, vec![t_local, hid]),
+                    Tensor::f32(dw_local, vec![t_local, k]),
+                ])?
+            };
+            dh = outs[0].as_f32()?.to_vec();
+            for (g, d) in grads[self.layout.layer_ne[l].clone()]
+                .iter_mut()
+                .zip(outs[1].as_f32()?)
+            {
+                *g += d;
+            }
+        }
+        Ok(dh)
+    }
+}
+
+impl RankTrainer for PpEpTrainer {
+    const LABEL: &'static str = "ppep";
+    type Shared = P2p;
+
+    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
+        // dp×ep pairs are the data ranks (EP scales the batch like DP)
+        BatchPlan {
+            dp: plan.topo.dp * plan.topo.ep,
+            micro_batch: mm.hyper.batch,
+            micro_batches: plan.micro_batches,
+        }
+    }
+
+    fn shared(_mm: &ModelManifest, plan: &ParallelismPlan) -> Result<Arc<P2p>> {
+        // tag 0 = fwd activations, 1 = cotangents
+        Ok(P2p::new(plan.topo.world(), 2))
+    }
+
+    fn poison_shared(shared: &P2p) {
+        shared.poison();
+    }
+
+    fn setup(ctx: &RankCtx, shared: &Arc<P2p>, global_params: Vec<f32>) -> Result<PpEpTrainer> {
+        let rank = ctx.rank;
+        let mm = &ctx.mm;
+        let topo = ctx.plan.topo;
+        let (ep, pp) = (topo.ep, topo.pp);
+        let c = ctx.mesh.coord(rank);
+        let stage = c.pp;
+        let sp = &ctx.plan.stages[stage];
+        let layout =
+            EpLayout::for_stage(mm, ep, c.ep, sp.layers.clone(), sp.has_embed, sp.has_head);
+        debug_assert_eq!(layout.ne_len, sp.seg.ne_len);
+        debug_assert_eq!(layout.e_len, sp.seg.e_len);
+        debug_assert_eq!(layout.n_local_experts, sp.experts_per_rank);
+        let arts = Arts::load(mm, ep)?;
+        let (dp_group, dp_rank) = ctx.mesh.dp_group(rank);
+        let (ep_group, ep_rank) = ctx.mesh.ep_group(rank);
+        let (dpep_group, dpep_rank) = ctx.mesh.dpep_group(rank);
+        let (prev, next) = ctx.mesh.pp_neighbours(rank);
+
+        let params = layout.extract(&global_params);
+        drop(global_params);
+
+        let segs = plan_segments(
+            ctx.plan.mode,
+            sp.seg,
+            dp_group,
+            dp_rank,
+            dpep_group,
+            dpep_rank,
+            ep,
+        );
+        let opt = ShardedOptimizer::new(
+            segs,
+            Arc::clone(ctx.mesh.world_group()),
+            rank,
+            ctx.spec.adam(),
+            ctx.spec.reduce_dtype(),
+            ctx.spec.run.grad_clip,
+        );
+
+        let last = stage == pp - 1;
+        Ok(PpEpTrainer {
+            layout,
+            arts,
+            params,
+            opt,
+            p2p: Arc::clone(shared),
+            ep_group: Arc::clone(ep_group),
+            ep_rank,
+            stage,
+            first: stage == 0,
+            last,
+            dp_coord: c.dp,
+            ep_coord: c.ep,
+            data_rank: c.dp * ep + c.ep,
+            prev,
+            next,
+            ops: ctx.plan.schedule.ops(stage, pp, ctx.plan.micro_batches),
+            loss_dom: last.then(|| LossDomain {
+                group: Arc::clone(dpep_group),
+                group_rank: dpep_rank,
+                record: c.dp == 0 && c.ep == 0,
+            }),
+        })
+    }
+
+    fn step(
+        &mut self,
+        ctx: &RankCtx,
+        step: usize,
+        breakdown: &mut StepBreakdown,
+    ) -> Result<StepOutcome> {
+        let rank = ctx.rank;
+        let h = &ctx.mm.hyper;
+        let ep = ctx.plan.topo.ep;
+        let micro = ctx.plan.micro_batches;
+        let (b, s) = (h.batch, h.seq);
+        let hid = h.hidden;
+        let n_local = self.layout.layer_ne.len();
+
+        let ps = ParamSlices::new(&self.params, &self.layout);
+        let mut grads = vec![0.0f32; self.layout.local_len()];
+        let mut step_loss = 0.0f32;
+        let mut stash: Vec<Option<MbStash>> = (0..micro).map(|_| None).collect();
+
+        for op in &self.ops {
+            match *op {
+                PipeOp::Fwd { mb, .. } => {
+                    let mut st = MbStash::new(n_local);
+                    let h_in = if self.first {
+                        let tokens = ctx.fetch_tokens(step, self.data_rank, mb, breakdown);
+                        let h0 = {
+                            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                            self.exec(ctx, "embed_fwd", &self.arts.embed_fwd, vec![
+                                ps.emb.clone(),
+                                tokens.clone(),
+                            ])?
+                            .remove(0)
+                        };
+                        st.tokens = Some(tokens);
+                        h0
+                    } else {
+                        let hin = {
+                            let _t = Scoped::new(&mut breakdown.comm_secs);
+                            self.p2p
+                                .recv(self.prev.unwrap(), rank, 0, seq_id(step, mb))
+                        };
+                        Tensor::f32(hin, vec![b, s, hid])
+                    };
+                    let hout = self.fwd_through_layers(ctx, &ps, h_in, &mut st, breakdown)?;
+                    if self.last {
+                        // head + fused stage backward (mirrors train_pp's
+                        // last-stage behaviour: cotangent leaves at once)
+                        let tokens = ctx.fetch_tokens(step, self.data_rank, mb, breakdown);
+                        let outs = {
+                            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                            self.exec(ctx, "head", &self.arts.head, vec![
+                                ps.head.clone(),
+                                hout,
+                                tokens,
+                            ])?
+                        };
+                        let loss = outs[0].scalar()?;
+                        if !loss.is_finite() {
+                            return Err(ctx.non_finite(step));
+                        }
+                        step_loss += loss;
+                        let dh = outs[1].clone().into_f32()?;
+                        for (g, d) in grads[self.layout.head.clone()]
+                            .iter_mut()
+                            .zip(outs[2].as_f32()?)
+                        {
+                            *g += d;
+                        }
+                        let dh_in =
+                            self.bwd_through_layers(ctx, &ps, &st, dh, &mut grads, breakdown)?;
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        self.p2p
+                            .send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dh_in);
+                    } else {
+                        {
+                            let _t = Scoped::new(&mut breakdown.comm_secs);
+                            self.p2p.send(
+                                rank,
+                                self.next.unwrap(),
+                                0,
+                                seq_id(step, mb),
+                                hout.into_f32()?,
+                            );
+                        }
+                        stash[mb] = Some(st);
+                    }
+                }
+                PipeOp::Bwd { mb, .. } => {
+                    if self.last {
+                        continue; // fused into Fwd above
+                    }
+                    let d_out = {
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        self.p2p
+                            .recv(self.next.unwrap(), rank, 1, seq_id(step, mb))
+                    };
+                    let st = stash[mb].take().expect("bwd before fwd");
+                    let dh_in =
+                        self.bwd_through_layers(ctx, &ps, &st, d_out, &mut grads, breakdown)?;
+                    if self.first {
+                        let tokens = st.tokens.as_ref().unwrap();
+                        let outs = {
+                            let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
+                            self.exec(ctx, "embed_bwd", &self.arts.embed_bwd, vec![
+                                ps.emb.clone(),
+                                tokens.clone(),
+                                Tensor::f32(dh_in, vec![b, s, hid]),
+                            ])?
+                        };
+                        for (g, d) in
+                            grads[self.layout.emb.clone()].iter_mut().zip(outs[0].as_f32()?)
+                        {
+                            *g += d;
+                        }
+                    } else {
+                        let _t = Scoped::new(&mut breakdown.comm_secs);
+                        self.p2p
+                            .send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dh_in);
+                    }
+                }
+            }
+        }
+
+        // ---- SO correctness step: NE grads must average over EP too ----
+        if ctx.plan.mode == ShardingMode::So && ep > 1 {
+            let _t = Scoped::new(&mut breakdown.comm_secs);
+            let ne = grads[..self.layout.ne_len].to_vec();
+            let avg = self
+                .ep_group
+                .allreduce_mean(self.ep_rank, ne, ctx.spec.reduce_dtype());
+            grads[..self.layout.ne_len].copy_from_slice(&avg);
+        }
+
+        // microbatch mean everywhere; expert grads additionally divide by
+        // EP (the gathered backward sums every EP peer's cotangents) so
+        // all engines share the mean-over-global-batch convention
+        let inv_mb = 1.0 / micro as f32;
+        for g in grads[..self.layout.ne_len].iter_mut() {
+            *g *= inv_mb;
+        }
+        let inv_e = inv_mb / ep as f32;
+        for g in grads[self.layout.ne_len..].iter_mut() {
+            *g *= inv_e;
+        }
+
+        let lr = ctx.spec.run.lr_at(step) as f32;
+        let gn = self
+            .opt
+            .step(&mut self.params, &grads, lr, clip_now(&ctx.spec.run, step));
+        Ok(StepOutcome { loss: step_loss / micro as f32, grad_norm: gn })
+    }
+
+    fn params_mut(&mut self) -> Result<&mut [f32]> {
+        Ok(&mut self.params)
+    }
+
+    fn loss_domain(&self) -> Option<&LossDomain> {
+        self.loss_dom.as_ref()
+    }
+
+    fn finish(self, ctx: &RankCtx) -> Result<RankFinish> {
+        // dp=0 plane reassembles the model: the (last-stage, ep=0) rank
+        // seeds the report; every other (stage, ep) slice arrives as an
+        // Aux payload and is scattered in by merge_aux — no collectives
+        if self.dp_coord != 0 {
+            return Ok(RankFinish::None);
+        }
+        if self.last && self.ep_coord == 0 {
+            let mut final_params = vec![0.0f32; ctx.mm.param_count];
+            self.layout.scatter(&self.params, &mut final_params);
+            return Ok(RankFinish::Report(Box::new(ReportParts {
+                final_params: Tensor::f32(final_params, vec![ctx.mm.param_count]),
+                opt_state_bytes: self.opt.state_bytes(),
+                optimizer_update_secs: self.opt.update_secs,
+                optimizer_comm_secs: self.opt.comm_secs,
+            })));
+        }
+        Ok(RankFinish::Aux(AuxParams {
+            tag: self.stage * ctx.plan.topo.ep + self.ep_coord,
+            params: self.params,
+        }))
+    }
+
+    fn merge_aux(
+        mm: &ModelManifest,
+        plan: &ParallelismPlan,
+        report: &mut TrainReport,
+        aux: Vec<AuxParams>,
+    ) -> Result<()> {
+        let ep = plan.topo.ep;
+        let global = report.final_params.as_f32_mut()?;
+        for a in aux {
+            let (stage, ep_rank) = (a.tag / ep, a.tag % ep);
+            let sp = &plan.stages[stage];
+            let lay =
+                EpLayout::for_stage(mm, ep, ep_rank, sp.layers.clone(), sp.has_embed, sp.has_head);
+            lay.scatter(&a.params, global);
+        }
+        Ok(())
+    }
+}

@@ -14,13 +14,16 @@ use anyhow::anyhow;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Kinds of node failure the paper distinguishes.
+/// Kinds of failure the launcher distinguishes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FailureKind {
     /// training run exits immediately (ping failure, segfault, OS error)
     Hard,
     /// run continues but produces local NaNs on the failed node
     Soft,
+    /// invalid job configuration (plan validation, unknown model) —
+    /// deterministic, so relaunching on a buffer node cannot help
+    Config,
 }
 
 /// Pool of nodes with spares ("launch the training run with some extra
@@ -79,11 +82,17 @@ pub struct Failure {
     pub kind: FailureKind,
 }
 
-/// Classify a rank error string back into a failure (the trainers abort
-/// ranks with recognizable messages).
+/// Classify a trainer error string back into a failure. Trainers abort
+/// ranks with recognizable messages; `coordinator::train`'s preflight
+/// emits the stable `plan validation failed [<check>]` prefix.
 pub fn classify(err: &anyhow::Error) -> FailureKind {
     let s = format!("{err:#}");
-    if s.contains("non-finite") || s.contains("NaN") {
+    if s.contains("plan validation failed")
+        || s.contains("parallelism plan mismatch")
+        || s.contains("unknown model config")
+    {
+        FailureKind::Config
+    } else if s.contains("non-finite") || s.contains("NaN") {
         FailureKind::Soft
     } else {
         FailureKind::Hard
@@ -122,6 +131,12 @@ impl Launcher {
                 Ok(v) => return Ok(v),
                 Err(e) => {
                     let kind = classify(&e);
+                    // configuration errors are deterministic: replacing a
+                    // node and relaunching reruns the same preflight —
+                    // surface the error instead of burning buffer nodes
+                    if kind == FailureKind::Config {
+                        return Err(anyhow!("configuration error (not relaunchable): {e:#}"));
+                    }
                     if n_try >= self.max_relaunches {
                         return Err(anyhow!(
                             "giving up after {n_try} relaunches: {e:#}"
@@ -222,10 +237,14 @@ impl StepHook for NanInjectHook {
 }
 
 /// Checkpoint-on-interval hook (used with the launcher so relaunches
-/// resume from the latest valid checkpoint).
+/// resume from the latest valid checkpoint). When `plan` is set, the
+/// spec's fingerprint is recorded in every checkpoint so resume can
+/// verify plan compatibility (`Checkpoint::ensure_plan`).
 pub struct CkptHook {
     pub every: usize,
     pub dual: DualCheckpointer,
+    /// plan fingerprint to record (see `JobSpec::fingerprint`)
+    pub plan: Option<String>,
 }
 
 impl StepHook for CkptHook {
@@ -236,6 +255,7 @@ impl StepHook for CkptHook {
                     step,
                     params: params.to_vec(),
                     moments: Vec::new(),
+                    plan: self.plan.clone(),
                 })
                 .map(|_| ())?;
         }
@@ -292,7 +312,37 @@ mod tests {
         assert_eq!(classify(&anyhow!("rank 3: NaN detected at step 5")), FailureKind::Soft);
         assert_eq!(classify(&anyhow!("rank 0: non-finite loss at step 2")), FailureKind::Soft);
         assert_eq!(classify(&anyhow!("rank 1: os error")), FailureKind::Hard);
+        assert_eq!(
+            classify(&anyhow!("plan validation failed [ep-artifacts]: no EP=3 artifacts")),
+            FailureKind::Config
+        );
+        assert_eq!(
+            classify(&anyhow!("unknown model config `mula-huge`")),
+            FailureKind::Config
+        );
+        // a checkpoint resumed under the wrong topology is deterministic
+        // too — relaunching on a buffer node cannot fix it
+        assert_eq!(
+            classify(&anyhow!(
+                "checkpoint parallelism plan mismatch: saved under `a`, resuming with `b`"
+            )),
+            FailureKind::Config
+        );
         assert_eq!(parse_rank(&anyhow!("rank 7: x")), Some(7));
+    }
+
+    #[test]
+    fn launcher_does_not_burn_buffers_on_config_errors() {
+        let l = Launcher::new(2, 2);
+        let mut attempts = 0;
+        let r: Result<()> = l.run(|_, _| {
+            attempts += 1;
+            Err(anyhow!("plan validation failed [micro-batches]: got 0"))
+        });
+        let e = r.unwrap_err().to_string();
+        assert!(e.contains("not relaunchable"), "{e}");
+        assert_eq!(attempts, 1, "config errors must not be retried");
+        assert_eq!(l.pool.buffer_len(), 2, "no buffer node consumed");
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //! - [`runtime`]  — PJRT executor pool: load + execute HLO artifacts
 //! - [`comm`]     — in-process collectives over an N-D device mesh
 //! - [`config`]   — manifest (param layout / artifacts) + run configs
-//! - [`coordinator`] — rank-execution harness, DP/EP/PP engines,
-//!   pipeline schedules, EP token exchange
+//! - [`coordinator`] — `JobSpec`/`ParallelismPlan` API, rank-execution
+//!   harness, DP/EP/PP/PP×EP engines, pipeline schedules, EP token
+//!   exchange
 //! - [`optim`]    — AdamW, sharded optimizer (SO), EPSO (paper §3.2)
 //! - [`data`]     — tokenize → shuffle → shard pipeline + mmap loader
 //! - [`ckpt`]     — dual / persistent / DP-scattered checkpointing (§4)

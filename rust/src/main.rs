@@ -3,20 +3,42 @@
 //! Subcommands:
 //!   models                      list model configs (paper Table 1 + analogs)
 //!   preprocess --out DIR        run tokenize->shuffle->shard on the corpus
-//!   train --model M [--dp N --ep N --pp N --steps N --mode so|epso --fur]
+//!   train --model M [--dp N --ep N --pp N --steps N --warmup N --lr F]
+//!         [--mode so|epso] [--ep-comm allgather|all2all]
+//!         [--schedule gpipe|1f1b] [--micro N] [--fur] [--pool N]
+//!         [--seed N] [--data DIR] [--log-every N]
 //!   eval --model M              run the synthetic benchmark suite
+//!   plans --world N [--model M] enumerate dp×ep×pp placements of a world
 //!   scaling [--fur]             Aurora-model Fig 4b sweep
+//!
+//! Unknown flags are rejected with a "did you mean" suggestion — a typo'd
+//! `--stpes 500` fails loudly instead of silently training the default 50
+//! steps.
 
+use anyhow::anyhow;
 use optimus::cluster::{scaling_efficiency, Aurora};
-use optimus::comm::Topology;
 use optimus::config::models::{MulaSpec, MULA_220B, PAPER_MODELS};
 use optimus::config::Manifest;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::pipeline::Schedule;
+use optimus::coordinator::{self, ep::EpComm, JobSpec, ParallelismPlan};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::optim::ShardingMode;
 use optimus::runtime::Engine;
 use optimus::util::cli::Args;
+
+const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|scaling> [flags]\n\
+                     see rust/src/main.rs header for flags";
+
+const TRAIN_FLAGS: &[&str] = &[
+    "model", "data", "dp", "ep", "pp", "steps", "warmup", "lr", "mode", "ep-comm",
+    "schedule", "micro", "fur", "pool", "seed", "log-every",
+];
+const PREPROCESS_FLAGS: &[&str] =
+    &["out", "seed", "files", "docs", "context", "shuffle-seed", "per-shard"];
+const EVAL_FLAGS: &[&str] = &["model", "seed", "cases"];
+const PLANS_FLAGS: &[&str] = &["world", "model"];
+const SCALING_FLAGS: &[&str] = &["fur", "model"];
 
 fn main() -> optimus::Result<()> {
     let args = Args::from_env();
@@ -25,15 +47,18 @@ fn main() -> optimus::Result<()> {
         Some("preprocess") => do_preprocess(&args),
         Some("train") => do_train(&args),
         Some("eval") => do_eval(&args),
+        Some("plans") => do_plans(&args),
         Some("scaling") => do_scaling(&args),
         _ => {
-            eprintln!(
-                "usage: optimus <models|preprocess|train|eval|scaling> [flags]\n\
-                 see rust/src/main.rs header for flags"
-            );
+            eprintln!("{USAGE}");
             Ok(())
         }
     }
+}
+
+fn check(args: &Args, allowed: &[&str]) -> optimus::Result<()> {
+    args.expect_flags(allowed)
+        .map_err(|m| anyhow!("{m}\n{USAGE}"))
 }
 
 fn models() -> optimus::Result<()> {
@@ -74,6 +99,7 @@ fn default_data(args: &Args, context: usize) -> optimus::Result<std::path::PathB
 }
 
 fn do_preprocess(args: &Args) -> optimus::Result<()> {
+    check(args, PREPROCESS_FLAGS)?;
     let out = std::path::PathBuf::from(args.str_or("out", "data/shards"));
     let files = corpus::data_files(
         args.usize_or("seed", 42) as u64,
@@ -92,29 +118,54 @@ fn do_preprocess(args: &Args) -> optimus::Result<()> {
 }
 
 fn do_train(args: &Args) -> optimus::Result<()> {
+    check(args, TRAIN_FLAGS)?;
     let model = args.str_or("model", "mula-tiny");
     let man = Manifest::load(&optimus::artifacts_dir())?;
     let mm = man.config(&model)?;
     let data = default_data(args, mm.hyper.seq + 1)?;
-    let topo = Topology {
-        dp: args.usize_or("dp", 2),
-        ep: args.usize_or("ep", 1),
-        pp: args.usize_or("pp", 1),
-    };
-    let mut o = TrainOptions::new(&model, topo, data);
-    o.run.steps = args.usize_or("steps", 50);
-    o.run.warmup_steps = args.usize_or("warmup", o.run.steps / 10);
-    o.run.peak_lr = args.f64_or("lr", 2e-3);
-    o.run.min_lr = o.run.peak_lr / 10.0;
-    o.mode = if args.str_or("mode", "epso") == "so" {
-        ShardingMode::So
-    } else {
-        ShardingMode::Epso
-    };
-    o.fur = args.bool_or("fur", false);
-    o.micro_batches = args.usize_or("micro", 2);
-    o.engine_pool = args.usize_or("pool", 2);
-    let r = coordinator::train(&man, &o)?;
+    let steps = args.usize_or("steps", 50);
+    let lr = args.f64_or("lr", 2e-3);
+
+    let mut b = JobSpec::new(&model)
+        .data_dir(data)
+        .topology(
+            args.usize_or("dp", 2),
+            args.usize_or("ep", 1),
+            args.usize_or("pp", 1),
+        )
+        .steps(steps)
+        .warmup_steps(args.usize_or("warmup", steps / 10))
+        .peak_lr(lr)
+        .min_lr(lr / 10.0)
+        .seed(args.usize_or("seed", 1234) as u64)
+        .fur(args.bool_or("fur", false))
+        .micro_batches(args.usize_or("micro", 2))
+        .engine_pool(args.usize_or("pool", 2));
+    if let Some(mode) = args.get("mode") {
+        match mode {
+            "so" => b = b.sharding(ShardingMode::So),
+            // `--mode epso` was the old CLI default for every topology;
+            // at ep=1 EPSO degrades to SO (numerically identical), so
+            // keep that invocation working instead of hard-erroring
+            "epso" if args.usize_or("ep", 1) > 1 => b = b.sharding(ShardingMode::Epso),
+            "epso" => eprintln!(
+                "note: EPSO needs ep > 1; this ep=1 run uses SO (numerically identical)"
+            ),
+            other => return Err(anyhow!("--mode wants so|epso, got `{other}`")),
+        }
+    }
+    if let Some(c) = args.get("ep-comm") {
+        b = b.ep_comm(
+            EpComm::parse(c).ok_or_else(|| anyhow!("--ep-comm wants allgather|all2all, got `{c}`"))?,
+        );
+    }
+    if let Some(s) = args.get("schedule") {
+        b = b.schedule(
+            Schedule::parse(s).ok_or_else(|| anyhow!("--schedule wants gpipe|1f1b, got `{s}`"))?,
+        );
+    }
+    let spec = b.build()?;
+    let r = coordinator::train(&man, &spec)?;
     for (s, l) in &r.loss.points {
         if s % args.usize_or("log-every", 5) == 0 {
             println!("step {s:>5}  loss {l:.4}");
@@ -130,6 +181,7 @@ fn do_train(args: &Args) -> optimus::Result<()> {
 }
 
 fn do_eval(args: &Args) -> optimus::Result<()> {
+    check(args, EVAL_FLAGS)?;
     let model = args.str_or("model", "mula-tiny");
     let man = Manifest::load(&optimus::artifacts_dir())?;
     let mm = man.config(&model)?;
@@ -146,7 +198,33 @@ fn do_eval(args: &Args) -> optimus::Result<()> {
     Ok(())
 }
 
+/// Sweep tooling: list every dp×ep×pp placement of a world size; with
+/// `--model`, mark which placements the built artifacts can run — using
+/// the same validation table `train` enforces, so the two never drift.
+fn do_plans(args: &Args) -> optimus::Result<()> {
+    check(args, PLANS_FLAGS)?;
+    let world = args.usize_or("world", 8);
+    let man = args
+        .get("model")
+        .map(|_| Manifest::load(&optimus::artifacts_dir()))
+        .transpose()?;
+    let mm = match (&man, args.get("model")) {
+        (Some(man), Some(model)) => Some(man.config(model)?),
+        _ => None,
+    };
+    println!("dp×ep×pp placements of world={world}:");
+    for t in ParallelismPlan::enumerate(world) {
+        let note = match mm {
+            Some(mm) if ParallelismPlan::new(t).validate_model(mm).is_ok() => "  runnable",
+            _ => "",
+        };
+        println!("  dp={:<3} ep={:<3} pp={:<3}{note}", t.dp, t.ep, t.pp);
+    }
+    Ok(())
+}
+
 fn do_scaling(args: &Args) -> optimus::Result<()> {
+    check(args, SCALING_FLAGS)?;
     let hw = Aurora::default();
     let fur = args.bool_or("fur", false);
     let model = args.str_or("model", "mula-220b-a10b");

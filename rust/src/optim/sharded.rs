@@ -167,22 +167,35 @@ impl ShardedOptimizer {
     }
 }
 
-/// Build the segment list for a rank whose local params are
-/// `[non_expert(ne_len) || expert(e_len)]`.
+/// Rank-local `[non-expert(ne_len) || expert(e_len)]` segment lengths.
+/// Computed per pipeline stage by
+/// [`crate::coordinator::ParallelismPlan::materialized`] and handed to
+/// [`plan_segments`] — the plan, not the trainer, owns the layout.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SegmentLayout {
+    pub ne_len: usize,
+    pub e_len: usize,
+}
+
+/// Plan-driven [`SegmentSpec`] construction for a rank whose local params
+/// are `[non_expert(ne_len) || expert(e_len)]` — the stage's segment
+/// layout plus the stage-local process groups fully determine the
+/// sharding.
 ///
 /// * `dp_group`   — ranks replicating the expert block (same ep coord)
 /// * `dpep_group` — all ranks of the pp stage (replicate the NE block)
 /// * `ep` — EP degree (for SO's norm multiplicity of the NE block)
-pub fn build_segments(
+#[allow(clippy::too_many_arguments)]
+pub fn plan_segments(
     mode: ShardingMode,
-    ne_len: usize,
-    e_len: usize,
+    layout: SegmentLayout,
     dp_group: &Arc<Group>,
     dp_rank: usize,
     dpep_group: &Arc<Group>,
     dpep_rank: usize,
     ep: usize,
 ) -> Vec<SegmentSpec> {
+    let SegmentLayout { ne_len, e_len } = layout;
     let mut v = Vec::new();
     match mode {
         ShardingMode::So => {
@@ -252,8 +265,8 @@ mod tests {
                     let c = mesh.coord(r);
                     let (dpg, dpr) = mesh.dp_group(r);
                     let (xg, xr) = mesh.dpep_group(r);
-                    let segs = build_segments(
-                        mode, ne_len, e_len, dpg, dpr, xg, xr, 2,
+                    let segs = plan_segments(
+                        mode, SegmentLayout { ne_len, e_len }, dpg, dpr, xg, xr, 2,
                     );
                     let mut opt = ShardedOptimizer::new(
                         segs,

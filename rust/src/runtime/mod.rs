@@ -27,6 +27,20 @@ struct Request {
     path: PathBuf,
     inputs: Vec<Tensor>,
     reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    /// when the caller enqueued the request — the executor splits
+    /// queue-wait from execution time at pickup
+    queued: std::time::Instant,
+}
+
+/// Pool counters, split so queue pressure and artifact cost are separately
+/// visible: `queue_secs` is time requests sat waiting for a free executor
+/// (the pool-sizing signal), `exec_secs` is time actually spent compiling
+/// and running artifacts.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub queue_secs: f64,
+    pub exec_secs: f64,
 }
 
 /// Handle to the executor pool. Cheap to clone; `exec` blocks until the
@@ -36,6 +50,7 @@ pub struct Engine {
     tx: mpsc::Sender<Request>,
     // stats
     calls: Arc<AtomicU64>,
+    queue_nanos: Arc<AtomicU64>,
     exec_nanos: Arc<AtomicU64>,
 }
 
@@ -44,17 +59,22 @@ impl Engine {
     pub fn new_pool(n: usize) -> Result<Engine> {
         let (tx, rx) = mpsc::channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
+        let queue_nanos = Arc::new(AtomicU64::new(0));
+        let exec_nanos = Arc::new(AtomicU64::new(0));
         for i in 0..n.max(1) {
             let rx = Arc::clone(&rx);
+            let q = Arc::clone(&queue_nanos);
+            let e = Arc::clone(&exec_nanos);
             std::thread::Builder::new()
                 .name(format!("pjrt-exec-{i}"))
-                .spawn(move || executor_loop(rx))
+                .spawn(move || executor_loop(rx, q, e))
                 .expect("spawn executor");
         }
         Ok(Engine {
             tx,
             calls: Arc::new(AtomicU64::new(0)),
-            exec_nanos: Arc::new(AtomicU64::new(0)),
+            queue_nanos,
+            exec_nanos,
         })
     }
 
@@ -64,28 +84,36 @@ impl Engine {
 
     /// Execute artifact at `path` (cache key `key`) on the pool.
     pub fn exec(&self, key: &str, path: PathBuf, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        let t0 = std::time::Instant::now();
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Request { key: key.to_string(), path, inputs, reply: rtx })
+            .send(Request {
+                key: key.to_string(),
+                path,
+                inputs,
+                reply: rtx,
+                queued: std::time::Instant::now(),
+            })
             .map_err(|_| anyhow!("executor pool is gone"))?;
         let out = rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?;
         self.calls.fetch_add(1, Ordering::Relaxed);
-        self.exec_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         out
     }
 
-    /// (total artifact calls, total seconds inside exec)
-    pub fn stats(&self) -> (u64, f64) {
-        (
-            self.calls.load(Ordering::Relaxed),
-            self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
-        )
+    /// Pool counters with the queue-wait / execution split.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            calls: self.calls.load(Ordering::Relaxed),
+            queue_secs: self.queue_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            exec_secs: self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
     }
 }
 
-fn executor_loop(rx: Arc<Mutex<mpsc::Receiver<Request>>>) {
+fn executor_loop(
+    rx: Arc<Mutex<mpsc::Receiver<Request>>>,
+    queue_nanos: Arc<AtomicU64>,
+    exec_nanos: Arc<AtomicU64>,
+) {
     // One PJRT client + executable cache per executor thread; all xla
     // objects stay on this thread.
     let client = match xla::PjRtClient::cpu() {
@@ -104,8 +132,12 @@ fn executor_loop(rx: Arc<Mutex<mpsc::Receiver<Request>>>) {
                 Err(_) => return, // engine dropped
             }
         };
+        queue_nanos.fetch_add(req.queued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let t_exec = std::time::Instant::now();
         let reply = req.reply.clone();
-        let _ = reply.send(run_one(&client, &mut cache, req));
+        let result = run_one(&client, &mut cache, req);
+        exec_nanos.fetch_add(t_exec.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let _ = reply.send(result);
     }
 }
 
@@ -201,6 +233,10 @@ mod tests {
             let out = h.join().unwrap();
             assert_eq!(out.len(), 2);
         }
-        assert_eq!(eng.stats().0, 4);
+        let st = eng.stats();
+        assert_eq!(st.calls, 4);
+        // executor time is real work; the queue split never counts it
+        assert!(st.exec_secs > 0.0, "{st:?}");
+        assert!(st.queue_secs >= 0.0, "{st:?}");
     }
 }

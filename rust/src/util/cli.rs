@@ -1,7 +1,11 @@
 //! Tiny CLI argument parser (`clap` is unavailable offline).
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
-//! positional arguments; typed getters with defaults.
+//! positional arguments; typed getters with defaults. Subcommands declare
+//! their accepted flags and call [`Args::expect_flags`], which rejects
+//! unknown flags with a "did you mean" suggestion instead of silently
+//! falling back to defaults (a typo'd `--stpes 500` used to train 50
+//! steps).
 
 use std::collections::BTreeMap;
 
@@ -65,6 +69,56 @@ impl Args {
             .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
             .unwrap_or(default)
     }
+
+    /// Reject any flag not in `allowed`. The error message names the
+    /// offending flag, suggests the closest accepted one (edit distance
+    /// ≤ 2 or a prefix match), and lists what the subcommand accepts.
+    pub fn expect_flags(&self, allowed: &[&str]) -> std::result::Result<(), String> {
+        for k in self.flags.keys() {
+            if allowed.contains(&k.as_str()) {
+                continue;
+            }
+            let mut msg = format!("unknown flag `--{k}`");
+            if let Some(s) = closest(k, allowed) {
+                msg.push_str(&format!(" — did you mean `--{s}`?"));
+            }
+            let list: Vec<String> = allowed.iter().map(|a| format!("--{a}")).collect();
+            msg.push_str(&format!("\naccepted flags: {}", list.join(" ")));
+            return Err(msg);
+        }
+        Ok(())
+    }
+}
+
+/// Closest accepted flag by Levenshtein distance (≤ 2) or prefix match.
+fn closest<'a>(typo: &str, allowed: &[&'a str]) -> Option<&'a str> {
+    let mut best: Option<(&str, usize)> = None;
+    for &a in allowed {
+        if a.starts_with(typo) || typo.starts_with(a) {
+            return Some(a);
+        }
+        let d = levenshtein(typo, a);
+        if d <= 2 && best.map(|(_, bd)| d < bd).unwrap_or(true) {
+            best = Some((a, d));
+        }
+    }
+    best.map(|(a, _)| a)
+}
+
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -98,5 +152,37 @@ mod tests {
         let a = parse("--name mula-tiny --dp 4");
         assert_eq!(a.str_or("name", ""), "mula-tiny");
         assert_eq!(a.usize_or("dp", 1), 4);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_suggestion() {
+        let allowed = &["steps", "warmup", "lr", "ep-comm"];
+        let a = parse("train --stpes 500");
+        let e = a.expect_flags(allowed).unwrap_err();
+        assert!(e.contains("unknown flag `--stpes`"), "{e}");
+        assert!(e.contains("did you mean `--steps`?"), "{e}");
+        assert!(e.contains("accepted flags:"), "{e}");
+
+        // prefix matches beat edit distance
+        let a = parse("train --ep allgather");
+        let e = a.expect_flags(allowed).unwrap_err();
+        assert!(e.contains("did you mean `--ep-comm`?"), "{e}");
+
+        // far-off typos get no suggestion but still fail
+        let a = parse("train --zzzzzz 1");
+        let e = a.expect_flags(allowed).unwrap_err();
+        assert!(!e.contains("did you mean"), "{e}");
+
+        // everything accepted passes
+        let a = parse("train --steps 500 --lr 0.1");
+        assert!(a.expect_flags(allowed).is_ok());
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("steps", "steps"), 0);
+        assert_eq!(levenshtein("stpes", "steps"), 2);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
     }
 }

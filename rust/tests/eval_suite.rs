@@ -2,8 +2,7 @@
 //! qualitative claim — training improves probe scores, and the synthetic
 //! suite produces a full table (Figs 2-3 machinery).
 
-use optimus::comm::Topology;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::runtime::{Engine, Tensor};
@@ -33,13 +32,17 @@ fn training_improves_probe_scores() {
     );
     let before = eval::run_suite(&engine, mm, &base_params, 16).unwrap();
 
-    let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir());
-    o.run.steps = 60;
-    o.run.warmup_steps = 6;
-    o.run.peak_lr = 3e-3;
-    o.run.min_lr = 3e-4;
-    o.engine_pool = 2;
-    let r = coordinator::train(&m, &o).unwrap();
+    let spec = JobSpec::new("mula-tiny")
+        .data_dir(data_dir())
+        .topology(2, 1, 1)
+        .steps(60)
+        .warmup_steps(6)
+        .peak_lr(3e-3)
+        .min_lr(3e-4)
+        .engine_pool(2)
+        .build()
+        .unwrap();
+    let r = coordinator::train(&m, &spec).unwrap();
     let after = eval::run_suite(&engine, mm, &r.final_params, 16).unwrap();
 
     assert_eq!(before.len(), eval::TASKS.len());

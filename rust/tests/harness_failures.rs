@@ -1,11 +1,11 @@
 //! Integration: shared-harness failure semantics, identical across all
-//! three topologies (paper §4 hard-failure handling) — a rank returning
+//! four topologies (paper §4 hard-failure handling) — a rank returning
 //! `Err` mid-step poisons the mesh, peers unblock instead of hanging, and
 //! `train()` surfaces the *root-cause* error (never a peer's panic) —
 //! plus the zero-copy contract of the `Arc`-backed parameter tensor.
 
 use optimus::comm::Topology;
-use optimus::coordinator::{self, TrainOptions};
+use optimus::coordinator::{self, JobSpec};
 use optimus::ft::{classify, FailureKind, HardKillHook};
 use optimus::runtime::{Engine, Tensor};
 use std::path::PathBuf;
@@ -30,13 +30,18 @@ fn assert_root_cause_surfaces(topo: Topology, label: &str) {
     let Some(m) = optimus::manifest_or_skip(&format!("harness_failures::{label}")) else {
         return;
     };
-    let mut o = TrainOptions::new("mula-tiny", topo, data_dir());
-    o.run.steps = 6;
-    o.run.warmup_steps = 2;
-    o.engine_pool = 2;
-    o.hook = Arc::new(HardKillHook::once(1, 2));
+    let spec = JobSpec::new("mula-tiny")
+        .data_dir(data_dir())
+        .topo(topo)
+        .steps(6)
+        .warmup_steps(2)
+        .engine_pool(2)
+        .micro_batches(2)
+        .hook(Arc::new(HardKillHook::once(1, 2)))
+        .build()
+        .unwrap();
     let t0 = std::time::Instant::now();
-    let err = coordinator::train(&m, &o).unwrap_err();
+    let err = coordinator::train(&m, &spec).unwrap_err();
     let msg = format!("{err:#}");
     // root cause, not a peer panic
     assert!(msg.contains("rank 1"), "{label}: wrong rank in `{msg}`");
@@ -68,6 +73,14 @@ fn ep_failure_poisons_mesh_and_surfaces_root_cause() {
 #[test]
 fn pp_failure_poisons_mesh_and_surfaces_root_cause() {
     assert_root_cause_surfaces(Topology { dp: 1, ep: 1, pp: 2 }, "pp");
+}
+
+#[test]
+fn pp_ep_hybrid_failure_poisons_mesh_and_surfaces_root_cause() {
+    // in the hybrid topology a dead rank blocks peers on BOTH fabrics —
+    // ep-group collectives and p2p stage channels; poisoning must unblock
+    // both and still surface the root cause
+    assert_root_cause_surfaces(Topology { dp: 1, ep: 2, pp: 2 }, "pp_ep");
 }
 
 #[test]
@@ -111,11 +124,15 @@ fn training_report_params_share_storage_with_eval_submissions() {
     else {
         return;
     };
-    let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir());
-    o.run.steps = 3;
-    o.run.warmup_steps = 1;
-    o.engine_pool = 2;
-    let r = coordinator::train(&m, &o).unwrap();
+    let spec = JobSpec::new("mula-tiny")
+        .data_dir(data_dir())
+        .topology(2, 1, 1)
+        .steps(3)
+        .warmup_steps(1)
+        .engine_pool(2)
+        .build()
+        .unwrap();
+    let r = coordinator::train(&m, &spec).unwrap();
     // the report's final params flow into eval without a copy
     let handed_to_eval = r.final_params.clone();
     assert!(handed_to_eval.ptr_eq(&r.final_params));

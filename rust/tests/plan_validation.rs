@@ -1,0 +1,261 @@
+//! Preflight validation: every invalid `ParallelismPlan` fails in the
+//! single table-driven `validate` pass — with a stable error string that
+//! `ft::classify` labels as a non-relaunchable `Config` failure — *before*
+//! any rank thread spawns (witnessed by a hook that records whether any
+//! training step ever ran).
+//!
+//! These tests hand-build a synthetic `ModelManifest`, so they run without
+//! HLO artifacts (no `manifest_or_skip`).
+
+use optimus::comm::Topology;
+use optimus::config::{Hyper, Manifest, ModelManifest};
+use optimus::coordinator::{self, JobSpec, ParallelismPlan, StepHook};
+use optimus::data::{corpus, preprocess, Dataset};
+use optimus::ft::{classify, FailureKind};
+use optimus::optim::ShardingMode;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+fn data_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("optimus-pv-data-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = corpus::data_files(42, 2, 8);
+        preprocess::preprocess(&files, 64, 7, &dir, 128).unwrap();
+        dir
+    })
+    .clone()
+}
+
+/// Synthetic manifest: internally consistent hyperparameters, EP=2 and
+/// PP=2 "built", no artifact files (validation never touches them).
+fn tiny_mm(seq: usize) -> ModelManifest {
+    ModelManifest {
+        name: "synthetic".into(),
+        params: Vec::new(),
+        param_count: 0,
+        hyper: Hyper {
+            n_layers: 4,
+            hidden: 8,
+            n_heads: 2,
+            head_dim: 4,
+            intermediate: 16,
+            n_experts: 4,
+            top_k: 2,
+            vocab_size: 32,
+            context: 64,
+            batch: 2,
+            seq,
+            aux_coef: 0.01,
+        },
+        artifacts: BTreeMap::new(),
+        pp_degrees: vec![2],
+        ep_degrees: vec![2],
+        dir: PathBuf::from("/nonexistent"),
+    }
+}
+
+/// The table the issue calls for: every invalid plan, its expected check
+/// tag, and a salient fragment of its message.
+#[test]
+fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
+    let ds = Dataset::open(&data_dir()).unwrap();
+    let mm = tiny_mm(16);
+    let mm_long_seq = tiny_mm(128); // seq + 1 > data context (64)
+
+    struct Case {
+        name: &'static str,
+        plan: ParallelismPlan,
+        mm: ModelManifest,
+        tag: &'static str,
+        fragment: &'static str,
+    }
+    let plan = ParallelismPlan::new;
+
+    let cases = vec![
+        Case {
+            name: "zero axis",
+            plan: plan(Topology { dp: 0, ep: 1, pp: 1 }),
+            mm: mm.clone(),
+            tag: "[topology]",
+            fragment: "every mesh axis must be >= 1",
+        },
+        Case {
+            name: "dp*ep*pp != world",
+            plan: {
+                let mut p = plan(Topology { dp: 2, ep: 2, pp: 1 });
+                p.expected_world = Some(8);
+                p
+            },
+            mm: mm.clone(),
+            tag: "[world-size]",
+            fragment: "does not equal the requested world size 8",
+        },
+        Case {
+            name: "micro_batches = 0",
+            plan: {
+                let mut p = plan(Topology { dp: 1, ep: 1, pp: 2 });
+                p.micro_batches = 0;
+                p
+            },
+            mm: mm.clone(),
+            tag: "[micro-batches]",
+            fragment: "must be in 1..=64",
+        },
+        Case {
+            name: "micro_batches > 64",
+            plan: {
+                let mut p = plan(Topology { dp: 1, ep: 1, pp: 2 });
+                p.micro_batches = 65;
+                p
+            },
+            mm: mm.clone(),
+            tag: "[micro-batches]",
+            fragment: "got 65",
+        },
+        Case {
+            name: "explicit EPSO at ep=1",
+            plan: {
+                let mut p = plan(Topology::dp_only(4));
+                p.mode = ShardingMode::Epso;
+                p.mode_explicit = true;
+                p
+            },
+            mm: mm.clone(),
+            tag: "[sharding]",
+            fragment: "EPSO requires ep > 1",
+        },
+        Case {
+            name: "missing PP artifacts for degree",
+            plan: plan(Topology { dp: 1, ep: 1, pp: 4 }),
+            mm: mm.clone(),
+            tag: "[pp-artifacts]",
+            fragment: "no PP=4 stage artifacts",
+        },
+        Case {
+            name: "missing EP artifacts for degree",
+            plan: plan(Topology { dp: 1, ep: 4, pp: 1 }),
+            mm: mm.clone(),
+            tag: "[ep-artifacts]",
+            fragment: "no EP=4 artifacts",
+        },
+        Case {
+            name: "hybrid needs the EP degree built",
+            plan: plan(Topology { dp: 1, ep: 4, pp: 2 }),
+            mm: mm.clone(),
+            tag: "[ep-artifacts]",
+            fragment: "no EP=4 artifacts",
+        },
+        Case {
+            name: "ep does not divide experts",
+            plan: plan(Topology { dp: 1, ep: 3, pp: 1 }),
+            mm: mm.clone(),
+            tag: "[expert-split]",
+            fragment: "ep=3 does not divide n_experts=4",
+        },
+        Case {
+            name: "seq + 1 > data context",
+            plan: plan(Topology::dp_only(2)),
+            mm: mm_long_seq,
+            tag: "[data-context]",
+            fragment: "data context 64 < model seq+1 = 129",
+        },
+    ];
+
+    for c in &cases {
+        let err = c.plan.validate(&c.mm, &ds).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("plan validation failed"),
+            "{}: unstable prefix: `{msg}`",
+            c.name
+        );
+        assert!(msg.contains(c.tag), "{}: wrong check tag: `{msg}`", c.name);
+        assert!(msg.contains(c.fragment), "{}: `{msg}`", c.name);
+        // the launcher must classify it as non-relaunchable
+        assert_eq!(classify(&err), FailureKind::Config, "{}: `{msg}`", c.name);
+    }
+
+    // valid plans for everything the synthetic manifest supports
+    for topo in [
+        Topology::dp_only(2),
+        Topology { dp: 1, ep: 2, pp: 1 },
+        Topology { dp: 1, ep: 1, pp: 2 },
+        Topology { dp: 2, ep: 2, pp: 2 },
+    ] {
+        plan(topo).validate(&mm, &ds).unwrap();
+    }
+}
+
+/// Hook that records whether any training step ever executed.
+struct StepWitness(Arc<AtomicBool>);
+impl StepHook for StepWitness {
+    fn on_step(&self, _r: usize, _s: usize, _l: f32, _p: &mut [f32]) -> optimus::Result<()> {
+        self.0.store(true, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+#[test]
+fn train_rejects_invalid_plans_before_any_rank_runs() {
+    // a full train() call with an invalid plan must fail in the preflight
+    // — no rank thread ever reaches a step (the witness hook stays unset)
+    let mut configs = BTreeMap::new();
+    configs.insert("synthetic".to_string(), tiny_mm(16));
+    let manifest = Manifest { configs, paper: BTreeMap::new() };
+
+    let stepped = Arc::new(AtomicBool::new(false));
+    let spec = JobSpec::new("synthetic")
+        .data_dir(data_dir())
+        .topology(1, 4, 1) // EP=4 is not built in the synthetic manifest
+        .steps(3)
+        .hook(Arc::new(StepWitness(stepped.clone())))
+        .build()
+        .unwrap();
+    let err = coordinator::train(&manifest, &spec).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("plan validation failed [ep-artifacts]"), "{msg}");
+    assert_eq!(classify(&err), FailureKind::Config);
+    assert!(
+        !stepped.load(Ordering::SeqCst),
+        "a rank executed a step despite an invalid plan"
+    );
+}
+
+#[test]
+fn builder_runs_the_same_spec_checks_early() {
+    // the builder rejects plan-level invalidity at build() time with the
+    // same stable strings train() would produce
+    let e = JobSpec::new("m")
+        .data_dir(data_dir())
+        .topology(1, 1, 2)
+        .micro_batches(0)
+        .build()
+        .unwrap_err();
+    assert!(format!("{e:#}").contains("plan validation failed [micro-batches]"));
+    assert_eq!(classify(&e), FailureKind::Config);
+}
+
+#[test]
+fn enumerate_feeds_validate_for_sweeps() {
+    // sweep tooling contract: enumerate lists every factorization; each
+    // one either validates or fails with a classifiable config error
+    let ds = Dataset::open(&data_dir()).unwrap();
+    let mm = tiny_mm(16);
+    let topos = ParallelismPlan::enumerate(8);
+    assert!(topos.iter().all(|t| t.world() == 8));
+    let mut runnable = 0;
+    for t in topos {
+        match ParallelismPlan::new(t).validate(&mm, &ds) {
+            Ok(()) => runnable += 1,
+            Err(e) => assert_eq!(classify(&e), FailureKind::Config),
+        }
+    }
+    // runnable with EP=2/PP=2 built (the hybrid frees pp from needing
+    // stage artifacts, so dp1·ep2·pp4 qualifies via 4 one-layer stages):
+    // (8,1,1) (4,2,1) (4,1,2) (2,2,2) (1,2,4)
+    assert_eq!(runnable, 5);
+}

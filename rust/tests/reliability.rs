@@ -3,8 +3,7 @@
 //! checkpoints, NaN containment.
 
 use optimus::ckpt::{Checkpoint, DualCheckpointer};
-use optimus::comm::Topology;
-use optimus::coordinator::{self, StepHook, TrainOptions};
+use optimus::coordinator::{self, JobSpec, JobSpecBuilder, StepHook};
 use optimus::data::{corpus, preprocess};
 use optimus::ft::{CkptHook, HardKillHook, Launcher, NanInjectHook};
 use std::path::PathBuf;
@@ -19,12 +18,13 @@ fn data_dir() -> PathBuf {
     dir
 }
 
-fn opts(steps: usize) -> TrainOptions {
-    let mut o = TrainOptions::new("mula-tiny", Topology::dp_only(2), data_dir());
-    o.run.steps = steps;
-    o.run.warmup_steps = 2;
-    o.engine_pool = 2;
-    o
+fn spec(steps: usize) -> JobSpecBuilder {
+    JobSpec::new("mula-tiny")
+        .data_dir(data_dir())
+        .topology(2, 1, 1)
+        .steps(steps)
+        .warmup_steps(2)
+        .engine_pool(2)
 }
 
 /// Composite hook: injection + checkpointing together.
@@ -54,17 +54,26 @@ fn hard_failure_relaunches_from_checkpoint_and_finishes() {
     let report = launcher
         .run(|attempt, nodes| {
             assert_eq!(nodes.len(), 2, "active set stays at world size");
-            let mut o = opts(10);
-            o.hook = Arc::new(Chain(vec![
-                kill.clone(),
-                Arc::new(CkptHook { every: 3, dual: DualCheckpointer::new(&ckroot) }),
-            ]));
+            let base = spec(10).world_size(nodes.len()).build()?;
+            let s = spec(10)
+                .world_size(nodes.len())
+                .hook(Arc::new(Chain(vec![
+                    kill.clone(),
+                    Arc::new(CkptHook {
+                        every: 3,
+                        dual: DualCheckpointer::new(&ckroot),
+                        plan: Some(base.fingerprint()),
+                    }),
+                ])))
+                .build()?;
             // resume from the latest valid checkpoint if any
             if let Some(c) = DualCheckpointer::new(&ckroot).load_latest() {
                 assert!(attempt > 0);
                 assert!(c.step >= 3, "checkpoint from before the crash");
+                // recorded plan must match the resuming spec
+                c.ensure_plan(&s.fingerprint())?;
             }
-            coordinator::train(&m, &o)
+            coordinator::train(&m, &s)
         })
         .unwrap();
     assert_eq!(launcher.relaunches.load(std::sync::atomic::Ordering::Relaxed), 1);
@@ -84,12 +93,14 @@ fn soft_failure_is_detected_before_contaminating_checkpoints() {
     let ckroot =
         std::env::temp_dir().join(format!("optimus-rel-soft-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&ckroot);
-    let mut o = opts(10);
-    o.hook = Arc::new(Chain(vec![
-        Arc::new(NanInjectHook::once(0, 4)),
-        Arc::new(CkptHook { every: 3, dual: DualCheckpointer::new(&ckroot) }),
-    ]));
-    let err = coordinator::train(&m, &o).unwrap_err();
+    let s = spec(10)
+        .hook(Arc::new(Chain(vec![
+            Arc::new(NanInjectHook::once(0, 4)),
+            Arc::new(CkptHook { every: 3, dual: DualCheckpointer::new(&ckroot), plan: None }),
+        ])))
+        .build()
+        .unwrap();
+    let err = coordinator::train(&m, &s).unwrap_err();
     let kind = optimus::ft::classify(&err);
     assert_eq!(kind, optimus::ft::FailureKind::Soft, "{err:#}");
     // every surviving checkpoint must be NaN-free
@@ -110,9 +121,8 @@ fn training_resumes_from_model_only_checkpoint() {
     else {
         return;
     };
-    let mut o1 = opts(8);
-    o1.run.peak_lr = 2e-3;
-    let r1 = coordinator::train(&m, &o1).unwrap();
+    let s1 = spec(8).peak_lr(2e-3).build().unwrap();
+    let r1 = coordinator::train(&m, &s1).unwrap();
 
     struct LoadHook(Vec<f32>);
     impl StepHook for LoadHook {
@@ -125,10 +135,12 @@ fn training_resumes_from_model_only_checkpoint() {
     }
     let ck = Checkpoint::model_only(8, &r1.final_params).unwrap();
     assert!(ck.is_model_only());
-    let mut o2 = opts(8);
-    o2.run.peak_lr = 2e-3;
-    o2.hook = Arc::new(LoadHook(ck.params.clone()));
-    let r2 = coordinator::train(&m, &o2).unwrap();
+    let s2 = spec(8)
+        .peak_lr(2e-3)
+        .hook(Arc::new(LoadHook(ck.params.clone())))
+        .build()
+        .unwrap();
+    let r2 = coordinator::train(&m, &s2).unwrap();
     assert!(
         r2.loss.tail_mean(2) < r1.loss.tail_mean(2) + 0.3,
         "resume regressed: {:?} vs {:?}",

@@ -1,9 +1,10 @@
-//! Integration: the three runnable engines (DP-fused, EP, PP) implement
-//! the *same* training semantics — first-step losses agree across
-//! decompositions on identical data, and every mode learns.
+//! Integration: the four runnable engines (DP-fused, EP, PP, hybrid
+//! PP×EP) implement the *same* training semantics — first-step losses
+//! agree across decompositions on identical data, every mode learns, and
+//! the hybrid's parameter trajectory matches DP's.
 
 use optimus::comm::Topology;
-use optimus::coordinator::{self, ep::EpComm, pipeline::Schedule, TrainOptions};
+use optimus::coordinator::{self, ep::EpComm, pipeline::Schedule, JobSpec, JobSpecBuilder};
 use optimus::data::{corpus, preprocess};
 use optimus::optim::ShardingMode;
 use std::path::PathBuf;
@@ -22,14 +23,15 @@ fn data_dir() -> PathBuf {
     .clone()
 }
 
-fn base_opts(topo: Topology, steps: usize) -> TrainOptions {
-    let mut o = TrainOptions::new("mula-tiny", topo, data_dir());
-    o.run.steps = steps;
-    o.run.warmup_steps = 4;
-    o.run.peak_lr = 2e-3;
-    o.run.min_lr = 2e-4;
-    o.engine_pool = 2;
-    o
+fn base(topo: Topology, steps: usize) -> JobSpecBuilder {
+    JobSpec::new("mula-tiny")
+        .data_dir(data_dir())
+        .topo(topo)
+        .steps(steps)
+        .warmup_steps(4)
+        .peak_lr(2e-3)
+        .min_lr(2e-4)
+        .engine_pool(2)
 }
 
 #[test]
@@ -38,14 +40,18 @@ fn dp_ep_pp_first_step_losses_agree() {
         return;
     };
 
-    let dp = coordinator::train(&m, &base_opts(Topology::dp_only(2), 2)).unwrap();
-    let mut ep_opts = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, 2);
-    ep_opts.mode = ShardingMode::Epso;
-    let ep = coordinator::train(&m, &ep_opts).unwrap();
-    let mut pp_opts = base_opts(Topology { dp: 1, ep: 1, pp: 2 }, 2);
-    pp_opts.micro_batches = 2;
-    pp_opts.schedule = Schedule::OneFOneB;
-    let pp = coordinator::train(&m, &pp_opts).unwrap();
+    let dp = coordinator::train(&m, &base(Topology::dp_only(2), 2).build().unwrap()).unwrap();
+    let ep_spec = base(Topology { dp: 1, ep: 2, pp: 1 }, 2)
+        .sharding(ShardingMode::Epso)
+        .build()
+        .unwrap();
+    let ep = coordinator::train(&m, &ep_spec).unwrap();
+    let pp_spec = base(Topology { dp: 1, ep: 1, pp: 2 }, 2)
+        .micro_batches(2)
+        .schedule(Schedule::OneFOneB)
+        .build()
+        .unwrap();
+    let pp = coordinator::train(&m, &pp_spec).unwrap();
 
     let l_dp = dp.loss.points[0].1;
     let l_ep = ep.loss.points[0].1;
@@ -64,30 +70,108 @@ fn every_mode_learns() {
     };
     let steps = 25;
 
-    let dp = coordinator::train(&m, &base_opts(Topology::dp_only(2), steps)).unwrap();
+    let dp = coordinator::train(&m, &base(Topology::dp_only(2), steps).build().unwrap()).unwrap();
     assert!(
         dp.loss.tail_mean(3) < dp.loss.points[0].1 - 0.5,
         "DP no learning: {:?}",
         dp.loss.points
     );
 
-    let mut ep_opts = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, steps);
-    ep_opts.mode = ShardingMode::Epso;
-    let ep = coordinator::train(&m, &ep_opts).unwrap();
+    let ep_spec = base(Topology { dp: 1, ep: 2, pp: 1 }, steps)
+        .sharding(ShardingMode::Epso)
+        .build()
+        .unwrap();
+    let ep = coordinator::train(&m, &ep_spec).unwrap();
     assert!(
         ep.loss.tail_mean(3) < ep.loss.points[0].1 - 0.5,
         "EP no learning: {:?}",
         ep.loss.points
     );
 
-    let mut pp_opts = base_opts(Topology { dp: 1, ep: 1, pp: 2 }, steps);
-    pp_opts.micro_batches = 2;
-    let pp = coordinator::train(&m, &pp_opts).unwrap();
+    let pp_spec = base(Topology { dp: 1, ep: 1, pp: 2 }, steps)
+        .micro_batches(2)
+        .build()
+        .unwrap();
+    let pp = coordinator::train(&m, &pp_spec).unwrap();
     assert!(
         pp.loss.tail_mean(3) < pp.loss.points[0].1 - 0.5,
         "PP no learning: {:?}",
         pp.loss.points
     );
+}
+
+#[test]
+fn pp_ep_hybrid_matches_dp_and_learns() {
+    // The PP×EP acceptance gate: a (dp=1, ep=2, pp=2) JobSpec trains ≥10
+    // steps through harness::run; the loss curve is finite and
+    // decreasing; and — because all engines share the
+    // mean-over-global-batch gradient convention and the world-group
+    // clip domain — its final parameters match a DP-only run of the same
+    // seed/steps within fp32 reduction tolerance.
+    let Some(m) = optimus::manifest_or_skip("train_modes::pp_ep_hybrid_matches_dp_and_learns")
+    else {
+        return;
+    };
+    let steps = 12;
+    let dp_spec = base(Topology::dp_only(2), steps)
+        .bf16_grad_reduce(false)
+        .build()
+        .unwrap();
+    let dp = coordinator::train(&m, &dp_spec).unwrap();
+
+    let hy_spec = base(Topology { dp: 1, ep: 2, pp: 2 }, steps)
+        .sharding(ShardingMode::Epso)
+        .schedule(Schedule::OneFOneB)
+        .micro_batches(1) // one microbatch per data rank = DP's global batch
+        .bf16_grad_reduce(false)
+        .build()
+        .unwrap();
+    let hy = coordinator::train(&m, &hy_spec).unwrap();
+
+    assert!(hy.loss.points.len() >= 10, "only {} steps", hy.loss.points.len());
+    for (_, l) in &hy.loss.points {
+        assert!(l.is_finite(), "{:?}", hy.loss.points);
+    }
+    assert!(
+        hy.loss.tail_mean(3) < hy.loss.points[0].1 - 0.3,
+        "hybrid no learning: {:?}",
+        hy.loss.points
+    );
+    // same decomposition: step-0 losses identical, trajectories match
+    let (l_dp, l_hy) = (dp.loss.points[0].1, hy.loss.points[0].1);
+    assert!((l_dp - l_hy).abs() < 5e-4, "DP {l_dp} vs PP×EP {l_hy}");
+    let a = dp.final_params.as_f32().unwrap();
+    let b = hy.final_params.as_f32().unwrap();
+    assert_eq!(a.len(), b.len());
+    let mut max_diff = 0.0f32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        max_diff = max_diff.max((x - y).abs());
+    }
+    assert!(
+        max_diff < 1e-2,
+        "hybrid diverged from DP: max |Δparam| = {max_diff}"
+    );
+}
+
+#[test]
+fn pp_ep_hybrid_microbatched_gpipe_stays_finite() {
+    // schedule × microbatch coverage for the hybrid: GPipe with 2
+    // microbatches per (dp, ep) data rank
+    let Some(m) =
+        optimus::manifest_or_skip("train_modes::pp_ep_hybrid_microbatched_gpipe_stays_finite")
+    else {
+        return;
+    };
+    let spec = base(Topology { dp: 1, ep: 2, pp: 2 }, 4)
+        .schedule(Schedule::GPipe)
+        .micro_batches(2)
+        .build()
+        .unwrap();
+    let r = coordinator::train(&m, &spec).unwrap();
+    assert_eq!(r.loss.points.len(), 4);
+    for (_, l) in &r.loss.points {
+        assert!(l.is_finite());
+    }
 }
 
 #[test]
@@ -98,10 +182,12 @@ fn ep_so_and_epso_trajectories_match() {
         return;
     };
     let mk = |mode| {
-        let mut o = base_opts(Topology { dp: 2, ep: 2, pp: 1 }, 6);
-        o.mode = mode;
-        o.run.bf16_grad_reduce = false; // keep reductions exactly associative-ish
-        coordinator::train(&m, &o).unwrap()
+        let spec = base(Topology { dp: 2, ep: 2, pp: 1 }, 6)
+            .sharding(mode)
+            .bf16_grad_reduce(false) // keep reductions exactly associative-ish
+            .build()
+            .unwrap();
+        coordinator::train(&m, &spec).unwrap()
     };
     let so = mk(ShardingMode::So);
     let epso = mk(ShardingMode::Epso);
@@ -125,10 +211,12 @@ fn ep_allgather_and_all2all_agree() {
         return;
     };
     let mk = |policy| {
-        let mut o = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, 3);
-        o.ep_comm = policy;
-        o.run.bf16_grad_reduce = false;
-        coordinator::train(&m, &o).unwrap()
+        let spec = base(Topology { dp: 1, ep: 2, pp: 1 }, 3)
+            .ep_comm(policy)
+            .bf16_grad_reduce(false)
+            .build()
+            .unwrap();
+        coordinator::train(&m, &spec).unwrap()
     };
     let ag = mk(EpComm::Allgather);
     let aa = mk(EpComm::All2All);
@@ -143,11 +231,13 @@ fn gpipe_and_1f1b_agree() {
         return;
     };
     let mk = |sched| {
-        let mut o = base_opts(Topology { dp: 1, ep: 1, pp: 2 }, 3);
-        o.schedule = sched;
-        o.micro_batches = 4;
-        o.run.bf16_grad_reduce = false;
-        coordinator::train(&m, &o).unwrap()
+        let spec = base(Topology { dp: 1, ep: 1, pp: 2 }, 3)
+            .schedule(sched)
+            .micro_batches(4)
+            .bf16_grad_reduce(false)
+            .build()
+            .unwrap();
+        coordinator::train(&m, &spec).unwrap()
     };
     let g = mk(Schedule::GPipe);
     let f = mk(Schedule::OneFOneB);
@@ -161,9 +251,11 @@ fn fur_runs_and_stays_finite() {
     let Some(m) = optimus::manifest_or_skip("train_modes::fur_runs_and_stays_finite") else {
         return;
     };
-    let mut o = base_opts(Topology { dp: 1, ep: 2, pp: 1 }, 4);
-    o.fur = true;
-    let r = coordinator::train(&m, &o).unwrap();
+    let spec = base(Topology { dp: 1, ep: 2, pp: 1 }, 4)
+        .fur(true)
+        .build()
+        .unwrap();
+    let r = coordinator::train(&m, &spec).unwrap();
     for (_, l) in &r.loss.points {
         assert!(l.is_finite());
     }
