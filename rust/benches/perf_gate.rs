@@ -1,0 +1,198 @@
+//! CI perf gate: mula-tiny DP and PP×EP micro-benches, serial vs
+//! `--overlap` (the pipelined EPSO path), written to `BENCH_PR3.json` at
+//! the repo root and gated against the committed `ci/bench_baseline.json`
+//! — a steps/sec regression beyond the baseline's tolerance (default 10%)
+//! exits nonzero so the `perf-gate` workflow job fails.
+//!
+//! Baseline entries that are absent, null or zero are *record-only*: the
+//! run prints the measured value and passes, so the gate bootstraps on
+//! the first CI run and tightens once a measured baseline is committed.
+//!
+//! Run locally from `rust/`: `cargo bench --bench perf_gate` (requires
+//! built HLO artifacts; prints a SKIP note and exits 0 otherwise).
+//! Overrides: `PERF_GATE_OUT` (output path), `PERF_GATE_BASELINE`.
+
+use optimus::comm::Topology;
+use optimus::config::Manifest;
+use optimus::coordinator::{self, JobSpec, TrainReport};
+use optimus::data::{corpus, preprocess};
+use optimus::util::bench::Report;
+use optimus::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+struct Case {
+    name: &'static str,
+    topo: Topology,
+}
+
+const STEPS: usize = 14;
+
+fn repo_root() -> PathBuf {
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.pop();
+    p
+}
+
+fn out_path() -> PathBuf {
+    std::env::var("PERF_GATE_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("BENCH_PR3.json"))
+}
+
+fn baseline_path() -> PathBuf {
+    std::env::var("PERF_GATE_BASELINE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("ci/bench_baseline.json"))
+}
+
+fn run_case(
+    man: &Manifest,
+    data: &std::path::Path,
+    c: &Case,
+    overlap: bool,
+) -> optimus::Result<(f64, TrainReport)> {
+    let spec = JobSpec::new("mula-tiny")
+        .data_dir(data.to_path_buf())
+        .topo(c.topo)
+        .steps(STEPS)
+        .warmup_steps(2)
+        .micro_batches(2)
+        .engine_pool(2)
+        .overlap(overlap)
+        .overlap_chunk(4096)
+        .build()?;
+    let r = coordinator::train(man, &spec)?;
+    let sps = 1.0 / r.mean_step_secs().max(1e-9);
+    Ok((sps, r))
+}
+
+fn breakdown_json(r: &TrainReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("fwd_bwd_secs".to_string(), Json::Num(r.breakdown.fwd_bwd_secs));
+    m.insert("optimizer_secs".to_string(), Json::Num(r.breakdown.optimizer_secs));
+    m.insert("comm_secs".to_string(), Json::Num(r.breakdown.comm_secs));
+    m.insert("data_secs".to_string(), Json::Num(r.breakdown.data_secs));
+    m.insert("queue_secs".to_string(), Json::Num(r.breakdown.queue_secs));
+    m.insert("overlap_secs".to_string(), Json::Num(r.breakdown.overlap_secs));
+    m.insert(
+        "optimizer_comm_secs".to_string(),
+        Json::Num(r.optimizer_comm_secs),
+    );
+    m.insert(
+        "optimizer_overlap_secs".to_string(),
+        Json::Num(r.optimizer_overlap_secs),
+    );
+    m.insert("mean_step_secs".to_string(), Json::Num(r.mean_step_secs()));
+    m.insert(
+        "optimizer_lane_ops".to_string(),
+        Json::Num(r.optimizer_lane_ops as f64),
+    );
+    Json::Obj(m)
+}
+
+fn main() -> optimus::Result<()> {
+    let Some(man) = optimus::manifest_or_skip("perf_gate") else {
+        println!("perf-gate: SKIP (HLO artifacts not built)");
+        return Ok(());
+    };
+    // pid-suffixed + rebuilt every run: a killed earlier run must never
+    // leave half-written shards that poison later measurements
+    let data = std::env::temp_dir().join(format!("optimus-perf-gate-data-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&data);
+    preprocess::preprocess(&corpus::data_files(42, 4, 32), 64, 7, &data, 512)?;
+
+    let baseline = std::fs::read_to_string(baseline_path())
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let tolerance = baseline
+        .as_ref()
+        .and_then(|b| b.get("tolerance"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.10);
+
+    let cases = [
+        Case { name: "dp", topo: Topology::dp_only(2) },
+        Case { name: "ppep", topo: Topology { dp: 1, ep: 2, pp: 2 } },
+    ];
+
+    let mut out = BTreeMap::new();
+    out.insert(
+        "bench".to_string(),
+        Json::Str("perf-gate PR3: mula-tiny serial vs --overlap".to_string()),
+    );
+    out.insert("model".to_string(), Json::Str("mula-tiny".to_string()));
+    out.insert("steps".to_string(), Json::Num(STEPS as f64));
+    out.insert("tolerance".to_string(), Json::Num(tolerance));
+
+    let mut table = Report::new(
+        "perf-gate — steps/sec, serial vs --overlap (mula-tiny)",
+        &["case", "serial", "overlap", "speedup"],
+    );
+    let mut failures: Vec<String> = Vec::new();
+
+    for c in &cases {
+        let (sps_serial, r_serial) = run_case(&man, &data, c, false)?;
+        let (sps_overlap, r_overlap) = run_case(&man, &data, c, true)?;
+        let speedup = sps_overlap / sps_serial.max(1e-9);
+        table.row(&[
+            c.name.to_string(),
+            format!("{sps_serial:.2}"),
+            format!("{sps_overlap:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        out.insert(
+            format!("{}_serial_steps_per_sec", c.name),
+            Json::Num(sps_serial),
+        );
+        out.insert(
+            format!("{}_overlap_steps_per_sec", c.name),
+            Json::Num(sps_overlap),
+        );
+        out.insert(format!("{}_overlap_speedup", c.name), Json::Num(speedup));
+        out.insert(format!("{}_serial_breakdown", c.name), breakdown_json(&r_serial));
+        out.insert(
+            format!("{}_overlap_breakdown", c.name),
+            breakdown_json(&r_overlap),
+        );
+
+        // regression gate vs the committed baseline
+        for (key, sps) in [
+            (format!("{}_serial_steps_per_sec", c.name), sps_serial),
+            (format!("{}_overlap_steps_per_sec", c.name), sps_overlap),
+        ] {
+            match baseline
+                .as_ref()
+                .and_then(|b| b.get(&key))
+                .and_then(Json::as_f64)
+            {
+                Some(base) if base > 0.0 => {
+                    let floor = base * (1.0 - tolerance);
+                    if sps < floor {
+                        failures.push(format!(
+                            "{key}: {sps:.2} steps/sec regressed more than \
+                             {:.0}% below baseline {base:.2} (floor {floor:.2})",
+                            tolerance * 100.0
+                        ));
+                    } else {
+                        println!("perf-gate: {key} {sps:.2} vs baseline {base:.2} — ok");
+                    }
+                }
+                _ => println!("perf-gate: {key} {sps:.2} — no baseline yet, record-only"),
+            }
+        }
+    }
+
+    table.print();
+    let path = out_path();
+    std::fs::write(&path, Json::Obj(out).to_string())?;
+    println!("perf-gate: wrote {}", path.display());
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("perf-gate FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -7,6 +7,7 @@
 //! matches the deterministic program order of collectives in SPMD
 //! training.
 
+use super::runtime::{CommHandle, CommRuntime};
 use crate::util::bf16_round;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -315,6 +316,48 @@ impl Group {
         let _ = self.rendezvous(rank, Vec::new(), |_| Vec::new());
     }
 
+    // -- nonblocking variants -------------------------------------------
+    //
+    // Each submits the blocking collective onto a [`CommRuntime`] lane and
+    // returns a [`CommHandle`] future. The caller must preserve program
+    // order: every group member has to issue the same collectives on a
+    // group in the same order, whether via a lane or inline — lanes are
+    // FIFO, so submitting in program order is sufficient. The receivers
+    // take `self: Arc<Self>` (clone the `Arc` at the call site) so the
+    // group can move onto the worker thread.
+
+    /// Nonblocking [`Group::allreduce`].
+    pub fn allreduce_start(
+        self: Arc<Self>,
+        rt: &CommRuntime,
+        rank: usize,
+        mine: Vec<f32>,
+        dt: ReduceDtype,
+    ) -> CommHandle<Vec<f32>> {
+        rt.submit(move || self.allreduce(rank, mine, dt))
+    }
+
+    /// Nonblocking [`Group::reduce_scatter_mean`].
+    pub fn reduce_scatter_start(
+        self: Arc<Self>,
+        rt: &CommRuntime,
+        rank: usize,
+        mine: Vec<f32>,
+        dt: ReduceDtype,
+    ) -> CommHandle<Vec<f32>> {
+        rt.submit(move || self.reduce_scatter_mean(rank, mine, dt))
+    }
+
+    /// Nonblocking [`Group::allgather`].
+    pub fn allgather_start(
+        self: Arc<Self>,
+        rt: &CommRuntime,
+        rank: usize,
+        mine: Vec<f32>,
+    ) -> CommHandle<Vec<f32>> {
+        rt.submit(move || self.allgather(rank, mine))
+    }
+
     /// Max-allreduce (used for global NaN/overflow voting in ft).
     pub fn allreduce_max(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
         let res = self.rendezvous(rank, mine, |contribs| {
@@ -436,6 +479,47 @@ mod tests {
         for o in outs {
             // bf16(1.0009765625) = 1.0 -> sum 2.0
             assert_eq!(o, vec![2.0]);
+        }
+    }
+
+    #[test]
+    fn async_collectives_match_blocking_results() {
+        // each rank drives its own lane; two in-flight collectives per
+        // rank, submitted in the same program order everywhere
+        let g = Group::new(3);
+        let outs = spawn_ranks(3, move |r| {
+            let rt = CommRuntime::new(&format!("t{r}"));
+            let h1 = g.clone().allreduce_start(
+                &rt,
+                r,
+                vec![r as f32, 1.0],
+                ReduceDtype::F32,
+            );
+            let h2 = g.clone().allgather_start(&rt, r, vec![r as f32]);
+            (h1.wait(), h2.wait())
+        });
+        for (ar, ag) in outs {
+            assert_eq!(ar, vec![3.0, 3.0]);
+            assert_eq!(ag, vec![0.0, 1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn async_reduce_scatter_matches_blocking() {
+        let g = Group::new(2);
+        let n = 7; // ragged shards
+        let outs = spawn_ranks(2, move |r| {
+            let mine: Vec<f32> = (0..n).map(|i| (i + r) as f32).collect();
+            let blocking = g.reduce_scatter_mean(r, mine.clone(), ReduceDtype::F32);
+            let rt = CommRuntime::new(&format!("rs{r}"));
+            let async_ = g
+                .clone()
+                .reduce_scatter_start(&rt, r, mine, ReduceDtype::F32)
+                .wait();
+            (blocking, async_)
+        });
+        for (b, a) in outs {
+            assert_eq!(b, a);
         }
     }
 

@@ -9,13 +9,19 @@
 //!
 //! Supported ops (all used by the trainer):
 //! allreduce, reduce_scatter, allgather, all2all, broadcast, barrier,
-//! and point-to-point send/recv (pipeline activations).
+//! and point-to-point send/recv (pipeline activations). Each collective
+//! also has a nonblocking `*_start` variant returning a [`CommHandle`]
+//! future backed by a per-rank [`CommRuntime`] lane (see `runtime`),
+//! which the pipelined sharded optimizer uses to hide communication
+//! behind compute.
 
 mod group;
 mod mesh;
+mod runtime;
 
 pub use group::{CommStats, Group, ReduceDtype};
 pub use mesh::{Mesh, MeshCoord, Topology};
+pub use runtime::{CommHandle, CommRuntime};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;

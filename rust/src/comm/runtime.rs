@@ -1,0 +1,145 @@
+//! Async collective submission: a per-rank comm worker that executes
+//! collectives off the rank thread so communication overlaps compute.
+//!
+//! [`CommRuntime`] owns one dedicated worker thread with a FIFO job
+//! queue. The nonblocking collective variants on [`super::Group`]
+//! (`allreduce_start` / `reduce_scatter_start` / `allgather_start`)
+//! submit a closure and return a [`CommHandle`] future; `wait()` blocks
+//! until the worker has finished that collective.
+//!
+//! FIFO submission is the correctness contract: rendezvous rounds on a
+//! [`super::Group`] are strictly ordered, so every member must issue its
+//! collectives on a group in the same program order — exactly what one
+//! lane per rank preserves. Comm-on-comm serialization within a rank
+//! mirrors a real NIC anyway; the win is communication running
+//! concurrently with the rank thread's *compute* (the pipelined sharded
+//! optimizer of DESIGN.md §6, paper §3.2).
+//!
+//! A collective that panics on the worker (e.g. a poisoned group after a
+//! peer death) is captured and re-thrown from `wait()` on the submitting
+//! rank thread, so failure semantics match the blocking path and the
+//! harness's poison-guard still classifies the root cause.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// Future for one in-flight collective submitted to a [`CommRuntime`].
+pub struct CommHandle<T = Vec<f32>> {
+    rx: mpsc::Receiver<std::thread::Result<T>>,
+}
+
+impl<T> CommHandle<T> {
+    /// Block until the collective completes. A panic on the worker
+    /// (poisoned group) is re-thrown here, on the submitting thread.
+    pub fn wait(self) -> T {
+        match self.rx.recv() {
+            Ok(Ok(v)) => v,
+            Ok(Err(p)) => resume_unwind(p),
+            Err(_) => panic!("comm runtime worker dropped an in-flight collective"),
+        }
+    }
+}
+
+/// A single-worker comm lane: FIFO execution plus busy-time accounting
+/// (the overlap numerator behind
+/// [`StepBreakdown::overlap_secs`](crate::metrics::StepBreakdown)).
+/// Dropping the runtime shuts the worker down after the queue drains.
+pub struct CommRuntime {
+    tx: mpsc::Sender<Job>,
+    busy_nanos: Arc<AtomicU64>,
+    ops: Arc<AtomicU64>,
+}
+
+impl CommRuntime {
+    /// Spawn the worker thread (named `comm-<label>`).
+    pub fn new(label: &str) -> CommRuntime {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let busy_nanos = Arc::new(AtomicU64::new(0));
+        let ops = Arc::new(AtomicU64::new(0));
+        let busy = Arc::clone(&busy_nanos);
+        let done = Arc::clone(&ops);
+        std::thread::Builder::new()
+            .name(format!("comm-{label}"))
+            .spawn(move || {
+                // jobs never unwind (submit wraps them in catch_unwind),
+                // so one poisoned collective doesn't kill the lane
+                while let Ok(job) = rx.recv() {
+                    let t = Instant::now();
+                    job();
+                    busy.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .expect("spawn comm worker");
+        CommRuntime { tx, busy_nanos, ops }
+    }
+
+    /// Enqueue `f`. Jobs run FIFO on the worker; the handle resolves when
+    /// `f` returns (or re-throws its panic at `wait`).
+    pub fn submit<T, F>(&self, f: F) -> CommHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (rtx, rrx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            let r = catch_unwind(AssertUnwindSafe(f));
+            let _ = rtx.send(r);
+        });
+        self.tx.send(job).expect("comm runtime worker gone");
+        CommHandle { rx: rrx }
+    }
+
+    /// Total seconds the worker has spent inside collectives. The counter
+    /// is bumped *after* a job's handle resolves, so a reading taken right
+    /// after `wait()` may trail by one job — accounting only.
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Number of jobs the worker has completed.
+    pub fn completed_ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_resolves_in_fifo_order() {
+        let rt = CommRuntime::new("test-fifo");
+        let handles: Vec<CommHandle<usize>> =
+            (0..16).map(|i| rt.submit(move || i * 2)).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.wait(), i * 2);
+        }
+        assert_eq!(rt.completed_ops(), 16);
+    }
+
+    #[test]
+    fn worker_survives_a_panicking_job() {
+        let rt = CommRuntime::new("test-panic");
+        let bad: CommHandle<()> = rt.submit(|| panic!("boom"));
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| bad.wait()));
+        assert!(caught.is_err(), "wait must re-throw the job panic");
+        // lane still alive afterwards
+        let ok = rt.submit(|| 7usize);
+        assert_eq!(ok.wait(), 7);
+    }
+
+    #[test]
+    fn busy_time_accumulates() {
+        let rt = CommRuntime::new("test-busy");
+        rt.submit(|| std::thread::sleep(std::time::Duration::from_millis(5)))
+            .wait();
+        // flush: a second job guarantees the first's busy add landed
+        rt.submit(|| ()).wait();
+        assert!(rt.busy_secs() >= 0.004, "{}", rt.busy_secs());
+    }
+}

@@ -15,9 +15,11 @@
 //!   allreduce → curve recording → step timing,
 //! * [`TrainReport`] assembly, including the [`StepBreakdown`]: trainers
 //!   accumulate fwd/bwd, data and exchange-comm time during `step`; the
-//!   optimizer's update/comm split is folded in exactly once from the
-//!   optimizer's own counters at `finish` (the seed trainers each did
-//!   this slightly differently — and DP double-booked it).
+//!   optimizer's update/comm/overlap split is folded in exactly once from
+//!   the optimizer's own counters at `finish` (the seed trainers each did
+//!   this slightly differently — and DP double-booked it), and the PJRT
+//!   executor queue-wait share is folded in from the pool counters as the
+//!   per-rank average, so breakdown totals keep matching wall-clock.
 //!
 //! A parallelism engine implements [`RankTrainer`] and contains *only*
 //! its genuinely distinct logic: the fused-artifact step (DP), the
@@ -30,6 +32,7 @@ use crate::comm::{Group, Mesh, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::{BatchPlan, Dataset};
 use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
 use crate::runtime::{Engine, Tensor};
 use crate::Result;
 use anyhow::anyhow;
@@ -49,6 +52,24 @@ pub struct RankCtx {
 }
 
 impl RankCtx {
+    /// The rank's sharded optimizer, built the one way every engine needs
+    /// it: plan-driven segments, world-group grad-norm/clip domain, the
+    /// run recipe's AdamW/reduction/clip settings, and the plan's
+    /// `--overlap` knobs armed (`comm-<label>` names the lane worker).
+    /// Engines construct through here so a new engine cannot forget to
+    /// arm the overlap pipeline.
+    pub fn sharded_optimizer(&self, segs: Vec<SegmentSpec>, label: &str) -> ShardedOptimizer {
+        ShardedOptimizer::new(
+            segs,
+            Arc::clone(self.mesh.world_group()),
+            self.rank,
+            self.spec.adam(),
+            self.spec.reduce_dtype(),
+            self.spec.run.grad_clip,
+        )
+        .with_overlap(self.plan.overlap, self.plan.overlap_chunk, label)
+    }
+
     /// Timed batch fetch: the `[b, s+1]` token tensor for
     /// (step, data_rank, microbatch), accounted under `data_secs`.
     pub fn fetch_tokens(
@@ -101,7 +122,13 @@ pub struct ReportParts {
     pub final_params: Tensor,
     pub opt_state_bytes: usize,
     pub optimizer_update_secs: f64,
+    /// exposed optimizer comm (rank thread blocked in collectives)
     pub optimizer_comm_secs: f64,
+    /// optimizer comm hidden behind compute by the `--overlap` pipeline
+    pub optimizer_overlap_secs: f64,
+    /// collectives completed on the optimizer's comm lane (0 when serial)
+    /// — the falsifiable signal that `--overlap` actually ran pipelined
+    pub optimizer_lane_ops: u64,
 }
 
 /// Auxiliary per-rank payload merged into the report after join — e.g. a
@@ -313,6 +340,9 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
     let mut gn_curve = Curve::new("grad_norm");
     let mut breakdown = StepBreakdown::default();
     let mut step_secs = Vec::with_capacity(ctx.spec.run.steps);
+    // engine-pool counters are shared by every rank of the run: snapshot
+    // now so the reporting rank can fold in this run's queue-wait delta
+    let engine_stats0 = ctx.engine.stats();
 
     for step in 0..ctx.spec.run.steps {
         let t_step = std::time::Instant::now();
@@ -340,10 +370,18 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
     match trainer.finish(&ctx)? {
         RankFinish::Report(parts) => {
             let parts = *parts;
-            // breakdown assembly: the optimizer's update/comm split comes
-            // from its own counters, folded in exactly once
+            // breakdown assembly: the optimizer's update/comm/overlap
+            // split comes from its own counters, folded in exactly once
             breakdown.optimizer_secs += parts.optimizer_update_secs;
             breakdown.comm_secs += parts.optimizer_comm_secs;
+            breakdown.overlap_secs += parts.optimizer_overlap_secs;
+            // PJRT queue wait: the pool counters span all ranks, so the
+            // report records the per-rank average of this run's delta —
+            // an estimate of this rank's share (see StepBreakdown docs)
+            let engine_stats1 = ctx.engine.stats();
+            breakdown.queue_secs += (engine_stats1.queue_secs - engine_stats0.queue_secs)
+                .max(0.0)
+                / ctx.plan.topo.world() as f64;
             Ok(RankOut::Report(TrainReport {
                 loss: loss_curve,
                 grad_norm: gn_curve,
@@ -354,6 +392,8 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
                 opt_state_bytes: parts.opt_state_bytes,
                 optimizer_update_secs: parts.optimizer_update_secs,
                 optimizer_comm_secs: parts.optimizer_comm_secs,
+                optimizer_overlap_secs: parts.optimizer_overlap_secs,
+                optimizer_lane_ops: parts.optimizer_lane_ops,
             }))
         }
         RankFinish::Aux(a) => Ok(RankOut::Aux(a)),

@@ -24,7 +24,7 @@
 
 use super::ep::EpComm;
 use super::pipeline::Schedule;
-use super::plan::ParallelismPlan;
+use super::plan::{DEFAULT_OVERLAP_CHUNK, ParallelismPlan};
 use super::{NoHook, StepHook};
 use crate::comm::{ReduceDtype, Topology};
 use crate::config::RunConfig;
@@ -72,6 +72,8 @@ impl JobSpec {
             data_dir: None,
             hook: Arc::new(NoHook),
             expected_world: None,
+            overlap: false,
+            overlap_chunk: DEFAULT_OVERLAP_CHUNK,
         }
     }
 
@@ -116,6 +118,8 @@ pub struct JobSpecBuilder {
     data_dir: Option<PathBuf>,
     hook: Arc<dyn StepHook>,
     expected_world: Option<usize>,
+    overlap: bool,
+    overlap_chunk: usize,
 }
 
 impl JobSpecBuilder {
@@ -167,6 +171,22 @@ impl JobSpecBuilder {
     /// Forced uniform routing (paper §2.3).
     pub fn fur(mut self, on: bool) -> Self {
         self.fur = on;
+        self
+    }
+
+    /// Overlap the sharded optimizer's collectives with its compute (the
+    /// pipelined step over the async comm runtime, paper §3.2). A pure
+    /// scheduling change: final parameters are bit-identical to a serial
+    /// run.
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// Pipeline chunk length in elements for the overlapped optimizer
+    /// (default [`DEFAULT_OVERLAP_CHUNK`]).
+    pub fn overlap_chunk(mut self, n: usize) -> Self {
+        self.overlap_chunk = n;
         self
     }
 
@@ -240,6 +260,8 @@ impl JobSpecBuilder {
         plan.micro_batches = self.micro_batches;
         plan.ep_comm = self.ep_comm;
         plan.expected_world = self.expected_world;
+        plan.overlap = self.overlap;
+        plan.overlap_chunk = self.overlap_chunk;
         plan.validate_spec()?;
         Ok(JobSpec {
             model: self.model,
@@ -346,6 +368,16 @@ mod tests {
 
         let e = JobSpec::new("m").topology(2, 1, 1).build().unwrap_err();
         assert!(e.to_string().contains("data_dir"), "{e}");
+
+        let e = base()
+            .topology(2, 1, 1)
+            .overlap(true)
+            .overlap_chunk(0)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("[overlap]"), "{e}");
+        let ok = base().topology(2, 1, 1).overlap(true).build().unwrap();
+        assert!(ok.plan.overlap && ok.plan.overlap_chunk > 0);
     }
 
     #[test]

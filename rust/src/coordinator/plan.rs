@@ -75,9 +75,20 @@ pub struct ParallelismPlan {
     /// expected world size (e.g. from a launcher); checked against
     /// `topo.world()` when set
     pub expected_world: Option<usize>,
+    /// overlap the sharded optimizer's collectives with its compute (the
+    /// pipelined step, paper §3.2) — a pure scheduling change, final
+    /// parameters stay bit-identical to the serial path
+    pub overlap: bool,
+    /// pipeline chunk length in elements for the overlapped optimizer
+    pub overlap_chunk: usize,
     /// per-stage placement, filled by [`ParallelismPlan::materialized`]
     pub stages: Vec<StagePlan>,
 }
+
+/// Default optimizer-pipeline chunk length (elements). Small enough to
+/// give the mula-tiny analogs several chunks per segment, large enough
+/// that per-chunk submission overhead stays negligible at paper scale.
+pub const DEFAULT_OVERLAP_CHUNK: usize = 16384;
 
 type SpecCheck = fn(&ParallelismPlan) -> Option<String>;
 type ModelCheck = fn(&ParallelismPlan, &ModelManifest) -> Option<String>;
@@ -123,6 +134,13 @@ const SPEC_CHECKS: &[(&str, SpecCheck)] = &[
         (p.topo.pp > 1 && matches!(p.schedule, Schedule::Interleaved1F1B { .. })).then(|| {
             "interleaved-1f1b needs multi-chunk artifacts; the runnable \
              engines support gpipe and 1f1b"
+                .to_string()
+        })
+    }),
+    ("overlap", |p| {
+        (p.overlap && p.overlap_chunk == 0).then(|| {
+            "overlap requires a positive overlap_chunk (the optimizer \
+             pipeline's chunk length in elements)"
                 .to_string()
         })
     }),
@@ -192,6 +210,8 @@ impl ParallelismPlan {
             micro_batches: 2,
             ep_comm: EpComm::Allgather,
             expected_world: None,
+            overlap: false,
+            overlap_chunk: DEFAULT_OVERLAP_CHUNK,
             stages: Vec::new(),
         }
     }
@@ -300,14 +320,20 @@ impl ParallelismPlan {
             EpComm::Allgather => "allgather",
             EpComm::All2All => "all2all",
         };
-        format!(
+        let mut fp = format!(
             "dp{}-ep{}-pp{}/{mode}/{}/mb{}/{comm}",
             self.topo.dp,
             self.topo.ep,
             self.topo.pp,
             self.schedule.name(),
             self.micro_batches
-        )
+        );
+        // execution knob, appended so serial fingerprints stay stable and
+        // ckpt::ensure_plan's state key (first three segments) is unmoved
+        if self.overlap {
+            fp.push_str("/overlap");
+        }
+        fp
     }
 
     /// Every dp×ep×pp factorization of `world` (sweep tooling; filter by
@@ -410,5 +436,25 @@ mod tests {
     fn fingerprint_is_stable() {
         let p = ParallelismPlan::new(Topology { dp: 1, ep: 2, pp: 2 });
         assert_eq!(p.fingerprint(), "dp1-ep2-pp2/epso/1f1b/mb2/allgather");
+        // overlap is an execution knob: appended, never reshaping the
+        // state key a checkpoint resume compares
+        let mut p = p;
+        p.overlap = true;
+        assert_eq!(p.fingerprint(), "dp1-ep2-pp2/epso/1f1b/mb2/allgather/overlap");
+    }
+
+    #[test]
+    fn overlap_check_fires_with_stable_string() {
+        let mut p = ParallelismPlan::new(Topology::dp_only(2));
+        p.overlap = true;
+        p.overlap_chunk = 0;
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [overlap]"), "{e}");
+        p.overlap_chunk = 4096;
+        assert!(p.validate_spec().is_ok());
+        // overlap off never trips the check, whatever the chunk says
+        p.overlap = false;
+        p.overlap_chunk = 0;
+        assert!(p.validate_spec().is_ok());
     }
 }

@@ -56,14 +56,7 @@ impl RankTrainer for DpTrainer {
             xr,
             1,
         );
-        let opt = ShardedOptimizer::new(
-            segs,
-            Arc::clone(ctx.mesh.world_group()),
-            rank,
-            ctx.spec.adam(),
-            ctx.spec.reduce_dtype(),
-            ctx.spec.run.grad_clip,
-        );
+        let opt = ctx.sharded_optimizer(segs, &format!("dp{rank}"));
         Ok(DpTrainer {
             params: Tensor::f32(global_params, vec![ctx.mm.param_count]),
             opt,
@@ -124,6 +117,8 @@ impl RankTrainer for DpTrainer {
             opt_state_bytes: self.opt.state_bytes(),
             optimizer_update_secs: self.opt.update_secs,
             optimizer_comm_secs: self.opt.comm_secs,
+            optimizer_overlap_secs: self.opt.overlap_secs,
+            optimizer_lane_ops: self.opt.lane_ops(),
         })))
     }
 }

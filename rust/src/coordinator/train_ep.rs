@@ -149,14 +149,7 @@ impl RankTrainer for EpTrainer {
             dpep_rank,
             ep,
         );
-        let opt = ShardedOptimizer::new(
-            segs,
-            Arc::clone(ctx.mesh.world_group()),
-            rank,
-            ctx.spec.adam(),
-            ctx.spec.reduce_dtype(),
-            ctx.spec.run.grad_clip,
-        );
+        let opt = ctx.sharded_optimizer(segs, &format!("ep{rank}"));
         Ok(EpTrainer {
             ep_group: Arc::clone(ep_group),
             ep_rank,
@@ -397,6 +390,8 @@ impl RankTrainer for EpTrainer {
                 opt_state_bytes: self.opt.state_bytes(),
                 optimizer_update_secs: self.opt.update_secs,
                 optimizer_comm_secs: self.opt.comm_secs,
+                optimizer_overlap_secs: self.opt.overlap_secs,
+                optimizer_lane_ops: self.opt.lane_ops(),
             })));
         }
         // non-zero ranks of rank 0's ep group must still rendezvous

@@ -127,14 +127,7 @@ impl RankTrainer for PpTrainer {
             dpep_rank,
             1,
         );
-        let opt = ShardedOptimizer::new(
-            segs,
-            Arc::clone(ctx.mesh.world_group()),
-            rank,
-            ctx.spec.adam(),
-            ctx.spec.reduce_dtype(),
-            ctx.spec.run.grad_clip,
-        );
+        let opt = ctx.sharded_optimizer(segs, &format!("pp{rank}"));
 
         let art_fwd = if last {
             None
@@ -326,6 +319,8 @@ impl RankTrainer for PpTrainer {
                 opt_state_bytes: self.opt.state_bytes(),
                 optimizer_update_secs: self.opt.update_secs,
                 optimizer_comm_secs: self.opt.comm_secs,
+                optimizer_overlap_secs: self.opt.overlap_secs,
+                optimizer_lane_ops: self.opt.lane_ops(),
             })));
         }
         Ok(RankFinish::Aux(AuxParams { tag: self.stage, params: self.params.into_f32()? }))

@@ -325,14 +325,7 @@ impl RankTrainer for PpEpTrainer {
             dpep_rank,
             ep,
         );
-        let opt = ShardedOptimizer::new(
-            segs,
-            Arc::clone(ctx.mesh.world_group()),
-            rank,
-            ctx.spec.adam(),
-            ctx.spec.reduce_dtype(),
-            ctx.spec.run.grad_clip,
-        );
+        let opt = ctx.sharded_optimizer(segs, &format!("ppep{rank}"));
 
         let last = stage == pp - 1;
         Ok(PpEpTrainer {
@@ -535,6 +528,8 @@ impl RankTrainer for PpEpTrainer {
                 opt_state_bytes: self.opt.state_bytes(),
                 optimizer_update_secs: self.opt.update_secs,
                 optimizer_comm_secs: self.opt.comm_secs,
+                optimizer_overlap_secs: self.opt.overlap_secs,
+                optimizer_lane_ops: self.opt.lane_ops(),
             })));
         }
         Ok(RankFinish::Aux(AuxParams {

@@ -55,9 +55,36 @@ impl AdamState {
         params: &mut [f32],
         grads: &[f32],
     ) {
-        assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.m.len());
+        self.begin_step();
+        self.update_chunk(hp, lr, grad_scale, 0, params, grads);
+    }
+
+    /// Advance the step counter (drives bias correction) once per
+    /// optimizer step. [`AdamState::update`] calls this itself; the
+    /// pipelined sharded optimizer calls it once per segment and then
+    /// [`AdamState::update_chunk`] per chunk.
+    pub fn begin_step(&mut self) {
         self.step += 1;
+    }
+
+    /// Update a sub-range of the shard: `params`/`grads` are the chunk
+    /// slices, `offset` is the chunk's start within the shard (it indexes
+    /// `m`/`v`). Chunk-by-chunk application over a partition of the shard
+    /// is bit-identical to one whole-shard [`AdamState::update`] — the
+    /// loop body is elementwise and the bias correction reads the step
+    /// counter bumped by [`AdamState::begin_step`].
+    pub fn update_chunk(
+        &mut self,
+        hp: AdamParams,
+        lr: f32,
+        grad_scale: f32,
+        offset: usize,
+        params: &mut [f32],
+        grads: &[f32],
+    ) {
+        assert_eq!(params.len(), grads.len());
+        assert!(offset + params.len() <= self.m.len());
         let b1 = hp.beta1;
         let b2 = hp.beta2;
         let bc1 = 1.0 - b1.powi(self.step as i32);
@@ -67,10 +94,10 @@ impl AdamState {
         let (m, v) = (&mut self.m, &mut self.v);
         for i in 0..params.len() {
             let g = grads[i] * grad_scale;
-            let mi = b1 * m[i] + (1.0 - b1) * g;
-            let vi = b2 * v[i] + (1.0 - b2) * g * g;
-            m[i] = mi;
-            v[i] = vi;
+            let mi = b1 * m[offset + i] + (1.0 - b1) * g;
+            let vi = b2 * v[offset + i] + (1.0 - b2) * g * g;
+            m[offset + i] = mi;
+            v[offset + i] = vi;
             let mhat = mi * inv_bc1;
             let vhat = vi * inv_bc2;
             params[i] -=
@@ -168,6 +195,40 @@ mod tests {
         let s = clip_scale(4.0, 1.0); // norm 2
         assert!((s - 0.5).abs() < 1e-6);
         assert_eq!(clip_scale(0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn chunked_update_is_bit_identical_to_whole_shard() {
+        let hp = AdamParams::default();
+        let n = 23;
+        let grads: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let mut whole = AdamState::new(n);
+        let mut chunked = AdamState::new(n);
+        let mut pw: Vec<f32> = (0..n).map(|i| 0.1 * i as f32 - 1.0).collect();
+        let mut pc = pw.clone();
+        for step in 0..4 {
+            let scale = if step % 2 == 0 { 1.0 } else { 0.25 };
+            whole.update(hp, 3e-3, scale, &mut pw, &grads);
+            chunked.begin_step();
+            let mut off = 0;
+            for chunk in [5usize, 9, 2, 7] {
+                chunked.update_chunk(
+                    hp,
+                    3e-3,
+                    scale,
+                    off,
+                    &mut pc[off..off + chunk],
+                    &grads[off..off + chunk],
+                );
+                off += chunk;
+            }
+            assert_eq!(off, n);
+        }
+        for i in 0..n {
+            assert_eq!(pw[i].to_bits(), pc[i].to_bits(), "param {i}");
+            assert_eq!(whole.m[i].to_bits(), chunked.m[i].to_bits(), "m {i}");
+            assert_eq!(whole.v[i].to_bits(), chunked.v[i].to_bits(), "v {i}");
+        }
     }
 
     #[test]

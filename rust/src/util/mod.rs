@@ -13,6 +13,19 @@ pub fn round_up(x: usize, m: usize) -> usize {
     (x + m - 1) / m * m
 }
 
+/// Budget for wall-clock *upper-bound* assertions in timing-sensitive
+/// tests: multiplies `base_secs` by `OPTIMUS_TIME_MULT` when set, else by
+/// a generous 4× on CI runners (the `CI` env var) and 1× locally — so the
+/// suite stays deterministic on oversubscribed shared hardware without
+/// loosening local signal.
+pub fn time_budget_secs(base_secs: u64) -> std::time::Duration {
+    let mult = std::env::var("OPTIMUS_TIME_MULT")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(if std::env::var_os("CI").is_some() { 4 } else { 1 });
+    std::time::Duration::from_secs(base_secs * mult.max(1))
+}
+
 /// Split `n` items into `parts` contiguous ranges, padding semantics of
 /// ZeRO-1: every shard has ceil(n/parts) logical slots; the last shards may
 /// be short or empty. Returns (start, len) per part.

@@ -129,6 +129,18 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
             fragment: "EPSO requires ep > 1",
         },
         Case {
+            name: "overlap with zero chunk",
+            plan: {
+                let mut p = plan(Topology::dp_only(2));
+                p.overlap = true;
+                p.overlap_chunk = 0;
+                p
+            },
+            mm: mm.clone(),
+            tag: "[overlap]",
+            fragment: "positive overlap_chunk",
+        },
+        Case {
             name: "missing PP artifacts for degree",
             plan: plan(Topology { dp: 1, ep: 1, pp: 4 }),
             mm: mm.clone(),
