@@ -1,14 +1,17 @@
-//! Reliability features live (paper §4): a hard node failure at step 6
-//! and a soft (NaN) failure at step 4 of the relaunched run, both
-//! recovered automatically from buffer nodes + dual checkpoints.
+//! Reliability features live (paper §4): a soft (NaN) failure at step 4
+//! and a hard node failure at step 6 of the relaunched run, both
+//! recovered automatically from buffer nodes + the sharded async
+//! checkpoints. Auto-resume is built into the trainer: the JobSpec names
+//! a checkpoint directory and every relaunched attempt continues from
+//! the newest committed checkpoint (params *and* optimizer moments, so
+//! the resumed trajectory is bit-identical to an uninterrupted run).
 //!
 //! Run: `cargo run --release --example fault_tolerance`
 
-use optimus::ckpt::DualCheckpointer;
 use optimus::config::Manifest;
 use optimus::coordinator::{self, JobSpec, StepHook};
 use optimus::data::{corpus, preprocess};
-use optimus::ft::{CkptHook, HardKillHook, Launcher, NanInjectHook};
+use optimus::ft::{HardKillHook, Launcher, NanInjectHook};
 use std::sync::Arc;
 
 struct Chain(Vec<Arc<dyn StepHook>>);
@@ -32,29 +35,22 @@ fn main() -> optimus::Result<()> {
     // 2 active "nodes" + 2 buffer nodes
     let launcher = Launcher::new(2, 2);
 
+    let spec = JobSpec::new("mula-tiny")
+        .data_dir(data_dir.clone())
+        .topology(2, 1, 1)
+        .steps(12)
+        .warmup_steps(2)
+        // sharded async checkpoints every 3 steps; relaunches auto-resume
+        .checkpoint_dir(&ckroot)
+        .ckpt_every(3)
+        .hook(Arc::new(Chain(vec![hard.clone(), soft.clone()])))
+        .build()?;
+
     let report = launcher.run(|attempt, nodes| {
         println!("\n=== attempt {attempt} on nodes {nodes:?} ===");
-        let mut spec = JobSpec::new("mula-tiny")
-            .data_dir(data_dir.clone())
-            .topology(2, 1, 1)
-            .steps(12)
-            .warmup_steps(2)
-            .build()?;
-        let dual = DualCheckpointer::new(&ckroot);
-        if let Some(c) = dual.load_latest() {
-            // resharding guard: the recorded plan must match ours
-            c.ensure_plan(&spec.fingerprint())?;
-            println!("resuming from checkpoint at step {}", c.step);
+        if let Some(c) = optimus::ckpt::SavedCheckpoint::load_latest(&ckroot) {
+            println!("auto-resuming from committed checkpoint at step {}", c.step);
         }
-        spec.hook = Arc::new(Chain(vec![
-            hard.clone(),
-            soft.clone(),
-            Arc::new(CkptHook {
-                every: 3,
-                dual: DualCheckpointer::new(&ckroot),
-                plan: Some(spec.fingerprint()),
-            }),
-        ]));
         coordinator::train(&manifest, &spec)
     })?;
 
@@ -65,7 +61,13 @@ fn main() -> optimus::Result<()> {
         launcher.pool.failed_nodes(),
     );
     println!("final loss: {:.4}", report.loss.last().unwrap());
-    let latest = DualCheckpointer::new(&ckroot).load_latest().unwrap();
-    println!("latest valid checkpoint: step {}", latest.step);
+    println!(
+        "checkpoints committed in final attempt: {} (snapshot stall {:.4}s, \
+         hidden write {:.4}s)",
+        report.ckpt_commits,
+        report.breakdown.snapshot_secs,
+        report.breakdown.snapshot_write_secs
+    );
+    print!("{}", optimus::ckpt::inspect(&ckroot)?);
     Ok(())
 }

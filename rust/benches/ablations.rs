@@ -89,7 +89,13 @@ fn main() -> optimus::Result<()> {
     let root = std::env::temp_dir().join("optimus-ablate-ckpt");
     let _ = std::fs::remove_dir_all(&root);
     let dual = DualCheckpointer::new(&root);
-    let ck = Checkpoint { step: 1, params, moments, plan: None };
+    // the save API requires a recorded plan fingerprint
+    let ck = Checkpoint {
+        step: 1,
+        params,
+        moments,
+        plan: Some("mula-tiny/dp2-ep1-pp1/so/1f1b/mb2/allgather".to_string()),
+    };
     let s_dual = bench(1, 5, || {
         dual.save(&ck).unwrap();
     });

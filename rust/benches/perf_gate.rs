@@ -1,8 +1,10 @@
 //! CI perf gate: mula-tiny DP and PP×EP micro-benches, serial vs
-//! `--overlap` (the pipelined EPSO path), written to `BENCH_PR3.json` at
-//! the repo root and gated against the committed `ci/bench_baseline.json`
-//! — a steps/sec regression beyond the baseline's tolerance (default 10%)
-//! exits nonzero so the `perf-gate` workflow job fails.
+//! `--overlap` (the pipelined EPSO path), plus the checkpoint snapshot
+//! stall (sync vs async sharded checkpointing), written to
+//! `BENCH_PR4.json` at the repo root and gated against the committed
+//! `ci/bench_baseline.json` — a steps/sec regression beyond the
+//! baseline's tolerance (default 10%) exits nonzero so the `perf-gate`
+//! workflow job fails.
 //!
 //! Baseline entries that are absent, null or zero are *record-only*: the
 //! run prints the measured value and passes, so the gate bootstraps on
@@ -37,7 +39,7 @@ fn repo_root() -> PathBuf {
 fn out_path() -> PathBuf {
     std::env::var("PERF_GATE_OUT")
         .map(PathBuf::from)
-        .unwrap_or_else(|_| repo_root().join("BENCH_PR3.json"))
+        .unwrap_or_else(|_| repo_root().join("BENCH_PR4.json"))
 }
 
 fn baseline_path() -> PathBuf {
@@ -75,6 +77,14 @@ fn breakdown_json(r: &TrainReport) -> Json {
     m.insert("data_secs".to_string(), Json::Num(r.breakdown.data_secs));
     m.insert("queue_secs".to_string(), Json::Num(r.breakdown.queue_secs));
     m.insert("overlap_secs".to_string(), Json::Num(r.breakdown.overlap_secs));
+    m.insert(
+        "snapshot_secs".to_string(),
+        Json::Num(r.breakdown.snapshot_secs),
+    );
+    m.insert(
+        "snapshot_write_secs".to_string(),
+        Json::Num(r.breakdown.snapshot_write_secs),
+    );
     m.insert(
         "optimizer_comm_secs".to_string(),
         Json::Num(r.optimizer_comm_secs),
@@ -119,7 +129,9 @@ fn main() -> optimus::Result<()> {
     let mut out = BTreeMap::new();
     out.insert(
         "bench".to_string(),
-        Json::Str("perf-gate PR3: mula-tiny serial vs --overlap".to_string()),
+        Json::Str(
+            "perf-gate PR4: mula-tiny serial vs --overlap + ckpt snapshot stall".to_string(),
+        ),
     );
     out.insert("model".to_string(), Json::Str("mula-tiny".to_string()));
     out.insert("steps".to_string(), Json::Num(STEPS as f64));
@@ -184,6 +196,53 @@ fn main() -> optimus::Result<()> {
     }
 
     table.print();
+
+    // --- checkpoint snapshot stall: sync (inline write) vs async (O(1)
+    // capture + background writer), on the DP case ---
+    let mut ck_table = Report::new(
+        "perf-gate — checkpoint snapshot stall per run (mula-tiny DP, 14 steps, every 4)",
+        &["mode", "stall", "hidden write", "commits"],
+    );
+    for (mode, asynchronous) in [("sync", false), ("async", true)] {
+        let ckdir = std::env::temp_dir().join(format!(
+            "optimus-perf-gate-ck-{mode}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&ckdir);
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data.clone())
+            .topo(Topology::dp_only(2))
+            .steps(STEPS)
+            .warmup_steps(2)
+            .engine_pool(2)
+            .checkpoint_dir(&ckdir)
+            .ckpt_every(4)
+            .ckpt_async(asynchronous)
+            .build()?;
+        let r = coordinator::train(&man, &spec)?;
+        ck_table.row(&[
+            mode.to_string(),
+            format!("{:.4}s", r.breakdown.snapshot_secs),
+            format!("{:.4}s", r.breakdown.snapshot_write_secs),
+            format!("{}", r.ckpt_commits),
+        ]);
+        out.insert(
+            format!("dp_ckpt_{mode}_snapshot_stall_secs"),
+            Json::Num(r.breakdown.snapshot_secs),
+        );
+        out.insert(
+            format!("dp_ckpt_{mode}_hidden_write_secs"),
+            Json::Num(r.breakdown.snapshot_write_secs),
+        );
+        out.insert(
+            format!("dp_ckpt_{mode}_steps_per_sec"),
+            Json::Num(1.0 / r.mean_step_secs().max(1e-9)),
+        );
+        out.insert(format!("dp_ckpt_{mode}_commits"), Json::Num(r.ckpt_commits as f64));
+        let _ = std::fs::remove_dir_all(&ckdir);
+    }
+    ck_table.print();
+
     let path = out_path();
     std::fs::write(&path, Json::Obj(out).to_string())?;
     println!("perf-gate: wrote {}", path.display());

@@ -1,0 +1,587 @@
+//! The `Checkpointer`: sharded, asynchronous, two-phase-committed
+//! checkpoints (paper §4's reliability story, redesigned as a subsystem).
+//!
+//! Each rank submits its [`TrainState`] — `Arc` handles captured in O(1)
+//! at a step boundary — and either a background writer thread (async, the
+//! default) or the submitting thread (sync) serializes the owned shards
+//! into a *staging* directory. When the last of the `world` ranks lands,
+//! the checkpoint **commits**:
+//!
+//! ```text
+//!   .tmp-<step>/r*.{part}.bin      phase 1: shard files, fsynced
+//!   .tmp-<step>/manifest.json      phase 2a: manifest written LAST, fsynced
+//!   ckpt-<step>/                   phase 2b: atomic directory rename
+//! ```
+//!
+//! A crash at any point leaves either the previously committed
+//! checkpoints intact or an ignorable `.tmp-*` dir (cleaned on the next
+//! attach) — the paper's "a valid checkpoint to resume training always
+//! exists", generalized from two slots to a keep-`k` ring.
+//!
+//! The save API **requires a plan fingerprint**: untagged checkpoints can
+//! no longer be written (reads of legacy untagged files still pass
+//! through the legacy [`super::Checkpoint`] path).
+
+use super::state::{PartPayload, TrainState};
+use super::{bytes_to_f32s, checksum};
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+/// Checkpoint policy knobs, carried by the
+/// [`ParallelismPlan`](crate::coordinator::ParallelismPlan) and set
+/// through the `JobSpecBuilder` (`--ckpt-dir` / `--ckpt-every` /
+/// `--ckpt-sync` / `--ckpt-keep` on the CLI). The policy never shapes
+/// the plan fingerprint — like `--overlap`, it is an execution knob.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptPolicy {
+    /// checkpoint root directory; `None` disables checkpointing *and*
+    /// auto-resume
+    pub dir: Option<PathBuf>,
+    /// snapshot interval in optimizer steps
+    pub every: usize,
+    /// serialize snapshots on a background writer thread, so the training
+    /// step only blocks for the O(1) handle capture
+    pub asynchronous: bool,
+    /// committed checkpoints retained (≥ 2 — the dual guarantee)
+    pub keep: usize,
+}
+
+impl Default for CkptPolicy {
+    fn default() -> CkptPolicy {
+        CkptPolicy { dir: None, every: 10, asynchronous: true, keep: 2 }
+    }
+}
+
+impl CkptPolicy {
+    pub fn enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    /// Should a snapshot be captured after `step`?
+    pub fn due(&self, step: usize) -> bool {
+        self.enabled() && self.every > 0 && step > 0 && step % self.every == 0
+    }
+
+    /// Validation message for the plan's `[checkpoint]` spec check.
+    pub fn invalid_reason(&self) -> Option<String> {
+        if !self.enabled() {
+            return None;
+        }
+        if self.every == 0 {
+            return Some("checkpoint interval must be >= 1 step".to_string());
+        }
+        if self.keep < 2 {
+            return Some(format!(
+                "keep must be >= 2 (the dual guarantee needs a second slot \
+                 so a failed write never destroys the only valid checkpoint); got {}",
+                self.keep
+            ));
+        }
+        None
+    }
+}
+
+struct Job {
+    step: usize,
+    rank: usize,
+    state: TrainState,
+}
+
+struct PendingStep {
+    dir: PathBuf,
+    parts: Vec<Json>,
+    scalars: BTreeMap<String, Json>,
+    ranks_done: usize,
+}
+
+/// Liveness/accounting counters for tests and `StepBreakdown` folding.
+#[derive(Clone, Copy, Debug)]
+pub struct CkptStats {
+    /// committed checkpoints this run
+    pub commits: u64,
+    pub last_commit_step: Option<usize>,
+    /// serialization time spent on the background writer (0 in sync mode
+    /// — there the write time is the submitting thread's stall)
+    pub write_secs: f64,
+}
+
+/// Sharded checkpoint writer shared by every rank of a run.
+pub struct Checkpointer {
+    root: PathBuf,
+    fingerprint: String,
+    world: usize,
+    keep: usize,
+    pending: Mutex<BTreeMap<usize, PendingStep>>,
+    tx: Mutex<Option<SyncSender<Job>>>,
+    writer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    commits: AtomicU64,
+    /// committed step + 1; 0 = none yet
+    last_commit: AtomicU64,
+    write_micros: AtomicU64,
+    error: Mutex<Option<String>>,
+}
+
+impl Checkpointer {
+    /// Attach at `root`. The fingerprint
+    /// ([`JobSpec::fingerprint`](crate::coordinator::JobSpec::fingerprint))
+    /// is required — the new save API cannot write untagged checkpoints.
+    /// Stale `.tmp-*` staging dirs from a previous crash are removed;
+    /// committed `ckpt-*` dirs are never touched.
+    pub fn new(
+        root: &Path,
+        fingerprint: &str,
+        world: usize,
+        policy: &CkptPolicy,
+    ) -> Result<Arc<Checkpointer>> {
+        if fingerprint.is_empty() {
+            return Err(anyhow!("Checkpointer requires a plan fingerprint"));
+        }
+        if world == 0 {
+            return Err(anyhow!("Checkpointer requires world >= 1"));
+        }
+        std::fs::create_dir_all(root)?;
+        if let Ok(rd) = std::fs::read_dir(root) {
+            for e in rd.flatten() {
+                if e.file_name().to_string_lossy().starts_with(".tmp-") {
+                    let _ = std::fs::remove_dir_all(e.path());
+                }
+            }
+        }
+        let ck = Arc::new(Checkpointer {
+            root: root.to_path_buf(),
+            fingerprint: fingerprint.to_string(),
+            world,
+            keep: policy.keep.max(2),
+            pending: Mutex::new(BTreeMap::new()),
+            tx: Mutex::new(None),
+            writer: Mutex::new(None),
+            commits: AtomicU64::new(0),
+            last_commit: AtomicU64::new(0),
+            write_micros: AtomicU64::new(0),
+            error: Mutex::new(None),
+        });
+        if policy.asynchronous {
+            // bounded queue: at most two full snapshot rounds in flight,
+            // so a writer slower than the snapshot cadence backpressures
+            // the training threads (the stall lands in `snapshot_secs`)
+            // instead of pinning an unbounded pile of COW'd state
+            let (tx, rx) = sync_channel::<Job>(world * 2);
+            // the writer holds a Weak so dropping the last external Arc
+            // (even without drain) closes the channel and ends the thread
+            let me: Weak<Checkpointer> = Arc::downgrade(&ck);
+            let h = std::thread::Builder::new()
+                .name("ckpt-writer".to_string())
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let Some(ck) = me.upgrade() else { break };
+                        let t = Instant::now();
+                        if let Err(e) = ck.write_snapshot(job.step, job.rank, &job.state) {
+                            let mut err = ck.error.lock().unwrap();
+                            if err.is_none() {
+                                *err = Some(format!("{e:#}"));
+                            }
+                        }
+                        ck.write_micros
+                            .fetch_add(t.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    }
+                })
+                .expect("spawn ckpt-writer");
+            *ck.tx.lock().unwrap() = Some(tx);
+            *ck.writer.lock().unwrap() = Some(h);
+        }
+        Ok(ck)
+    }
+
+    /// Submit one rank's snapshot for `step`. Async mode: an O(1)
+    /// enqueue onto the bounded writer queue (blocking only when the
+    /// writer has fallen two snapshot rounds behind — honest
+    /// backpressure). Sync mode: writes inline (the stall the perf gate
+    /// measures). Either way the checkpoint commits when the last of the
+    /// `world` ranks lands.
+    pub fn submit(&self, step: usize, rank: usize, state: TrainState) -> Result<()> {
+        if let Some(e) = self.error.lock().unwrap().clone() {
+            return Err(anyhow!("checkpoint writer failed earlier: {e}"));
+        }
+        let tx = self.tx.lock().unwrap().clone();
+        match tx {
+            Some(tx) => tx
+                .send(Job { step, rank, state })
+                .map_err(|_| anyhow!("checkpoint writer thread is gone")),
+            None => self.write_snapshot(step, rank, &state),
+        }
+    }
+
+    fn staging_dir(&self, step: usize) -> PathBuf {
+        self.root.join(format!(".tmp-{step:08}"))
+    }
+
+    fn slot_dir(&self, step: usize) -> PathBuf {
+        self.root.join(format!("ckpt-{step:08}"))
+    }
+
+    /// Phase 1 for one rank: serialize its owned shard runs into the
+    /// staging dir; trigger phase 2 (commit) when every rank has landed.
+    fn write_snapshot(&self, step: usize, rank: usize, state: &TrainState) -> Result<()> {
+        let dir = self.staging_dir(step);
+        {
+            let mut p = self.pending.lock().unwrap();
+            if !p.contains_key(&step) {
+                std::fs::create_dir_all(&dir)?;
+                p.insert(
+                    step,
+                    PendingStep {
+                        dir: dir.clone(),
+                        parts: Vec::new(),
+                        scalars: BTreeMap::new(),
+                        ranks_done: 0,
+                    },
+                );
+            }
+        }
+        let mut entries: Vec<Json> = Vec::new();
+        let mut scalars: Vec<(String, Json)> = Vec::new();
+        for part in &state.parts {
+            match &part.payload {
+                PartPayload::U64(v) => {
+                    scalars.push((format!("r{rank}.{}", part.name), Json::Num(*v as f64)));
+                }
+                PartPayload::F64(v) => {
+                    scalars.push((format!("r{rank}.{}", part.name), Json::Num(*v)));
+                }
+                PartPayload::F32 { tensor, runs } => {
+                    let data = tensor.as_f32()?;
+                    let mut bytes =
+                        Vec::with_capacity(runs.iter().map(|r| r.len * 4).sum::<usize>());
+                    let mut run_json = Vec::new();
+                    for r in runs {
+                        let slice = data
+                            .get(r.local_start..r.local_start + r.len)
+                            .ok_or_else(|| {
+                                anyhow!("snapshot part `{}` run out of bounds", part.name)
+                            })?;
+                        for x in slice {
+                            bytes.extend_from_slice(&x.to_le_bytes());
+                        }
+                        run_json.push(Json::Arr(vec![
+                            Json::Num(r.global_start as f64),
+                            Json::Num(r.len as f64),
+                        ]));
+                    }
+                    let file = format!("r{rank}.{}.bin", part.name);
+                    write_synced(&dir.join(&file), &bytes)?;
+                    let mut e = BTreeMap::new();
+                    e.insert("file".to_string(), Json::Str(file));
+                    e.insert("rank".to_string(), Json::Num(rank as f64));
+                    e.insert("name".to_string(), Json::Str(part.name.clone()));
+                    e.insert("runs".to_string(), Json::Arr(run_json));
+                    e.insert(
+                        "checksum".to_string(),
+                        Json::Str(format!("{:016x}", checksum(&bytes))),
+                    );
+                    entries.push(Json::Obj(e));
+                }
+            }
+        }
+        let commit = {
+            let mut p = self.pending.lock().unwrap();
+            let ps = p.get_mut(&step).expect("pending step created above");
+            ps.parts.extend(entries);
+            for (k, v) in scalars {
+                ps.scalars.insert(k, v);
+            }
+            ps.ranks_done += 1;
+            if ps.ranks_done == self.world {
+                p.remove(&step)
+            } else {
+                None
+            }
+        };
+        if let Some(ps) = commit {
+            self.commit(step, ps)?;
+        }
+        Ok(())
+    }
+
+    /// Phase 2: manifest written **last** inside the staging dir, fsynced,
+    /// then the whole dir renamed into its final `ckpt-<step>` name.
+    fn commit(&self, step: usize, ps: PendingStep) -> Result<()> {
+        let mut meta = BTreeMap::new();
+        meta.insert("step".to_string(), Json::Num(step as f64));
+        meta.insert("plan".to_string(), Json::Str(self.fingerprint.clone()));
+        meta.insert("world".to_string(), Json::Num(self.world as f64));
+        meta.insert("parts".to_string(), Json::Arr(ps.parts));
+        meta.insert("scalars".to_string(), Json::Obj(ps.scalars));
+        write_synced(&ps.dir.join("manifest.json"), Json::Obj(meta).to_string().as_bytes())?;
+        sync_dir(&ps.dir);
+        let slot = self.slot_dir(step);
+        let _ = std::fs::remove_dir_all(&slot);
+        std::fs::rename(&ps.dir, &slot)
+            .with_context(|| format!("committing checkpoint {slot:?}"))?;
+        sync_dir(&self.root);
+        self.commits.fetch_add(1, Ordering::Relaxed);
+        self.last_commit.store(step as u64 + 1, Ordering::Relaxed);
+        self.prune();
+        Ok(())
+    }
+
+    /// Keep the newest `keep` committed checkpoints.
+    fn prune(&self) {
+        let mut steps = committed_steps(&self.root);
+        steps.sort_unstable();
+        while steps.len() > self.keep {
+            let s = steps.remove(0);
+            let _ = std::fs::remove_dir_all(self.slot_dir(s));
+        }
+    }
+
+    /// Drain the background writer: close the queue, join the thread (so
+    /// trailing snapshots commit), and surface the first write error if
+    /// any occurred. The harness calls this after the rank threads have
+    /// joined, so a committed checkpoint is on disk when `train` returns.
+    pub fn drain(&self) -> Result<()> {
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        if let Some(e) = self.error.lock().unwrap().clone() {
+            return Err(anyhow!("checkpoint write failed: {e}"));
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> CkptStats {
+        let lc = self.last_commit.load(Ordering::Relaxed);
+        CkptStats {
+            commits: self.commits.load(Ordering::Relaxed),
+            last_commit_step: if lc == 0 { None } else { Some(lc as usize - 1) },
+            write_secs: self.write_micros.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        // belt-and-suspenders: the harness drains explicitly; this keeps
+        // a forgotten drain from leaking the writer thread. Never join
+        // from the writer itself (it can briefly own the last upgraded
+        // Arc while finishing a job).
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn write_synced(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// Best-effort directory fsync (not every platform allows opening dirs).
+fn sync_dir(dir: &Path) {
+    if let Ok(f) = std::fs::File::open(dir) {
+        let _ = f.sync_all();
+    }
+}
+
+/// Steps of the committed (`ckpt-<step>` with a manifest) checkpoints.
+fn committed_steps(root: &Path) -> Vec<usize> {
+    let Ok(rd) = std::fs::read_dir(root) else { return Vec::new() };
+    rd.flatten()
+        .filter_map(|e| {
+            let name = e.file_name().to_string_lossy().to_string();
+            let step: usize = name.strip_prefix("ckpt-")?.parse().ok()?;
+            e.path().join("manifest.json").exists().then_some(step)
+        })
+        .collect()
+}
+
+/// One shard file recorded in a committed manifest.
+#[derive(Clone, Debug)]
+pub struct SavedPart {
+    pub rank: usize,
+    pub name: String,
+    pub file: String,
+    /// (global_start, len) per run, in file order
+    pub runs: Vec<(usize, usize)>,
+    pub checksum: String,
+}
+
+/// A committed checkpoint's manifest, loaded back.
+#[derive(Clone, Debug)]
+pub struct SavedCheckpoint {
+    pub dir: PathBuf,
+    pub step: usize,
+    /// plan fingerprint recorded at save time (never absent — the save
+    /// API requires it)
+    pub plan: String,
+    pub world: usize,
+    pub parts: Vec<SavedPart>,
+    pub scalars: BTreeMap<String, f64>,
+}
+
+impl SavedCheckpoint {
+    pub fn load_dir(dir: &Path) -> Result<SavedCheckpoint> {
+        let bad = |what: &str| {
+            anyhow!("checkpoint resume failed [manifest]: {what} in {dir:?}")
+        };
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|_| bad("no manifest.json"))?;
+        let j = Json::parse(&text).map_err(|e| bad(&format!("unparseable manifest ({e})")))?;
+        let step = j
+            .get("step")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing `step`"))?;
+        let plan = j
+            .get("plan")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing `plan`"))?
+            .to_string();
+        let world = j
+            .get("world")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing `world`"))?;
+        let mut parts = Vec::new();
+        for p in j.get("parts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let runs = p
+                .get("runs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad("part without runs"))?
+                .iter()
+                .map(|r| {
+                    let a = r.as_arr().and_then(|a| {
+                        Some((a.first()?.as_usize()?, a.get(1)?.as_usize()?))
+                    });
+                    a.ok_or_else(|| bad("malformed run"))
+                })
+                .collect::<Result<Vec<(usize, usize)>>>()?;
+            parts.push(SavedPart {
+                rank: p.get("rank").and_then(Json::as_usize).unwrap_or(0),
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("part without name"))?
+                    .to_string(),
+                file: p
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("part without file"))?
+                    .to_string(),
+                runs,
+                checksum: p
+                    .get("checksum")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        let scalars = j
+            .get("scalars")
+            .and_then(Json::as_obj)
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| Some((k.clone(), v.as_f64()?)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(SavedCheckpoint { dir: dir.to_path_buf(), step, plan, world, parts, scalars })
+    }
+
+    /// Every committed checkpoint under `root`, newest first, skipping
+    /// slots whose manifest fails to parse. The resume path walks this
+    /// list so a slot with a corrupt *shard* also falls back to the next
+    /// older checkpoint — the dual guarantee: a failed or damaged write
+    /// never masks an older valid checkpoint.
+    pub fn load_all(root: &Path) -> Vec<SavedCheckpoint> {
+        let mut steps = committed_steps(root);
+        steps.sort_unstable_by(|a, b| b.cmp(a));
+        steps
+            .into_iter()
+            .filter_map(|s| {
+                SavedCheckpoint::load_dir(&root.join(format!("ckpt-{s:08}"))).ok()
+            })
+            .collect()
+    }
+
+    /// Newest committed checkpoint under `root`, if any.
+    pub fn load_latest(root: &Path) -> Option<SavedCheckpoint> {
+        SavedCheckpoint::load_all(root).into_iter().next()
+    }
+}
+
+/// Human-readable dump for `optimus ckpt inspect <dir>`: every slot's
+/// validity, step, recorded plan, shard inventory and checksum status.
+pub fn inspect(root: &Path) -> Result<String> {
+    let mut out = format!("checkpoint root {}\n", root.display());
+    let mut names: Vec<String> = std::fs::read_dir(root)
+        .with_context(|| format!("cannot read {root:?}"))?
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().to_string())
+        .filter(|n| n.starts_with("ckpt-") || n.starts_with(".tmp-"))
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        out.push_str("  (no checkpoints)\n");
+        return Ok(out);
+    }
+    for name in names {
+        let dir = root.join(&name);
+        if name.starts_with(".tmp-") {
+            out.push_str(&format!("  {name}  UNCOMMITTED staging dir (ignored on resume)\n"));
+            continue;
+        }
+        match SavedCheckpoint::load_dir(&dir) {
+            Err(e) => out.push_str(&format!("  {name}  INVALID: {e:#}\n")),
+            Ok(c) => {
+                let mut all_ok = true;
+                let mut lines = String::new();
+                for p in &c.parts {
+                    let elems: usize = p.runs.iter().map(|r| r.1).sum();
+                    let status = match std::fs::read(c.dir.join(&p.file)) {
+                        Err(_) => {
+                            all_ok = false;
+                            "MISSING"
+                        }
+                        Ok(b) if format!("{:016x}", checksum(&b)) != p.checksum => {
+                            all_ok = false;
+                            "CHECKSUM MISMATCH"
+                        }
+                        Ok(b) if bytes_to_f32s(&b).is_err() => {
+                            all_ok = false;
+                            "TRUNCATED"
+                        }
+                        Ok(_) => "ok",
+                    };
+                    lines.push_str(&format!(
+                        "      {:<28} rank {:<3} runs {:<3} elems {:<8} fnv {}  {status}\n",
+                        p.file,
+                        p.rank,
+                        p.runs.len(),
+                        elems,
+                        p.checksum
+                    ));
+                }
+                out.push_str(&format!(
+                    "  {name}  {}  step {}  world {}  plan {}\n{lines}",
+                    if all_ok { "VALID" } else { "INVALID" },
+                    c.step,
+                    c.world,
+                    c.plan
+                ));
+            }
+        }
+    }
+    Ok(out)
+}

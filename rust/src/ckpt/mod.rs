@@ -1,10 +1,39 @@
-//! Checkpointing (paper §4): dual checkpointing, persistent model-only
-//! checkpoints, and DP-scattered checkpoint writes.
+//! Checkpointing (paper §4): sharded, topology-elastic checkpoints with
+//! async zero-copy snapshots.
 //!
-//! Checkpoint = params (+ optional optimizer moments) + JSON metadata with
-//! a content checksum, so a half-written checkpoint is detected and the
-//! *other* slot of the dual pair is used — the paper's guarantee that "a
-//! valid checkpoint to resume training" always exists.
+//! The subsystem has three layers:
+//!
+//! * [`state`] — the `TrainState`/`StatePart` registry: every stateful
+//!   component (parameter segments, per-segment AdamW moments,
+//!   step/metrics scalars, PRNG streams) exports named, typed parts whose
+//!   `F32` payloads are O(1) `Arc` captures annotated with *global*
+//!   parameter runs.
+//! * [`Checkpointer`] — each rank writes only the shards it owns per the
+//!   plan's segment layout (the paper's DP-scattered writes), serialized
+//!   on a background writer and committed via write-temp + fsync +
+//!   manifest-rename two-phase commit into a keep-`k` ring of slots.
+//! * [`reshard`] — resume is plan-agnostic: [`ResumeState`] re-slices the
+//!   saved global runs through the resuming plan's layouts, so a dp2×ep2
+//!   checkpoint resumes under dp4 (and vice versa). True state mismatches
+//!   fail with stable `checkpoint resume failed [<check>]` strings.
+//!
+//! The legacy monolithic [`Checkpoint`] blob remains for *model-only*
+//! persistent checkpoints (the paper's rewind-past-divergence files) and
+//! for reading old files; writing an untagged checkpoint is no longer
+//! possible — every save records a plan fingerprint.
+
+mod checkpointer;
+pub mod reshard;
+pub mod state;
+
+pub use checkpointer::{
+    inspect, Checkpointer, CkptPolicy, CkptStats, SavedCheckpoint, SavedPart,
+};
+pub use reshard::ResumeState;
+pub use state::{
+    capture_rank_state, restore_optimizer, GlobalRun, LocalMap, PartPayload, StatePart,
+    TrainState,
+};
 
 use crate::util::json::Json;
 use crate::Result;
@@ -13,7 +42,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// FNV-1a over the byte image — cheap corruption detection.
-fn checksum(bytes: &[u8]) -> u64 {
+pub(crate) fn checksum(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;
@@ -22,7 +51,7 @@ fn checksum(bytes: &[u8]) -> u64 {
     h
 }
 
-fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+pub(crate) fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(v.len() * 4);
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
@@ -30,13 +59,25 @@ fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
     out
 }
 
-fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
-    b.chunks_exact(4)
+/// Decode little-endian f32s. A byte length that is not a multiple of 4
+/// is a **hard decode error** (a truncated or corrupt payload), never a
+/// silent drop of the trailing bytes.
+pub(crate) fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(anyhow!(
+            "f32 payload length {} is not a multiple of 4 — truncated or corrupt",
+            b.len()
+        ));
+    }
+    Ok(b.chunks_exact(4)
         .map(|w| f32::from_le_bytes(w.try_into().unwrap()))
-        .collect()
+        .collect())
 }
 
-/// Full or model-only checkpoint payload.
+/// Legacy full or model-only checkpoint payload (one global blob). New
+/// training-state checkpoints go through the sharded [`Checkpointer`];
+/// this type remains for persistent model-only checkpoints and for
+/// reading files written before the redesign.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub step: usize,
@@ -44,55 +85,81 @@ pub struct Checkpoint {
     /// optimizer moments (empty for model-only checkpoints; the paper
     /// restarts such checkpoints with fresh optimizer state)
     pub moments: Vec<f32>,
-    /// serialized parallelism-plan fingerprint (see
-    /// [`crate::coordinator::JobSpec::fingerprint`]); `None` for legacy
-    /// checkpoints written before plans were recorded
+    /// serialized plan fingerprint (see
+    /// [`crate::coordinator::JobSpec::fingerprint`]). Required on every
+    /// write; `None` only for legacy files read back from disk.
     pub plan: Option<String>,
 }
 
 impl Checkpoint {
     /// Model-only checkpoint from an `Arc`-backed parameter tensor (e.g.
     /// [`crate::coordinator::TrainReport::final_params`]). The single copy
-    /// here is the serialization boundary — nothing upstream cloned.
-    pub fn model_only(step: usize, params: &crate::runtime::Tensor) -> Result<Checkpoint> {
-        Ok(Checkpoint { step, params: params.to_f32_vec()?, moments: Vec::new(), plan: None })
+    /// here is the serialization boundary — nothing upstream cloned. The
+    /// plan fingerprint is required: the old `.with_plan(..)` footgun
+    /// (forgetting it produced untagged checkpoints) is gone.
+    pub fn model_only(
+        step: usize,
+        params: &crate::runtime::Tensor,
+        plan: &str,
+    ) -> Result<Checkpoint> {
+        Ok(Checkpoint {
+            step,
+            params: params.to_f32_vec()?,
+            moments: Vec::new(),
+            plan: Some(plan.to_string()),
+        })
     }
 
-    /// Record the plan fingerprint this checkpoint was trained under.
-    pub fn with_plan(mut self, fingerprint: &str) -> Checkpoint {
-        self.plan = Some(fingerprint.to_string());
-        self
-    }
-
-    /// Resume-compatibility gate: a checkpoint that recorded a plan must
-    /// match the plan resuming it on every *state-relevant* field —
-    /// model, dp×ep×pp topology and sharding mode (the first three
-    /// segments of the fingerprint). Execution knobs that don't shape
-    /// checkpoint state (schedule, microbatch count, exchange policy) may
-    /// differ freely. Resharding is out of scope — a mismatch is a clear
-    /// error, never silent corruption. Legacy checkpoints (no recorded
-    /// plan) pass.
+    /// Resume-compatibility gate for the *legacy* blob format.
+    ///
+    /// * a different **model** is always an error (`[model]` — a
+    ///   different parameter space cannot be resharded);
+    /// * **model-only** checkpoints load under any topology (their params
+    ///   are the global vector);
+    /// * a full legacy blob under a different topology/sharding is still
+    ///   rejected — its flat moment vector records no shard geometry, so
+    ///   it cannot be resharded; the sharded [`Checkpointer`] path is the
+    ///   topology-elastic one.
+    ///
+    /// Legacy untagged checkpoints (no recorded plan) pass.
     pub fn ensure_plan(&self, expected: &str) -> Result<()> {
-        let state_key = |fp: &str| -> Vec<String> {
-            // fingerprint shape: model/dpX-epY-ppZ/mode/schedule/mbN/comm
-            fp.split('/').take(3).map(str::to_string).collect()
-        };
-        match &self.plan {
-            Some(p) if state_key(p) != state_key(expected) => Err(anyhow!(
-                "checkpoint parallelism plan mismatch: saved under `{p}`, \
-                 resuming with `{expected}` — resharding is not supported; \
-                 resume with the matching model/topology/sharding or \
-                 restart from a model-only checkpoint"
-            )),
-            _ => Ok(()),
+        let Some(p) = &self.plan else { return Ok(()) };
+        let model = |fp: &str| fp.split('/').next().unwrap_or("");
+        if model(p) != model(expected) {
+            return Err(anyhow!(
+                "checkpoint resume failed [model]: checkpoint was written for `{p}`, \
+                 resuming `{expected}` — a different model cannot be resharded"
+            ));
         }
+        if self.is_model_only() {
+            return Ok(());
+        }
+        // fingerprint shape: model/dpX-epY-ppZ/mode/schedule/mbN/comm
+        let state_key = |fp: &str| fp.split('/').take(3).collect::<Vec<_>>().join("/");
+        if state_key(p) != state_key(expected) {
+            return Err(anyhow!(
+                "checkpoint parallelism plan mismatch: saved under `{p}`, resuming \
+                 with `{expected}` — legacy full-blob checkpoints do not reshard; \
+                 use the sharded `ckpt::Checkpointer` (JobSpecBuilder::checkpoint_dir) \
+                 for topology-elastic resume, or restart from a model-only checkpoint"
+            ));
+        }
+        Ok(())
     }
 
     pub fn is_model_only(&self) -> bool {
         self.moments.is_empty()
     }
 
+    /// Write the blob. Refuses untagged checkpoints: the plan fingerprint
+    /// must be recorded (legacy untagged files can still be *read*).
     pub fn write(&self, dir: &Path) -> Result<()> {
+        let plan = self.plan.as_deref().ok_or_else(|| {
+            anyhow!(
+                "refusing to write an untagged checkpoint: record the plan \
+                 fingerprint (JobSpec::fingerprint) in `Checkpoint::plan`"
+            )
+        })?;
         std::fs::create_dir_all(dir)?;
         let pbytes = f32s_to_bytes(&self.params);
         let mbytes = f32s_to_bytes(&self.moments);
@@ -102,9 +169,7 @@ impl Checkpoint {
         meta.insert("step".to_string(), Json::Num(self.step as f64));
         meta.insert("params_len".to_string(), Json::Num(self.params.len() as f64));
         meta.insert("moments_len".to_string(), Json::Num(self.moments.len() as f64));
-        if let Some(plan) = &self.plan {
-            meta.insert("plan".to_string(), Json::Str(plan.clone()));
-        }
+        meta.insert("plan".to_string(), Json::Str(plan.to_string()));
         meta.insert(
             "checksum".to_string(),
             Json::Str(format!("{:016x}", checksum(&pbytes) ^ checksum(&mbytes))),
@@ -128,8 +193,10 @@ impl Checkpoint {
         }
         Ok(Checkpoint {
             step: meta.req("step").as_usize().unwrap(),
-            params: bytes_to_f32s(&pbytes),
-            moments: bytes_to_f32s(&mbytes),
+            params: bytes_to_f32s(&pbytes)
+                .with_context(|| format!("decoding params in {dir:?}"))?,
+            moments: bytes_to_f32s(&mbytes)
+                .with_context(|| format!("decoding moments in {dir:?}"))?,
             plan: meta
                 .get("plan")
                 .and_then(|p| p.as_str())
@@ -138,8 +205,11 @@ impl Checkpoint {
     }
 }
 
-/// Dual checkpointing (paper §4): two slots, write to the *older* one, so
-/// a failure mid-write never destroys the only valid checkpoint.
+/// Dual checkpointing (paper §4) for the legacy blob format: two slots,
+/// write to the *older* one, so a failure mid-write never destroys the
+/// only valid checkpoint. The sharded [`Checkpointer`] generalizes this
+/// to a keep-`k` ring with two-phase commits; `DualCheckpointer` remains
+/// for the model-only blob path.
 pub struct DualCheckpointer {
     root: PathBuf,
 }
@@ -206,10 +276,15 @@ impl PersistentCheckpointer {
         PersistentCheckpointer { root: root.to_path_buf() }
     }
 
-    pub fn save(&self, step: usize, params: &[f32]) -> Result<PathBuf> {
+    pub fn save(&self, step: usize, params: &[f32], plan: &str) -> Result<PathBuf> {
         let dir = self.root.join(format!("model-{step:08}"));
-        Checkpoint { step, params: params.to_vec(), moments: Vec::new(), plan: None }
-            .write(&dir)?;
+        Checkpoint {
+            step,
+            params: params.to_vec(),
+            moments: Vec::new(),
+            plan: Some(plan.to_string()),
+        }
+        .write(&dir)?;
         Ok(dir)
     }
 
@@ -240,7 +315,9 @@ impl PersistentCheckpointer {
 }
 
 /// DP-scattered model checkpointing (paper §4): model-parallel shard `m`
-/// is written by DP index `d = m % DP`, spreading filesystem load.
+/// is written by DP index `d = m % DP`, spreading filesystem load. The
+/// [`Checkpointer`] applies the same ownership idea at optimizer-shard
+/// granularity; this helper remains as the paper's literal formulation.
 pub fn dp_scattered_assignment(n_shards: usize, dp: usize) -> Vec<usize> {
     (0..n_shards).map(|m| m % dp).collect()
 }
@@ -275,6 +352,10 @@ pub fn write_scattered_shards(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::{Group, ReduceDtype};
+    use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
+    use crate::optim::AdamParams;
+    use crate::runtime::Tensor;
 
     fn tmp(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("optimus-ck-{tag}-{}", std::process::id()));
@@ -282,12 +363,14 @@ mod tests {
         d
     }
 
+    const FP: &str = "mula-tiny/dp2-ep1-pp1/so/1f1b/mb2/allgather";
+
     fn ck(step: usize) -> Checkpoint {
         Checkpoint {
             step,
             params: (0..64).map(|i| i as f32 + step as f32).collect(),
             moments: vec![0.5; 128],
-            plan: None,
+            plan: Some(FP.to_string()),
         }
     }
 
@@ -295,7 +378,9 @@ mod tests {
     fn plan_fingerprint_roundtrips_and_gates_resume() {
         let d = tmp("plan");
         let fp = "mula-tiny/dp1-ep2-pp2/epso/1f1b/mb2/allgather";
-        ck(5).with_plan(fp).write(&d).unwrap();
+        let mut c = ck(5);
+        c.plan = Some(fp.to_string());
+        c.write(&d).unwrap();
         let c = Checkpoint::read(&d).unwrap();
         assert_eq!(c.plan.as_deref(), Some(fp));
         // matching plan resumes
@@ -303,16 +388,24 @@ mod tests {
         // execution knobs that don't shape checkpoint state may change
         c.ensure_plan("mula-tiny/dp1-ep2-pp2/epso/gpipe/mb4/all2all")
             .unwrap();
-        // topology changes are a clear error, not corruption
+        // a legacy full blob under a different topology is still rejected
+        // (its flat moments cannot reshard) and points at the elastic path
         let e = c
             .ensure_plan("mula-tiny/dp2-ep1-pp1/so/1f1b/mb2/allgather")
             .unwrap_err()
             .to_string();
         assert!(e.contains("parallelism plan mismatch"), "{e}");
-        assert!(e.contains(fp), "{e}");
-        // legacy checkpoints without a recorded plan always pass
-        let legacy = ck(5);
-        legacy.ensure_plan(fp).unwrap();
+        assert!(e.contains("topology-elastic"), "{e}");
+        // a different model is a stable [model] error
+        let e = c
+            .ensure_plan("mula-big/dp1-ep2-pp2/epso/1f1b/mb2/allgather")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("checkpoint resume failed [model]"), "{e}");
+        // model-only checkpoints load under ANY topology of the model
+        let mo = Checkpoint::model_only(5, &Tensor::f32(vec![1.0; 8], vec![8]), fp).unwrap();
+        mo.ensure_plan("mula-tiny/dp8-ep1-pp1/so/1f1b/mb2/allgather")
+            .unwrap();
         std::fs::remove_dir_all(&d).unwrap();
     }
 
@@ -325,6 +418,55 @@ mod tests {
         b[3] ^= 0xff;
         std::fs::write(d.join("params.bin"), b).unwrap();
         assert!(Checkpoint::read(&d).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn truncated_payload_is_a_hard_decode_error() {
+        // satellite: chunks_exact silently dropped trailing bytes before
+        let e = bytes_to_f32s(&[0u8; 6]).unwrap_err().to_string();
+        assert!(e.contains("multiple of 4"), "{e}");
+        assert_eq!(bytes_to_f32s(&[]).unwrap(), Vec::<f32>::new());
+        // end-to-end: craft a file whose checksum matches its truncated
+        // payload — the decode (not the checksum) must reject it
+        let d = tmp("trunc");
+        std::fs::create_dir_all(&d).unwrap();
+        let pbytes = vec![1u8, 2, 3, 4, 5, 6];
+        let mbytes: Vec<u8> = Vec::new();
+        std::fs::write(d.join("params.bin"), &pbytes).unwrap();
+        std::fs::write(d.join("moments.bin"), &mbytes).unwrap();
+        let meta = format!(
+            "{{\"checksum\":\"{:016x}\",\"step\":1}}",
+            checksum(&pbytes) ^ checksum(&mbytes)
+        );
+        std::fs::write(d.join("meta.json"), meta).unwrap();
+        let e = format!("{:#}", Checkpoint::read(&d).unwrap_err());
+        assert!(e.contains("multiple of 4"), "{e}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn untagged_writes_are_refused_but_legacy_reads_pass() {
+        let d = tmp("legacy");
+        // the new save API cannot produce untagged checkpoints
+        let mut c = ck(3);
+        c.plan = None;
+        let e = c.write(&d).unwrap_err().to_string();
+        assert!(e.contains("untagged"), "{e}");
+        // hand-write a legacy untagged file: reads still pass
+        std::fs::create_dir_all(&d).unwrap();
+        let pbytes = f32s_to_bytes(&c.params);
+        let mbytes = f32s_to_bytes(&c.moments);
+        std::fs::write(d.join("params.bin"), &pbytes).unwrap();
+        std::fs::write(d.join("moments.bin"), &mbytes).unwrap();
+        let meta = format!(
+            "{{\"checksum\":\"{:016x}\",\"step\":3}}",
+            checksum(&pbytes) ^ checksum(&mbytes)
+        );
+        std::fs::write(d.join("meta.json"), meta).unwrap();
+        let r = Checkpoint::read(&d).unwrap();
+        assert_eq!(r.plan, None);
+        r.ensure_plan(FP).unwrap();
         std::fs::remove_dir_all(&d).unwrap();
     }
 
@@ -356,7 +498,7 @@ mod tests {
         let d = tmp("persist");
         let p = PersistentCheckpointer::new(&d);
         for step in [1000, 2000, 3000] {
-            p.save(step, &ck(step).params).unwrap();
+            p.save(step, &ck(step).params, FP).unwrap();
         }
         assert_eq!(p.steps(), vec![1000, 2000, 3000]);
         // diverged at 2500: rewind to 2000, fresh optimizer state
@@ -386,6 +528,264 @@ mod tests {
             assert_eq!(write_scattered_shards(&d, my, 3, &shards).unwrap().len(), 2);
         }
         assert_eq!(std::fs::read_dir(&d).unwrap().count(), 12);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    // ----------------------------------------------------------------
+    // The sharded Checkpointer + elastic reshard
+    // ----------------------------------------------------------------
+
+    fn sync_policy(dir: &Path) -> CkptPolicy {
+        CkptPolicy {
+            dir: Some(dir.to_path_buf()),
+            every: 1,
+            asynchronous: false,
+            keep: 2,
+        }
+    }
+
+    fn one_part_state(vals: Vec<f32>) -> TrainState {
+        let n = vals.len();
+        let mut st = TrainState::default();
+        st.push_f32(
+            "params.s0",
+            Tensor::f32(vals, vec![n]),
+            vec![GlobalRun { local_start: 0, global_start: 0, len: n }],
+        );
+        st
+    }
+
+    #[test]
+    fn policy_gates() {
+        let off = CkptPolicy::default();
+        assert!(!off.enabled() && !off.due(10));
+        let on = sync_policy(Path::new("/tmp/x"));
+        assert!(on.due(3) && !on.due(0));
+        assert!(on.invalid_reason().is_none());
+        assert!(CkptPolicy { every: 0, ..on.clone() }
+            .invalid_reason()
+            .unwrap()
+            .contains("interval"));
+        assert!(CkptPolicy { keep: 1, ..on }
+            .invalid_reason()
+            .unwrap()
+            .contains("keep"));
+    }
+
+    #[test]
+    fn two_phase_commit_keep_k_and_inspect() {
+        let d = tmp("tpc");
+        let ck = Checkpointer::new(&d, FP, 1, &sync_policy(&d)).unwrap();
+        for step in [1usize, 2, 3] {
+            ck.submit(step, 0, one_part_state(vec![step as f32; 8])).unwrap();
+        }
+        ck.drain().unwrap();
+        let st = ck.stats();
+        assert_eq!(st.commits, 3);
+        assert_eq!(st.last_commit_step, Some(3));
+        // keep-2 ring: the oldest slot is pruned, newest two remain
+        assert!(!d.join("ckpt-00000001").exists());
+        assert!(d.join("ckpt-00000002").exists());
+        let latest = SavedCheckpoint::load_latest(&d).unwrap();
+        assert_eq!((latest.step, latest.world), (3, 1));
+        assert_eq!(latest.plan, FP);
+        let s = inspect(&d).unwrap();
+        assert!(s.contains("ckpt-00000003") && s.contains("VALID"), "{s}");
+        assert!(s.contains("r0.params.s0.bin"), "{s}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn partial_submission_never_commits() {
+        let d = tmp("partial");
+        let ck = Checkpointer::new(&d, FP, 2, &sync_policy(&d)).unwrap();
+        // only rank 0 of 2 lands (rank 1 "died"): no commit, staging only
+        ck.submit(5, 0, one_part_state(vec![1.0; 4])).unwrap();
+        ck.drain().unwrap();
+        assert_eq!(ck.stats().commits, 0);
+        assert!(SavedCheckpoint::load_latest(&d).is_none());
+        assert!(d.join(".tmp-00000005").exists());
+        drop(ck);
+        // the next attach cleans the stale staging dir
+        let _ck2 = Checkpointer::new(&d, FP, 2, &sync_policy(&d)).unwrap();
+        assert!(!d.join(".tmp-00000005").exists());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn async_writer_commits_after_drain() {
+        let d = tmp("async");
+        let pol = CkptPolicy { asynchronous: true, ..sync_policy(&d) };
+        let ck = Checkpointer::new(&d, FP, 1, &pol).unwrap();
+        ck.submit(4, 0, one_part_state((0..16).map(|i| i as f32).collect()))
+            .unwrap();
+        ck.drain().unwrap();
+        assert_eq!(ck.stats().commits, 1);
+        let saved = SavedCheckpoint::load_latest(&d).unwrap();
+        assert_eq!(saved.step, 4);
+        let rs = ResumeState::open(&saved).unwrap();
+        let got = rs.assemble_params(16).unwrap();
+        assert_eq!(got, (0..16).map(|i| i as f32).collect::<Vec<f32>>());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_slot_falls_back_to_older() {
+        let d = tmp("fallback");
+        let ck = Checkpointer::new(&d, FP, 1, &sync_policy(&d)).unwrap();
+        ck.submit(1, 0, one_part_state(vec![1.0; 4])).unwrap();
+        ck.submit(2, 0, one_part_state(vec![2.0; 4])).unwrap();
+        ck.drain().unwrap();
+        // damage the newest slot's shard payload (manifest stays valid)
+        std::fs::write(d.join("ckpt-00000002").join("r0.params.s0.bin"), b"bad!").unwrap();
+        let all = SavedCheckpoint::load_all(&d);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].step, 2);
+        let e = ResumeState::open(&all[0]).unwrap_err().to_string();
+        assert!(e.contains("checkpoint resume failed [checksum]"), "{e}");
+        // the resume walk falls back to the older, intact checkpoint
+        let rs = ResumeState::open(&all[1]).unwrap();
+        assert_eq!(rs.step(), 1);
+        assert_eq!(rs.assemble_params(4).unwrap(), vec![1.0; 4]);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn save_api_requires_a_fingerprint() {
+        let d = tmp("nofp");
+        assert!(Checkpointer::new(&d, "", 1, &sync_policy(&d)).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    /// The elastic core: shards saved under one (interleaved, EP-style)
+    /// layout re-slice bitwise onto a different (contiguous, DP-style)
+    /// layout, and every true-mismatch check fires its stable string.
+    #[test]
+    fn reshard_roundtrip_is_bitwise_across_topologies() {
+        let d = tmp("reshard");
+        let n = 40usize;
+        let g_params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let g_m: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+        // "dp2×ep2-like" save layout: two ranks with interleaved global runs
+        let maps = [
+            LocalMap::from_copies(&[(0, 0, 10), (20, 10, 10)]).unwrap(),
+            LocalMap::from_copies(&[(10, 0, 10), (30, 10, 10)]).unwrap(),
+        ];
+        let ck = Checkpointer::new(&d, "toy/dp2-ep2-pp1/epso/1f1b/mb2/allgather", 2,
+            &sync_policy(&d)).unwrap();
+        for (r, map) in maps.iter().enumerate() {
+            let runs = map.project(0, 20);
+            let extract = |src: &[f32]| {
+                let mut local = vec![0.0f32; 20];
+                for run in &runs {
+                    local[run.local_start..run.local_start + run.len]
+                        .copy_from_slice(&src[run.global_start..run.global_start + run.len]);
+                }
+                local
+            };
+            let mut st = TrainState::default();
+            st.push_f32("params.s0", Tensor::f32(extract(&g_params), vec![20]), runs.clone());
+            st.push_f32("adam_m.s0", Tensor::f32(extract(&g_m), vec![20]), runs.clone());
+            st.push_u64("adam_t.s0", 8);
+            ck.submit(7, r, st).unwrap();
+        }
+        ck.drain().unwrap();
+        let saved = SavedCheckpoint::load_latest(&d).unwrap();
+        let rs = ResumeState::open(&saved).unwrap();
+        rs.validate("toy", n).unwrap();
+        assert_eq!(rs.step(), 7);
+        assert_eq!(rs.scalars.get("r1.adam_t.s0"), Some(&8.0));
+        // the bias-correction counter restores from the saved scalar
+        assert_eq!(rs.adam_step(), Some(8));
+        // reassembled global vector is bit-identical
+        let ap = rs.assemble_params(n).unwrap();
+        for (a, b) in ap.iter().zip(g_params.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // re-slice under a "dp4-like" layout: 4 contiguous quarters
+        for r in 0..4 {
+            let runs = [GlobalRun { local_start: 0, global_start: r * 10, len: 10 }];
+            let got = rs.gather("adam_m", &runs, 10).unwrap();
+            for (a, b) in got.iter().zip(g_m[r * 10..(r + 1) * 10].iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // stable [<check>] strings for true mismatches
+        let e = rs.validate("other", n).unwrap_err().to_string();
+        assert!(e.contains("checkpoint resume failed [model]"), "{e}");
+        let e = rs.validate("toy", n + 1).unwrap_err().to_string();
+        assert!(e.contains("checkpoint resume failed [param-count]"), "{e}");
+        let e = rs
+            .gather("adam_x", &[GlobalRun { local_start: 0, global_start: 0, len: 1 }], 1)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("checkpoint resume failed [coverage]"), "{e}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    /// End-to-end capture → commit → reshard → restore on a *real*
+    /// sharded optimizer: resumed training continues bit-identically.
+    #[test]
+    fn capture_restore_roundtrip_continues_bitwise() {
+        let d = tmp("roundtrip");
+        let n = 20usize;
+        let map = LocalMap::from_copies(&[(0, 0, 12), (30, 12, 8)]).unwrap();
+        let mk_opt = || {
+            ShardedOptimizer::new(
+                vec![
+                    SegmentSpec {
+                        local_offset: 0,
+                        len: 12,
+                        group: Group::new(1),
+                        group_rank: 0,
+                        norm_weight: 1.0,
+                    },
+                    SegmentSpec {
+                        local_offset: 12,
+                        len: 8,
+                        group: Group::new(1),
+                        group_rank: 0,
+                        norm_weight: 1.0,
+                    },
+                ],
+                Group::new(1),
+                0,
+                AdamParams::default(),
+                ReduceDtype::F32,
+                1.0,
+            )
+        };
+        let grads = |step: usize| -> Vec<f32> {
+            (0..n).map(|i| ((i + step * 3) as f32 * 0.21).sin()).collect()
+        };
+        let mut p1: Vec<f32> = (0..n).map(|i| 0.05 * i as f32 - 0.3).collect();
+        let mut opt1 = mk_opt();
+        for step in 0..3 {
+            opt1.step(&mut p1, &grads(step), 1e-2, true);
+        }
+        // O(1) capture after step 2, committed through the Checkpointer
+        let t = Tensor::f32(p1.clone(), vec![n]);
+        let snap = capture_rank_state(&t, &map, &opt1).unwrap();
+        let ck = Checkpointer::new(&d, "toy/dp1-ep1-pp1/so/1f1b/mb2/allgather", 1,
+            &sync_policy(&d)).unwrap();
+        ck.submit(2, 0, snap).unwrap();
+        ck.drain().unwrap();
+        // resume: fresh optimizer, params + moments re-sliced back
+        let rs = ResumeState::open(&SavedCheckpoint::load_latest(&d).unwrap()).unwrap();
+        let mut opt2 = mk_opt();
+        let mut p2 = rs.gather("params", &map.project(0, n), n).unwrap();
+        restore_optimizer(&mut opt2, &map, &rs, 3).unwrap();
+        for (a, b) in p1.iter().zip(p2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "restored params differ");
+        }
+        // continued training is bit-identical to the uninterrupted run
+        for step in 3..6 {
+            opt1.step(&mut p1, &grads(step), 1e-2, true);
+            opt2.step(&mut p2, &grads(step), 1e-2, true);
+        }
+        for (i, (a, b)) in p1.iter().zip(p2.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "param {i} diverged after resume");
+        }
         std::fs::remove_dir_all(&d).unwrap();
     }
 }

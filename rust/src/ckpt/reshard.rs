@@ -1,0 +1,206 @@
+//! Topology-elastic resume: re-slice a saved sharded checkpoint onto a
+//! (possibly different) `ParallelismPlan`.
+//!
+//! Every shard in a committed checkpoint records its `(global_start,
+//! len)` runs in the global flat parameter coordinate system, so a
+//! resume does not need the saving topology at all: a dp2×ep2 EPSO
+//! checkpoint resumes under dp4 (and vice versa) by gathering each new
+//! rank's segment shards out of the saved run union. This replaces the
+//! old `ensure_plan` hard rejection ("resharding is out of scope") with
+//! a validated reshard path.
+//!
+//! True state mismatches still fail loudly, with stable
+//! `checkpoint resume failed [<check>]` strings that
+//! [`crate::ft::classify`] maps to a non-relaunchable `Config` failure:
+//! `[model]` (different model), `[param-count]` (saved shards don't tile
+//! the model's parameter space), `[coverage]` (a requested range has no
+//! saved shard), `[checksum]`/`[manifest]` (corrupt files). A checkpoint
+//! at or past the step budget is *not* an error — the resumed run simply
+//! has zero steps left (so a relaunch after a final-step crash, or a
+//! re-run of a completed command, still loads cleanly).
+
+use super::checkpointer::SavedCheckpoint;
+use super::state::{GlobalRun, StatePart};
+use super::{bytes_to_f32s, checksum};
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeMap;
+
+/// One loaded shard run: a global interval and its data.
+struct LoadedRun {
+    global_start: usize,
+    data: Vec<f32>,
+}
+
+/// A fully loaded, checksum-verified checkpoint, indexed by component
+/// (`"params"`, `"adam_m"`, `"adam_v"`) in global coordinates — the
+/// object every resuming rank gathers its re-sliced state from.
+pub struct ResumeState {
+    step: usize,
+    plan: String,
+    comps: BTreeMap<String, Vec<LoadedRun>>,
+    pub scalars: BTreeMap<String, f64>,
+}
+
+impl ResumeState {
+    /// Load and verify every shard of `saved`.
+    pub fn open(saved: &SavedCheckpoint) -> Result<ResumeState> {
+        let mut comps: BTreeMap<String, Vec<LoadedRun>> = BTreeMap::new();
+        for p in &saved.parts {
+            let bytes = std::fs::read(saved.dir.join(&p.file)).map_err(|_| {
+                anyhow!(
+                    "checkpoint resume failed [manifest]: shard file `{}` is missing \
+                     from {:?}",
+                    p.file,
+                    saved.dir
+                )
+            })?;
+            if format!("{:016x}", checksum(&bytes)) != p.checksum {
+                return Err(anyhow!(
+                    "checkpoint resume failed [checksum]: shard `{}` is corrupt",
+                    p.file
+                ));
+            }
+            let vals = bytes_to_f32s(&bytes).map_err(|e| {
+                anyhow!("checkpoint resume failed [checksum]: shard `{}`: {e}", p.file)
+            })?;
+            let total: usize = p.runs.iter().map(|r| r.1).sum();
+            if vals.len() != total {
+                return Err(anyhow!(
+                    "checkpoint resume failed [manifest]: shard `{}` holds {} values, \
+                     its manifest runs describe {total}",
+                    p.file,
+                    vals.len()
+                ));
+            }
+            let comp = StatePart::component(&p.name).to_string();
+            let runs = comps.entry(comp).or_default();
+            let mut off = 0usize;
+            for &(g, n) in &p.runs {
+                runs.push(LoadedRun { global_start: g, data: vals[off..off + n].to_vec() });
+                off += n;
+            }
+        }
+        for runs in comps.values_mut() {
+            runs.sort_by_key(|r| r.global_start);
+        }
+        Ok(ResumeState {
+            step: saved.step,
+            plan: saved.plan.clone(),
+            comps,
+            scalars: saved.scalars.clone(),
+        })
+    }
+
+    /// Step the checkpoint was captured after; resume continues at
+    /// `step() + 1`.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// Plan fingerprint recorded at save time.
+    pub fn plan(&self) -> &str {
+        &self.plan
+    }
+
+    /// Model name recorded in the fingerprint (its first segment).
+    pub fn model(&self) -> &str {
+        self.plan.split('/').next().unwrap_or("")
+    }
+
+    /// Elastic-resume preflight: the checkpoint must describe the same
+    /// *model* (the same global parameter space); topology, sharding
+    /// mode, schedule, step budget and every other execution knob may
+    /// differ freely.
+    pub fn validate(&self, model: &str, param_count: usize) -> Result<()> {
+        if self.model() != model {
+            return Err(anyhow!(
+                "checkpoint resume failed [model]: checkpoint was written for `{}` \
+                 (plan `{}`), this job trains `{model}` — a different model cannot \
+                 be resharded",
+                self.model(),
+                self.plan
+            ));
+        }
+        let cov = self.coverage("params");
+        if cov != vec![(0, param_count)] {
+            return Err(anyhow!(
+                "checkpoint resume failed [param-count]: saved parameter shards cover \
+                 {cov:?}, the model needs exactly [(0, {param_count})]"
+            ));
+        }
+        Ok(())
+    }
+
+    /// The saved AdamW bias-correction counter, if recorded (every rank
+    /// and segment records the same value; `max` is defensive). Restores
+    /// use it instead of re-deriving from the step index, so a future
+    /// optimizer-step/train-step decoupling (gradient accumulation)
+    /// cannot silently resume with a wrong counter.
+    pub fn adam_step(&self) -> Option<u64> {
+        self.scalars
+            .iter()
+            .filter(|(k, _)| k.contains(".adam_t"))
+            .map(|(_, v)| *v as u64)
+            .max()
+    }
+
+    /// Merged `[start, end)` global coverage of a component's shards.
+    fn coverage(&self, comp: &str) -> Vec<(usize, usize)> {
+        let Some(runs) = self.comps.get(comp) else { return Vec::new() };
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for r in runs {
+            // runs are sorted by global_start; overlaps (SO-replicated
+            // segments) merge away
+            let (s, e) = (r.global_start, r.global_start + r.data.len());
+            match out.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => out.push((s, e)),
+            }
+        }
+        out
+    }
+
+    /// Re-slice: fill a local buffer of `local_len` elements, where each
+    /// of `runs` maps a local range onto a global interval. The saved
+    /// shards may come from any topology; overlapping saved runs
+    /// (SO-replicated segments) hold identical bytes, so any cover wins.
+    pub fn gather(&self, comp: &str, runs: &[GlobalRun], local_len: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; local_len];
+        let saved = self.comps.get(comp).ok_or_else(|| {
+            anyhow!("checkpoint resume failed [coverage]: checkpoint has no `{comp}` shards")
+        })?;
+        for want in runs {
+            let mut pos = want.global_start;
+            let end = want.global_start + want.len;
+            while pos < end {
+                let r = saved
+                    .iter()
+                    .find(|r| r.global_start <= pos && pos < r.global_start + r.data.len())
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "checkpoint resume failed [coverage]: `{comp}` global range \
+                             [{pos}, {end}) is not covered by any saved shard"
+                        )
+                    })?;
+                let take = (end - pos).min(r.global_start + r.data.len() - pos);
+                let src = &r.data[pos - r.global_start..pos - r.global_start + take];
+                let dst = want.local_start + (pos - want.global_start);
+                out[dst..dst + take].copy_from_slice(src);
+                pos += take;
+            }
+        }
+        Ok(out)
+    }
+
+    /// The full global parameter vector — the broadcast seed on resume
+    /// (every rank then extracts its local view exactly as on a fresh
+    /// start, which is what makes resume plan-agnostic).
+    pub fn assemble_params(&self, param_count: usize) -> Result<Vec<f32>> {
+        self.gather(
+            "params",
+            &[GlobalRun { local_start: 0, global_start: 0, len: param_count }],
+            param_count,
+        )
+    }
+}

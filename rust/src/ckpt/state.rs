@@ -1,0 +1,255 @@
+//! The `TrainState` / `StatePart` registry: every stateful component of a
+//! training rank — parameter segments, per-segment AdamW moment shards,
+//! step/metrics scalars, PRNG streams — exports named, typed parts, and
+//! the [`Checkpointer`](super::Checkpointer) persists exactly the shards
+//! this rank owns (the paper's DP-scattered checkpoint writes).
+//!
+//! Capture is **zero-copy and O(1) in element count**: every `F32`
+//! payload is an `Arc` clone of a live buffer (the rank's parameter
+//! [`Tensor`], the optimizer's moment vectors) plus a run list describing
+//! which slices to persist and where those slices live in the *global*
+//! flat parameter coordinate system. Serialization happens later — on the
+//! Checkpointer's background writer — while training continues on a
+//! copy-on-write view (see DESIGN.md §3: a mutation while the snapshot
+//! handle is alive copies once; the snapshot stays intact).
+//!
+//! Global coordinates are what make resume **topology-elastic**: a shard
+//! saved under one `ParallelismPlan` records `(global_start, len)` runs,
+//! so any other plan can re-slice the union through its own segment
+//! layouts (see [`super::reshard`]).
+
+use crate::optim::sharded::ShardedOptimizer;
+use crate::runtime::Tensor;
+use crate::Result;
+use anyhow::anyhow;
+
+/// One contiguous run tying a slice of a rank-local vector to its
+/// position in the global flat parameter vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GlobalRun {
+    /// start within the rank-local vector the payload tensor indexes
+    pub local_start: usize,
+    /// start within the global flat parameter vector
+    pub global_start: usize,
+    pub len: usize,
+}
+
+/// Ordered runs tiling a rank-local parameter vector `[0, local_len)` —
+/// the rank's local→global index map. Identity for DP; the EP/PP engines
+/// build it from their layouts' copy plans.
+#[derive(Clone, Debug, Default)]
+pub struct LocalMap {
+    runs: Vec<GlobalRun>,
+    local_len: usize,
+}
+
+impl LocalMap {
+    /// The DP map: local index == global index.
+    pub fn identity(len: usize) -> LocalMap {
+        LocalMap {
+            runs: vec![GlobalRun { local_start: 0, global_start: 0, len }],
+            local_len: len,
+        }
+    }
+
+    /// Build from `(global_offset, local_offset, len)` copy runs (the
+    /// form the engine layouts keep). Runs must tile `[0, local_len)`
+    /// exactly — a gap or overlap is a layout bug, not a recoverable
+    /// condition.
+    pub fn from_copies(copies: &[(usize, usize, usize)]) -> Result<LocalMap> {
+        let mut runs: Vec<GlobalRun> = copies
+            .iter()
+            .map(|&(g, l, n)| GlobalRun { local_start: l, global_start: g, len: n })
+            .collect();
+        runs.sort_by_key(|r| r.local_start);
+        let mut pos = 0usize;
+        for r in &runs {
+            if r.local_start != pos {
+                return Err(anyhow!(
+                    "local map runs must tile the local vector: expected a run at {pos}, \
+                     found one at {}",
+                    r.local_start
+                ));
+            }
+            pos += r.len;
+        }
+        Ok(LocalMap { runs, local_len: pos })
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.local_len
+    }
+
+    /// Project a local range onto global runs (the intersections, in
+    /// local order). `local_start`s in the result stay absolute local
+    /// coordinates.
+    pub fn project(&self, start: usize, len: usize) -> Vec<GlobalRun> {
+        let end = start + len;
+        let mut out = Vec::new();
+        for r in &self.runs {
+            let lo = r.local_start.max(start);
+            let hi = (r.local_start + r.len).min(end);
+            if lo < hi {
+                out.push(GlobalRun {
+                    local_start: lo,
+                    global_start: r.global_start + (lo - r.local_start),
+                    len: hi - lo,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Typed payload of one state part.
+pub enum PartPayload {
+    /// `Arc`-backed tensor plus the runs to persist out of it
+    /// (`local_start` indexes the tensor). Capturing one is an `Arc`
+    /// bump, never a data copy.
+    F32 { tensor: Tensor, runs: Vec<GlobalRun> },
+    U64(u64),
+    F64(f64),
+}
+
+/// One named, typed piece of a rank's persistent state.
+pub struct StatePart {
+    pub name: String,
+    pub payload: PartPayload,
+}
+
+impl StatePart {
+    /// Component key: the part name up to the first `.`
+    /// (`"adam_m.s0"` → `"adam_m"`, `"params.s1"` → `"params"`).
+    pub fn component(name: &str) -> &str {
+        name.split('.').next().unwrap_or(name)
+    }
+}
+
+/// Everything one rank hands the [`Checkpointer`](super::Checkpointer)
+/// for one snapshot.
+#[derive(Default)]
+pub struct TrainState {
+    pub parts: Vec<StatePart>,
+}
+
+impl TrainState {
+    pub fn push_f32(&mut self, name: impl Into<String>, tensor: Tensor, runs: Vec<GlobalRun>) {
+        self.parts.push(StatePart {
+            name: name.into(),
+            payload: PartPayload::F32 { tensor, runs },
+        });
+    }
+
+    pub fn push_u64(&mut self, name: impl Into<String>, v: u64) {
+        self.parts.push(StatePart { name: name.into(), payload: PartPayload::U64(v) });
+    }
+
+    pub fn push_f64(&mut self, name: impl Into<String>, v: f64) {
+        self.parts.push(StatePart { name: name.into(), payload: PartPayload::F64(v) });
+    }
+}
+
+/// Capture a rank's persistent training state in O(1): the parameter
+/// shards this rank *owns* per the optimizer's segment layout — the
+/// paper's DP-scattered writes — and the per-segment AdamW moment
+/// shards, all as `Arc` handles. `map` is the rank's local→global
+/// parameter map; serialization happens later on the writer thread.
+pub fn capture_rank_state(
+    params: &Tensor,
+    map: &LocalMap,
+    opt: &ShardedOptimizer,
+) -> Result<TrainState> {
+    if params.len() != map.local_len() {
+        return Err(anyhow!(
+            "snapshot capture: params len {} does not match the local map len {}",
+            params.len(),
+            map.local_len()
+        ));
+    }
+    let mut st = TrainState::default();
+    for (i, seg) in opt.export_state().into_iter().enumerate() {
+        // params: this rank persists exactly its owned shard of the
+        // segment; after the optimizer's allgather every replica holds
+        // the owner's bytes, so the union over ranks is exact
+        let runs = map.project(seg.local_start, seg.len);
+        st.push_f32(format!("params.s{i}"), params.clone(), runs.clone());
+        // moments: same global geometry, but the m/v vectors are
+        // shard-local — rebase the run starts onto [0, len)
+        let rebased: Vec<GlobalRun> = runs
+            .iter()
+            .map(|r| GlobalRun { local_start: r.local_start - seg.local_start, ..*r })
+            .collect();
+        st.push_f32(format!("adam_m.s{i}"), Tensor::f32_shared(seg.m), rebased.clone());
+        st.push_f32(format!("adam_v.s{i}"), Tensor::f32_shared(seg.v), rebased);
+        st.push_u64(format!("adam_t.s{i}"), seg.step);
+    }
+    Ok(st)
+}
+
+/// Restore a rank's optimizer moments from a (possibly differently
+/// sharded) resume source by re-slicing global runs through this rank's
+/// map — the elastic half of the resume path. `step_counter` is the
+/// number of optimizer steps already taken (saved step + 1), which
+/// drives AdamW's bias correction.
+pub fn restore_optimizer(
+    opt: &mut ShardedOptimizer,
+    map: &LocalMap,
+    src: &super::reshard::ResumeState,
+    step_counter: u64,
+) -> Result<()> {
+    for (i, (start, len)) in opt.shard_extents().into_iter().enumerate() {
+        let runs: Vec<GlobalRun> = map
+            .project(start, len)
+            .into_iter()
+            .map(|r| GlobalRun { local_start: r.local_start - start, ..r })
+            .collect();
+        let m = src.gather("adam_m", &runs, len)?;
+        let v = src.gather("adam_v", &runs, len)?;
+        opt.import_state(i, m, v, step_counter)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_and_projection() {
+        let m = LocalMap::identity(100);
+        assert_eq!(m.local_len(), 100);
+        let p = m.project(10, 20);
+        assert_eq!(p, vec![GlobalRun { local_start: 10, global_start: 10, len: 20 }]);
+    }
+
+    #[test]
+    fn from_copies_projects_across_runs() {
+        // local [0,10) -> global [40,50); local [10,30) -> global [0,20)
+        let m = LocalMap::from_copies(&[(0, 10, 20), (40, 0, 10)]).unwrap();
+        assert_eq!(m.local_len(), 30);
+        // a range straddling both runs splits into two global runs
+        let p = m.project(5, 10);
+        assert_eq!(
+            p,
+            vec![
+                GlobalRun { local_start: 5, global_start: 45, len: 5 },
+                GlobalRun { local_start: 10, global_start: 0, len: 5 },
+            ]
+        );
+        // empty projection of an out-of-range request
+        assert!(m.project(30, 0).is_empty());
+    }
+
+    #[test]
+    fn from_copies_rejects_gaps() {
+        let e = LocalMap::from_copies(&[(0, 0, 10), (50, 15, 5)]).unwrap_err();
+        assert!(e.to_string().contains("tile"), "{e}");
+    }
+
+    #[test]
+    fn component_names() {
+        assert_eq!(StatePart::component("params.s0"), "params");
+        assert_eq!(StatePart::component("adam_m.s12"), "adam_m");
+        assert_eq!(StatePart::component("params"), "params");
+    }
+}

@@ -139,6 +139,13 @@ impl EpLayout {
         self.ne_len + self.e_len
     }
 
+    /// The copy plan as `(global_offset, local_offset, len)` runs — the
+    /// form [`crate::ckpt::LocalMap::from_copies`] builds the rank's
+    /// checkpoint map from.
+    pub fn copy_runs(&self) -> &[(usize, usize, usize)] {
+        &self.copies
+    }
+
     /// Extract the rank-local vector from a global parameter vector.
     pub fn extract(&self, global: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0f32; self.local_len()];

@@ -28,6 +28,9 @@
 
 use super::plan::ParallelismPlan;
 use super::{init_global_params, JobSpec, StepHook as _, TrainReport};
+use crate::ckpt::{
+    capture_rank_state, restore_optimizer, Checkpointer, LocalMap, ResumeState, SavedCheckpoint,
+};
 use crate::comm::{Group, Mesh, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::{BatchPlan, Dataset};
@@ -49,6 +52,10 @@ pub struct RankCtx {
     /// the validated + materialized placement this run executes
     pub plan: Arc<ParallelismPlan>,
     pub batches: BatchPlan,
+    /// live sharded checkpointer (None when the plan's policy is off)
+    pub ckpt: Option<Arc<Checkpointer>>,
+    /// validated resume source (None for fresh runs)
+    pub resume: Option<Arc<ResumeState>>,
 }
 
 impl RankCtx {
@@ -94,6 +101,17 @@ impl RankCtx {
     pub fn non_finite(&self, step: usize) -> anyhow::Error {
         anyhow!("rank {}: non-finite loss at step {step}", self.rank)
     }
+}
+
+/// The rank's persistent state as the checkpoint path sees it: the
+/// `Arc`-backed local parameter tensor, the rank-local→global parameter
+/// map, and the sharded optimizer owning the moment shards. The harness
+/// drives zero-copy snapshot capture and elastic restore through this
+/// view; engines only describe *where* their state lives.
+pub struct CkptView<'a> {
+    pub params: &'a Tensor,
+    pub map: &'a LocalMap,
+    pub opt: &'a mut ShardedOptimizer,
 }
 
 /// What one training step produced on this rank.
@@ -195,6 +213,11 @@ pub trait RankTrainer: Sized {
     /// (checkpoint restore, NaN injection).
     fn params_mut(&mut self) -> Result<&mut [f32]>;
 
+    /// Persistent-state view for checkpoint capture/restore (every
+    /// engine's state is the same triple: params tensor, local→global
+    /// map, sharded optimizer).
+    fn ckpt_view(&mut self) -> CkptView<'_>;
+
     fn loss_domain(&self) -> Option<&LossDomain>;
 
     /// Tear down: final collectives + the rank's contribution to the
@@ -261,6 +284,52 @@ pub fn run<T: RankTrainer + 'static>(
         s
     };
 
+    // sharded checkpointing + elastic auto-resume (paper §4): when the
+    // plan's policy names a directory, attach the Checkpointer and — if a
+    // committed checkpoint of this model exists there — resume from it,
+    // resharding through this plan's layouts if the topology changed.
+    // True mismatches fail here, before any rank thread spawns, with the
+    // stable `checkpoint resume failed [<check>]` strings ft::classify
+    // maps to a non-relaunchable Config failure.
+    let (ckpt, resume) = match &plan.ckpt.dir {
+        Some(dir) => {
+            let mut resume = None;
+            for saved in SavedCheckpoint::load_all(dir) {
+                match ResumeState::open(&saved) {
+                    Ok(rs) => {
+                        // a true state mismatch (different model, short
+                        // coverage) is not recoverable by falling back —
+                        // propagate it
+                        rs.validate(&spec.model, mm.param_count)?;
+                        if rs.step() + 1 >= spec.run.steps {
+                            // not an error: a relaunch after a final-step
+                            // crash (or a re-run of a completed command)
+                            // must still load — it just has nothing left
+                            // to train
+                            eprintln!(
+                                "[ckpt] checkpoint at step {} meets the step budget \
+                                 {} — resuming with zero steps left",
+                                rs.step(),
+                                spec.run.steps
+                            );
+                        }
+                        resume = Some(Arc::new(rs));
+                        break;
+                    }
+                    // corrupt shards: fall back to the next older slot
+                    // (the dual guarantee)
+                    Err(e) => eprintln!(
+                        "[ckpt] skipping damaged checkpoint at step {}: {e:#}",
+                        saved.step
+                    ),
+                }
+            }
+            let ck = Checkpointer::new(dir, &spec.fingerprint(), world_n, &plan.ckpt)?;
+            (Some(ck), resume)
+        }
+        None => (None, None),
+    };
+
     let handles: Vec<_> = (0..world_n)
         .map(|rank| {
             let ctx = RankCtx {
@@ -272,6 +341,8 @@ pub fn run<T: RankTrainer + 'static>(
                 spec: spec.clone(),
                 plan: Arc::clone(plan),
                 batches,
+                ckpt: ckpt.clone(),
+                resume: resume.clone(),
             };
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
@@ -311,40 +382,82 @@ pub fn run<T: RankTrainer + 'static>(
             Err(_) => panicked = true,
         }
     }
+    // drain the checkpoint writer before surfacing anything: trailing
+    // snapshots commit (or a partial step stays staged-only), so when
+    // train() returns — by Ok *or* Err — the newest valid checkpoint is
+    // on disk and a relaunch can resume from it immediately
+    let ckpt_err = ckpt.as_ref().and_then(|c| c.drain().err());
     if let Some(e) = first_err {
         return Err(e);
     }
     if panicked {
         return Err(anyhow!("a rank thread panicked without a root-cause error"));
     }
+    if let Some(e) = ckpt_err {
+        return Err(e);
+    }
     let mut report = report.ok_or_else(|| anyhow!("no rank produced a report"))?;
     T::merge_aux(mm, plan, &mut report, aux)?;
+    if let Some(ck) = &ckpt {
+        let st = ck.stats();
+        // hidden serialization time, attributed like queue_secs: the
+        // writer is shared by the run, so the report carries the per-rank
+        // share of the run total
+        report.breakdown.snapshot_write_secs += st.write_secs / world_n as f64;
+        report.ckpt_commits = st.commits;
+    }
     Ok(report)
 }
 
 fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<RankOut> {
     let rank = ctx.rank;
 
-    // --- model broadcasting (paper §4): only rank 0 materializes init ---
+    // --- model broadcasting (paper §4): only rank 0 materializes the
+    // seed vector — a fresh init, or on resume the checkpoint's
+    // reassembled global params. Every rank then extracts its local view
+    // exactly as on a fresh start, which is what makes resume
+    // plan-agnostic: the saving topology never appears here.
     let world = ctx.mesh.world_group();
     let global0 = if rank == 0 {
-        let p = init_global_params(&ctx.mm, ctx.spec.run.seed);
+        let p = match &ctx.resume {
+            Some(r) => r.assemble_params(ctx.mm.param_count)?,
+            None => init_global_params(&ctx.mm, ctx.spec.run.seed),
+        };
         world.broadcast(rank, 0, p.clone());
         p
     } else {
         world.broadcast(rank, 0, Vec::new())
     };
     let mut trainer = T::setup(&ctx, shared, global0)?;
+    let start_step = match &ctx.resume {
+        Some(r) => {
+            // moments re-sliced through this rank's local→global map
+            // (the elastic reshard); the AdamW bias-correction counter
+            // continues from the checkpoint's own scalar (falling back
+            // to saved_step + 1 for files without one) — together with
+            // the exact params this makes the resumed trajectory
+            // bit-identical
+            let t = r.adam_step().unwrap_or(r.step() as u64 + 1);
+            let view = trainer.ckpt_view();
+            restore_optimizer(view.opt, view.map, r, t)?;
+            r.step() + 1
+        }
+        None => 0,
+    };
 
     let mut loss_curve = Curve::new("loss");
     let mut gn_curve = Curve::new("grad_norm");
     let mut breakdown = StepBreakdown::default();
-    let mut step_secs = Vec::with_capacity(ctx.spec.run.steps);
+    // zero when the checkpoint already meets the step budget: the loop
+    // body never runs and finish() reports the restored state
+    let mut step_secs =
+        Vec::with_capacity(ctx.spec.run.steps.saturating_sub(start_step));
+    let mut last_loss = f64::NAN;
     // engine-pool counters are shared by every rank of the run: snapshot
     // now so the reporting rank can fold in this run's queue-wait delta
     let engine_stats0 = ctx.engine.stats();
 
-    for step in 0..ctx.spec.run.steps {
+    for step in start_step..ctx.spec.run.steps {
         let t_step = std::time::Instant::now();
         let out = trainer.step(&ctx, step, &mut breakdown)?;
         // soft-failure backstop (paper §4): a NaN loss aborts the rank
@@ -360,8 +473,27 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
             let mean =
                 dom.group.allreduce_mean(dom.group_rank, vec![out.loss], ReduceDtype::F32)[0];
             if dom.record {
+                last_loss = mean as f64;
                 loss_curve.push(step, mean as f64);
                 gn_curve.push(step, out.grad_norm);
+            }
+        }
+        // snapshot at the step boundary: the training thread blocks only
+        // for the O(1) Arc capture (+ inline write when the policy is
+        // synchronous); every rank reaches this point after the same
+        // step, so the union of submissions is a consistent cut. A rank
+        // that died this step never submits and the step never commits.
+        if let Some(ck) = &ctx.ckpt {
+            if ctx.plan.ckpt.due(step) {
+                let t = std::time::Instant::now();
+                let view = trainer.ckpt_view();
+                let mut snap = capture_rank_state(view.params, view.map, view.opt)?;
+                snap.push_u64("prng.seed", ctx.spec.run.seed);
+                if last_loss.is_finite() {
+                    snap.push_f64("metrics.loss", last_loss);
+                }
+                ck.submit(step, rank, snap)?;
+                breakdown.snapshot_secs += t.elapsed().as_secs_f64();
             }
         }
         step_secs.push(t_step.elapsed().as_secs_f64());
@@ -394,6 +526,9 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
                 optimizer_comm_secs: parts.optimizer_comm_secs,
                 optimizer_overlap_secs: parts.optimizer_overlap_secs,
                 optimizer_lane_ops: parts.optimizer_lane_ops,
+                // committed-checkpoint count is a run-level quantity:
+                // harness::run folds it in from the Checkpointer's stats
+                ckpt_commits: 0,
             }))
         }
         RankFinish::Aux(a) => Ok(RankOut::Aux(a)),

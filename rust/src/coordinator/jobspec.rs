@@ -26,6 +26,7 @@ use super::ep::EpComm;
 use super::pipeline::Schedule;
 use super::plan::{DEFAULT_OVERLAP_CHUNK, ParallelismPlan};
 use super::{NoHook, StepHook};
+use crate::ckpt::CkptPolicy;
 use crate::comm::{ReduceDtype, Topology};
 use crate::config::RunConfig;
 use crate::optim::{AdamParams, ShardingMode};
@@ -74,6 +75,7 @@ impl JobSpec {
             expected_world: None,
             overlap: false,
             overlap_chunk: DEFAULT_OVERLAP_CHUNK,
+            ckpt: CkptPolicy::default(),
         }
     }
 
@@ -120,6 +122,7 @@ pub struct JobSpecBuilder {
     expected_world: Option<usize>,
     overlap: bool,
     overlap_chunk: usize,
+    ckpt: CkptPolicy,
 }
 
 impl JobSpecBuilder {
@@ -187,6 +190,37 @@ impl JobSpecBuilder {
     /// (default [`DEFAULT_OVERLAP_CHUNK`]).
     pub fn overlap_chunk(mut self, n: usize) -> Self {
         self.overlap_chunk = n;
+        self
+    }
+
+    /// Enable sharded checkpointing — and **auto-resume**: when `dir`
+    /// already holds a committed checkpoint of the same *model*,
+    /// `coordinator::train` resumes from it, resharding the saved state
+    /// onto this plan's topology if they differ (paper §4; see
+    /// [`crate::ckpt`]).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.ckpt.dir = Some(dir.into());
+        self
+    }
+
+    /// Snapshot interval in optimizer steps (default 10).
+    pub fn ckpt_every(mut self, n: usize) -> Self {
+        self.ckpt.every = n;
+        self
+    }
+
+    /// Asynchronous snapshot serialization (default `true`): the training
+    /// step blocks only for the O(1) `Arc` capture; a background writer
+    /// serializes. `false` writes inline (the ablation the perf gate
+    /// measures).
+    pub fn ckpt_async(mut self, on: bool) -> Self {
+        self.ckpt.asynchronous = on;
+        self
+    }
+
+    /// Committed checkpoints retained (default 2 — the dual guarantee).
+    pub fn ckpt_keep(mut self, k: usize) -> Self {
+        self.ckpt.keep = k;
         self
     }
 
@@ -262,6 +296,7 @@ impl JobSpecBuilder {
         plan.expected_world = self.expected_world;
         plan.overlap = self.overlap;
         plan.overlap_chunk = self.overlap_chunk;
+        plan.ckpt = self.ckpt;
         plan.validate_spec()?;
         Ok(JobSpec {
             model: self.model,
@@ -378,6 +413,23 @@ mod tests {
         assert!(e.to_string().contains("[overlap]"), "{e}");
         let ok = base().topology(2, 1, 1).overlap(true).build().unwrap();
         assert!(ok.plan.overlap && ok.plan.overlap_chunk > 0);
+
+        let e = base()
+            .topology(2, 1, 1)
+            .checkpoint_dir("/tmp/ck")
+            .ckpt_keep(1)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("[checkpoint]"), "{e}");
+        let ok = base()
+            .topology(2, 1, 1)
+            .checkpoint_dir("/tmp/ck")
+            .ckpt_every(5)
+            .ckpt_async(false)
+            .build()
+            .unwrap();
+        assert!(ok.plan.ckpt.enabled() && !ok.plan.ckpt.asynchronous);
+        assert_eq!(ok.plan.ckpt.every, 5);
     }
 
     #[test]

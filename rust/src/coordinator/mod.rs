@@ -94,6 +94,10 @@ pub struct TrainReport {
     pub optimizer_overlap_secs: f64,
     /// collectives completed on the optimizer's comm lane (0 when serial)
     pub optimizer_lane_ops: u64,
+    /// checkpoints committed by this run's [`crate::ckpt::Checkpointer`]
+    /// (0 when the policy is off) — the falsifiable signal that async
+    /// snapshots actually landed, used by the kill-and-resume tests
+    pub ckpt_commits: u64,
 }
 
 impl TrainReport {

@@ -18,6 +18,7 @@
 use super::ep::EpComm;
 use super::ep_layout::EpLayout;
 use super::pipeline::{Schedule, SEQ_SLOTS};
+use crate::ckpt::CkptPolicy;
 use crate::comm::Topology;
 use crate::config::{ModelManifest, ParamSpec};
 use crate::data::Dataset;
@@ -81,6 +82,10 @@ pub struct ParallelismPlan {
     pub overlap: bool,
     /// pipeline chunk length in elements for the overlapped optimizer
     pub overlap_chunk: usize,
+    /// checkpoint policy (interval, async on/off, keep-k). Like
+    /// `overlap`, a pure execution knob: it never shapes the fingerprint,
+    /// and a checkpoint written under one policy resumes under any other.
+    pub ckpt: CkptPolicy,
     /// per-stage placement, filled by [`ParallelismPlan::materialized`]
     pub stages: Vec<StagePlan>,
 }
@@ -144,6 +149,7 @@ const SPEC_CHECKS: &[(&str, SpecCheck)] = &[
                 .to_string()
         })
     }),
+    ("checkpoint", |p| p.ckpt.invalid_reason()),
 ];
 
 /// Checks against the model manifest (layer/expert divisibility, artifact
@@ -212,6 +218,7 @@ impl ParallelismPlan {
             expected_world: None,
             overlap: false,
             overlap_chunk: DEFAULT_OVERLAP_CHUNK,
+            ckpt: CkptPolicy::default(),
             stages: Vec::new(),
         }
     }
@@ -441,6 +448,24 @@ mod tests {
         let mut p = p;
         p.overlap = true;
         assert_eq!(p.fingerprint(), "dp1-ep2-pp2/epso/1f1b/mb2/allgather/overlap");
+    }
+
+    #[test]
+    fn checkpoint_check_fires_with_stable_string() {
+        let mut p = ParallelismPlan::new(Topology::dp_only(2));
+        p.ckpt.dir = Some(std::path::PathBuf::from("/tmp/ck"));
+        assert!(p.validate_spec().is_ok());
+        p.ckpt.every = 0;
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [checkpoint]"), "{e}");
+        p.ckpt.every = 5;
+        p.ckpt.keep = 1;
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [checkpoint]"), "{e}");
+        // a disabled policy never trips the check, whatever the knobs say
+        p.ckpt.dir = None;
+        p.ckpt.every = 0;
+        assert!(p.validate_spec().is_ok());
     }
 
     #[test]

@@ -12,8 +12,11 @@
 //! in place via copy-on-write once the engine has dropped its handle.
 
 use super::clip_now;
-use super::harness::{LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome};
+use super::harness::{
+    CkptView, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
+};
 use super::plan::ParallelismPlan;
+use crate::ckpt::LocalMap;
 use crate::config::ModelManifest;
 use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
@@ -25,6 +28,8 @@ use std::sync::Arc;
 
 pub(super) struct DpTrainer {
     params: Tensor,
+    /// local == global for DP (the identity checkpoint map)
+    map: LocalMap,
     opt: ShardedOptimizer,
     art: PathBuf,
     key: String,
@@ -59,6 +64,7 @@ impl RankTrainer for DpTrainer {
         let opt = ctx.sharded_optimizer(segs, &format!("dp{rank}"));
         Ok(DpTrainer {
             params: Tensor::f32(global_params, vec![ctx.mm.param_count]),
+            map: LocalMap::identity(ctx.mm.param_count),
             opt,
             art: ctx.mm.artifact_path("train_step")?,
             key: format!("{}:train_step", ctx.mm.name),
@@ -102,6 +108,10 @@ impl RankTrainer for DpTrainer {
 
     fn params_mut(&mut self) -> Result<&mut [f32]> {
         Ok(self.params.as_f32_mut()?.as_mut_slice())
+    }
+
+    fn ckpt_view(&mut self) -> CkptView<'_> {
+        CkptView { params: &self.params, map: &self.map, opt: &mut self.opt }
     }
 
     fn loss_domain(&self) -> Option<&LossDomain> {

@@ -33,8 +33,11 @@
 use super::clip_now;
 use super::ep::{exchange_all2all, exchange_allgather, fur_indices, EpComm};
 use super::ep_layout::EpLayout;
-use super::harness::{LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome};
+use super::harness::{
+    CkptView, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
+};
 use super::plan::ParallelismPlan;
+use crate::ckpt::LocalMap;
 use crate::comm::{Group, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::BatchPlan;
@@ -95,8 +98,11 @@ impl ParamSlices {
 
 pub(super) struct EpTrainer {
     layout: EpLayout,
+    /// the layout's copy plan as a checkpoint map (local→global runs)
+    map: LocalMap,
     arts: Arts,
-    params: Vec<f32>,
+    /// `Arc`-backed so a checkpoint snapshot is an O(1) handle capture
+    params: Tensor,
     opt: ShardedOptimizer,
     ep_group: Arc<Group>,
     ep_rank: usize,
@@ -150,14 +156,17 @@ impl RankTrainer for EpTrainer {
             ep,
         );
         let opt = ctx.sharded_optimizer(segs, &format!("ep{rank}"));
+        let map = LocalMap::from_copies(layout.copy_runs())?;
+        let local_len = layout.local_len();
         Ok(EpTrainer {
             ep_group: Arc::clone(ep_group),
             ep_rank,
             gathers_at_finish: c.dp == 0,
             data_rank: c.dp * ep + c.ep,
             layout,
+            map,
             arts,
-            params,
+            params: Tensor::f32(params, vec![local_len]),
             opt,
             loss_dom: LossDomain {
                 group: Arc::clone(ctx.mesh.world_group()),
@@ -193,7 +202,7 @@ impl RankTrainer for EpTrainer {
 
         let tokens_t = ctx.fetch_tokens(step, self.data_rank, 0, breakdown);
         // parameter slices for this step, shared by fwd and bwd
-        let ps = ParamSlices::new(&self.params, layout);
+        let ps = ParamSlices::new(self.params.as_f32()?, layout);
 
         // ---------------- forward ----------------
         let mut hcur = {
@@ -360,13 +369,22 @@ impl RankTrainer for EpTrainer {
         }
 
         let lr = ctx.spec.run.lr_at(step) as f32;
-        let gn = self.opt.step(&mut self.params, &grads, lr, clip_now(&ctx.spec.run, step));
+        let gn = self.opt.step(
+            self.params.as_f32_mut()?,
+            &grads,
+            lr,
+            clip_now(&ctx.spec.run, step),
+        );
         let _ = aux_total;
         Ok(StepOutcome { loss, grad_norm: gn })
     }
 
     fn params_mut(&mut self) -> Result<&mut [f32]> {
-        Ok(&mut self.params)
+        Ok(self.params.as_f32_mut()?.as_mut_slice())
+    }
+
+    fn ckpt_view(&mut self) -> CkptView<'_> {
+        CkptView { params: &self.params, map: &self.map, opt: &mut self.opt }
     }
 
     fn loss_domain(&self) -> Option<&LossDomain> {
@@ -380,7 +398,10 @@ impl RankTrainer for EpTrainer {
             let mm = &ctx.mm;
             let ep = ctx.plan.topo.ep;
             let mut final_params = vec![0.0f32; mm.param_count];
-            let all_locals = self.ep_group.allgather(self.ep_rank, self.params);
+            // into_f32 moves the buffer when no snapshot handle is still
+            // alive (the steady state) instead of copying the shard
+            let local = self.params.into_f32()?;
+            let all_locals = self.ep_group.allgather(self.ep_rank, local);
             for (r, chunk) in all_locals.chunks(self.layout.local_len()).enumerate() {
                 let lay_r = EpLayout::new(mm, ep, r);
                 lay_r.scatter(chunk, &mut final_params);
@@ -396,7 +417,8 @@ impl RankTrainer for EpTrainer {
         }
         // non-zero ranks of rank 0's ep group must still rendezvous
         if self.gathers_at_finish {
-            self.ep_group.allgather(self.ep_rank, self.params);
+            let local = self.params.into_f32()?;
+            self.ep_group.allgather(self.ep_rank, local);
         }
         Ok(RankFinish::None)
     }

@@ -19,11 +19,12 @@
 
 use super::clip_now;
 use super::harness::{
-    AuxParams, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
+    AuxParams, CkptView, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
 };
 use super::pipeline::{seq_id, PipeOp};
 use super::plan::{stage_specs, ParallelismPlan};
 use super::TrainReport;
+use crate::ckpt::LocalMap;
 use crate::comm::P2p;
 use crate::config::{ModelManifest, ParamSpec};
 use crate::data::BatchPlan;
@@ -37,16 +38,20 @@ fn stage_len(specs: &[ParamSpec]) -> usize {
     specs.iter().map(|s| s.numel).sum()
 }
 
+/// Global offset a stage spec was cut from (rides in the name as `@goff`).
+fn spec_goff(s: &ParamSpec) -> usize {
+    s.name
+        .rsplit('@')
+        .next()
+        .unwrap()
+        .parse()
+        .expect("stage spec global offset")
+}
+
 fn extract_stage(global: &[f32], specs: &[ParamSpec]) -> Vec<f32> {
     let mut out = Vec::with_capacity(stage_len(specs));
     for s in specs {
-        let goff: usize = s
-            .name
-            .rsplit('@')
-            .next()
-            .unwrap()
-            .parse()
-            .expect("stage spec global offset");
+        let goff = spec_goff(s);
         out.extend_from_slice(&global[goff..goff + s.numel]);
     }
     out
@@ -55,14 +60,27 @@ fn extract_stage(global: &[f32], specs: &[ParamSpec]) -> Vec<f32> {
 fn scatter_stage(local: &[f32], specs: &[ParamSpec], global: &mut [f32]) {
     let mut off = 0usize;
     for s in specs {
-        let goff: usize = s.name.rsplit('@').next().unwrap().parse().unwrap();
+        let goff = spec_goff(s);
         global[goff..goff + s.numel].copy_from_slice(&local[off..off + s.numel]);
         off += s.numel;
     }
 }
 
+/// The stage's checkpoint map: one local→global run per stage spec.
+fn stage_map(specs: &[ParamSpec]) -> Result<LocalMap> {
+    let mut copies = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for s in specs {
+        copies.push((spec_goff(s), off, s.numel));
+        off += s.numel;
+    }
+    LocalMap::from_copies(&copies)
+}
+
 pub(super) struct PpTrainer {
     params: Tensor,
+    /// stage-local→global checkpoint map (one run per stage spec)
+    map: LocalMap,
     specs: Vec<ParamSpec>,
     my_len: usize,
     opt: ShardedOptimizer,
@@ -138,6 +156,7 @@ impl RankTrainer for PpTrainer {
 
         Ok(PpTrainer {
             params: Tensor::f32(params, vec![my_len]),
+            map: stage_map(&specs)?,
             specs,
             my_len,
             opt,
@@ -299,6 +318,10 @@ impl RankTrainer for PpTrainer {
 
     fn params_mut(&mut self) -> Result<&mut [f32]> {
         Ok(self.params.as_f32_mut()?.as_mut_slice())
+    }
+
+    fn ckpt_view(&mut self) -> CkptView<'_> {
+        CkptView { params: &self.params, map: &self.map, opt: &mut self.opt }
     }
 
     fn loss_domain(&self) -> Option<&LossDomain> {

@@ -27,12 +27,13 @@ use super::clip_now;
 use super::ep::{exchange_all2all, exchange_allgather, fur_indices, EpComm};
 use super::ep_layout::EpLayout;
 use super::harness::{
-    AuxParams, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
+    AuxParams, CkptView, LossDomain, RankCtx, RankFinish, RankTrainer, ReportParts, StepOutcome,
 };
 use super::pipeline::{seq_id, PipeOp};
 use super::plan::ParallelismPlan;
 use super::train_ep::{Arts, ParamSlices};
 use super::TrainReport;
+use crate::ckpt::LocalMap;
 use crate::comm::{Group, P2p, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::BatchPlan;
@@ -70,8 +71,11 @@ impl MbStash {
 
 pub(super) struct PpEpTrainer {
     layout: EpLayout,
+    /// the stage layout's copy plan as a checkpoint map
+    map: LocalMap,
     arts: Arts,
-    params: Vec<f32>,
+    /// `Arc`-backed so a checkpoint snapshot is an O(1) handle capture
+    params: Tensor,
     opt: ShardedOptimizer,
     p2p: Arc<P2p>,
     ep_group: Arc<Group>,
@@ -328,10 +332,13 @@ impl RankTrainer for PpEpTrainer {
         let opt = ctx.sharded_optimizer(segs, &format!("ppep{rank}"));
 
         let last = stage == pp - 1;
+        let map = LocalMap::from_copies(layout.copy_runs())?;
+        let local_len = layout.local_len();
         Ok(PpEpTrainer {
             layout,
+            map,
             arts,
-            params,
+            params: Tensor::f32(params, vec![local_len]),
             opt,
             p2p: Arc::clone(shared),
             ep_group: Arc::clone(ep_group),
@@ -367,7 +374,7 @@ impl RankTrainer for PpEpTrainer {
         let hid = h.hidden;
         let n_local = self.layout.layer_ne.len();
 
-        let ps = ParamSlices::new(&self.params, &self.layout);
+        let ps = ParamSlices::new(self.params.as_f32()?, &self.layout);
         let mut grads = vec![0.0f32; self.layout.local_len()];
         let mut step_loss = 0.0f32;
         let mut stash: Vec<Option<MbStash>> = (0..micro).map(|_| None).collect();
@@ -499,14 +506,21 @@ impl RankTrainer for PpEpTrainer {
         }
 
         let lr = ctx.spec.run.lr_at(step) as f32;
-        let gn = self
-            .opt
-            .step(&mut self.params, &grads, lr, clip_now(&ctx.spec.run, step));
+        let gn = self.opt.step(
+            self.params.as_f32_mut()?,
+            &grads,
+            lr,
+            clip_now(&ctx.spec.run, step),
+        );
         Ok(StepOutcome { loss: step_loss / micro as f32, grad_norm: gn })
     }
 
     fn params_mut(&mut self) -> Result<&mut [f32]> {
-        Ok(&mut self.params)
+        Ok(self.params.as_f32_mut()?.as_mut_slice())
+    }
+
+    fn ckpt_view(&mut self) -> CkptView<'_> {
+        CkptView { params: &self.params, map: &self.map, opt: &mut self.opt }
     }
 
     fn loss_domain(&self) -> Option<&LossDomain> {
@@ -522,7 +536,7 @@ impl RankTrainer for PpEpTrainer {
         }
         if self.last && self.ep_coord == 0 {
             let mut final_params = vec![0.0f32; ctx.mm.param_count];
-            self.layout.scatter(&self.params, &mut final_params);
+            self.layout.scatter(self.params.as_f32()?, &mut final_params);
             return Ok(RankFinish::Report(Box::new(ReportParts {
                 final_params: Tensor::f32(final_params, vec![ctx.mm.param_count]),
                 opt_state_bytes: self.opt.state_bytes(),
@@ -534,7 +548,7 @@ impl RankTrainer for PpEpTrainer {
         }
         Ok(RankFinish::Aux(AuxParams {
             tag: self.stage * ctx.plan.topo.ep + self.ep_coord,
-            params: self.params,
+            params: self.params.into_f32()?,
         }))
     }
 

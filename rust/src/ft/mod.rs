@@ -6,6 +6,16 @@
 //! it marks the node, swaps in a buffer node, and relaunches from the
 //! latest valid checkpoint. Failure *injection* hooks drive the tests and
 //! the fault_tolerance example.
+//!
+//! **Auto-resume** is built into the trainer: give the `JobSpec` a
+//! checkpoint directory (`JobSpecBuilder::checkpoint_dir`) and every
+//! relaunched attempt resumes from the newest committed sharded
+//! checkpoint automatically — the launcher's attempt closure just calls
+//! `coordinator::train` again. Resume failures that a relaunch cannot
+//! fix (wrong model, corrupt shards — the stable
+//! `checkpoint resume failed [<check>]` strings) classify as
+//! [`FailureKind::Config`], so they surface instead of burning buffer
+//! nodes.
 
 use crate::ckpt::DualCheckpointer;
 use crate::coordinator::StepHook;
@@ -89,6 +99,7 @@ pub fn classify(err: &anyhow::Error) -> FailureKind {
     let s = format!("{err:#}");
     if s.contains("plan validation failed")
         || s.contains("parallelism plan mismatch")
+        || s.contains("checkpoint resume failed")
         || s.contains("unknown model config")
     {
         FailureKind::Config
@@ -236,15 +247,17 @@ impl StepHook for NanInjectHook {
     }
 }
 
-/// Checkpoint-on-interval hook (used with the launcher so relaunches
-/// resume from the latest valid checkpoint). When `plan` is set, the
-/// spec's fingerprint is recorded in every checkpoint so resume can
-/// verify plan compatibility (`Checkpoint::ensure_plan`).
+/// Legacy model-only checkpoint-on-interval hook over the dual-slot blob
+/// format. Superseded by the sharded [`crate::ckpt::Checkpointer`]
+/// (enable with `JobSpecBuilder::checkpoint_dir`), which checkpoints
+/// optimizer state too, writes asynchronously, and reshards on resume;
+/// this hook remains for model-only rewind files. The plan fingerprint is
+/// **required** — untagged checkpoints can no longer be written.
 pub struct CkptHook {
     pub every: usize,
     pub dual: DualCheckpointer,
     /// plan fingerprint to record (see `JobSpec::fingerprint`)
-    pub plan: Option<String>,
+    pub plan: String,
 }
 
 impl StepHook for CkptHook {
@@ -255,7 +268,7 @@ impl StepHook for CkptHook {
                     step,
                     params: params.to_vec(),
                     moments: Vec::new(),
-                    plan: self.plan.clone(),
+                    plan: Some(self.plan.clone()),
                 })
                 .map(|_| ())?;
         }
@@ -325,6 +338,13 @@ mod tests {
         assert_eq!(
             classify(&anyhow!(
                 "checkpoint parallelism plan mismatch: saved under `a`, resuming with `b`"
+            )),
+            FailureKind::Config
+        );
+        // ... and so are the sharded-resume preflight failures
+        assert_eq!(
+            classify(&anyhow!(
+                "checkpoint resume failed [model]: checkpoint was written for `x`"
             )),
             FailureKind::Config
         );

@@ -21,7 +21,8 @@
 //!   exchange
 //! - [`optim`]    — AdamW, sharded optimizer (SO), EPSO (paper §3.2)
 //! - [`data`]     — tokenize → shuffle → shard pipeline + mmap loader
-//! - [`ckpt`]     — dual / persistent / DP-scattered checkpointing (§4)
+//! - [`ckpt`]     — sharded `TrainState`/`Checkpointer` with async
+//!   zero-copy snapshots, two-phase commit, topology-elastic reshard (§4)
 //! - [`ft`]       — hard/soft node-failure handling with buffer nodes (§4)
 //! - [`cluster`]  — Aurora analytic performance model (Fig 4b)
 //! - [`eval`]     — synthetic benchmark suite (Table 2, Figs 2-3)

@@ -8,9 +8,17 @@
 //!         [--schedule gpipe|1f1b] [--micro N] [--fur] [--pool N]
 //!         [--seed N] [--data DIR] [--log-every N]
 //!         [--overlap] [--overlap-chunk N]
+//!         [--ckpt-dir DIR --ckpt-every N --ckpt-sync --ckpt-keep K]
 //!   eval --model M              run the synthetic benchmark suite
 //!   plans --world N [--model M] enumerate dp×ep×pp placements of a world
+//!   ckpt inspect DIR            print a checkpoint dir's manifest
+//!                               (step, plan, shards, checksums, validity)
 //!   scaling [--fur]             Aurora-model Fig 4b sweep
+//!
+//! `--ckpt-dir` enables sharded async checkpointing AND auto-resume: if
+//! the directory already holds a committed checkpoint of the same model,
+//! training continues from it — resharding onto the requested dp×ep×pp
+//! if the topology changed.
 //!
 //! Unknown flags are rejected with a "did you mean" suggestion — a typo'd
 //! `--stpes 500` fails loudly instead of silently training the default 50
@@ -28,13 +36,15 @@ use optimus::optim::ShardingMode;
 use optimus::runtime::Engine;
 use optimus::util::cli::Args;
 
-const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|scaling> [flags]\n\
+const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|scaling> [flags]\n\
                      see rust/src/main.rs header for flags";
 
 const TRAIN_FLAGS: &[&str] = &[
     "model", "data", "dp", "ep", "pp", "steps", "warmup", "lr", "mode", "ep-comm",
     "schedule", "micro", "fur", "pool", "seed", "log-every", "overlap", "overlap-chunk",
+    "ckpt-dir", "ckpt-every", "ckpt-sync", "ckpt-keep",
 ];
+const CKPT_FLAGS: &[&str] = &[];
 const PREPROCESS_FLAGS: &[&str] =
     &["out", "seed", "files", "docs", "context", "shuffle-seed", "per-shard"];
 const EVAL_FLAGS: &[&str] = &["model", "seed", "cases"];
@@ -49,6 +59,7 @@ fn main() -> optimus::Result<()> {
         Some("train") => do_train(&args),
         Some("eval") => do_eval(&args),
         Some("plans") => do_plans(&args),
+        Some("ckpt") => do_ckpt(&args),
         Some("scaling") => do_scaling(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -172,6 +183,25 @@ fn do_train(args: &Args) -> optimus::Result<()> {
             Schedule::parse(s).ok_or_else(|| anyhow!("--schedule wants gpipe|1f1b, got `{s}`"))?,
         );
     }
+    if let Some(dir) = args.get("ckpt-dir") {
+        // sharded async checkpointing + auto-resume (paper §4)
+        b = b
+            .checkpoint_dir(dir)
+            .ckpt_every(args.usize_or("ckpt-every", 10))
+            .ckpt_async(!args.bool_or("ckpt-sync", false))
+            .ckpt_keep(args.usize_or("ckpt-keep", 2));
+        if let Some(saved) =
+            optimus::ckpt::SavedCheckpoint::load_latest(std::path::Path::new(dir))
+        {
+            // informational only — the trainer's preflight owns the
+            // actual resume decision (it may fall back past a damaged
+            // slot or reject a different model)
+            println!(
+                "newest committed checkpoint: step {} (saved under `{}`)",
+                saved.step, saved.plan
+            );
+        }
+    }
     let spec = b.build()?;
     let r = coordinator::train(&man, &spec)?;
     for (s, l) in &r.loss.points {
@@ -192,7 +222,31 @@ fn do_train(args: &Args) -> optimus::Result<()> {
             100.0 * r.breakdown.overlap_ratio()
         );
     }
+    if spec.plan.ckpt.enabled() {
+        println!(
+            "checkpoints: {} committed; snapshot stall {:.4}s, hidden write {:.4}s",
+            r.ckpt_commits, r.breakdown.snapshot_secs, r.breakdown.snapshot_write_secs
+        );
+    }
     Ok(())
+}
+
+/// `optimus ckpt inspect <dir>` — print a checkpoint directory's
+/// manifests: per slot, the step, recorded plan, shard files with
+/// checksum status, and commit validity.
+fn do_ckpt(args: &Args) -> optimus::Result<()> {
+    check(args, CKPT_FLAGS)?;
+    match args.positional.get(1).map(String::as_str) {
+        Some("inspect") => {
+            let dir = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow!("usage: optimus ckpt inspect <dir>"))?;
+            print!("{}", optimus::ckpt::inspect(std::path::Path::new(dir))?);
+            Ok(())
+        }
+        _ => Err(anyhow!("usage: optimus ckpt inspect <dir>")),
+    }
 }
 
 fn do_eval(args: &Args) -> optimus::Result<()> {

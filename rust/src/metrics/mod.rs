@@ -34,14 +34,29 @@ pub struct StepBreakdown {
     /// component ratios use it as the "saved" comm — and is never part of
     /// the wall-clock sum.
     pub overlap_secs: f64,
+    /// time the training thread was blocked taking checkpoint snapshots:
+    /// the O(1) `Arc` capture + submit (async mode) or the full inline
+    /// write (sync mode). Additive — it is real step wall-clock.
+    pub snapshot_secs: f64,
+    /// checkpoint serialization hidden on the Checkpointer's background
+    /// writer. Concurrent with training (like `overlap_secs`), recorded
+    /// as this rank's share (run total / world) — informational, never
+    /// part of the wall-clock sum.
+    pub snapshot_write_secs: f64,
 }
 
 impl StepBreakdown {
     /// Wall-clock-additive components only: `queue_secs` is spent inside
-    /// `fwd_bwd_secs` and `overlap_secs` is concurrent-by-design, so
-    /// neither is added — the sum tracks real step time.
+    /// `fwd_bwd_secs` and `overlap_secs`/`snapshot_write_secs` are
+    /// concurrent-by-design, so none of those are added — the sum tracks
+    /// real step time. `snapshot_secs` (the capture stall) is real
+    /// blocking time and is added.
     pub fn total(&self) -> f64 {
-        self.fwd_bwd_secs + self.optimizer_secs + self.comm_secs + self.data_secs
+        self.fwd_bwd_secs
+            + self.optimizer_secs
+            + self.comm_secs
+            + self.data_secs
+            + self.snapshot_secs
     }
 
     /// Fraction of total communication (exposed + hidden) that the
@@ -61,6 +76,8 @@ impl StepBreakdown {
         self.data_secs += other.data_secs;
         self.queue_secs += other.queue_secs;
         self.overlap_secs += other.overlap_secs;
+        self.snapshot_secs += other.snapshot_secs;
+        self.snapshot_write_secs += other.snapshot_write_secs;
     }
 }
 
@@ -142,16 +159,20 @@ mod tests {
             optimizer_secs: 1.0,
             comm_secs: 0.5,
             data_secs: 0.25,
-            queue_secs: 0.75,  // inside fwd_bwd
-            overlap_secs: 0.5, // concurrent with optimizer
+            queue_secs: 0.75,          // inside fwd_bwd
+            overlap_secs: 0.5,         // concurrent with optimizer
+            snapshot_secs: 0.25,       // blocking capture stall — additive
+            snapshot_write_secs: 1.25, // hidden on the ckpt writer
         };
-        assert_eq!(b.total(), 3.75);
+        assert_eq!(b.total(), 4.0);
         assert_eq!(b.overlap_ratio(), 0.5);
         let other = b.clone();
         b.add(&other);
         assert_eq!(b.queue_secs, 1.5);
         assert_eq!(b.overlap_secs, 1.0);
-        assert_eq!(b.total(), 7.5);
+        assert_eq!(b.snapshot_secs, 0.5);
+        assert_eq!(b.snapshot_write_secs, 2.5);
+        assert_eq!(b.total(), 8.0);
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //! p ← p − lr·( m̂/(√v̂+ε) + wd·p )   with bias-corrected m̂, v̂.
 //!
 //! The decoupled weight decay is applied to all parameters (paper §2.1).
+//!
+//! The moment vectors are `Arc`-backed so the checkpoint path can capture
+//! them in O(1) ([`AdamState::snapshot`]): the update loop mutates through
+//! `Arc::make_mut`, which stays in-place while no snapshot handle is
+//! alive and copies exactly once while a background checkpoint write is
+//! still serializing (the snapshot stays intact — same copy-on-write
+//! rules as [`crate::runtime::Tensor`], DESIGN.md §3).
+
+use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug)]
 pub struct AdamParams {
@@ -28,14 +37,38 @@ impl Default for AdamParams {
 /// First/second moment state for one shard.
 #[derive(Clone, Debug)]
 pub struct AdamState {
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
+    pub m: Arc<Vec<f32>>,
+    pub v: Arc<Vec<f32>>,
     pub step: u64,
 }
 
 impl AdamState {
     pub fn new(n: usize) -> AdamState {
-        AdamState { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+        AdamState { m: Arc::new(vec![0.0; n]), v: Arc::new(vec![0.0; n]), step: 0 }
+    }
+
+    /// O(1) snapshot handles of the moment vectors (checkpoint capture).
+    pub fn snapshot(&self) -> (Arc<Vec<f32>>, Arc<Vec<f32>>) {
+        (Arc::clone(&self.m), Arc::clone(&self.v))
+    }
+
+    /// Replace the moment state (checkpoint restore). `step` is the
+    /// number of optimizer steps already taken — it drives the bias
+    /// correction, so a resumed run continues bit-identically.
+    pub fn load(&mut self, m: Vec<f32>, v: Vec<f32>, step: u64) -> crate::Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            return Err(anyhow::anyhow!(
+                "AdamState restore: moment lengths {}/{} do not match shard {}/{}",
+                m.len(),
+                v.len(),
+                self.m.len(),
+                self.v.len()
+            ));
+        }
+        self.m = Arc::new(m);
+        self.v = Arc::new(v);
+        self.step = step;
+        Ok(())
     }
 
     /// Bytes held by optimizer state (8 bytes/param) — what SO vs EPSO
@@ -91,7 +124,8 @@ impl AdamState {
         let bc2 = 1.0 - b2.powi(self.step as i32);
         let inv_bc1 = 1.0 / bc1;
         let inv_bc2 = 1.0 / bc2;
-        let (m, v) = (&mut self.m, &mut self.v);
+        // in-place while uniquely owned; one copy if a snapshot is alive
+        let (m, v) = (Arc::make_mut(&mut self.m), Arc::make_mut(&mut self.v));
         for i in 0..params.len() {
             let g = grads[i] * grad_scale;
             let mi = b1 * m[offset + i] + (1.0 - b1) * g;
@@ -229,6 +263,27 @@ mod tests {
             assert_eq!(whole.m[i].to_bits(), chunked.m[i].to_bits(), "m {i}");
             assert_eq!(whole.v[i].to_bits(), chunked.v[i].to_bits(), "v {i}");
         }
+    }
+
+    #[test]
+    fn snapshot_is_copy_on_write() {
+        let hp = AdamParams::default();
+        let mut st = AdamState::new(4);
+        let mut p = vec![1.0f32; 4];
+        st.update(hp, 1e-2, 1.0, &mut p, &[0.5; 4]);
+        let (m_snap, v_snap) = st.snapshot();
+        let (m1, v1) = (st.m[0], st.v[0]);
+        // updating while the snapshot is alive copies; the snapshot is frozen
+        st.update(hp, 1e-2, 1.0, &mut p, &[0.5; 4]);
+        assert_eq!(m_snap[0].to_bits(), m1.to_bits());
+        assert_eq!(v_snap[0].to_bits(), v1.to_bits());
+        assert_ne!(st.m[0].to_bits(), m1.to_bits());
+        // restore round-trips, including the bias-correction counter
+        let mut st2 = AdamState::new(4);
+        st2.load(m_snap.as_ref().clone(), v_snap.as_ref().clone(), 1).unwrap();
+        assert_eq!(st2.step, 1);
+        assert_eq!(st2.m[0].to_bits(), m1.to_bits());
+        assert!(st2.load(vec![0.0; 3], vec![0.0; 4], 1).is_err(), "length gate");
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod adamw;
 pub mod sharded;
 
 pub use adamw::{AdamParams, AdamState};
-pub use sharded::{SegmentLayout, ShardedOptimizer, ShardingMode};
+pub use sharded::{SegmentLayout, SegmentState, ShardedOptimizer, ShardingMode};

@@ -158,6 +158,56 @@ impl ShardedOptimizer {
         self.segments.iter().map(|s| s.state.bytes()).sum()
     }
 
+    /// Per-segment persistent state as O(1) `Arc` handles — what the
+    /// checkpoint path captures at a step boundary
+    /// ([`crate::ckpt::capture_rank_state`]). Serialization happens later
+    /// on the writer thread; the next `step` copy-on-writes past any
+    /// still-alive snapshot.
+    pub fn export_state(&self) -> Vec<SegmentState> {
+        self.segments
+            .iter()
+            .map(|s| {
+                let (ss, sl) = s.shard;
+                let (m, v) = s.state.snapshot();
+                SegmentState {
+                    local_start: s.spec.local_offset + ss,
+                    len: sl,
+                    m,
+                    v,
+                    step: s.state.step,
+                }
+            })
+            .collect()
+    }
+
+    /// `(local_start, len)` of each segment's owned shard within the
+    /// rank-local parameter vector, in segment order — the geometry the
+    /// elastic restore path re-slices a checkpoint through.
+    pub fn shard_extents(&self) -> Vec<(usize, usize)> {
+        self.segments
+            .iter()
+            .map(|s| (s.spec.local_offset + s.shard.0, s.shard.1))
+            .collect()
+    }
+
+    /// Restore one segment's moments (checkpoint resume). `step` is the
+    /// count of optimizer steps already taken — the AdamW bias-correction
+    /// counter a resumed run continues from.
+    pub fn import_state(
+        &mut self,
+        idx: usize,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        step: u64,
+    ) -> crate::Result<()> {
+        let n = self.segments.len();
+        let seg = self
+            .segments
+            .get_mut(idx)
+            .ok_or_else(|| anyhow::anyhow!("import_state: no segment {idx} (have {n})"))?;
+        seg.state.load(m, v, step)
+    }
+
     /// Owned shard sizes (diagnostics / tests).
     pub fn shard_lens(&self) -> Vec<usize> {
         self.segments.iter().map(|s| s.shard.1).collect()
@@ -390,6 +440,19 @@ impl ShardedOptimizer {
         self.overlap_secs += (busy1 - busy0 - exposed).max(0.0);
         total.sqrt()
     }
+}
+
+/// One segment's persistent optimizer state, exported as O(1) `Arc`
+/// handles for the zero-copy snapshot path.
+pub struct SegmentState {
+    /// absolute start of the owned shard within the rank-local parameter
+    /// vector
+    pub local_start: usize,
+    pub len: usize,
+    pub m: Arc<Vec<f32>>,
+    pub v: Arc<Vec<f32>>,
+    /// optimizer steps taken (the AdamW bias-correction counter)
+    pub step: u64,
 }
 
 /// One in-flight chunked gradient allreduce (pipelined step, stage 1).

@@ -39,6 +39,13 @@ impl Tensor {
         Tensor::I32 { data: Arc::new(data), shape }
     }
 
+    /// F32 tensor over an existing shared buffer — an `Arc` bump, never a
+    /// copy (the zero-copy snapshot payloads of [`crate::ckpt`]).
+    pub fn f32_shared(data: Arc<Vec<f32>>) -> Tensor {
+        let n = data.len();
+        Tensor::F32 { data, shape: vec![n] }
+    }
+
     pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor::F32 { data: Arc::new(vec![0.0; n]), shape }

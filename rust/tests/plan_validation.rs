@@ -141,6 +141,30 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
             fragment: "positive overlap_chunk",
         },
         Case {
+            name: "checkpoint keep below the dual guarantee",
+            plan: {
+                let mut p = plan(Topology::dp_only(2));
+                p.ckpt.dir = Some(PathBuf::from("/tmp/pv-ck"));
+                p.ckpt.keep = 1;
+                p
+            },
+            mm: mm.clone(),
+            tag: "[checkpoint]",
+            fragment: "keep must be >= 2",
+        },
+        Case {
+            name: "checkpoint interval of zero",
+            plan: {
+                let mut p = plan(Topology::dp_only(2));
+                p.ckpt.dir = Some(PathBuf::from("/tmp/pv-ck"));
+                p.ckpt.every = 0;
+                p
+            },
+            mm: mm.clone(),
+            tag: "[checkpoint]",
+            fragment: "interval must be >= 1",
+        },
+        Case {
             name: "missing PP artifacts for degree",
             plan: plan(Topology { dp: 1, ep: 1, pp: 4 }),
             mm: mm.clone(),
