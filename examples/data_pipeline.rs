@@ -1,9 +1,14 @@
-//! The offline data pipeline end to end (paper §4): tokenize -> shuffle
-//! -> shard, then mmap loading with contiguous per-rank reads.
+//! The data pipeline end to end (paper §4 + DESIGN.md §7): tokenize ->
+//! shuffle -> shard offline, then the deterministic streaming read path
+//! — epoch-aware blockwise shuffle, budget-enforced token stream, and
+//! the background prefetcher — over mmap'd contiguous per-rank reads.
 //!
 //! Run: `cargo run --release --example data_pipeline`
 
-use optimus::data::{corpus, preprocess, BatchPlan, Dataset, Tokenizer};
+use optimus::data::{
+    corpus, preprocess, BatchPlan, Dataset, Prefetcher, TokenCursor, TokenStream, Tokenizer,
+};
+use std::sync::Arc;
 
 fn main() -> optimus::Result<()> {
     let dir = std::env::temp_dir().join("optimus-datapipe-demo");
@@ -23,28 +28,66 @@ fn main() -> optimus::Result<()> {
     );
 
     // mmap'd lazy loading
-    let ds = Dataset::open(&dir)?;
+    let ds = Arc::new(Dataset::open(&dir)?);
     println!("dataset: {} instances of context {}", ds.len(), ds.context);
 
-    // deterministic contiguous batch plan across DP ranks
+    // the shuffled, budget-enforced token stream: (data_seed, dataset) →
+    // one deterministic instance order, reshuffled blockwise each epoch
     let plan = BatchPlan { dp: 4, micro_batch: 8, micro_batches: 2 };
+    let steps = 50usize;
+    let cursor = TokenCursor::fresh(plan.instances_per_step() as u64);
+    let budget = steps as u64 * cursor.per_step;
+    let stream = Arc::new(TokenStream::new(Arc::clone(&ds), 42, budget));
+    println!(
+        "stream: budget {budget} instances = {:.2} epochs (reshuffled per epoch)",
+        budget as f64 / stream.epoch_len() as f64
+    );
+
+    // synchronous reads, all ranks
     let t1 = std::time::Instant::now();
     let mut tokens_read = 0usize;
-    for step in 0..50 {
-        for rank in 0..4 {
-            for micro in 0..2 {
-                let b = ds.batch_i32(plan.start(step, rank, micro), 8, 127);
+    for step in 0..steps {
+        for rank in 0..plan.dp {
+            for micro in 0..plan.micro_batches {
+                let pos = cursor.at_step(step) + plan.offset(rank, micro) as u64;
+                let b = stream.batch_i32(pos, plan.micro_batch, 127)?;
                 tokens_read += b.len();
             }
         }
     }
     let dt = t1.elapsed();
     println!(
-        "read {} tokens in {:?} ({:.1} M tokens/s) — contiguous mmap reads",
+        "sync: read {} tokens in {:?} ({:.1} M tokens/s) — contiguous within shuffle blocks",
         tokens_read,
         dt,
         tokens_read as f64 / dt.as_secs_f64() / 1e6
     );
+
+    // the same reads through one rank's background prefetcher: the pop
+    // is the only stall, assembly hides on the producer thread
+    let mut pf = Prefetcher::spawn(
+        Arc::clone(&stream), cursor, plan, 0, plan.micro_batch, 127, steps, (0, 0),
+    );
+    let mut wait = 0.0;
+    let t2 = std::time::Instant::now();
+    let mut prefetched = 0usize;
+    for step in 0..steps {
+        for micro in 0..plan.micro_batches {
+            prefetched += pf.fetch(step, 0, micro, &mut wait).unwrap()?.len();
+        }
+    }
+    println!(
+        "prefetch (rank 0): {} tokens in {:?}, pop stall {:.4}s, hidden assembly {:.4}s",
+        prefetched,
+        t2.elapsed(),
+        wait,
+        pf.busy_secs()
+    );
+
+    // the budget is a hard wall — no silent epoch wrap
+    let err = stream.batch_i32(budget, 1, 127).unwrap_err();
+    println!("past-budget read correctly refused: {err}");
+
     std::fs::remove_dir_all(&dir)?;
     Ok(())
 }

@@ -1,7 +1,8 @@
 //! CI perf gate: mula-tiny DP and PP×EP micro-benches, serial vs
-//! `--overlap` (the pipelined EPSO path), plus the checkpoint snapshot
-//! stall (sync vs async sharded checkpointing), written to
-//! `BENCH_PR4.json` at the repo root and gated against the committed
+//! `--overlap` (the pipelined EPSO path), the checkpoint snapshot
+//! stall (sync vs async sharded checkpointing), and the data pipeline
+//! (prefetch-on vs prefetch-off steps/sec + `data_wait_secs`), written
+//! to `BENCH_PR5.json` at the repo root and gated against the committed
 //! `ci/bench_baseline.json` — a steps/sec regression beyond the
 //! baseline's tolerance (default 10%) exits nonzero so the `perf-gate`
 //! workflow job fails.
@@ -39,7 +40,7 @@ fn repo_root() -> PathBuf {
 fn out_path() -> PathBuf {
     std::env::var("PERF_GATE_OUT")
         .map(PathBuf::from)
-        .unwrap_or_else(|_| repo_root().join("BENCH_PR4.json"))
+        .unwrap_or_else(|_| repo_root().join("BENCH_PR5.json"))
 }
 
 fn baseline_path() -> PathBuf {
@@ -75,6 +76,14 @@ fn breakdown_json(r: &TrainReport) -> Json {
     m.insert("optimizer_secs".to_string(), Json::Num(r.breakdown.optimizer_secs));
     m.insert("comm_secs".to_string(), Json::Num(r.breakdown.comm_secs));
     m.insert("data_secs".to_string(), Json::Num(r.breakdown.data_secs));
+    m.insert(
+        "data_wait_secs".to_string(),
+        Json::Num(r.breakdown.data_wait_secs),
+    );
+    m.insert(
+        "data_prefetch_secs".to_string(),
+        Json::Num(r.breakdown.data_prefetch_secs),
+    );
     m.insert("queue_secs".to_string(), Json::Num(r.breakdown.queue_secs));
     m.insert("overlap_secs".to_string(), Json::Num(r.breakdown.overlap_secs));
     m.insert(
@@ -130,7 +139,9 @@ fn main() -> optimus::Result<()> {
     out.insert(
         "bench".to_string(),
         Json::Str(
-            "perf-gate PR4: mula-tiny serial vs --overlap + ckpt snapshot stall".to_string(),
+            "perf-gate PR5: mula-tiny serial vs --overlap + ckpt snapshot stall \
+             + data prefetch on/off"
+                .to_string(),
         ),
     );
     out.insert("model".to_string(), Json::Str("mula-tiny".to_string()));
@@ -242,6 +253,53 @@ fn main() -> optimus::Result<()> {
         let _ = std::fs::remove_dir_all(&ckdir);
     }
     ck_table.print();
+
+    // --- data pipeline: prefetch on (background producer, queue-pop
+    // stall) vs off (synchronous batch assembly on the rank thread), on
+    // the DP case ---
+    let mut data_table = Report::new(
+        "perf-gate — data pipeline, prefetch on vs off (mula-tiny DP, 14 steps)",
+        &["mode", "steps/sec", "data stall", "hidden prefetch"],
+    );
+    for (mode, on) in [("on", true), ("off", false)] {
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data.clone())
+            .topo(Topology::dp_only(2))
+            .steps(STEPS)
+            .warmup_steps(2)
+            .engine_pool(2)
+            .data_prefetch(on)
+            .build()?;
+        let r = coordinator::train(&man, &spec)?;
+        let sps = 1.0 / r.mean_step_secs().max(1e-9);
+        // the exposed data stall: queue-pop wait when prefetching,
+        // synchronous assembly otherwise
+        let stall = r.breakdown.data_wait_secs + r.breakdown.data_secs;
+        data_table.row(&[
+            mode.to_string(),
+            format!("{sps:.2}"),
+            format!("{stall:.4}s"),
+            format!("{:.4}s", r.breakdown.data_prefetch_secs),
+        ]);
+        out.insert(format!("dp_prefetch_{mode}_steps_per_sec"), Json::Num(sps));
+        out.insert(
+            format!("dp_prefetch_{mode}_data_wait_secs"),
+            Json::Num(r.breakdown.data_wait_secs),
+        );
+        out.insert(
+            format!("dp_prefetch_{mode}_data_secs"),
+            Json::Num(r.breakdown.data_secs),
+        );
+        out.insert(
+            format!("dp_prefetch_{mode}_data_prefetch_secs"),
+            Json::Num(r.breakdown.data_prefetch_secs),
+        );
+        out.insert(
+            format!("dp_prefetch_{mode}_epochs_consumed"),
+            Json::Num(r.epochs_consumed),
+        );
+    }
+    data_table.print();
 
     let path = out_path();
     std::fs::write(&path, Json::Obj(out).to_string())?;

@@ -14,7 +14,9 @@
 //! [`crate::ft::classify`] maps to a non-relaunchable `Config` failure:
 //! `[model]` (different model), `[param-count]` (saved shards don't tile
 //! the model's parameter space), `[coverage]` (a requested range has no
-//! saved shard), `[checksum]`/`[manifest]` (corrupt files). A checkpoint
+//! saved shard), `[checksum]`/`[manifest]` (corrupt files), `[data-seed]`
+//! (the harness refuses a resume whose `--data-seed` differs from the
+//! one the saved token cursor was consumed under). A checkpoint
 //! at or past the step budget is *not* an error — the resumed run simply
 //! has zero steps left (so a relaunch after a final-step crash, or a
 //! re-run of a completed command, still loads cleanly).
@@ -141,6 +143,36 @@ impl ResumeState {
         self.scalars
             .iter()
             .filter(|(k, _)| k.contains(".adam_t"))
+            .map(|(_, v)| *v as u64)
+            .max()
+    }
+
+    /// The data-shuffle seed the saved cursor was consumed under, if
+    /// recorded. The cursor is only meaningful under the same shuffle:
+    /// the harness refuses a resume whose `--data-seed` differs
+    /// (`checkpoint resume failed [data-seed]`) instead of silently
+    /// re-reading/skipping instances. Legacy checkpoints return `None`
+    /// (unchecked).
+    pub fn data_seed(&self) -> Option<u64> {
+        self.scalars
+            .iter()
+            .filter(|(k, _)| k.ends_with(".data.seed"))
+            .map(|(_, v)| *v as u64)
+            .max()
+    }
+
+    /// The saved global token cursor — instances consumed when the
+    /// snapshot was taken — if recorded (every rank records the same
+    /// value; `max` is defensive, like [`ResumeState::adam_step`]). A
+    /// resumed run continues the data stream at exactly this position
+    /// under any topology; checkpoints predating the cursor return
+    /// `None` and the harness falls back to the legacy step-derived
+    /// position. (Scalars ride the manifest as f64 — exact for cursors
+    /// below 2^53 instances, far past any run this crate drives.)
+    pub fn data_cursor(&self) -> Option<u64> {
+        self.scalars
+            .iter()
+            .filter(|(k, _)| k.ends_with(".data.cursor"))
             .map(|(_, v)| *v as u64)
             .max()
     }

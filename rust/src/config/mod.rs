@@ -281,6 +281,10 @@ pub struct RunConfig {
     /// reduction instead of float32)
     pub bf16_grad_reduce: bool,
     pub seed: u64,
+    /// seed of the epoch-aware blockwise data shuffle (`--data-seed`):
+    /// the training data order is reproducible from this value alone,
+    /// independently of `seed` (parameter init / model PRNG streams)
+    pub data_seed: u64,
     pub log_every: usize,
 }
 
@@ -301,6 +305,7 @@ impl Default for RunConfig {
             clip_after_warmup_only: true,
             bf16_grad_reduce: true,
             seed: 1234,
+            data_seed: 7,
             log_every: 10,
         }
     }

@@ -75,6 +75,15 @@ pub fn exchange_all2all(
     w_local: Vec<f32>,
     idx_local: &[i32],
 ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    if hidden == 0 || x_local.is_empty() {
+        // empty micro-batch slice: `t_local` would be 0 and `k =
+        // idx_local.len() / t_local` divides by zero. The rank still
+        // must rendezvous (peers may carry tokens and every group
+        // member issues the same collective sequence), so send empty
+        // frames, then return empty dense views.
+        let _ = group.all2all(ep_rank, vec![Vec::new(); ep]);
+        return (Vec::new(), Vec::new(), Vec::new());
+    }
     let t_local = x_local.len() / hidden;
     let k = idx_local.len() / t_local;
     // build per-destination frames: [t_global_slot, x.., w.., idx..] per row
@@ -143,6 +152,30 @@ mod tests {
         }
         for c in &counts {
             assert_eq!(*c, 32 * 2 / n);
+        }
+    }
+
+    #[test]
+    fn all2all_empty_microbatch_returns_empty_frames() {
+        // single rank, empty slice: must not divide by zero
+        let g1 = crate::comm::Group::new(1);
+        let (x, w, i) = exchange_all2all(&g1, 0, 1, 2, 4, Vec::new(), Vec::new(), &[]);
+        assert!(x.is_empty() && w.is_empty() && i.is_empty());
+
+        // every rank of a group empty: all still rendezvous and return
+        let ep = 2;
+        let group = crate::comm::Group::new(ep);
+        let handles: Vec<_> = (0..ep)
+            .map(|r| {
+                let group = std::sync::Arc::clone(&group);
+                std::thread::spawn(move || {
+                    exchange_all2all(&group, r, ep, 2, 4, Vec::new(), Vec::new(), &[])
+                })
+            })
+            .collect();
+        for h in handles {
+            let (x, w, i) = h.join().unwrap();
+            assert!(x.is_empty() && w.is_empty() && i.is_empty());
         }
     }
 

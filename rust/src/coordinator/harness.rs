@@ -33,29 +33,48 @@ use crate::ckpt::{
 };
 use crate::comm::{Group, Mesh, ReduceDtype};
 use crate::config::ModelManifest;
-use crate::data::{BatchPlan, Dataset};
+use crate::data::{BatchPlan, Dataset, Prefetcher, TokenCursor, TokenStream};
 use crate::metrics::{Curve, Scoped, StepBreakdown};
 use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
 use crate::runtime::{Engine, Tensor};
 use crate::Result;
 use anyhow::anyhow;
+use std::cell::RefCell;
 use std::sync::Arc;
+
+/// Lifecycle of a rank's background batch prefetcher: spawned lazily on
+/// the first fetch (so the engine's data rank is known), retired to
+/// `Off` if a fetch ever falls outside the predicted sequence — from
+/// then on the rank reads synchronously, which is always correct. `Off`
+/// keeps the retired producer's hidden-assembly seconds so the
+/// accounting survives retirement.
+enum PrefetchSlot {
+    Idle,
+    Running(Prefetcher),
+    Off(f64),
+}
 
 /// Everything a rank thread needs, cloned per rank before spawn.
 pub struct RankCtx {
     pub rank: usize,
     pub mm: ModelManifest,
-    pub ds: Arc<Dataset>,
     pub engine: Engine,
     pub mesh: Arc<Mesh>,
     pub spec: JobSpec,
     /// the validated + materialized placement this run executes
     pub plan: Arc<ParallelismPlan>,
+    /// batch-consumption geometry (`plan.batch_plan(mm)`)
     pub batches: BatchPlan,
+    /// global data position: resume-safe mapping step → stream cursor
+    pub cursor: TokenCursor,
+    /// the run's shuffled, budget-enforced instance stream
+    pub stream: Arc<TokenStream>,
     /// live sharded checkpointer (None when the plan's policy is off)
     pub ckpt: Option<Arc<Checkpointer>>,
     /// validated resume source (None for fresh runs)
     pub resume: Option<Arc<ResumeState>>,
+    /// per-rank background batch producer (rank-thread-local)
+    prefetch: RefCell<PrefetchSlot>,
 }
 
 impl RankCtx {
@@ -77,21 +96,76 @@ impl RankCtx {
         .with_overlap(self.plan.overlap, self.plan.overlap_chunk, label)
     }
 
-    /// Timed batch fetch: the `[b, s+1]` token tensor for
-    /// (step, data_rank, microbatch), accounted under `data_secs`.
+    /// Batch fetch: the `[b, s+1]` token tensor for
+    /// (step, data_rank, microbatch), read from the shuffled stream at
+    /// the cursor-derived position. With the plan's `prefetch` on, the
+    /// batch comes off the rank's background producer (pop stall →
+    /// `data_wait_secs`); otherwise — or when a fetch falls outside the
+    /// producer's predicted sequence — it is assembled synchronously
+    /// (→ `data_secs`).
     pub fn fetch_tokens(
         &self,
         step: usize,
         data_rank: usize,
         mb: usize,
         breakdown: &mut StepBreakdown,
-    ) -> Tensor {
+    ) -> Result<Tensor> {
         let (b, s) = (self.mm.hyper.batch, self.mm.hyper.seq);
-        let _t = Scoped::new(&mut breakdown.data_secs);
-        Tensor::i32(
-            self.ds.batch_i32(self.batches.start(step, data_rank, mb), b, s),
-            vec![b, s + 1],
-        )
+        let pos = self.cursor.at_step(step) + self.batches.offset(data_rank, mb) as u64;
+        let mut toks: Option<Vec<i32>> = None;
+        if self.plan.prefetch {
+            let mut slot = self.prefetch.borrow_mut();
+            if matches!(*slot, PrefetchSlot::Idle) {
+                *slot = PrefetchSlot::Running(Prefetcher::spawn(
+                    Arc::clone(&self.stream),
+                    self.cursor,
+                    self.batches,
+                    data_rank,
+                    b,
+                    s,
+                    self.spec.run.steps,
+                    (step, mb),
+                ));
+            }
+            let mut retire = None;
+            if let PrefetchSlot::Running(p) = &mut *slot {
+                match p.fetch(step, data_rank, mb, &mut breakdown.data_wait_secs) {
+                    Some(batch) => toks = Some(batch?),
+                    // out-of-pattern consumer: retire the producer (its
+                    // hidden time survives in Off) and read
+                    // synchronously for the rest of the run
+                    None => retire = Some(p.busy_secs()),
+                }
+            }
+            if let Some(busy) = retire {
+                *slot = PrefetchSlot::Off(busy);
+            }
+        }
+        let toks = match toks {
+            Some(t) => t,
+            None => {
+                let _t = Scoped::new(&mut breakdown.data_secs);
+                self.stream.batch_i32(pos, b, s)?
+            }
+        };
+        if let Some(trace) = &self.spec.data_trace {
+            let mut t = trace.lock().unwrap();
+            for r in 0..b as u64 {
+                t.push((pos + r, self.stream.map(pos + r)?.1 as u64));
+            }
+        }
+        Ok(Tensor::i32(toks, vec![b, s + 1]))
+    }
+
+    /// Seconds this rank's prefetch producer spent assembling batches
+    /// (hidden behind compute); 0 when prefetch never started. A retired
+    /// producer's time is preserved by `Off`.
+    fn data_prefetch_secs(&self) -> f64 {
+        match &*self.prefetch.borrow() {
+            PrefetchSlot::Running(p) => p.busy_secs(),
+            PrefetchSlot::Off(busy) => *busy,
+            PrefetchSlot::Idle => 0.0,
+        }
     }
 
     /// The canonical rank-abort error for a non-finite loss. Trainers use
@@ -186,9 +260,6 @@ pub trait RankTrainer: Sized {
     /// Cross-rank fabric built once before spawning (e.g. PP's [`crate::comm::P2p`]).
     type Shared: Send + Sync + 'static;
 
-    /// Deterministic global batch plan for this topology.
-    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan;
-
     fn shared(mm: &ModelManifest, plan: &ParallelismPlan) -> Result<Arc<Self::Shared>>;
 
     /// Unblock peers waiting on the shared fabric after a rank died.
@@ -271,7 +342,7 @@ pub fn run<T: RankTrainer + 'static>(
     spec: &JobSpec,
     plan: &Arc<ParallelismPlan>,
 ) -> Result<TrainReport> {
-    let batches = T::batches(mm, plan);
+    let batches = plan.batch_plan(mm);
     let shared = T::shared(mm, plan)?;
     let world_n = plan.topo.world();
 
@@ -301,6 +372,26 @@ pub fn run<T: RankTrainer + 'static>(
                         // coverage) is not recoverable by falling back —
                         // propagate it
                         rs.validate(&spec.model, mm.param_count)?;
+                        // the saved token cursor is only meaningful under
+                        // the shuffle that consumed it: a different
+                        // --data-seed would silently re-read and skip
+                        // instances — the exact bug class the cursor
+                        // exists to prevent. (Compared through the same
+                        // f64 round-trip the manifest scalar takes.)
+                        if let Some(saved_seed) = rs.data_seed() {
+                            let want = spec.run.data_seed as f64 as u64;
+                            if saved_seed != want {
+                                return Err(anyhow!(
+                                    "checkpoint resume failed [data-seed]: the \
+                                     checkpoint's token cursor was consumed under \
+                                     --data-seed {saved_seed}, this job shuffles with \
+                                     {}; resuming would re-read and skip instances — \
+                                     pass --data-seed {saved_seed} to continue the \
+                                     stream",
+                                    spec.run.data_seed
+                                ));
+                            }
+                        }
                         if rs.step() + 1 >= spec.run.steps {
                             // not an error: a relaunch after a final-step
                             // crash (or a re-run of a completed command)
@@ -330,19 +421,67 @@ pub fn run<T: RankTrainer + 'static>(
         None => (None, None),
     };
 
+    // --- the global token cursor (DESIGN.md §7): the resumed run
+    // continues at exactly the instances-consumed-so-far the checkpoint
+    // recorded, whatever geometry saved it. Same-topology resume lands on
+    // the very positions the step-derived scheme produced (bit-identity
+    // preserved); an elastic resume keeps consuming the next unseen
+    // instance instead of re-deriving the position from the new
+    // geometry's step product. Legacy checkpoints without the scalar fall
+    // back to the step-derived position.
+    let per_step = batches.instances_per_step() as u64;
+    let cursor = match &resume {
+        Some(r) => {
+            let start_step = r.step() + 1;
+            let base = r
+                .data_cursor()
+                .unwrap_or(start_step as u64 * per_step);
+            TokenCursor { base, start_step, per_step }
+        }
+        None => TokenCursor::fresh(per_step),
+    };
+    // validated data budget: what the remaining steps are allowed to read
+    let remaining = spec.run.steps.saturating_sub(cursor.start_step) as u64;
+    let budget = cursor.base + remaining * per_step;
+    let mut stream = TokenStream::new(Arc::clone(&ds), spec.run.data_seed, budget);
+    if plan.data_epochs > 0 {
+        // the [data] preflight re-checked against the REAL cursor: a
+        // resumed run's demand counts what the checkpoint already
+        // consumed, which the plan-level check (steps × per_step under
+        // the NEW geometry) cannot see
+        let have = ds.len() as u64 * plan.data_epochs as u64;
+        if budget > have {
+            return Err(anyhow!(
+                "plan validation failed [data]: cursor {} + {remaining} steps × \
+                 {per_step} instances/step needs {budget} total instances, but the \
+                 dataset provides {} × {} epoch budget = {have}; raise --epochs, \
+                 lower --steps, or preprocess more data",
+                cursor.base,
+                ds.len(),
+                plan.data_epochs
+            ));
+        }
+        // epoch budget set ⇒ the logical stream truly ends there:
+        // continuation targets EOS-pad at that wall (and only there)
+        stream = stream.with_stream_end(have);
+    }
+    let stream = Arc::new(stream);
+
     let handles: Vec<_> = (0..world_n)
         .map(|rank| {
             let ctx = RankCtx {
                 rank,
                 mm: mm.clone(),
-                ds: Arc::clone(&ds),
                 engine: engine.clone(),
                 mesh: Arc::clone(&mesh),
                 spec: spec.clone(),
                 plan: Arc::clone(plan),
                 batches,
+                cursor,
+                stream: Arc::clone(&stream),
                 ckpt: ckpt.clone(),
                 resume: resume.clone(),
+                prefetch: RefCell::new(PrefetchSlot::Idle),
             };
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
@@ -489,6 +628,11 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
                 let view = trainer.ckpt_view();
                 let mut snap = capture_rank_state(view.params, view.map, view.opt)?;
                 snap.push_u64("prng.seed", ctx.spec.run.seed);
+                // the global token cursor: instances consumed once this
+                // step is done — the resume point for ANY geometry —
+                // plus the shuffle seed the cursor is only valid under
+                snap.push_u64("data.cursor", ctx.cursor.at_step(step + 1));
+                snap.push_u64("data.seed", ctx.spec.run.data_seed);
                 if last_loss.is_finite() {
                     snap.push_f64("metrics.loss", last_loss);
                 }
@@ -498,6 +642,10 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
         }
         step_secs.push(t_step.elapsed().as_secs_f64());
     }
+
+    // hidden batch-assembly time from this rank's prefetch producer,
+    // folded once after the step loop (mirrors the optimizer split)
+    breakdown.data_prefetch_secs += ctx.data_prefetch_secs();
 
     match trainer.finish(&ctx)? {
         RankFinish::Report(parts) => {
@@ -514,12 +662,18 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
             breakdown.queue_secs += (engine_stats1.queue_secs - engine_stats0.queue_secs)
                 .max(0.0)
                 / ctx.plan.topo.world() as f64;
+            // run-level data consumption: total instances through the
+            // end of the step budget (including pre-resume consumption)
+            let instances_consumed = ctx.cursor.at_step(ctx.spec.run.steps);
             Ok(RankOut::Report(TrainReport {
                 loss: loss_curve,
                 grad_norm: gn_curve,
                 breakdown,
                 step_secs,
                 tokens_per_step: ctx.batches.instances_per_step() * ctx.mm.hyper.seq,
+                instances_consumed,
+                epochs_consumed: instances_consumed as f64
+                    / ctx.stream.epoch_len().max(1) as f64,
                 final_params: parts.final_params,
                 opt_state_bytes: parts.opt_state_bytes,
                 optimizer_update_secs: parts.optimizer_update_secs,

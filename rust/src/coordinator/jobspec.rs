@@ -33,7 +33,15 @@ use crate::optim::{AdamParams, ShardingMode};
 use crate::Result;
 use anyhow::anyhow;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// Test/diagnostic sink recording every `(stream position, instance id)`
+/// a run consumes through the harness batch fetch — the recorded-id hook
+/// behind the elastic-resume data-order tests. Positions are unique per
+/// consumption on DP/EP topologies; under PP both the first and the last
+/// stage of a pipeline column fetch the same batch, so positions repeat
+/// once per extra fetching stage.
+pub type DataTrace = Arc<Mutex<Vec<(u64, u64)>>>;
 
 /// A validated training job: model + run recipe + [`ParallelismPlan`].
 /// Constructed through [`JobSpec::new`] (the builder); the fields stay
@@ -50,6 +58,8 @@ pub struct JobSpec {
     /// preprocessed shard directory
     pub data_dir: PathBuf,
     pub hook: Arc<dyn StepHook>,
+    /// optional recorded-id sink for data-order tests (see [`DataTrace`])
+    pub data_trace: Option<DataTrace>,
     /// private marker: construction goes through the builder (or the
     /// deprecated `TrainOptions` shim), never a struct literal
     _built: (),
@@ -76,6 +86,9 @@ impl JobSpec {
             overlap: false,
             overlap_chunk: DEFAULT_OVERLAP_CHUNK,
             ckpt: CkptPolicy::default(),
+            prefetch: true,
+            data_epochs: 0,
+            data_trace: None,
         }
     }
 
@@ -123,6 +136,9 @@ pub struct JobSpecBuilder {
     overlap: bool,
     overlap_chunk: usize,
     ckpt: CkptPolicy,
+    prefetch: bool,
+    data_epochs: usize,
+    data_trace: Option<DataTrace>,
 }
 
 impl JobSpecBuilder {
@@ -236,6 +252,38 @@ impl JobSpecBuilder {
         self
     }
 
+    /// Seed of the epoch-aware blockwise data shuffle (`--data-seed`).
+    /// The shuffled instance order is reproducible from this value alone
+    /// — independent of `seed`, which drives parameter init.
+    pub fn data_seed(mut self, seed: u64) -> Self {
+        self.run.data_seed = seed;
+        self
+    }
+
+    /// Per-rank background batch prefetch (default on; `--no-prefetch`
+    /// disables). A pure execution knob: the consumed batches are
+    /// identical either way.
+    pub fn data_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Epoch budget for the `[data]` validation check: the run may
+    /// consume at most `n` passes over the dataset (`steps ×
+    /// instances_per_step ≤ dataset × n`). `0` (the default) leaves the
+    /// budget unbounded.
+    pub fn data_epochs(mut self, n: usize) -> Self {
+        self.data_epochs = n;
+        self
+    }
+
+    /// Attach a recorded-id sink: every `(stream position, instance id)`
+    /// the run consumes is pushed into it (data-order tests).
+    pub fn data_trace(mut self, trace: DataTrace) -> Self {
+        self.data_trace = Some(trace);
+        self
+    }
+
     /// Per-step hook (checkpointing, fault injection, snapshots).
     pub fn hook(mut self, h: Arc<dyn StepHook>) -> Self {
         self.hook = h;
@@ -297,6 +345,8 @@ impl JobSpecBuilder {
         plan.overlap = self.overlap;
         plan.overlap_chunk = self.overlap_chunk;
         plan.ckpt = self.ckpt;
+        plan.prefetch = self.prefetch;
+        plan.data_epochs = self.data_epochs;
         plan.validate_spec()?;
         Ok(JobSpec {
             model: self.model,
@@ -306,6 +356,7 @@ impl JobSpecBuilder {
             engine_pool: self.engine_pool,
             data_dir,
             hook: self.hook,
+            data_trace: self.data_trace,
             _built: (),
         })
     }
@@ -374,6 +425,7 @@ impl From<TrainOptions> for JobSpec {
             engine_pool: o.engine_pool,
             data_dir: o.data_dir,
             hook: o.hook,
+            data_trace: None,
             _built: (),
         }
     }
@@ -430,6 +482,27 @@ mod tests {
             .unwrap();
         assert!(ok.plan.ckpt.enabled() && !ok.plan.ckpt.asynchronous);
         assert_eq!(ok.plan.ckpt.every, 5);
+    }
+
+    #[test]
+    fn data_pipeline_knobs_thread_through() {
+        let s = JobSpec::new("m")
+            .data_dir("/tmp/x")
+            .topology(2, 1, 1)
+            .data_seed(99)
+            .data_prefetch(false)
+            .data_epochs(3)
+            .build()
+            .unwrap();
+        assert_eq!(s.run.data_seed, 99);
+        assert!(!s.plan.prefetch);
+        assert_eq!(s.plan.data_epochs, 3);
+        // defaults: prefetch on, unbounded epoch budget, stable data seed
+        let d = JobSpec::new("m").data_dir("/tmp/x").topology(2, 1, 1).build().unwrap();
+        assert!(d.plan.prefetch);
+        assert_eq!(d.plan.data_epochs, 0);
+        assert_eq!(d.run.data_seed, 7);
+        assert!(d.data_trace.is_none());
     }
 
     #[test]

@@ -40,7 +40,7 @@ mod train_pp_ep;
 pub use ep_layout::EpLayout;
 #[allow(deprecated)]
 pub use jobspec::TrainOptions;
-pub use jobspec::{JobSpec, JobSpecBuilder};
+pub use jobspec::{DataTrace, JobSpec, JobSpecBuilder};
 pub use plan::{DEFAULT_OVERLAP_CHUNK, EngineKind, ParallelismPlan, StagePlan};
 
 use crate::comm::Mesh;
@@ -80,6 +80,13 @@ pub struct TrainReport {
     pub breakdown: StepBreakdown,
     pub step_secs: Vec<f64>,
     pub tokens_per_step: usize,
+    /// total instances consumed through the end of the step budget,
+    /// including consumption before a resume (the token cursor's final
+    /// position)
+    pub instances_consumed: u64,
+    /// `instances_consumed` in dataset passes (the epoch count the
+    /// shuffle reshuffles on)
+    pub epochs_consumed: f64,
     /// final full parameter vector (rank 0's view) for eval/checkpoints —
     /// `Arc`-backed, so passing it on to [`crate::eval::run_suite`] or a
     /// checkpoint writer involves no copy

@@ -21,7 +21,7 @@ use super::pipeline::{Schedule, SEQ_SLOTS};
 use crate::ckpt::CkptPolicy;
 use crate::comm::Topology;
 use crate::config::{ModelManifest, ParamSpec};
-use crate::data::Dataset;
+use crate::data::{BatchPlan, Dataset};
 use crate::optim::sharded::SegmentLayout;
 use crate::optim::ShardingMode;
 use crate::Result;
@@ -86,6 +86,14 @@ pub struct ParallelismPlan {
     /// `overlap`, a pure execution knob: it never shapes the fingerprint,
     /// and a checkpoint written under one policy resumes under any other.
     pub ckpt: CkptPolicy,
+    /// per-rank background batch prefetch (`--no-prefetch` disables).
+    /// A pure execution knob: batches are identical either way; only the
+    /// `data_wait_secs` / `data_prefetch_secs` accounting moves.
+    pub prefetch: bool,
+    /// maximum passes over the dataset the run may consume; `0` leaves
+    /// the epoch budget unbounded (the `[data]` check is then skipped —
+    /// the shuffle reshuffles every epoch regardless)
+    pub data_epochs: usize,
     /// per-stage placement, filled by [`ParallelismPlan::materialized`]
     pub stages: Vec<StagePlan>,
 }
@@ -192,7 +200,15 @@ const MODEL_CHECKS: &[(&str, ModelCheck)] = &[
     }),
 ];
 
-/// Checks against the dataset.
+/// Checks against the dataset. The `[data]` instance-budget check —
+/// `consumed-so-far + remaining steps × instances_per_step ≤ dataset ×
+/// data_epochs` — deliberately does NOT live in this table:
+/// `steps × instances_per_step` under the *new* geometry both
+/// over-counts (spuriously rejecting a valid elastic resume onto a
+/// larger topology) and under-counts (missing what the checkpoint
+/// already consumed). Only `harness::run` sees the real resume cursor,
+/// so it enforces the budget there — still before any rank thread
+/// spawns, with the same stable `plan validation failed [data]` string.
 const DATA_CHECKS: &[(&str, DataCheck)] = &[("data-context", |_, mm, ds| {
     (ds.context < mm.hyper.seq + 1).then(|| {
         format!(
@@ -219,7 +235,40 @@ impl ParallelismPlan {
             overlap: false,
             overlap_chunk: DEFAULT_OVERLAP_CHUNK,
             ckpt: CkptPolicy::default(),
+            prefetch: true,
+            data_epochs: 0,
             stages: Vec::new(),
+        }
+    }
+
+    /// The deterministic batch-consumption geometry this placement
+    /// implies: how many contiguous stream instances one optimizer step
+    /// consumes and how they split over (data rank, microbatch). One
+    /// definition for every engine — the `[data]` budget check, the
+    /// harness's token cursor and `optimus plans` all derive from it, so
+    /// they can never drift from what the engines actually read.
+    pub fn batch_plan(&self, mm: &ModelManifest) -> BatchPlan {
+        let b = mm.hyper.batch;
+        match self.kind() {
+            EngineKind::Dp => {
+                BatchPlan { dp: self.topo.dp, micro_batch: b, micro_batches: 1 }
+            }
+            // EP scales the global batch like DP (paper §1): every rank
+            // is a data rank
+            EngineKind::Ep => {
+                BatchPlan { dp: self.topo.world(), micro_batch: b, micro_batches: 1 }
+            }
+            EngineKind::Pp => BatchPlan {
+                dp: self.topo.dp,
+                micro_batch: b,
+                micro_batches: self.micro_batches,
+            },
+            // dp×ep pairs are the data ranks of the hybrid
+            EngineKind::PpEp => BatchPlan {
+                dp: self.topo.dp * self.topo.ep,
+                micro_batch: b,
+                micro_batches: self.micro_batches,
+            },
         }
     }
 
@@ -263,7 +312,9 @@ impl ParallelismPlan {
 
     /// Full preflight: every configuration invariant, checked in one
     /// table-driven pass with stable error strings, before any engine
-    /// executor or rank thread exists.
+    /// executor or rank thread exists. (The run-demand `[data]` budget
+    /// check lives in `harness::run`, which alone sees the resume
+    /// cursor — see the `DATA_CHECKS` note.)
     pub fn validate(&self, mm: &ModelManifest, ds: &Dataset) -> Result<()> {
         self.validate_model(mm)?;
         for (name, check) in DATA_CHECKS {

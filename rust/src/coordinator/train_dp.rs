@@ -18,7 +18,6 @@ use super::harness::{
 use super::plan::ParallelismPlan;
 use crate::ckpt::LocalMap;
 use crate::config::ModelManifest;
-use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::runtime::Tensor;
@@ -39,10 +38,6 @@ pub(super) struct DpTrainer {
 impl RankTrainer for DpTrainer {
     const LABEL: &'static str = "dp";
     type Shared = ();
-
-    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
-        BatchPlan { dp: plan.topo.dp, micro_batch: mm.hyper.batch, micro_batches: 1 }
-    }
 
     fn shared(_mm: &ModelManifest, _plan: &ParallelismPlan) -> Result<Arc<()>> {
         Ok(Arc::new(()))
@@ -82,7 +77,7 @@ impl RankTrainer for DpTrainer {
         step: usize,
         breakdown: &mut StepBreakdown,
     ) -> Result<StepOutcome> {
-        let tokens = ctx.fetch_tokens(step, ctx.rank, 0, breakdown);
+        let tokens = ctx.fetch_tokens(step, ctx.rank, 0, breakdown)?;
         let outs = {
             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
             // zero-copy: params is Arc-backed, clone() bumps a refcount

@@ -40,7 +40,6 @@ use super::plan::ParallelismPlan;
 use crate::ckpt::LocalMap;
 use crate::comm::{Group, ReduceDtype};
 use crate::config::ModelManifest;
-use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::runtime::Tensor;
@@ -115,15 +114,6 @@ pub(super) struct EpTrainer {
 impl RankTrainer for EpTrainer {
     const LABEL: &'static str = "ep";
     type Shared = ();
-
-    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
-        // EP scales the global batch like DP (paper §1): data-rank = dp*EP+ep
-        BatchPlan {
-            dp: plan.topo.world(),
-            micro_batch: mm.hyper.batch,
-            micro_batches: 1,
-        }
-    }
 
     fn shared(_mm: &ModelManifest, _plan: &ParallelismPlan) -> Result<Arc<()>> {
         Ok(Arc::new(()))
@@ -200,7 +190,7 @@ impl RankTrainer for EpTrainer {
                 .exec(&format!("{}:{key}", mm.name), path.to_path_buf(), inputs)
         };
 
-        let tokens_t = ctx.fetch_tokens(step, self.data_rank, 0, breakdown);
+        let tokens_t = ctx.fetch_tokens(step, self.data_rank, 0, breakdown)?;
         // parameter slices for this step, shared by fwd and bwd
         let ps = ParamSlices::new(self.params.as_f32()?, layout);
 

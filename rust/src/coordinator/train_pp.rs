@@ -27,7 +27,6 @@ use super::TrainReport;
 use crate::ckpt::LocalMap;
 use crate::comm::P2p;
 use crate::config::{ModelManifest, ParamSpec};
-use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::runtime::Tensor;
@@ -100,14 +99,6 @@ pub(super) struct PpTrainer {
 impl RankTrainer for PpTrainer {
     const LABEL: &'static str = "pp";
     type Shared = P2p;
-
-    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
-        BatchPlan {
-            dp: plan.topo.dp,
-            micro_batch: mm.hyper.batch,
-            micro_batches: plan.micro_batches,
-        }
-    }
 
     fn shared(_mm: &ModelManifest, plan: &ParallelismPlan) -> Result<Arc<P2p>> {
         // tag 0 = fwd activations, 1 = cotangents
@@ -205,8 +196,11 @@ impl RankTrainer for PpTrainer {
         for op in &self.ops {
             match *op {
                 PipeOp::Fwd { mb, .. } => {
-                    let tokens_t = ctx.fetch_tokens(step, self.dp_coord, mb, breakdown);
+                    // only the token-consuming stages fetch: stage 0
+                    // (inputs) and the last stage (targets); middle
+                    // stages work purely on received activations
                     if self.stage == 0 {
+                        let tokens_t = ctx.fetch_tokens(step, self.dp_coord, mb, breakdown)?;
                         let outs = {
                             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
                             exec("fwd", self.art_fwd.as_ref().unwrap(), vec![
@@ -219,7 +213,9 @@ impl RankTrainer for PpTrainer {
                         let _t = Scoped::new(&mut breakdown.comm_secs);
                         p2p.send(rank, self.next.unwrap(), 0, seq_id(step, mb), hout);
                     } else if self.last {
-                        // recv + fused fwdbwd + send cotangent immediately
+                        // targets first (prefetched), then recv + fused
+                        // fwdbwd + send cotangent immediately
+                        let tokens_t = ctx.fetch_tokens(step, self.dp_coord, mb, breakdown)?;
                         let hin = {
                             let _t = Scoped::new(&mut breakdown.comm_secs);
                             p2p.recv(self.prev.unwrap(), rank, 0, seq_id(step, mb))

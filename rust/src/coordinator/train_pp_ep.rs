@@ -36,7 +36,6 @@ use super::TrainReport;
 use crate::ckpt::LocalMap;
 use crate::comm::{Group, P2p, ReduceDtype};
 use crate::config::ModelManifest;
-use crate::data::BatchPlan;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::optim::ShardingMode;
@@ -280,15 +279,6 @@ impl RankTrainer for PpEpTrainer {
     const LABEL: &'static str = "ppep";
     type Shared = P2p;
 
-    fn batches(mm: &ModelManifest, plan: &ParallelismPlan) -> BatchPlan {
-        // dp×ep pairs are the data ranks (EP scales the batch like DP)
-        BatchPlan {
-            dp: plan.topo.dp * plan.topo.ep,
-            micro_batch: mm.hyper.batch,
-            micro_batches: plan.micro_batches,
-        }
-    }
-
     fn shared(_mm: &ModelManifest, plan: &ParallelismPlan) -> Result<Arc<P2p>> {
         // tag 0 = fwd activations, 1 = cotangents
         Ok(P2p::new(plan.topo.world(), 2))
@@ -384,7 +374,7 @@ impl RankTrainer for PpEpTrainer {
                 PipeOp::Fwd { mb, .. } => {
                     let mut st = MbStash::new(n_local);
                     let h_in = if self.first {
-                        let tokens = ctx.fetch_tokens(step, self.data_rank, mb, breakdown);
+                        let tokens = ctx.fetch_tokens(step, self.data_rank, mb, breakdown)?;
                         let h0 = {
                             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
                             self.exec(ctx, "embed_fwd", &self.arts.embed_fwd, vec![
@@ -407,7 +397,7 @@ impl RankTrainer for PpEpTrainer {
                     if self.last {
                         // head + fused stage backward (mirrors train_pp's
                         // last-stage behaviour: cotangent leaves at once)
-                        let tokens = ctx.fetch_tokens(step, self.data_rank, mb, breakdown);
+                        let tokens = ctx.fetch_tokens(step, self.data_rank, mb, breakdown)?;
                         let outs = {
                             let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
                             self.exec(ctx, "head", &self.arts.head, vec![

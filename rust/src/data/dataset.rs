@@ -133,38 +133,65 @@ impl Dataset {
         self.len() == 0
     }
 
-    /// Instance `i` as tokens (length = context). Instances wrap around
-    /// for multi-epoch training.
-    pub fn instance(&self, i: usize) -> Vec<u32> {
-        let i = i % self.len();
+    /// Instance `i` as tokens (length = context). A raw index outside
+    /// the dataset is a **hard error**: epoch wrapping is the token
+    /// cursor's job ([`super::TokenStream`] maps a stream position
+    /// through the epoch-aware shuffle), and an escaped raw index here
+    /// means a caller bypassed the validated budget — the silent
+    /// `i % len` wrap this replaces turned that bug into quiet data
+    /// repetition.
+    pub fn instance(&self, i: usize) -> Result<Vec<u32>> {
+        if i >= self.len() {
+            return Err(anyhow!(
+                "data read past validated budget: raw instance {i} is outside the \
+                 dataset's {} instances (epoch wrapping goes through the token cursor)",
+                self.len()
+            ));
+        }
         // binary search the shard
         let s = match self.offsets.binary_search(&i) {
             Ok(k) => k,
             Err(k) => k - 1,
         };
-        self.shards[s].instance(i - self.offsets[s])
+        Ok(self.shards[s].instance(i - self.offsets[s]))
     }
 
-    /// Batch of `rows` consecutive instances starting at `start`, each
-    /// extended to `seq+1` tokens (input+shifted target; the +1th token is
-    /// the first of the next instance slot, or EOS-padded).
-    pub fn batch_i32(&self, start: usize, rows: usize, seq: usize) -> Vec<i32> {
+    /// Batch of `rows` consecutive *raw* instances starting at `start`,
+    /// each extended to `seq+1` tokens (input + shifted target). Tokens
+    /// past the instance's `context` continue into the **next instance
+    /// slot** — the `seq+1`th token is the next slot's first token — and
+    /// EOS-padding happens only at the true stream end (the last
+    /// instance of the dataset). Shuffled, budget-checked reads go
+    /// through [`super::TokenStream::batch_i32`] instead.
+    pub fn batch_i32(&self, start: usize, rows: usize, seq: usize) -> Result<Vec<i32>> {
         let c = self.context;
         let mut out = Vec::with_capacity(rows * (seq + 1));
         for r in 0..rows {
-            let inst = self.instance(start + r);
-            for j in 0..(seq + 1) {
-                let v = if j < c { inst[j] } else { super::tokenizer::EOS };
-                out.push(v as i32);
+            let mut ext = self.instance(start + r)?;
+            while ext.len() < seq + 1 {
+                let next = start + r + ext.len() / c;
+                if next >= self.len() {
+                    break; // true stream end: EOS-pad below
+                }
+                let more = self.instance(next)?;
+                ext.extend(more);
+            }
+            for j in 0..=seq {
+                out.push(*ext.get(j).unwrap_or(&super::tokenizer::EOS) as i32);
             }
         }
-        out
+        Ok(out)
     }
 }
 
-/// Deterministic mapping (step, dp_rank, microbatch row) → instance id.
-/// All DP ranks at a step consume one contiguous block of the (already
-/// shuffled) instance stream — the paper's contiguous-read property.
+/// Deterministic *geometry* of a step's data consumption: how the
+/// `instances_per_step()` stream positions a step consumes split across
+/// (data rank, microbatch, row). All ranks at a step consume one
+/// contiguous block of the shuffled stream — the paper's contiguous-read
+/// property; the block's *position* comes from the
+/// [`TokenCursor`](super::TokenCursor), never from `step ×
+/// instances_per_step` (which silently re-read or skipped data when an
+/// elastic resume changed the geometry).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPlan {
     pub dp: usize,
@@ -177,11 +204,11 @@ impl BatchPlan {
         self.dp * self.micro_batch * self.micro_batches
     }
 
-    /// Start instance for (step, dp_rank, micro step).
-    pub fn start(&self, step: usize, dp_rank: usize, micro: usize) -> usize {
-        step * self.instances_per_step()
-            + dp_rank * self.micro_batch * self.micro_batches
-            + micro * self.micro_batch
+    /// Offset of (data rank, micro step) within a step's contiguous
+    /// stream block. The absolute position is
+    /// `cursor.at_step(step) + offset(..)`.
+    pub fn offset(&self, dp_rank: usize, micro: usize) -> usize {
+        dp_rank * self.micro_batch * self.micro_batches + micro * self.micro_batch
     }
 }
 
@@ -205,33 +232,48 @@ mod tests {
         let (dir, ds) = build("multi", 32);
         assert!(ds.len() > 64, "need multiple shards");
         for i in [0, 1, 63, 64, ds.len() - 1] {
-            let inst = ds.instance(i);
+            let inst = ds.instance(i).unwrap();
             assert_eq!(inst.len(), 32);
             assert!(inst.iter().all(|&t| t < 300));
         }
-        // wraparound
-        assert_eq!(ds.instance(ds.len()), ds.instance(0));
+        // a raw index past the dataset is a hard error, never a wrap
+        let e = ds.instance(ds.len()).unwrap_err().to_string();
+        assert!(e.contains("data read past validated budget"), "{e}");
         std::fs::remove_dir_all(dir).unwrap();
     }
 
     #[test]
     fn batch_shapes_and_determinism() {
         let (dir, ds) = build("batch", 32);
-        let b1 = ds.batch_i32(5, 4, 31);
-        let b2 = ds.batch_i32(5, 4, 31);
+        let b1 = ds.batch_i32(5, 4, 31).unwrap();
+        let b2 = ds.batch_i32(5, 4, 31).unwrap();
         assert_eq!(b1, b2);
         assert_eq!(b1.len(), 4 * 32);
+
+        // seq == context: the seq+1th token of each row is the FIRST
+        // token of the next instance slot, not EOS
+        let b = ds.batch_i32(5, 4, 32).unwrap();
+        assert_eq!(b.len(), 4 * 33);
+        for r in 0..4 {
+            let next_first = ds.instance(5 + r + 1).unwrap()[0];
+            assert_eq!(b[r * 33 + 32], next_first as i32, "row {r}");
+        }
+        // EOS appears only at the true stream end (last instance)
+        let e = ds.batch_i32(ds.len() - 1, 1, 32).unwrap();
+        assert_eq!(e[32], super::super::tokenizer::EOS as i32);
         std::fs::remove_dir_all(dir).unwrap();
     }
 
     #[test]
     fn plan_assigns_disjoint_contiguous_blocks() {
+        use crate::data::TokenCursor;
         let p = BatchPlan { dp: 4, micro_batch: 2, micro_batches: 3 };
+        let cur = TokenCursor::fresh(p.instances_per_step() as u64);
         let mut seen = std::collections::HashSet::new();
         for step in 0..3 {
             for rank in 0..4 {
                 for m in 0..3 {
-                    let s = p.start(step, rank, m);
+                    let s = cur.at_step(step) + p.offset(rank, m) as u64;
                     for r in 0..2 {
                         assert!(seen.insert(s + r), "instance reused");
                     }
@@ -241,6 +283,6 @@ mod tests {
         assert_eq!(seen.len(), 3 * p.instances_per_step());
         // contiguity: the full set is an interval
         let max = *seen.iter().max().unwrap();
-        assert_eq!(max + 1, seen.len());
+        assert_eq!(max as usize + 1, seen.len());
     }
 }

@@ -1,18 +1,32 @@
-//! Data pipeline (paper §4 "Data preprocessing"):
-//! tokenize → shuffle → shard, then mmap'd lazy loading so every DP rank
-//! reads contiguous memory with "bare minimal overhead".
+//! Data pipeline (paper §4 "Data preprocessing" + DESIGN.md §7):
+//! tokenize → shuffle → shard offline, then a deterministic **streaming**
+//! read path — epoch-aware blockwise shuffle, an elastic-resume-safe
+//! token cursor, and a per-rank background prefetcher — over mmap'd lazy
+//! shard loading, so every rank reads contiguous memory with "bare
+//! minimal overhead".
 //!
-//! - [`tokenizer`] — byte-level tokenizer (+EOS), document framing
-//! - [`corpus`]    — deterministic synthetic corpus generator (the
+//! - [`tokenizer`]  — byte-level tokenizer (+EOS), document framing
+//! - [`corpus`]     — deterministic synthetic corpus generator (the
 //!   OLMoE-Mix substitution; see DESIGN.md §1)
 //! - [`preprocess`] — offline pipeline producing `.oshard` files
-//! - [`dataset`]   — mmap shard reader + deterministic global batch plan
+//! - [`dataset`]    — mmap shard reader + batch-consumption geometry
+//!   ([`BatchPlan`])
+//! - [`shuffle`]    — seeded, epoch-aware blockwise [`ShuffledIndex`]
+//! - [`stream`]     — [`TokenStream`] (budget-enforced shuffled reads)
+//!   and the [`TokenCursor`] resume contract
+//! - [`prefetch`]   — bounded-queue background batch producer per rank
 
 pub mod corpus;
 pub mod dataset;
+pub mod prefetch;
 pub mod preprocess;
+pub mod shuffle;
+pub mod stream;
 pub mod tokenizer;
 
 pub use dataset::{BatchPlan, Dataset};
+pub use prefetch::Prefetcher;
 pub use preprocess::{preprocess, PreprocessStats};
+pub use shuffle::{ShuffledIndex, SHUFFLE_BLOCK};
+pub use stream::{TokenCursor, TokenStream};
 pub use tokenizer::Tokenizer;

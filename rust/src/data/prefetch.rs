@@ -1,0 +1,217 @@
+//! Per-rank background batch **prefetcher** — a bounded-queue producer
+//! in the `ckpt-writer` / `CommRuntime` mold (one dedicated worker, FIFO
+//! channel, accounting counters, poison-free shutdown on drop).
+//!
+//! A rank's batch-fetch sequence is fully deterministic: `(step, mb)`
+//! for `mb` in `0..micro_batches`, step after step, at stream positions
+//! the [`TokenCursor`] + [`BatchPlan`](super::BatchPlan) dictate. The
+//! producer therefore runs *ahead* of the training thread, assembling
+//! the next batches while the current step computes; the consumer's
+//! queue pop is the only stall and is accounted as `data_wait_secs`
+//! (additive), while the producer's assembly time is `data_prefetch_secs`
+//! (hidden, concurrent — the Table-3-style "saved" data time).
+//!
+//! Correctness never depends on the prediction: a fetch that does not
+//! match the predicted head key returns `None` and the caller falls back
+//! to a synchronous read (and retires the producer). The stream is
+//! read-only and position-addressed, so over-production is idempotent —
+//! a killed rank simply drops the queue.
+
+use super::dataset::BatchPlan;
+use super::stream::{TokenCursor, TokenStream};
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Produced {
+    step: usize,
+    mb: usize,
+    batch: Result<Vec<i32>>,
+}
+
+/// Handle owned by the rank thread. Dropping it closes the queue; the
+/// producer exits on its next send.
+pub struct Prefetcher {
+    rx: Receiver<Produced>,
+    data_rank: usize,
+    /// next key the producer will deliver (`None` once the run's steps
+    /// are exhausted)
+    next: Option<(usize, usize)>,
+    micro_batches: usize,
+    steps: usize,
+    busy_nanos: Arc<AtomicU64>,
+}
+
+impl Prefetcher {
+    /// Spawn the producer (`data-prefetch-<data_rank>`), starting at key
+    /// `start = (step, mb)` and running to the end of the step budget.
+    /// The queue holds up to two steps' worth of batches, so a producer
+    /// that outruns training backpressures instead of pinning memory.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        stream: Arc<TokenStream>,
+        cursor: TokenCursor,
+        batches: BatchPlan,
+        data_rank: usize,
+        rows: usize,
+        seq: usize,
+        steps: usize,
+        start: (usize, usize),
+    ) -> Prefetcher {
+        let micro_batches = batches.micro_batches.max(1);
+        let depth = 2 * micro_batches;
+        let (tx, rx) = sync_channel::<Produced>(depth);
+        let busy_nanos = Arc::new(AtomicU64::new(0));
+        let busy = Arc::clone(&busy_nanos);
+        std::thread::Builder::new()
+            .name(format!("data-prefetch-{data_rank}"))
+            .spawn(move || {
+                let (mut step, mut mb) = start;
+                while step < steps {
+                    let t = Instant::now();
+                    let pos = cursor.at_step(step) + batches.offset(data_rank, mb) as u64;
+                    let batch = stream.batch_i32(pos, rows, seq);
+                    busy.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let failed = batch.is_err();
+                    if tx.send(Produced { step, mb, batch }).is_err() || failed {
+                        // consumer gone (rank finished or died), or the
+                        // stream refused the read (budget) — either way
+                        // the error, if any, is already in flight
+                        return;
+                    }
+                    mb += 1;
+                    if mb == micro_batches {
+                        mb = 0;
+                        step += 1;
+                    }
+                }
+            })
+            .expect("spawn data-prefetch");
+        Prefetcher {
+            rx,
+            data_rank,
+            next: Some(start),
+            micro_batches,
+            steps,
+            busy_nanos,
+        }
+    }
+
+    /// Pop the batch for `(step, mb)`. Returns `None` when the request
+    /// falls outside the predicted sequence (caller falls back to a
+    /// synchronous read); `Some(Err(..))` surfaces a producer-side read
+    /// failure. Time blocked in the pop accumulates into `wait_secs`.
+    pub fn fetch(
+        &mut self,
+        step: usize,
+        data_rank: usize,
+        mb: usize,
+        wait_secs: &mut f64,
+    ) -> Option<Result<Vec<i32>>> {
+        if data_rank != self.data_rank || self.next != Some((step, mb)) {
+            return None;
+        }
+        let t = Instant::now();
+        let got = self.rx.recv();
+        *wait_secs += t.elapsed().as_secs_f64();
+        match got {
+            Ok(p) if (p.step, p.mb) == (step, mb) => {
+                self.next = if mb + 1 < self.micro_batches {
+                    Some((step, mb + 1))
+                } else if step + 1 < self.steps {
+                    Some((step + 1, 0))
+                } else {
+                    None
+                };
+                Some(p.batch)
+            }
+            // producer desync or death: let the caller re-read
+            // synchronously (the stream will reproduce any real error)
+            _ => None,
+        }
+    }
+
+    /// Seconds the producer spent assembling batches (hidden behind
+    /// training compute).
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corpus, preprocess, Dataset};
+
+    fn fixture(tag: &str) -> (std::path::PathBuf, Arc<TokenStream>) {
+        let dir = std::env::temp_dir()
+            .join(format!("optimus-prefetch-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        preprocess::preprocess(&corpus::data_files(9, 3, 12), 32, 3, &dir, 64).unwrap();
+        let ds = Arc::new(Dataset::open(&dir).unwrap());
+        let st = Arc::new(TokenStream::new(ds, 17, 10_000));
+        (dir, st)
+    }
+
+    #[test]
+    fn produces_the_synchronous_sequence() {
+        let (dir, st) = fixture("seq");
+        let bp = BatchPlan { dp: 2, micro_batch: 2, micro_batches: 3 };
+        let cur = TokenCursor::fresh(bp.instances_per_step() as u64);
+        let mut pf = Prefetcher::spawn(Arc::clone(&st), cur, bp, 1, 2, 31, 4, (0, 0));
+        let mut wait = 0.0;
+        for step in 0..4 {
+            for mb in 0..3 {
+                let got = pf.fetch(step, 1, mb, &mut wait).unwrap().unwrap();
+                let pos = cur.at_step(step) + bp.offset(1, mb) as u64;
+                assert_eq!(got, st.batch_i32(pos, 2, 31).unwrap(), "step {step} mb {mb}");
+            }
+        }
+        assert!(pf.busy_secs() > 0.0);
+        assert!(wait >= 0.0);
+        // the sequence is exhausted: further fetches miss
+        assert!(pf.fetch(4, 1, 0, &mut wait).is_none());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn out_of_pattern_requests_miss() {
+        let (dir, st) = fixture("miss");
+        let bp = BatchPlan { dp: 1, micro_batch: 2, micro_batches: 2 };
+        let cur = TokenCursor::fresh(bp.instances_per_step() as u64);
+        let mut pf = Prefetcher::spawn(Arc::clone(&st), cur, bp, 0, 2, 31, 4, (0, 0));
+        let mut wait = 0.0;
+        // wrong mb, wrong data_rank, wrong step: all decline (the caller
+        // falls back to the synchronous path)
+        assert!(pf.fetch(0, 0, 1, &mut wait).is_none());
+        assert!(pf.fetch(0, 3, 0, &mut wait).is_none());
+        assert!(pf.fetch(2, 0, 0, &mut wait).is_none());
+        // the predicted head is still intact afterwards
+        assert!(pf.fetch(0, 0, 0, &mut wait).unwrap().is_ok());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn budget_errors_surface_through_the_queue() {
+        let (dir, st) = fixture("budget");
+        let budget = 4u64; // 2 steps of 2 instances
+        let tiny = Arc::new(TokenStream::new(
+            Arc::new(Dataset::open(&dir).unwrap()),
+            17,
+            budget,
+        ));
+        let _ = st;
+        let bp = BatchPlan { dp: 1, micro_batch: 2, micro_batches: 1 };
+        let cur = TokenCursor::fresh(2);
+        // 3 steps demanded, only 2 in budget: the third batch is an error
+        let mut pf = Prefetcher::spawn(tiny, cur, bp, 0, 2, 31, 3, (0, 0));
+        let mut wait = 0.0;
+        assert!(pf.fetch(0, 0, 0, &mut wait).unwrap().is_ok());
+        assert!(pf.fetch(1, 0, 0, &mut wait).unwrap().is_ok());
+        let e = pf.fetch(2, 0, 0, &mut wait).unwrap().unwrap_err().to_string();
+        assert!(e.contains("data read past validated budget"), "{e}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -1,0 +1,206 @@
+//! Seeded, epoch-aware deterministic **blockwise shuffle** of the
+//! instance stream.
+//!
+//! The offline pipeline already writes shards in one fixed shuffled
+//! order (paper §4). Training additionally needs *epoch-aware* shuffling
+//! — a fresh order every pass over the data — without giving up the
+//! paper's contiguous-read property (mmap'd shard reads that walk
+//! forward through memory). [`ShuffledIndex`] reconciles the two:
+//!
+//! * the epoch's instances are grouped into fixed-size **blocks** of
+//!   [`SHUFFLE_BLOCK`] consecutive raw instances;
+//! * each epoch draws an independent permutation of the *blocks* from
+//!   [`crate::util::prng::Prng`] (`Prng::new(seed).fork(epoch)`), so the
+//!   whole order is reproducible from the seed alone;
+//! * *within* a block, stream order equals raw order — consecutive
+//!   stream positions read consecutive mmap'd instances.
+//!
+//! The map is a pure function `(seed, n, block) × cursor → (epoch,
+//! instance)`: any rank, on any topology, at any point in the run, maps
+//! a global stream position to the same instance — the property the
+//! elastic-resume token cursor (DESIGN.md §7) relies on.
+
+use crate::util::prng::Prng;
+use std::sync::{Arc, Mutex};
+
+/// Default shuffle-block length in instances. Large enough that shard
+/// reads stay effectively sequential, small enough that the block
+/// permutation decorrelates neighbouring corpus regions even on small
+/// datasets.
+pub const SHUFFLE_BLOCK: usize = 64;
+
+/// One epoch's materialized block permutation.
+struct EpochPerm {
+    epoch: u64,
+    /// block ids in stream order
+    perm: Vec<u64>,
+    /// position of the (possibly short) last block id within `perm`
+    short_pos: usize,
+}
+
+/// Deterministic cursor → (epoch, instance) map. Cheap to share
+/// (`Send + Sync`); the per-epoch block permutation is cached behind a
+/// mutex and rebuilt only when the epoch advances.
+pub struct ShuffledIndex {
+    /// instances per epoch
+    n: u64,
+    block: u64,
+    seed: u64,
+    /// two-slot permutation cache: a step whose positions straddle an
+    /// epoch boundary has rank threads and prefetch producers mapping
+    /// both epochs concurrently — one slot per epoch keeps the boundary
+    /// from thrashing O(n_blocks) rebuilds under the lock
+    cache: Mutex<[Option<Arc<EpochPerm>>; 2]>,
+}
+
+impl ShuffledIndex {
+    /// Index over `n` instances with the given shuffle `seed` and the
+    /// default block length.
+    pub fn new(n: usize, seed: u64) -> ShuffledIndex {
+        ShuffledIndex::with_block(n, seed, SHUFFLE_BLOCK)
+    }
+
+    /// Index with an explicit block length (tests; `block >= 1`).
+    pub fn with_block(n: usize, seed: u64, block: usize) -> ShuffledIndex {
+        assert!(n > 0, "ShuffledIndex needs a non-empty dataset");
+        assert!(block > 0, "ShuffledIndex needs a positive block length");
+        ShuffledIndex {
+            n: n as u64,
+            block: block as u64,
+            seed,
+            cache: Mutex::new([None, None]),
+        }
+    }
+
+    /// Instances per epoch.
+    pub fn epoch_len(&self) -> u64 {
+        self.n
+    }
+
+    fn blocks(&self) -> u64 {
+        self.n.div_ceil(self.block)
+    }
+
+    /// Length of the last block (short when `block` does not divide `n`).
+    fn short_len(&self) -> u64 {
+        self.n - (self.blocks() - 1) * self.block
+    }
+
+    fn epoch_perm(&self, epoch: u64) -> Arc<EpochPerm> {
+        let mut cache = self.cache.lock().unwrap();
+        for slot in cache.iter().flatten() {
+            if slot.epoch == epoch {
+                return Arc::clone(slot);
+            }
+        }
+        let nb = self.blocks();
+        let perm = Prng::new(self.seed).fork(epoch).permutation(nb as usize);
+        let short_id = nb - 1;
+        let short_pos = perm.iter().position(|&b| b == short_id).unwrap();
+        let p = Arc::new(EpochPerm { epoch, perm, short_pos });
+        // keep the previous epoch around: boundary steps map both
+        cache[1] = cache[0].take();
+        cache[0] = Some(Arc::clone(&p));
+        p
+    }
+
+    /// Start of `perm[j]`'s run within the epoch's stream: `j` full
+    /// blocks, minus the short block's deficit once it has passed.
+    fn run_start(&self, p: &EpochPerm, j: u64) -> u64 {
+        let deficit = if j > p.short_pos as u64 { self.block - self.short_len() } else { 0 };
+        j * self.block - deficit
+    }
+
+    /// Map a global stream cursor to `(epoch, instance id)`. Total over
+    /// all of `u64` — budget enforcement lives in
+    /// [`TokenStream`](super::TokenStream), not here.
+    pub fn map(&self, cursor: u64) -> (u64, usize) {
+        let epoch = cursor / self.n;
+        let pos = cursor % self.n;
+        let p = self.epoch_perm(epoch);
+        // largest j with run_start(j) <= pos (run starts are strictly
+        // increasing, so binary search over the closed form)
+        let (mut lo, mut hi) = (0u64, self.blocks() - 1);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.run_start(&p, mid) <= pos {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let inst = p.perm[lo as usize] * self.block + (pos - self.run_start(&p, lo));
+        (epoch, inst as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn epoch_order(idx: &ShuffledIndex, epoch: u64) -> Vec<usize> {
+        let n = idx.epoch_len();
+        (0..n)
+            .map(|p| {
+                let (e, i) = idx.map(epoch * n + p);
+                assert_eq!(e, epoch);
+                i
+            })
+            .collect()
+    }
+
+    #[test]
+    fn each_epoch_is_a_permutation() {
+        for (n, block) in [(10usize, 4usize), (64, 64), (65, 64), (128, 16), (7, 64), (1, 1)] {
+            let idx = ShuffledIndex::with_block(n, 42, block);
+            for epoch in 0..3u64 {
+                let mut order = epoch_order(&idx, epoch);
+                order.sort_unstable();
+                assert_eq!(order, (0..n).collect::<Vec<_>>(), "n={n} block={block} epoch={epoch}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_stay_contiguous() {
+        // consecutive positions inside a block read consecutive raw
+        // instances — the contiguous mmap-read property
+        let idx = ShuffledIndex::with_block(130, 5, 16);
+        let order = epoch_order(&idx, 0);
+        let mut breaks = 0;
+        for w in order.windows(2) {
+            if w[1] != w[0] + 1 {
+                breaks += 1;
+            }
+        }
+        // at most one discontinuity per block boundary
+        assert!(breaks <= 130usize.div_ceil(16), "{breaks} breaks in {order:?}");
+    }
+
+    #[test]
+    fn reproducible_from_seed_alone_and_epochs_differ() {
+        let a = ShuffledIndex::with_block(200, 11, 16);
+        let b = ShuffledIndex::with_block(200, 11, 16);
+        let c = ShuffledIndex::with_block(200, 12, 16);
+        assert_eq!(epoch_order(&a, 0), epoch_order(&b, 0));
+        assert_eq!(epoch_order(&a, 5), epoch_order(&b, 5));
+        assert_ne!(epoch_order(&a, 0), epoch_order(&c, 0), "seed must reorder");
+        assert_ne!(epoch_order(&a, 0), epoch_order(&a, 1), "epochs must reshuffle");
+    }
+
+    #[test]
+    fn cache_follows_epoch_hops() {
+        // alternate between epochs (the boundary-step access pattern):
+        // the two-slot cache must serve both without staleness, and a
+        // third epoch must evict cleanly
+        let idx = ShuffledIndex::with_block(50, 3, 8);
+        let e0 = epoch_order(&idx, 0);
+        let e1 = epoch_order(&idx, 1);
+        let e2 = epoch_order(&idx, 2);
+        for p in 0..50u64 {
+            assert_eq!(idx.map(p).1, e0[p as usize]);
+            assert_eq!(idx.map(50 + p).1, e1[p as usize]);
+            assert_eq!(idx.map(100 + p).1, e2[p as usize]);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! The shuffled **token stream** and the elastic-resume **token cursor**.
+//!
+//! A training run consumes one logical stream of instances: stream
+//! position `p` maps through the epoch-aware [`ShuffledIndex`] to a raw
+//! instance, and the whole stream is bounded by the run's validated
+//! **budget** (`steps × instances_per_step`, counted from the resume
+//! cursor). Every read path goes through here — a raw index escaping the
+//! budget is a hard `data read past validated budget` error, never a
+//! silent wrap (DESIGN.md §7).
+//!
+//! [`TokenCursor`] is the resume contract: `instances consumed so far`
+//! is checkpointed as a `StatePart` scalar, and a resumed run — under
+//! *any* topology — continues at exactly the next unseen stream
+//! position. Deriving the position from `step × instances_per_step`
+//! (the pre-cursor scheme) silently re-read or skipped data whenever the
+//! resumed geometry changed the per-step instance count.
+
+use super::dataset::Dataset;
+use super::shuffle::ShuffledIndex;
+use super::tokenizer::EOS;
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::Arc;
+
+/// Global data position of a run: `base` instances were consumed before
+/// `start_step` (0 on fresh runs, the checkpointed cursor on resume),
+/// and every step consumes `per_step` more under the current
+/// [`BatchPlan`](super::BatchPlan) geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenCursor {
+    /// instances consumed before `start_step` (the checkpointed scalar)
+    pub base: u64,
+    /// first step this run executes (`saved step + 1` on resume)
+    pub start_step: usize,
+    /// instances per optimizer step under the *current* plan geometry
+    pub per_step: u64,
+}
+
+impl TokenCursor {
+    /// Fresh-run cursor: position 0, counting from step 0.
+    pub fn fresh(per_step: u64) -> TokenCursor {
+        TokenCursor { base: 0, start_step: 0, per_step }
+    }
+
+    /// Stream position where `step` begins. Saturates below `start_step`
+    /// (a resumed run whose checkpoint already met the step budget).
+    pub fn at_step(&self, step: usize) -> u64 {
+        self.base + step.saturating_sub(self.start_step) as u64 * self.per_step
+    }
+}
+
+/// The run's bounded, shuffled instance stream: dataset + shuffle index
+/// + validated budget. Shared (`Arc`) by every rank and by the prefetch
+/// producers.
+pub struct TokenStream {
+    ds: Arc<Dataset>,
+    index: ShuffledIndex,
+    /// valid stream positions are `[0, budget)`
+    budget: u64,
+    /// where the *logical* stream ends (`dataset × epoch budget`;
+    /// `u64::MAX` when the epoch budget is unbounded). Target-token
+    /// continuation EOS-pads only here — never at the run-dependent
+    /// `budget` wall, so the tokens at a given position are identical
+    /// whatever step count or resume point a run has.
+    stream_end: u64,
+}
+
+impl TokenStream {
+    /// Stream over `ds`, shuffled by `data_seed`, with `budget` total
+    /// instance reads (the run's validated data budget). The logical
+    /// stream end defaults to unbounded (epochs wrap forever); bound it
+    /// with [`TokenStream::with_stream_end`].
+    pub fn new(ds: Arc<Dataset>, data_seed: u64, budget: u64) -> TokenStream {
+        let index = ShuffledIndex::new(ds.len(), data_seed);
+        TokenStream { ds, index, budget, stream_end: u64::MAX }
+    }
+
+    /// Bound the logical stream at `end` positions (a `data_epochs`
+    /// budget): continuation targets EOS-pad there, the true end of the
+    /// data.
+    pub fn with_stream_end(mut self, end: u64) -> TokenStream {
+        self.stream_end = end;
+        self
+    }
+
+    /// Instances per epoch (the dataset length).
+    pub fn epoch_len(&self) -> u64 {
+        self.index.epoch_len()
+    }
+
+    /// Total validated stream positions.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Map a stream position to `(epoch, instance id)`, enforcing the
+    /// budget.
+    pub fn map(&self, pos: u64) -> Result<(u64, usize)> {
+        if pos >= self.budget {
+            return Err(anyhow!(
+                "data read past validated budget: stream position {pos} is outside the \
+                 run's {} validated instance reads",
+                self.budget
+            ));
+        }
+        Ok(self.index.map(pos))
+    }
+
+    /// Batch of `rows` consecutive *stream* positions starting at `pos`,
+    /// each extended to `seq+1` tokens. Token `seq` (the last target) is
+    /// the first token of the **next stream slot** when the slot exists;
+    /// EOS-padding happens only at the true stream end (`stream_end` —
+    /// never at the run-dependent read budget, so batch contents are a
+    /// pure function of position). Within a shuffle block the positions
+    /// are consecutive raw instances, so the mmap reads stay contiguous.
+    pub fn batch_i32(&self, pos: u64, rows: usize, seq: usize) -> Result<Vec<i32>> {
+        let c = self.ds.context;
+        let mut out = Vec::with_capacity(rows * (seq + 1));
+        for r in 0..rows {
+            let p = pos + r as u64;
+            let mut ext = self.ds.instance(self.map(p)?.1)?;
+            // continuation: tokens past the instance come from the
+            // following stream slots (a read-only lookahead — it may
+            // peek past the budget wall, never past the stream end)
+            while ext.len() < seq + 1 {
+                let next = p + (ext.len() / c) as u64;
+                if next >= self.stream_end {
+                    break;
+                }
+                let more = self.ds.instance(self.index.map(next).1)?;
+                ext.extend(more);
+            }
+            for j in 0..=seq {
+                out.push(*ext.get(j).unwrap_or(&EOS) as i32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corpus, preprocess};
+
+    fn stream(tag: &str, budget: u64) -> (std::path::PathBuf, TokenStream) {
+        let dir = std::env::temp_dir()
+            .join(format!("optimus-stream-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = corpus::data_files(5, 4, 16);
+        preprocess::preprocess(&files, 32, 11, &dir, 64).unwrap();
+        let ds = Arc::new(Dataset::open(&dir).unwrap());
+        let st = TokenStream::new(Arc::clone(&ds), 21, budget);
+        (dir, st)
+    }
+
+    #[test]
+    fn cursor_arithmetic_and_saturation() {
+        let fresh = TokenCursor::fresh(8);
+        assert_eq!(fresh.at_step(0), 0);
+        assert_eq!(fresh.at_step(5), 40);
+        // resumed under a different geometry: continues at base exactly
+        let resumed = TokenCursor { base: 40, start_step: 5, per_step: 16 };
+        assert_eq!(resumed.at_step(5), 40);
+        assert_eq!(resumed.at_step(7), 72);
+        // checkpoint at/past the step budget: no underflow, zero progress
+        assert_eq!(resumed.at_step(3), 40);
+    }
+
+    #[test]
+    fn budget_is_a_hard_wall() {
+        let (dir, st) = stream("budget", 10);
+        assert!(st.map(9).is_ok());
+        let e = st.map(10).unwrap_err().to_string();
+        assert!(e.contains("data read past validated budget"), "{e}");
+        // a batch straddling the wall fails too
+        let e = st.batch_i32(8, 4, 8).unwrap_err().to_string();
+        assert!(e.contains("data read past validated budget"), "{e}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let (dir, a) = stream("det", 1000);
+        let ds = Arc::new(Dataset::open(&dir).unwrap());
+        let b = TokenStream::new(Arc::clone(&ds), 21, 1000);
+        let c = TokenStream::new(ds, 22, 1000);
+        let (x, y) = (a.batch_i32(7, 4, 31).unwrap(), b.batch_i32(7, 4, 31).unwrap());
+        assert_eq!(x, y, "same data seed must give the same stream");
+        let n = a.epoch_len();
+        assert_ne!(
+            (0..n).map(|p| a.map(p).unwrap().1).collect::<Vec<_>>(),
+            (0..n).map(|p| c.map(p).unwrap().1).collect::<Vec<_>>(),
+            "different data seeds must reorder"
+        );
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn epochs_reshuffle_but_cover_everything() {
+        let (dir, st) = stream("epochs", u64::MAX);
+        let n = st.epoch_len();
+        let e0: Vec<usize> = (0..n).map(|p| st.map(p).unwrap().1).collect();
+        let e1: Vec<usize> = (0..n).map(|p| st.map(n + p).unwrap().1).collect();
+        assert_ne!(e0, e1, "epoch 1 must be reshuffled");
+        let mut s0 = e0.clone();
+        let mut s1 = e1.clone();
+        s0.sort_unstable();
+        s1.sort_unstable();
+        assert_eq!(s0, s1, "every epoch covers every instance exactly once");
+        assert_eq!(s0, (0..n as usize).collect::<Vec<_>>());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn last_target_is_next_slots_first_token() {
+        let (dir, st) = stream("target", 1000);
+        let c = 32;
+        // seq == context: token index c must be the next stream slot's
+        // first token, not EOS
+        let b = st.batch_i32(3, 2, c).unwrap();
+        assert_eq!(b.len(), 2 * (c + 1));
+        for r in 0..2u64 {
+            let next_first = st.ds.instance(st.map(3 + r + 1).unwrap().1).unwrap()[0];
+            assert_eq!(b[(r as usize) * (c + 1) + c], next_first as i32, "row {r}");
+        }
+        // at the true stream end (an epoch budget) there is no next
+        // slot: EOS. The *read budget* is deliberately NOT a wall for
+        // continuation — batch contents must not depend on a run's step
+        // count or resume point.
+        let (dir2, tiny) = stream("target-end", 4);
+        let tiny = tiny.with_stream_end(4);
+        let e = tiny.batch_i32(3, 1, c).unwrap();
+        assert_eq!(e[c], EOS as i32);
+        // same position, same seed, bigger budget but same stream end:
+        // identical row
+        let ds2 = Arc::new(Dataset::open(&dir2).unwrap());
+        let wider = TokenStream::new(ds2, 21, 1000).with_stream_end(4);
+        assert_eq!(wider.batch_i32(3, 1, c).unwrap(), e);
+        std::fs::remove_dir_all(dir).unwrap();
+        std::fs::remove_dir_all(dir2).unwrap();
+    }
+}

@@ -20,7 +20,9 @@
 //!   harness, DP/EP/PP/PP×EP engines, pipeline schedules, EP token
 //!   exchange
 //! - [`optim`]    — AdamW, sharded optimizer (SO), EPSO (paper §3.2)
-//! - [`data`]     — tokenize → shuffle → shard pipeline + mmap loader
+//! - [`data`]     — tokenize → shuffle → shard pipeline + deterministic
+//!   shuffled streaming (epoch-aware blockwise shuffle, elastic-resume
+//!   token cursor, per-rank prefetch) over the mmap loader
 //! - [`ckpt`]     — sharded `TrainState`/`Checkpointer` with async
 //!   zero-copy snapshots, two-phase commit, topology-elastic reshard (§4)
 //! - [`ft`]       — hard/soft node-failure handling with buffer nodes (§4)

@@ -7,10 +7,13 @@
 //!         [--mode so|epso] [--ep-comm allgather|all2all]
 //!         [--schedule gpipe|1f1b] [--micro N] [--fur] [--pool N]
 //!         [--seed N] [--data DIR] [--log-every N]
+//!         [--data-seed N] [--no-prefetch] [--epochs N]
 //!         [--overlap] [--overlap-chunk N]
 //!         [--ckpt-dir DIR --ckpt-every N --ckpt-sync --ckpt-keep K]
 //!   eval --model M              run the synthetic benchmark suite
 //!   plans --world N [--model M] enumerate dp×ep×pp placements of a world
+//!         [--steps N --data DIR] (with --model: instances/tokens per
+//!         step per placement; with --data too: epochs the run consumes)
 //!   ckpt inspect DIR            print a checkpoint dir's manifest
 //!                               (step, plan, shards, checksums, validity)
 //!   scaling [--fur]             Aurora-model Fig 4b sweep
@@ -42,13 +45,14 @@ const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|sca
 const TRAIN_FLAGS: &[&str] = &[
     "model", "data", "dp", "ep", "pp", "steps", "warmup", "lr", "mode", "ep-comm",
     "schedule", "micro", "fur", "pool", "seed", "log-every", "overlap", "overlap-chunk",
-    "ckpt-dir", "ckpt-every", "ckpt-sync", "ckpt-keep",
+    "ckpt-dir", "ckpt-every", "ckpt-sync", "ckpt-keep", "data-seed", "no-prefetch",
+    "epochs",
 ];
 const CKPT_FLAGS: &[&str] = &[];
 const PREPROCESS_FLAGS: &[&str] =
     &["out", "seed", "files", "docs", "context", "shuffle-seed", "per-shard"];
 const EVAL_FLAGS: &[&str] = &["model", "seed", "cases"];
-const PLANS_FLAGS: &[&str] = &["world", "model"];
+const PLANS_FLAGS: &[&str] = &["world", "model", "steps", "data"];
 const SCALING_FLAGS: &[&str] = &["fur", "model"];
 
 fn main() -> optimus::Result<()> {
@@ -150,6 +154,11 @@ fn do_train(args: &Args) -> optimus::Result<()> {
         .peak_lr(lr)
         .min_lr(lr / 10.0)
         .seed(args.usize_or("seed", 1234) as u64)
+        // deterministic shuffled streaming: the data order is a pure
+        // function of --data-seed (blockwise reshuffle every epoch)
+        .data_seed(args.usize_or("data-seed", 7) as u64)
+        .data_prefetch(!args.bool_or("no-prefetch", false))
+        .data_epochs(args.usize_or("epochs", 0))
         .fur(args.bool_or("fur", false))
         .micro_batches(args.usize_or("micro", 2))
         .engine_pool(args.usize_or("pool", 2))
@@ -215,6 +224,15 @@ fn do_train(args: &Args) -> optimus::Result<()> {
         r.opt_state_bytes,
         r.loss.last().unwrap_or(f64::NAN)
     );
+    println!(
+        "data: {} instances ({:.2} epochs) consumed; stall {:.4}s ({}), \
+         prefetch hid {:.4}s",
+        r.instances_consumed,
+        r.epochs_consumed,
+        r.breakdown.data_secs + r.breakdown.data_wait_secs,
+        if spec.plan.prefetch { "queue wait" } else { "synchronous reads" },
+        r.breakdown.data_prefetch_secs
+    );
     if spec.plan.overlap {
         println!(
             "overlap: hid {:.3}s of comm behind compute ({:.0}% of step comm)",
@@ -269,10 +287,14 @@ fn do_eval(args: &Args) -> optimus::Result<()> {
 
 /// Sweep tooling: list every dp×ep×pp placement of a world size; with
 /// `--model`, mark which placements the built artifacts can run — using
-/// the same validation table `train` enforces, so the two never drift.
+/// the same validation table `train` enforces, so the two never drift —
+/// and report each runnable placement's per-step data consumption
+/// (instances and tokens, from the same `batch_plan` the engines read
+/// through). With `--data`, also the epochs a `--steps`-long run eats.
 fn do_plans(args: &Args) -> optimus::Result<()> {
     check(args, PLANS_FLAGS)?;
     let world = args.usize_or("world", 8);
+    let steps = args.usize_or("steps", 50);
     let man = args
         .get("model")
         .map(|_| Manifest::load(&optimus::artifacts_dir()))
@@ -281,11 +303,38 @@ fn do_plans(args: &Args) -> optimus::Result<()> {
         (Some(man), Some(model)) => Some(man.config(model)?),
         _ => None,
     };
+    let ds = args
+        .get("data")
+        .map(|d| optimus::data::Dataset::open(std::path::Path::new(d)))
+        .transpose()?;
+    if let Some(ds) = &ds {
+        println!(
+            "dataset: {} instances of context {} ({} tokens)",
+            ds.len(),
+            ds.context,
+            ds.len() * ds.context
+        );
+    }
     println!("dp×ep×pp placements of world={world}:");
     for t in ParallelismPlan::enumerate(world) {
+        let plan = ParallelismPlan::new(t);
         let note = match mm {
-            Some(mm) if ParallelismPlan::new(t).validate_model(mm).is_ok() => "  runnable",
-            _ => "",
+            Some(mm) if plan.validate_model(mm).is_ok() => {
+                let bp = plan.batch_plan(mm);
+                let ips = bp.instances_per_step();
+                let mut n = format!(
+                    "  runnable: {ips} inst/step, {} tok/step",
+                    ips * mm.hyper.seq
+                );
+                if let Some(ds) = &ds {
+                    n.push_str(&format!(
+                        ", {steps} steps = {:.2} epochs",
+                        (steps * ips) as f64 / ds.len() as f64
+                    ));
+                }
+                n
+            }
+            _ => String::new(),
         };
         println!("  dp={:<3} ep={:<3} pp={:<3}{note}", t.dp, t.ep, t.pp);
     }

@@ -15,7 +15,17 @@ pub struct StepBreakdown {
     /// collective / p2p transfer (with `--overlap`, comm hidden behind
     /// compute moves to `overlap_secs` instead)
     pub comm_secs: f64,
+    /// synchronous batch assembly on the training thread (prefetch off,
+    /// or a fetch outside the prefetcher's predicted sequence). Additive.
     pub data_secs: f64,
+    /// time the training thread blocked popping the prefetch queue — the
+    /// *exposed* remainder of data time once the background producer hides
+    /// the assembly. Additive — it is real step wall-clock.
+    pub data_wait_secs: f64,
+    /// batch assembly hidden on the per-rank `data-prefetch-*` producer
+    /// thread. Concurrent with training (like `overlap_secs`) —
+    /// informational, never part of the wall-clock sum.
+    pub data_prefetch_secs: f64,
     /// PJRT executor queue wait: time submitted artifacts sat waiting for
     /// a free executor, folded in by the harness at finish from
     /// [`crate::runtime::EngineStats`]. The pool counters are shared by
@@ -47,15 +57,17 @@ pub struct StepBreakdown {
 
 impl StepBreakdown {
     /// Wall-clock-additive components only: `queue_secs` is spent inside
-    /// `fwd_bwd_secs` and `overlap_secs`/`snapshot_write_secs` are
-    /// concurrent-by-design, so none of those are added — the sum tracks
-    /// real step time. `snapshot_secs` (the capture stall) is real
-    /// blocking time and is added.
+    /// `fwd_bwd_secs` and `overlap_secs`/`data_prefetch_secs`/
+    /// `snapshot_write_secs` are concurrent-by-design, so none of those
+    /// are added — the sum tracks real step time. `snapshot_secs` (the
+    /// capture stall) and `data_wait_secs` (the prefetch-pop stall) are
+    /// real blocking time and are added.
     pub fn total(&self) -> f64 {
         self.fwd_bwd_secs
             + self.optimizer_secs
             + self.comm_secs
             + self.data_secs
+            + self.data_wait_secs
             + self.snapshot_secs
     }
 
@@ -74,6 +86,8 @@ impl StepBreakdown {
         self.optimizer_secs += other.optimizer_secs;
         self.comm_secs += other.comm_secs;
         self.data_secs += other.data_secs;
+        self.data_wait_secs += other.data_wait_secs;
+        self.data_prefetch_secs += other.data_prefetch_secs;
         self.queue_secs += other.queue_secs;
         self.overlap_secs += other.overlap_secs;
         self.snapshot_secs += other.snapshot_secs;
@@ -158,7 +172,9 @@ mod tests {
             fwd_bwd_secs: 2.0,
             optimizer_secs: 1.0,
             comm_secs: 0.5,
-            data_secs: 0.25,
+            data_secs: 0.125,
+            data_wait_secs: 0.125,     // prefetch-pop stall — additive
+            data_prefetch_secs: 0.75,  // hidden on the producer thread
             queue_secs: 0.75,          // inside fwd_bwd
             overlap_secs: 0.5,         // concurrent with optimizer
             snapshot_secs: 0.25,       // blocking capture stall — additive
@@ -170,6 +186,8 @@ mod tests {
         b.add(&other);
         assert_eq!(b.queue_secs, 1.5);
         assert_eq!(b.overlap_secs, 1.0);
+        assert_eq!(b.data_wait_secs, 0.25);
+        assert_eq!(b.data_prefetch_secs, 1.5);
         assert_eq!(b.snapshot_secs, 0.5);
         assert_eq!(b.snapshot_write_secs, 2.5);
         assert_eq!(b.total(), 8.0);

@@ -7,12 +7,12 @@
 //! would produce from the same global state.
 
 use optimus::comm::Topology;
-use optimus::coordinator::{self, JobSpec, JobSpecBuilder, TrainReport};
-use optimus::data::{corpus, preprocess};
+use optimus::coordinator::{self, DataTrace, JobSpec, JobSpecBuilder, TrainReport};
+use optimus::data::{corpus, preprocess, Dataset};
 use optimus::ft::{HardKillHook, Launcher};
 use optimus::optim::ShardingMode;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 fn data_dir() -> PathBuf {
     static DIR: OnceLock<PathBuf> = OnceLock::new();
@@ -194,6 +194,170 @@ fn elastic_resume_dp2ep2_to_dp4_and_back() {
         let _ = std::fs::remove_dir_all(&ck_native);
         let _ = std::fs::remove_dir_all(&ck_elastic);
     }
+}
+
+/// The PR 5 acceptance gate (recorded-id hook): a run checkpointed
+/// mid-epoch and resumed under a **different** topology consumes exactly
+/// the unseen stream positions — no re-reads, no gaps — and every
+/// instance id at most once per epoch. Covers both the equal-geometry
+/// elastic case (dp2×ep2 → dp4) and the geometry-changing one
+/// (dp2 → dp4, where the old `step × instances_per_step` derivation
+/// skipped half a run's data).
+#[test]
+fn elastic_resume_consumes_each_instance_exactly_once_data_order() {
+    let Some(m) = optimus::manifest_or_skip("kill_resume::elastic_data_order") else {
+        return;
+    };
+    let ds = Dataset::open(&data_dir()).unwrap();
+    for (tag, save_topo, resume_topo) in [
+        ("dp2ep2-to-dp4", Topology { dp: 2, ep: 2, pp: 1 }, Topology::dp_only(4)),
+        ("dp2-to-dp4", Topology::dp_only(2), Topology::dp_only(4)),
+    ] {
+        let ck = ckroot(&format!("order-{tag}"));
+        // run A: 7 steps under the saving topology, checkpoints at 3 & 6
+        let trace_a: DataTrace = Arc::new(Mutex::new(Vec::new()));
+        let a = coordinator::train(
+            &m,
+            &base(save_topo, 7)
+                .checkpoint_dir(&ck)
+                .ckpt_every(3)
+                .data_trace(trace_a.clone())
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(a.ckpt_commits >= 2, "{tag}: commits at steps 3 and 6");
+        // run B: elastic resume under the new topology, 3 more steps
+        let trace_b: DataTrace = Arc::new(Mutex::new(Vec::new()));
+        let b = coordinator::train(
+            &m,
+            &base(resume_topo, 10)
+                .checkpoint_dir(&ck)
+                .data_trace(trace_b.clone())
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(b.loss.points.first().unwrap().0, 7, "{tag}: resumed at step 7");
+
+        let ra = trace_a.lock().unwrap().clone();
+        let rb = trace_b.lock().unwrap().clone();
+        assert!(!ra.is_empty() && !rb.is_empty(), "{tag}: traces recorded");
+        // the whole experiment stays inside one epoch, so "exactly once
+        // per run" below is "exactly once per epoch"
+        let total = ra.len() + rb.len();
+        assert!(
+            total <= ds.len(),
+            "{tag}: test precondition broken — {total} reads exceed one epoch of {}",
+            ds.len()
+        );
+        // stream positions from both runs tile [0, total) exactly:
+        // nothing re-read after the elastic switch, nothing skipped
+        let mut pos: Vec<u64> = ra.iter().chain(rb.iter()).map(|r| r.0).collect();
+        pos.sort_unstable();
+        for (i, p) in pos.iter().enumerate() {
+            assert_eq!(
+                *p, i as u64,
+                "{tag}: stream position {i} was {} (gap or double-read across resume)",
+                p
+            );
+        }
+        // ... and the resumed run picked up at exactly A's end
+        let b_first = rb.iter().map(|r| r.0).min().unwrap();
+        assert_eq!(b_first as usize, ra.len(), "{tag}: resume cursor offset");
+        // instance ids: consumed at most once (shuffle is a bijection)
+        let mut ids: Vec<u64> = ra.iter().chain(rb.iter()).map(|r| r.1).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "{tag}: an instance id was consumed twice in-epoch");
+        let _ = std::fs::remove_dir_all(&ck);
+    }
+}
+
+/// The shuffled order is reproducible from `--data-seed` alone, and a
+/// different data seed reorders the stream without changing its
+/// coverage.
+#[test]
+fn shuffle_order_reproducible_from_data_seed_alone() {
+    let Some(m) = optimus::manifest_or_skip("kill_resume::data_seed_reproducibility")
+    else {
+        return;
+    };
+    let run = |data_seed: u64, init_seed: u64| {
+        let trace: DataTrace = Arc::new(Mutex::new(Vec::new()));
+        coordinator::train(
+            &m,
+            &base(Topology::dp_only(2), 3)
+                .seed(init_seed)
+                .data_seed(data_seed)
+                .data_trace(trace.clone())
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        let mut r = trace.lock().unwrap().clone();
+        r.sort_unstable(); // rank interleaving is nondeterministic; order by position
+        r
+    };
+    let a = run(11, 1234);
+    let b = run(11, 9999); // different *model* seed: data order must not move
+    assert_eq!(a, b, "data order must be a pure function of --data-seed");
+    // the recorded ids equal the pure seed-derived stream mapping — the
+    // whole order is reconstructible from --data-seed + the dataset
+    // (seed-sensitivity of that mapping is asserted at unit level in
+    // data::stream / data::shuffle over full epochs)
+    let ds = Arc::new(Dataset::open(&data_dir()).unwrap());
+    let st = optimus::data::TokenStream::new(ds, 11, u64::MAX);
+    for &(p, id) in &a {
+        assert_eq!(st.map(p).unwrap().1 as u64, id, "position {p}");
+    }
+}
+
+/// A checkpoint's token cursor is only valid under the shuffle that
+/// consumed it: resuming with a different `--data-seed` is refused with
+/// a stable, non-relaunchable error instead of silently re-reading and
+/// skipping instances.
+#[test]
+fn resume_rejects_a_different_data_seed() {
+    let Some(m) = optimus::manifest_or_skip("kill_resume::resume_rejects_data_seed") else {
+        return;
+    };
+    let ck = ckroot("data-seed");
+    coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), 5)
+            .data_seed(11)
+            .checkpoint_dir(&ck)
+            .ckpt_every(2)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let e = coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), 8)
+            .data_seed(12)
+            .checkpoint_dir(&ck)
+            .build()
+            .unwrap(),
+    )
+    .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("checkpoint resume failed [data-seed]"), "{msg}");
+    assert_eq!(optimus::ft::classify(&e), optimus::ft::FailureKind::Config, "{msg}");
+    // the matching seed resumes cleanly from the step-4 checkpoint
+    let r = coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), 8)
+            .data_seed(11)
+            .checkpoint_dir(&ck)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(r.loss.points.first().unwrap().0, 5);
+    let _ = std::fs::remove_dir_all(&ck);
 }
 
 /// Async snapshots block the step only for the O(1) capture; the write

@@ -226,6 +226,76 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
     }
 }
 
+/// The `[data]` instance-budget check is enforced by the harness (the
+/// only place that sees the real resume cursor), but still *before* any
+/// rank thread spawns, with a stable classifiable string. A fresh run's
+/// demand is steps × instances_per_step; a run whose demand fits passes
+/// the check and proceeds (to fail later on the synthetic manifest's
+/// missing artifacts — NOT a `[data]` error).
+#[test]
+fn data_budget_overrun_fails_before_any_rank_runs() {
+    let mut configs = BTreeMap::new();
+    configs.insert("synthetic".to_string(), tiny_mm(16));
+    let manifest = Manifest { configs, paper: BTreeMap::new() };
+
+    // 200 steps × (dp2 × batch2) = 800 instances > tiny dataset × 1 epoch
+    let stepped = Arc::new(AtomicBool::new(false));
+    let spec = JobSpec::new("synthetic")
+        .data_dir(data_dir())
+        .topology(2, 1, 1)
+        .steps(200)
+        .data_epochs(1)
+        .hook(Arc::new(StepWitness(stepped.clone())))
+        .build()
+        .unwrap();
+    let err = coordinator::train(&manifest, &spec).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("plan validation failed [data]"), "{msg}");
+    assert!(msg.contains("raise --epochs"), "{msg}");
+    assert_eq!(classify(&err), FailureKind::Config);
+    assert!(!stepped.load(Ordering::SeqCst), "a rank stepped past a blown data budget");
+
+    // a demand the epoch budget covers sails past the [data] check: the
+    // run then dies on the synthetic manifest's absent artifacts instead
+    let spec = JobSpec::new("synthetic")
+        .data_dir(data_dir())
+        .topology(2, 1, 1)
+        .steps(10) // 10 × 4 = 40 instances < one epoch
+        .data_epochs(1)
+        .build()
+        .unwrap();
+    let err = coordinator::train(&manifest, &spec).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(!msg.contains("plan validation failed [data]"), "{msg}");
+
+    // unbounded budget (the default) never trips, whatever the demand
+    let spec = JobSpec::new("synthetic")
+        .data_dir(data_dir())
+        .topology(2, 1, 1)
+        .steps(1_000_000)
+        .build()
+        .unwrap();
+    let err = coordinator::train(&manifest, &spec).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(!msg.contains("plan validation failed [data]"), "{msg}");
+}
+
+#[test]
+fn batch_plan_geometry_matches_the_engines() {
+    // one source of truth for instances/step: the [data] check, the
+    // token cursor and `optimus plans` all read this
+    let mm = tiny_mm(16); // batch = 2
+    let ips = |dp, ep, pp| {
+        ParallelismPlan::new(Topology { dp, ep, pp })
+            .batch_plan(&mm)
+            .instances_per_step()
+    };
+    assert_eq!(ips(4, 1, 1), 8); // DP: dp × batch
+    assert_eq!(ips(2, 2, 1), 8); // EP: world × batch
+    assert_eq!(ips(2, 1, 2), 8); // PP: dp × batch × micro_batches (2)
+    assert_eq!(ips(2, 2, 2), 16); // PP×EP: dp·ep × batch × micro_batches
+}
+
 /// Hook that records whether any training step ever executed.
 struct StepWitness(Arc<AtomicBool>);
 impl StepHook for StepWitness {
