@@ -59,6 +59,7 @@ fn main() -> optimus::Result<()> {
     let plan = ParallelPlan {
         dp: 128, ep: 12, pp: 8, micro_batches: 16,
         schedule: Schedule::OneFOneB, tokens_per_tile: 4096, fur: false,
+        wire_bytes: ParallelPlan::wire_bytes_for("bf16"),
     };
     let s = step_time(&MULA_220B, &hw, &plan, true);
     println!(

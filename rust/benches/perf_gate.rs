@@ -1,11 +1,15 @@
 //! CI perf gate: mula-tiny DP and PP×EP micro-benches, serial vs
 //! `--overlap` (the pipelined EPSO path), the checkpoint snapshot
-//! stall (sync vs async sharded checkpointing), and the data pipeline
-//! (prefetch-on vs prefetch-off steps/sec + `data_wait_secs`), written
-//! to `BENCH_PR5.json` at the repo root and gated against the committed
+//! stall (sync vs async sharded checkpointing), the data pipeline
+//! (prefetch-on vs prefetch-off steps/sec + `data_wait_secs`), and the
+//! mixed-precision lanes (`--dtype f32` vs `bf16`: steps/sec, collective
+//! bytes at wire width, checkpoint param-shard bytes), written to
+//! `BENCH_PR6.json` at the repo root and gated against the committed
 //! `ci/bench_baseline.json` — a steps/sec regression beyond the
 //! baseline's tolerance (default 10%) exits nonzero so the `perf-gate`
-//! workflow job fails.
+//! workflow job fails. The dtype byte accounting is deterministic, so
+//! its gate is unconditional: bf16 collective traffic and checkpoint
+//! param shards must land at ≤ 55% of the f32 lane's.
 //!
 //! Baseline entries that are absent, null or zero are *record-only*: the
 //! run prints the measured value and passes, so the gate bootstraps on
@@ -19,6 +23,7 @@ use optimus::comm::Topology;
 use optimus::config::Manifest;
 use optimus::coordinator::{self, JobSpec, TrainReport};
 use optimus::data::{corpus, preprocess};
+use optimus::runtime::Dtype;
 use optimus::util::bench::Report;
 use optimus::util::json::Json;
 use std::collections::BTreeMap;
@@ -40,7 +45,7 @@ fn repo_root() -> PathBuf {
 fn out_path() -> PathBuf {
     std::env::var("PERF_GATE_OUT")
         .map(PathBuf::from)
-        .unwrap_or_else(|_| repo_root().join("BENCH_PR5.json"))
+        .unwrap_or_else(|_| repo_root().join("BENCH_PR6.json"))
 }
 
 fn baseline_path() -> PathBuf {
@@ -139,8 +144,8 @@ fn main() -> optimus::Result<()> {
     out.insert(
         "bench".to_string(),
         Json::Str(
-            "perf-gate PR5: mula-tiny serial vs --overlap + ckpt snapshot stall \
-             + data prefetch on/off"
+            "perf-gate PR6: mula-tiny serial vs --overlap + ckpt snapshot stall \
+             + data prefetch on/off + --dtype f32 vs bf16"
                 .to_string(),
         ),
     );
@@ -300,6 +305,105 @@ fn main() -> optimus::Result<()> {
         );
     }
     data_table.print();
+
+    // --- mixed precision: --dtype f32 vs bf16 on the checkpointed DP
+    // case. Steps/sec gates like the other lanes (record-only until a
+    // baseline is committed); the byte columns are deterministic
+    // accounting, so their halving gate is unconditional. ---
+    let mut dt_table = Report::new(
+        "perf-gate — mixed precision, --dtype f32 vs bf16 (mula-tiny DP, ckpt every 4)",
+        &["dtype", "steps/sec", "comm MiB", "ckpt param MiB"],
+    );
+    let mut lanes: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+    for dt in [Dtype::F32, Dtype::Bf16] {
+        let ckdir = std::env::temp_dir().join(format!(
+            "optimus-perf-gate-dt-{dt}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&ckdir);
+        let mut b = JobSpec::new("mula-tiny")
+            .data_dir(data.clone())
+            .topo(Topology::dp_only(2))
+            .steps(STEPS)
+            .warmup_steps(2)
+            .engine_pool(2)
+            .dtype(dt)
+            .checkpoint_dir(&ckdir)
+            .ckpt_every(4);
+        if dt == Dtype::F32 {
+            // a clean all-f32 wire baseline: the paper's bf16
+            // gradient-reduction default would blur the comparison
+            b = b.bf16_grad_reduce(false);
+        }
+        let r = coordinator::train(&man, &b.build()?)?;
+        let sps = 1.0 / r.mean_step_secs().max(1e-9);
+        let comm = r.comm_bytes_in + r.comm_bytes_out;
+        // checkpoint size per dtype, on the param shards (the payload the
+        // dtype changes; AdamW moments stay f32 by design)
+        let saved = optimus::ckpt::SavedCheckpoint::load_latest(&ckdir)
+            .expect("checkpointed run left no committed checkpoint");
+        let ckpt_param_bytes: u64 = saved
+            .parts
+            .iter()
+            .filter(|p| p.name.starts_with("params."))
+            .map(|p| std::fs::metadata(saved.dir.join(&p.file)).map(|m| m.len()).unwrap_or(0))
+            .sum();
+        let key = dt.as_str();
+        dt_table.row(&[
+            key.to_string(),
+            format!("{sps:.2}"),
+            format!("{:.2}", comm as f64 / (1 << 20) as f64),
+            format!("{:.4}", ckpt_param_bytes as f64 / (1 << 20) as f64),
+        ]);
+        out.insert(format!("dp_{key}_steps_per_sec"), Json::Num(sps));
+        out.insert(format!("dp_{key}_comm_bytes"), Json::Num(comm as f64));
+        out.insert(
+            format!("dp_{key}_ckpt_param_bytes"),
+            Json::Num(ckpt_param_bytes as f64),
+        );
+        out.insert(format!("dp_{key}_ckpt_bytes"), Json::Num(r.ckpt_bytes as f64));
+        lanes.insert(key, (comm, ckpt_param_bytes));
+        let gate_key = format!("dp_{key}_steps_per_sec");
+        match baseline
+            .as_ref()
+            .and_then(|bl| bl.get(&gate_key))
+            .and_then(Json::as_f64)
+        {
+            Some(base) if base > 0.0 => {
+                let floor = base * (1.0 - tolerance);
+                if sps < floor {
+                    failures.push(format!(
+                        "{gate_key}: {sps:.2} steps/sec regressed more than \
+                         {:.0}% below baseline {base:.2} (floor {floor:.2})",
+                        tolerance * 100.0
+                    ));
+                } else {
+                    println!("perf-gate: {gate_key} {sps:.2} vs baseline {base:.2} — ok");
+                }
+            }
+            _ => println!("perf-gate: {gate_key} {sps:.2} — no baseline yet, record-only"),
+        }
+        let _ = std::fs::remove_dir_all(&ckdir);
+    }
+    dt_table.print();
+    let (f32_comm, f32_ckpt) = lanes["f32"];
+    let (bf16_comm, bf16_ckpt) = lanes["bf16"];
+    for (what, f, b) in [
+        ("collective bytes", f32_comm, bf16_comm),
+        ("checkpoint param bytes", f32_ckpt, bf16_ckpt),
+    ] {
+        if f == 0 || b as f64 > f as f64 * 0.55 {
+            failures.push(format!(
+                "bf16 {what} {b} exceed 55% of f32 {f} — half-width wire or \
+                 checkpoint payload regressed"
+            ));
+        } else {
+            println!(
+                "perf-gate: bf16 {what} {b} = {:.1}% of f32 {f} — ok",
+                100.0 * b as f64 / f as f64
+            );
+        }
+    }
 
     let path = out_path();
     std::fs::write(&path, Json::Obj(out).to_string())?;

@@ -23,7 +23,7 @@
 //! through the legacy [`super::Checkpoint`] path).
 
 use super::state::{PartPayload, TrainState};
-use super::{bytes_to_f32s, checksum};
+use super::{bytes_to_f32s, bytes_to_u16s, checksum};
 use crate::util::json::Json;
 use crate::Result;
 use anyhow::{anyhow, Context};
@@ -110,6 +110,10 @@ pub struct CkptStats {
     /// serialization time spent on the background writer (0 in sync mode
     /// — there the write time is the submitting thread's stall)
     pub write_secs: f64,
+    /// shard payload bytes serialized to disk (at storage width: bf16
+    /// param shards count 2 bytes/elem) — the per-dtype checkpoint-size
+    /// column of the perf gate
+    pub bytes_written: u64,
 }
 
 /// Sharded checkpoint writer shared by every rank of a run.
@@ -125,6 +129,7 @@ pub struct Checkpointer {
     /// committed step + 1; 0 = none yet
     last_commit: AtomicU64,
     write_micros: AtomicU64,
+    part_bytes: AtomicU64,
     error: Mutex<Option<String>>,
 }
 
@@ -165,6 +170,7 @@ impl Checkpointer {
             commits: AtomicU64::new(0),
             last_commit: AtomicU64::new(0),
             write_micros: AtomicU64::new(0),
+            part_bytes: AtomicU64::new(0),
             error: Mutex::new(None),
         });
         if policy.asynchronous {
@@ -274,18 +280,29 @@ impl Checkpointer {
                             Json::Num(r.len as f64),
                         ]));
                     }
-                    let file = format!("r{rank}.{}.bin", part.name);
-                    write_synced(&dir.join(&file), &bytes)?;
-                    let mut e = BTreeMap::new();
-                    e.insert("file".to_string(), Json::Str(file));
-                    e.insert("rank".to_string(), Json::Num(rank as f64));
-                    e.insert("name".to_string(), Json::Str(part.name.clone()));
-                    e.insert("runs".to_string(), Json::Arr(run_json));
-                    e.insert(
-                        "checksum".to_string(),
-                        Json::Str(format!("{:016x}", checksum(&bytes))),
-                    );
-                    entries.push(Json::Obj(e));
+                    entries.push(self.part_entry(&dir, rank, &part.name, "f32", bytes, run_json)?);
+                }
+                PartPayload::Bf16 { tensor, runs } => {
+                    // half-width payload: raw 2-byte storage words
+                    let data = tensor.as_bf16()?;
+                    let mut bytes =
+                        Vec::with_capacity(runs.iter().map(|r| r.len * 2).sum::<usize>());
+                    let mut run_json = Vec::new();
+                    for r in runs {
+                        let slice = data
+                            .get(r.local_start..r.local_start + r.len)
+                            .ok_or_else(|| {
+                                anyhow!("snapshot part `{}` run out of bounds", part.name)
+                            })?;
+                        for x in slice {
+                            bytes.extend_from_slice(&x.to_le_bytes());
+                        }
+                        run_json.push(Json::Arr(vec![
+                            Json::Num(r.global_start as f64),
+                            Json::Num(r.len as f64),
+                        ]));
+                    }
+                    entries.push(self.part_entry(&dir, rank, &part.name, "bf16", bytes, run_json)?);
                 }
             }
         }
@@ -307,6 +324,34 @@ impl Checkpointer {
             self.commit(step, ps)?;
         }
         Ok(())
+    }
+
+    /// Serialize one part's bytes into the staging dir and build its
+    /// manifest entry. `dtype` is recorded per part so resume validates
+    /// it (legacy manifests without the field read back as `"f32"`).
+    fn part_entry(
+        &self,
+        dir: &Path,
+        rank: usize,
+        name: &str,
+        dtype: &str,
+        bytes: Vec<u8>,
+        run_json: Vec<Json>,
+    ) -> Result<Json> {
+        let file = format!("r{rank}.{name}.bin");
+        write_synced(&dir.join(&file), &bytes)?;
+        self.part_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let mut e = BTreeMap::new();
+        e.insert("file".to_string(), Json::Str(file));
+        e.insert("rank".to_string(), Json::Num(rank as f64));
+        e.insert("name".to_string(), Json::Str(name.to_string()));
+        e.insert("dtype".to_string(), Json::Str(dtype.to_string()));
+        e.insert("runs".to_string(), Json::Arr(run_json));
+        e.insert(
+            "checksum".to_string(),
+            Json::Str(format!("{:016x}", checksum(&bytes))),
+        );
+        Ok(Json::Obj(e))
     }
 
     /// Phase 2: manifest written **last** inside the staging dir, fsynced,
@@ -362,6 +407,7 @@ impl Checkpointer {
             commits: self.commits.load(Ordering::Relaxed),
             last_commit_step: if lc == 0 { None } else { Some(lc as usize - 1) },
             write_secs: self.write_micros.load(Ordering::Relaxed) as f64 / 1e6,
+            bytes_written: self.part_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -414,6 +460,9 @@ pub struct SavedPart {
     pub rank: usize,
     pub name: String,
     pub file: String,
+    /// element dtype of the payload (`"f32"` / `"bf16"`); manifests
+    /// written before the mixed-precision PR read back as `"f32"`
+    pub dtype: String,
     /// (global_start, len) per run, in file order
     pub runs: Vec<(usize, usize)>,
     pub checksum: String,
@@ -478,6 +527,11 @@ impl SavedCheckpoint {
                     .get("file")
                     .and_then(Json::as_str)
                     .ok_or_else(|| bad("part without file"))?
+                    .to_string(),
+                dtype: p
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
                     .to_string(),
                 runs,
                 checksum: p
@@ -558,16 +612,20 @@ pub fn inspect(root: &Path) -> Result<String> {
                             all_ok = false;
                             "CHECKSUM MISMATCH"
                         }
-                        Ok(b) if bytes_to_f32s(&b).is_err() => {
+                        Ok(b)
+                            if (p.dtype == "bf16" && bytes_to_u16s(&b).is_err())
+                                || (p.dtype != "bf16" && bytes_to_f32s(&b).is_err()) =>
+                        {
                             all_ok = false;
                             "TRUNCATED"
                         }
                         Ok(_) => "ok",
                     };
                     lines.push_str(&format!(
-                        "      {:<28} rank {:<3} runs {:<3} elems {:<8} fnv {}  {status}\n",
+                        "      {:<28} rank {:<3} {:<5} runs {:<3} elems {:<8} fnv {}  {status}\n",
                         p.file,
                         p.rank,
+                        p.dtype,
                         p.runs.len(),
                         elems,
                         p.checksum

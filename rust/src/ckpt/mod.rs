@@ -74,6 +74,28 @@ pub(crate) fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
         .collect())
 }
 
+pub(crate) fn u16s_to_bytes(v: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 2);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian bf16 storage words. An odd byte length is a
+/// **hard decode error**, mirroring [`bytes_to_f32s`].
+pub(crate) fn bytes_to_u16s(b: &[u8]) -> Result<Vec<u16>> {
+    if b.len() % 2 != 0 {
+        return Err(anyhow!(
+            "bf16 payload length {} is not a multiple of 2 — truncated or corrupt",
+            b.len()
+        ));
+    }
+    Ok(b.chunks_exact(2)
+        .map(|w| u16::from_le_bytes(w.try_into().unwrap()))
+        .collect())
+}
+
 /// Legacy full or model-only checkpoint payload (one global blob). New
 /// training-state checkpoints go through the sharded [`Checkpointer`];
 /// this type remains for persistent model-only checkpoints and for
@@ -442,6 +464,62 @@ mod tests {
         std::fs::write(d.join("meta.json"), meta).unwrap();
         let e = format!("{:#}", Checkpoint::read(&d).unwrap_err());
         assert!(e.contains("multiple of 4"), "{e}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn odd_length_bf16_payload_is_a_hard_decode_error() {
+        // satellite: a bf16 shard with an odd byte count is truncated or
+        // corrupt — never silently dropped to the nearest whole word
+        let e = bytes_to_u16s(&[0u8; 3]).unwrap_err().to_string();
+        assert!(e.contains("multiple of 2"), "{e}");
+        assert!(e.contains("3"), "{e}");
+        assert_eq!(bytes_to_u16s(&[]).unwrap(), Vec::<u16>::new());
+        assert_eq!(bytes_to_u16s(&[0x80, 0x3f]).unwrap(), vec![0x3f80]);
+    }
+
+    /// bf16 parameter shards commit at half width, record their dtype in
+    /// the manifest, decode exactly on resume, and gate a `--dtype f32`
+    /// resume with the stable `[dtype]` string.
+    #[test]
+    fn bf16_checkpoint_half_width_roundtrip_and_dtype_gate() {
+        let d = tmp("bf16");
+        let n = 32usize;
+        let vals: Vec<f32> = (0..n).map(|i| (i as f32 * 0.31).sin()).collect();
+        let t = Tensor::from_f32(crate::runtime::Dtype::Bf16, vals, vec![n]);
+        let mut st = TrainState::default();
+        st.push_bf16(
+            "params.s0",
+            t.clone(),
+            vec![GlobalRun { local_start: 0, global_start: 0, len: n }],
+        );
+        let ck = Checkpointer::new(
+            &d,
+            "mula-tiny/dp1-ep1-pp1/so/1f1b/mb2/allgather/bf16",
+            1,
+            &sync_policy(&d),
+        )
+        .unwrap();
+        ck.submit(1, 0, st).unwrap();
+        ck.drain().unwrap();
+        // half-width payload: 2 bytes per parameter on disk, and the
+        // stats feed the perf gate's per-dtype checkpoint-size column
+        let shard = d.join("ckpt-00000001").join("r0.params.s0.bin");
+        assert_eq!(std::fs::metadata(&shard).unwrap().len(), 2 * n as u64);
+        assert_eq!(ck.stats().bytes_written, 2 * n as u64);
+        let saved = SavedCheckpoint::load_latest(&d).unwrap();
+        assert_eq!(saved.parts[0].dtype, "bf16");
+        let rs = ResumeState::open(&saved).unwrap();
+        assert_eq!(rs.param_dtype(), "bf16");
+        rs.validate_dtype("bf16").unwrap();
+        let e = rs.validate_dtype("f32").unwrap_err().to_string();
+        assert!(e.contains("checkpoint resume failed [dtype]"), "{e}");
+        // bf16 storage decodes exactly: the assembled global vector is
+        // bit-identical to the tensor's own decoded view
+        let got = rs.assemble_params(n).unwrap();
+        for (g, v) in got.iter().zip(t.to_f32_vec().unwrap().iter()) {
+            assert_eq!(g.to_bits(), v.to_bits());
+        }
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -23,7 +23,8 @@
 
 use super::checkpointer::SavedCheckpoint;
 use super::state::{GlobalRun, StatePart};
-use super::{bytes_to_f32s, checksum};
+use super::{bytes_to_f32s, bytes_to_u16s, checksum};
+use crate::util::bf16s_to_f32s;
 use crate::Result;
 use anyhow::anyhow;
 use std::collections::BTreeMap;
@@ -40,6 +41,9 @@ struct LoadedRun {
 pub struct ResumeState {
     step: usize,
     plan: String,
+    /// element dtype the `params` shards were saved in ("f32"/"bf16");
+    /// legacy manifests without the field read back as "f32"
+    param_dtype: String,
     comps: BTreeMap<String, Vec<LoadedRun>>,
     pub scalars: BTreeMap<String, f64>,
 }
@@ -48,6 +52,7 @@ impl ResumeState {
     /// Load and verify every shard of `saved`.
     pub fn open(saved: &SavedCheckpoint) -> Result<ResumeState> {
         let mut comps: BTreeMap<String, Vec<LoadedRun>> = BTreeMap::new();
+        let mut param_dtype: Option<String> = None;
         for p in &saved.parts {
             let bytes = std::fs::read(saved.dir.join(&p.file)).map_err(|_| {
                 anyhow!(
@@ -63,9 +68,28 @@ impl ResumeState {
                     p.file
                 ));
             }
-            let vals = bytes_to_f32s(&bytes).map_err(|e| {
+            // decode at the part's recorded storage width; bf16 shards
+            // decode exactly into the f32 working representation
+            let vals = match p.dtype.as_str() {
+                "bf16" => bytes_to_u16s(&bytes).map(|w| bf16s_to_f32s(&w)),
+                _ => bytes_to_f32s(&bytes),
+            }
+            .map_err(|e| {
                 anyhow!("checkpoint resume failed [checksum]: shard `{}`: {e}", p.file)
             })?;
+            if StatePart::component(&p.name) == "params" {
+                match &param_dtype {
+                    None => param_dtype = Some(p.dtype.clone()),
+                    Some(d) if d != &p.dtype => {
+                        return Err(anyhow!(
+                            "checkpoint resume failed [dtype]: parameter shards mix \
+                             dtypes `{d}` and `{}`",
+                            p.dtype
+                        ))
+                    }
+                    Some(_) => {}
+                }
+            }
             let total: usize = p.runs.iter().map(|r| r.1).sum();
             if vals.len() != total {
                 return Err(anyhow!(
@@ -89,9 +113,31 @@ impl ResumeState {
         Ok(ResumeState {
             step: saved.step,
             plan: saved.plan.clone(),
+            param_dtype: param_dtype.unwrap_or_else(|| "f32".to_string()),
             comps,
             scalars: saved.scalars.clone(),
         })
+    }
+
+    /// Element dtype the parameter shards were saved in (`"f32"` /
+    /// `"bf16"`).
+    pub fn param_dtype(&self) -> &str {
+        &self.param_dtype
+    }
+
+    /// `[dtype]` preflight: the resuming plan must run the dtype the
+    /// parameter shards were saved in — silently up- or down-converting
+    /// params at resume would shift the loss trajectory without any
+    /// record of it.
+    pub fn validate_dtype(&self, plan_dtype: &str) -> Result<()> {
+        if self.param_dtype != plan_dtype {
+            return Err(anyhow!(
+                "checkpoint resume failed [dtype]: checkpoint holds `{}` parameter \
+                 shards, the resuming plan is --dtype {plan_dtype}",
+                self.param_dtype
+            ));
+        }
+        Ok(())
     }
 
     /// Step the checkpoint was captured after; resume continues at

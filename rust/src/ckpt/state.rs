@@ -107,6 +107,10 @@ pub enum PartPayload {
     /// (`local_start` indexes the tensor). Capturing one is an `Arc`
     /// bump, never a data copy.
     F32 { tensor: Tensor, runs: Vec<GlobalRun> },
+    /// bf16 parameter shards, persisted as raw 2-byte storage words —
+    /// the mixed-precision run's half-width checkpoint payload. Same
+    /// zero-copy capture discipline as `F32`.
+    Bf16 { tensor: Tensor, runs: Vec<GlobalRun> },
     U64(u64),
     F64(f64),
 }
@@ -140,6 +144,13 @@ impl TrainState {
         });
     }
 
+    pub fn push_bf16(&mut self, name: impl Into<String>, tensor: Tensor, runs: Vec<GlobalRun>) {
+        self.parts.push(StatePart {
+            name: name.into(),
+            payload: PartPayload::Bf16 { tensor, runs },
+        });
+    }
+
     pub fn push_u64(&mut self, name: impl Into<String>, v: u64) {
         self.parts.push(StatePart { name: name.into(), payload: PartPayload::U64(v) });
     }
@@ -170,9 +181,19 @@ pub fn capture_rank_state(
     for (i, seg) in opt.export_state().into_iter().enumerate() {
         // params: this rank persists exactly its owned shard of the
         // segment; after the optimizer's allgather every replica holds
-        // the owner's bytes, so the union over ranks is exact
+        // the owner's bytes, so the union over ranks is exact. A bf16
+        // run persists the raw 2-byte storage words (half-width payload;
+        // the f32 masters are derived state and never saved — resume
+        // re-seeds them from these params, the tolerance contract)
         let runs = map.project(seg.local_start, seg.len);
-        st.push_f32(format!("params.s{i}"), params.clone(), runs.clone());
+        match params.dtype() {
+            crate::runtime::Dtype::Bf16 => {
+                st.push_bf16(format!("params.s{i}"), params.clone(), runs.clone())
+            }
+            crate::runtime::Dtype::F32 => {
+                st.push_f32(format!("params.s{i}"), params.clone(), runs.clone())
+            }
+        }
         // moments: same global geometry, but the m/v vectors are
         // shard-local — rebase the run starts onto [0, len)
         let rebased: Vec<GlobalRun> = runs

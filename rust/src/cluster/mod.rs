@@ -50,6 +50,21 @@ pub struct ParallelPlan {
     /// tokens per tile per step (sequence × local batch)
     pub tokens_per_tile: usize,
     pub fur: bool,
+    /// bytes per element on gradient/activation wires — follows the plan
+    /// dtype: 2.0 for bf16 (the paper's production precision, and the
+    /// default every projection in the paper assumes), 4.0 for f32
+    pub wire_bytes: f64,
+}
+
+impl ParallelPlan {
+    /// Wire width for a plan dtype string (`"f32"` / `"bf16"`).
+    pub fn wire_bytes_for(dtype: &str) -> f64 {
+        if dtype == "f32" {
+            4.0
+        } else {
+            2.0
+        }
+    }
 }
 
 /// Expert-load imbalance factor: max/mean load over experts when routing
@@ -115,8 +130,8 @@ pub fn step_time(m: &MulaSpec, hw: &Aurora, plan: &ParallelPlan, epso: bool) -> 
         / (hw.tile_flops * hw.gemm_eff);
 
     // ---- DP gradient reduce-scatter + param allgather ----
-    // bf16 gradients over the model's per-stage parameters
-    let bytes = 2.0 * (m.param_count() / plan.pp) as f64;
+    // gradients at the plan's wire width over the per-stage parameters
+    let bytes = plan.wire_bytes * (m.param_count() / plan.pp) as f64;
     // DP spans node groups (EP fills the node, PP spans nodes), so the
     // gradient ring runs over the DP degree itself; its bandwidth term
     // saturates at 2V/BW — this saturation is what produces the paper's
@@ -133,7 +148,8 @@ pub fn step_time(m: &MulaSpec, hw: &Aurora, plan: &ParallelPlan, epso: bool) -> 
 
     // ---- EP Stage-1 exchange (allgather within the node) ----
     let h = m.hidden as f64;
-    let ep_bytes = tokens_local * plan.ep as f64 * h * 2.0 * 2.0; // x + grads
+    // x + grads, each at the plan's wire width
+    let ep_bytes = tokens_local * plan.ep as f64 * h * plan.wire_bytes * 2.0;
     let ep_comm = if plan.ep > 1 { ep_bytes / hw.xelink_bw } else { 0.0 };
 
     // ---- PP bubble ----
@@ -176,6 +192,7 @@ pub fn scaling_efficiency(
         schedule: Schedule::OneFOneB,
         tokens_per_tile: 4096,
         fur,
+        wire_bytes: 2.0,
     };
     let fix = |t: usize| {
         let mut p = plan(t);
@@ -286,9 +303,34 @@ mod tests {
             schedule: Schedule::OneFOneB,
             tokens_per_tile: 4096,
             fur: false,
+            wire_bytes: 2.0,
         };
         let s = step_time(&MULA_220B, &hw, &plan, true);
         assert!(s.compute > 0.0 && s.total() > s.compute);
         assert!(s.compute / s.total() > 0.35, "{s:?}");
+    }
+
+    #[test]
+    fn f32_wires_cost_more_comm_than_bf16() {
+        let hw = Aurora::default();
+        let mk = |wire_bytes: f64| ParallelPlan {
+            dp: 32,
+            ep: 12,
+            pp: 8,
+            micro_batches: 16,
+            schedule: Schedule::OneFOneB,
+            tokens_per_tile: 4096,
+            fur: false,
+            wire_bytes,
+        };
+        let bf16 = step_time(&MULA_220B, &hw, &mk(2.0), true);
+        let f32w = step_time(&MULA_220B, &hw, &mk(4.0), true);
+        // compute and bubble are dtype-independent in the model; both
+        // wire terms must grow with the wider dtype
+        assert_eq!(bf16.compute, f32w.compute);
+        assert!(f32w.dp_comm > bf16.dp_comm, "{} vs {}", f32w.dp_comm, bf16.dp_comm);
+        assert!(f32w.ep_comm > bf16.ep_comm, "{} vs {}", f32w.ep_comm, bf16.ep_comm);
+        assert_eq!(ParallelPlan::wire_bytes_for("f32"), 4.0);
+        assert_eq!(ParallelPlan::wire_bytes_for("bf16"), 2.0);
     }
 }

@@ -8,7 +8,7 @@
 //! training.
 
 use super::runtime::{CommHandle, CommRuntime};
-use crate::util::bf16_round;
+use crate::util::{bf16s_to_f32s, f32s_to_bf16s};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -20,16 +20,55 @@ pub enum ReduceDtype {
     Bf16,
 }
 
+/// What actually travels the simulated fabric: 4-byte f32 words or 2-byte
+/// bf16 words. A bf16 collective deposits and publishes `Bf16` frames, so
+/// wire-byte accounting (and the perf gate's bytes-moved column) sees the
+/// real half-width payload instead of rounded values in f32 buffers.
+#[derive(Clone, Debug)]
+enum Wire {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
+
+impl Wire {
+    fn encode(data: Vec<f32>, dt: ReduceDtype) -> Wire {
+        match dt {
+            ReduceDtype::F32 => Wire::F32(data),
+            ReduceDtype::Bf16 => Wire::Bf16(f32s_to_bf16s(&data)),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Wire::F32(v) => v.len() * 4,
+            Wire::Bf16(v) => v.len() * 2,
+        }
+    }
+
+    /// Decode to f32 values (exact for bf16 frames).
+    fn into_f32(self) -> Vec<f32> {
+        match self {
+            Wire::F32(v) => v,
+            Wire::Bf16(v) => bf16s_to_f32s(&v),
+        }
+    }
+
+    fn to_f32(&self) -> Vec<f32> {
+        match self {
+            Wire::F32(v) => v.clone(),
+            Wire::Bf16(v) => bf16s_to_f32s(v),
+        }
+    }
+}
+
 #[derive(Default)]
 struct RoundState {
     round: u64,
     arrived: usize,
     departed: usize,
-    contribs: Vec<Option<Vec<f32>>>,
+    contribs: Vec<Option<Wire>>,
     /// full result (allreduce/allgather) — members slice their share
-    result: Option<Arc<Vec<f32>>>,
-    /// all2all transposed buffers, one per destination
-    a2a: Vec<Option<Vec<f32>>>,
+    result: Option<Arc<Wire>>,
 }
 
 /// Byte/operation counters for calibration of the cluster model.
@@ -45,7 +84,8 @@ pub struct Group {
     state: Mutex<RoundState>,
     cv: Condvar,
     ops: AtomicU64,
-    bytes: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
     /// set when a member died: all waiting/future members panic instead
     /// of blocking forever (a dead node hangs its peers; the launcher
     /// classifies the resulting abort as a hard failure)
@@ -56,14 +96,14 @@ impl Group {
     pub fn new(size: usize) -> Arc<Group> {
         assert!(size > 0);
         let mut st = RoundState::default();
-        st.contribs = vec![None; size];
-        st.a2a = vec![None; size];
+        st.contribs = (0..size).map(|_| None).collect();
         Arc::new(Group {
             size,
             state: Mutex::new(st),
             cv: Condvar::new(),
             ops: AtomicU64::new(0),
-            bytes: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
             poisoned: std::sync::atomic::AtomicBool::new(false),
         })
     }
@@ -86,17 +126,24 @@ impl Group {
         }
     }
 
+    /// Both-direction traffic counters at actual wire width: `bytes_in`
+    /// is what this group's members deposited onto the fabric, `bytes_out`
+    /// what they picked up (the published result, per member).
     pub fn stats(&self) -> CommStats {
         CommStats {
             ops: self.ops.load(Ordering::Relaxed),
-            bytes_in: self.bytes.load(Ordering::Relaxed),
-            bytes_out: 0,
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
         }
     }
 
-    fn account(&self, bytes: usize) {
+    fn account_in(&self, bytes: usize) {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn account_out(&self, bytes: usize) {
+        self.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
     /// Core rendezvous: deposit `mine`, the last arrival runs `combine`
@@ -106,13 +153,13 @@ impl Group {
     /// round r+1 parks until round r has fully drained (a departure
     /// requires the result to be set, and the reset only happens after
     /// all `size` departures — so deposits can never leak across rounds).
-    fn rendezvous<F>(&self, rank: usize, mine: Vec<f32>, combine: F) -> Arc<Vec<f32>>
+    fn rendezvous<F>(&self, rank: usize, mine: Wire, combine: F) -> Arc<Wire>
     where
-        F: FnOnce(&mut Vec<Option<Vec<f32>>>) -> Vec<f32>,
+        F: FnOnce(&mut Vec<Option<Wire>>) -> Wire,
     {
         assert!(rank < self.size);
         self.check_poison();
-        self.account(mine.len() * 4);
+        self.account_in(mine.bytes());
         let mut st = self.state.lock().unwrap();
         // Previous round still draining (result published but not all
         // members have departed): wait for the reset.
@@ -136,6 +183,7 @@ impl Group {
             }
         }
         let out = Arc::clone(st.result.as_ref().unwrap());
+        self.account_out(out.bytes());
         st.departed += 1;
         if st.departed == self.size {
             st.arrived = 0;
@@ -150,30 +198,23 @@ impl Group {
         out
     }
 
-    /// Sum-allreduce (optionally rounding each contribution to bf16,
-    /// reproducing the paper's bf16 gradient reduction).
-    pub fn allreduce(&self, rank: usize, mut mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        if dt == ReduceDtype::Bf16 {
-            for v in mine.iter_mut() {
-                *v = bf16_round(*v);
-            }
-        }
-        let res = self.rendezvous(rank, mine, |contribs| {
-            let mut acc = contribs[0].take().unwrap();
+    /// Sum-allreduce. Under `ReduceDtype::Bf16` the deposited frames and
+    /// the published result are genuine 2-byte bf16 payloads (the paper's
+    /// bf16 gradient reduction); the sum itself runs in f32 after an exact
+    /// decode, so the values match the old round-then-sum-then-round
+    /// simulation bit for bit while the wire moves half the bytes.
+    pub fn allreduce(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
+        let res = self.rendezvous(rank, Wire::encode(mine, dt), |contribs| {
+            let mut acc = contribs[0].take().unwrap().into_f32();
             for c in contribs.iter_mut().skip(1) {
-                let c = c.take().unwrap();
+                let c = c.take().unwrap().into_f32();
                 for (a, b) in acc.iter_mut().zip(c.iter()) {
                     *a += *b;
                 }
             }
-            if dt == ReduceDtype::Bf16 {
-                for v in acc.iter_mut() {
-                    *v = bf16_round(*v);
-                }
-            }
-            acc
+            Wire::encode(acc, dt)
         });
-        res.as_ref().clone()
+        res.to_f32()
     }
 
     /// Mean-allreduce (gradient averaging across data-parallel ranks).
@@ -223,18 +264,50 @@ impl Group {
     /// Allgather: concatenation of every rank's (equal-length or ragged)
     /// contribution, in rank order.
     pub fn allgather(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        let res = self.rendezvous(rank, mine, |contribs| {
+        let res = self.rendezvous(rank, Wire::F32(mine), |contribs| {
             let mut out = Vec::new();
             for c in contribs.iter_mut() {
-                out.extend_from_slice(c.take().unwrap().as_slice());
+                out.extend_from_slice(&c.take().unwrap().into_f32());
             }
-            out
+            Wire::F32(out)
         });
-        res.as_ref().clone()
+        res.to_f32()
+    }
+
+    /// Allgather of bf16 storage bits: contributions travel and
+    /// concatenate as 2-byte words (the mixed-precision optimizer's param
+    /// allgather wire).
+    pub fn allgather_bf16(&self, rank: usize, mine: Vec<u16>) -> Vec<u16> {
+        let res = self.rendezvous(rank, Wire::Bf16(mine), |contribs| {
+            let mut out = Vec::new();
+            for c in contribs.iter_mut() {
+                match c.take().unwrap() {
+                    Wire::Bf16(v) => out.extend_from_slice(&v),
+                    Wire::F32(v) => out.extend(f32s_to_bf16s(&v)),
+                }
+            }
+            Wire::Bf16(out)
+        });
+        match res.as_ref() {
+            Wire::Bf16(v) => v.clone(),
+            Wire::F32(v) => f32s_to_bf16s(v),
+        }
     }
 
     /// Allgather for i32 payloads (routing indices) — transported as f32
     /// bit patterns to reuse the same fabric.
+    /// Allgather over f32 values with a dtype-selected wire: `Bf16`
+    /// rounds once (RNE) into genuine 2-byte frames — half the traffic
+    /// the byte counters see — and decodes exactly on pickup.
+    pub fn allgather_values(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
+        match dt {
+            ReduceDtype::F32 => self.allgather(rank, mine),
+            ReduceDtype::Bf16 => {
+                bf16s_to_f32s(&self.allgather_bf16(rank, f32s_to_bf16s(&mine)))
+            }
+        }
+    }
+
     pub fn allgather_i32(&self, rank: usize, mine: &[i32]) -> Vec<i32> {
         let enc: Vec<f32> = mine.iter().map(|v| f32::from_bits(*v as u32)).collect();
         self.allgather(rank, enc)
@@ -252,6 +325,14 @@ impl Group {
         out
     }
 
+    /// [`Group::allgather_shards`] over bf16 storage bits — the ZeRO param
+    /// allgather at half wire width.
+    pub fn allgather_shards_bf16(&self, rank: usize, mine: Vec<u16>, total: usize) -> Vec<u16> {
+        let out = self.allgather_bf16(rank, mine);
+        debug_assert_eq!(out.len(), total);
+        out
+    }
+
     /// All-to-all: `mine[d]` goes to rank d; returns the buffers destined
     /// to `rank`, in source order. Used by the EP `ep_comm=all2all`
     /// ablation (paper Stage 1 compares all2all vs allgather).
@@ -265,12 +346,12 @@ impl Group {
         for d in mine.iter() {
             flat.extend_from_slice(d);
         }
-        let all = self.rendezvous(rank, flat, |contribs| {
+        let all = self.rendezvous(rank, Wire::F32(flat), |contribs| {
             // concatenate everyone's flattened frame, with a per-source
             // offset directory at the front
             let mut out = Vec::new();
             let frames: Vec<Vec<f32>> =
-                contribs.iter_mut().map(|c| c.take().unwrap()).collect();
+                contribs.iter_mut().map(|c| c.take().unwrap().into_f32()).collect();
             out.push(frames.len() as f32);
             let mut off = Vec::new();
             let mut pos = 1.0 + frames.len() as f32;
@@ -282,10 +363,11 @@ impl Group {
             for f in &frames {
                 out.extend_from_slice(f);
             }
-            out
+            Wire::F32(out)
         });
         // decode: for each source frame, pick the chunk destined to us
-        let all = all.as_ref();
+        let all = all.to_f32();
+        let all = all.as_slice();
         let nsrc = all[0] as usize;
         let mut result = Vec::with_capacity(nsrc);
         for s in 0..nsrc {
@@ -305,15 +387,15 @@ impl Group {
     /// Broadcast from `root` (model broadcasting, paper §4).
     pub fn broadcast(&self, rank: usize, root: usize, mine: Vec<f32>) -> Vec<f32> {
         let payload = if rank == root { mine } else { Vec::new() };
-        let res = self.rendezvous(rank, payload, |contribs| {
+        let res = self.rendezvous(rank, Wire::F32(payload), |contribs| {
             contribs[root].take().unwrap()
         });
-        res.as_ref().clone()
+        res.to_f32()
     }
 
     /// Barrier.
     pub fn barrier(&self, rank: usize) {
-        let _ = self.rendezvous(rank, Vec::new(), |_| Vec::new());
+        let _ = self.rendezvous(rank, Wire::F32(Vec::new()), |_| Wire::F32(Vec::new()));
     }
 
     // -- nonblocking variants -------------------------------------------
@@ -358,19 +440,29 @@ impl Group {
         rt.submit(move || self.allgather(rank, mine))
     }
 
+    /// Nonblocking [`Group::allgather_bf16`].
+    pub fn allgather_bf16_start(
+        self: Arc<Self>,
+        rt: &CommRuntime,
+        rank: usize,
+        mine: Vec<u16>,
+    ) -> CommHandle<Vec<u16>> {
+        rt.submit(move || self.allgather_bf16(rank, mine))
+    }
+
     /// Max-allreduce (used for global NaN/overflow voting in ft).
     pub fn allreduce_max(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        let res = self.rendezvous(rank, mine, |contribs| {
-            let mut acc = contribs[0].take().unwrap();
+        let res = self.rendezvous(rank, Wire::F32(mine), |contribs| {
+            let mut acc = contribs[0].take().unwrap().into_f32();
             for c in contribs.iter_mut().skip(1) {
-                let c = c.take().unwrap();
+                let c = c.take().unwrap().into_f32();
                 for (a, b) in acc.iter_mut().zip(c.iter()) {
                     *a = a.max(*b);
                 }
             }
-            acc
+            Wire::F32(acc)
         });
-        res.as_ref().clone()
+        res.to_f32()
     }
 }
 
@@ -480,6 +572,42 @@ mod tests {
             // bf16(1.0009765625) = 1.0 -> sum 2.0
             assert_eq!(o, vec![2.0]);
         }
+    }
+
+    #[test]
+    fn traffic_accounting_tracks_wire_width_both_directions() {
+        // f32: 8 elems × 4 B deposited and picked up per rank
+        let g = Group::new(2);
+        let gs = Arc::clone(&g);
+        spawn_ranks(2, move |r| g.allreduce(r, vec![1.0f32; 8], ReduceDtype::F32));
+        let st = gs.stats();
+        assert_eq!(st.ops, 2);
+        assert_eq!(st.bytes_in, 2 * 8 * 4);
+        assert_eq!(st.bytes_out, 2 * 8 * 4);
+        // bf16: the same collective moves exactly half the bytes each way
+        let g = Group::new(2);
+        let gs = Arc::clone(&g);
+        spawn_ranks(2, move |r| g.allreduce(r, vec![1.0f32; 8], ReduceDtype::Bf16));
+        let st = gs.stats();
+        assert_eq!(st.bytes_in, 2 * 8 * 2);
+        assert_eq!(st.bytes_out, 2 * 8 * 2);
+    }
+
+    #[test]
+    fn bf16_allgather_concats_storage_bits() {
+        use crate::util::{bf16_to_f32, f32_to_bf16};
+        let g = Group::new(2);
+        let gs = Arc::clone(&g);
+        let outs = spawn_ranks(2, move |r| {
+            let mine = vec![f32_to_bf16(r as f32 + 0.5); 2];
+            g.allgather_bf16(r, mine)
+        });
+        for o in outs {
+            let vals: Vec<f32> = o.iter().map(|&b| bf16_to_f32(b)).collect();
+            assert_eq!(vals, vec![0.5, 0.5, 1.5, 1.5]);
+        }
+        // 4 elems × 2 B out per rank
+        assert_eq!(gs.stats().bytes_out, 2 * 4 * 2);
     }
 
     #[test]

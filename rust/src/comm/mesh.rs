@@ -10,7 +10,7 @@
 //! - **dpep group** — ranks sharing pp: EPSO's non-expert sharding domain
 //! - **world**     — everything (barriers, health votes)
 
-use super::group::Group;
+use super::group::{CommStats, Group};
 use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -109,6 +109,27 @@ impl Mesh {
             g.poison();
         }
         self.world.poison();
+    }
+
+    /// Aggregate traffic across every group of the mesh (dp, ep, dpep and
+    /// world) — the bytes-moved number behind the perf gate's per-dtype
+    /// column. Counters are at actual wire width (bf16 collectives move
+    /// 2-byte words).
+    pub fn traffic(&self) -> CommStats {
+        let mut total = CommStats::default();
+        for g in self
+            .dp_groups
+            .iter()
+            .chain(self.ep_groups.iter())
+            .chain(self.dpep_groups.iter())
+            .chain(std::iter::once(&self.world))
+        {
+            let s = g.stats();
+            total.ops += s.ops;
+            total.bytes_in += s.bytes_in;
+            total.bytes_out += s.bytes_out;
+        }
+        total
     }
 
     /// Pipeline neighbours (same dp, ep): (prev, next) ranks if any.

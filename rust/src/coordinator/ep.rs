@@ -5,7 +5,8 @@
 //! regular. Both policies are implemented; `ep_comm` selects one and the
 //! ablation bench compares them.
 
-use crate::comm::Group;
+use crate::comm::{Group, ReduceDtype};
+use crate::util::bf16_round;
 use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,15 +44,19 @@ pub fn fur_indices(t: usize, k: usize, n_experts: usize) -> Vec<i32> {
 
 /// Stage-1 exchange via allgather: gathers tokens, routing weights and
 /// indices across the EP group. Returns (x_all, w_all, idx_all).
+/// `wire` selects the activation payload width: `Bf16` ships token
+/// activations and routing weights as genuine 2-byte frames (the mixed
+/// precision plan's activation wire); indices always travel as i32.
 pub fn exchange_allgather(
     group: &Arc<Group>,
     ep_rank: usize,
     x_local: Vec<f32>,
     w_local: Vec<f32>,
     idx_local: &[i32],
+    wire: ReduceDtype,
 ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
-    let x_all = group.allgather(ep_rank, x_local);
-    let w_all = group.allgather(ep_rank, w_local);
+    let x_all = group.allgather_values(ep_rank, x_local, wire);
+    let w_all = group.allgather_values(ep_rank, w_local, wire);
     let idx_all = group.allgather_i32(ep_rank, idx_local);
     (x_all, w_all, idx_all)
 }
@@ -64,6 +69,14 @@ pub fn exchange_allgather(
 /// The *communication volume* is what differs (tracked by the group's
 /// byte counters); the kernels' numeric result is identical because
 /// non-local rows never contribute.
+///
+/// `wire = Bf16` rounds activation/weight values through bf16 before the
+/// frames are built, so both exchange policies see the same numbers
+/// under a mixed-precision plan. The all2all frames themselves stay
+/// f32-width on the wire: each row interleaves a slot header and raw
+/// i32 index bits with the payload, and halving only the value lanes of
+/// an irregular frame is not worth the complexity when the paper's
+/// production policy is allgather (which does ship 2-byte frames).
 #[allow(clippy::too_many_arguments)]
 pub fn exchange_all2all(
     group: &Arc<Group>,
@@ -71,10 +84,16 @@ pub fn exchange_all2all(
     ep: usize,
     n_local: usize, // experts per rank (NR)
     hidden: usize,
-    x_local: Vec<f32>,
-    w_local: Vec<f32>,
+    mut x_local: Vec<f32>,
+    mut w_local: Vec<f32>,
     idx_local: &[i32],
+    wire: ReduceDtype,
 ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    if wire == ReduceDtype::Bf16 {
+        for v in x_local.iter_mut().chain(w_local.iter_mut()) {
+            *v = bf16_round(*v);
+        }
+    }
     if hidden == 0 || x_local.is_empty() {
         // empty micro-batch slice: `t_local` would be 0 and `k =
         // idx_local.len() / t_local` divides by zero. The rank still
@@ -159,7 +178,8 @@ mod tests {
     fn all2all_empty_microbatch_returns_empty_frames() {
         // single rank, empty slice: must not divide by zero
         let g1 = crate::comm::Group::new(1);
-        let (x, w, i) = exchange_all2all(&g1, 0, 1, 2, 4, Vec::new(), Vec::new(), &[]);
+        let (x, w, i) =
+            exchange_all2all(&g1, 0, 1, 2, 4, Vec::new(), Vec::new(), &[], ReduceDtype::F32);
         assert!(x.is_empty() && w.is_empty() && i.is_empty());
 
         // every rank of a group empty: all still rendezvous and return
@@ -169,7 +189,17 @@ mod tests {
             .map(|r| {
                 let group = std::sync::Arc::clone(&group);
                 std::thread::spawn(move || {
-                    exchange_all2all(&group, r, ep, 2, 4, Vec::new(), Vec::new(), &[])
+                    exchange_all2all(
+                        &group,
+                        r,
+                        ep,
+                        2,
+                        4,
+                        Vec::new(),
+                        Vec::new(),
+                        &[],
+                        ReduceDtype::F32,
+                    )
                 })
             })
             .collect();
@@ -215,7 +245,7 @@ mod tests {
                 let (x, w, id) = (xs[r].clone(), ws[r].clone(), ids[r].clone());
                 handles.push(std::thread::spawn(move || {
                     let a2a = exchange_all2all(
-                        &group, r, ep, n_local, h, x, w, &id,
+                        &group, r, ep, n_local, h, x, w, &id, ReduceDtype::F32,
                     );
                     a2a
                 }));

@@ -372,6 +372,10 @@ pub fn run<T: RankTrainer + 'static>(
                         // coverage) is not recoverable by falling back —
                         // propagate it
                         rs.validate(&spec.model, mm.param_count)?;
+                        // the params must be saved in the dtype the plan
+                        // runs — silent re-encoding at resume would shift
+                        // the loss trajectory unrecorded
+                        rs.validate_dtype(plan.dtype.as_str())?;
                         // the saved token cursor is only meaningful under
                         // the shuffle that consumed it: a different
                         // --data-seed would silently re-read and skip
@@ -544,7 +548,13 @@ pub fn run<T: RankTrainer + 'static>(
         // share of the run total
         report.breakdown.snapshot_write_secs += st.write_secs / world_n as f64;
         report.ckpt_commits = st.commits;
+        report.ckpt_bytes = st.bytes_written;
     }
+    // whole-mesh collective traffic at actual wire width — the
+    // bytes-moved signal the perf gate compares across dtypes
+    let traffic = mesh.traffic();
+    report.comm_bytes_in = traffic.bytes_in;
+    report.comm_bytes_out = traffic.bytes_out;
     Ok(report)
 }
 
@@ -604,9 +614,12 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
         if !out.loss.is_finite() {
             return Err(ctx.non_finite(step));
         }
-        ctx.spec
-            .hook
-            .on_step(rank, step, out.loss, trainer.params_mut()?)?;
+        if ctx.spec.hooked {
+            // hooks observe (and may rewrite) the mutable f32 parameter
+            // view; bf16 engines cannot provide one, so a hooked bf16
+            // run fails here rather than silently dropping mutations
+            ctx.spec.hook.on_step(rank, step, out.loss, trainer.params_mut()?)?;
+        }
         if let Some(dom) = trainer.loss_domain() {
             // loss is rank-local; average across the domain for the curve
             let mean =
@@ -649,7 +662,14 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
 
     match trainer.finish(&ctx)? {
         RankFinish::Report(parts) => {
-            let parts = *parts;
+            let mut parts = *parts;
+            // report contract: `final_params` is always f32 — eval and
+            // the legacy checkpoint writer consume it at full width; a
+            // bf16 engine's params decode exactly here
+            if parts.final_params.dtype() == crate::runtime::Dtype::Bf16 {
+                parts.final_params =
+                    Tensor::f32(parts.final_params.to_f32_vec()?, vec![ctx.mm.param_count]);
+            }
             // breakdown assembly: the optimizer's update/comm/overlap
             // split comes from its own counters, folded in exactly once
             breakdown.optimizer_secs += parts.optimizer_update_secs;
@@ -680,9 +700,12 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
                 optimizer_comm_secs: parts.optimizer_comm_secs,
                 optimizer_overlap_secs: parts.optimizer_overlap_secs,
                 optimizer_lane_ops: parts.optimizer_lane_ops,
-                // committed-checkpoint count is a run-level quantity:
-                // harness::run folds it in from the Checkpointer's stats
+                // run-level quantities: harness::run folds these in from
+                // the Checkpointer's stats and the mesh traffic counters
                 ckpt_commits: 0,
+                comm_bytes_in: 0,
+                comm_bytes_out: 0,
+                ckpt_bytes: 0,
             }))
         }
         RankFinish::Aux(a) => Ok(RankOut::Aux(a)),

@@ -30,6 +30,7 @@ use crate::ckpt::CkptPolicy;
 use crate::comm::{ReduceDtype, Topology};
 use crate::config::RunConfig;
 use crate::optim::{AdamParams, ShardingMode};
+use crate::runtime::Dtype;
 use crate::Result;
 use anyhow::anyhow;
 use std::path::PathBuf;
@@ -58,6 +59,10 @@ pub struct JobSpec {
     /// preprocessed shard directory
     pub data_dir: PathBuf,
     pub hook: Arc<dyn StepHook>,
+    /// true when a caller installed a real [`StepHook`] — the harness
+    /// only materializes the mutable f32 parameter view (which bf16
+    /// engines cannot provide) when a hook will actually observe it
+    pub hooked: bool,
     /// optional recorded-id sink for data-order tests (see [`DataTrace`])
     pub data_trace: Option<DataTrace>,
     /// private marker: construction goes through the builder (or the
@@ -82,10 +87,12 @@ impl JobSpec {
             engine_pool: 2,
             data_dir: None,
             hook: Arc::new(NoHook),
+            hooked: false,
             expected_world: None,
             overlap: false,
             overlap_chunk: DEFAULT_OVERLAP_CHUNK,
             ckpt: CkptPolicy::default(),
+            dtype: Dtype::F32,
             prefetch: true,
             data_epochs: 0,
             data_trace: None,
@@ -105,8 +112,12 @@ impl JobSpec {
         }
     }
 
+    /// Gradient-reduction wire dtype: bf16 when the plan runs mixed
+    /// precision (paper §2.1 — bf16 wires come with the dtype) or when
+    /// the standalone `--bf16-grad-reduce` ablation knob asks for it on
+    /// an otherwise-f32 run.
     pub fn reduce_dtype(&self) -> ReduceDtype {
-        if self.run.bf16_grad_reduce {
+        if self.plan.dtype == Dtype::Bf16 || self.run.bf16_grad_reduce {
             ReduceDtype::Bf16
         } else {
             ReduceDtype::F32
@@ -132,10 +143,12 @@ pub struct JobSpecBuilder {
     engine_pool: usize,
     data_dir: Option<PathBuf>,
     hook: Arc<dyn StepHook>,
+    hooked: bool,
     expected_world: Option<usize>,
     overlap: bool,
     overlap_chunk: usize,
     ckpt: CkptPolicy,
+    dtype: Dtype,
     prefetch: bool,
     data_epochs: usize,
     data_trace: Option<DataTrace>,
@@ -206,6 +219,16 @@ impl JobSpecBuilder {
     /// (default [`DEFAULT_OVERLAP_CHUNK`]).
     pub fn overlap_chunk(mut self, n: usize) -> Self {
         self.overlap_chunk = n;
+        self
+    }
+
+    /// Parameter/gradient-wire element dtype (`--dtype {f32,bf16}`).
+    /// `F32` (the default) is bit-identical to every pre-dtype run;
+    /// `Bf16` runs the paper's mixed-precision recipe — bf16 params and
+    /// half-width collective/checkpoint payloads over f32 master weights
+    /// and moments in the sharded optimizer.
+    pub fn dtype(mut self, dt: Dtype) -> Self {
+        self.dtype = dt;
         self
     }
 
@@ -285,8 +308,12 @@ impl JobSpecBuilder {
     }
 
     /// Per-step hook (checkpointing, fault injection, snapshots).
+    /// Installing one requires the engines to expose a mutable f32
+    /// parameter view, which the bf16 engines do not — a hooked
+    /// `--dtype bf16` run fails at the first step hook invocation.
     pub fn hook(mut self, h: Arc<dyn StepHook>) -> Self {
         self.hook = h;
+        self.hooked = true;
         self
     }
 
@@ -345,6 +372,7 @@ impl JobSpecBuilder {
         plan.overlap = self.overlap;
         plan.overlap_chunk = self.overlap_chunk;
         plan.ckpt = self.ckpt;
+        plan.dtype = self.dtype;
         plan.prefetch = self.prefetch;
         plan.data_epochs = self.data_epochs;
         plan.validate_spec()?;
@@ -356,6 +384,7 @@ impl JobSpecBuilder {
             engine_pool: self.engine_pool,
             data_dir,
             hook: self.hook,
+            hooked: self.hooked,
             data_trace: self.data_trace,
             _built: (),
         })
@@ -424,6 +453,9 @@ impl From<TrainOptions> for JobSpec {
             fur: o.fur,
             engine_pool: o.engine_pool,
             data_dir: o.data_dir,
+            // the legacy bag cannot distinguish a default NoHook from an
+            // installed one; it predates bf16, so always invoking is safe
+            hooked: true,
             hook: o.hook,
             data_trace: None,
             _built: (),
@@ -482,6 +514,23 @@ mod tests {
             .unwrap();
         assert!(ok.plan.ckpt.enabled() && !ok.plan.ckpt.asynchronous);
         assert_eq!(ok.plan.ckpt.every, 5);
+    }
+
+    #[test]
+    fn dtype_knob_threads_through() {
+        let base = || JobSpec::new("m").data_dir("/tmp/x").topology(2, 1, 1);
+        let s = base().dtype(Dtype::Bf16).build().unwrap();
+        assert_eq!(s.plan.dtype, Dtype::Bf16);
+        assert_eq!(s.reduce_dtype(), ReduceDtype::Bf16, "bf16 plans reduce in bf16");
+        assert!(s.fingerprint().ends_with("/bf16"), "{}", s.fingerprint());
+        // the default stays f32 with legacy fingerprints
+        let d = base().build().unwrap();
+        assert_eq!(d.plan.dtype, Dtype::F32);
+        assert_eq!(d.reduce_dtype(), ReduceDtype::F32);
+        assert!(!d.fingerprint().contains("bf16"));
+        // bf16 + overlap is rejected at build time
+        let e = base().dtype(Dtype::Bf16).overlap(true).build().unwrap_err();
+        assert!(e.to_string().contains("[dtype]"), "{e}");
     }
 
     #[test]

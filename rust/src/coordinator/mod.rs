@@ -105,6 +105,16 @@ pub struct TrainReport {
     /// (0 when the policy is off) — the falsifiable signal that async
     /// snapshots actually landed, used by the kill-and-resume tests
     pub ckpt_commits: u64,
+    /// bytes deposited into collectives across the whole mesh at actual
+    /// wire width (bf16 payloads count 2 B/elem) — the perf gate's
+    /// bytes-moved column
+    pub comm_bytes_in: u64,
+    /// bytes picked up from collective results across the whole mesh,
+    /// also at wire width
+    pub comm_bytes_out: u64,
+    /// shard-payload bytes written by the checkpointer (manifests
+    /// excluded); halves per param shard under `--dtype bf16`
+    pub ckpt_bytes: u64,
 }
 
 impl TrainReport {

@@ -24,6 +24,7 @@ use crate::config::{ModelManifest, ParamSpec};
 use crate::data::{BatchPlan, Dataset};
 use crate::optim::sharded::SegmentLayout;
 use crate::optim::ShardingMode;
+use crate::runtime::Dtype;
 use crate::Result;
 use anyhow::anyhow;
 use std::ops::Range;
@@ -86,6 +87,12 @@ pub struct ParallelismPlan {
     /// `overlap`, a pure execution knob: it never shapes the fingerprint,
     /// and a checkpoint written under one policy resumes under any other.
     pub ckpt: CkptPolicy,
+    /// parameter/gradient-wire element dtype (paper §2.1 mixed
+    /// precision): `F32` is the bit-identical baseline, `Bf16` runs bf16
+    /// params + half-width collective/checkpoint payloads with f32
+    /// master weights and moments inside the sharded optimizer. Shapes
+    /// the fingerprint (a bf16 checkpoint is not an f32 checkpoint).
+    pub dtype: Dtype,
     /// per-rank background batch prefetch (`--no-prefetch` disables).
     /// A pure execution knob: batches are identical either way; only the
     /// `data_wait_secs` / `data_prefetch_secs` accounting moves.
@@ -158,6 +165,14 @@ const SPEC_CHECKS: &[(&str, SpecCheck)] = &[
         })
     }),
     ("checkpoint", |p| p.ckpt.invalid_reason()),
+    ("dtype", |p| {
+        (p.dtype == Dtype::Bf16 && p.overlap).then(|| {
+            "dtype=bf16 does not support the overlapped optimizer step yet \
+             (the mixed-precision path is serial; drop --overlap or use \
+             --dtype f32)"
+                .to_string()
+        })
+    }),
 ];
 
 /// Checks against the model manifest (layer/expert divisibility, artifact
@@ -235,6 +250,7 @@ impl ParallelismPlan {
             overlap: false,
             overlap_chunk: DEFAULT_OVERLAP_CHUNK,
             ckpt: CkptPolicy::default(),
+            dtype: Dtype::F32,
             prefetch: true,
             data_epochs: 0,
             stages: Vec::new(),
@@ -391,6 +407,12 @@ impl ParallelismPlan {
         if self.overlap {
             fp.push_str("/overlap");
         }
+        // dtype suffix, appended last for the same state-key reason; f32
+        // (the bit-identical default) stays suffix-free so every legacy
+        // fingerprint is unchanged
+        if self.dtype == Dtype::Bf16 {
+            fp.push_str("/bf16");
+        }
         fp
     }
 
@@ -517,6 +539,28 @@ mod tests {
         p.ckpt.dir = None;
         p.ckpt.every = 0;
         assert!(p.validate_spec().is_ok());
+    }
+
+    #[test]
+    fn dtype_check_rejects_bf16_with_overlap() {
+        let mut p = ParallelismPlan::new(Topology::dp_only(2));
+        p.dtype = Dtype::Bf16;
+        assert!(p.validate_spec().is_ok(), "serial bf16 is valid");
+        p.overlap = true;
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [dtype]"), "{e}");
+        // f32 + overlap stays valid
+        p.dtype = Dtype::F32;
+        assert!(p.validate_spec().is_ok());
+    }
+
+    #[test]
+    fn bf16_fingerprint_gets_a_suffix() {
+        let mut p = ParallelismPlan::new(Topology { dp: 1, ep: 2, pp: 2 });
+        p.dtype = Dtype::Bf16;
+        assert_eq!(p.fingerprint(), "dp1-ep2-pp2/epso/1f1b/mb2/allgather/bf16");
+        // the state key (first three segments) never moves
+        assert!(p.fingerprint().starts_with("dp1-ep2-pp2/epso/1f1b"));
     }
 
     #[test]

@@ -58,7 +58,10 @@ impl RankTrainer for DpTrainer {
         );
         let opt = ctx.sharded_optimizer(segs, &format!("dp{rank}"));
         Ok(DpTrainer {
-            params: Tensor::f32(global_params, vec![ctx.mm.param_count]),
+            // plan dtype decides the resident precision: bf16 params
+            // round once here (RNE) and stay bf16 for the whole run —
+            // the optimizer's f32 masters carry full-width state
+            params: Tensor::from_f32(ctx.plan.dtype, global_params, vec![ctx.mm.param_count]),
             map: LocalMap::identity(ctx.mm.param_count),
             opt,
             art: ctx.mm.artifact_path("train_step")?,
@@ -92,12 +95,9 @@ impl RankTrainer for DpTrainer {
         }
         let grads = outs[3].as_f32()?;
         let lr = ctx.spec.run.lr_at(step) as f32;
-        let gn = self.opt.step(
-            self.params.as_f32_mut()?,
-            grads,
-            lr,
-            clip_now(&ctx.spec.run, step),
-        );
+        let gn = self
+            .opt
+            .step_tensor(&mut self.params, grads, lr, clip_now(&ctx.spec.run, step))?;
         Ok(StepOutcome { loss, grad_norm: gn })
     }
 

@@ -42,7 +42,7 @@ use crate::comm::{Group, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
-use crate::runtime::Tensor;
+use crate::runtime::{Dtype, Tensor};
 use crate::Result;
 use std::sync::Arc;
 
@@ -156,7 +156,9 @@ impl RankTrainer for EpTrainer {
             layout,
             map,
             arts,
-            params: Tensor::f32(params, vec![local_len]),
+            // resident precision follows the plan dtype (one RNE round
+            // here for bf16; masters in the optimizer stay f32)
+            params: Tensor::from_f32(ctx.plan.dtype, params, vec![local_len]),
             opt,
             loss_dom: LossDomain {
                 group: Arc::clone(ctx.mesh.world_group()),
@@ -184,6 +186,13 @@ impl RankTrainer for EpTrainer {
         let t_all = ep * t_local;
         let k = h.top_k;
         let hid = h.hidden;
+        // activation-wire width follows the plan dtype; the standalone
+        // `--bf16-grad-reduce` ablation knob deliberately only narrows
+        // gradient reduction, never activation exchanges
+        let wire = match ctx.plan.dtype {
+            Dtype::Bf16 => ReduceDtype::Bf16,
+            Dtype::F32 => ReduceDtype::F32,
+        };
 
         let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
             ctx.engine
@@ -191,8 +200,13 @@ impl RankTrainer for EpTrainer {
         };
 
         let tokens_t = ctx.fetch_tokens(step, self.data_rank, 0, breakdown)?;
-        // parameter slices for this step, shared by fwd and bwd
-        let ps = ParamSlices::new(self.params.as_f32()?, layout);
+        // parameter slices for this step, shared by fwd and bwd; the
+        // artifacts are lowered in f32, so a bf16-resident vector
+        // decodes once per step (exactly) before slicing
+        let ps = match self.params.dtype() {
+            Dtype::F32 => ParamSlices::new(self.params.as_f32()?, layout),
+            Dtype::Bf16 => ParamSlices::new(&self.params.to_f32_vec()?, layout),
+        };
 
         // ---------------- forward ----------------
         let mut hcur = {
@@ -229,10 +243,10 @@ impl RankTrainer for EpTrainer {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
                 match ctx.plan.ep_comm {
                     EpComm::Allgather => {
-                        exchange_allgather(ep_group, ep_rank, x2d, w2d, &idx)
+                        exchange_allgather(ep_group, ep_rank, x2d, w2d, &idx, wire)
                     }
                     EpComm::All2All => exchange_all2all(
-                        ep_group, ep_rank, ep, nr, hid, x2d, w2d, &idx,
+                        ep_group, ep_rank, ep, nr, hid, x2d, w2d, &idx, wire,
                     ),
                 }
             };
@@ -259,7 +273,7 @@ impl RankTrainer for EpTrainer {
             // ---- line 116: reduce-scatter of partial outputs ----
             let moe_local = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                ep_group.reduce_scatter_sum_even(ep_rank, partial, ReduceDtype::F32)
+                ep_group.reduce_scatter_sum_even(ep_rank, partial, wire)
             };
             // residual: h = a + moe_out
             let mut a_data = a.into_f32()?;
@@ -292,7 +306,7 @@ impl RankTrainer for EpTrainer {
             // d(out) = dh: residual gives d_a = dh and d(moe_out) = dh
             let d_moe_full = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                ep_group.allgather(ep_rank, dh.clone())
+                ep_group.allgather_values(ep_rank, dh.clone(), wire)
             };
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
@@ -311,8 +325,8 @@ impl RankTrainer for EpTrainer {
             let (dx_local, dw_local) = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
                 (
-                    ep_group.reduce_scatter_sum_even(ep_rank, dx_partial, ReduceDtype::F32),
-                    ep_group.reduce_scatter_sum_even(ep_rank, dw_partial, ReduceDtype::F32),
+                    ep_group.reduce_scatter_sum_even(ep_rank, dx_partial, wire),
+                    ep_group.reduce_scatter_sum_even(ep_rank, dw_partial, wire),
                 )
             };
             let outs = {
@@ -359,12 +373,9 @@ impl RankTrainer for EpTrainer {
         }
 
         let lr = ctx.spec.run.lr_at(step) as f32;
-        let gn = self.opt.step(
-            self.params.as_f32_mut()?,
-            &grads,
-            lr,
-            clip_now(&ctx.spec.run, step),
-        );
+        let gn = self
+            .opt
+            .step_tensor(&mut self.params, &grads, lr, clip_now(&ctx.spec.run, step))?;
         let _ = aux_total;
         Ok(StepOutcome { loss, grad_norm: gn })
     }

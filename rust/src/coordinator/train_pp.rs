@@ -29,7 +29,8 @@ use crate::comm::P2p;
 use crate::config::{ModelManifest, ParamSpec};
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
-use crate::runtime::Tensor;
+use crate::runtime::{Dtype, Tensor};
+use crate::util::bf16_round;
 use crate::Result;
 use std::sync::Arc;
 
@@ -146,7 +147,9 @@ impl RankTrainer for PpTrainer {
         let art_fwdbwd = mm.artifact_path(&format!("pp{pp}_stage{stage}_fwdbwd"))?;
 
         Ok(PpTrainer {
-            params: Tensor::f32(params, vec![my_len]),
+            // resident precision follows the plan dtype (one RNE round
+            // here for bf16; the optimizer's f32 masters carry state)
+            params: Tensor::from_f32(ctx.plan.dtype, params, vec![my_len]),
             map: stage_map(&specs)?,
             specs,
             my_len,
@@ -188,6 +191,19 @@ impl RankTrainer for PpTrainer {
             )
         };
 
+        // in bf16 mode activation/cotangent payloads value-round through
+        // bf16 before every p2p hop (the channels move owned Vec<f32>
+        // frames, so the rounding models the paper's bf16 stage wires;
+        // Group collectives are where genuine 2-byte frames travel)
+        let round = |mut v: Vec<f32>| {
+            if ctx.plan.dtype == Dtype::Bf16 {
+                for x in v.iter_mut() {
+                    *x = bf16_round(*x);
+                }
+            }
+            v
+        };
+
         let mut grads = vec![0.0f32; self.my_len];
         let mut step_loss = 0.0f32;
         // stashed stage inputs per microbatch (SAC)
@@ -211,7 +227,7 @@ impl RankTrainer for PpTrainer {
                         let hout = outs[0].as_f32()?.to_vec();
                         stash[mb] = Some(tokens_t);
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, self.next.unwrap(), 0, seq_id(step, mb), hout);
+                        p2p.send(rank, self.next.unwrap(), 0, seq_id(step, mb), round(hout));
                     } else if self.last {
                         // targets first (prefetched), then recv + fused
                         // fwdbwd + send cotangent immediately
@@ -238,7 +254,7 @@ impl RankTrainer for PpTrainer {
                             *g += d;
                         }
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dx);
+                        p2p.send(rank, self.prev.unwrap(), 1, seq_id(step, mb), round(dx));
                     } else {
                         let hin = {
                             let _t = Scoped::new(&mut breakdown.comm_secs);
@@ -259,7 +275,7 @@ impl RankTrainer for PpTrainer {
                             self.next.unwrap(),
                             0,
                             seq_id(step, mb),
-                            outs[0].as_f32()?.to_vec(),
+                            round(outs[0].as_f32()?.to_vec()),
                         );
                     }
                 }
@@ -291,7 +307,7 @@ impl RankTrainer for PpTrainer {
                             *g += d;
                         }
                         let _t = Scoped::new(&mut breakdown.comm_secs);
-                        p2p.send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dx);
+                        p2p.send(rank, self.prev.unwrap(), 1, seq_id(step, mb), round(dx));
                     }
                 }
             }
@@ -303,12 +319,9 @@ impl RankTrainer for PpTrainer {
             *g *= inv;
         }
         let lr = ctx.spec.run.lr_at(step) as f32;
-        let gn = self.opt.step(
-            self.params.as_f32_mut()?,
-            &grads,
-            lr,
-            clip_now(&ctx.spec.run, step),
-        );
+        let gn = self
+            .opt
+            .step_tensor(&mut self.params, &grads, lr, clip_now(&ctx.spec.run, step))?;
         Ok(StepOutcome { loss: step_loss / micro as f32, grad_norm: gn })
     }
 
@@ -332,7 +345,7 @@ impl RankTrainer for PpTrainer {
             // seed the global vector with this stage's segment; the other
             // stages' Aux payloads are scattered in by merge_aux
             let mut final_params = vec![0.0f32; ctx.mm.param_count];
-            scatter_stage(self.params.as_f32()?, &self.specs, &mut final_params);
+            scatter_stage(&self.params.to_f32_vec()?, &self.specs, &mut final_params);
             return Ok(RankFinish::Report(Box::new(ReportParts {
                 final_params: Tensor::f32(final_params, vec![ctx.mm.param_count]),
                 opt_state_bytes: self.opt.state_bytes(),

@@ -39,7 +39,8 @@ use crate::config::ModelManifest;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
 use crate::optim::ShardingMode;
-use crate::runtime::Tensor;
+use crate::runtime::{Dtype, Tensor};
+use crate::util::bf16_round;
 use crate::Result;
 use std::sync::Arc;
 
@@ -105,6 +106,15 @@ impl PpEpTrainer {
             .exec(&format!("{}:{key}", ctx.mm.name), path.to_path_buf(), inputs)
     }
 
+    /// Activation-wire width for the stage's EP collectives — follows
+    /// the plan dtype, exactly like the flat EP engine.
+    fn wire(&self, ctx: &RankCtx) -> ReduceDtype {
+        match ctx.plan.dtype {
+            Dtype::Bf16 => ReduceDtype::Bf16,
+            Dtype::F32 => ReduceDtype::F32,
+        }
+    }
+
     /// Forward through this stage's layers, stashing SAC inputs into `st`.
     fn fwd_through_layers(
         &self,
@@ -122,6 +132,7 @@ impl PpEpTrainer {
         let t_all = ep * t_local;
         let k = h.top_k;
         let hid = h.hidden;
+        let wire = self.wire(ctx);
 
         for l in 0..self.layout.layer_ne.len() {
             st.h_in.push(hcur.clone());
@@ -147,7 +158,7 @@ impl PpEpTrainer {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
                 match ctx.plan.ep_comm {
                     EpComm::Allgather => {
-                        exchange_allgather(&self.ep_group, self.ep_rank, x2d, w2d, &idx)
+                        exchange_allgather(&self.ep_group, self.ep_rank, x2d, w2d, &idx, wire)
                     }
                     EpComm::All2All => exchange_all2all(
                         &self.ep_group,
@@ -158,6 +169,7 @@ impl PpEpTrainer {
                         x2d,
                         w2d,
                         &idx,
+                        wire,
                     ),
                 }
             };
@@ -182,7 +194,7 @@ impl PpEpTrainer {
             let moe_local = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
                 self.ep_group
-                    .reduce_scatter_sum_even(self.ep_rank, partial, ReduceDtype::F32)
+                    .reduce_scatter_sum_even(self.ep_rank, partial, wire)
             };
             let mut a_data = a.into_f32()?;
             for (av, mv) in a_data.iter_mut().zip(moe_local.iter()) {
@@ -214,11 +226,12 @@ impl PpEpTrainer {
         let t_all = ep * t_local;
         let k = h.top_k;
         let hid = h.hidden;
+        let wire = self.wire(ctx);
 
         for l in (0..self.layout.layer_ne.len()).rev() {
             let d_moe_full = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                self.ep_group.allgather(self.ep_rank, dh.clone())
+                self.ep_group.allgather_values(self.ep_rank, dh.clone(), wire)
             };
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
@@ -241,16 +254,8 @@ impl PpEpTrainer {
             let (dx_local, dw_local) = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
                 (
-                    self.ep_group.reduce_scatter_sum_even(
-                        self.ep_rank,
-                        dx_partial,
-                        ReduceDtype::F32,
-                    ),
-                    self.ep_group.reduce_scatter_sum_even(
-                        self.ep_rank,
-                        dw_partial,
-                        ReduceDtype::F32,
-                    ),
+                    self.ep_group.reduce_scatter_sum_even(self.ep_rank, dx_partial, wire),
+                    self.ep_group.reduce_scatter_sum_even(self.ep_rank, dw_partial, wire),
                 )
             };
             let outs = {
@@ -328,7 +333,9 @@ impl RankTrainer for PpEpTrainer {
             layout,
             map,
             arts,
-            params: Tensor::f32(params, vec![local_len]),
+            // resident precision follows the plan dtype (one RNE round
+            // here for bf16; the optimizer's f32 masters carry state)
+            params: Tensor::from_f32(ctx.plan.dtype, params, vec![local_len]),
             opt,
             p2p: Arc::clone(shared),
             ep_group: Arc::clone(ep_group),
@@ -364,7 +371,21 @@ impl RankTrainer for PpEpTrainer {
         let hid = h.hidden;
         let n_local = self.layout.layer_ne.len();
 
-        let ps = ParamSlices::new(self.params.as_f32()?, &self.layout);
+        // artifacts are lowered in f32: a bf16-resident vector decodes
+        // once per step (exactly) before slicing. Stage p2p payloads
+        // value-round through bf16 in bf16 mode, like the PP engine.
+        let ps = match self.params.dtype() {
+            Dtype::F32 => ParamSlices::new(self.params.as_f32()?, &self.layout),
+            Dtype::Bf16 => ParamSlices::new(&self.params.to_f32_vec()?, &self.layout),
+        };
+        let round = |mut v: Vec<f32>| {
+            if ctx.plan.dtype == Dtype::Bf16 {
+                for x in v.iter_mut() {
+                    *x = bf16_round(*x);
+                }
+            }
+            v
+        };
         let mut grads = vec![0.0f32; self.layout.local_len()];
         let mut step_loss = 0.0f32;
         let mut stash: Vec<Option<MbStash>> = (0..micro).map(|_| None).collect();
@@ -422,7 +443,7 @@ impl RankTrainer for PpEpTrainer {
                             self.bwd_through_layers(ctx, &ps, &st, dh, &mut grads, breakdown)?;
                         let _t = Scoped::new(&mut breakdown.comm_secs);
                         self.p2p
-                            .send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dh_in);
+                            .send(rank, self.prev.unwrap(), 1, seq_id(step, mb), round(dh_in));
                     } else {
                         {
                             let _t = Scoped::new(&mut breakdown.comm_secs);
@@ -431,7 +452,7 @@ impl RankTrainer for PpEpTrainer {
                                 self.next.unwrap(),
                                 0,
                                 seq_id(step, mb),
-                                hout.into_f32()?,
+                                round(hout.into_f32()?),
                             );
                         }
                         stash[mb] = Some(st);
@@ -467,7 +488,7 @@ impl RankTrainer for PpEpTrainer {
                     } else {
                         let _t = Scoped::new(&mut breakdown.comm_secs);
                         self.p2p
-                            .send(rank, self.prev.unwrap(), 1, seq_id(step, mb), dh_in);
+                            .send(rank, self.prev.unwrap(), 1, seq_id(step, mb), round(dh_in));
                     }
                 }
             }
@@ -496,12 +517,9 @@ impl RankTrainer for PpEpTrainer {
         }
 
         let lr = ctx.spec.run.lr_at(step) as f32;
-        let gn = self.opt.step(
-            self.params.as_f32_mut()?,
-            &grads,
-            lr,
-            clip_now(&ctx.spec.run, step),
-        );
+        let gn = self
+            .opt
+            .step_tensor(&mut self.params, &grads, lr, clip_now(&ctx.spec.run, step))?;
         Ok(StepOutcome { loss: step_loss / micro as f32, grad_norm: gn })
     }
 
@@ -526,7 +544,7 @@ impl RankTrainer for PpEpTrainer {
         }
         if self.last && self.ep_coord == 0 {
             let mut final_params = vec![0.0f32; ctx.mm.param_count];
-            self.layout.scatter(self.params.as_f32()?, &mut final_params);
+            self.layout.scatter(&self.params.to_f32_vec()?, &mut final_params);
             return Ok(RankFinish::Report(Box::new(ReportParts {
                 final_params: Tensor::f32(final_params, vec![ctx.mm.param_count]),
                 opt_state_bytes: self.opt.state_bytes(),

@@ -8,12 +8,15 @@
 //!         [--schedule gpipe|1f1b] [--micro N] [--fur] [--pool N]
 //!         [--seed N] [--data DIR] [--log-every N]
 //!         [--data-seed N] [--no-prefetch] [--epochs N]
+//!         [--dtype f32|bf16] (bf16: half-width params/wires/checkpoint
+//!         payloads with f32 master weights in the optimizer)
 //!         [--overlap] [--overlap-chunk N]
 //!         [--ckpt-dir DIR --ckpt-every N --ckpt-sync --ckpt-keep K]
 //!   eval --model M              run the synthetic benchmark suite
 //!   plans --world N [--model M] enumerate dp×ep×pp placements of a world
 //!         [--steps N --data DIR] (with --model: instances/tokens per
 //!         step per placement; with --data too: epochs the run consumes)
+//!         [--dtype f32|bf16] (per-placement resident bytes/param)
 //!   ckpt inspect DIR            print a checkpoint dir's manifest
 //!                               (step, plan, shards, checksums, validity)
 //!   scaling [--fur]             Aurora-model Fig 4b sweep
@@ -36,7 +39,7 @@ use optimus::coordinator::{self, ep::EpComm, JobSpec, ParallelismPlan};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::optim::ShardingMode;
-use optimus::runtime::Engine;
+use optimus::runtime::{Dtype, Engine};
 use optimus::util::cli::Args;
 
 const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|scaling> [flags]\n\
@@ -46,13 +49,13 @@ const TRAIN_FLAGS: &[&str] = &[
     "model", "data", "dp", "ep", "pp", "steps", "warmup", "lr", "mode", "ep-comm",
     "schedule", "micro", "fur", "pool", "seed", "log-every", "overlap", "overlap-chunk",
     "ckpt-dir", "ckpt-every", "ckpt-sync", "ckpt-keep", "data-seed", "no-prefetch",
-    "epochs",
+    "epochs", "dtype",
 ];
 const CKPT_FLAGS: &[&str] = &[];
 const PREPROCESS_FLAGS: &[&str] =
     &["out", "seed", "files", "docs", "context", "shuffle-seed", "per-shard"];
 const EVAL_FLAGS: &[&str] = &["model", "seed", "cases"];
-const PLANS_FLAGS: &[&str] = &["world", "model", "steps", "data"];
+const PLANS_FLAGS: &[&str] = &["world", "model", "steps", "data", "dtype"];
 const SCALING_FLAGS: &[&str] = &["fur", "model"];
 
 fn main() -> optimus::Result<()> {
@@ -160,6 +163,9 @@ fn do_train(args: &Args) -> optimus::Result<()> {
         .data_prefetch(!args.bool_or("no-prefetch", false))
         .data_epochs(args.usize_or("epochs", 0))
         .fur(args.bool_or("fur", false))
+        // --dtype bf16: half-width params/activations/wires/checkpoint
+        // payloads; the optimizer keeps f32 master weights + moments
+        .dtype(Dtype::parse(&args.str_or("dtype", "f32"))?)
         .micro_batches(args.usize_or("micro", 2))
         .engine_pool(args.usize_or("pool", 2))
         // --overlap: pipelined sharded-optimizer step over the async comm
@@ -225,6 +231,14 @@ fn do_train(args: &Args) -> optimus::Result<()> {
         r.loss.last().unwrap_or(f64::NAN)
     );
     println!(
+        "precision: --dtype {} ({} B/elem wires); collectives moved \
+         {:.2} MiB in / {:.2} MiB out",
+        spec.plan.dtype,
+        spec.plan.dtype.bytes(),
+        r.comm_bytes_in as f64 / (1 << 20) as f64,
+        r.comm_bytes_out as f64 / (1 << 20) as f64,
+    );
+    println!(
         "data: {} instances ({:.2} epochs) consumed; stall {:.4}s ({}), \
          prefetch hid {:.4}s",
         r.instances_consumed,
@@ -242,8 +256,12 @@ fn do_train(args: &Args) -> optimus::Result<()> {
     }
     if spec.plan.ckpt.enabled() {
         println!(
-            "checkpoints: {} committed; snapshot stall {:.4}s, hidden write {:.4}s",
-            r.ckpt_commits, r.breakdown.snapshot_secs, r.breakdown.snapshot_write_secs
+            "checkpoints: {} committed ({:.2} MiB shard payload); snapshot stall \
+             {:.4}s, hidden write {:.4}s",
+            r.ckpt_commits,
+            r.ckpt_bytes as f64 / (1 << 20) as f64,
+            r.breakdown.snapshot_secs,
+            r.breakdown.snapshot_write_secs
         );
     }
     Ok(())
@@ -295,6 +313,15 @@ fn do_plans(args: &Args) -> optimus::Result<()> {
     check(args, PLANS_FLAGS)?;
     let world = args.usize_or("world", 8);
     let steps = args.usize_or("steps", 50);
+    let dtype = Dtype::parse(&args.str_or("dtype", "f32"))?;
+    // resident memory per rank, in bytes per model parameter:
+    // params + grads at the dtype's width, plus AdamW moments (always
+    // f32 pairs) and — under bf16 — the f32 master copy, spread over
+    // the dp×ep shard group (the EPSO layout; SO replicates NE states)
+    let opt_bytes_per_param: f64 = match dtype {
+        Dtype::F32 => 8.0,
+        Dtype::Bf16 => 12.0,
+    };
     let man = args
         .get("model")
         .map(|_| Manifest::load(&optimus::artifacts_dir()))
@@ -323,8 +350,13 @@ fn do_plans(args: &Args) -> optimus::Result<()> {
                 let bp = plan.batch_plan(mm);
                 let ips = bp.instances_per_step();
                 let mut n = format!(
-                    "  runnable: {ips} inst/step, {} tok/step",
-                    ips * mm.hyper.seq
+                    "  runnable: {ips} inst/step, {} tok/step, {:.2} B/param \
+                     ({} params+grads, opt/{} ranks)",
+                    ips * mm.hyper.seq,
+                    (dtype.bytes() * 2) as f64
+                        + opt_bytes_per_param / (t.dp * t.ep) as f64,
+                    dtype.bytes() * 2,
+                    t.dp * t.ep,
                 );
                 if let Some(ds) = &ds {
                     n.push_str(&format!(

@@ -13,7 +13,7 @@
 
 mod tensor;
 
-pub use tensor::Tensor;
+pub use tensor::{Dtype, Tensor};
 
 use crate::Result;
 use anyhow::anyhow;

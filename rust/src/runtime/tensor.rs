@@ -11,13 +11,58 @@
 //! a deep copy only when another live handle still shares the buffer.
 //! See DESIGN.md §3 for the full ownership rules.
 
+use crate::util::{bf16s_to_f32s, f32s_to_bf16s};
 use crate::Result;
 use anyhow::anyhow;
 use std::sync::Arc;
 
+/// Parameter/activation element type of a training plan. `I32` tensors
+/// (token ids, routing indices) exist regardless and are not a plan knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Dtype {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl Dtype {
+    /// Wire/storage width in bytes per element.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+
+    /// Flag spelling (`--dtype {f32,bf16}`), also the fingerprint suffix.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "bf16" => Ok(Dtype::Bf16),
+            other => Err(anyhow!("unknown dtype `{other}` — expected `f32` or `bf16`")),
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
     F32 { data: Arc<Vec<f32>>, shape: Vec<usize> },
+    /// bf16 storage: the high 16 bits of the f32 layout, round-to-nearest
+    /// even on encode. Same Arc-backed COW discipline as `F32`.
+    Bf16 { data: Arc<Vec<u16>>, shape: Vec<usize> },
     I32 { data: Arc<Vec<i32>>, shape: Vec<usize> },
 }
 
@@ -46,6 +91,30 @@ impl Tensor {
         Tensor::F32 { data, shape: vec![n] }
     }
 
+    /// bf16 tensor from pre-encoded storage bits.
+    pub fn bf16(data: Vec<u16>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::Bf16 { data: Arc::new(data), shape }
+    }
+
+    /// Encode f32 values into a tensor of the requested dtype
+    /// (round-to-nearest-even for `Bf16`, identity for `F32`).
+    pub fn from_f32(dtype: Dtype, data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        match dtype {
+            Dtype::F32 => Tensor::f32(data, shape),
+            Dtype::Bf16 => Tensor::bf16(f32s_to_bf16s(&data), shape),
+        }
+    }
+
+    /// Element dtype of the value payload (`I32` index tensors report
+    /// `F32` — index data is never a plan dtype).
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::Bf16 { .. } => Dtype::Bf16,
+            _ => Dtype::F32,
+        }
+    }
+
     pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor::F32 { data: Arc::new(vec![0.0; n]), shape }
@@ -57,13 +126,16 @@ impl Tensor {
 
     pub fn shape(&self) -> &[usize] {
         match self {
-            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+            Tensor::F32 { shape, .. }
+            | Tensor::Bf16 { shape, .. }
+            | Tensor::I32 { shape, .. } => shape,
         }
     }
 
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32 { data, .. } => data.len(),
+            Tensor::Bf16 { data, .. } => data.len(),
             Tensor::I32 { data, .. } => data.len(),
         }
     }
@@ -77,6 +149,7 @@ impl Tensor {
     pub fn ptr_eq(&self, other: &Tensor) -> bool {
         match (self, other) {
             (Tensor::F32 { data: a, .. }, Tensor::F32 { data: b, .. }) => Arc::ptr_eq(a, b),
+            (Tensor::Bf16 { data: a, .. }, Tensor::Bf16 { data: b, .. }) => Arc::ptr_eq(a, b),
             (Tensor::I32 { data: a, .. }, Tensor::I32 { data: b, .. }) => Arc::ptr_eq(a, b),
             _ => false,
         }
@@ -87,6 +160,7 @@ impl Tensor {
     pub fn data_ptr(&self) -> usize {
         match self {
             Tensor::F32 { data, .. } => data.as_ptr() as usize,
+            Tensor::Bf16 { data, .. } => data.as_ptr() as usize,
             Tensor::I32 { data, .. } => data.as_ptr() as usize,
         }
     }
@@ -107,6 +181,23 @@ impl Tensor {
         }
     }
 
+    /// Raw bf16 storage bits.
+    pub fn as_bf16(&self) -> Result<&[u16]> {
+        match self {
+            Tensor::Bf16 { data, .. } => Ok(data.as_slice()),
+            _ => Err(anyhow!("tensor is not bf16")),
+        }
+    }
+
+    /// Copy-on-write mutable access to bf16 storage (same COW discipline
+    /// as [`Tensor::as_f32_mut`]).
+    pub fn as_bf16_mut(&mut self) -> Result<&mut Vec<u16>> {
+        match self {
+            Tensor::Bf16 { data, .. } => Ok(Arc::make_mut(data)),
+            _ => Err(anyhow!("tensor is not bf16")),
+        }
+    }
+
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Tensor::I32 { data, .. } => Ok(data.as_slice()),
@@ -114,20 +205,25 @@ impl Tensor {
         }
     }
 
-    /// Take the f32 buffer: by move when uniquely owned, by copy otherwise.
+    /// Take the values as f32: by move when a uniquely owned f32 buffer,
+    /// by copy otherwise; bf16 storage decodes (exact).
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
             Tensor::F32 { data, .. } => {
                 Ok(Arc::try_unwrap(data).unwrap_or_else(|a| a.as_ref().clone()))
             }
+            Tensor::Bf16 { data, .. } => Ok(bf16s_to_f32s(&data)),
             _ => Err(anyhow!("tensor is not f32")),
         }
     }
 
-    /// Owned copy of the f32 buffer (for serialization boundaries like
-    /// [`crate::ckpt::Checkpoint`]).
+    /// Owned f32 copy of the values (serialization boundaries like
+    /// [`crate::ckpt::Checkpoint`]; bf16 decodes exactly).
     pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
-        Ok(self.as_f32()?.to_vec())
+        match self {
+            Tensor::Bf16 { data, .. } => Ok(bf16s_to_f32s(data)),
+            _ => Ok(self.as_f32()?.to_vec()),
+        }
     }
 
     /// First element as f32 (scalar outputs like losses).
@@ -136,6 +232,10 @@ impl Tensor {
             Tensor::F32 { data, .. } => data
                 .first()
                 .copied()
+                .ok_or_else(|| anyhow!("empty tensor")),
+            Tensor::Bf16 { data, .. } => data
+                .first()
+                .map(|b| crate::util::bf16_to_f32(*b))
                 .ok_or_else(|| anyhow!("empty tensor")),
             Tensor::I32 { data, .. } => data
                 .first()
@@ -151,6 +251,12 @@ pub(super) fn to_literal(t: &Tensor) -> Result<xla::Literal> {
         Tensor::F32 { data, shape } => {
             dims = shape.iter().map(|d| *d as i64).collect();
             xla::Literal::vec1(data.as_slice())
+        }
+        // the HLO artifacts are lowered in f32; bf16 host tensors decode
+        // (exactly) at the executor boundary
+        Tensor::Bf16 { data, shape } => {
+            dims = shape.iter().map(|d| *d as i64).collect();
+            xla::Literal::vec1(bf16s_to_f32s(data).as_slice())
         }
         Tensor::I32 { data, shape } => {
             dims = shape.iter().map(|d| *d as i64).collect();
@@ -235,5 +341,41 @@ mod tests {
         let ptr = t.data_ptr();
         let v = t.into_f32().unwrap();
         assert_eq!(v.as_ptr() as usize, ptr, "unique owner must move, not copy");
+    }
+
+    #[test]
+    fn bf16_tensor_encodes_decodes_and_cows() {
+        let t = Tensor::from_f32(Dtype::Bf16, vec![1.0, -2.5, 0.0, 3.14159], vec![4]);
+        assert_eq!(t.dtype(), Dtype::Bf16);
+        assert_eq!(t.len(), 4);
+        let back = t.to_f32_vec().unwrap();
+        // exactly representable values round-trip bitwise
+        assert_eq!(back[0], 1.0);
+        assert_eq!(back[1], -2.5);
+        assert_eq!(back[2], 0.0);
+        assert!((back[3] - 3.14159).abs() / 3.14159 < 0.01);
+        assert_eq!(t.scalar().unwrap(), 1.0);
+        // clone is an Arc bump; COW copies only when shared
+        let c = t.clone();
+        assert!(t.ptr_eq(&c));
+        let mut m = t.clone();
+        m.as_bf16_mut().unwrap()[0] = crate::util::f32_to_bf16(9.0);
+        assert!(!m.ptr_eq(&t), "shared bf16 buffer must copy on write");
+        assert_eq!(m.scalar().unwrap(), 9.0);
+        assert_eq!(t.scalar().unwrap(), 1.0);
+        // wrong-dtype access is a hard error
+        assert!(t.as_f32().is_err());
+        assert!(Tensor::f32(vec![1.0], vec![1]).as_bf16().is_err());
+    }
+
+    #[test]
+    fn from_f32_identity_for_f32_dtype() {
+        let t = Tensor::from_f32(Dtype::F32, vec![0.1, 0.2], vec![2]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.as_f32().unwrap(), &[0.1, 0.2]);
+        assert_eq!(Dtype::F32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::parse("bf16").unwrap(), Dtype::Bf16);
+        assert!(Dtype::parse("fp8").is_err());
     }
 }

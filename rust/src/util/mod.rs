@@ -40,12 +40,39 @@ pub fn shard_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
+/// f32 -> bf16 storage bits, round-to-nearest-even. bf16 is the high 16
+/// bits of the f32 layout, so the conversion is a biased shift; NaNs are
+/// quieted to a canonical payload so a signalling NaN can never round to
+/// an infinity bit pattern.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // canonical quiet NaN, sign preserved
+        return ((bits >> 16) as u16 & 0x8000) | 0x7fc1;
+    }
+    let rounding_bias = 0x7fff + ((bits >> 16) & 1);
+    (bits.wrapping_add(rounding_bias) >> 16) as u16
+}
+
+/// bf16 storage bits -> f32 (exact: every bf16 value is representable).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Encode a whole f32 slice to bf16 storage.
+pub fn f32s_to_bf16s(v: &[f32]) -> Vec<u16> {
+    v.iter().map(|&x| f32_to_bf16(x)).collect()
+}
+
+/// Decode a whole bf16 slice to f32 (exact).
+pub fn bf16s_to_f32s(v: &[u16]) -> Vec<f32> {
+    v.iter().map(|&b| bf16_to_f32(b)).collect()
+}
+
 /// f32 -> bf16 -> f32 round trip (round-to-nearest-even), used for the
 /// paper's bfloat16 gradient-reduction recipe (§2.1) and its ablation.
 pub fn bf16_round(x: f32) -> f32 {
-    let bits = x.to_bits();
-    let rounding_bias = 0x7fff + ((bits >> 16) & 1);
-    f32::from_bits(((bits + rounding_bias) & 0xffff_0000) as u32)
+    bf16_to_f32(f32_to_bf16(x))
 }
 
 #[cfg(test)]
@@ -79,6 +106,81 @@ mod tests {
             if v != 0.0 {
                 assert!(((r - v) / v).abs() < 0.01, "{v} -> {r}");
             }
+        }
+    }
+
+    #[test]
+    fn bf16_decode_encode_is_identity_for_every_pattern() {
+        // exhaustive over the whole 16-bit space: decoding is exact, so
+        // re-encoding any non-NaN pattern must return it bit-for-bit
+        // (this pins subnormals, ±0, ±inf and the full normal range)
+        for b in 0..=u16::MAX {
+            let v = bf16_to_f32(b);
+            if v.is_nan() {
+                // NaN payloads canonicalize to a sign-preserving qNaN
+                let q = f32_to_bf16(v);
+                assert_eq!(q & 0x7fff, 0x7fc1, "pattern {b:#06x}");
+                assert_eq!(q & 0x8000, b & 0x8000, "pattern {b:#06x}");
+            } else {
+                assert_eq!(f32_to_bf16(v), b, "pattern {b:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_encode_rounds_to_nearest_even() {
+        // 0x3f80 = 1.0, ulp at this scale = 2^-7; exact halfway points
+        // must round to the even-mantissa neighbour on both sides
+        assert_eq!(f32_to_bf16(1.00390625), 0x3f80); // tie down to even
+        assert_eq!(f32_to_bf16(1.01171875), 0x3f82); // tie up to even
+        // non-ties go to the nearest grid point
+        assert_eq!(f32_to_bf16(1.0039), 0x3f80);
+        assert_eq!(f32_to_bf16(1.0040), 0x3f81);
+        // random sweep: relative error of one round is bounded by the
+        // 8-bit significand (2^-8), with exact sign preservation
+        crate::util::proptest::run_cases(30, |g| {
+            for &v in g.vec_f32(256, -1e6, 1e6).iter() {
+                let r = bf16_round(v);
+                assert!(
+                    (r - v).abs() <= v.abs() / 256.0 + f32::MIN_POSITIVE,
+                    "{v} -> {r}"
+                );
+                assert_eq!(r.is_sign_negative(), v.is_sign_negative());
+                assert_eq!(bf16_round(r), r, "rounding must be a fixpoint");
+            }
+        });
+    }
+
+    #[test]
+    fn bf16_encode_handles_specials() {
+        // ±inf map to the bf16 infinities and decode back
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7f80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xff80);
+        assert_eq!(bf16_to_f32(0x7f80), f32::INFINITY);
+        // overflow saturates to infinity (f32::MAX is above bf16 max)
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7f80);
+        assert_eq!(f32_to_bf16(-f32::MAX), 0xff80);
+        // NaN stays NaN (quieted, sign kept) — never becomes a number
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_bf16(-f32::NAN) & 0x8000, 0x8000);
+        // f32 subnormals below the bf16 grid round to signed zero
+        assert_eq!(f32_to_bf16(f32::from_bits(1)), 0x0000);
+        assert_eq!(f32_to_bf16(-f32::from_bits(1)), 0x8000);
+        // bf16 subnormals decode exactly (f32 covers their whole range)
+        let tiny = bf16_to_f32(0x0001);
+        assert!(tiny > 0.0 && tiny < f32::MIN_POSITIVE);
+        assert_eq!(f32_to_bf16(tiny), 0x0001);
+    }
+
+    #[test]
+    fn bf16_slice_codecs_roundtrip() {
+        let vals = vec![0.0f32, -1.5, 3.25, 1e30, -2e-30];
+        let enc = f32s_to_bf16s(&vals);
+        assert_eq!(enc.len(), vals.len());
+        let dec = bf16s_to_f32s(&enc);
+        // every decoded value is the RNE rounding of its source
+        for (v, d) in vals.iter().zip(dec.iter()) {
+            assert_eq!(*d, bf16_round(*v));
         }
     }
 

@@ -11,6 +11,7 @@ use optimus::coordinator::{self, DataTrace, JobSpec, JobSpecBuilder, TrainReport
 use optimus::data::{corpus, preprocess, Dataset};
 use optimus::ft::{HardKillHook, Launcher};
 use optimus::optim::ShardingMode;
+use optimus::runtime::Dtype;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -408,6 +409,54 @@ fn async_snapshots_only_block_for_capture() {
     assert_eq!((a.step, b.step), (6, 6));
     let _ = std::fs::remove_dir_all(&ck_async);
     let _ = std::fs::remove_dir_all(&ck_sync);
+}
+
+/// A `--dtype bf16` run checkpoints half-width parameter shards; resume
+/// validates the dtype: the matching plan continues cleanly, a `--dtype
+/// f32` resume is refused with the stable `[dtype]` string (silently
+/// up-converting params would shift the loss trajectory unrecorded).
+#[test]
+fn bf16_checkpoint_resumes_and_rejects_f32_plan() {
+    let Some(m) = optimus::manifest_or_skip("kill_resume::bf16_resume_dtype_gate") else {
+        return;
+    };
+    let ck = ckroot("bf16");
+    let produced = coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), 5)
+            .dtype(Dtype::Bf16)
+            .checkpoint_dir(&ck)
+            .ckpt_every(2)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert!(produced.ckpt_commits >= 2, "commits at steps 2 and 4");
+    assert!(produced.ckpt_bytes > 0, "shard payload bytes recorded");
+    // the resuming plan's default --dtype f32 mismatches the bf16 shards
+    let e = coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), 8).checkpoint_dir(&ck).build().unwrap(),
+    )
+    .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("checkpoint resume failed [dtype]"), "{msg}");
+    assert_eq!(optimus::ft::classify(&e), optimus::ft::FailureKind::Config, "{msg}");
+    // the matching dtype resumes from the step-4 checkpoint
+    let r = coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), 8)
+            .dtype(Dtype::Bf16)
+            .checkpoint_dir(&ck)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(r.loss.points.first().unwrap().0, 5);
+    for (_, l) in &r.loss.points {
+        assert!(l.is_finite());
+    }
+    let _ = std::fs::remove_dir_all(&ck);
 }
 
 /// Resuming a different model's checkpoint fails the preflight with the

@@ -7,6 +7,7 @@ use optimus::comm::Topology;
 use optimus::coordinator::{self, ep::EpComm, pipeline::Schedule, JobSpec, JobSpecBuilder};
 use optimus::data::{corpus, preprocess};
 use optimus::optim::ShardingMode;
+use optimus::runtime::Dtype;
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
@@ -293,6 +294,62 @@ fn gpipe_and_1f1b_agree() {
     for ((_, a), (_, b)) in g.loss.points.iter().zip(f.loss.points.iter()) {
         assert!((a - b).abs() < 1e-4, "gpipe {a} vs 1f1b {b}");
     }
+}
+
+#[test]
+fn bf16_dp_tracks_f32_trajectory_at_half_wire_width() {
+    // the mixed-precision acceptance gate: `--dtype bf16` (bf16 resident
+    // params + activation/gradient wires, f32 master weights) tracks the
+    // f32 loss trajectory within rounding tolerance, still learns, and
+    // moves roughly half the collective bytes
+    let Some(m) =
+        optimus::manifest_or_skip("train_modes::bf16_dp_tracks_f32_trajectory")
+    else {
+        return;
+    };
+    let steps = 12;
+    let f32_run = coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), steps)
+            .bf16_grad_reduce(false)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let bf16_run = coordinator::train(
+        &m,
+        &base(Topology::dp_only(2), steps)
+            .dtype(Dtype::Bf16)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    // trajectories coincide up to bf16 rounding, not bit-identity: the
+    // same data and init, but every wire and resident param is rounded
+    for ((s1, a), (s2, b)) in f32_run.loss.points.iter().zip(bf16_run.loss.points.iter()) {
+        assert_eq!(s1, s2);
+        assert!(b.is_finite(), "step {s1}: bf16 loss not finite");
+        assert!((a - b).abs() < 0.25, "step {s1}: f32 {a} vs bf16 {b}");
+    }
+    assert!(
+        bf16_run.loss.tail_mean(3) < bf16_run.loss.points[0].1 - 0.3,
+        "bf16 no learning: {:?}",
+        bf16_run.loss.points
+    );
+    // report contract: final params are always f32, whatever the run dtype
+    assert_eq!(bf16_run.final_params.dtype(), Dtype::F32);
+    // half-width wires: every param-sized collective (gradient reduction
+    // AND the optimizer's param allgather) rides 2-byte frames, so total
+    // traffic lands at ~50% of the all-f32 run (scalar collectives keep
+    // the ratio from being exactly half)
+    let f32_bytes = f32_run.comm_bytes_in + f32_run.comm_bytes_out;
+    let bf16_bytes = bf16_run.comm_bytes_in + bf16_run.comm_bytes_out;
+    assert!(f32_bytes > 0 && bf16_bytes > 0, "traffic counters wired");
+    let ratio = bf16_bytes as f64 / f32_bytes as f64;
+    assert!(
+        ratio <= 0.55,
+        "bf16 moved {bf16_bytes} bytes vs f32 {f32_bytes} (ratio {ratio:.3} > 0.55)"
+    );
 }
 
 #[test]
