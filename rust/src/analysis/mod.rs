@@ -1,0 +1,624 @@
+//! `optimus lint` — the repo's own invariant lint over the crate sources.
+//!
+//! Generic tooling can't know this codebase's contracts; this pass can.
+//! It walks `src/**.rs` and `tests/*.rs` with a small Rust-shaped line
+//! scanner (comment-, string- and raw-string-aware — no parser, no new
+//! dependencies) and enforces four rules the rest of the crate relies on:
+//!
+//! 1. **check-strings** — every stable failure tag of the shape
+//!    `"<domain> [<name>]"` (domains end in `failed`/`violated`, see
+//!    [`crate::ft::checks`]) must name a registered check. A typo'd tag
+//!    would silently escape [`crate::ft::classify`] and every runbook
+//!    grep.
+//! 2. **check-coverage** — the reverse direction: every registered check
+//!    must be asserted, as its full stable literal, by at least one test
+//!    (a `#[cfg(test)]` region or an integration test file). A check
+//!    nobody tests is a check that silently rots.
+//! 3. **named-spawn** — no bare `thread::spawn` outside tests: threads
+//!    must come from `std::thread::Builder` with a name (so stall dumps
+//!    and panics identify the thread) or `comm::lsync::spawn_named`.
+//! 4. **lock-discipline** — no `.lock().unwrap()` outside `comm/` and
+//!    `ckpt/` (whose rendezvous/writer protocols poison deliberately and
+//!    re-panic by design): shared-state readers elsewhere must use the
+//!    poison-tolerant [`crate::util::lock`] so one dead rank thread
+//!    doesn't cascade into every thread that later peeks at a counter.
+//! 5. **metrics-class** — every `f64` field of
+//!    [`crate::metrics::StepBreakdown`] must carry a
+//!    `class: additive|concurrent|contained` doc tag so `total()` can
+//!    never silently double-count a concurrent component.
+//!
+//! The scanner is line-based on a sanitized view of each file: comments
+//! are stripped everywhere (so `[<check>]` placeholders in docs don't
+//! trip rule 1), and for structural rules (2, 3 and the `#[cfg(test)]`
+//! region tracker) string contents are dropped too (so braces inside
+//! format strings don't corrupt region tracking, and rule text quoting a
+//! forbidden pattern doesn't flag itself).
+
+use crate::ft::checks;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, formatted `file:line: [rule] message`.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// crate-relative path, e.g. `src/comm/group.rs`
+    pub file: String,
+    /// 1-based; 0 when the finding is not anchored to a line
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}: [{}] {}", self.file, self.rule, self.msg)
+        } else {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+        }
+    }
+}
+
+/// A source file handed to [`scan`]: crate-relative path + full text.
+pub struct SrcFile {
+    pub rel: String,
+    pub text: String,
+}
+
+impl SrcFile {
+    /// Integration tests and benches are all-test: exempt from the
+    /// structural rules, still scanned (and counted) by rules 1–2.
+    fn is_test_file(&self) -> bool {
+        self.rel.starts_with("tests/") || self.rel.starts_with("benches/")
+    }
+}
+
+/// The crate directory this binary was built from — the default lint
+/// root, so `optimus lint` works from any CWD inside the checkout.
+pub fn default_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Collect `src/**.rs` and `tests/**.rs` under `root`, sorted for
+/// deterministic output.
+pub fn collect(root: &Path) -> Result<Vec<SrcFile>> {
+    let mut out = Vec::new();
+    walk(&root.join("src"), "src", &mut out)?;
+    walk(&root.join("tests"), "tests", &mut out)?;
+    if out.is_empty() {
+        return Err(anyhow!(
+            "no .rs sources under {root:?} — pass --root <crate dir>"
+        ));
+    }
+    out.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(out)
+}
+
+fn walk(dir: &Path, rel: &str, out: &mut Vec<SrcFile>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        let name = e.file_name().to_string_lossy().into_owned();
+        if p.is_dir() {
+            walk(&p, &format!("{rel}/{name}"), out)?;
+        } else if name.ends_with(".rs") {
+            out.push(SrcFile {
+                rel: format!("{rel}/{name}"),
+                text: std::fs::read_to_string(&p)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Lint the crate at `root`; empty result means clean.
+pub fn run(root: &Path) -> Result<Vec<Violation>> {
+    Ok(scan(&collect(root)?))
+}
+
+/// Pure core: lint an in-memory file set (what the self-tests seed).
+pub fn scan(files: &[SrcFile]) -> Vec<Violation> {
+    let mut domains: Vec<&'static str> = checks::CHECKS.iter().map(|c| c.domain).collect();
+    domains.dedup();
+
+    let mut v = Vec::new();
+    let mut asserted: BTreeSet<(&'static str, &'static str)> = BTreeSet::new();
+    for f in files {
+        let with_strings = sanitize(&f.text, true);
+        let code_only = sanitize(&f.text, false);
+        let mask = test_mask(&code_only, f.is_test_file());
+        check_strings(f, &with_strings, &mask, &domains, &mut v, &mut asserted);
+        if !f.is_test_file() {
+            spawn_rule(f, &code_only, &mask, &mut v);
+            lock_rule(f, &code_only, &mask, &mut v);
+        }
+        if f.rel.ends_with("metrics/mod.rs") {
+            metrics_rule(f, &mut v);
+        }
+    }
+    for c in checks::CHECKS {
+        if !asserted.contains(&(c.domain, c.name)) {
+            v.push(Violation {
+                file: "src/ft/checks.rs".into(),
+                line: 0,
+                rule: "check-coverage",
+                msg: format!(
+                    "registered check `{} [{}]` is asserted by no test — add a test \
+                     containing its full stable string",
+                    c.domain, c.name
+                ),
+            });
+        }
+    }
+    v
+}
+
+/// Rule 1 + the assertion census for rule 2. Runs on comment-stripped
+/// text *with* string contents kept (the tags live in string literals),
+/// over every line — a typo'd tag in a test assertion is as wrong as one
+/// in an error site.
+fn check_strings(
+    f: &SrcFile,
+    text: &str,
+    mask: &[bool],
+    domains: &[&'static str],
+    v: &mut Vec<Violation>,
+    asserted: &mut BTreeSet<(&'static str, &'static str)>,
+) {
+    for (ix, line) in text.lines().enumerate() {
+        for (bpos, _) in line.match_indices('[') {
+            let rest = &line[bpos + 1..];
+            let Some(end) = rest.find(']') else { continue };
+            let name = &rest[..end];
+            let tag_shaped = !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
+            if !tag_shaped {
+                continue;
+            }
+            let before = &line[..bpos];
+            if !(before.ends_with("failed ") || before.ends_with("violated ")) {
+                continue;
+            }
+            let head = &before[..before.len() - 1];
+            match domains.iter().find(|d| head.ends_with(**d)) {
+                Some(d) => match checks::CHECKS
+                    .iter()
+                    .find(|c| c.domain == **d && c.name == name)
+                {
+                    Some(c) => {
+                        if mask.get(ix) == Some(&true) {
+                            asserted.insert((c.domain, c.name));
+                        }
+                    }
+                    None => v.push(Violation {
+                        file: f.rel.clone(),
+                        line: ix + 1,
+                        rule: "check-strings",
+                        msg: format!(
+                            "`{d} [{name}]` is not registered in ft::checks::CHECKS"
+                        ),
+                    }),
+                },
+                None => v.push(Violation {
+                    file: f.rel.clone(),
+                    line: ix + 1,
+                    rule: "check-strings",
+                    msg: format!(
+                        "check-shaped tag `[{name}]` follows an unknown failure domain \
+                         (`...{}`) — route it through ft::checks",
+                        &head[head.len().saturating_sub(30)..]
+                    ),
+                }),
+            }
+        }
+    }
+}
+
+/// Rule 3: bare `thread::spawn` outside tests. The loom shim is the one
+/// place allowed to call it (loom's spawn has no named builder).
+fn spawn_rule(f: &SrcFile, code: &str, mask: &[bool], v: &mut Vec<Violation>) {
+    if f.rel == "src/comm/lsync.rs" {
+        return;
+    }
+    for (ix, line) in code.lines().enumerate() {
+        if mask.get(ix) == Some(&true) {
+            continue;
+        }
+        if line.contains("thread::spawn") {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: ix + 1,
+                rule: "named-spawn",
+                msg: "bare thread::spawn — use std::thread::Builder::new().name(..) \
+                      (joinable, shows up in stall dumps) or comm::lsync::spawn_named"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 4: `.lock().unwrap()` outside `comm/` and `ckpt/`.
+fn lock_rule(f: &SrcFile, code: &str, mask: &[bool], v: &mut Vec<Violation>) {
+    if f.rel.starts_with("src/comm/") || f.rel.starts_with("src/ckpt/") {
+        return;
+    }
+    for (ix, line) in code.lines().enumerate() {
+        if mask.get(ix) == Some(&true) {
+            continue;
+        }
+        if line.contains(".lock().unwrap()") {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: ix + 1,
+                rule: "lock-discipline",
+                msg: "`.lock().unwrap()` outside comm/ and ckpt/ — use the \
+                      poison-tolerant crate::util::lock so one panicked thread \
+                      doesn't cascade"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 5: every `StepBreakdown` `f64` field documents its accounting
+/// class, so `total()` can be audited against the tags.
+fn metrics_rule(f: &SrcFile, v: &mut Vec<Violation>) {
+    let lines: Vec<&str> = f.text.lines().collect();
+    let Some(start) = lines.iter().position(|l| l.contains("pub struct StepBreakdown")) else {
+        v.push(Violation {
+            file: f.rel.clone(),
+            line: 0,
+            rule: "metrics-class",
+            msg: "pub struct StepBreakdown not found — if it moved, update \
+                  analysis::metrics_rule"
+                .into(),
+        });
+        return;
+    };
+    for ix in start + 1..lines.len() {
+        let t = lines[ix].trim();
+        if t == "}" {
+            break;
+        }
+        if !(t.starts_with("pub ") && t.contains(": f64")) {
+            continue;
+        }
+        let mut classified = false;
+        let mut j = ix;
+        while j > start + 1 {
+            j -= 1;
+            let d = lines[j].trim();
+            if !d.starts_with("///") {
+                break;
+            }
+            if d.contains("class: additive")
+                || d.contains("class: concurrent")
+                || d.contains("class: contained")
+            {
+                classified = true;
+            }
+        }
+        if !classified {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: ix + 1,
+                rule: "metrics-class",
+                msg: format!(
+                    "StepBreakdown field `{}` lacks a `class: \
+                     additive|concurrent|contained` doc tag",
+                    t.trim_end_matches(',')
+                ),
+            });
+        }
+    }
+}
+
+/// Sanitize Rust source for line scanning: strip `//` and (nesting)
+/// `/* */` comments; handle `"…"`, `r"…"`/`r#"…"#` and char literals.
+/// With `keep_strings` the string *contents* survive (rule 1 reads
+/// them); without, only the bare quotes survive (structural rules).
+/// Newlines are preserved everywhere, so line numbers map 1:1.
+fn sanitize(text: &str, keep_strings: bool) -> String {
+    let cs: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(cs.len());
+    let mut i = 0;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            while i < cs.len() && cs[i] != '\n' {
+                i += 1;
+            }
+            continue; // the newline itself is emitted by the fall-through
+        }
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        out.push('\n');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == 'r' && !prev_is_ident(&cs, i) {
+            // raw string r"…" / r#"…"# (any hash count)
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while cs.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if cs.get(j) == Some(&'"') {
+                j += 1;
+                let content = j;
+                while j < cs.len() {
+                    if cs[j] == '"'
+                        && (0..hashes).all(|k| cs.get(j + 1 + k) == Some(&'#'))
+                    {
+                        break;
+                    }
+                    j += 1;
+                }
+                out.push('"');
+                for &ch in &cs[content..j.min(cs.len())] {
+                    if keep_strings || ch == '\n' {
+                        out.push(ch);
+                    }
+                }
+                out.push('"');
+                i = (j + 1 + hashes).min(cs.len());
+                continue;
+            }
+        }
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < cs.len() && cs[i] != '"' {
+                if cs[i] == '\\' {
+                    if keep_strings {
+                        out.push(cs[i]);
+                        if let Some(&n) = cs.get(i + 1) {
+                            out.push(n);
+                        }
+                    } else if cs.get(i + 1) == Some(&'\n') {
+                        out.push('\n');
+                    }
+                    i += 2;
+                    continue;
+                }
+                if keep_strings || cs[i] == '\n' {
+                    out.push(cs[i]);
+                }
+                i += 1;
+            }
+            out.push('"');
+            i += 1;
+            continue;
+        }
+        if c == '\'' {
+            if cs.get(i + 1) == Some(&'\\') {
+                // escaped char literal: '\n', '\'', '\u{1F600}'
+                let mut j = i + 2;
+                if cs.get(j) == Some(&'u') {
+                    while j < cs.len() && cs[j] != '\'' {
+                        j += 1;
+                    }
+                } else {
+                    j += 1;
+                }
+                out.push('\'');
+                i = (j + 1).min(cs.len());
+                continue;
+            }
+            if cs.get(i + 2) == Some(&'\'') {
+                // plain char literal — may hold '{' or '"'
+                out.push('\'');
+                i += 3;
+                continue;
+            }
+            // lifetime
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_' || cs[i - 1] == '"')
+}
+
+/// Per-line `is this line test code?` mask. `#[cfg(test)]` arms the
+/// tracker; the braces of the next item (on string-stripped text, so
+/// format-string braces can't skew the depth) delimit the region.
+fn test_mask(code: &str, whole_file_is_test: bool) -> Vec<bool> {
+    let lines: Vec<&str> = code.lines().collect();
+    if whole_file_is_test {
+        return vec![true; lines.len()];
+    }
+    let mut mask = vec![false; lines.len()];
+    let mut pending = false;
+    let mut in_test = false;
+    let mut depth: i64 = 0;
+    for (ix, line) in lines.iter().enumerate() {
+        let opens = line.matches('{').count() as i64;
+        let closes = line.matches('}').count() as i64;
+        if in_test {
+            mask[ix] = true;
+            depth += opens - closes;
+            if depth <= 0 {
+                in_test = false;
+            }
+            continue;
+        }
+        if pending {
+            mask[ix] = true;
+            if opens > 0 {
+                pending = false;
+                depth = opens - closes;
+                if depth > 0 {
+                    in_test = true;
+                }
+            } else if line.trim_end().ends_with(';') {
+                pending = false; // braceless item, e.g. a gated `use`
+            }
+            continue;
+        }
+        if line.contains("#[cfg(test)]") {
+            mask[ix] = true;
+            if opens > 0 {
+                depth = opens - closes;
+                if depth > 0 {
+                    in_test = true;
+                }
+            } else {
+                pending = true;
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(rel: &str, text: &str) -> SrcFile {
+        SrcFile { rel: rel.into(), text: text.into() }
+    }
+
+    fn rules(v: &[Violation], rule: &str) -> usize {
+        v.iter().filter(|x| x.rule == rule).count()
+    }
+
+    #[test]
+    fn sanitizer_strips_comments_and_strings() {
+        let t = "let a = 1; // x.lock().unwrap()\n/* {{{ */ let s = \"{ } [x]\";\n";
+        let code = sanitize(t, false);
+        assert!(!code.contains("lock"), "{code}");
+        assert!(!code.contains('['), "{code}");
+        assert_eq!(code.lines().count(), t.lines().count());
+        let kept = sanitize(t, true);
+        assert!(kept.contains("[x]"), "{kept}");
+        assert!(!kept.contains("unwrap"), "{kept}");
+    }
+
+    #[test]
+    fn sanitizer_handles_raw_strings_and_char_literals() {
+        let t = "let j = r#\"{\"a\": {\"b\": 1}}\"#;\nlet c = '{';\nlet s = \"one \\\n two\";\nfn f<'a>(x: &'a str) {}\n";
+        let code = sanitize(t, false);
+        // every brace inside the raw string / char literal is gone
+        assert_eq!(code.matches('{').count(), 1, "{code}");
+        assert_eq!(code.matches('}').count(), 1, "{code}");
+        assert_eq!(code.lines().count(), t.lines().count());
+        assert!(code.contains("<'a>"), "{code}");
+    }
+
+    #[test]
+    fn test_regions_are_tracked_by_braces() {
+        let t = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { let s = \"}\"; }\n}\nfn c() {}\n";
+        let mask = test_mask(&sanitize(t, false), false);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn unregistered_check_string_is_flagged() {
+        // assemble the tag at runtime so linting *this* file stays clean
+        let text = format!(
+            "fn f() -> anyhow::Error {{\n    anyhow::anyhow!(\"plan validation {} [no-such-check]: boom\")\n}}\n",
+            "failed"
+        );
+        let v = scan(&[src("src/foo.rs", &text)]);
+        assert_eq!(rules(&v, "check-strings"), 1, "{v:?}");
+        assert!(v.iter().any(|x| x.msg.contains("no-such-check")), "{v:?}");
+
+        let text = format!("const T: &str = \"quota exceeded {} [retry]\";\n", "failed");
+        let v = scan(&[src("src/foo.rs", &text)]);
+        assert_eq!(rules(&v, "check-strings"), 1, "unknown domain must flag: {v:?}");
+
+        // comments and doc placeholders never trip the rule
+        let text = format!("// plan validation {} [nope]\n/// `{} [<check>]`\n", "failed", "violated");
+        let v = scan(&[src("src/foo.rs", &text)]);
+        assert_eq!(rules(&v, "check-strings"), 0, "{v:?}");
+    }
+
+    #[test]
+    fn every_registered_check_needs_a_test_assertion() {
+        // a file set with no test literals at all: every check uncovered
+        let v = scan(&[src("src/foo.rs", "fn a() {}\n")]);
+        assert_eq!(rules(&v, "check-coverage"), checks::CHECKS.len());
+
+        // a test file asserting every registered tag: zero uncovered
+        let mut t = String::from("fn all() {\n");
+        for c in checks::CHECKS {
+            t.push_str(&format!(
+                "    assert!(e.contains(\"{} [{}]\"));\n",
+                c.domain, c.name
+            ));
+        }
+        t.push_str("}\n");
+        let v = scan(&[src("tests/cover.rs", &t)]);
+        assert_eq!(rules(&v, "check-coverage"), 0, "{v:?}");
+        // ...and the same literals inside a src #[cfg(test)] region count too
+        let t2 = format!("#[cfg(test)]\nmod tests {{\n{}}}\n", &t);
+        let v = scan(&[src("src/foo.rs", &t2)]);
+        assert_eq!(rules(&v, "check-coverage"), 0, "{v:?}");
+    }
+
+    #[test]
+    fn spawn_and_lock_rules_respect_regions_and_exemptions() {
+        let bad = "fn f() {\n    std::thread::spawn(|| {});\n    let g = m.lock().unwrap();\n}\n";
+        let v = scan(&[src("src/foo.rs", bad)]);
+        assert_eq!(rules(&v, "named-spawn"), 1, "{v:?}");
+        assert_eq!(rules(&v, "lock-discipline"), 1, "{v:?}");
+
+        // the same text is fine in a test region, a test file, or comm/
+        let in_test = format!("#[cfg(test)]\nmod tests {{\n{bad}}}\n");
+        let v = scan(&[src("src/foo.rs", &in_test)]);
+        assert_eq!(rules(&v, "named-spawn") + rules(&v, "lock-discipline"), 0, "{v:?}");
+        let v = scan(&[src("tests/foo.rs", bad)]);
+        assert_eq!(rules(&v, "named-spawn") + rules(&v, "lock-discipline"), 0, "{v:?}");
+        let v = scan(&[src("src/comm/foo.rs", bad), src("src/ckpt/bar.rs", bad)]);
+        assert_eq!(rules(&v, "lock-discipline"), 0, "{v:?}");
+        assert_eq!(rules(&v, "named-spawn"), 2, "comm is not spawn-exempt: {v:?}");
+        let v = scan(&[src("src/comm/lsync.rs", bad)]);
+        assert_eq!(rules(&v, "named-spawn"), 0, "{v:?}");
+    }
+
+    #[test]
+    fn unclassified_breakdown_field_is_flagged() {
+        let m = "pub struct StepBreakdown {\n    /// class: additive\n    pub a_secs: f64,\n    /// no tag here\n    pub b_secs: f64,\n}\n";
+        let v = scan(&[src("src/metrics/mod.rs", m)]);
+        assert_eq!(rules(&v, "metrics-class"), 1, "{v:?}");
+        assert!(v.iter().any(|x| x.msg.contains("b_secs")), "{v:?}");
+    }
+
+    #[test]
+    fn the_repo_lints_clean() {
+        // the acceptance gate: `optimus lint` over this very checkout
+        let v = run(&default_root()).unwrap();
+        let report: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        assert!(v.is_empty(), "repo lint violations:\n{}", report.join("\n"));
+    }
+}

@@ -484,7 +484,11 @@ pub struct SavedCheckpoint {
 impl SavedCheckpoint {
     pub fn load_dir(dir: &Path) -> Result<SavedCheckpoint> {
         let bad = |what: &str| {
-            anyhow!("checkpoint resume failed [manifest]: {what} in {dir:?}")
+            crate::ft::checks::err(
+                crate::ft::checks::RESUME,
+                "manifest",
+                format!("{what} in {dir:?}"),
+            )
         };
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .map_err(|_| bad("no manifest.json"))?;

@@ -148,9 +148,13 @@ impl Checkpoint {
         let Some(p) = &self.plan else { return Ok(()) };
         let model = |fp: &str| fp.split('/').next().unwrap_or("");
         if model(p) != model(expected) {
-            return Err(anyhow!(
-                "checkpoint resume failed [model]: checkpoint was written for `{p}`, \
-                 resuming `{expected}` — a different model cannot be resharded"
+            return Err(crate::ft::checks::err(
+                crate::ft::checks::RESUME,
+                "model",
+                format!(
+                    "checkpoint was written for `{p}`, resuming `{expected}` — a \
+                     different model cannot be resharded"
+                ),
             ));
         }
         if self.is_model_only() {
@@ -704,6 +708,23 @@ mod tests {
         let rs = ResumeState::open(&saved).unwrap();
         let got = rs.assemble_params(16).unwrap();
         assert_eq!(got, (0..16).map(|i| i as f32).collect::<Vec<f32>>());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_shard_file_is_a_manifest_violation() {
+        let d = tmp("missing");
+        let ck = Checkpointer::new(&d, FP, 1, &sync_policy(&d)).unwrap();
+        ck.submit(1, 0, one_part_state(vec![1.0; 4])).unwrap();
+        ck.drain().unwrap();
+        // the manifest survives but a shard file vanishes (partial
+        // restore of a backup, filesystem loss): open must fail with the
+        // stable [manifest] string, not a bare io error
+        std::fs::remove_file(d.join("ckpt-00000001").join("r0.params.s0.bin")).unwrap();
+        let saved = SavedCheckpoint::load_latest(&d).unwrap();
+        let e = ResumeState::open(&saved).unwrap_err().to_string();
+        assert!(e.contains("checkpoint resume failed [manifest]"), "{e}");
+        assert!(e.contains("r0.params.s0.bin"), "{e}");
         std::fs::remove_dir_all(&d).unwrap();
     }
 

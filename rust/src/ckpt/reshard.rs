@@ -24,9 +24,9 @@
 use super::checkpointer::SavedCheckpoint;
 use super::state::{GlobalRun, StatePart};
 use super::{bytes_to_f32s, bytes_to_u16s, checksum};
+use crate::ft::checks;
 use crate::util::bf16s_to_f32s;
 use crate::Result;
-use anyhow::anyhow;
 use std::collections::BTreeMap;
 
 /// One loaded shard run: a global interval and its data.
@@ -55,17 +55,17 @@ impl ResumeState {
         let mut param_dtype: Option<String> = None;
         for p in &saved.parts {
             let bytes = std::fs::read(saved.dir.join(&p.file)).map_err(|_| {
-                anyhow!(
-                    "checkpoint resume failed [manifest]: shard file `{}` is missing \
-                     from {:?}",
-                    p.file,
-                    saved.dir
+                checks::err(
+                    checks::RESUME,
+                    "manifest",
+                    format!("shard file `{}` is missing from {:?}", p.file, saved.dir),
                 )
             })?;
             if format!("{:016x}", checksum(&bytes)) != p.checksum {
-                return Err(anyhow!(
-                    "checkpoint resume failed [checksum]: shard `{}` is corrupt",
-                    p.file
+                return Err(checks::err(
+                    checks::RESUME,
+                    "checksum",
+                    format!("shard `{}` is corrupt", p.file),
                 ));
             }
             // decode at the part's recorded storage width; bf16 shards
@@ -75,16 +75,16 @@ impl ResumeState {
                 _ => bytes_to_f32s(&bytes),
             }
             .map_err(|e| {
-                anyhow!("checkpoint resume failed [checksum]: shard `{}`: {e}", p.file)
+                checks::err(checks::RESUME, "checksum", format!("shard `{}`: {e}", p.file))
             })?;
             if StatePart::component(&p.name) == "params" {
                 match &param_dtype {
                     None => param_dtype = Some(p.dtype.clone()),
                     Some(d) if d != &p.dtype => {
-                        return Err(anyhow!(
-                            "checkpoint resume failed [dtype]: parameter shards mix \
-                             dtypes `{d}` and `{}`",
-                            p.dtype
+                        return Err(checks::err(
+                            checks::RESUME,
+                            "dtype",
+                            format!("parameter shards mix dtypes `{d}` and `{}`", p.dtype),
                         ))
                     }
                     Some(_) => {}
@@ -92,11 +92,14 @@ impl ResumeState {
             }
             let total: usize = p.runs.iter().map(|r| r.1).sum();
             if vals.len() != total {
-                return Err(anyhow!(
-                    "checkpoint resume failed [manifest]: shard `{}` holds {} values, \
-                     its manifest runs describe {total}",
-                    p.file,
-                    vals.len()
+                return Err(checks::err(
+                    checks::RESUME,
+                    "manifest",
+                    format!(
+                        "shard `{}` holds {} values, its manifest runs describe {total}",
+                        p.file,
+                        vals.len()
+                    ),
                 ));
             }
             let comp = StatePart::component(&p.name).to_string();
@@ -131,10 +134,14 @@ impl ResumeState {
     /// record of it.
     pub fn validate_dtype(&self, plan_dtype: &str) -> Result<()> {
         if self.param_dtype != plan_dtype {
-            return Err(anyhow!(
-                "checkpoint resume failed [dtype]: checkpoint holds `{}` parameter \
-                 shards, the resuming plan is --dtype {plan_dtype}",
-                self.param_dtype
+            return Err(checks::err(
+                checks::RESUME,
+                "dtype",
+                format!(
+                    "checkpoint holds `{}` parameter shards, the resuming plan is \
+                     --dtype {plan_dtype}",
+                    self.param_dtype
+                ),
             ));
         }
         Ok(())
@@ -162,19 +169,26 @@ impl ResumeState {
     /// differ freely.
     pub fn validate(&self, model: &str, param_count: usize) -> Result<()> {
         if self.model() != model {
-            return Err(anyhow!(
-                "checkpoint resume failed [model]: checkpoint was written for `{}` \
-                 (plan `{}`), this job trains `{model}` — a different model cannot \
-                 be resharded",
-                self.model(),
-                self.plan
+            return Err(checks::err(
+                checks::RESUME,
+                "model",
+                format!(
+                    "checkpoint was written for `{}` (plan `{}`), this job trains \
+                     `{model}` — a different model cannot be resharded",
+                    self.model(),
+                    self.plan
+                ),
             ));
         }
         let cov = self.coverage("params");
         if cov != vec![(0, param_count)] {
-            return Err(anyhow!(
-                "checkpoint resume failed [param-count]: saved parameter shards cover \
-                 {cov:?}, the model needs exactly [(0, {param_count})]"
+            return Err(checks::err(
+                checks::RESUME,
+                "param-count",
+                format!(
+                    "saved parameter shards cover {cov:?}, the model needs exactly \
+                     [(0, {param_count})]"
+                ),
             ));
         }
         Ok(())
@@ -246,7 +260,7 @@ impl ResumeState {
     pub fn gather(&self, comp: &str, runs: &[GlobalRun], local_len: usize) -> Result<Vec<f32>> {
         let mut out = vec![0.0f32; local_len];
         let saved = self.comps.get(comp).ok_or_else(|| {
-            anyhow!("checkpoint resume failed [coverage]: checkpoint has no `{comp}` shards")
+            checks::err(checks::RESUME, "coverage", format!("checkpoint has no `{comp}` shards"))
         })?;
         for want in runs {
             let mut pos = want.global_start;
@@ -256,9 +270,13 @@ impl ResumeState {
                     .iter()
                     .find(|r| r.global_start <= pos && pos < r.global_start + r.data.len())
                     .ok_or_else(|| {
-                        anyhow!(
-                            "checkpoint resume failed [coverage]: `{comp}` global range \
-                             [{pos}, {end}) is not covered by any saved shard"
+                        checks::err(
+                            checks::RESUME,
+                            "coverage",
+                            format!(
+                                "`{comp}` global range [{pos}, {end}) is not covered \
+                                 by any saved shard"
+                            ),
                         )
                     })?;
                 let take = (end - pos).min(r.global_start + r.data.len() - pos);

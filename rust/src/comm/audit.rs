@@ -1,0 +1,269 @@
+//! Collective **protocol auditor**: fail fast on rendezvous misuse.
+//!
+//! The rendezvous in [`super::Group`] assumes SPMD discipline — every
+//! member issues the *same* collectives on a group in the *same* program
+//! order. At scale the violation mode is not a crash but a silent
+//! corruption (two different ops zipped into one reduction) or a hang
+//! (one rank off by a round). The auditor turns both into an immediate,
+//! attributable failure:
+//!
+//! * every deposit carries an [`OpDesc`] (op kind, payload length, wire
+//!   dtype);
+//! * the **first arrival of a round pins** the round's descriptor;
+//! * any mismatching later arrival fails the whole group with a stable
+//!   `collective protocol violated [order|shape|dtype]` error
+//!   ([`crate::ft::checks::PROTOCOL`]), poisoning the group so compliant
+//!   peers unblock instead of waiting forever;
+//! * the auditor also remembers each member's **last deposited op**, so
+//!   the deadlock watchdog's `[stall]` dump can report
+//!   `rank 0 last seen at reduce_scatter round 17` for every peer.
+//!
+//! Classification: `order`/`shape`/`dtype` are deterministic program
+//! bugs → [`FailureKind::Config`](crate::ft::FailureKind) (relaunching
+//! replays the same program order); `stall` → `Hard` (the dominant cause
+//! is a dead peer, which a relaunch on a buffer node fixes).
+
+use crate::ft::checks;
+use std::fmt;
+
+/// Which collective a member deposited into the round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Allreduce,
+    AllreduceMax,
+    ReduceScatter,
+    Allgather,
+    All2All,
+    /// root consistency is part of the protocol: two members disagreeing
+    /// on the broadcast root is an order violation
+    Broadcast { root: usize },
+    Barrier,
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpKind::Allreduce => write!(f, "allreduce"),
+            OpKind::AllreduceMax => write!(f, "allreduce_max"),
+            OpKind::ReduceScatter => write!(f, "reduce_scatter"),
+            OpKind::Allgather => write!(f, "allgather"),
+            OpKind::All2All => write!(f, "all2all"),
+            OpKind::Broadcast { root } => write!(f, "broadcast(root={root})"),
+            OpKind::Barrier => write!(f, "barrier"),
+        }
+    }
+}
+
+/// Element width a contribution travels at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireDtype {
+    F32,
+    Bf16,
+}
+
+impl fmt::Display for WireDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireDtype::F32 => write!(f, "f32"),
+            WireDtype::Bf16 => write!(f, "bf16"),
+        }
+    }
+}
+
+/// One member's deposit descriptor for a rendezvous round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpDesc {
+    pub kind: OpKind,
+    /// element count, for ops whose members must contribute equal
+    /// lengths (allreduce / reduce_scatter: a mismatch would silently
+    /// truncate the elementwise zip). `None` for ragged-legal ops
+    /// (allgather, all2all) and broadcast (non-roots deposit empty).
+    pub len: Option<usize>,
+    pub dtype: WireDtype,
+}
+
+impl fmt::Display for OpDesc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.len {
+            Some(n) => write!(f, "{} (len {n}, {})", self.kind, self.dtype),
+            None => write!(f, "{} ({})", self.kind, self.dtype),
+        }
+    }
+}
+
+/// A failed collective, as seen by one member. The `Display` strings are
+/// the crate's stable failure contract — tests assert them and
+/// [`crate::ft::classify`] routes on them.
+#[derive(Debug)]
+pub enum CommFault {
+    /// this member (or a peer in the same round) broke the protocol
+    Violated {
+        /// registered check name under [`checks::PROTOCOL`]:
+        /// `order` / `shape` / `dtype` / `stall`
+        check: &'static str,
+        detail: String,
+    },
+    /// a peer rank died (or violated the protocol first); the group is
+    /// poisoned and every pending/future collective on it fails
+    Poisoned,
+}
+
+impl fmt::Display for CommFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommFault::Violated { check, detail } => {
+                write!(f, "{}", checks::msg(checks::PROTOCOL, check, detail))
+            }
+            CommFault::Poisoned => write!(f, "comm group poisoned: a peer rank failed"),
+        }
+    }
+}
+
+impl std::error::Error for CommFault {}
+
+/// Per-round protocol state, embedded in the group's `RoundState` (so it
+/// is guarded by the same mutex as the deposits it audits).
+pub(super) struct Audit {
+    /// the active round's descriptor and the rank that pinned it
+    pinned: Option<(OpDesc, usize)>,
+    /// each member's last deposited op and its round — survives round
+    /// resets; this is what the `[stall]` dump prints
+    last: Vec<Option<(OpDesc, u64)>>,
+}
+
+impl Audit {
+    pub(super) fn new(size: usize) -> Audit {
+        Audit { pinned: None, last: (0..size).map(|_| None).collect() }
+    }
+
+    /// Record `rank`'s deposit for `round` and verify it against the
+    /// round's pinned descriptor (pinning it if `rank` arrived first).
+    pub(super) fn check(&mut self, rank: usize, round: u64, desc: OpDesc) -> Result<(), CommFault> {
+        // record first: even a violating deposit is "last seen" evidence
+        // for whoever dumps the table afterwards
+        self.last[rank] = Some((desc, round));
+        let Some((pinned, pinner)) = self.pinned else {
+            self.pinned = Some((desc, rank));
+            return Ok(());
+        };
+        let blame = |check, what: &str| CommFault::Violated {
+            check,
+            detail: format!(
+                "rank {rank} deposited {desc} into round {round}, but rank {pinner} \
+                 pinned the round to {pinned} — {what}"
+            ),
+        };
+        if desc.kind != pinned.kind {
+            return Err(blame("order", "members disagree on which collective this round is"));
+        }
+        if desc.dtype != pinned.dtype {
+            return Err(blame("dtype", "members disagree on the wire dtype"));
+        }
+        if let (Some(a), Some(b)) = (desc.len, pinned.len) {
+            if a != b {
+                return Err(blame(
+                    "shape",
+                    "equal-contribution op with mismatched payload lengths",
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The active round has fully drained; the next round pins afresh.
+    pub(super) fn round_drained(&mut self) {
+        self.pinned = None;
+    }
+
+    /// Per-rank last-op table for the watchdog dump, one line per member.
+    pub(super) fn table(&self, group: &str) -> String {
+        let mut out = String::new();
+        for (r, seen) in self.last.iter().enumerate() {
+            match seen {
+                Some((desc, round)) => out.push_str(&format!(
+                    "  rank {r} last seen at {desc} round {round} on group `{group}`\n"
+                )),
+                None => out.push_str(&format!(
+                    "  rank {r} never deposited on group `{group}`\n"
+                )),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ar(len: usize, dtype: WireDtype) -> OpDesc {
+        OpDesc { kind: OpKind::Allreduce, len: Some(len), dtype }
+    }
+
+    #[test]
+    fn first_arrival_pins_matching_members_pass() {
+        let mut a = Audit::new(3);
+        a.check(1, 0, ar(8, WireDtype::F32)).unwrap();
+        a.check(0, 0, ar(8, WireDtype::F32)).unwrap();
+        a.check(2, 0, ar(8, WireDtype::F32)).unwrap();
+        a.round_drained();
+        // next round re-pins: a different (consistent) op is fine
+        let ag = OpDesc { kind: OpKind::Allgather, len: None, dtype: WireDtype::F32 };
+        a.check(0, 1, ag).unwrap();
+        a.check(1, 1, ag).unwrap();
+    }
+
+    #[test]
+    fn kind_mismatch_is_an_order_violation() {
+        let mut a = Audit::new(2);
+        a.check(0, 4, ar(8, WireDtype::F32)).unwrap();
+        let e = a
+            .check(1, 4, OpDesc { kind: OpKind::Allgather, len: None, dtype: WireDtype::F32 })
+            .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("collective protocol violated [order]"), "{msg}");
+        assert!(msg.contains("rank 1") && msg.contains("rank 0"), "{msg}");
+        assert!(msg.contains("allgather") && msg.contains("allreduce"), "{msg}");
+    }
+
+    #[test]
+    fn len_mismatch_is_a_shape_violation_only_for_equal_contribution_ops() {
+        let mut a = Audit::new(2);
+        a.check(0, 0, ar(8, WireDtype::F32)).unwrap();
+        let e = a.check(1, 0, ar(9, WireDtype::F32)).unwrap_err();
+        assert!(e.to_string().contains("collective protocol violated [shape]"), "{e}");
+        // ragged allgather: len is None, never compared
+        let mut a = Audit::new(2);
+        let ag = |l| OpDesc { kind: OpKind::Allgather, len: l, dtype: WireDtype::F32 };
+        a.check(0, 0, ag(None)).unwrap();
+        a.check(1, 0, ag(None)).unwrap();
+    }
+
+    #[test]
+    fn dtype_mismatch_is_a_dtype_violation() {
+        let mut a = Audit::new(2);
+        a.check(0, 0, ar(8, WireDtype::F32)).unwrap();
+        let e = a.check(1, 0, ar(8, WireDtype::Bf16)).unwrap_err();
+        assert!(e.to_string().contains("collective protocol violated [dtype]"), "{e}");
+    }
+
+    #[test]
+    fn broadcast_root_disagreement_is_an_order_violation() {
+        let mut a = Audit::new(2);
+        let bc = |root| OpDesc { kind: OpKind::Broadcast { root }, len: None, dtype: WireDtype::F32 };
+        a.check(0, 0, bc(0)).unwrap();
+        let e = a.check(1, 0, bc(1)).unwrap_err();
+        assert!(e.to_string().contains("[order]"), "{e}");
+    }
+
+    #[test]
+    fn last_op_table_reports_stragglers() {
+        let mut a = Audit::new(3);
+        a.check(0, 17, OpDesc { kind: OpKind::ReduceScatter, len: Some(4), dtype: WireDtype::F32 })
+            .unwrap();
+        let t = a.table("dp[0]");
+        assert!(t.contains("rank 0 last seen at reduce_scatter (len 4, f32) round 17"), "{t}");
+        assert!(t.contains("rank 1 never deposited"), "{t}");
+        assert!(t.contains("rank 2 never deposited"), "{t}");
+    }
+}

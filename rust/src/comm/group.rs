@@ -6,11 +6,29 @@
 //! slot for the next round. Rounds are strictly ordered per group, which
 //! matches the deterministic program order of collectives in SPMD
 //! training.
+//!
+//! Two guards make protocol misuse fail fast instead of hanging or
+//! silently corrupting (DESIGN.md §12):
+//!
+//! * every deposit carries an [`OpDesc`] checked by the round's
+//!   [`Audit`](super::audit) — the first arrival pins the round, any
+//!   mismatching member fails the group with a stable
+//!   `collective protocol violated [order|shape|dtype]` error;
+//! * a **deadlock watchdog**: condvar waits are bounded by a configurable
+//!   stall timeout ([`Group::set_stall_timeout`], default
+//!   `OPTIMUS_STALL_TIMEOUT_SECS` or 180 s); on expiry the waiter dumps
+//!   the per-rank last-op table and fails with
+//!   `collective protocol violated [stall]`.
+//!
+//! The sync primitives come from [`super::lsync`], so `--cfg loom` builds
+//! model-check the whole rendezvous state machine (`tests/loom_models.rs`).
 
+use super::audit::{Audit, CommFault, OpDesc, OpKind, WireDtype};
+use super::lsync::{AtomicBool, Condvar, Mutex, MutexGuard};
 use super::runtime::{CommHandle, CommRuntime};
 use crate::util::{bf16s_to_f32s, f32s_to_bf16s};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 /// Gradient-reduction dtype (paper §2.1 trains with bfloat16 gradient
 /// reduction; f32 is the ablation baseline).
@@ -18,6 +36,15 @@ use std::sync::{Arc, Condvar, Mutex};
 pub enum ReduceDtype {
     F32,
     Bf16,
+}
+
+impl From<ReduceDtype> for WireDtype {
+    fn from(dt: ReduceDtype) -> WireDtype {
+        match dt {
+            ReduceDtype::F32 => WireDtype::F32,
+            ReduceDtype::Bf16 => WireDtype::Bf16,
+        }
+    }
 }
 
 /// What actually travels the simulated fabric: 4-byte f32 words or 2-byte
@@ -52,23 +79,41 @@ impl Wire {
             Wire::Bf16(v) => bf16s_to_f32s(&v),
         }
     }
+}
 
-    fn to_f32(&self) -> Vec<f32> {
-        match self {
-            Wire::F32(v) => v.clone(),
-            Wire::Bf16(v) => bf16s_to_f32s(v),
+/// A round's published result. The publisher (last arrival) decodes a
+/// bf16 wire to f32 **once**, under the lock, so the N members picking
+/// the result up share one decode instead of each re-decoding the full
+/// payload behind the `Arc`.
+struct Published {
+    wire: Wire,
+    /// f32 view of a bf16 `wire`; `None` for f32 wires (the wire *is*
+    /// the view) and for ops whose consumers want raw storage bits
+    /// (`allgather_bf16`)
+    decoded: Option<Vec<f32>>,
+}
+
+impl Published {
+    fn as_f32(&self) -> &[f32] {
+        match (&self.wire, &self.decoded) {
+            (Wire::F32(v), _) => v,
+            (Wire::Bf16(_), Some(d)) => d,
+            (Wire::Bf16(_), None) => {
+                unreachable!("bf16 result published without a decode for an f32 consumer")
+            }
         }
     }
 }
 
-#[derive(Default)]
 struct RoundState {
     round: u64,
     arrived: usize,
     departed: usize,
     contribs: Vec<Option<Wire>>,
     /// full result (allreduce/allgather) — members slice their share
-    result: Option<Arc<Wire>>,
+    result: Option<Arc<Published>>,
+    /// protocol auditor, under the same lock as the deposits it audits
+    audit: Audit,
 }
 
 /// Byte/operation counters for calibration of the cluster model.
@@ -81,30 +126,65 @@ pub struct CommStats {
 
 pub struct Group {
     size: usize,
+    /// shown in every violation / stall / dump message ("dp[0]", "world")
+    label: String,
     state: Mutex<RoundState>,
     cv: Condvar,
     ops: AtomicU64,
     bytes_in: AtomicU64,
     bytes_out: AtomicU64,
-    /// set when a member died: all waiting/future members panic instead
-    /// of blocking forever (a dead node hangs its peers; the launcher
-    /// classifies the resulting abort as a hard failure)
-    poisoned: std::sync::atomic::AtomicBool,
+    /// bf16 result decodes performed by publishers — exactly one per
+    /// decoded round, never one per member (asserted in tests)
+    decodes: AtomicU64,
+    /// deadlock-watchdog limit for one condvar wait, in milliseconds
+    stall_timeout_ms: AtomicU64,
+    /// set when a member died or violated the protocol: all waiting and
+    /// future members fail instead of blocking forever (a dead node hangs
+    /// its peers; the launcher classifies the resulting abort)
+    poisoned: AtomicBool,
+}
+
+fn default_stall_ms() -> u64 {
+    static MS: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    *MS.get_or_init(|| {
+        std::env::var("OPTIMUS_STALL_TIMEOUT_SECS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(|s| (s * 1000).max(1))
+            .unwrap_or(180_000)
+    })
 }
 
 impl Group {
     pub fn new(size: usize) -> Arc<Group> {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let id = NEXT.fetch_add(1, Ordering::Relaxed);
+        Group::new_labeled(size, &format!("g{id}"))
+    }
+
+    /// Group with a stable `label` (the mesh names its groups `dp[i]` /
+    /// `ep[i]` / `dpep[i]` / `world`) used in protocol-violation and
+    /// stall messages.
+    pub fn new_labeled(size: usize, label: &str) -> Arc<Group> {
         assert!(size > 0);
-        let mut st = RoundState::default();
-        st.contribs = (0..size).map(|_| None).collect();
         Arc::new(Group {
             size,
-            state: Mutex::new(st),
+            label: label.to_string(),
+            state: Mutex::new(RoundState {
+                round: 0,
+                arrived: 0,
+                departed: 0,
+                contribs: (0..size).map(|_| None).collect(),
+                result: None,
+                audit: Audit::new(size),
+            }),
             cv: Condvar::new(),
             ops: AtomicU64::new(0),
             bytes_in: AtomicU64::new(0),
             bytes_out: AtomicU64::new(0),
-            poisoned: std::sync::atomic::AtomicBool::new(false),
+            decodes: AtomicU64::new(0),
+            stall_timeout_ms: AtomicU64::new(default_stall_ms()),
+            poisoned: AtomicBool::new(false),
         })
     }
 
@@ -112,18 +192,35 @@ impl Group {
         self.size
     }
 
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Watchdog limit for a single collective wait. Waits exceeding it
+    /// poison the group and fail with
+    /// `collective protocol violated [stall]` plus a per-rank last-op
+    /// dump. Default: `OPTIMUS_STALL_TIMEOUT_SECS` (env) or 180 s.
+    pub fn set_stall_timeout(&self, d: std::time::Duration) {
+        self.stall_timeout_ms
+            .store((d.as_millis() as u64).max(1), Ordering::Relaxed);
+    }
+
     /// Mark the group dead (a member rank failed). Wakes all waiters,
-    /// which panic out of their collectives.
+    /// which fail out of their collectives.
     pub fn poison(&self) {
-        self.poisoned.store(true, Ordering::SeqCst);
         let _guard = self.state.lock().unwrap();
+        self.poison_locked();
+    }
+
+    /// Poison while already holding the state lock (a locked `poison()`
+    /// would deadlock on itself).
+    fn poison_locked(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
         self.cv.notify_all();
     }
 
-    fn check_poison(&self) {
-        if self.poisoned.load(Ordering::SeqCst) {
-            panic!("comm group poisoned: a peer rank failed");
-        }
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
     }
 
     /// Both-direction traffic counters at actual wire width: `bytes_in`
@@ -146,44 +243,155 @@ impl Group {
         self.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
-    /// Core rendezvous: deposit `mine`, the last arrival runs `combine`
-    /// over all contributions, everyone receives the shared result.
+    #[cfg(not(loom))]
+    fn deadline(&self) -> std::time::Instant {
+        std::time::Instant::now()
+            + std::time::Duration::from_millis(self.stall_timeout_ms.load(Ordering::Relaxed))
+    }
+
+    // loom has no clock; the watchdog is compiled out of the model and
+    // the deadline degenerates to a unit value threaded through the waits
+    #[cfg(loom)]
+    fn deadline(&self) {}
+
+    /// One bounded condvar wait. Returns the re-acquired guard, or the
+    /// fault that ends this member's collective: `Poisoned` when a peer
+    /// died, `[stall]` when the watchdog deadline expired with the round
+    /// still incomplete (which also poisons the group so every peer
+    /// unblocks).
+    #[cfg(not(loom))]
+    fn wait_step<'a>(
+        &self,
+        st: MutexGuard<'a, RoundState>,
+        deadline: std::time::Instant,
+        rank: usize,
+        desc: &OpDesc,
+    ) -> Result<MutexGuard<'a, RoundState>, CommFault> {
+        // check *before* waiting: the poison notify fires under the state
+        // lock, so a flag set before this member parked would otherwise be
+        // a lost wakeup (the watchdog would eventually fire, but the peer
+        // death is the root cause, not a stall)
+        if self.is_poisoned() {
+            return Err(CommFault::Poisoned);
+        }
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            let fault = self.stall_fault(&st, rank, desc);
+            self.poison_locked();
+            return Err(fault);
+        }
+        let (g, _timed_out) = self.cv.wait_timeout(st, deadline - now).unwrap();
+        if self.is_poisoned() {
+            return Err(CommFault::Poisoned);
+        }
+        Ok(g)
+    }
+
+    #[cfg(loom)]
+    fn wait_step<'a>(
+        &self,
+        st: MutexGuard<'a, RoundState>,
+        _deadline: (),
+        _rank: usize,
+        _desc: &OpDesc,
+    ) -> Result<MutexGuard<'a, RoundState>, CommFault> {
+        // pre-wait poison check: same lost-wakeup guard as the std build
+        // (loom's model checker is what caught the missing check)
+        if self.is_poisoned() {
+            return Err(CommFault::Poisoned);
+        }
+        let g = self.cv.wait(st).unwrap();
+        if self.is_poisoned() {
+            return Err(CommFault::Poisoned);
+        }
+        Ok(g)
+    }
+
+    /// The watchdog fired: build the per-rank last-op dump, e.g.
+    /// `rank 3 waiting on allreduce round 17 ... rank 0 last seen at
+    /// reduce_scatter round 17`.
+    #[cfg(not(loom))]
+    fn stall_fault(&self, st: &RoundState, rank: usize, desc: &OpDesc) -> CommFault {
+        let secs = self.stall_timeout_ms.load(Ordering::Relaxed) as f64 / 1e3;
+        CommFault::Violated {
+            check: "stall",
+            detail: format!(
+                "rank {rank} waiting on {desc} round {} on group `{}` made no progress \
+                 for {secs:.1}s; per-rank last deposits:\n{}",
+                st.round,
+                self.label,
+                st.audit.table(&self.label)
+            ),
+        }
+    }
+
+    /// Core rendezvous: deposit `mine` under `desc`, the last arrival
+    /// runs `combine` over all contributions (and decodes a bf16 result
+    /// once when `decode` is set), everyone receives the shared result.
     ///
     /// Rounds are strictly ordered: an early finisher re-entering for
     /// round r+1 parks until round r has fully drained (a departure
     /// requires the result to be set, and the reset only happens after
     /// all `size` departures — so deposits can never leak across rounds).
-    fn rendezvous<F>(&self, rank: usize, mine: Wire, combine: F) -> Arc<Wire>
+    ///
+    /// Fails fast instead of hanging: the auditor rejects descriptor
+    /// mismatches, the watchdog bounds every wait, and a failure from
+    /// either poisons the group so all peers unblock.
+    fn rendezvous<F>(
+        &self,
+        rank: usize,
+        desc: OpDesc,
+        mine: Wire,
+        decode: bool,
+        combine: F,
+    ) -> Result<Arc<Published>, CommFault>
     where
         F: FnOnce(&mut Vec<Option<Wire>>) -> Wire,
     {
         assert!(rank < self.size);
-        self.check_poison();
+        if self.is_poisoned() {
+            return Err(CommFault::Poisoned);
+        }
         self.account_in(mine.bytes());
+        let deadline = self.deadline();
         let mut st = self.state.lock().unwrap();
         // Previous round still draining (result published but not all
         // members have departed): wait for the reset.
         while st.result.is_some() {
-            st = self.cv.wait(st).unwrap();
-            self.check_poison();
+            st = self.wait_step(st, deadline, rank, &desc)?;
         }
-        debug_assert!(st.contribs[rank].is_none(),
-            "rank {rank} deposited twice in one round");
         let my_round = st.round;
+        if let Err(fault) = st.audit.check(rank, my_round, desc) {
+            // the round can never complete coherently — fail the whole
+            // group so compliant peers unblock with `Poisoned` instead of
+            // waiting on a deposit that will not come
+            self.poison_locked();
+            return Err(fault);
+        }
+        debug_assert!(
+            st.contribs[rank].is_none(),
+            "rank {rank} deposited twice in one round"
+        );
         st.contribs[rank] = Some(mine);
         st.arrived += 1;
         if st.arrived == self.size {
-            let res = combine(&mut st.contribs);
-            st.result = Some(Arc::new(res));
+            let wire = combine(&mut st.contribs);
+            let decoded = match (&wire, decode) {
+                (Wire::Bf16(v), true) => {
+                    self.decodes.fetch_add(1, Ordering::Relaxed);
+                    Some(bf16s_to_f32s(v))
+                }
+                _ => None,
+            };
+            st.result = Some(Arc::new(Published { wire, decoded }));
             self.cv.notify_all();
         } else {
             while !(st.result.is_some() && st.round == my_round) {
-                st = self.cv.wait(st).unwrap();
-                self.check_poison();
+                st = self.wait_step(st, deadline, rank, &desc)?;
             }
         }
         let out = Arc::clone(st.result.as_ref().unwrap());
-        self.account_out(out.bytes());
+        self.account_out(out.wire.bytes());
         st.departed += 1;
         if st.departed == self.size {
             st.arrived = 0;
@@ -193,18 +401,25 @@ impl Group {
             for c in st.contribs.iter_mut() {
                 *c = None;
             }
+            st.audit.round_drained();
             self.cv.notify_all();
         }
-        out
+        Ok(out)
     }
 
-    /// Sum-allreduce. Under `ReduceDtype::Bf16` the deposited frames and
-    /// the published result are genuine 2-byte bf16 payloads (the paper's
-    /// bf16 gradient reduction); the sum itself runs in f32 after an exact
-    /// decode, so the values match the old round-then-sum-then-round
-    /// simulation bit for bit while the wire moves half the bytes.
-    pub fn allreduce(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        let res = self.rendezvous(rank, Wire::encode(mine, dt), |contribs| {
+    /// Shared sum rendezvous behind `allreduce` and the reduce-scatter
+    /// family — parameterized by [`OpKind`] so each public collective
+    /// carries its own descriptor (a reduce_scatter meeting an allreduce
+    /// is an `[order]` violation, not a silent zip).
+    fn sum_rendezvous(
+        &self,
+        rank: usize,
+        mine: Vec<f32>,
+        dt: ReduceDtype,
+        kind: OpKind,
+    ) -> Result<Arc<Published>, CommFault> {
+        let desc = OpDesc { kind, len: Some(mine.len()), dtype: dt.into() };
+        self.rendezvous(rank, desc, Wire::encode(mine, dt), true, |contribs| {
             let mut acc = contribs[0].take().unwrap().into_f32();
             for c in contribs.iter_mut().skip(1) {
                 let c = c.take().unwrap().into_f32();
@@ -213,8 +428,28 @@ impl Group {
                 }
             }
             Wire::encode(acc, dt)
-        });
-        res.to_f32()
+        })
+    }
+
+    /// Sum-allreduce. Under `ReduceDtype::Bf16` the deposited frames and
+    /// the published result are genuine 2-byte bf16 payloads (the paper's
+    /// bf16 gradient reduction); the sum itself runs in f32 after an exact
+    /// decode, so the values match the old round-then-sum-then-round
+    /// simulation bit for bit while the wire moves half the bytes.
+    pub fn allreduce(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
+        self.allreduce_checked(rank, mine, dt).unwrap_or_else(|f| panic!("{f}"))
+    }
+
+    /// [`Group::allreduce`] returning the fault instead of panicking —
+    /// for callers (and model checks) that handle protocol failures
+    /// themselves.
+    pub fn allreduce_checked(
+        &self,
+        rank: usize,
+        mine: Vec<f32>,
+        dt: ReduceDtype,
+    ) -> Result<Vec<f32>, CommFault> {
+        Ok(self.sum_rendezvous(rank, mine, dt, OpKind::Allreduce)?.as_f32().to_vec())
     }
 
     /// Mean-allreduce (gradient averaging across data-parallel ranks).
@@ -238,10 +473,12 @@ impl Group {
     ) -> Vec<f32> {
         let n = mine.len();
         let ranges = crate::util::shard_ranges(n, self.size);
-        let summed = self.allreduce(rank, mine, dt); // semantics: same result
+        let summed = self
+            .sum_rendezvous(rank, mine, dt, OpKind::ReduceScatter)
+            .unwrap_or_else(|f| panic!("{f}"));
         let (s, l) = ranges[rank];
         let inv = 1.0 / self.size as f32;
-        summed[s..s + l].iter().map(|v| v * inv).collect()
+        summed.as_f32()[s..s + l].iter().map(|v| v * inv).collect()
     }
 
     /// Reduce-scatter with sum over equal `1/size` slices: rank r receives
@@ -257,45 +494,56 @@ impl Group {
         let n = mine.len();
         assert_eq!(n % self.size, 0, "even reduce-scatter needs divisible length");
         let per = n / self.size;
-        let summed = self.allreduce(rank, mine, dt);
-        summed[rank * per..(rank + 1) * per].to_vec()
+        let summed = self
+            .sum_rendezvous(rank, mine, dt, OpKind::ReduceScatter)
+            .unwrap_or_else(|f| panic!("{f}"));
+        summed.as_f32()[rank * per..(rank + 1) * per].to_vec()
     }
 
     /// Allgather: concatenation of every rank's (equal-length or ragged)
     /// contribution, in rank order.
     pub fn allgather(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        let res = self.rendezvous(rank, Wire::F32(mine), |contribs| {
+        self.allgather_checked(rank, mine).unwrap_or_else(|f| panic!("{f}"))
+    }
+
+    /// [`Group::allgather`] returning the fault instead of panicking.
+    pub fn allgather_checked(&self, rank: usize, mine: Vec<f32>) -> Result<Vec<f32>, CommFault> {
+        // ragged contributions are legal: len is not part of the contract
+        let desc = OpDesc { kind: OpKind::Allgather, len: None, dtype: WireDtype::F32 };
+        let res = self.rendezvous(rank, desc, Wire::F32(mine), true, |contribs| {
             let mut out = Vec::new();
             for c in contribs.iter_mut() {
                 out.extend_from_slice(&c.take().unwrap().into_f32());
             }
             Wire::F32(out)
-        });
-        res.to_f32()
+        })?;
+        Ok(res.as_f32().to_vec())
     }
 
     /// Allgather of bf16 storage bits: contributions travel and
     /// concatenate as 2-byte words (the mixed-precision optimizer's param
-    /// allgather wire).
+    /// allgather wire). Consumers want the raw bits, so the publisher
+    /// skips the f32 decode entirely.
     pub fn allgather_bf16(&self, rank: usize, mine: Vec<u16>) -> Vec<u16> {
-        let res = self.rendezvous(rank, Wire::Bf16(mine), |contribs| {
-            let mut out = Vec::new();
-            for c in contribs.iter_mut() {
-                match c.take().unwrap() {
-                    Wire::Bf16(v) => out.extend_from_slice(&v),
-                    Wire::F32(v) => out.extend(f32s_to_bf16s(&v)),
+        let desc = OpDesc { kind: OpKind::Allgather, len: None, dtype: WireDtype::Bf16 };
+        let res = self
+            .rendezvous(rank, desc, Wire::Bf16(mine), false, |contribs| {
+                let mut out = Vec::new();
+                for c in contribs.iter_mut() {
+                    match c.take().unwrap() {
+                        Wire::Bf16(v) => out.extend_from_slice(&v),
+                        Wire::F32(v) => out.extend(f32s_to_bf16s(&v)),
+                    }
                 }
-            }
-            Wire::Bf16(out)
-        });
-        match res.as_ref() {
+                Wire::Bf16(out)
+            })
+            .unwrap_or_else(|f| panic!("{f}"));
+        match &res.wire {
             Wire::Bf16(v) => v.clone(),
             Wire::F32(v) => f32s_to_bf16s(v),
         }
     }
 
-    /// Allgather for i32 payloads (routing indices) — transported as f32
-    /// bit patterns to reuse the same fabric.
     /// Allgather over f32 values with a dtype-selected wire: `Bf16`
     /// rounds once (RNE) into genuine 2-byte frames — half the traffic
     /// the byte counters see — and decodes exactly on pickup.
@@ -308,6 +556,8 @@ impl Group {
         }
     }
 
+    /// Allgather for i32 payloads (routing indices) — transported as f32
+    /// bit patterns to reuse the same fabric.
     pub fn allgather_i32(&self, rank: usize, mine: &[i32]) -> Vec<i32> {
         let enc: Vec<f32> = mine.iter().map(|v| f32::from_bits(*v as u32)).collect();
         self.allgather(rank, enc)
@@ -346,28 +596,30 @@ impl Group {
         for d in mine.iter() {
             flat.extend_from_slice(d);
         }
-        let all = self.rendezvous(rank, Wire::F32(flat), |contribs| {
-            // concatenate everyone's flattened frame, with a per-source
-            // offset directory at the front
-            let mut out = Vec::new();
-            let frames: Vec<Vec<f32>> =
-                contribs.iter_mut().map(|c| c.take().unwrap().into_f32()).collect();
-            out.push(frames.len() as f32);
-            let mut off = Vec::new();
-            let mut pos = 1.0 + frames.len() as f32;
-            for f in &frames {
-                off.push(pos);
-                pos += f.len() as f32;
-            }
-            out.extend_from_slice(&off);
-            for f in &frames {
-                out.extend_from_slice(f);
-            }
-            Wire::F32(out)
-        });
+        let desc = OpDesc { kind: OpKind::All2All, len: None, dtype: WireDtype::F32 };
+        let all = self
+            .rendezvous(rank, desc, Wire::F32(flat), true, |contribs| {
+                // concatenate everyone's flattened frame, with a per-source
+                // offset directory at the front
+                let mut out = Vec::new();
+                let frames: Vec<Vec<f32>> =
+                    contribs.iter_mut().map(|c| c.take().unwrap().into_f32()).collect();
+                out.push(frames.len() as f32);
+                let mut off = Vec::new();
+                let mut pos = 1.0 + frames.len() as f32;
+                for f in &frames {
+                    off.push(pos);
+                    pos += f.len() as f32;
+                }
+                out.extend_from_slice(&off);
+                for f in &frames {
+                    out.extend_from_slice(f);
+                }
+                Wire::F32(out)
+            })
+            .unwrap_or_else(|f| panic!("{f}"));
         // decode: for each source frame, pick the chunk destined to us
-        let all = all.to_f32();
-        let all = all.as_slice();
+        let all = all.as_f32();
         let nsrc = all[0] as usize;
         let mut result = Vec::with_capacity(nsrc);
         for s in 0..nsrc {
@@ -384,18 +636,31 @@ impl Group {
         result
     }
 
-    /// Broadcast from `root` (model broadcasting, paper §4).
+    /// Broadcast from `root` (model broadcasting, paper §4). Non-roots
+    /// deposit an empty payload, so the length is not part of the
+    /// contract — but the *root* is: members disagreeing on the root
+    /// fail with `[order]`.
     pub fn broadcast(&self, rank: usize, root: usize, mine: Vec<f32>) -> Vec<f32> {
         let payload = if rank == root { mine } else { Vec::new() };
-        let res = self.rendezvous(rank, Wire::F32(payload), |contribs| {
-            contribs[root].take().unwrap()
-        });
-        res.to_f32()
+        let desc = OpDesc { kind: OpKind::Broadcast { root }, len: None, dtype: WireDtype::F32 };
+        let res = self
+            .rendezvous(rank, desc, Wire::F32(payload), true, |contribs| {
+                contribs[root].take().unwrap()
+            })
+            .unwrap_or_else(|f| panic!("{f}"));
+        res.as_f32().to_vec()
     }
 
     /// Barrier.
     pub fn barrier(&self, rank: usize) {
-        let _ = self.rendezvous(rank, Wire::F32(Vec::new()), |_| Wire::F32(Vec::new()));
+        self.barrier_checked(rank).unwrap_or_else(|f| panic!("{f}"))
+    }
+
+    /// [`Group::barrier`] returning the fault instead of panicking.
+    pub fn barrier_checked(&self, rank: usize) -> Result<(), CommFault> {
+        let desc = OpDesc { kind: OpKind::Barrier, len: Some(0), dtype: WireDtype::F32 };
+        self.rendezvous(rank, desc, Wire::F32(Vec::new()), true, |_| Wire::F32(Vec::new()))?;
+        Ok(())
     }
 
     // -- nonblocking variants -------------------------------------------
@@ -452,17 +717,21 @@ impl Group {
 
     /// Max-allreduce (used for global NaN/overflow voting in ft).
     pub fn allreduce_max(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        let res = self.rendezvous(rank, Wire::F32(mine), |contribs| {
-            let mut acc = contribs[0].take().unwrap().into_f32();
-            for c in contribs.iter_mut().skip(1) {
-                let c = c.take().unwrap().into_f32();
-                for (a, b) in acc.iter_mut().zip(c.iter()) {
-                    *a = a.max(*b);
+        let desc =
+            OpDesc { kind: OpKind::AllreduceMax, len: Some(mine.len()), dtype: WireDtype::F32 };
+        let res = self
+            .rendezvous(rank, desc, Wire::F32(mine), true, |contribs| {
+                let mut acc = contribs[0].take().unwrap().into_f32();
+                for c in contribs.iter_mut().skip(1) {
+                    let c = c.take().unwrap().into_f32();
+                    for (a, b) in acc.iter_mut().zip(c.iter()) {
+                        *a = a.max(*b);
+                    }
                 }
-            }
-            Wire::F32(acc)
-        });
-        res.to_f32()
+                Wire::F32(acc)
+            })
+            .unwrap_or_else(|f| panic!("{f}"));
+        res.as_f32().to_vec()
     }
 }
 
@@ -660,5 +929,104 @@ mod tests {
         for o in outs {
             assert_eq!(o, vec![-5, i32::MAX, 95, i32::MAX]);
         }
+    }
+
+    // -- protocol auditor + watchdog ------------------------------------
+
+    #[test]
+    fn mismatched_program_order_fails_fast_with_order_violation() {
+        // rank 0 issues allreduce, rank 1 issues allgather on the same
+        // group and round: whoever arrives second violates; the other
+        // member unblocks via poisoning — nobody hangs
+        let g = Group::new_labeled(2, "t-order");
+        let errs = spawn_ranks(2, move |r| {
+            if r == 0 {
+                g.allreduce_checked(0, vec![1.0, 2.0], ReduceDtype::F32).unwrap_err()
+            } else {
+                g.allgather_checked(1, vec![3.0]).unwrap_err()
+            }
+        });
+        let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("collective protocol violated [order]")),
+            "{msgs:?}"
+        );
+        for m in &msgs {
+            assert!(
+                m.contains("collective protocol violated [order]")
+                    || m.contains("comm group poisoned"),
+                "{m}"
+            );
+        }
+        // the violation names both ops and the group label
+        let v = msgs.iter().find(|m| m.contains("[order]")).unwrap();
+        assert!(v.contains("allreduce") && v.contains("allgather"), "{v}");
+    }
+
+    #[test]
+    fn mismatched_payload_length_is_a_shape_violation() {
+        // an allreduce zip would silently truncate to the shorter vector —
+        // the auditor rejects the round instead
+        let g = Group::new_labeled(2, "t-shape");
+        let errs = spawn_ranks(2, move |r| {
+            let mine = vec![1.0f32; if r == 0 { 8 } else { 9 }];
+            g.allreduce_checked(r, mine, ReduceDtype::F32).unwrap_err()
+        });
+        let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("collective protocol violated [shape]")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn mismatched_wire_dtype_is_a_dtype_violation() {
+        let g = Group::new_labeled(2, "t-dtype");
+        let errs = spawn_ranks(2, move |r| {
+            let dt = if r == 0 { ReduceDtype::F32 } else { ReduceDtype::Bf16 };
+            g.allreduce_checked(r, vec![1.0, 2.0], dt).unwrap_err()
+        });
+        let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("collective protocol violated [dtype]")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn watchdog_stall_dumps_per_rank_last_ops() {
+        // rank 1 never shows up: rank 0's wait must end in a [stall]
+        // failure carrying the per-rank table, not hang forever
+        let g = Group::new_labeled(2, "t-stall");
+        g.set_stall_timeout(std::time::Duration::from_millis(50));
+        let e = g.allreduce_checked(0, vec![1.0], ReduceDtype::F32).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("collective protocol violated [stall]"), "{msg}");
+        assert!(msg.contains("rank 0 waiting on allreduce"), "{msg}");
+        assert!(msg.contains("rank 1 never deposited"), "{msg}");
+        assert!(msg.contains("t-stall"), "{msg}");
+        // the stall poisoned the group: a late peer fails immediately
+        // instead of waiting on a round that already died
+        let late = g.allreduce_checked(1, vec![1.0], ReduceDtype::F32).unwrap_err();
+        assert!(late.to_string().contains("comm group poisoned"), "{late}");
+    }
+
+    #[test]
+    fn bf16_result_is_decoded_once_per_round_not_per_member() {
+        let g = Group::new(3);
+        let gs = Arc::clone(&g);
+        let outs = spawn_ranks(3, move |r| {
+            g.allreduce(r, vec![r as f32, 1.0], ReduceDtype::Bf16)
+        });
+        for o in outs {
+            assert_eq!(o, vec![3.0, 3.0]);
+        }
+        // 3 members picked the result up, but the publisher decoded once
+        assert_eq!(gs.decodes.load(Ordering::Relaxed), 1);
+        // raw-bits allgather skips the decode entirely
+        let g = Group::new(2);
+        let gs = Arc::clone(&g);
+        spawn_ranks(2, move |r| g.allgather_bf16(r, vec![0x3f80; 2]));
+        assert_eq!(gs.decodes.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,0 +1,56 @@
+//! Loom-aware synchronization shim for the comm fabric.
+//!
+//! Everything that participates in the rendezvous / lane protocols —
+//! mutexes, condvars, the poison flag, thread spawns — goes through this
+//! module so the `--cfg loom` build swaps in [loom]'s model-checked
+//! primitives while release builds compile to the plain `std` types with
+//! zero overhead. Pure *accounting* atomics (byte counters, op counters)
+//! deliberately stay `std::sync::atomic` even under loom: they carry no
+//! happens-before edges the protocol relies on, and keeping them out of
+//! the model keeps the interleaving state space tractable.
+//!
+//! This is the **one** place in the crate allowed to call a bare
+//! `thread::spawn` (loom's spawn has no named builder) — `optimus lint`
+//! exempts exactly this file from the named-spawn rule.
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::AtomicBool;
+#[cfg(not(loom))]
+pub use std::sync::atomic::AtomicBool;
+
+#[cfg(loom)]
+pub use loom::thread::JoinHandle;
+#[cfg(not(loom))]
+pub use std::thread::JoinHandle;
+
+/// Spawn a worker thread. Release builds use a **named** builder (thread
+/// names are load bearing: stall dumps and panic reports attribute work
+/// by thread name); loom models have no thread names, so the label is
+/// accepted and dropped there.
+#[cfg(not(loom))]
+pub fn spawn_named<F, T>(name: &str, f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("spawning thread `{name}`: {e}"))
+}
+
+#[cfg(loom)]
+pub fn spawn_named<F, T>(_name: &str, f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    loom::thread::spawn(f)
+}

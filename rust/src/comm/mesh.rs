@@ -50,15 +50,23 @@ pub struct Mesh {
 
 impl Mesh {
     pub fn new(topo: Topology) -> Arc<Mesh> {
-        let dp_groups = (0..topo.ep * topo.pp).map(|_| Group::new(topo.dp)).collect();
-        let ep_groups = (0..topo.dp * topo.pp).map(|_| Group::new(topo.ep)).collect();
-        let dpep_groups = (0..topo.pp).map(|_| Group::new(topo.dp * topo.ep)).collect();
+        // stable labels per group: protocol-violation and stall reports
+        // name the fabric they fired on (e.g. `dp[1]`, `world`)
+        let dp_groups = (0..topo.ep * topo.pp)
+            .map(|i| Group::new_labeled(topo.dp, &format!("dp[{i}]")))
+            .collect();
+        let ep_groups = (0..topo.dp * topo.pp)
+            .map(|i| Group::new_labeled(topo.ep, &format!("ep[{i}]")))
+            .collect();
+        let dpep_groups = (0..topo.pp)
+            .map(|i| Group::new_labeled(topo.dp * topo.ep, &format!("dpep[{i}]")))
+            .collect();
         Arc::new(Mesh {
             topo,
             dp_groups,
             ep_groups,
             dpep_groups,
-            world: Group::new(topo.world()),
+            world: Group::new_labeled(topo.world(), "world"),
         })
     }
 

@@ -15,13 +15,16 @@
 //! which the pipelined sharded optimizer uses to hide communication
 //! behind compute.
 
+pub mod audit;
 mod group;
+pub(crate) mod lsync;
 mod mesh;
 mod runtime;
 
+pub use audit::{CommFault, OpDesc, OpKind, WireDtype};
 pub use group::{CommStats, Group, ReduceDtype};
 pub use mesh::{Mesh, MeshCoord, Topology};
-pub use runtime::{CommHandle, CommRuntime};
+pub use runtime::{CommHandle, CommRuntime, LaneDropped};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;

@@ -1,11 +1,12 @@
 //! Async collective submission: a per-rank comm worker that executes
 //! collectives off the rank thread so communication overlaps compute.
 //!
-//! [`CommRuntime`] owns one dedicated worker thread with a FIFO job
-//! queue. The nonblocking collective variants on [`super::Group`]
-//! (`allreduce_start` / `reduce_scatter_start` / `allgather_start`)
-//! submit a closure and return a [`CommHandle`] future; `wait()` blocks
-//! until the worker has finished that collective.
+//! [`CommRuntime`] owns one dedicated worker thread draining a FIFO job
+//! queue (mutex + condvar — model-checked under `--cfg loom`, see
+//! `tests/loom_models.rs`). The nonblocking collective variants on
+//! [`super::Group`] (`allreduce_start` / `reduce_scatter_start` /
+//! `allgather_start`) submit a closure and return a [`CommHandle`]
+//! future; `wait()` blocks until the worker has finished that collective.
 //!
 //! FIFO submission is the correctness contract: rendezvous rounds on a
 //! [`super::Group`] are strictly ordered, so every member must issue its
@@ -15,67 +16,195 @@
 //! concurrently with the rank thread's *compute* (the pipelined sharded
 //! optimizer of DESIGN.md §6, paper §3.2).
 //!
-//! A collective that panics on the worker (e.g. a poisoned group after a
-//! peer death) is captured and re-thrown from `wait()` on the submitting
-//! rank thread, so failure semantics match the blocking path and the
-//! harness's poison-guard still classifies the root cause.
+//! Failure semantics:
+//!
+//! * a collective that panics on the worker (e.g. a poisoned group after
+//!   a peer death) is captured and re-thrown from `wait()` on the
+//!   submitting rank thread, so the harness's poison-guard still
+//!   classifies the root cause;
+//! * a job that can never run (its lane died or was [`CommRuntime::abort`]ed)
+//!   resolves its handle to an **orphaned** state — `wait()` panics with
+//!   the lane label and op counter (`comm lane 'comm-dp0' dropped
+//!   in-flight collective #17`), so a dropped-lane failure is
+//!   attributable to a rank instead of an anonymous hang.
 
+use super::lsync::{self, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::fmt;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::sync::Arc;
 
 type Job = Box<dyn FnOnce() + Send>;
 
+enum SlotState<T> {
+    /// submitted, not yet executed
+    Pending,
+    /// executed: the job's return value or its captured panic
+    Done(std::thread::Result<T>),
+    /// the job was dropped without running (lane aborted or died)
+    Orphaned,
+}
+
+/// Shared completion slot between one job and its handle.
+struct Slot<T> {
+    state: Mutex<SlotState<T>>,
+    cv: Condvar,
+}
+
+/// Drop bomb carried by every queued job closure: if the closure is
+/// destroyed without running (queue cleared, worker gone), the slot flips
+/// to `Orphaned` and waiters wake — an in-flight collective can be
+/// *failed* but never silently lost.
+struct OrphanGuard<T> {
+    slot: Arc<Slot<T>>,
+}
+
+impl<T> Drop for OrphanGuard<T> {
+    fn drop(&mut self) {
+        let mut st = self.slot.state.lock().unwrap();
+        if matches!(*st, SlotState::Pending) {
+            *st = SlotState::Orphaned;
+            self.slot.cv.notify_all();
+        }
+    }
+}
+
+/// A submitted collective that will never complete: its lane dropped it
+/// before execution. Carries the lane label and per-lane op counter so
+/// the failure is attributable.
+#[derive(Debug)]
+pub struct LaneDropped {
+    pub lane: String,
+    pub op: u64,
+}
+
+impl fmt::Display for LaneDropped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "comm lane `{}` dropped in-flight collective #{} before it ran",
+            self.lane, self.op
+        )
+    }
+}
+
+impl std::error::Error for LaneDropped {}
+
 /// Future for one in-flight collective submitted to a [`CommRuntime`].
 pub struct CommHandle<T = Vec<f32>> {
-    rx: mpsc::Receiver<std::thread::Result<T>>,
+    slot: Arc<Slot<T>>,
+    lane: String,
+    /// 1-based submission index on this lane
+    op: u64,
 }
 
 impl<T> CommHandle<T> {
     /// Block until the collective completes. A panic on the worker
-    /// (poisoned group) is re-thrown here, on the submitting thread.
+    /// (poisoned group) is re-thrown here, on the submitting thread; an
+    /// orphaned job panics with the lane label and op counter.
     pub fn wait(self) -> T {
-        match self.rx.recv() {
-            Ok(Ok(v)) => v,
-            Ok(Err(p)) => resume_unwind(p),
-            Err(_) => panic!("comm runtime worker dropped an in-flight collective"),
+        match self.try_wait() {
+            Ok(v) => v,
+            Err(dropped) => panic!("{dropped}"),
         }
     }
+
+    /// Block until the collective completes, surfacing an orphaned job
+    /// as an error instead of a panic. A worker-side panic is still
+    /// re-thrown.
+    pub fn try_wait(self) -> Result<T, LaneDropped> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                SlotState::Pending => st = self.slot.cv.wait(st).unwrap(),
+                SlotState::Orphaned => {
+                    return Err(LaneDropped { lane: self.lane, op: self.op })
+                }
+                SlotState::Done(_) => break,
+            }
+        }
+        // take the result out; the slot is consumed with the handle
+        let SlotState::Done(r) = std::mem::replace(&mut *st, SlotState::Orphaned) else {
+            unreachable!("checked Done above")
+        };
+        drop(st);
+        match r {
+            Ok(v) => Ok(v),
+            Err(p) => resume_unwind(p),
+        }
+    }
+}
+
+struct LaneQ {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct LaneShared {
+    q: Mutex<LaneQ>,
+    cv: Condvar,
+    busy_nanos: AtomicU64,
+    ops: AtomicU64,
 }
 
 /// A single-worker comm lane: FIFO execution plus busy-time accounting
 /// (the overlap numerator behind
 /// [`StepBreakdown::overlap_secs`](crate::metrics::StepBreakdown)).
-/// Dropping the runtime shuts the worker down after the queue drains.
+/// Dropping the runtime drains the queue, shuts the worker down and
+/// joins it.
 pub struct CommRuntime {
-    tx: mpsc::Sender<Job>,
-    busy_nanos: Arc<AtomicU64>,
-    ops: Arc<AtomicU64>,
+    shared: Arc<LaneShared>,
+    label: String,
+    /// per-lane submission counter — the op number in orphan reports
+    submitted: AtomicU64,
+    worker: Option<lsync::JoinHandle<()>>,
+}
+
+fn worker_loop(shared: Arc<LaneShared>) {
+    loop {
+        let job = {
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        // jobs never unwind (submit wraps them in catch_unwind),
+        // so one poisoned collective doesn't kill the lane
+        #[cfg(not(loom))]
+        let t = std::time::Instant::now();
+        job();
+        #[cfg(not(loom))]
+        shared
+            .busy_nanos
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shared.ops.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 impl CommRuntime {
     /// Spawn the worker thread (named `comm-<label>`).
     pub fn new(label: &str) -> CommRuntime {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let busy_nanos = Arc::new(AtomicU64::new(0));
-        let ops = Arc::new(AtomicU64::new(0));
-        let busy = Arc::clone(&busy_nanos);
-        let done = Arc::clone(&ops);
-        std::thread::Builder::new()
-            .name(format!("comm-{label}"))
-            .spawn(move || {
-                // jobs never unwind (submit wraps them in catch_unwind),
-                // so one poisoned collective doesn't kill the lane
-                while let Ok(job) = rx.recv() {
-                    let t = Instant::now();
-                    job();
-                    busy.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    done.fetch_add(1, Ordering::Relaxed);
-                }
-            })
-            .expect("spawn comm worker");
-        CommRuntime { tx, busy_nanos, ops }
+        let shared = Arc::new(LaneShared {
+            q: Mutex::new(LaneQ { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            busy_nanos: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+        });
+        let w = Arc::clone(&shared);
+        let worker = lsync::spawn_named(&format!("comm-{label}"), move || worker_loop(w));
+        CommRuntime {
+            shared,
+            label: label.to_string(),
+            submitted: AtomicU64::new(0),
+            worker: Some(worker),
+        }
     }
 
     /// Enqueue `f`. Jobs run FIFO on the worker; the handle resolves when
@@ -85,25 +214,71 @@ impl CommRuntime {
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
-        let (rtx, rrx) = mpsc::channel();
+        let op = self.submitted.fetch_add(1, Ordering::Relaxed) + 1;
+        let slot = Arc::new(Slot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        });
+        let guard = OrphanGuard { slot: Arc::clone(&slot) };
         let job: Job = Box::new(move || {
             let r = catch_unwind(AssertUnwindSafe(f));
-            let _ = rtx.send(r);
+            let mut st = guard.slot.state.lock().unwrap();
+            *st = SlotState::Done(r);
+            guard.slot.cv.notify_all();
+            // `guard` drops after the state is Done — its bomb is inert
         });
-        self.tx.send(job).expect("comm runtime worker gone");
-        CommHandle { rx: rrx }
+        let lane = format!("comm-{}", self.label);
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            assert!(
+                !q.closed,
+                "comm lane `{lane}` is closed; cannot submit collective #{op}"
+            );
+            q.jobs.push_back(job);
+        }
+        self.shared.cv.notify_one();
+        CommHandle { slot, lane, op }
+    }
+
+    /// Drop every queued-but-unstarted job. Their handles resolve to the
+    /// orphaned state (`wait()` panics with lane + op, `try_wait()`
+    /// errors); a job already executing completes normally. The failure
+    /// path for a rank tearing down its lane mid-step.
+    pub fn abort(&self) {
+        let dropped: Vec<Job> = {
+            let mut q = self.shared.q.lock().unwrap();
+            q.jobs.drain(..).collect()
+        };
+        // dropping the closures fires their orphan guards — outside the
+        // lane lock, so waiters wake without lock-order entanglement
+        drop(dropped);
     }
 
     /// Total seconds the worker has spent inside collectives. The counter
     /// is bumped *after* a job's handle resolves, so a reading taken right
     /// after `wait()` may trail by one job — accounting only.
     pub fn busy_secs(&self) -> f64 {
-        self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+        self.shared.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
     /// Number of jobs the worker has completed.
     pub fn completed_ops(&self) -> u64 {
-        self.ops.load(Ordering::Relaxed)
+        self.shared.ops.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for CommRuntime {
+    fn drop(&mut self) {
+        // close the queue; the worker drains whatever is already queued,
+        // then exits — and is always joined, so no lane thread leaks
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -141,5 +316,35 @@ mod tests {
         // flush: a second job guarantees the first's busy add landed
         rt.submit(|| ()).wait();
         assert!(rt.busy_secs() >= 0.004, "{}", rt.busy_secs());
+    }
+
+    #[test]
+    fn orphaned_collective_is_attributable_to_lane_and_op() {
+        let rt = CommRuntime::new("t-orphan");
+        // park the worker inside job #1 so #2 and #3 are queued for sure
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let h1 = rt.submit(move || {
+            let _ = rx.recv();
+            1usize
+        });
+        let h2: CommHandle<usize> = rt.submit(|| 2);
+        let h3: CommHandle<usize> = rt.submit(|| 3);
+        rt.abort();
+        tx.send(()).unwrap();
+        assert_eq!(h1.wait(), 1, "the running job completes through an abort");
+        let e = h2.try_wait().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("comm lane `comm-t-orphan`"), "{msg}");
+        assert!(msg.contains("collective #2"), "{msg}");
+        // wait() on an orphan panics with the same attributable message
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| h3.wait()))
+            .expect_err("orphaned wait must panic");
+        let pmsg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(pmsg.contains("comm-t-orphan") && pmsg.contains("#3"), "{pmsg}");
+        // the lane survives an abort: later submissions run normally
+        assert_eq!(rt.submit(|| 4usize).wait(), 4);
     }
 }

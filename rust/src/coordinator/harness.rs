@@ -34,6 +34,7 @@ use crate::ckpt::{
 use crate::comm::{Group, Mesh, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::{BatchPlan, Dataset, Prefetcher, TokenCursor, TokenStream};
+use crate::ft::checks;
 use crate::metrics::{Curve, Scoped, StepBreakdown};
 use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
 use crate::runtime::{Engine, Tensor};
@@ -149,7 +150,7 @@ impl RankCtx {
             }
         };
         if let Some(trace) = &self.spec.data_trace {
-            let mut t = trace.lock().unwrap();
+            let mut t = crate::util::lock(trace);
             for r in 0..b as u64 {
                 t.push((pos + r, self.stream.map(pos + r)?.1 as u64));
             }
@@ -385,14 +386,17 @@ pub fn run<T: RankTrainer + 'static>(
                         if let Some(saved_seed) = rs.data_seed() {
                             let want = spec.run.data_seed as f64 as u64;
                             if saved_seed != want {
-                                return Err(anyhow!(
-                                    "checkpoint resume failed [data-seed]: the \
-                                     checkpoint's token cursor was consumed under \
-                                     --data-seed {saved_seed}, this job shuffles with \
-                                     {}; resuming would re-read and skip instances — \
-                                     pass --data-seed {saved_seed} to continue the \
-                                     stream",
-                                    spec.run.data_seed
+                                return Err(checks::err(
+                                    checks::RESUME,
+                                    "data-seed",
+                                    format!(
+                                        "the checkpoint's token cursor was consumed \
+                                         under --data-seed {saved_seed}, this job \
+                                         shuffles with {}; resuming would re-read and \
+                                         skip instances — pass --data-seed \
+                                         {saved_seed} to continue the stream",
+                                        spec.run.data_seed
+                                    ),
                                 ));
                             }
                         }
@@ -455,14 +459,18 @@ pub fn run<T: RankTrainer + 'static>(
         // the NEW geometry) cannot see
         let have = ds.len() as u64 * plan.data_epochs as u64;
         if budget > have {
-            return Err(anyhow!(
-                "plan validation failed [data]: cursor {} + {remaining} steps × \
-                 {per_step} instances/step needs {budget} total instances, but the \
-                 dataset provides {} × {} epoch budget = {have}; raise --epochs, \
-                 lower --steps, or preprocess more data",
-                cursor.base,
-                ds.len(),
-                plan.data_epochs
+            return Err(checks::err(
+                checks::PLAN,
+                "data",
+                format!(
+                    "cursor {} + {remaining} steps × {per_step} instances/step needs \
+                     {budget} total instances, but the dataset provides {} × {} epoch \
+                     budget = {have}; raise --epochs, lower --steps, or preprocess \
+                     more data",
+                    cursor.base,
+                    ds.len(),
+                    plan.data_epochs
+                ),
             ));
         }
         // epoch budget set ⇒ the logical stream truly ends there:
@@ -514,6 +522,7 @@ pub fn run<T: RankTrainer + 'static>(
     let mut aux: Vec<AuxParams> = Vec::new();
     let mut first_err: Option<anyhow::Error> = None;
     let mut panicked = false;
+    let mut panic_msgs: Vec<String> = Vec::new();
     for h in handles {
         match h.join() {
             Ok(Ok(RankOut::Report(r))) => report = Some(r),
@@ -521,8 +530,22 @@ pub fn run<T: RankTrainer + 'static>(
             Ok(Ok(RankOut::None)) => {}
             Ok(Err(e)) => first_err = first_err.or(Some(e)),
             // panics are usually peers aborted by poisoning — prefer the
-            // root-cause error returned by the rank that actually failed
-            Err(_) => panicked = true,
+            // root-cause error returned by the rank that actually failed.
+            // Keep non-poison payloads: a `collective protocol violated`
+            // panic from a comm wrapper IS the root cause.
+            Err(p) => {
+                panicked = true;
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()));
+                match msg {
+                    // collateral: peers killed by group/fabric poisoning
+                    Some(m) if m.contains("poisoned") => {}
+                    Some(m) => panic_msgs.push(m),
+                    None => {}
+                }
+            }
         }
     }
     // drain the checkpoint writer before surfacing anything: trailing
@@ -534,6 +557,15 @@ pub fn run<T: RankTrainer + 'static>(
         return Err(e);
     }
     if panicked {
+        // surface a protocol-violation payload first (it carries the
+        // stable check string ft::classify routes on), then any other
+        // captured payload, then the legacy generic line
+        if let Some(m) = panic_msgs.iter().find(|m| m.contains(checks::PROTOCOL)) {
+            return Err(anyhow!("{m}"));
+        }
+        if let Some(m) = panic_msgs.first() {
+            return Err(anyhow!("rank thread panicked: {m}"));
+        }
         return Err(anyhow!("a rank thread panicked without a root-cause error"));
     }
     if let Some(e) = ckpt_err {

@@ -22,11 +22,11 @@ use crate::ckpt::CkptPolicy;
 use crate::comm::Topology;
 use crate::config::{ModelManifest, ParamSpec};
 use crate::data::{BatchPlan, Dataset};
+use crate::ft::checks;
 use crate::optim::sharded::SegmentLayout;
 use crate::optim::ShardingMode;
 use crate::runtime::Dtype;
 use crate::Result;
-use anyhow::anyhow;
 use std::ops::Range;
 
 /// Which runnable engine drives the ranks for a given topology.
@@ -308,7 +308,7 @@ impl ParallelismPlan {
     pub fn validate_spec(&self) -> Result<()> {
         for (name, check) in SPEC_CHECKS {
             if let Some(msg) = check(self) {
-                return Err(anyhow!("plan validation failed [{name}]: {msg}"));
+                return Err(checks::err(checks::PLAN, name, msg));
             }
         }
         Ok(())
@@ -320,7 +320,7 @@ impl ParallelismPlan {
         self.validate_spec()?;
         for (name, check) in MODEL_CHECKS {
             if let Some(msg) = check(self, mm) {
-                return Err(anyhow!("plan validation failed [{name}]: {msg}"));
+                return Err(checks::err(checks::PLAN, name, msg));
             }
         }
         Ok(())
@@ -335,7 +335,7 @@ impl ParallelismPlan {
         self.validate_model(mm)?;
         for (name, check) in DATA_CHECKS {
             if let Some(msg) = check(self, mm, ds) {
-                return Err(anyhow!("plan validation failed [{name}]: {msg}"));
+                return Err(checks::err(checks::PLAN, name, msg));
             }
         }
         Ok(())
@@ -500,6 +500,33 @@ mod tests {
         // implicit default never trips the same check
         let mut p = ParallelismPlan::new(Topology::dp_only(2));
         p.mode_explicit = false;
+        assert!(p.validate_spec().is_ok());
+    }
+
+    #[test]
+    fn every_table_check_name_is_registered() {
+        // the lint (`optimus lint`) cross-references emitted check strings
+        // against ft::checks; the tables must never drift from the registry
+        for (name, _) in SPEC_CHECKS {
+            assert!(checks::is_registered(checks::PLAN, name), "unregistered [{name}]");
+        }
+        for (name, _) in MODEL_CHECKS {
+            assert!(checks::is_registered(checks::PLAN, name), "unregistered [{name}]");
+        }
+        for (name, _) in DATA_CHECKS {
+            assert!(checks::is_registered(checks::PLAN, name), "unregistered [{name}]");
+        }
+    }
+
+    #[test]
+    fn schedule_check_rejects_interleaved_on_runnable_engines() {
+        let mut p = ParallelismPlan::new(Topology { dp: 1, ep: 1, pp: 2 });
+        p.schedule = Schedule::Interleaved1F1B { chunks: 2 };
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [schedule]"), "{e}");
+        // pp = 1 never consults the pipeline schedule
+        let mut p = ParallelismPlan::new(Topology::dp_only(2));
+        p.schedule = Schedule::Interleaved1F1B { chunks: 2 };
         assert!(p.validate_spec().is_ok());
     }
 

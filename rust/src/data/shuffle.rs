@@ -87,7 +87,7 @@ impl ShuffledIndex {
     }
 
     fn epoch_perm(&self, epoch: u64) -> Arc<EpochPerm> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = crate::util::lock(&self.cache);
         for slot in cache.iter().flatten() {
             if slot.epoch == epoch {
                 return Arc::clone(slot);

@@ -1,0 +1,139 @@
+//! Central registry of the repo's **stable failure-check names**.
+//!
+//! Every fail-fast path that operators and tests key on emits a string of
+//! the shape `"<domain> [<name>]: <detail>"` — e.g.
+//! `plan validation failed [micro-batches]: ...`. Those tags are load
+//! bearing three times over: [`super::classify`] routes them to a
+//! relaunch decision, integration tests assert them, and runbooks grep
+//! for them. Before this module each site hand-formatted its own
+//! literal, so a typo silently produced an unclassifiable (and
+//! un-greppable) failure.
+//!
+//! The registry makes the contract checkable:
+//!
+//! * producers build errors through [`err`] / [`tag`] (a `debug_assert`
+//!   rejects unregistered names at test time);
+//! * `optimus lint` (see [`crate::analysis`]) verifies that every
+//!   `<domain> [<name>]` literal in the sources is registered here AND
+//!   that every registered check is asserted by at least one test —
+//!   a check nobody tests is a check that silently rots.
+
+/// Domain prefix for parallelism-plan validation failures
+/// ([`crate::coordinator::plan`]). Non-relaunchable: the job spec itself
+/// is wrong.
+pub const PLAN: &str = "plan validation failed";
+
+/// Domain prefix for checkpoint-resume failures
+/// ([`crate::ckpt`]). Non-relaunchable: retrying replays the same
+/// on-disk state.
+pub const RESUME: &str = "checkpoint resume failed";
+
+/// Domain prefix for collective-protocol violations detected by the
+/// comm auditor ([`crate::comm`]). Non-relaunchable for
+/// `order`/`shape`/`dtype` (a program bug re-manifests identically);
+/// `stall` stays relaunchable — the dominant cause is a dead peer.
+pub const PROTOCOL: &str = "collective protocol violated";
+
+/// One registered check: a `(domain, name)` pair whose formatted tag is
+/// `"<domain> [<name>]"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CheckId {
+    pub domain: &'static str,
+    pub name: &'static str,
+}
+
+/// Every stable check the repo may emit. Adding a failure path means
+/// adding a row here and a test asserting it — `optimus lint` enforces
+/// both directions.
+pub const CHECKS: &[CheckId] = &[
+    // plan validation (coordinator/plan.rs spec checks)
+    CheckId { domain: PLAN, name: "topology" },
+    CheckId { domain: PLAN, name: "world-size" },
+    CheckId { domain: PLAN, name: "micro-batches" },
+    CheckId { domain: PLAN, name: "sharding" },
+    CheckId { domain: PLAN, name: "schedule" },
+    CheckId { domain: PLAN, name: "overlap" },
+    CheckId { domain: PLAN, name: "checkpoint" },
+    CheckId { domain: PLAN, name: "dtype" },
+    // plan validation (model checks)
+    CheckId { domain: PLAN, name: "layer-split" },
+    CheckId { domain: PLAN, name: "expert-split" },
+    CheckId { domain: PLAN, name: "pp-artifacts" },
+    CheckId { domain: PLAN, name: "ep-artifacts" },
+    // plan validation (data checks)
+    CheckId { domain: PLAN, name: "data-context" },
+    CheckId { domain: PLAN, name: "data" },
+    // checkpoint resume (ckpt/reshard.rs + ckpt/checkpointer.rs)
+    CheckId { domain: RESUME, name: "manifest" },
+    CheckId { domain: RESUME, name: "checksum" },
+    CheckId { domain: RESUME, name: "dtype" },
+    CheckId { domain: RESUME, name: "model" },
+    CheckId { domain: RESUME, name: "param-count" },
+    CheckId { domain: RESUME, name: "coverage" },
+    CheckId { domain: RESUME, name: "data-seed" },
+    // collective protocol (comm/audit.rs)
+    CheckId { domain: PROTOCOL, name: "order" },
+    CheckId { domain: PROTOCOL, name: "shape" },
+    CheckId { domain: PROTOCOL, name: "dtype" },
+    CheckId { domain: PROTOCOL, name: "stall" },
+];
+
+/// Is `(domain, name)` a registered check?
+pub fn is_registered(domain: &str, name: &str) -> bool {
+    CHECKS.iter().any(|c| c.domain == domain && c.name == name)
+}
+
+/// The stable tag `"<domain> [<name>]"` — what tests assert and
+/// [`super::classify`] matches on.
+pub fn tag(domain: &'static str, name: &'static str) -> String {
+    debug_assert!(
+        is_registered(domain, name),
+        "unregistered check `{domain} [{name}]` — add it to ft::checks::CHECKS"
+    );
+    format!("{domain} [{name}]")
+}
+
+/// Full failure message `"<domain> [<name>]: <detail>"`.
+pub fn msg(domain: &'static str, name: &'static str, detail: impl std::fmt::Display) -> String {
+    format!("{}: {detail}", tag(domain, name))
+}
+
+/// Registered failure as an [`anyhow::Error`] — the one constructor the
+/// plan/resume validators use, so the literal never drifts from the
+/// registry.
+pub fn err(domain: &'static str, name: &'static str, detail: impl std::fmt::Display) -> anyhow::Error {
+    anyhow::anyhow!("{}", msg(domain, name, detail))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_no_duplicates() {
+        for (i, a) in CHECKS.iter().enumerate() {
+            for b in &CHECKS[i + 1..] {
+                assert!(a != b, "duplicate check {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tag_formats_the_stable_string() {
+        assert_eq!(tag(PLAN, "micro-batches"), "plan validation failed [micro-batches]");
+        assert_eq!(
+            msg(PROTOCOL, "order", "rank 1 issued allgather"),
+            "collective protocol violated [order]: rank 1 issued allgather"
+        );
+        let e = err(RESUME, "checksum", "shard r0.params.bin");
+        assert!(format!("{e:#}").starts_with("checkpoint resume failed [checksum]"));
+    }
+
+    #[test]
+    fn lookup_rejects_unknown_names() {
+        assert!(is_registered(PLAN, "topology"));
+        assert!(is_registered(PROTOCOL, "stall"));
+        assert!(!is_registered(PLAN, "no-such-check"));
+        assert!(!is_registered("made-up domain", "topology"));
+    }
+}

@@ -17,8 +17,11 @@
 //! [`FailureKind::Config`], so they surface instead of burning buffer
 //! nodes.
 
+pub mod checks;
+
 use crate::ckpt::DualCheckpointer;
 use crate::coordinator::StepHook;
+use crate::util::lock;
 use crate::Result;
 use anyhow::anyhow;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -55,31 +58,31 @@ impl NodePool {
     }
 
     pub fn active_nodes(&self) -> Vec<usize> {
-        self.active.lock().unwrap().clone()
+        lock(&self.active).clone()
     }
 
     pub fn buffer_len(&self) -> usize {
-        self.buffer.lock().unwrap().len()
+        lock(&self.buffer).len()
     }
 
     pub fn failed_nodes(&self) -> Vec<usize> {
-        self.failed.lock().unwrap().clone()
+        lock(&self.failed).clone()
     }
 
     /// Replace `node` with a buffer node; returns the replacement or an
     /// error when the pool is exhausted.
     pub fn replace(&self, node: usize) -> Result<usize> {
-        let mut active = self.active.lock().unwrap();
+        let mut active = lock(&self.active);
         let pos = active
             .iter()
             .position(|&n| n == node)
             .ok_or_else(|| anyhow!("node {node} is not active"))?;
-        let mut buffer = self.buffer.lock().unwrap();
+        let mut buffer = lock(&self.buffer);
         let replacement = buffer
             .pop()
             .ok_or_else(|| anyhow!("buffer-node pool exhausted"))?;
         active[pos] = replacement;
-        self.failed.lock().unwrap().push(node);
+        lock(&self.failed).push(node);
         Ok(replacement)
     }
 }
@@ -97,9 +100,16 @@ pub struct Failure {
 /// emits the stable `plan validation failed [<check>]` prefix.
 pub fn classify(err: &anyhow::Error) -> FailureKind {
     let s = format!("{err:#}");
-    if s.contains("plan validation failed")
+    if s.contains(checks::PROTOCOL) {
+        // order/shape/dtype violations are deterministic program bugs —
+        // a relaunch replays the same program order and fails again. A
+        // [stall] is the one protocol failure whose dominant cause is a
+        // dead or wedged peer, so it stays relaunchable.
+        return if s.contains("[stall]") { FailureKind::Hard } else { FailureKind::Config };
+    }
+    if s.contains(checks::PLAN)
         || s.contains("parallelism plan mismatch")
-        || s.contains("checkpoint resume failed")
+        || s.contains(checks::RESUME)
         || s.contains("unknown model config")
     {
         FailureKind::Config
@@ -349,6 +359,19 @@ mod tests {
             FailureKind::Config
         );
         assert_eq!(parse_rank(&anyhow!("rank 7: x")), Some(7));
+        // protocol violations: deterministic program bugs stay
+        // non-relaunchable, a stall (likely dead peer) relaunches
+        for name in ["order", "shape", "dtype"] {
+            assert_eq!(
+                classify(&anyhow!("{}", checks::msg(checks::PROTOCOL, name, "rank 1"))),
+                FailureKind::Config,
+                "[{name}]"
+            );
+        }
+        assert_eq!(
+            classify(&anyhow!("{}", checks::msg(checks::PROTOCOL, "stall", "rank 0 waiting"))),
+            FailureKind::Hard
+        );
     }
 
     #[test]

@@ -29,8 +29,11 @@
 //! - [`cluster`]  — Aurora analytic performance model (Fig 4b)
 //! - [`eval`]     — synthetic benchmark suite (Table 2, Figs 2-3)
 //! - [`metrics`]  — step timers, loss logs, CSV emitters
+//! - [`analysis`] — `optimus lint`: repo-specific invariant lint (check
+//!   string registry/coverage, named threads, lock discipline)
 //! - [`util`]     — PRNG, JSON, CLI, micro-bench + property-test harnesses
 
+pub mod analysis;
 pub mod ckpt;
 pub mod cluster;
 pub mod comm;

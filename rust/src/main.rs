@@ -20,6 +20,9 @@
 //!   ckpt inspect DIR            print a checkpoint dir's manifest
 //!                               (step, plan, shards, checksums, validity)
 //!   scaling [--fur]             Aurora-model Fig 4b sweep
+//!   lint [--root DIR]           repo invariant lint: stable check-string
+//!         registry/coverage, named-thread, lock-discipline and metrics
+//!         classification rules over rust/src + rust/tests
 //!
 //! `--ckpt-dir` enables sharded async checkpointing AND auto-resume: if
 //! the directory already holds a committed checkpoint of the same model,
@@ -42,7 +45,7 @@ use optimus::optim::ShardingMode;
 use optimus::runtime::{Dtype, Engine};
 use optimus::util::cli::Args;
 
-const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|scaling> [flags]\n\
+const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|scaling|lint> [flags]\n\
                      see rust/src/main.rs header for flags";
 
 const TRAIN_FLAGS: &[&str] = &[
@@ -57,6 +60,7 @@ const PREPROCESS_FLAGS: &[&str] =
 const EVAL_FLAGS: &[&str] = &["model", "seed", "cases"];
 const PLANS_FLAGS: &[&str] = &["world", "model", "steps", "data", "dtype"];
 const SCALING_FLAGS: &[&str] = &["fur", "model"];
+const LINT_FLAGS: &[&str] = &["root"];
 
 fn main() -> optimus::Result<()> {
     let args = Args::from_env();
@@ -68,6 +72,7 @@ fn main() -> optimus::Result<()> {
         Some("plans") => do_plans(&args),
         Some("ckpt") => do_ckpt(&args),
         Some("scaling") => do_scaling(&args),
+        Some("lint") => do_lint(&args),
         _ => {
             eprintln!("{USAGE}");
             Ok(())
@@ -371,6 +376,26 @@ fn do_plans(args: &Args) -> optimus::Result<()> {
         println!("  dp={:<3} ep={:<3} pp={:<3}{note}", t.dp, t.ep, t.pp);
     }
     Ok(())
+}
+
+/// `optimus lint` — run the crate's invariant lint (see
+/// `optimus::analysis`) and fail loudly on any violation. CI runs this
+/// as a blocking job; `--root` points it at a different checkout.
+fn do_lint(args: &Args) -> optimus::Result<()> {
+    check(args, LINT_FLAGS)?;
+    let root = args
+        .get("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(optimus::analysis::default_root);
+    let violations = optimus::analysis::run(&root)?;
+    if violations.is_empty() {
+        println!("lint clean: {} registered checks, 0 violations", optimus::ft::checks::CHECKS.len());
+        return Ok(());
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    Err(anyhow!("lint failed with {} violation(s)", violations.len()))
 }
 
 fn do_scaling(args: &Args) -> optimus::Result<()> {

@@ -7,24 +7,37 @@
 
 use std::time::Instant;
 
+/// Per-step wall-clock decomposition. Every field carries a `class:` tag
+/// (checked by `optimus lint`) stating its accounting role:
+///
+/// * `class: additive` — real blocking time on the training thread;
+///   summed by [`StepBreakdown::total`], which must track wall-clock.
+/// * `class: concurrent` — time hidden on a background thread while the
+///   training thread computes; informational, never summed.
+/// * `class: contained` — time physically spent *inside* another additive
+///   field; never summed (it would double-count).
 #[derive(Clone, Debug, Default)]
 pub struct StepBreakdown {
+    /// fused forward+backward artifact execution. class: additive
     pub fwd_bwd_secs: f64,
+    /// the optimizer's own compute (update math, exposed). class: additive
     pub optimizer_secs: f64,
     /// *exposed* communication: time a rank thread actually blocked in a
     /// collective / p2p transfer (with `--overlap`, comm hidden behind
-    /// compute moves to `overlap_secs` instead)
+    /// compute moves to `overlap_secs` instead). class: additive
     pub comm_secs: f64,
     /// synchronous batch assembly on the training thread (prefetch off,
-    /// or a fetch outside the prefetcher's predicted sequence). Additive.
+    /// or a fetch outside the prefetcher's predicted sequence).
+    /// class: additive
     pub data_secs: f64,
     /// time the training thread blocked popping the prefetch queue — the
     /// *exposed* remainder of data time once the background producer hides
-    /// the assembly. Additive — it is real step wall-clock.
+    /// the assembly. Real step wall-clock. class: additive
     pub data_wait_secs: f64,
     /// batch assembly hidden on the per-rank `data-prefetch-*` producer
-    /// thread. Concurrent with training (like `overlap_secs`) —
-    /// informational, never part of the wall-clock sum.
+    /// thread. Runs while the training thread computes (like
+    /// `overlap_secs`) — informational, never part of the wall-clock sum.
+    /// class: concurrent
     pub data_prefetch_secs: f64,
     /// PJRT executor queue wait: time submitted artifacts sat waiting for
     /// a free executor, folded in by the harness at finish from
@@ -36,22 +49,23 @@ pub struct StepBreakdown {
     /// engines' end-to-end `exec` timing (`fwd_bwd_secs`), so
     /// [`StepBreakdown::total`] never adds it again — totals keep
     /// matching wall-clock step time; this field is the pool-sizing
-    /// signal, not an additive component.
+    /// signal, not an additive component. class: contained
     pub queue_secs: f64,
     /// communication hidden behind compute by the async overlap pipeline
     /// (comm-lane busy time minus exposed waits). It runs *concurrently*
     /// with `optimizer_secs`, so it is informational — Table-3-style
     /// component ratios use it as the "saved" comm — and is never part of
-    /// the wall-clock sum.
+    /// the wall-clock sum. class: concurrent
     pub overlap_secs: f64,
     /// time the training thread was blocked taking checkpoint snapshots:
     /// the O(1) `Arc` capture + submit (async mode) or the full inline
-    /// write (sync mode). Additive — it is real step wall-clock.
+    /// write (sync mode). Real step wall-clock. class: additive
     pub snapshot_secs: f64,
     /// checkpoint serialization hidden on the Checkpointer's background
-    /// writer. Concurrent with training (like `overlap_secs`), recorded
-    /// as this rank's share (run total / world) — informational, never
-    /// part of the wall-clock sum.
+    /// writer. Runs while the training thread computes (like
+    /// `overlap_secs`), recorded as this rank's share (run total / world)
+    /// — informational, never part of the wall-clock sum.
+    /// class: concurrent
     pub snapshot_write_secs: f64,
 }
 

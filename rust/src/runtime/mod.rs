@@ -126,7 +126,7 @@ fn executor_loop(
     let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
     loop {
         let req = {
-            let guard = rx.lock().unwrap();
+            let guard = crate::util::lock(&rx);
             match guard.recv() {
                 Ok(r) => r,
                 Err(_) => return, // engine dropped

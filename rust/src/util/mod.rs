@@ -13,6 +13,17 @@ pub fn round_up(x: usize, m: usize) -> usize {
     (x + m - 1) / m * m
 }
 
+/// Lock a mutex, recovering the data on poison. Outside the `comm/` and
+/// `ckpt/` fabrics a poisoned lock means some peer thread panicked
+/// mid-update of a read-mostly structure (counters, caches, node lists)
+/// whose data is still coherent — propagating the poison panic from here
+/// would mask the root cause the harness is trying to surface.
+/// `optimus lint` forbids bare `.lock().unwrap()` outside comm/ckpt;
+/// this is the sanctioned alternative.
+pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Budget for wall-clock *upper-bound* assertions in timing-sensitive
 /// tests: multiplies `base_secs` by `OPTIMUS_TIME_MULT` when set, else by
 /// a generous 4× on CI runners (the `CI` env var) and 1× locally — so the

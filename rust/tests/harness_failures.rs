@@ -4,7 +4,7 @@
 //! `train()` surfaces the *root-cause* error (never a peer's panic) —
 //! plus the zero-copy contract of the `Arc`-backed parameter tensor.
 
-use optimus::comm::Topology;
+use optimus::comm::{CommFault, Group, ReduceDtype, Topology};
 use optimus::coordinator::{self, JobSpec};
 use optimus::ft::{classify, FailureKind, HardKillHook};
 use optimus::runtime::{Engine, Tensor};
@@ -82,6 +82,88 @@ fn pp_ep_hybrid_failure_poisons_mesh_and_surfaces_root_cause() {
     // ep-group collectives and p2p stage channels; poisoning must unblock
     // both and still surface the root cause
     assert_root_cause_surfaces(Topology { dp: 1, ep: 2, pp: 2 }, "pp_ep");
+}
+
+// ---- protocol auditor + watchdog (artifact-free: drive the fabric
+// directly, so these always run) ------------------------------------
+
+/// Two ranks in *different program orders* on the same group: rank 0
+/// issues an allreduce where rank 1 issues an allgather. Pre-auditor
+/// this was the classic silent deadlock (each waits for a deposit shaped
+/// like its own op); now whoever arrives second fails the round with the
+/// stable `[order]` violation, the group poisons, and the compliant peer
+/// unblocks — classified as a non-relaunchable program bug.
+#[test]
+fn divergent_program_order_is_an_order_violation_not_a_deadlock() {
+    let g = Group::new_labeled(2, "hf-order");
+    let t0 = std::time::Instant::now();
+    let a = {
+        let g = Arc::clone(&g);
+        std::thread::Builder::new()
+            .name("hf-order-0".into())
+            .spawn(move || g.allreduce_checked(0, vec![1.0, 2.0], ReduceDtype::F32))
+            .unwrap()
+    };
+    let b = {
+        let g = Arc::clone(&g);
+        std::thread::Builder::new()
+            .name("hf-order-1".into())
+            .spawn(move || g.allgather_checked(1, vec![3.0]))
+            .unwrap()
+    };
+    let faults = [
+        a.join().unwrap().unwrap_err(),
+        b.join().unwrap().unwrap_err(),
+    ];
+    assert!(
+        t0.elapsed() < optimus::util::time_budget_secs(60),
+        "order violation must fail fast, not ride the watchdog: {:?}",
+        t0.elapsed()
+    );
+    let msgs: Vec<String> = faults.iter().map(|f| f.to_string()).collect();
+    assert!(
+        msgs.iter()
+            .any(|m| m.contains("collective protocol violated [order]")),
+        "{msgs:?}"
+    );
+    // the violation names both ops — attributable at a glance
+    let v = msgs.iter().find(|m| m.contains("[order]")).unwrap();
+    assert!(v.contains("allreduce") && v.contains("allgather"), "{v}");
+    // deterministic program bug → Config (relaunch replays it identically)
+    let fault = faults
+        .iter()
+        .find(|f| matches!(f, CommFault::Violated { .. }))
+        .unwrap();
+    assert_eq!(
+        classify(&anyhow::anyhow!("{fault}")),
+        FailureKind::Config,
+        "{fault}"
+    );
+}
+
+/// A peer that never shows up: the waiter's watchdog expires, fails with
+/// the stable `[stall]` string and dumps the per-rank last-op table
+/// (who deposited what, who was never seen) — the scale-debugging
+/// breadcrumb the paper's hang postmortems need. Stalls classify Hard:
+/// the dominant cause is a dead peer, which a relaunch on a buffer node
+/// fixes.
+#[test]
+fn stalled_peer_fails_with_a_per_rank_last_op_dump() {
+    let g = Group::new_labeled(2, "hf-stall");
+    g.set_stall_timeout(std::time::Duration::from_millis(100));
+    let e = g
+        .allreduce_checked(0, vec![1.0], ReduceDtype::F32)
+        .unwrap_err();
+    let msg = e.to_string();
+    assert!(msg.contains("collective protocol violated [stall]"), "{msg}");
+    assert!(msg.contains("rank 0 waiting on allreduce"), "{msg}");
+    assert!(msg.contains("rank 1 never deposited"), "{msg}");
+    assert!(msg.contains("hf-stall"), "{msg}");
+    assert_eq!(
+        classify(&anyhow::anyhow!("{msg}")),
+        FailureKind::Hard,
+        "{msg}"
+    );
 }
 
 #[test]

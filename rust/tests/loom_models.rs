@@ -1,0 +1,182 @@
+//! Loom model checks for the comm fabric's two protocol state machines:
+//! the [`Group`] rendezvous (arrive → combine → depart → reset, plus
+//! poison-on-peer-death) and the [`CommRuntime`] lane lifecycle
+//! (submit → execute → wait, plus abort-orphaning and drop-drain).
+//!
+//! These only compile (and run) under `RUSTFLAGS="--cfg loom"`, which
+//! swaps every primitive in `comm::lsync` for loom's model-checked
+//! versions: each `loom::model` body is executed under *every* relevant
+//! thread interleaving, so a lost wakeup, double reset, leaked in-flight
+//! job or missed poison check fails deterministically here instead of
+//! hanging CI once a month. Bound the search with
+//! `LOOM_MAX_PREEMPTIONS=3` (the CI setting) for tractable runtimes.
+//!
+//! Keep the models small: loom supports at most 4 threads (including the
+//! model's main thread) and the state space is exponential in the number
+//! of synchronization operations.
+#![cfg(loom)]
+
+use loom::thread;
+use optimus::comm::{CommFault, CommRuntime, Group, ReduceDtype};
+use std::sync::Arc;
+
+// ---- Group rendezvous ------------------------------------------------
+
+/// Two members, two back-to-back rounds: exercises the full
+/// arrive/combine/depart/reset cycle *including* the drain-wait (an
+/// early finisher re-entering for round r+1 while round r still holds
+/// its result must park until the reset). A lost wakeup or a premature
+/// reset deadlocks or mis-sums some interleaving.
+#[test]
+fn allreduce_two_ranks_two_rounds() {
+    loom::model(|| {
+        let g = Group::new_labeled(2, "loom-ar");
+        let hs: Vec<_> = (0..2usize)
+            .map(|r| {
+                let g = Arc::clone(&g);
+                thread::spawn(move || {
+                    for round in 0..2u32 {
+                        let v = g
+                            .allreduce_checked(
+                                r,
+                                vec![r as f32 + round as f32],
+                                ReduceDtype::F32,
+                            )
+                            .unwrap();
+                        // sum over ranks of (r + round) = 1 + 2*round
+                        assert_eq!(v, vec![1.0 + 2.0 * round as f32]);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// Three members, one round: the last-arrival-combines and
+/// last-departure-resets transitions with a bigger membership (first
+/// and last arrival are different ranks in different interleavings).
+#[test]
+fn allreduce_three_ranks_single_round() {
+    loom::model(|| {
+        let g = Group::new_labeled(3, "loom-ar3");
+        let hs: Vec<_> = (0..3usize)
+            .map(|r| {
+                let g = Arc::clone(&g);
+                thread::spawn(move || {
+                    g.allreduce_checked(r, vec![1.0], ReduceDtype::F32).unwrap()
+                })
+            })
+            .collect();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), vec![3.0]);
+        }
+    });
+}
+
+/// Peer death: one member deposits and waits, the "dead" peer poisons
+/// the group instead of arriving. Whatever the interleaving — poison
+/// before the survivor enters, between its deposit and its wait, or
+/// while it is parked on the condvar — the survivor must come back with
+/// `Poisoned`, never deadlock. (This model is what caught the missing
+/// pre-wait poison check in `Group::wait_step`.)
+#[test]
+fn peer_death_poisons_the_waiting_member() {
+    loom::model(|| {
+        let g = Group::new_labeled(2, "loom-poison");
+        let survivor = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || g.allreduce_checked(0, vec![1.0], ReduceDtype::F32))
+        };
+        let dead = thread::spawn(move || g.poison());
+        dead.join().unwrap();
+        let r = survivor.join().unwrap();
+        assert!(matches!(r, Err(CommFault::Poisoned)), "{r:?}");
+    });
+}
+
+/// Program-order divergence: the two members issue *different*
+/// collectives into the same round. Exactly one of them pins the round;
+/// the other must fail with the `[order]` violation, and the violation
+/// must poison the group so the pinner unblocks with `Poisoned` —
+/// in every arrival order.
+#[test]
+fn order_violation_fails_both_members_without_hanging() {
+    loom::model(|| {
+        let g = Group::new_labeled(2, "loom-order");
+        let a = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || g.allreduce_checked(0, vec![1.0], ReduceDtype::F32))
+        };
+        let b = thread::spawn(move || g.allgather_checked(1, vec![2.0]));
+        let ra = a.join().unwrap();
+        let rb = b.join().unwrap();
+        let faults = [ra.unwrap_err(), rb.unwrap_err()];
+        let violations = faults
+            .iter()
+            .filter(|f| matches!(f, CommFault::Violated { check: "order", .. }))
+            .count();
+        let poisons = faults
+            .iter()
+            .filter(|f| matches!(f, CommFault::Poisoned))
+            .count();
+        // the second arrival violates; the first either was still waiting
+        // (Poisoned) or had not yet deposited when the poison landed
+        assert_eq!(violations + poisons, 2, "{faults:?}");
+        assert!(violations >= 1, "someone must see the order violation: {faults:?}");
+    });
+}
+
+// ---- CommRuntime lane ------------------------------------------------
+
+/// Submit → execute → wait on a live lane, then drop it: two FIFO jobs
+/// must both resolve with their own results (no lost wakeup between the
+/// worker's `Done` notify and the waiter), and `Drop` must join the
+/// worker cleanly (loom fails leaked threads).
+#[test]
+fn lane_submit_wait_drop_lifecycle() {
+    loom::model(|| {
+        let rt = CommRuntime::new("loom-lane");
+        let h1 = rt.submit(|| 1usize);
+        let h2 = rt.submit(|| 2usize);
+        assert_eq!(h1.wait(), 1);
+        assert_eq!(h2.wait(), 2);
+        drop(rt);
+    });
+}
+
+/// Dropping a lane with a job still queued: `Drop` closes the queue and
+/// the worker drains what was already submitted before exiting — the
+/// handle must resolve to the job's value, never to a lost job.
+#[test]
+fn dropping_the_lane_never_loses_a_queued_job() {
+    loom::model(|| {
+        let rt = CommRuntime::new("loom-drop");
+        let h = rt.submit(|| 9usize);
+        drop(rt);
+        assert_eq!(h.wait(), 9);
+    });
+}
+
+/// Abort racing the worker: the submitted job either ran (worker popped
+/// it first) or was orphaned with its lane label and op counter (abort
+/// drained it first). Both are legal; silently hanging or losing the
+/// slot is not.
+#[test]
+fn abort_orphans_or_completes_but_never_hangs() {
+    loom::model(|| {
+        let rt = CommRuntime::new("loom-abort");
+        let h = rt.submit(|| 5usize);
+        rt.abort();
+        match h.try_wait() {
+            Ok(v) => assert_eq!(v, 5),
+            Err(d) => {
+                assert_eq!(d.op, 1);
+                assert!(d.lane.contains("loom-abort"), "{}", d.lane);
+            }
+        }
+        drop(rt);
+    });
+}

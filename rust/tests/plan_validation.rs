@@ -80,7 +80,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
             name: "zero axis",
             plan: plan(Topology { dp: 0, ep: 1, pp: 1 }),
             mm: mm.clone(),
-            tag: "[topology]",
+            tag: "plan validation failed [topology]",
             fragment: "every mesh axis must be >= 1",
         },
         Case {
@@ -91,7 +91,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
                 p
             },
             mm: mm.clone(),
-            tag: "[world-size]",
+            tag: "plan validation failed [world-size]",
             fragment: "does not equal the requested world size 8",
         },
         Case {
@@ -102,7 +102,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
                 p
             },
             mm: mm.clone(),
-            tag: "[micro-batches]",
+            tag: "plan validation failed [micro-batches]",
             fragment: "must be in 1..=64",
         },
         Case {
@@ -113,7 +113,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
                 p
             },
             mm: mm.clone(),
-            tag: "[micro-batches]",
+            tag: "plan validation failed [micro-batches]",
             fragment: "got 65",
         },
         Case {
@@ -125,7 +125,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
                 p
             },
             mm: mm.clone(),
-            tag: "[sharding]",
+            tag: "plan validation failed [sharding]",
             fragment: "EPSO requires ep > 1",
         },
         Case {
@@ -137,7 +137,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
                 p
             },
             mm: mm.clone(),
-            tag: "[overlap]",
+            tag: "plan validation failed [overlap]",
             fragment: "positive overlap_chunk",
         },
         Case {
@@ -149,7 +149,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
                 p
             },
             mm: mm.clone(),
-            tag: "[checkpoint]",
+            tag: "plan validation failed [checkpoint]",
             fragment: "keep must be >= 2",
         },
         Case {
@@ -161,42 +161,53 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
                 p
             },
             mm: mm.clone(),
-            tag: "[checkpoint]",
+            tag: "plan validation failed [checkpoint]",
             fragment: "interval must be >= 1",
         },
         Case {
             name: "missing PP artifacts for degree",
             plan: plan(Topology { dp: 1, ep: 1, pp: 4 }),
             mm: mm.clone(),
-            tag: "[pp-artifacts]",
+            tag: "plan validation failed [pp-artifacts]",
             fragment: "no PP=4 stage artifacts",
         },
         Case {
             name: "missing EP artifacts for degree",
             plan: plan(Topology { dp: 1, ep: 4, pp: 1 }),
             mm: mm.clone(),
-            tag: "[ep-artifacts]",
+            tag: "plan validation failed [ep-artifacts]",
             fragment: "no EP=4 artifacts",
         },
         Case {
             name: "hybrid needs the EP degree built",
             plan: plan(Topology { dp: 1, ep: 4, pp: 2 }),
             mm: mm.clone(),
-            tag: "[ep-artifacts]",
+            tag: "plan validation failed [ep-artifacts]",
             fragment: "no EP=4 artifacts",
         },
         Case {
             name: "ep does not divide experts",
             plan: plan(Topology { dp: 1, ep: 3, pp: 1 }),
             mm: mm.clone(),
-            tag: "[expert-split]",
+            tag: "plan validation failed [expert-split]",
             fragment: "ep=3 does not divide n_experts=4",
+        },
+        Case {
+            name: "pp does not divide layers",
+            plan: plan(Topology { dp: 1, ep: 1, pp: 2 }),
+            mm: {
+                let mut m = mm.clone();
+                m.hyper.n_layers = 5;
+                m
+            },
+            tag: "plan validation failed [layer-split]",
+            fragment: "pp=2 does not divide n_layers=5",
         },
         Case {
             name: "seq + 1 > data context",
             plan: plan(Topology::dp_only(2)),
             mm: mm_long_seq,
-            tag: "[data-context]",
+            tag: "plan validation failed [data-context]",
             fragment: "data context 64 < model seq+1 = 129",
         },
     ];
