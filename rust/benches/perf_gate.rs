@@ -1,15 +1,19 @@
 //! CI perf gate: mula-tiny DP and PP×EP micro-benches, serial vs
 //! `--overlap` (the pipelined EPSO path), the checkpoint snapshot
 //! stall (sync vs async sharded checkpointing), the data pipeline
-//! (prefetch-on vs prefetch-off steps/sec + `data_wait_secs`), and the
+//! (prefetch-on vs prefetch-off steps/sec + `data_wait_secs`), the
 //! mixed-precision lanes (`--dtype f32` vs `bf16`: steps/sec, collective
-//! bytes at wire width, checkpoint param-shard bytes), written to
-//! `BENCH_PR6.json` at the repo root and gated against the committed
+//! bytes at wire width, checkpoint param-shard bytes), and the
+//! hierarchical-collective lanes (flat vs `--node-size 3` on a 6-rank DP
+//! mesh: steps/sec plus intra-node vs inter-node bytes), written to
+//! `BENCH_PR8.json` at the repo root and gated against the committed
 //! `ci/bench_baseline.json` — a steps/sec regression beyond the
 //! baseline's tolerance (default 10%) exits nonzero so the `perf-gate`
-//! workflow job fails. The dtype byte accounting is deterministic, so
-//! its gate is unconditional: bf16 collective traffic and checkpoint
-//! param shards must land at ≤ 55% of the f32 lane's.
+//! workflow job fails. The byte accounting is deterministic, so those
+//! gates are unconditional: bf16 collective traffic and checkpoint
+//! param shards must land at ≤ 55% of the f32 lane's, and the
+//! hierarchical lane's inter-node bytes at ≤ (n−1)/n of the flat
+//! lane's (n = node size).
 //!
 //! Baseline entries that are absent, null or zero are *record-only*: the
 //! run prints the measured value and passes, so the gate bootstraps on
@@ -45,7 +49,7 @@ fn repo_root() -> PathBuf {
 fn out_path() -> PathBuf {
     std::env::var("PERF_GATE_OUT")
         .map(PathBuf::from)
-        .unwrap_or_else(|_| repo_root().join("BENCH_PR6.json"))
+        .unwrap_or_else(|_| repo_root().join("BENCH_PR8.json"))
 }
 
 fn baseline_path() -> PathBuf {
@@ -137,15 +141,16 @@ fn main() -> optimus::Result<()> {
 
     let cases = [
         Case { name: "dp", topo: Topology::dp_only(2) },
-        Case { name: "ppep", topo: Topology { dp: 1, ep: 2, pp: 2 } },
+        Case { name: "ppep", topo: Topology::grid(1, 2, 2) },
     ];
 
     let mut out = BTreeMap::new();
     out.insert(
         "bench".to_string(),
         Json::Str(
-            "perf-gate PR6: mula-tiny serial vs --overlap + ckpt snapshot stall \
-             + data prefetch on/off + --dtype f32 vs bf16"
+            "perf-gate PR8: mula-tiny serial vs --overlap + ckpt snapshot stall \
+             + data prefetch on/off + --dtype f32 vs bf16 + flat vs --node-size \
+             hierarchical collectives"
                 .to_string(),
         ),
     );
@@ -403,6 +408,87 @@ fn main() -> optimus::Result<()> {
                 100.0 * b as f64 / f as f64
             );
         }
+    }
+
+    // --- hierarchical collectives: flat vs --node-size 3 on a 6-rank DP
+    // mesh. Steps/sec gates like the other lanes (record-only until a
+    // baseline is committed); the intra/inter byte split is deterministic
+    // accounting, so the (n−1)/n inter-node reduction gate is
+    // unconditional. ---
+    const NODE_SIZE: usize = 3;
+    let mut hier_table = Report::new(
+        "perf-gate — hierarchical collectives, flat vs --node-size 3 (mula-tiny DP world 6)",
+        &["lane", "steps/sec", "intra MiB", "inter MiB"],
+    );
+    let mut hier_lanes: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+    for (lane, ns) in [("flat", 1usize), ("hier", NODE_SIZE)] {
+        let spec = JobSpec::new("mula-tiny")
+            .data_dir(data.clone())
+            .topo(Topology::dp_only(6).with_node_size(ns))
+            .steps(STEPS)
+            .warmup_steps(2)
+            .engine_pool(2)
+            .build()?;
+        let r = coordinator::train(&man, &spec)?;
+        let sps = 1.0 / r.mean_step_secs().max(1e-9);
+        hier_table.row(&[
+            lane.to_string(),
+            format!("{sps:.2}"),
+            format!("{:.2}", r.comm_intra_bytes as f64 / (1 << 20) as f64),
+            format!("{:.2}", r.comm_inter_bytes as f64 / (1 << 20) as f64),
+        ]);
+        out.insert(format!("dp_{lane}_steps_per_sec"), Json::Num(sps));
+        out.insert(
+            format!("dp_{lane}_intra_bytes"),
+            Json::Num(r.comm_intra_bytes as f64),
+        );
+        out.insert(
+            format!("dp_{lane}_inter_bytes"),
+            Json::Num(r.comm_inter_bytes as f64),
+        );
+        hier_lanes.insert(lane, (r.comm_intra_bytes, r.comm_inter_bytes));
+        let gate_key = format!("dp_{lane}_steps_per_sec");
+        match baseline
+            .as_ref()
+            .and_then(|bl| bl.get(&gate_key))
+            .and_then(Json::as_f64)
+        {
+            Some(base) if base > 0.0 => {
+                let floor = base * (1.0 - tolerance);
+                if sps < floor {
+                    failures.push(format!(
+                        "{gate_key}: {sps:.2} steps/sec regressed more than \
+                         {:.0}% below baseline {base:.2} (floor {floor:.2})",
+                        tolerance * 100.0
+                    ));
+                } else {
+                    println!("perf-gate: {gate_key} {sps:.2} vs baseline {base:.2} — ok");
+                }
+            }
+            _ => println!("perf-gate: {gate_key} {sps:.2} — no baseline yet, record-only"),
+        }
+    }
+    out.insert("hier_node_size".to_string(), Json::Num(NODE_SIZE as f64));
+    hier_table.print();
+    let (_flat_intra, flat_inter) = hier_lanes["flat"];
+    let (hier_intra, hier_inter) = hier_lanes["hier"];
+    // the whole point of the hierarchy: at node size n the inter-node
+    // fabric carries at most (n−1)/n of the flat lane's bytes, with the
+    // remainder moved onto the intra-node legs
+    let cap = flat_inter as f64 * (NODE_SIZE as f64 - 1.0) / NODE_SIZE as f64;
+    if flat_inter == 0 || hier_intra == 0 || hier_inter as f64 > cap {
+        failures.push(format!(
+            "hier inter-node bytes {hier_inter} exceed (n-1)/n of flat {flat_inter} \
+             (cap {cap:.0}, intra-node {hier_intra}) — the --node-size hierarchy is \
+             not keeping reduction traffic on the intra-node legs"
+        ));
+    } else {
+        println!(
+            "perf-gate: hier inter-node bytes {hier_inter} = {:.1}% of flat \
+             {flat_inter} (cap {:.1}%) — ok",
+            100.0 * hier_inter as f64 / flat_inter as f64,
+            100.0 * (NODE_SIZE as f64 - 1.0) / NODE_SIZE as f64
+        );
     }
 
     let path = out_path();

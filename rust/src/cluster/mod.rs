@@ -54,6 +54,10 @@ pub struct ParallelPlan {
     /// dtype: 2.0 for bf16 (the paper's production precision, and the
     /// default every projection in the paper assumes), 4.0 for f32
     pub wire_bytes: f64,
+    /// tiles per node — the intra/inter split the hierarchical
+    /// collectives are built around (mirrors
+    /// [`crate::comm::Topology::node_size`]; Aurora packs 12)
+    pub node_size: usize,
 }
 
 impl ParallelPlan {
@@ -108,11 +112,38 @@ impl StepModel {
     pub fn total(&self) -> f64 {
         self.compute + self.dp_comm + self.ep_comm + self.pp_bubble + self.optimizer
     }
+
+    /// Predicted speedup from overlapping the DP gradient collectives
+    /// with compute (the `--overlap` pipelined optimizer, paper §3.2):
+    /// the hidable comm is bounded by the compute it hides behind.
+    pub fn overlap_speedup(&self) -> f64 {
+        let hidden = self.dp_comm.min(self.compute);
+        self.total() / (self.total() - hidden).max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Predicted inter-node traffic ratio of hierarchical vs flat sum
+/// collectives at `node_size` tiles per node: only the per-node leader
+/// exchanges full frames inter-node, so the inter bytes shrink to
+/// `1/node_size` of the flat all-pairs rendezvous. (Gather-type ops
+/// reduce less — leaders re-read the full concat — so a measured
+/// training mix lands between this and 1; `optimus predict` reports
+/// the gap as model error.)
+pub fn hier_inter_traffic_ratio(node_size: usize) -> f64 {
+    if node_size <= 1 {
+        1.0
+    } else {
+        1.0 / node_size as f64
+    }
 }
 
 pub fn step_time(m: &MulaSpec, hw: &Aurora, plan: &ParallelPlan, epso: bool) -> StepModel {
     let tiles = plan.dp * plan.ep * plan.pp;
-    let nodes = (tiles + hw.tiles_per_node - 1) / hw.tiles_per_node;
+    // the plan's node packing — not the machine constant — decides how
+    // many nodes the placement spans (a half-packed job spans twice the
+    // nodes of a dense one, and its inter-node terms price accordingly)
+    let node_size = plan.node_size.max(1);
+    let nodes = (tiles + node_size - 1) / node_size;
     let tokens_local = plan.tokens_per_tile as f64;
 
     // ---- compute: fwd+bwd FLOPs on the tile's share of the model ----
@@ -169,7 +200,6 @@ pub fn step_time(m: &MulaSpec, hw: &Aurora, plan: &ParallelPlan, epso: bool) -> 
     } / plan.pp as f64;
     // 16 bytes/param state traffic at ~0.5 TB/s effective HBM
     let optimizer = shard * 16.0 / 0.5e12 + if nodes > 1 { ring(nodes as f64, 0.0) } else { 0.0 };
-    let _ = nodes;
 
     StepModel { compute, dp_comm, ep_comm, pp_bubble, optimizer }
 }
@@ -193,6 +223,7 @@ pub fn scaling_efficiency(
         tokens_per_tile: 4096,
         fur,
         wire_bytes: 2.0,
+        node_size: 12,
     };
     let fix = |t: usize| {
         let mut p = plan(t);
@@ -304,10 +335,40 @@ mod tests {
             tokens_per_tile: 4096,
             fur: false,
             wire_bytes: 2.0,
+            node_size: 12,
         };
         let s = step_time(&MULA_220B, &hw, &plan, true);
         assert!(s.compute > 0.0 && s.total() > s.compute);
         assert!(s.compute / s.total() > 0.35, "{s:?}");
+    }
+
+    #[test]
+    fn node_size_drives_the_internode_split() {
+        let hw = Aurora::default();
+        let mk = |node_size| ParallelPlan {
+            dp: 32,
+            ep: 12,
+            pp: 8,
+            micro_batches: 16,
+            schedule: Schedule::OneFOneB,
+            tokens_per_tile: 4096,
+            fur: false,
+            wire_bytes: 2.0,
+            node_size,
+        };
+        // half-packed nodes span twice as many, so the optimizer's
+        // inter-node latency term grows; compute never moves
+        let dense = step_time(&MULA_220B, &hw, &mk(12), true);
+        let sparse = step_time(&MULA_220B, &hw, &mk(6), true);
+        assert_eq!(dense.compute, sparse.compute);
+        assert!(sparse.optimizer > dense.optimizer, "{} vs {}", sparse.optimizer, dense.optimizer);
+        // the hierarchical traffic prediction `optimus predict` checks
+        assert_eq!(hier_inter_traffic_ratio(1), 1.0);
+        assert!((hier_inter_traffic_ratio(12) - 1.0 / 12.0).abs() < 1e-12);
+        // overlap can only help, and only up to hiding all dp comm
+        let s = dense;
+        assert!(s.overlap_speedup() >= 1.0);
+        assert!(s.overlap_speedup() <= s.total() / (s.total() - s.dp_comm) + 1e-9);
     }
 
     #[test]
@@ -322,6 +383,7 @@ mod tests {
             tokens_per_tile: 4096,
             fur: false,
             wire_bytes,
+            node_size: 12,
         };
         let bf16 = step_time(&MULA_220B, &hw, &mk(2.0), true);
         let f32w = step_time(&MULA_220B, &hw, &mk(4.0), true);

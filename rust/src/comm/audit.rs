@@ -8,7 +8,10 @@
 //! attributable failure:
 //!
 //! * every deposit carries an [`OpDesc`] (op kind, payload length, wire
-//!   dtype);
+//!   dtype) — built exactly once per issued op by
+//!   [`CollectiveOp::desc`](super::CollectiveOp::desc), so the auditor
+//!   checks the very descriptor the program stated rather than one
+//!   reconstructed per method;
 //! * the **first arrival of a round pins** the round's descriptor;
 //! * any mismatching later arrival fails the whole group with a stable
 //!   `collective protocol violated [order|shape|dtype]` error

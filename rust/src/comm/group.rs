@@ -1,16 +1,27 @@
 //! A process group: rendezvous collectives among `size` participants.
 //!
-//! Each collective is a two-phase rendezvous guarded by a mutex+condvar:
-//! all members deposit their contribution; the last arrival computes the
-//! result; everyone picks up their share; the last departure resets the
-//! slot for the next round. Rounds are strictly ordered per group, which
-//! matches the deterministic program order of collectives in SPMD
-//! training.
+//! The public surface is one typed descriptor, [`CollectiveOp`], executed
+//! via [`Group::run`] (blocking) or [`Group::start`] (on a
+//! [`CommRuntime`] lane). Flat and hierarchical execution are
+//! interchangeable strategies behind that single surface: a group built
+//! with node placement (see [`Group::new_on_nodes`]) runs the
+//! reduction-shaped ops in three phases — intra-node reduce over a
+//! node-local subgroup, inter-node exchange over a leaders subgroup,
+//! intra-node broadcast back — while a flat group (or a
+//! hierarchy-ineligible op) runs one world-wide rendezvous. DESIGN.md §6
+//! has the phase diagram and the op contract.
+//!
+//! Each rendezvous is two-phase, guarded by a mutex+condvar: all members
+//! deposit their contribution; the last arrival computes the result;
+//! everyone picks up their share; the last departure resets the slot for
+//! the next round. Rounds are strictly ordered per group, which matches
+//! the deterministic program order of collectives in SPMD training.
 //!
 //! Two guards make protocol misuse fail fast instead of hanging or
 //! silently corrupting (DESIGN.md §12):
 //!
-//! * every deposit carries an [`OpDesc`] checked by the round's
+//! * every deposit carries the op's [`OpDesc`] (built once by
+//!   [`CollectiveOp::desc`]) checked by the round's
 //!   [`Audit`](super::audit) — the first arrival pins the round, any
 //!   mismatching member fails the group with a stable
 //!   `collective protocol violated [order|shape|dtype]` error;
@@ -47,6 +58,133 @@ impl From<ReduceDtype> for WireDtype {
     }
 }
 
+/// Reduction applied by [`CollectiveOp::Allreduce`] /
+/// [`CollectiveOp::ReduceScatter`]. `Mean` divides the elementwise sum
+/// by the **parent** group size (so a hierarchical mean matches the flat
+/// one); `Max` is hierarchy-ineligible and always runs flat.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduce {
+    Sum,
+    Mean,
+    Max,
+}
+
+/// How [`CollectiveOp::ReduceScatter`] splits the reduced vector across
+/// ranks: `Ragged` uses the ZeRO-style contiguous ranges of
+/// [`crate::util::shard_ranges`] (length need not divide evenly), `Even`
+/// asserts divisibility and hands rank r the r-th `1/size` slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parts {
+    Ragged,
+    Even,
+}
+
+/// One collective, fully described: what travels, how it is combined,
+/// and at what wire width. This is the single surface the engines, the
+/// sharded optimizer, and the tests speak — the auditor consumes the
+/// same descriptor (via [`CollectiveOp::desc`]) that execution does, so
+/// a protocol violation names exactly the op the program issued.
+#[derive(Clone, Debug)]
+pub enum CollectiveOp {
+    /// Elementwise reduction; every rank receives the full result.
+    Allreduce { data: Vec<f32>, red: Reduce, dt: ReduceDtype },
+    /// Elementwise sum (optionally mean-scaled); rank r receives its
+    /// `parts`-defined slice. `red` must be `Sum` or `Mean`.
+    ReduceScatter { data: Vec<f32>, red: Reduce, dt: ReduceDtype, parts: Parts },
+    /// Concatenation of every rank's (equal-length or ragged)
+    /// contribution, in rank order. `dt: Bf16` rounds once (RNE) onto a
+    /// 2-byte wire and decodes exactly on pickup.
+    Allgather { data: Vec<f32>, dt: ReduceDtype },
+    /// Allgather of raw bf16 storage bits — the mixed-precision
+    /// optimizer's param wire; no f32 decode anywhere.
+    AllgatherBits { data: Vec<u16> },
+    /// `parts[d]` goes to rank d; returns the buffers destined to the
+    /// caller, in source order.
+    All2All { parts: Vec<Vec<f32>> },
+    /// `data` from `root` to everyone; non-root `data` is ignored.
+    Broadcast { root: usize, data: Vec<f32> },
+    Barrier,
+}
+
+impl CollectiveOp {
+    /// The audit descriptor for this op — built once per issue, checked
+    /// against every peer's deposit by the protocol auditor. `Sum` vs
+    /// `Mean` is deliberately not part of the contract (the scale is a
+    /// local post-step), matching the wire format, which is identical.
+    pub fn desc(&self) -> OpDesc {
+        match self {
+            CollectiveOp::Allreduce { data, red: Reduce::Max, dt } => OpDesc {
+                kind: OpKind::AllreduceMax,
+                len: Some(data.len()),
+                dtype: (*dt).into(),
+            },
+            CollectiveOp::Allreduce { data, dt, .. } => OpDesc {
+                kind: OpKind::Allreduce,
+                len: Some(data.len()),
+                dtype: (*dt).into(),
+            },
+            CollectiveOp::ReduceScatter { data, dt, .. } => OpDesc {
+                kind: OpKind::ReduceScatter,
+                len: Some(data.len()),
+                dtype: (*dt).into(),
+            },
+            CollectiveOp::Allgather { dt, .. } => {
+                // ragged contributions are legal: len is not part of the
+                // contract
+                OpDesc { kind: OpKind::Allgather, len: None, dtype: (*dt).into() }
+            }
+            CollectiveOp::AllgatherBits { .. } => {
+                OpDesc { kind: OpKind::Allgather, len: None, dtype: WireDtype::Bf16 }
+            }
+            CollectiveOp::All2All { .. } => {
+                OpDesc { kind: OpKind::All2All, len: None, dtype: WireDtype::F32 }
+            }
+            CollectiveOp::Broadcast { root, .. } => OpDesc {
+                kind: OpKind::Broadcast { root: *root },
+                len: None,
+                dtype: WireDtype::F32,
+            },
+            CollectiveOp::Barrier => {
+                OpDesc { kind: OpKind::Barrier, len: Some(0), dtype: WireDtype::F32 }
+            }
+        }
+    }
+}
+
+/// What [`Group::run`] hands back; variant follows the op. The accessors
+/// panic on a mismatch — reaching for `.values()` of a barrier is a
+/// program bug, not a runtime condition.
+#[derive(Debug)]
+pub enum CollectiveOut {
+    Values(Vec<f32>),
+    Bits(Vec<u16>),
+    Buckets(Vec<Vec<f32>>),
+    Unit,
+}
+
+impl CollectiveOut {
+    pub fn values(self) -> Vec<f32> {
+        match self {
+            CollectiveOut::Values(v) => v,
+            other => panic!("expected CollectiveOut::Values, got {other:?}"),
+        }
+    }
+
+    pub fn bits(self) -> Vec<u16> {
+        match self {
+            CollectiveOut::Bits(v) => v,
+            other => panic!("expected CollectiveOut::Bits, got {other:?}"),
+        }
+    }
+
+    pub fn buckets(self) -> Vec<Vec<f32>> {
+        match self {
+            CollectiveOut::Buckets(v) => v,
+            other => panic!("expected CollectiveOut::Buckets, got {other:?}"),
+        }
+    }
+}
+
 /// What actually travels the simulated fabric: 4-byte f32 words or 2-byte
 /// bf16 words. A bf16 collective deposits and publishes `Bf16` frames, so
 /// wire-byte accounting (and the perf gate's bytes-moved column) sees the
@@ -62,6 +200,13 @@ impl Wire {
         match dt {
             ReduceDtype::F32 => Wire::F32(data),
             ReduceDtype::Bf16 => Wire::Bf16(f32s_to_bf16s(&data)),
+        }
+    }
+
+    fn empty(dtype: WireDtype) -> Wire {
+        match dtype {
+            WireDtype::F32 => Wire::F32(Vec::new()),
+            WireDtype::Bf16 => Wire::Bf16(Vec::new()),
         }
     }
 
@@ -89,7 +234,7 @@ struct Published {
     wire: Wire,
     /// f32 view of a bf16 `wire`; `None` for f32 wires (the wire *is*
     /// the view) and for ops whose consumers want raw storage bits
-    /// (`allgather_bf16`)
+    /// (`AllgatherBits`)
     decoded: Option<Vec<f32>>,
 }
 
@@ -101,6 +246,25 @@ impl Published {
             (Wire::Bf16(_), None) => {
                 unreachable!("bf16 result published without a decode for an f32 consumer")
             }
+        }
+    }
+
+    /// Owned f32 copy regardless of decode state (the hierarchy's
+    /// broadcast phase publishes without a shared decode).
+    fn to_f32(&self) -> Vec<f32> {
+        match (&self.wire, &self.decoded) {
+            (Wire::F32(v), _) => v.clone(),
+            (Wire::Bf16(_), Some(d)) => d.clone(),
+            (Wire::Bf16(v), None) => bf16s_to_f32s(v),
+        }
+    }
+
+    /// Owned bf16 storage bits (re-rounds an f32 wire, which only a
+    /// mixed-dtype combine could produce).
+    fn to_bits(&self) -> Vec<u16> {
+        match &self.wire {
+            Wire::Bf16(v) => v.clone(),
+            Wire::F32(v) => f32s_to_bf16s(v),
         }
     }
 }
@@ -117,17 +281,51 @@ struct RoundState {
 }
 
 /// Byte/operation counters for calibration of the cluster model.
+/// `intra_bytes` / `inter_bytes` split the total wire traffic
+/// (`bytes_in + bytes_out`, including hierarchy subgroups) by fabric:
+/// node-local (Xe-Link-priced) vs node-crossing (Slingshot-priced).
 #[derive(Default, Debug, Clone)]
 pub struct CommStats {
     pub ops: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+}
+
+impl CommStats {
+    /// Fold another group's counters into this accumulator (the mesh's
+    /// traffic sum and the harness's report both aggregate this way).
+    pub fn absorb(&mut self, o: &CommStats) {
+        self.ops += o.ops;
+        self.bytes_in += o.bytes_in;
+        self.bytes_out += o.bytes_out;
+        self.intra_bytes += o.intra_bytes;
+        self.inter_bytes += o.inter_bytes;
+    }
+}
+
+/// Two-level execution plan for a group whose members span several
+/// nodes: one node-local subgroup per contiguous node run, a leaders
+/// subgroup linking slot-0 members across nodes, and each member's
+/// `(node index, slot within node)` placement.
+pub(super) struct Hier {
+    intra: Vec<Arc<Group>>,
+    leaders: Arc<Group>,
+    place: Vec<(usize, usize)>,
 }
 
 pub struct Group {
     size: usize,
     /// shown in every violation / stall / dump message ("dp[0]", "world")
     label: String,
+    /// every member of this group lives on one node (its traffic is
+    /// Xe-Link-priced); hierarchy subgroups set this for their intra
+    /// legs, and the mesh sets it for groups fully contained in a node
+    intra_node: bool,
+    /// three-phase plan when the members span >1 node with ≥2 sharing
+    /// one; `None` ⇒ every op runs the flat single-level rendezvous
+    hier: Option<Hier>,
     state: Mutex<RoundState>,
     cv: Condvar,
     ops: AtomicU64,
@@ -155,6 +353,19 @@ fn default_stall_ms() -> u64 {
     })
 }
 
+/// Can this op run the three-phase hierarchy? Sum-shaped reductions and
+/// gathers decompose exactly (fixed order: members within a node, then
+/// nodes); max/all2all/broadcast/barrier stay on the flat path.
+fn hier_eligible(op: &CollectiveOp) -> bool {
+    matches!(
+        op,
+        CollectiveOp::Allreduce { red: Reduce::Sum | Reduce::Mean, .. }
+            | CollectiveOp::ReduceScatter { .. }
+            | CollectiveOp::Allgather { .. }
+            | CollectiveOp::AllgatherBits { .. }
+    )
+}
+
 impl Group {
     pub fn new(size: usize) -> Arc<Group> {
         static NEXT: AtomicU64 = AtomicU64::new(0);
@@ -164,12 +375,23 @@ impl Group {
 
     /// Group with a stable `label` (the mesh names its groups `dp[i]` /
     /// `ep[i]` / `dpep[i]` / `world`) used in protocol-violation and
-    /// stall messages.
+    /// stall messages. Flat: no node placement, traffic inter-node-priced.
     pub fn new_labeled(size: usize, label: &str) -> Arc<Group> {
+        Group::with_parts(size, label, false, None)
+    }
+
+    fn with_parts(
+        size: usize,
+        label: &str,
+        intra_node: bool,
+        hier: Option<Hier>,
+    ) -> Arc<Group> {
         assert!(size > 0);
         Arc::new(Group {
             size,
             label: label.to_string(),
+            intra_node,
+            hier,
             state: Mutex::new(RoundState {
                 round: 0,
                 arrived: 0,
@@ -188,6 +410,60 @@ impl Group {
         })
     }
 
+    /// Group with node placement: `nodes[i]` is the node hosting member
+    /// i. When the members span several nodes as contiguous runs and at
+    /// least one node holds ≥2 of them, the group gets a two-level
+    /// hierarchy (`{label}/node[j]` intra subgroups + `{label}/leaders`)
+    /// and the sum/gather collectives run three-phase; otherwise it
+    /// degenerates to the flat group, with `intra_node` set when the
+    /// whole group shares one node. Non-contiguous placements (a node id
+    /// recurring after a different one) also fall back flat — the
+    /// hierarchy's concat order must equal member order.
+    pub(super) fn new_on_nodes(size: usize, label: &str, nodes: &[usize]) -> Arc<Group> {
+        assert_eq!(nodes.len(), size);
+        // contiguous runs of equal node ids, in member order
+        let mut runs: Vec<(usize, usize)> = Vec::new(); // (start, len)
+        let mut contiguous = true;
+        for (i, n) in nodes.iter().enumerate() {
+            match runs.last_mut() {
+                Some((s, l)) if nodes[*s] == *n => *l += 1,
+                _ => {
+                    if runs.iter().any(|(s, _)| nodes[*s] == *n) {
+                        contiguous = false;
+                        break;
+                    }
+                    runs.push((i, 1));
+                }
+            }
+        }
+        if !contiguous {
+            return Group::with_parts(size, label, false, None);
+        }
+        if runs.len() == 1 {
+            // whole group on one node: flat, Xe-Link-priced
+            return Group::with_parts(size, label, true, None);
+        }
+        if runs.iter().all(|(_, l)| *l == 1) {
+            // one member per node (node_size=1 or a fully strided group):
+            // the hierarchy would be pure overhead
+            return Group::with_parts(size, label, false, None);
+        }
+        let intra: Vec<Arc<Group>> = runs
+            .iter()
+            .enumerate()
+            .map(|(j, (_, l))| Group::with_parts(*l, &format!("{label}/node[{j}]"), true, None))
+            .collect();
+        let leaders =
+            Group::with_parts(runs.len(), &format!("{label}/leaders"), false, None);
+        let mut place = vec![(0, 0); size];
+        for (j, (s, l)) in runs.iter().enumerate() {
+            for k in 0..*l {
+                place[s + k] = (j, k);
+            }
+        }
+        Group::with_parts(size, label, false, Some(Hier { intra, leaders, place }))
+    }
+
     pub fn size(&self) -> usize {
         self.size
     }
@@ -196,24 +472,47 @@ impl Group {
         &self.label
     }
 
-    /// Watchdog limit for a single collective wait. Waits exceeding it
-    /// poison the group and fail with
-    /// `collective protocol violated [stall]` plus a per-rank last-op
-    /// dump. Default: `OPTIMUS_STALL_TIMEOUT_SECS` (env) or 180 s.
+    /// Whether sum/gather collectives on this group run the three-phase
+    /// hierarchy (diagnostics; the execution strategy is otherwise
+    /// invisible through [`Group::run`]).
+    pub fn is_hierarchical(&self) -> bool {
+        self.hier.is_some()
+    }
+
+    /// Watchdog limit for a single collective wait, forwarded to the
+    /// hierarchy subgroups. Waits exceeding it poison the group and fail
+    /// with `collective protocol violated [stall]` plus a per-rank
+    /// last-op dump. Default: `OPTIMUS_STALL_TIMEOUT_SECS` (env) or 180 s.
     pub fn set_stall_timeout(&self, d: std::time::Duration) {
         self.stall_timeout_ms
             .store((d.as_millis() as u64).max(1), Ordering::Relaxed);
+        if let Some(h) = &self.hier {
+            for g in &h.intra {
+                g.set_stall_timeout(d);
+            }
+            h.leaders.set_stall_timeout(d);
+        }
     }
 
-    /// Mark the group dead (a member rank failed). Wakes all waiters,
-    /// which fail out of their collectives.
+    /// Mark the group dead (a member rank failed). Wakes all waiters —
+    /// including those parked in a hierarchy subgroup — which fail out
+    /// of their collectives.
     pub fn poison(&self) {
-        let _guard = self.state.lock().unwrap();
-        self.poison_locked();
+        {
+            let _guard = self.state.lock().unwrap();
+            self.poison_locked();
+        }
+        if let Some(h) = &self.hier {
+            for g in &h.intra {
+                g.poison();
+            }
+            h.leaders.poison();
+        }
     }
 
     /// Poison while already holding the state lock (a locked `poison()`
-    /// would deadlock on itself).
+    /// would deadlock on itself). Subgroups are NOT reached from here —
+    /// the unlocked [`Group::poison`] handles the fan-out.
     fn poison_locked(&self) {
         self.poisoned.store(true, Ordering::SeqCst);
         self.cv.notify_all();
@@ -225,13 +524,28 @@ impl Group {
 
     /// Both-direction traffic counters at actual wire width: `bytes_in`
     /// is what this group's members deposited onto the fabric, `bytes_out`
-    /// what they picked up (the published result, per member).
+    /// what they picked up (the published result, per member). Hierarchy
+    /// subgroup traffic is folded in, split into `intra_bytes` (node-local
+    /// legs) vs `inter_bytes` (node-crossing legs) — the measurable win
+    /// the cluster model prices.
     pub fn stats(&self) -> CommStats {
-        CommStats {
+        let bytes_in = self.bytes_in.load(Ordering::Relaxed);
+        let bytes_out = self.bytes_out.load(Ordering::Relaxed);
+        let own = bytes_in + bytes_out;
+        let mut s = CommStats {
             ops: self.ops.load(Ordering::Relaxed),
-            bytes_in: self.bytes_in.load(Ordering::Relaxed),
-            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            bytes_in,
+            bytes_out,
+            intra_bytes: if self.intra_node { own } else { 0 },
+            inter_bytes: if self.intra_node { 0 } else { own },
+        };
+        if let Some(h) = &self.hier {
+            for g in &h.intra {
+                s.absorb(&g.stats());
+            }
+            s.absorb(&h.leaders.stats());
         }
+        s
     }
 
     fn account_in(&self, bytes: usize) {
@@ -407,18 +721,18 @@ impl Group {
         Ok(out)
     }
 
-    /// Shared sum rendezvous behind `allreduce` and the reduce-scatter
-    /// family — parameterized by [`OpKind`] so each public collective
-    /// carries its own descriptor (a reduce_scatter meeting an allreduce
-    /// is an `[order]` violation, not a silent zip).
+    /// Shared sum rendezvous behind allreduce and reduce-scatter —
+    /// `desc` is the issuing op's descriptor, so a reduce_scatter meeting
+    /// an allreduce is an `[order]` violation, not a silent zip. The sum
+    /// runs in f32 after an exact decode, in member order (fixed, for
+    /// deterministic results), and the result is re-encoded at wire width.
     fn sum_rendezvous(
         &self,
         rank: usize,
+        desc: OpDesc,
         mine: Vec<f32>,
         dt: ReduceDtype,
-        kind: OpKind,
     ) -> Result<Arc<Published>, CommFault> {
-        let desc = OpDesc { kind, len: Some(mine.len()), dtype: dt.into() };
         self.rendezvous(rank, desc, Wire::encode(mine, dt), true, |contribs| {
             let mut acc = contribs[0].take().unwrap().into_f32();
             for c in contribs.iter_mut().skip(1) {
@@ -431,249 +745,523 @@ impl Group {
         })
     }
 
-    /// Sum-allreduce. Under `ReduceDtype::Bf16` the deposited frames and
-    /// the published result are genuine 2-byte bf16 payloads (the paper's
-    /// bf16 gradient reduction); the sum itself runs in f32 after an exact
-    /// decode, so the values match the old round-then-sum-then-round
-    /// simulation bit for bit while the wire moves half the bytes.
-    pub fn allreduce(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        self.allreduce_checked(rank, mine, dt).unwrap_or_else(|f| panic!("{f}"))
+    /// Broadcast at an explicit wire dtype — phase 3 of the hierarchy
+    /// (and the flat Broadcast op). Non-roots deposit an empty frame, so
+    /// only the root's payload crosses the wire.
+    fn bcast_wire(
+        &self,
+        rank: usize,
+        root: usize,
+        mine: Option<Wire>,
+        dtype: WireDtype,
+        decode: bool,
+    ) -> Result<Arc<Published>, CommFault> {
+        let payload = mine.unwrap_or_else(|| Wire::empty(dtype));
+        let desc = OpDesc { kind: OpKind::Broadcast { root }, len: None, dtype };
+        self.rendezvous(rank, desc, payload, decode, |contribs| {
+            contribs[root].take().unwrap()
+        })
     }
 
-    /// [`Group::allreduce`] returning the fault instead of panicking —
-    /// for callers (and model checks) that handle protocol failures
-    /// themselves.
+    /// Execute `op` as this group's member `rank`, blocking until every
+    /// member has run the matching call. THE collective entry point:
+    /// flat or hierarchical is an implementation detail chosen per group
+    /// and per op (see [`hier_eligible`]); results are identical either
+    /// way for exactly-representable data, and deterministic always.
+    pub fn run(&self, rank: usize, op: CollectiveOp) -> Result<CollectiveOut, CommFault> {
+        assert!(rank < self.size, "rank {rank} out of range for group of {}", self.size);
+        if self.is_poisoned() {
+            return Err(CommFault::Poisoned);
+        }
+        if self.hier.is_some() && hier_eligible(&op) {
+            return self.run_hier(rank, op);
+        }
+        self.run_flat(rank, op)
+    }
+
+    /// Nonblocking [`Group::run`]: submits onto a [`CommRuntime`] lane
+    /// and returns a [`CommHandle`] future; a fault panics on the lane
+    /// (the harness's poison-on-panic contract). The caller must
+    /// preserve program order: every member issues the same collectives
+    /// on a group in the same order, whether via a lane or inline —
+    /// lanes are FIFO, so submitting in program order is sufficient.
+    pub fn start(
+        self: Arc<Self>,
+        rt: &CommRuntime,
+        rank: usize,
+        op: CollectiveOp,
+    ) -> CommHandle<CollectiveOut> {
+        rt.submit(move || self.run(rank, op).unwrap_or_else(|f| panic!("{f}")))
+    }
+
+    /// One world-wide rendezvous (the single-level path).
+    fn run_flat(&self, rank: usize, op: CollectiveOp) -> Result<CollectiveOut, CommFault> {
+        let desc = op.desc();
+        match op {
+            CollectiveOp::Allreduce { data, red: Reduce::Max, .. } => {
+                let res = self.rendezvous(rank, desc, Wire::F32(data), true, |contribs| {
+                    let mut acc = contribs[0].take().unwrap().into_f32();
+                    for c in contribs.iter_mut().skip(1) {
+                        let c = c.take().unwrap().into_f32();
+                        for (a, b) in acc.iter_mut().zip(c.iter()) {
+                            *a = a.max(*b);
+                        }
+                    }
+                    Wire::F32(acc)
+                })?;
+                Ok(CollectiveOut::Values(res.as_f32().to_vec()))
+            }
+            CollectiveOp::Allreduce { data, red, dt } => {
+                let res = self.sum_rendezvous(rank, desc, data, dt)?;
+                let mut out = res.as_f32().to_vec();
+                if red == Reduce::Mean {
+                    let inv = 1.0 / self.size as f32;
+                    for v in out.iter_mut() {
+                        *v *= inv;
+                    }
+                }
+                Ok(CollectiveOut::Values(out))
+            }
+            CollectiveOp::ReduceScatter { data, red, dt, parts } => {
+                let n = data.len();
+                let (s, l) = self.scatter_range(rank, n, parts);
+                let summed = self.sum_rendezvous(rank, desc, data, dt)?;
+                let mut out = summed.as_f32()[s..s + l].to_vec();
+                self.scatter_scale(&mut out, red);
+                Ok(CollectiveOut::Values(out))
+            }
+            CollectiveOp::Allgather { data, dt } => match dt {
+                ReduceDtype::F32 => {
+                    let res = self.rendezvous(rank, desc, Wire::F32(data), true, |contribs| {
+                        let mut out = Vec::new();
+                        for c in contribs.iter_mut() {
+                            out.extend_from_slice(&c.take().unwrap().into_f32());
+                        }
+                        Wire::F32(out)
+                    })?;
+                    Ok(CollectiveOut::Values(res.as_f32().to_vec()))
+                }
+                ReduceDtype::Bf16 => {
+                    // round once (RNE) onto the 2-byte wire, decode once
+                    // on publish — half the traffic the byte counters see
+                    let bits = f32s_to_bf16s(&data);
+                    let res = self.gather_bits_rendezvous(rank, desc, bits, true)?;
+                    Ok(CollectiveOut::Values(res.as_f32().to_vec()))
+                }
+            },
+            CollectiveOp::AllgatherBits { data } => {
+                // consumers want the raw bits: skip the f32 decode entirely
+                let res = self.gather_bits_rendezvous(rank, desc, data, false)?;
+                Ok(CollectiveOut::Bits(res.to_bits()))
+            }
+            CollectiveOp::All2All { parts } => {
+                assert_eq!(parts.len(), self.size);
+                // flatten with a length header per destination
+                let mut flat = Vec::new();
+                for d in parts.iter() {
+                    flat.push(d.len() as f32);
+                }
+                for d in parts.iter() {
+                    flat.extend_from_slice(d);
+                }
+                let size = self.size;
+                let all = self.rendezvous(rank, desc, Wire::F32(flat), true, |contribs| {
+                    // concatenate everyone's flattened frame, with a
+                    // per-source offset directory at the front
+                    let mut out = Vec::new();
+                    let frames: Vec<Vec<f32>> =
+                        contribs.iter_mut().map(|c| c.take().unwrap().into_f32()).collect();
+                    out.push(frames.len() as f32);
+                    let mut off = Vec::new();
+                    let mut pos = 1.0 + frames.len() as f32;
+                    for f in &frames {
+                        off.push(pos);
+                        pos += f.len() as f32;
+                    }
+                    out.extend_from_slice(&off);
+                    for f in &frames {
+                        out.extend_from_slice(f);
+                    }
+                    Wire::F32(out)
+                })?;
+                // decode: for each source frame, pick the chunk destined to us
+                let all = all.as_f32();
+                let nsrc = all[0] as usize;
+                let mut result = Vec::with_capacity(nsrc);
+                for s in 0..nsrc {
+                    let fstart = all[1 + s] as usize;
+                    let sizes: Vec<usize> =
+                        (0..size).map(|d| all[fstart + d] as usize).collect();
+                    let mut chunk_start = fstart + size;
+                    for d in 0..rank {
+                        chunk_start += sizes[d];
+                    }
+                    result.push(all[chunk_start..chunk_start + sizes[rank]].to_vec());
+                }
+                Ok(CollectiveOut::Buckets(result))
+            }
+            CollectiveOp::Broadcast { root, data } => {
+                // non-root payloads never touch the wire, so the length
+                // is not part of the contract — but the *root* is:
+                // members disagreeing on the root fail with `[order]`
+                let mine = (rank == root).then(|| Wire::F32(data));
+                let res = self.bcast_wire(rank, root, mine, WireDtype::F32, false)?;
+                Ok(CollectiveOut::Values(res.to_f32()))
+            }
+            CollectiveOp::Barrier => {
+                self.rendezvous(rank, desc, Wire::F32(Vec::new()), true, |_| {
+                    Wire::F32(Vec::new())
+                })?;
+                Ok(CollectiveOut::Unit)
+            }
+        }
+    }
+
+    /// Allgather of bf16 frames under `desc` (values-typed and
+    /// bits-typed gathers share this wire path).
+    fn gather_bits_rendezvous(
+        &self,
+        rank: usize,
+        desc: OpDesc,
+        bits: Vec<u16>,
+        decode: bool,
+    ) -> Result<Arc<Published>, CommFault> {
+        self.rendezvous(rank, desc, Wire::Bf16(bits), decode, |contribs| {
+            let mut out = Vec::new();
+            for c in contribs.iter_mut() {
+                match c.take().unwrap() {
+                    Wire::Bf16(v) => out.extend_from_slice(&v),
+                    Wire::F32(v) => out.extend(f32s_to_bf16s(&v)),
+                }
+            }
+            Wire::Bf16(out)
+        })
+    }
+
+    fn scatter_range(&self, rank: usize, n: usize, parts: Parts) -> (usize, usize) {
+        match parts {
+            Parts::Ragged => crate::util::shard_ranges(n, self.size)[rank],
+            Parts::Even => {
+                assert_eq!(n % self.size, 0, "even reduce-scatter needs divisible length");
+                let per = n / self.size;
+                (rank * per, per)
+            }
+        }
+    }
+
+    /// Post-reduce local scale for a scattered shard. `Mean` divides by
+    /// the parent size even on the hierarchical path.
+    fn scatter_scale(&self, out: &mut [f32], red: Reduce) {
+        match red {
+            Reduce::Sum => {}
+            Reduce::Mean => {
+                let inv = 1.0 / self.size as f32;
+                for v in out.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            Reduce::Max => unreachable!("reduce-scatter does not support Max"),
+        }
+    }
+
+    /// Three-phase execution: (1) the op's intra-node leg on this
+    /// member's `{label}/node[j]` subgroup, (2) the inter-node leg on
+    /// `{label}/leaders` (slot-0 members only), (3) an intra-node
+    /// broadcast of the full result from slot 0. Any phase fault poisons
+    /// the whole family — parent and every subgroup — so members parked
+    /// in *other* phases (or other nodes) unblock with `Poisoned`
+    /// instead of riding their own watchdogs.
+    fn run_hier(&self, rank: usize, op: CollectiveOp) -> Result<CollectiveOut, CommFault> {
+        let h = self.hier.as_ref().expect("run_hier without a hierarchy");
+        let res = self.run_hier_inner(h, rank, op);
+        if res.is_err() {
+            self.poison();
+        }
+        res
+    }
+
+    fn run_hier_inner(
+        &self,
+        h: &Hier,
+        rank: usize,
+        op: CollectiveOp,
+    ) -> Result<CollectiveOut, CommFault> {
+        let (node, slot) = h.place[rank];
+        match op {
+            CollectiveOp::Allreduce { data, red, dt } => {
+                let mut out = self.hier_sum(h, node, slot, data, dt)?;
+                if red == Reduce::Mean {
+                    let inv = 1.0 / self.size as f32;
+                    for v in out.iter_mut() {
+                        *v *= inv;
+                    }
+                }
+                Ok(CollectiveOut::Values(out))
+            }
+            CollectiveOp::ReduceScatter { data, red, dt, parts } => {
+                let n = data.len();
+                let (s, l) = self.scatter_range(rank, n, parts);
+                let total = self.hier_sum(h, node, slot, data, dt)?;
+                let mut out = total[s..s + l].to_vec();
+                self.scatter_scale(&mut out, red);
+                Ok(CollectiveOut::Values(out))
+            }
+            CollectiveOp::Allgather { data, dt } => match dt {
+                ReduceDtype::F32 => {
+                    let intra = &h.intra[node];
+                    let node_cat = intra
+                        .run(slot, CollectiveOp::Allgather { data, dt })?
+                        .values();
+                    let full = if slot == 0 {
+                        let full = h
+                            .leaders
+                            .run(node, CollectiveOp::Allgather { data: node_cat, dt })?
+                            .values();
+                        intra.bcast_wire(slot, 0, Some(Wire::F32(full)), WireDtype::F32, false)?
+                    } else {
+                        intra.bcast_wire(slot, 0, None, WireDtype::F32, false)?
+                    };
+                    Ok(CollectiveOut::Values(full.to_f32()))
+                }
+                ReduceDtype::Bf16 => {
+                    let bits = f32s_to_bf16s(&data);
+                    let full = self.hier_gather_bits(h, node, slot, bits)?;
+                    Ok(CollectiveOut::Values(bf16s_to_f32s(&full)))
+                }
+            },
+            CollectiveOp::AllgatherBits { data } => {
+                Ok(CollectiveOut::Bits(self.hier_gather_bits(h, node, slot, data)?))
+            }
+            _ => unreachable!("op is not hierarchy-eligible"),
+        }
+    }
+
+    /// Hierarchical elementwise sum of the full vector: intra-node sum
+    /// (members in slot order), leaders sum (nodes in node order),
+    /// intra-node broadcast back at wire width. The order is fixed, so
+    /// repeated runs are bitwise identical; node_size=1 builds no
+    /// hierarchy at all, so that case is the flat path verbatim.
+    fn hier_sum(
+        &self,
+        h: &Hier,
+        node: usize,
+        slot: usize,
+        data: Vec<f32>,
+        dt: ReduceDtype,
+    ) -> Result<Vec<f32>, CommFault> {
+        let intra = &h.intra[node];
+        let partial = intra
+            .run(slot, CollectiveOp::Allreduce { data, red: Reduce::Sum, dt })?
+            .values();
+        let full = if slot == 0 {
+            let total = h
+                .leaders
+                .run(node, CollectiveOp::Allreduce { data: partial, red: Reduce::Sum, dt })?
+                .values();
+            // re-encoding a decoded bf16 total is an exact roundtrip, so
+            // the broadcast leg moves the same half-width frames
+            intra.bcast_wire(slot, 0, Some(Wire::encode(total, dt)), dt.into(), true)?
+        } else {
+            intra.bcast_wire(slot, 0, None, dt.into(), true)?
+        };
+        Ok(full.to_f32())
+    }
+
+    /// Hierarchical bf16-bits allgather: node-local concat, leaders
+    /// concat (node runs are contiguous in member order, so the result
+    /// is the member-order concat), bits broadcast back.
+    fn hier_gather_bits(
+        &self,
+        h: &Hier,
+        node: usize,
+        slot: usize,
+        bits: Vec<u16>,
+    ) -> Result<Vec<u16>, CommFault> {
+        let intra = &h.intra[node];
+        let node_cat = intra.run(slot, CollectiveOp::AllgatherBits { data: bits })?.bits();
+        let full = if slot == 0 {
+            let full = h
+                .leaders
+                .run(node, CollectiveOp::AllgatherBits { data: node_cat })?
+                .bits();
+            intra.bcast_wire(slot, 0, Some(Wire::Bf16(full)), WireDtype::Bf16, false)?
+        } else {
+            intra.bcast_wire(slot, 0, None, WireDtype::Bf16, false)?
+        };
+        Ok(full.to_bits())
+    }
+
+    /// Allgather for i32 payloads (routing indices) — transported as f32
+    /// bit patterns to reuse the same fabric. A typed convenience over
+    /// [`Group::run`], not part of the deprecated sprawl.
+    pub fn allgather_i32(&self, rank: usize, mine: &[i32]) -> Vec<i32> {
+        let enc: Vec<f32> = mine.iter().map(|v| f32::from_bits(*v as u32)).collect();
+        self.run(rank, CollectiveOp::Allgather { data: enc, dt: ReduceDtype::F32 })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
+            .into_iter()
+            .map(|v| v.to_bits() as i32)
+            .collect()
+    }
+
+    // -- deprecated per-op methods --------------------------------------
+    //
+    // One-PR migration shims for the pre-CollectiveOp surface: each is a
+    // thin delegate to `run`/`start` with the equivalent descriptor.
+    // New code states the op; these exist so out-of-tree callers get a
+    // deprecation note instead of a hard break.
+
+    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Sum, .. }")]
+    pub fn allreduce(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
+        self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Sum, dt })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
+    }
+
+    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Sum, .. }")]
     pub fn allreduce_checked(
         &self,
         rank: usize,
         mine: Vec<f32>,
         dt: ReduceDtype,
     ) -> Result<Vec<f32>, CommFault> {
-        Ok(self.sum_rendezvous(rank, mine, dt, OpKind::Allreduce)?.as_f32().to_vec())
+        self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Sum, dt })
+            .map(CollectiveOut::values)
     }
 
-    /// Mean-allreduce (gradient averaging across data-parallel ranks).
+    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Mean, .. }")]
     pub fn allreduce_mean(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        let n = self.size as f32;
-        let mut out = self.allreduce(rank, mine, dt);
-        for v in out.iter_mut() {
-            *v /= n;
-        }
-        out
+        self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Mean, dt })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
     }
 
-    /// Reduce-scatter with mean: rank r receives shard r of the averaged
-    /// sum, shards per [`crate::util::shard_ranges`]. Input length may not
-    /// divide evenly; shards are ZeRO-style contiguous ranges.
+    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Max, .. }")]
+    pub fn allreduce_max(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
+        self.run(
+            rank,
+            CollectiveOp::Allreduce { data: mine, red: Reduce::Max, dt: ReduceDtype::F32 },
+        )
+        .unwrap_or_else(|f| panic!("{f}"))
+        .values()
+    }
+
+    #[deprecated(
+        note = "use Group::run with CollectiveOp::ReduceScatter { red: Reduce::Mean, parts: Parts::Ragged, .. }"
+    )]
     pub fn reduce_scatter_mean(
         &self,
         rank: usize,
         mine: Vec<f32>,
         dt: ReduceDtype,
     ) -> Vec<f32> {
-        let n = mine.len();
-        let ranges = crate::util::shard_ranges(n, self.size);
-        let summed = self
-            .sum_rendezvous(rank, mine, dt, OpKind::ReduceScatter)
-            .unwrap_or_else(|f| panic!("{f}"));
-        let (s, l) = ranges[rank];
-        let inv = 1.0 / self.size as f32;
-        summed.as_f32()[s..s + l].iter().map(|v| v * inv).collect()
+        self.run(
+            rank,
+            CollectiveOp::ReduceScatter {
+                data: mine,
+                red: Reduce::Mean,
+                dt,
+                parts: Parts::Ragged,
+            },
+        )
+        .unwrap_or_else(|f| panic!("{f}"))
+        .values()
     }
 
-    /// Reduce-scatter with sum over equal `1/size` slices: rank r receives
-    /// slice r of the elementwise sum (Algorithm 1 line 116 — partial
-    /// expert outputs are *summed*, and each EP rank keeps its own token
-    /// segment).
+    #[deprecated(
+        note = "use Group::run with CollectiveOp::ReduceScatter { red: Reduce::Sum, parts: Parts::Even, .. }"
+    )]
     pub fn reduce_scatter_sum_even(
         &self,
         rank: usize,
         mine: Vec<f32>,
         dt: ReduceDtype,
     ) -> Vec<f32> {
-        let n = mine.len();
-        assert_eq!(n % self.size, 0, "even reduce-scatter needs divisible length");
-        let per = n / self.size;
-        let summed = self
-            .sum_rendezvous(rank, mine, dt, OpKind::ReduceScatter)
-            .unwrap_or_else(|f| panic!("{f}"));
-        summed.as_f32()[rank * per..(rank + 1) * per].to_vec()
+        self.run(
+            rank,
+            CollectiveOp::ReduceScatter {
+                data: mine,
+                red: Reduce::Sum,
+                dt,
+                parts: Parts::Even,
+            },
+        )
+        .unwrap_or_else(|f| panic!("{f}"))
+        .values()
     }
 
-    /// Allgather: concatenation of every rank's (equal-length or ragged)
-    /// contribution, in rank order.
+    #[deprecated(note = "use Group::run with CollectiveOp::Allgather")]
     pub fn allgather(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        self.allgather_checked(rank, mine).unwrap_or_else(|f| panic!("{f}"))
+        self.run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
     }
 
-    /// [`Group::allgather`] returning the fault instead of panicking.
+    #[deprecated(note = "use Group::run with CollectiveOp::Allgather")]
     pub fn allgather_checked(&self, rank: usize, mine: Vec<f32>) -> Result<Vec<f32>, CommFault> {
-        // ragged contributions are legal: len is not part of the contract
-        let desc = OpDesc { kind: OpKind::Allgather, len: None, dtype: WireDtype::F32 };
-        let res = self.rendezvous(rank, desc, Wire::F32(mine), true, |contribs| {
-            let mut out = Vec::new();
-            for c in contribs.iter_mut() {
-                out.extend_from_slice(&c.take().unwrap().into_f32());
-            }
-            Wire::F32(out)
-        })?;
-        Ok(res.as_f32().to_vec())
+        self.run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
+            .map(CollectiveOut::values)
     }
 
-    /// Allgather of bf16 storage bits: contributions travel and
-    /// concatenate as 2-byte words (the mixed-precision optimizer's param
-    /// allgather wire). Consumers want the raw bits, so the publisher
-    /// skips the f32 decode entirely.
+    #[deprecated(note = "use Group::run with CollectiveOp::AllgatherBits")]
     pub fn allgather_bf16(&self, rank: usize, mine: Vec<u16>) -> Vec<u16> {
-        let desc = OpDesc { kind: OpKind::Allgather, len: None, dtype: WireDtype::Bf16 };
-        let res = self
-            .rendezvous(rank, desc, Wire::Bf16(mine), false, |contribs| {
-                let mut out = Vec::new();
-                for c in contribs.iter_mut() {
-                    match c.take().unwrap() {
-                        Wire::Bf16(v) => out.extend_from_slice(&v),
-                        Wire::F32(v) => out.extend(f32s_to_bf16s(&v)),
-                    }
-                }
-                Wire::Bf16(out)
-            })
-            .unwrap_or_else(|f| panic!("{f}"));
-        match &res.wire {
-            Wire::Bf16(v) => v.clone(),
-            Wire::F32(v) => f32s_to_bf16s(v),
-        }
+        self.run(rank, CollectiveOp::AllgatherBits { data: mine })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .bits()
     }
 
-    /// Allgather over f32 values with a dtype-selected wire: `Bf16`
-    /// rounds once (RNE) into genuine 2-byte frames — half the traffic
-    /// the byte counters see — and decodes exactly on pickup.
+    #[deprecated(note = "use Group::run with CollectiveOp::Allgather and the wire dtype")]
     pub fn allgather_values(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        match dt {
-            ReduceDtype::F32 => self.allgather(rank, mine),
-            ReduceDtype::Bf16 => {
-                bf16s_to_f32s(&self.allgather_bf16(rank, f32s_to_bf16s(&mine)))
-            }
-        }
+        self.run(rank, CollectiveOp::Allgather { data: mine, dt })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
     }
 
-    /// Allgather for i32 payloads (routing indices) — transported as f32
-    /// bit patterns to reuse the same fabric.
-    pub fn allgather_i32(&self, rank: usize, mine: &[i32]) -> Vec<i32> {
-        let enc: Vec<f32> = mine.iter().map(|v| f32::from_bits(*v as u32)).collect();
-        self.allgather(rank, enc)
-            .into_iter()
-            .map(|v| v.to_bits() as i32)
-            .collect()
-    }
-
-    /// Ragged-aware gather of variable-length shards followed by local
-    /// concatenation — the inverse of `reduce_scatter_mean` (ZeRO param
-    /// allgather).
+    #[deprecated(note = "use Group::run with CollectiveOp::Allgather")]
     pub fn allgather_shards(&self, rank: usize, mine: Vec<f32>, total: usize) -> Vec<f32> {
-        let out = self.allgather(rank, mine);
+        let out = self
+            .run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values();
         debug_assert_eq!(out.len(), total);
         out
     }
 
-    /// [`Group::allgather_shards`] over bf16 storage bits — the ZeRO param
-    /// allgather at half wire width.
+    #[deprecated(note = "use Group::run with CollectiveOp::AllgatherBits")]
     pub fn allgather_shards_bf16(&self, rank: usize, mine: Vec<u16>, total: usize) -> Vec<u16> {
-        let out = self.allgather_bf16(rank, mine);
+        let out = self
+            .run(rank, CollectiveOp::AllgatherBits { data: mine })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .bits();
         debug_assert_eq!(out.len(), total);
         out
     }
 
-    /// All-to-all: `mine[d]` goes to rank d; returns the buffers destined
-    /// to `rank`, in source order. Used by the EP `ep_comm=all2all`
-    /// ablation (paper Stage 1 compares all2all vs allgather).
+    #[deprecated(note = "use Group::run with CollectiveOp::All2All")]
     pub fn all2all(&self, rank: usize, mine: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
-        assert_eq!(mine.len(), self.size);
-        // flatten with a length header per destination
-        let mut flat = Vec::new();
-        for d in mine.iter() {
-            flat.push(d.len() as f32);
-        }
-        for d in mine.iter() {
-            flat.extend_from_slice(d);
-        }
-        let desc = OpDesc { kind: OpKind::All2All, len: None, dtype: WireDtype::F32 };
-        let all = self
-            .rendezvous(rank, desc, Wire::F32(flat), true, |contribs| {
-                // concatenate everyone's flattened frame, with a per-source
-                // offset directory at the front
-                let mut out = Vec::new();
-                let frames: Vec<Vec<f32>> =
-                    contribs.iter_mut().map(|c| c.take().unwrap().into_f32()).collect();
-                out.push(frames.len() as f32);
-                let mut off = Vec::new();
-                let mut pos = 1.0 + frames.len() as f32;
-                for f in &frames {
-                    off.push(pos);
-                    pos += f.len() as f32;
-                }
-                out.extend_from_slice(&off);
-                for f in &frames {
-                    out.extend_from_slice(f);
-                }
-                Wire::F32(out)
-            })
-            .unwrap_or_else(|f| panic!("{f}"));
-        // decode: for each source frame, pick the chunk destined to us
-        let all = all.as_f32();
-        let nsrc = all[0] as usize;
-        let mut result = Vec::with_capacity(nsrc);
-        for s in 0..nsrc {
-            let fstart = all[1 + s] as usize;
-            let sizes: Vec<usize> = (0..self.size)
-                .map(|d| all[fstart + d] as usize)
-                .collect();
-            let mut chunk_start = fstart + self.size;
-            for d in 0..rank {
-                chunk_start += sizes[d];
-            }
-            result.push(all[chunk_start..chunk_start + sizes[rank]].to_vec());
-        }
-        result
+        self.run(rank, CollectiveOp::All2All { parts: mine })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .buckets()
     }
 
-    /// Broadcast from `root` (model broadcasting, paper §4). Non-roots
-    /// deposit an empty payload, so the length is not part of the
-    /// contract — but the *root* is: members disagreeing on the root
-    /// fail with `[order]`.
+    #[deprecated(note = "use Group::run with CollectiveOp::Broadcast")]
     pub fn broadcast(&self, rank: usize, root: usize, mine: Vec<f32>) -> Vec<f32> {
-        let payload = if rank == root { mine } else { Vec::new() };
-        let desc = OpDesc { kind: OpKind::Broadcast { root }, len: None, dtype: WireDtype::F32 };
-        let res = self
-            .rendezvous(rank, desc, Wire::F32(payload), true, |contribs| {
-                contribs[root].take().unwrap()
-            })
-            .unwrap_or_else(|f| panic!("{f}"));
-        res.as_f32().to_vec()
+        self.run(rank, CollectiveOp::Broadcast { root, data: mine })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
     }
 
-    /// Barrier.
+    #[deprecated(note = "use Group::run with CollectiveOp::Barrier")]
     pub fn barrier(&self, rank: usize) {
-        self.barrier_checked(rank).unwrap_or_else(|f| panic!("{f}"))
+        self.run(rank, CollectiveOp::Barrier).unwrap_or_else(|f| panic!("{f}"));
     }
 
-    /// [`Group::barrier`] returning the fault instead of panicking.
+    #[deprecated(note = "use Group::run with CollectiveOp::Barrier")]
     pub fn barrier_checked(&self, rank: usize) -> Result<(), CommFault> {
-        let desc = OpDesc { kind: OpKind::Barrier, len: Some(0), dtype: WireDtype::F32 };
-        self.rendezvous(rank, desc, Wire::F32(Vec::new()), true, |_| Wire::F32(Vec::new()))?;
-        Ok(())
+        self.run(rank, CollectiveOp::Barrier).map(|_| ())
     }
 
-    // -- nonblocking variants -------------------------------------------
-    //
-    // Each submits the blocking collective onto a [`CommRuntime`] lane and
-    // returns a [`CommHandle`] future. The caller must preserve program
-    // order: every group member has to issue the same collectives on a
-    // group in the same order, whether via a lane or inline — lanes are
-    // FIFO, so submitting in program order is sufficient. The receivers
-    // take `self: Arc<Self>` (clone the `Arc` at the call site) so the
-    // group can move onto the worker thread.
-
-    /// Nonblocking [`Group::allreduce`].
+    #[deprecated(note = "use Group::start with CollectiveOp::Allreduce")]
     pub fn allreduce_start(
         self: Arc<Self>,
         rt: &CommRuntime,
@@ -681,10 +1269,14 @@ impl Group {
         mine: Vec<f32>,
         dt: ReduceDtype,
     ) -> CommHandle<Vec<f32>> {
-        rt.submit(move || self.allreduce(rank, mine, dt))
+        rt.submit(move || {
+            self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Sum, dt })
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values()
+        })
     }
 
-    /// Nonblocking [`Group::reduce_scatter_mean`].
+    #[deprecated(note = "use Group::start with CollectiveOp::ReduceScatter")]
     pub fn reduce_scatter_start(
         self: Arc<Self>,
         rt: &CommRuntime,
@@ -692,46 +1284,47 @@ impl Group {
         mine: Vec<f32>,
         dt: ReduceDtype,
     ) -> CommHandle<Vec<f32>> {
-        rt.submit(move || self.reduce_scatter_mean(rank, mine, dt))
+        rt.submit(move || {
+            self.run(
+                rank,
+                CollectiveOp::ReduceScatter {
+                    data: mine,
+                    red: Reduce::Mean,
+                    dt,
+                    parts: Parts::Ragged,
+                },
+            )
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
+        })
     }
 
-    /// Nonblocking [`Group::allgather`].
+    #[deprecated(note = "use Group::start with CollectiveOp::Allgather")]
     pub fn allgather_start(
         self: Arc<Self>,
         rt: &CommRuntime,
         rank: usize,
         mine: Vec<f32>,
     ) -> CommHandle<Vec<f32>> {
-        rt.submit(move || self.allgather(rank, mine))
+        rt.submit(move || {
+            self.run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values()
+        })
     }
 
-    /// Nonblocking [`Group::allgather_bf16`].
+    #[deprecated(note = "use Group::start with CollectiveOp::AllgatherBits")]
     pub fn allgather_bf16_start(
         self: Arc<Self>,
         rt: &CommRuntime,
         rank: usize,
         mine: Vec<u16>,
     ) -> CommHandle<Vec<u16>> {
-        rt.submit(move || self.allgather_bf16(rank, mine))
-    }
-
-    /// Max-allreduce (used for global NaN/overflow voting in ft).
-    pub fn allreduce_max(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        let desc =
-            OpDesc { kind: OpKind::AllreduceMax, len: Some(mine.len()), dtype: WireDtype::F32 };
-        let res = self
-            .rendezvous(rank, desc, Wire::F32(mine), true, |contribs| {
-                let mut acc = contribs[0].take().unwrap().into_f32();
-                for c in contribs.iter_mut().skip(1) {
-                    let c = c.take().unwrap().into_f32();
-                    for (a, b) in acc.iter_mut().zip(c.iter()) {
-                        *a = a.max(*b);
-                    }
-                }
-                Wire::F32(acc)
-            })
-            .unwrap_or_else(|f| panic!("{f}"));
-        res.as_f32().to_vec()
+        rt.submit(move || {
+            self.run(rank, CollectiveOp::AllgatherBits { data: mine })
+                .unwrap_or_else(|f| panic!("{f}"))
+                .bits()
+        })
     }
 }
 
@@ -753,12 +1346,17 @@ mod tests {
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     }
 
+    fn allreduce(g: &Group, r: usize, data: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
+        g.run(r, CollectiveOp::Allreduce { data, red: Reduce::Sum, dt })
+            .unwrap()
+            .values()
+    }
+
     #[test]
     fn allreduce_sums() {
         let g = Group::new(4);
-        let outs = spawn_ranks(4, move |r| {
-            g.allreduce(r, vec![r as f32, 1.0], ReduceDtype::F32)
-        });
+        let outs =
+            spawn_ranks(4, move |r| allreduce(&g, r, vec![r as f32, 1.0], ReduceDtype::F32));
         for o in outs {
             assert_eq!(o, vec![6.0, 4.0]);
         }
@@ -770,8 +1368,24 @@ mod tests {
         let n = 10; // not divisible by 3: ragged shards
         let outs = spawn_ranks(3, move |r| {
             let mine: Vec<f32> = (0..n).map(|i| (i + r) as f32).collect();
-            let shard = g.reduce_scatter_mean(r, mine, ReduceDtype::F32);
-            g.allgather_shards(r, shard, n)
+            let shard = g
+                .run(
+                    r,
+                    CollectiveOp::ReduceScatter {
+                        data: mine,
+                        red: Reduce::Mean,
+                        dt: ReduceDtype::F32,
+                        parts: Parts::Ragged,
+                    },
+                )
+                .unwrap()
+                .values();
+            let out = g
+                .run(r, CollectiveOp::Allgather { data: shard, dt: ReduceDtype::F32 })
+                .unwrap()
+                .values();
+            assert_eq!(out.len(), n);
+            out
         });
         let want: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
         for o in outs {
@@ -782,7 +1396,14 @@ mod tests {
     #[test]
     fn allgather_concats_in_rank_order() {
         let g = Group::new(3);
-        let outs = spawn_ranks(3, move |r| g.allgather(r, vec![r as f32; r + 1]));
+        let outs = spawn_ranks(3, move |r| {
+            g.run(
+                r,
+                CollectiveOp::Allgather { data: vec![r as f32; r + 1], dt: ReduceDtype::F32 },
+            )
+            .unwrap()
+            .values()
+        });
         for o in outs {
             assert_eq!(o, vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
         }
@@ -793,9 +1414,8 @@ mod tests {
         let g = Group::new(2);
         let outs = spawn_ranks(2, move |r| {
             // rank r sends [r*10+d] to rank d
-            let mine: Vec<Vec<f32>> =
-                (0..2).map(|d| vec![(r * 10 + d) as f32]).collect();
-            g.all2all(r, mine)
+            let parts: Vec<Vec<f32>> = (0..2).map(|d| vec![(r * 10 + d) as f32]).collect();
+            g.run(r, CollectiveOp::All2All { parts }).unwrap().buckets()
         });
         assert_eq!(outs[0], vec![vec![0.0], vec![10.0]]);
         assert_eq!(outs[1], vec![vec![1.0], vec![11.0]]);
@@ -806,7 +1426,7 @@ mod tests {
         let g = Group::new(4);
         let outs = spawn_ranks(4, move |r| {
             let mine = if r == 2 { vec![9.0, 8.0] } else { vec![] };
-            g.broadcast(r, 2, mine)
+            g.run(r, CollectiveOp::Broadcast { root: 2, data: mine }).unwrap().values()
         });
         for o in outs {
             assert_eq!(o, vec![9.0, 8.0]);
@@ -819,7 +1439,7 @@ mod tests {
         let outs = spawn_ranks(3, move |r| {
             let mut acc = Vec::new();
             for round in 0..50 {
-                let o = g.allreduce(r, vec![round as f32], ReduceDtype::F32);
+                let o = allreduce(&g, r, vec![round as f32], ReduceDtype::F32);
                 acc.push(o[0]);
             }
             acc
@@ -834,9 +1454,8 @@ mod tests {
     #[test]
     fn bf16_reduction_rounds() {
         let g = Group::new(2);
-        let outs = spawn_ranks(2, move |r| {
-            g.allreduce(r, vec![1.0009765625f32], ReduceDtype::Bf16)
-        });
+        let outs =
+            spawn_ranks(2, move |r| allreduce(&g, r, vec![1.0009765625f32], ReduceDtype::Bf16));
         for o in outs {
             // bf16(1.0009765625) = 1.0 -> sum 2.0
             assert_eq!(o, vec![2.0]);
@@ -848,15 +1467,18 @@ mod tests {
         // f32: 8 elems × 4 B deposited and picked up per rank
         let g = Group::new(2);
         let gs = Arc::clone(&g);
-        spawn_ranks(2, move |r| g.allreduce(r, vec![1.0f32; 8], ReduceDtype::F32));
+        spawn_ranks(2, move |r| allreduce(&g, r, vec![1.0f32; 8], ReduceDtype::F32));
         let st = gs.stats();
         assert_eq!(st.ops, 2);
         assert_eq!(st.bytes_in, 2 * 8 * 4);
         assert_eq!(st.bytes_out, 2 * 8 * 4);
+        // a flat group is inter-node-priced end to end
+        assert_eq!(st.inter_bytes, st.bytes_in + st.bytes_out);
+        assert_eq!(st.intra_bytes, 0);
         // bf16: the same collective moves exactly half the bytes each way
         let g = Group::new(2);
         let gs = Arc::clone(&g);
-        spawn_ranks(2, move |r| g.allreduce(r, vec![1.0f32; 8], ReduceDtype::Bf16));
+        spawn_ranks(2, move |r| allreduce(&g, r, vec![1.0f32; 8], ReduceDtype::Bf16));
         let st = gs.stats();
         assert_eq!(st.bytes_in, 2 * 8 * 2);
         assert_eq!(st.bytes_out, 2 * 8 * 2);
@@ -869,7 +1491,7 @@ mod tests {
         let gs = Arc::clone(&g);
         let outs = spawn_ranks(2, move |r| {
             let mine = vec![f32_to_bf16(r as f32 + 0.5); 2];
-            g.allgather_bf16(r, mine)
+            g.run(r, CollectiveOp::AllgatherBits { data: mine }).unwrap().bits()
         });
         for o in outs {
             let vals: Vec<f32> = o.iter().map(|&b| bf16_to_f32(b)).collect();
@@ -886,14 +1508,21 @@ mod tests {
         let g = Group::new(3);
         let outs = spawn_ranks(3, move |r| {
             let rt = CommRuntime::new(&format!("t{r}"));
-            let h1 = g.clone().allreduce_start(
+            let h1 = g.clone().start(
                 &rt,
                 r,
-                vec![r as f32, 1.0],
-                ReduceDtype::F32,
+                CollectiveOp::Allreduce {
+                    data: vec![r as f32, 1.0],
+                    red: Reduce::Sum,
+                    dt: ReduceDtype::F32,
+                },
             );
-            let h2 = g.clone().allgather_start(&rt, r, vec![r as f32]);
-            (h1.wait(), h2.wait())
+            let h2 = g.clone().start(
+                &rt,
+                r,
+                CollectiveOp::Allgather { data: vec![r as f32], dt: ReduceDtype::F32 },
+            );
+            (h1.wait().values(), h2.wait().values())
         });
         for (ar, ag) in outs {
             assert_eq!(ar, vec![3.0, 3.0]);
@@ -906,13 +1535,16 @@ mod tests {
         let g = Group::new(2);
         let n = 7; // ragged shards
         let outs = spawn_ranks(2, move |r| {
+            let op = |data: Vec<f32>| CollectiveOp::ReduceScatter {
+                data,
+                red: Reduce::Mean,
+                dt: ReduceDtype::F32,
+                parts: Parts::Ragged,
+            };
             let mine: Vec<f32> = (0..n).map(|i| (i + r) as f32).collect();
-            let blocking = g.reduce_scatter_mean(r, mine.clone(), ReduceDtype::F32);
+            let blocking = g.run(r, op(mine.clone())).unwrap().values();
             let rt = CommRuntime::new(&format!("rs{r}"));
-            let async_ = g
-                .clone()
-                .reduce_scatter_start(&rt, r, mine, ReduceDtype::F32)
-                .wait();
+            let async_ = g.clone().start(&rt, r, op(mine)).wait().values();
             (blocking, async_)
         });
         for (b, a) in outs {
@@ -923,9 +1555,8 @@ mod tests {
     #[test]
     fn i32_allgather_roundtrips() {
         let g = Group::new(2);
-        let outs = spawn_ranks(2, move |r| {
-            g.allgather_i32(r, &[r as i32 * 100 - 5, i32::MAX])
-        });
+        let outs =
+            spawn_ranks(2, move |r| g.allgather_i32(r, &[r as i32 * 100 - 5, i32::MAX]));
         for o in outs {
             assert_eq!(o, vec![-5, i32::MAX, 95, i32::MAX]);
         }
@@ -941,9 +1572,18 @@ mod tests {
         let g = Group::new_labeled(2, "t-order");
         let errs = spawn_ranks(2, move |r| {
             if r == 0 {
-                g.allreduce_checked(0, vec![1.0, 2.0], ReduceDtype::F32).unwrap_err()
+                g.run(
+                    0,
+                    CollectiveOp::Allreduce {
+                        data: vec![1.0, 2.0],
+                        red: Reduce::Sum,
+                        dt: ReduceDtype::F32,
+                    },
+                )
+                .unwrap_err()
             } else {
-                g.allgather_checked(1, vec![3.0]).unwrap_err()
+                g.run(1, CollectiveOp::Allgather { data: vec![3.0], dt: ReduceDtype::F32 })
+                    .unwrap_err()
             }
         });
         let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
@@ -970,7 +1610,11 @@ mod tests {
         let g = Group::new_labeled(2, "t-shape");
         let errs = spawn_ranks(2, move |r| {
             let mine = vec![1.0f32; if r == 0 { 8 } else { 9 }];
-            g.allreduce_checked(r, mine, ReduceDtype::F32).unwrap_err()
+            g.run(
+                r,
+                CollectiveOp::Allreduce { data: mine, red: Reduce::Sum, dt: ReduceDtype::F32 },
+            )
+            .unwrap_err()
         });
         let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
         assert!(
@@ -984,7 +1628,8 @@ mod tests {
         let g = Group::new_labeled(2, "t-dtype");
         let errs = spawn_ranks(2, move |r| {
             let dt = if r == 0 { ReduceDtype::F32 } else { ReduceDtype::Bf16 };
-            g.allreduce_checked(r, vec![1.0, 2.0], dt).unwrap_err()
+            g.run(r, CollectiveOp::Allreduce { data: vec![1.0, 2.0], red: Reduce::Sum, dt })
+                .unwrap_err()
         });
         let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
         assert!(
@@ -999,7 +1644,16 @@ mod tests {
         // failure carrying the per-rank table, not hang forever
         let g = Group::new_labeled(2, "t-stall");
         g.set_stall_timeout(std::time::Duration::from_millis(50));
-        let e = g.allreduce_checked(0, vec![1.0], ReduceDtype::F32).unwrap_err();
+        let e = g
+            .run(
+                0,
+                CollectiveOp::Allreduce {
+                    data: vec![1.0],
+                    red: Reduce::Sum,
+                    dt: ReduceDtype::F32,
+                },
+            )
+            .unwrap_err();
         let msg = e.to_string();
         assert!(msg.contains("collective protocol violated [stall]"), "{msg}");
         assert!(msg.contains("rank 0 waiting on allreduce"), "{msg}");
@@ -1007,7 +1661,16 @@ mod tests {
         assert!(msg.contains("t-stall"), "{msg}");
         // the stall poisoned the group: a late peer fails immediately
         // instead of waiting on a round that already died
-        let late = g.allreduce_checked(1, vec![1.0], ReduceDtype::F32).unwrap_err();
+        let late = g
+            .run(
+                1,
+                CollectiveOp::Allreduce {
+                    data: vec![1.0],
+                    red: Reduce::Sum,
+                    dt: ReduceDtype::F32,
+                },
+            )
+            .unwrap_err();
         assert!(late.to_string().contains("comm group poisoned"), "{late}");
     }
 
@@ -1015,9 +1678,8 @@ mod tests {
     fn bf16_result_is_decoded_once_per_round_not_per_member() {
         let g = Group::new(3);
         let gs = Arc::clone(&g);
-        let outs = spawn_ranks(3, move |r| {
-            g.allreduce(r, vec![r as f32, 1.0], ReduceDtype::Bf16)
-        });
+        let outs =
+            spawn_ranks(3, move |r| allreduce(&g, r, vec![r as f32, 1.0], ReduceDtype::Bf16));
         for o in outs {
             assert_eq!(o, vec![3.0, 3.0]);
         }
@@ -1026,7 +1688,239 @@ mod tests {
         // raw-bits allgather skips the decode entirely
         let g = Group::new(2);
         let gs = Arc::clone(&g);
-        spawn_ranks(2, move |r| g.allgather_bf16(r, vec![0x3f80; 2]));
+        spawn_ranks(2, move |r| {
+            g.run(r, CollectiveOp::AllgatherBits { data: vec![0x3f80; 2] }).unwrap().bits()
+        });
         assert_eq!(gs.decodes.load(Ordering::Relaxed), 0);
+    }
+
+    // -- hierarchical execution -----------------------------------------
+
+    /// 4 members on 2 nodes of 2: the smallest real hierarchy.
+    fn hier4() -> Arc<Group> {
+        let g = Group::new_on_nodes(4, "h4", &[0, 0, 1, 1]);
+        assert!(g.is_hierarchical());
+        g
+    }
+
+    #[test]
+    fn hierarchical_allreduce_matches_flat() {
+        for dt in [ReduceDtype::F32, ReduceDtype::Bf16] {
+            let flat = Group::new(4);
+            let hier = hier4();
+            let f = Arc::clone(&flat);
+            let h = Arc::clone(&hier);
+            // small integers: exact in f32 and bf16, so flat and
+            // hierarchical sums agree bitwise despite reassociation
+            let outs = spawn_ranks(4, move |r| {
+                let mine: Vec<f32> = (0..6).map(|i| (r * 7 + i) as f32).collect();
+                (allreduce(&f, r, mine.clone(), dt), allreduce(&h, r, mine, dt))
+            });
+            for (flat_out, hier_out) in outs {
+                assert_eq!(flat_out, hier_out, "{dt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_reduce_scatter_and_allgather_match_flat() {
+        for dt in [ReduceDtype::F32, ReduceDtype::Bf16] {
+            let flat = Group::new(4);
+            let hier = hier4();
+            let f = Arc::clone(&flat);
+            let h = Arc::clone(&hier);
+            let n = 10; // ragged
+            let outs = spawn_ranks(4, move |r| {
+                let mine: Vec<f32> = (0..n).map(|i| ((i + r) % 16) as f32).collect();
+                let rs = |g: &Group| {
+                    g.run(
+                        r,
+                        CollectiveOp::ReduceScatter {
+                            data: mine.clone(),
+                            red: Reduce::Mean,
+                            dt,
+                            parts: Parts::Ragged,
+                        },
+                    )
+                    .unwrap()
+                    .values()
+                };
+                let shard_f = rs(&f);
+                let shard_h = rs(&h);
+                assert_eq!(shard_f, shard_h, "{dt:?}");
+                let ag = |g: &Group| {
+                    g.run(r, CollectiveOp::Allgather { data: shard_f.clone(), dt })
+                        .unwrap()
+                        .values()
+                };
+                (ag(&f), ag(&h))
+            });
+            for (flat_out, hier_out) in outs {
+                assert_eq!(flat_out, hier_out, "{dt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_bits_allgather_matches_flat() {
+        let flat = Group::new(4);
+        let hier = hier4();
+        let f = Arc::clone(&flat);
+        let h = Arc::clone(&hier);
+        let outs = spawn_ranks(4, move |r| {
+            let mine = vec![0x3f80u16 + r as u16; 3];
+            let bits = |g: &Group| {
+                g.run(r, CollectiveOp::AllgatherBits { data: mine.clone() }).unwrap().bits()
+            };
+            (bits(&f), bits(&h))
+        });
+        for (flat_out, hier_out) in outs {
+            assert_eq!(flat_out, hier_out);
+        }
+    }
+
+    #[test]
+    fn hierarchical_runs_are_deterministic() {
+        // non-representable data: the reassociated sum may differ from
+        // flat, but two hierarchical runs must agree bitwise (fixed
+        // member-then-node reduction order)
+        let hier = hier4();
+        let outs = spawn_ranks(4, move |r| {
+            let mine: Vec<f32> = (0..8).map(|i| 0.1f32 * (r * 8 + i) as f32).collect();
+            let a = allreduce(&hier, r, mine.clone(), ReduceDtype::F32);
+            let b = allreduce(&hier, r, mine, ReduceDtype::F32);
+            (a, b)
+        });
+        for (a, b) in outs {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn hierarchical_traffic_splits_intra_from_inter() {
+        let flat = Group::new(4);
+        let hier = hier4();
+        let f = Arc::clone(&flat);
+        let h = Arc::clone(&hier);
+        spawn_ranks(4, move |r| {
+            let mine = vec![1.0f32; 8];
+            allreduce(&f, r, mine.clone(), ReduceDtype::F32);
+            allreduce(&h, r, mine, ReduceDtype::F32);
+        });
+        let fs = flat.stats();
+        let hs = hier.stats();
+        // flat: every byte is inter-node-priced
+        assert_eq!(fs.intra_bytes, 0);
+        assert_eq!(fs.inter_bytes, fs.bytes_in + fs.bytes_out);
+        // hierarchical: only the 2-leader exchange crosses nodes — with
+        // 2 nodes of 2 that is at most half the flat inter traffic
+        assert!(hs.intra_bytes > 0, "{hs:?}");
+        assert!(hs.inter_bytes > 0, "{hs:?}");
+        assert!(
+            hs.inter_bytes * 2 <= fs.inter_bytes,
+            "hier moved {} inter bytes, flat {}",
+            hs.inter_bytes,
+            fs.inter_bytes
+        );
+    }
+
+    #[test]
+    fn single_node_and_strided_placements_stay_flat() {
+        // whole group on one node: flat execution, Xe-Link-priced
+        let g = Group::new_on_nodes(2, "one-node", &[3, 3]);
+        assert!(!g.is_hierarchical());
+        let gs = Arc::clone(&g);
+        spawn_ranks(2, move |r| allreduce(&g, r, vec![1.0f32; 4], ReduceDtype::F32));
+        let st = gs.stats();
+        assert_eq!(st.intra_bytes, st.bytes_in + st.bytes_out);
+        assert_eq!(st.inter_bytes, 0);
+        // one member per node (node_size=1): flat and inter-priced
+        let g = Group::new_on_nodes(2, "spread", &[0, 1]);
+        assert!(!g.is_hierarchical());
+        assert_eq!(g.stats().intra_bytes, 0);
+        // a node id recurring non-contiguously cannot keep member order
+        // through the hierarchy: falls back flat
+        let g = Group::new_on_nodes(3, "striped", &[0, 1, 0]);
+        assert!(!g.is_hierarchical());
+    }
+
+    #[test]
+    fn hierarchical_stall_poisons_the_whole_family() {
+        // rank 1 (node 0, slot 1) never shows up: its intra subgroup
+        // stalls, and the resulting fault must poison the parent and the
+        // other node's subgroup so every member unblocks
+        let g = Group::new_on_nodes(4, "h-dead", &[0, 0, 1, 1]);
+        g.set_stall_timeout(std::time::Duration::from_millis(100));
+        let errs = spawn_ranks(3, move |i| {
+            let r = [0, 2, 3][i]; // rank 1 is dead
+            g.run(
+                r,
+                CollectiveOp::Allreduce {
+                    data: vec![1.0],
+                    red: Reduce::Sum,
+                    dt: ReduceDtype::F32,
+                },
+            )
+            .unwrap_err()
+        });
+        let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("collective protocol violated [stall]")),
+            "{msgs:?}"
+        );
+        for m in &msgs {
+            assert!(
+                m.contains("[stall]") || m.contains("comm group poisoned"),
+                "{m}"
+            );
+        }
+        // the stall names the subgroup that starved (the dead rank's
+        // node leg, or the leaders leg waiting on its leader) — either
+        // way attributable to this group's hierarchy at a glance
+        let v = msgs.iter().find(|m| m.contains("[stall]")).unwrap();
+        assert!(v.contains("h-dead/"), "{v}");
+    }
+
+    #[test]
+    fn poisoning_the_parent_reaches_the_subgroups() {
+        let g = Group::new_on_nodes(4, "h-poison", &[0, 0, 1, 1]);
+        g.poison();
+        // a member entering any phase fails immediately instead of
+        // waiting on peers that will never come
+        let e = g
+            .run(
+                0,
+                CollectiveOp::Allreduce {
+                    data: vec![1.0],
+                    red: Reduce::Sum,
+                    dt: ReduceDtype::F32,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(e, CommFault::Poisoned), "{e}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_route_through_run() {
+        // one-PR migration aids: the old per-op surface must keep its
+        // exact semantics while it carries the deprecation note
+        let g = Group::new(2);
+        let outs = spawn_ranks(2, move |r| {
+            let ar = g.allreduce(r, vec![r as f32, 1.0], ReduceDtype::F32);
+            let am = g.allreduce_mean(r, vec![4.0], ReduceDtype::F32);
+            let ag = g.allgather(r, vec![r as f32]);
+            let rs = g.reduce_scatter_sum_even(r, vec![1.0, 2.0], ReduceDtype::F32);
+            let mx = g.allreduce_max(r, vec![r as f32]);
+            g.barrier(r);
+            (ar, am, ag, rs, mx)
+        });
+        for (r, (ar, am, ag, rs, mx)) in outs.into_iter().enumerate() {
+            assert_eq!(ar, vec![1.0, 2.0]);
+            assert_eq!(am, vec![4.0]);
+            assert_eq!(ag, vec![0.0, 1.0]);
+            assert_eq!(rs, vec![if r == 0 { 2.0 } else { 4.0 }]);
+            assert_eq!(mx, vec![1.0]);
+        }
     }
 }

@@ -9,6 +9,14 @@
 //! - **ep group**  — ranks sharing (dp, pp): Stage-1 token exchange
 //! - **dpep group** — ranks sharing pp: EPSO's non-expert sharding domain
 //! - **world**     — everything (barriers, health votes)
+//!
+//! [`Topology::node_size`] places rank r on node `r / node_size`
+//! (Aurora hosts 12 tiles per node). Groups whose members span several
+//! nodes are built hierarchical (see [`Group::new_on_nodes`]): their
+//! sum/gather collectives run intra-node → leaders → intra-node, and
+//! [`Mesh::traffic`] splits the byte counters into Xe-Link-priced
+//! `intra_bytes` vs Slingshot-priced `inter_bytes`. `node_size: 1` is
+//! the flat baseline — every group single-level, every byte inter-node.
 
 use super::group::{CommStats, Group};
 use std::sync::Arc;
@@ -18,11 +26,28 @@ pub struct Topology {
     pub dp: usize,
     pub ep: usize,
     pub pp: usize,
+    /// ranks per node: rank r lives on node `r / node_size`. 1 = flat
+    /// collectives (no node locality); validated against the world size
+    /// by the `[topology]` plan check.
+    pub node_size: usize,
 }
 
 impl Topology {
+    /// Pure DP mesh, flat placement.
     pub fn dp_only(dp: usize) -> Topology {
-        Topology { dp, ep: 1, pp: 1 }
+        Topology::grid(dp, 1, 1)
+    }
+
+    /// A DP × EP × PP mesh with flat placement (`node_size: 1`) — the
+    /// literal-free way to spell a topology; chain
+    /// [`Topology::with_node_size`] for hierarchical collectives.
+    pub fn grid(dp: usize, ep: usize, pp: usize) -> Topology {
+        Topology { dp, ep, pp, node_size: 1 }
+    }
+
+    /// Same mesh, placed `node_size` ranks per node.
+    pub fn with_node_size(self, node_size: usize) -> Topology {
+        Topology { node_size, ..self }
     }
 
     pub fn world(&self) -> usize {
@@ -51,23 +76,40 @@ pub struct Mesh {
 impl Mesh {
     pub fn new(topo: Topology) -> Arc<Mesh> {
         // stable labels per group: protocol-violation and stall reports
-        // name the fabric they fired on (e.g. `dp[1]`, `world`)
+        // name the fabric they fired on (e.g. `dp[1]`, `world`); each
+        // group is built knowing which node hosts each member, so
+        // node-spanning groups get the three-phase hierarchy and
+        // node-contained ones are accounted at Xe-Link pricing
+        let ns = topo.node_size.max(1);
+        let place = |label: &str, members: Vec<usize>| {
+            let nodes: Vec<usize> = members.iter().map(|r| r / ns).collect();
+            Group::new_on_nodes(members.len(), label, &nodes)
+        };
         let dp_groups = (0..topo.ep * topo.pp)
-            .map(|i| Group::new_labeled(topo.dp, &format!("dp[{i}]")))
+            .map(|i| {
+                let (ep, pp) = (i / topo.pp, i % topo.pp);
+                let members =
+                    (0..topo.dp).map(|dp| (dp * topo.ep + ep) * topo.pp + pp).collect();
+                place(&format!("dp[{i}]"), members)
+            })
             .collect();
         let ep_groups = (0..topo.dp * topo.pp)
-            .map(|i| Group::new_labeled(topo.ep, &format!("ep[{i}]")))
+            .map(|i| {
+                let (dp, pp) = (i / topo.pp, i % topo.pp);
+                let members =
+                    (0..topo.ep).map(|ep| (dp * topo.ep + ep) * topo.pp + pp).collect();
+                place(&format!("ep[{i}]"), members)
+            })
             .collect();
         let dpep_groups = (0..topo.pp)
-            .map(|i| Group::new_labeled(topo.dp * topo.ep, &format!("dpep[{i}]")))
+            .map(|pp| {
+                let members =
+                    (0..topo.dp * topo.ep).map(|de| de * topo.pp + pp).collect();
+                place(&format!("dpep[{pp}]"), members)
+            })
             .collect();
-        Arc::new(Mesh {
-            topo,
-            dp_groups,
-            ep_groups,
-            dpep_groups,
-            world: Group::new_labeled(topo.world(), "world"),
-        })
+        let world = place("world", (0..topo.world()).collect());
+        Arc::new(Mesh { topo, dp_groups, ep_groups, dpep_groups, world })
     }
 
     pub fn rank(&self, c: MeshCoord) -> usize {
@@ -107,6 +149,8 @@ impl Mesh {
 
     /// Poison every group (used when a rank aborts so surviving ranks
     /// fail fast instead of hanging — paper §4 hard-failure semantics).
+    /// [`Group::poison`] forwards into hierarchy subgroups, so members
+    /// parked on an intra-node or leaders leg unblock too.
     pub fn poison_all(&self) {
         for g in self
             .dp_groups
@@ -120,9 +164,10 @@ impl Mesh {
     }
 
     /// Aggregate traffic across every group of the mesh (dp, ep, dpep and
-    /// world) — the bytes-moved number behind the perf gate's per-dtype
-    /// column. Counters are at actual wire width (bf16 collectives move
-    /// 2-byte words).
+    /// world, including their hierarchy subgroups) — the bytes-moved
+    /// number behind the perf gate's per-dtype column. Counters are at
+    /// actual wire width (bf16 collectives move 2-byte words), split into
+    /// node-local `intra_bytes` vs node-crossing `inter_bytes`.
     pub fn traffic(&self) -> CommStats {
         let mut total = CommStats::default();
         for g in self
@@ -132,10 +177,7 @@ impl Mesh {
             .chain(self.dpep_groups.iter())
             .chain(std::iter::once(&self.world))
         {
-            let s = g.stats();
-            total.ops += s.ops;
-            total.bytes_in += s.bytes_in;
-            total.bytes_out += s.bytes_out;
+            total.absorb(&g.stats());
         }
         total
     }
@@ -153,10 +195,11 @@ impl Mesh {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::{CollectiveOp, Reduce, ReduceDtype};
 
     #[test]
     fn rank_coord_roundtrip() {
-        let m = Mesh::new(Topology { dp: 3, ep: 4, pp: 2 });
+        let m = Mesh::new(Topology::grid(3, 4, 2));
         for r in 0..24 {
             assert_eq!(m.rank(m.coord(r)), r);
         }
@@ -164,7 +207,7 @@ mod tests {
 
     #[test]
     fn group_memberships_are_consistent() {
-        let m = Mesh::new(Topology { dp: 2, ep: 2, pp: 2 });
+        let m = Mesh::new(Topology::grid(2, 2, 2));
         for r in 0..8 {
             let c = m.coord(r);
             let (dg, di) = m.dp_group(r);
@@ -181,7 +224,7 @@ mod tests {
 
     #[test]
     fn dp_groups_are_disjoint_by_ep_pp() {
-        let m = Mesh::new(Topology { dp: 2, ep: 2, pp: 1 });
+        let m = Mesh::new(Topology::grid(2, 2, 1));
         let (g0, _) = m.dp_group(m.rank(MeshCoord { dp: 0, ep: 0, pp: 0 }));
         let (g1, _) = m.dp_group(m.rank(MeshCoord { dp: 0, ep: 1, pp: 0 }));
         assert!(!Arc::ptr_eq(g0, g1));
@@ -191,7 +234,7 @@ mod tests {
 
     #[test]
     fn pp_neighbours_chain() {
-        let m = Mesh::new(Topology { dp: 1, ep: 1, pp: 4 });
+        let m = Mesh::new(Topology::grid(1, 1, 4));
         assert_eq!(m.pp_neighbours(0), (None, Some(1)));
         assert_eq!(m.pp_neighbours(2), (Some(1), Some(3)));
         assert_eq!(m.pp_neighbours(3), (Some(2), None));
@@ -199,19 +242,88 @@ mod tests {
 
     #[test]
     fn cross_thread_dp_allreduce_via_mesh() {
-        use crate::comm::ReduceDtype;
-        let m = Mesh::new(Topology { dp: 2, ep: 2, pp: 1 });
+        let m = Mesh::new(Topology::grid(2, 2, 1));
         let handles: Vec<_> = (0..4)
             .map(|r| {
                 let m = Arc::clone(&m);
                 std::thread::spawn(move || {
                     let (g, i) = m.dp_group(r);
-                    g.allreduce(i, vec![m.coord(r).dp as f32], ReduceDtype::F32)
+                    g.run(
+                        i,
+                        CollectiveOp::Allreduce {
+                            data: vec![m.coord(r).dp as f32],
+                            red: Reduce::Sum,
+                            dt: ReduceDtype::F32,
+                        },
+                    )
+                    .unwrap()
+                    .values()
                 })
             })
             .collect();
         for h in handles {
             assert_eq!(h.join().unwrap(), vec![1.0]); // 0 + 1
         }
+    }
+
+    #[test]
+    fn node_size_places_groups_on_the_hierarchy() {
+        // 8 ranks, 2 per node: the world and the contiguous dp groups
+        // span nodes with cohabiting members → hierarchical
+        let m = Mesh::new(Topology::grid(8, 1, 1).with_node_size(2));
+        assert!(m.world_group().is_hierarchical());
+        let (dg, _) = m.dp_group(0);
+        assert!(dg.is_hierarchical());
+        // flat placement: nothing hierarchical (bit-identical baseline)
+        let m = Mesh::new(Topology::grid(8, 1, 1));
+        assert!(!m.world_group().is_hierarchical());
+        // whole mesh inside one node: flat again, but intra-priced
+        let m = Mesh::new(Topology::grid(2, 2, 1).with_node_size(4));
+        assert!(!m.world_group().is_hierarchical());
+    }
+
+    #[test]
+    fn traffic_splits_by_node_locality() {
+        // same collective on a flat mesh and a 2-ranks-per-node mesh:
+        // hierarchical placement must strictly cut the inter-node bytes
+        let run_world = |m: &Arc<Mesh>| {
+            let handles: Vec<_> = (0..4)
+                .map(|r| {
+                    let m = Arc::clone(m);
+                    std::thread::spawn(move || {
+                        m.world_group()
+                            .run(
+                                r,
+                                CollectiveOp::Allreduce {
+                                    data: vec![1.0f32; 16],
+                                    red: Reduce::Sum,
+                                    dt: ReduceDtype::F32,
+                                },
+                            )
+                            .unwrap()
+                            .values()
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        };
+        let flat = Mesh::new(Topology::grid(4, 1, 1));
+        run_world(&flat);
+        let hier = Mesh::new(Topology::grid(4, 1, 1).with_node_size(2));
+        run_world(&hier);
+        let ft = flat.traffic();
+        let ht = hier.traffic();
+        assert_eq!(ft.intra_bytes, 0);
+        assert!(ft.inter_bytes > 0);
+        assert!(ht.intra_bytes > 0);
+        // 2 nodes of 2: the leaders exchange is half the flat world's
+        assert!(
+            ht.inter_bytes * 2 <= ft.inter_bytes,
+            "hier {} vs flat {}",
+            ht.inter_bytes,
+            ft.inter_bytes
+        );
     }
 }

@@ -7,13 +7,16 @@
 //! accounts bytes moved so the cluster model can be calibrated against the
 //! runnable scale.
 //!
-//! Supported ops (all used by the trainer):
-//! allreduce, reduce_scatter, allgather, all2all, broadcast, barrier,
-//! and point-to-point send/recv (pipeline activations). Each collective
-//! also has a nonblocking `*_start` variant returning a [`CommHandle`]
-//! future backed by a per-rank [`CommRuntime`] lane (see `runtime`),
-//! which the pipelined sharded optimizer uses to hide communication
-//! behind compute.
+//! Collectives are issued as a typed [`CollectiveOp`] descriptor through
+//! [`Group::run`] (blocking) or [`Group::start`] (nonblocking on a
+//! per-rank [`CommRuntime`] lane — what the pipelined sharded optimizer
+//! uses to hide communication behind compute): allreduce,
+//! reduce_scatter, allgather (values or raw bf16 bits), all2all,
+//! broadcast, barrier; plus point-to-point send/recv (pipeline
+//! activations). Groups built with [`Topology::node_size`] > 1 execute
+//! the sum/gather ops as a three-phase hierarchy (intra-node → leaders →
+//! intra-node) behind the same surface, and their traffic counters split
+//! intra-node from inter-node bytes.
 
 pub mod audit;
 mod group;
@@ -22,7 +25,7 @@ mod mesh;
 mod runtime;
 
 pub use audit::{CommFault, OpDesc, OpKind, WireDtype};
-pub use group::{CommStats, Group, ReduceDtype};
+pub use group::{CollectiveOp, CollectiveOut, CommStats, Group, Parts, Reduce, ReduceDtype};
 pub use mesh::{Mesh, MeshCoord, Topology};
 pub use runtime::{CommHandle, CommRuntime, LaneDropped};
 

@@ -5,7 +5,7 @@
 //! regular. Both policies are implemented; `ep_comm` selects one and the
 //! ablation bench compares them.
 
-use crate::comm::{Group, ReduceDtype};
+use crate::comm::{CollectiveOp, Group, ReduceDtype};
 use crate::util::bf16_round;
 use std::sync::Arc;
 
@@ -55,8 +55,14 @@ pub fn exchange_allgather(
     idx_local: &[i32],
     wire: ReduceDtype,
 ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
-    let x_all = group.allgather_values(ep_rank, x_local, wire);
-    let w_all = group.allgather_values(ep_rank, w_local, wire);
+    let ag = |data: Vec<f32>| {
+        group
+            .run(ep_rank, CollectiveOp::Allgather { data, dt: wire })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
+    };
+    let x_all = ag(x_local);
+    let w_all = ag(w_local);
     let idx_all = group.allgather_i32(ep_rank, idx_local);
     (x_all, w_all, idx_all)
 }
@@ -100,7 +106,9 @@ pub fn exchange_all2all(
         // must rendezvous (peers may carry tokens and every group
         // member issues the same collective sequence), so send empty
         // frames, then return empty dense views.
-        let _ = group.all2all(ep_rank, vec![Vec::new(); ep]);
+        let _ = group
+            .run(ep_rank, CollectiveOp::All2All { parts: vec![Vec::new(); ep] })
+            .unwrap_or_else(|f| panic!("{f}"));
         return (Vec::new(), Vec::new(), Vec::new());
     }
     let t_local = x_local.len() / hidden;
@@ -132,7 +140,10 @@ pub fn exchange_all2all(
             }
         }
     }
-    let received = group.all2all(ep_rank, frames);
+    let received = group
+        .run(ep_rank, CollectiveOp::All2All { parts: frames })
+        .unwrap_or_else(|f| panic!("{f}"))
+        .buckets();
     // reassemble dense views over the global token space
     let t_all = t_local * ep;
     let mut x_all = vec![0.0f32; t_all * hidden];

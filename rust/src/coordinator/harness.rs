@@ -31,7 +31,7 @@ use super::{init_global_params, JobSpec, StepHook as _, TrainReport};
 use crate::ckpt::{
     capture_rank_state, restore_optimizer, Checkpointer, LocalMap, ResumeState, SavedCheckpoint,
 };
-use crate::comm::{Group, Mesh, ReduceDtype};
+use crate::comm::{CollectiveOp, Group, Mesh, Reduce, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::{BatchPlan, Dataset, Prefetcher, TokenCursor, TokenStream};
 use crate::ft::checks;
@@ -583,10 +583,13 @@ pub fn run<T: RankTrainer + 'static>(
         report.ckpt_bytes = st.bytes_written;
     }
     // whole-mesh collective traffic at actual wire width — the
-    // bytes-moved signal the perf gate compares across dtypes
+    // bytes-moved signal the perf gate compares across dtypes, plus the
+    // node-locality split the hierarchical collectives exist to improve
     let traffic = mesh.traffic();
     report.comm_bytes_in = traffic.bytes_in;
     report.comm_bytes_out = traffic.bytes_out;
+    report.comm_intra_bytes = traffic.intra_bytes;
+    report.comm_inter_bytes = traffic.inter_bytes;
     Ok(report)
 }
 
@@ -604,10 +607,17 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
             Some(r) => r.assemble_params(ctx.mm.param_count)?,
             None => init_global_params(&ctx.mm, ctx.spec.run.seed),
         };
-        world.broadcast(rank, 0, p.clone());
+        // faults panic (not Err): a peer aborted by poisoning must stay a
+        // filtered collateral panic so the root-cause rank's error wins
+        world
+            .run(rank, CollectiveOp::Broadcast { root: 0, data: p.clone() })
+            .unwrap_or_else(|f| panic!("{f}"));
         p
     } else {
-        world.broadcast(rank, 0, Vec::new())
+        world
+            .run(rank, CollectiveOp::Broadcast { root: 0, data: Vec::new() })
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()
     };
     let mut trainer = T::setup(&ctx, shared, global0)?;
     let start_step = match &ctx.resume {
@@ -654,8 +664,18 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
         }
         if let Some(dom) = trainer.loss_domain() {
             // loss is rank-local; average across the domain for the curve
-            let mean =
-                dom.group.allreduce_mean(dom.group_rank, vec![out.loss], ReduceDtype::F32)[0];
+            let mean = dom
+                .group
+                .run(
+                    dom.group_rank,
+                    CollectiveOp::Allreduce {
+                        data: vec![out.loss],
+                        red: Reduce::Mean,
+                        dt: ReduceDtype::F32,
+                    },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values()[0];
             if dom.record {
                 last_loss = mean as f64;
                 loss_curve.push(step, mean as f64);
@@ -737,6 +757,8 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
                 ckpt_commits: 0,
                 comm_bytes_in: 0,
                 comm_bytes_out: 0,
+                comm_intra_bytes: 0,
+                comm_inter_bytes: 0,
                 ckpt_bytes: 0,
             }))
         }

@@ -155,9 +155,20 @@ pub struct JobSpecBuilder {
 }
 
 impl JobSpecBuilder {
-    /// Mesh axes: data-, expert- and pipeline-parallel degrees.
+    /// Mesh axes: data-, expert- and pipeline-parallel degrees. Keeps a
+    /// previously set [`JobSpecBuilder::node_size`].
     pub fn topology(mut self, dp: usize, ep: usize, pp: usize) -> Self {
-        self.topo = Topology { dp, ep, pp };
+        self.topo = Topology::grid(dp, ep, pp).with_node_size(self.topo.node_size);
+        self
+    }
+
+    /// Ranks per node (`--node-size`): >1 places rank r on node
+    /// `r / node_size` and runs node-spanning collectives hierarchically
+    /// (intra-node → leaders → intra-node). The world size must divide
+    /// by it (the `[topology]` check); 1 (the default) is the flat
+    /// baseline, bit-identical to every pre-hierarchy run.
+    pub fn node_size(mut self, n: usize) -> Self {
+        self.topo.node_size = n;
         self
     }
 
@@ -555,6 +566,25 @@ mod tests {
     }
 
     #[test]
+    fn node_size_knob_threads_through_and_is_validated() {
+        let base = || JobSpec::new("m").data_dir("/tmp/x");
+        // order-independent with .topology(): the axes keep the knob
+        let s = base().node_size(2).topology(4, 1, 1).build().unwrap();
+        assert_eq!(s.topo().node_size, 2);
+        assert!(s.fingerprint().ends_with("/nodes2"), "{}", s.fingerprint());
+        // default: flat placement, legacy fingerprint
+        let d = base().topology(4, 1, 1).build().unwrap();
+        assert_eq!(d.topo().node_size, 1);
+        assert!(!d.fingerprint().contains("nodes"), "{}", d.fingerprint());
+        // world not divisible by node size → [topology]
+        let e = base().topology(4, 1, 1).node_size(3).build().unwrap_err();
+        assert!(e.to_string().contains("[topology]"), "{e}");
+        // zero is an axis-sanity failure, not a divide-by-zero
+        let e = base().topology(4, 1, 1).node_size(0).build().unwrap_err();
+        assert!(e.to_string().contains("[topology]"), "{e}");
+    }
+
+    #[test]
     fn default_sharding_tracks_ep_degree() {
         let d = |dp, ep, pp| {
             JobSpec::new("m")
@@ -575,11 +605,11 @@ mod tests {
     fn train_options_shim_converts() {
         let o = TrainOptions::new(
             "mula-tiny",
-            Topology { dp: 1, ep: 2, pp: 1 },
+            Topology::grid(1, 2, 1),
             PathBuf::from("/tmp/x"),
         );
         let spec: JobSpec = o.into();
-        assert_eq!(spec.topo(), Topology { dp: 1, ep: 2, pp: 1 });
+        assert_eq!(spec.topo(), Topology::grid(1, 2, 1));
         assert_eq!(spec.plan.mode, ShardingMode::Epso);
         // at ep = 1 the legacy EPSO default resolves to SO
         let o = TrainOptions::new("mula-tiny", Topology::dp_only(2), PathBuf::from("/tmp/x"));

@@ -112,6 +112,13 @@ pub struct TrainReport {
     /// bytes picked up from collective results across the whole mesh,
     /// also at wire width
     pub comm_bytes_out: u64,
+    /// in+out bytes that stayed inside a node — moved on groups whose
+    /// members share one node under [`crate::comm::Topology::node_size`]
+    /// (the Xe-Link legs of the hierarchy); 0 on flat meshes
+    pub comm_intra_bytes: u64,
+    /// in+out bytes that crossed nodes — flat groups spanning nodes and
+    /// the hierarchy's leaders legs; the quantity `--node-size` shrinks
+    pub comm_inter_bytes: u64,
     /// shard-payload bytes written by the checkpointer (manifests
     /// excluded); halves per param shard under `--dtype bf16`
     pub ckpt_bytes: u64,

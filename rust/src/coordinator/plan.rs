@@ -117,12 +117,28 @@ type DataCheck = fn(&ParallelismPlan, &ModelManifest, &Dataset) -> Option<String
 /// Checks that need only the plan itself (run by `JobSpecBuilder::build`).
 const SPEC_CHECKS: &[(&str, SpecCheck)] = &[
     ("topology", |p| {
-        (p.topo.dp == 0 || p.topo.ep == 0 || p.topo.pp == 0).then(|| {
-            format!(
+        if p.topo.dp == 0 || p.topo.ep == 0 || p.topo.pp == 0 {
+            return Some(format!(
                 "every mesh axis must be >= 1; got dp={} ep={} pp={}",
                 p.topo.dp, p.topo.ep, p.topo.pp
-            )
-        })
+            ));
+        }
+        if p.topo.node_size == 0 {
+            return Some(
+                "node_size must be >= 1 (1 selects the flat single-level \
+                 collectives)"
+                    .to_string(),
+            );
+        }
+        if p.topo.world() % p.topo.node_size != 0 {
+            return Some(format!(
+                "node_size={} must divide the world size dp*ep*pp = {} so \
+                 every node hosts a full tile complement",
+                p.topo.node_size,
+                p.topo.world()
+            ));
+        }
+        None
     }),
     ("world-size", |p| match p.expected_world {
         Some(w) if p.topo.world() != w => Some(format!(
@@ -413,6 +429,12 @@ impl ParallelismPlan {
         if self.dtype == Dtype::Bf16 {
             fp.push_str("/bf16");
         }
+        // node placement shapes the hierarchical collective schedule but
+        // not the state; appended last, and node_size=1 (the flat default)
+        // stays suffix-free so every legacy fingerprint is unchanged
+        if self.topo.node_size > 1 {
+            fp.push_str(&format!("/nodes{}", self.topo.node_size));
+        }
         fp
     }
 
@@ -427,7 +449,7 @@ impl ParallelismPlan {
             let rest = world / dp;
             for ep in 1..=rest {
                 if rest % ep == 0 {
-                    out.push(Topology { dp, ep, pp: rest / ep });
+                    out.push(Topology::grid(dp, ep, rest / ep));
                 }
             }
         }
@@ -471,9 +493,9 @@ mod tests {
         for t in &topos {
             assert_eq!(t.world(), 12);
         }
-        assert!(topos.contains(&Topology { dp: 12, ep: 1, pp: 1 }));
-        assert!(topos.contains(&Topology { dp: 1, ep: 12, pp: 1 }));
-        assert!(topos.contains(&Topology { dp: 2, ep: 3, pp: 2 }));
+        assert!(topos.contains(&Topology::grid(12, 1, 1)));
+        assert!(topos.contains(&Topology::grid(1, 12, 1)));
+        assert!(topos.contains(&Topology::grid(2, 3, 2)));
         // no duplicates
         for (i, a) in topos.iter().enumerate() {
             assert!(!topos[i + 1..].contains(a), "duplicate {a:?}");
@@ -482,12 +504,12 @@ mod tests {
 
     #[test]
     fn spec_checks_fire_with_stable_strings() {
-        let mut p = ParallelismPlan::new(Topology { dp: 2, ep: 2, pp: 2 });
+        let mut p = ParallelismPlan::new(Topology::grid(2, 2, 2));
         p.micro_batches = 0;
         let e = p.validate_spec().unwrap_err().to_string();
         assert!(e.contains("plan validation failed [micro-batches]"), "{e}");
 
-        let mut p = ParallelismPlan::new(Topology { dp: 2, ep: 1, pp: 1 });
+        let mut p = ParallelismPlan::new(Topology::grid(2, 1, 1));
         p.expected_world = Some(8);
         let e = p.validate_spec().unwrap_err().to_string();
         assert!(e.contains("plan validation failed [world-size]"), "{e}");
@@ -520,7 +542,7 @@ mod tests {
 
     #[test]
     fn schedule_check_rejects_interleaved_on_runnable_engines() {
-        let mut p = ParallelismPlan::new(Topology { dp: 1, ep: 1, pp: 2 });
+        let mut p = ParallelismPlan::new(Topology::grid(1, 1, 2));
         p.schedule = Schedule::Interleaved1F1B { chunks: 2 };
         let e = p.validate_spec().unwrap_err().to_string();
         assert!(e.contains("plan validation failed [schedule]"), "{e}");
@@ -532,7 +554,7 @@ mod tests {
 
     #[test]
     fn kind_dispatch_matches_axes() {
-        let k = |dp, ep, pp| ParallelismPlan::new(Topology { dp, ep, pp }).kind();
+        let k = |dp, ep, pp| ParallelismPlan::new(Topology::grid(dp, ep, pp)).kind();
         assert_eq!(k(4, 1, 1), EngineKind::Dp);
         assert_eq!(k(1, 2, 1), EngineKind::Ep);
         assert_eq!(k(1, 1, 2), EngineKind::Pp);
@@ -541,7 +563,7 @@ mod tests {
 
     #[test]
     fn fingerprint_is_stable() {
-        let p = ParallelismPlan::new(Topology { dp: 1, ep: 2, pp: 2 });
+        let p = ParallelismPlan::new(Topology::grid(1, 2, 2));
         assert_eq!(p.fingerprint(), "dp1-ep2-pp2/epso/1f1b/mb2/allgather");
         // overlap is an execution knob: appended, never reshaping the
         // state key a checkpoint resume compares
@@ -583,11 +605,39 @@ mod tests {
 
     #[test]
     fn bf16_fingerprint_gets_a_suffix() {
-        let mut p = ParallelismPlan::new(Topology { dp: 1, ep: 2, pp: 2 });
+        let mut p = ParallelismPlan::new(Topology::grid(1, 2, 2));
         p.dtype = Dtype::Bf16;
         assert_eq!(p.fingerprint(), "dp1-ep2-pp2/epso/1f1b/mb2/allgather/bf16");
         // the state key (first three segments) never moves
         assert!(p.fingerprint().starts_with("dp1-ep2-pp2/epso/1f1b"));
+    }
+
+    #[test]
+    fn topology_check_validates_node_size() {
+        // indivisible placement: 3 tiles per node cannot host world 4
+        let p = ParallelismPlan::new(Topology::grid(4, 1, 1).with_node_size(3));
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [topology]"), "{e}");
+        assert!(e.contains("node_size=3"), "{e}");
+        // zero node size is rejected before the divisibility question
+        let p = ParallelismPlan::new(Topology::grid(4, 1, 1).with_node_size(0));
+        let e = p.validate_spec().unwrap_err().to_string();
+        assert!(e.contains("plan validation failed [topology]"), "{e}");
+        // divisible placements (including the flat default) pass
+        assert!(ParallelismPlan::new(Topology::grid(4, 1, 1).with_node_size(2))
+            .validate_spec()
+            .is_ok());
+        assert!(ParallelismPlan::new(Topology::grid(4, 1, 1)).validate_spec().is_ok());
+    }
+
+    #[test]
+    fn node_size_fingerprint_gets_a_suffix() {
+        let p = ParallelismPlan::new(Topology::grid(2, 2, 1).with_node_size(2));
+        assert_eq!(p.fingerprint(), "dp2-ep2-pp1/epso/1f1b/mb2/allgather/nodes2");
+        // the state key (first three segments) never moves, and the flat
+        // default stays suffix-free
+        let p = ParallelismPlan::new(Topology::grid(2, 2, 1));
+        assert_eq!(p.fingerprint(), "dp2-ep2-pp1/epso/1f1b/mb2/allgather");
     }
 
     #[test]

@@ -38,7 +38,7 @@ use super::harness::{
 };
 use super::plan::ParallelismPlan;
 use crate::ckpt::LocalMap;
-use crate::comm::{Group, ReduceDtype};
+use crate::comm::{CollectiveOp, Group, Parts, Reduce, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
@@ -273,7 +273,18 @@ impl RankTrainer for EpTrainer {
             // ---- line 116: reduce-scatter of partial outputs ----
             let moe_local = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                ep_group.reduce_scatter_sum_even(ep_rank, partial, wire)
+                ep_group
+                    .run(
+                        ep_rank,
+                        CollectiveOp::ReduceScatter {
+                            data: partial,
+                            red: Reduce::Sum,
+                            dt: wire,
+                            parts: Parts::Even,
+                        },
+                    )
+                    .unwrap_or_else(|f| panic!("{f}"))
+                    .values()
             };
             // residual: h = a + moe_out
             let mut a_data = a.into_f32()?;
@@ -306,7 +317,10 @@ impl RankTrainer for EpTrainer {
             // d(out) = dh: residual gives d_a = dh and d(moe_out) = dh
             let d_moe_full = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                ep_group.allgather_values(ep_rank, dh.clone(), wire)
+                ep_group
+                    .run(ep_rank, CollectiveOp::Allgather { data: dh.clone(), dt: wire })
+                    .unwrap_or_else(|f| panic!("{f}"))
+                    .values()
             };
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
@@ -324,10 +338,21 @@ impl RankTrainer for EpTrainer {
             grads[layout.layer_e[l].clone()].copy_from_slice(dpe);
             let (dx_local, dw_local) = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                (
-                    ep_group.reduce_scatter_sum_even(ep_rank, dx_partial, wire),
-                    ep_group.reduce_scatter_sum_even(ep_rank, dw_partial, wire),
-                )
+                let rs = |data: Vec<f32>| {
+                    ep_group
+                        .run(
+                            ep_rank,
+                            CollectiveOp::ReduceScatter {
+                                data,
+                                red: Reduce::Sum,
+                                dt: wire,
+                                parts: Parts::Even,
+                            },
+                        )
+                        .unwrap_or_else(|f| panic!("{f}"))
+                        .values()
+                };
+                (rs(dx_partial), rs(dw_partial))
             };
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
@@ -357,7 +382,17 @@ impl RankTrainer for EpTrainer {
         if ctx.plan.mode == crate::optim::ShardingMode::So && ep > 1 {
             let _t = Scoped::new(&mut breakdown.comm_secs);
             let ne = grads[..layout.ne_len].to_vec();
-            let avg = ep_group.allreduce_mean(ep_rank, ne, ctx.spec.reduce_dtype());
+            let avg = ep_group
+                .run(
+                    ep_rank,
+                    CollectiveOp::Allreduce {
+                        data: ne,
+                        red: Reduce::Mean,
+                        dt: ctx.spec.reduce_dtype(),
+                    },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
             grads[..layout.ne_len].copy_from_slice(&avg);
         }
 
@@ -402,7 +437,14 @@ impl RankTrainer for EpTrainer {
             // into_f32 moves the buffer when no snapshot handle is still
             // alive (the steady state) instead of copying the shard
             let local = self.params.into_f32()?;
-            let all_locals = self.ep_group.allgather(self.ep_rank, local);
+            let all_locals = self
+                .ep_group
+                .run(
+                    self.ep_rank,
+                    CollectiveOp::Allgather { data: local, dt: ReduceDtype::F32 },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
             for (r, chunk) in all_locals.chunks(self.layout.local_len()).enumerate() {
                 let lay_r = EpLayout::new(mm, ep, r);
                 lay_r.scatter(chunk, &mut final_params);
@@ -419,7 +461,13 @@ impl RankTrainer for EpTrainer {
         // non-zero ranks of rank 0's ep group must still rendezvous
         if self.gathers_at_finish {
             let local = self.params.into_f32()?;
-            self.ep_group.allgather(self.ep_rank, local);
+            self.ep_group
+                .run(
+                    self.ep_rank,
+                    CollectiveOp::Allgather { data: local, dt: ReduceDtype::F32 },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
         }
         Ok(RankFinish::None)
     }

@@ -34,7 +34,7 @@ use super::plan::ParallelismPlan;
 use super::train_ep::{Arts, ParamSlices};
 use super::TrainReport;
 use crate::ckpt::LocalMap;
-use crate::comm::{Group, P2p, ReduceDtype};
+use crate::comm::{CollectiveOp, Group, P2p, Parts, Reduce, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::metrics::{Scoped, StepBreakdown};
 use crate::optim::sharded::{plan_segments, ShardedOptimizer};
@@ -194,7 +194,17 @@ impl PpEpTrainer {
             let moe_local = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
                 self.ep_group
-                    .reduce_scatter_sum_even(self.ep_rank, partial, wire)
+                    .run(
+                        self.ep_rank,
+                        CollectiveOp::ReduceScatter {
+                            data: partial,
+                            red: Reduce::Sum,
+                            dt: wire,
+                            parts: Parts::Even,
+                        },
+                    )
+                    .unwrap_or_else(|f| panic!("{f}"))
+                    .values()
             };
             let mut a_data = a.into_f32()?;
             for (av, mv) in a_data.iter_mut().zip(moe_local.iter()) {
@@ -231,7 +241,10 @@ impl PpEpTrainer {
         for l in (0..self.layout.layer_ne.len()).rev() {
             let d_moe_full = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                self.ep_group.allgather_values(self.ep_rank, dh.clone(), wire)
+                self.ep_group
+                    .run(self.ep_rank, CollectiveOp::Allgather { data: dh.clone(), dt: wire })
+                    .unwrap_or_else(|f| panic!("{f}"))
+                    .values()
             };
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
@@ -253,10 +266,21 @@ impl PpEpTrainer {
             }
             let (dx_local, dw_local) = {
                 let _t = Scoped::new(&mut breakdown.comm_secs);
-                (
-                    self.ep_group.reduce_scatter_sum_even(self.ep_rank, dx_partial, wire),
-                    self.ep_group.reduce_scatter_sum_even(self.ep_rank, dw_partial, wire),
-                )
+                let rs = |data: Vec<f32>| {
+                    self.ep_group
+                        .run(
+                            self.ep_rank,
+                            CollectiveOp::ReduceScatter {
+                                data,
+                                red: Reduce::Sum,
+                                dt: wire,
+                                parts: Parts::Even,
+                            },
+                        )
+                        .unwrap_or_else(|f| panic!("{f}"))
+                        .values()
+                };
+                (rs(dx_partial), rs(dw_partial))
             };
             let outs = {
                 let _t = Scoped::new(&mut breakdown.fwd_bwd_secs);
@@ -500,7 +524,16 @@ impl RankTrainer for PpEpTrainer {
             let ne = grads[..self.layout.ne_len].to_vec();
             let avg = self
                 .ep_group
-                .allreduce_mean(self.ep_rank, ne, ctx.spec.reduce_dtype());
+                .run(
+                    self.ep_rank,
+                    CollectiveOp::Allreduce {
+                        data: ne,
+                        red: Reduce::Mean,
+                        dt: ctx.spec.reduce_dtype(),
+                    },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
             grads[..self.layout.ne_len].copy_from_slice(&avg);
         }
 

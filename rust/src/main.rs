@@ -10,6 +10,11 @@
 //!         [--data-seed N] [--no-prefetch] [--epochs N]
 //!         [--dtype f32|bf16] (bf16: half-width params/wires/checkpoint
 //!         payloads with f32 master weights in the optimizer)
+//!         [--node-size N] (tiles per node: N > 1 runs allreduce /
+//!         reduce-scatter / allgather as the three-phase hierarchy —
+//!         intra-node, leaders inter-node, intra-node broadcast — and
+//!         splits the traffic counters intra vs inter; N must divide
+//!         dp*ep*pp, 1 is the flat single-level default)
 //!         [--overlap] [--overlap-chunk N]
 //!         [--ckpt-dir DIR --ckpt-every N --ckpt-sync --ckpt-keep K]
 //!   eval --model M              run the synthetic benchmark suite
@@ -20,6 +25,10 @@
 //!   ckpt inspect DIR            print a checkpoint dir's manifest
 //!                               (step, plan, shards, checksums, validity)
 //!   scaling [--fur]             Aurora-model Fig 4b sweep
+//!   predict BENCH.json          run the cluster analytic model against a
+//!         measured perf-gate bench file (BENCH_PR8.json or the committed
+//!         ci/bench_baseline.json) and report per-term prediction error
+//!         [--model M --fur]; absent/zero bench values are record-only
 //!   lint [--root DIR]           repo invariant lint: stable check-string
 //!         registry/coverage, named-thread, lock-discipline and metrics
 //!         classification rules over rust/src + rust/tests
@@ -34,7 +43,9 @@
 //! steps.
 
 use anyhow::anyhow;
-use optimus::cluster::{scaling_efficiency, Aurora};
+use optimus::cluster::{
+    self, hier_inter_traffic_ratio, scaling_efficiency, Aurora, ParallelPlan,
+};
 use optimus::config::models::{MulaSpec, MULA_220B, PAPER_MODELS};
 use optimus::config::Manifest;
 use optimus::coordinator::pipeline::Schedule;
@@ -45,14 +56,14 @@ use optimus::optim::ShardingMode;
 use optimus::runtime::{Dtype, Engine};
 use optimus::util::cli::Args;
 
-const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|scaling|lint> [flags]\n\
+const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|scaling|predict|lint> [flags]\n\
                      see rust/src/main.rs header for flags";
 
 const TRAIN_FLAGS: &[&str] = &[
-    "model", "data", "dp", "ep", "pp", "steps", "warmup", "lr", "mode", "ep-comm",
-    "schedule", "micro", "fur", "pool", "seed", "log-every", "overlap", "overlap-chunk",
-    "ckpt-dir", "ckpt-every", "ckpt-sync", "ckpt-keep", "data-seed", "no-prefetch",
-    "epochs", "dtype",
+    "model", "data", "dp", "ep", "pp", "node-size", "steps", "warmup", "lr", "mode",
+    "ep-comm", "schedule", "micro", "fur", "pool", "seed", "log-every", "overlap",
+    "overlap-chunk", "ckpt-dir", "ckpt-every", "ckpt-sync", "ckpt-keep", "data-seed",
+    "no-prefetch", "epochs", "dtype",
 ];
 const CKPT_FLAGS: &[&str] = &[];
 const PREPROCESS_FLAGS: &[&str] =
@@ -60,6 +71,7 @@ const PREPROCESS_FLAGS: &[&str] =
 const EVAL_FLAGS: &[&str] = &["model", "seed", "cases"];
 const PLANS_FLAGS: &[&str] = &["world", "model", "steps", "data", "dtype"];
 const SCALING_FLAGS: &[&str] = &["fur", "model"];
+const PREDICT_FLAGS: &[&str] = &["model", "fur"];
 const LINT_FLAGS: &[&str] = &["root"];
 
 fn main() -> optimus::Result<()> {
@@ -72,6 +84,7 @@ fn main() -> optimus::Result<()> {
         Some("plans") => do_plans(&args),
         Some("ckpt") => do_ckpt(&args),
         Some("scaling") => do_scaling(&args),
+        Some("predict") => do_predict(&args),
         Some("lint") => do_lint(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -157,6 +170,9 @@ fn do_train(args: &Args) -> optimus::Result<()> {
             args.usize_or("ep", 1),
             args.usize_or("pp", 1),
         )
+        // --node-size N > 1: hierarchical collectives (intra-node →
+        // leaders → intra-node) with intra/inter traffic split
+        .node_size(args.usize_or("node-size", 1))
         .steps(steps)
         .warmup_steps(args.usize_or("warmup", steps / 10))
         .peak_lr(lr)
@@ -243,6 +259,15 @@ fn do_train(args: &Args) -> optimus::Result<()> {
         r.comm_bytes_in as f64 / (1 << 20) as f64,
         r.comm_bytes_out as f64 / (1 << 20) as f64,
     );
+    if spec.plan.topo.node_size > 1 {
+        println!(
+            "hierarchy: --node-size {} — {:.2} MiB intra-node (Xe-Link) / \
+             {:.2} MiB inter-node (fabric)",
+            spec.plan.topo.node_size,
+            r.comm_intra_bytes as f64 / (1 << 20) as f64,
+            r.comm_inter_bytes as f64 / (1 << 20) as f64,
+        );
+    }
     println!(
         "data: {} instances ({:.2} epochs) consumed; stall {:.4}s ({}), \
          prefetch hid {:.4}s",
@@ -396,6 +421,107 @@ fn do_lint(args: &Args) -> optimus::Result<()> {
         eprintln!("{v}");
     }
     Err(anyhow!("lint failed with {} violation(s)", violations.len()))
+}
+
+/// `optimus predict <bench.json>` — run the cluster analytic model
+/// against a measured perf-gate bench file and report per-term
+/// prediction error. Absolute step times on this in-process testbed say
+/// nothing about Aurora wall clock, so the validated terms are the
+/// dimensionless ratios both sides define: bf16/f32 collective bytes,
+/// hierarchical/flat inter-node bytes, and the `--overlap` speedup.
+/// Bench values that are absent or zero (e.g. the committed zeroed
+/// `ci/bench_baseline.json`) report as record-only instead of failing,
+/// so CI can smoke the loop before a measured bench lands.
+fn do_predict(args: &Args) -> optimus::Result<()> {
+    check(args, PREDICT_FLAGS)?;
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: optimus predict <bench.json> [--model M] [--fur]"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read bench file `{path}`: {e}"))?;
+    let bench = optimus::util::json::Json::parse(&text)
+        .map_err(|e| anyhow!("bench file `{path}`: {e}"))?;
+    let model = args.str_or("model", "mula-220b-a10b");
+    let spec = MulaSpec::by_name(&model)
+        .ok_or_else(|| anyhow!("--model wants a paper config (Table 1), got `{model}`"))?;
+    let hw = Aurora::default();
+    let plan = ParallelPlan {
+        dp: 32,
+        ep: 12,
+        pp: 8,
+        micro_batches: 16,
+        schedule: Schedule::OneFOneB,
+        tokens_per_tile: 4096,
+        fur: args.bool_or("fur", false),
+        wire_bytes: 2.0,
+        node_size: hw.tiles_per_node,
+    };
+    let s = cluster::step_time(spec, &hw, &plan, true);
+    println!(
+        "analytic step model for {} (dp{} ep{} pp{}, {} tiles/node):",
+        spec.name, plan.dp, plan.ep, plan.pp, plan.node_size
+    );
+    for (term, secs) in [
+        ("compute", s.compute),
+        ("dp_comm", s.dp_comm),
+        ("ep_comm", s.ep_comm),
+        ("pp_bubble", s.pp_bubble),
+        ("optimizer", s.optimizer),
+    ] {
+        println!("  {term:<10} {secs:>9.4}s  ({:>4.1}%)", 100.0 * secs / s.total());
+    }
+    println!("  {:<10} {:>9.4}s", "total", s.total());
+
+    // the bench's own node size (the hier lane's --node-size) decides the
+    // traffic-ratio prediction; older bench files without the key get the
+    // machine default
+    let node_size = bench
+        .get("hier_node_size")
+        .and_then(optimus::util::json::Json::as_usize)
+        .unwrap_or(hw.tiles_per_node);
+    let num = |k: &str| bench.get(k).and_then(optimus::util::json::Json::as_f64).filter(|v| *v > 0.0);
+    let ratio = |a: &str, b: &str| Some(num(a)? / num(b)?);
+    let terms: Vec<(String, f64, Option<f64>)> = vec![
+        (
+            "bf16/f32 collective bytes".to_string(),
+            ParallelPlan::wire_bytes_for("bf16") / ParallelPlan::wire_bytes_for("f32"),
+            ratio("dp_bf16_comm_bytes", "dp_f32_comm_bytes"),
+        ),
+        (
+            format!("hier/flat inter-node bytes (node_size {node_size})"),
+            hier_inter_traffic_ratio(node_size),
+            ratio("dp_hier_inter_bytes", "dp_flat_inter_bytes"),
+        ),
+        (
+            "overlap speedup (dp)".to_string(),
+            s.overlap_speedup(),
+            ratio("dp_overlap_steps_per_sec", "dp_serial_steps_per_sec"),
+        ),
+    ];
+    println!("\nper-term model validation against `{path}`:");
+    let mut worst: Option<f64> = None;
+    for (name, pred, meas) in terms {
+        match meas {
+            Some(m) => {
+                let err = (pred - m).abs() / m.abs().max(f64::MIN_POSITIVE);
+                worst = Some(worst.unwrap_or(0.0).max(err));
+                println!(
+                    "  {name:<44} predicted {pred:>7.3}  measured {m:>7.3}  error {:>5.1}%",
+                    err * 100.0
+                );
+            }
+            None => println!(
+                "  {name:<44} predicted {pred:>7.3}  measured —  (record-only: \
+                 bench value absent or zero)"
+            ),
+        }
+    }
+    match worst {
+        Some(w) => println!("worst per-term relative error: {:.1}%", w * 100.0),
+        None => println!("no measured terms in `{path}` — model breakdown recorded above"),
+    }
+    Ok(())
 }
 
 fn do_scaling(args: &Args) -> optimus::Result<()> {

@@ -28,7 +28,9 @@
 //! the serial one (property-tested below; DESIGN.md §6 has the argument).
 
 use super::adamw::{clip_scale, sumsq, AdamParams, AdamState};
-use crate::comm::{CommHandle, CommRuntime, Group, ReduceDtype};
+use crate::comm::{
+    CollectiveOp, CollectiveOut, CommHandle, CommRuntime, Group, Parts, Reduce, ReduceDtype,
+};
 use crate::runtime::{Dtype, Tensor};
 use crate::util::{bf16s_to_f32s, f32s_to_bf16s, shard_ranges};
 use std::collections::VecDeque;
@@ -284,8 +286,20 @@ impl ShardedOptimizer {
         let t0 = std::time::Instant::now();
         for seg in self.segments.iter_mut() {
             let g = grads[seg.spec.local_offset..seg.spec.local_offset + seg.spec.len].to_vec();
-            let reduced =
-                seg.spec.group.reduce_scatter_mean(seg.spec.group_rank, g, ReduceDtype::Bf16);
+            let reduced = seg
+                .spec
+                .group
+                .run(
+                    seg.spec.group_rank,
+                    CollectiveOp::ReduceScatter {
+                        data: g,
+                        red: Reduce::Mean,
+                        dt: ReduceDtype::Bf16,
+                        parts: Parts::Ragged,
+                    },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
             debug_assert_eq!(reduced.len(), seg.shard.1);
             seg.shard_grad.copy_from_slice(&reduced);
         }
@@ -294,11 +308,18 @@ impl ShardedOptimizer {
         for seg in &self.segments {
             local_sumsq += sumsq(&seg.shard_grad) * seg.spec.norm_weight;
         }
-        let total = self.norm_group.allreduce(
-            self.norm_rank,
-            vec![local_sumsq as f32],
-            ReduceDtype::F32,
-        )[0] as f64;
+        let total = self
+            .norm_group
+            .run(
+                self.norm_rank,
+                CollectiveOp::Allreduce {
+                    data: vec![local_sumsq as f32],
+                    red: Reduce::Sum,
+                    dt: ReduceDtype::F32,
+                },
+            )
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()[0] as f64;
         self.comm_secs += t0.elapsed().as_secs_f64();
 
         let scale = if clip { clip_scale(total, self.max_grad_norm) } else { 1.0 };
@@ -324,7 +345,10 @@ impl ShardedOptimizer {
             let full = seg
                 .spec
                 .group
-                .allgather_shards_bf16(seg.spec.group_rank, mine, seg.spec.len);
+                .run(seg.spec.group_rank, CollectiveOp::AllgatherBits { data: mine })
+                .unwrap_or_else(|f| panic!("{f}"))
+                .bits();
+            debug_assert_eq!(full.len(), seg.spec.len);
             params[seg.spec.local_offset..seg.spec.local_offset + seg.spec.len]
                 .copy_from_slice(&full);
         }
@@ -339,8 +363,20 @@ impl ShardedOptimizer {
         let t0 = std::time::Instant::now();
         for seg in self.segments.iter_mut() {
             let g = grads[seg.spec.local_offset..seg.spec.local_offset + seg.spec.len].to_vec();
-            let reduced =
-                seg.spec.group.reduce_scatter_mean(seg.spec.group_rank, g, self.reduce_dtype);
+            let reduced = seg
+                .spec
+                .group
+                .run(
+                    seg.spec.group_rank,
+                    CollectiveOp::ReduceScatter {
+                        data: g,
+                        red: Reduce::Mean,
+                        dt: self.reduce_dtype,
+                        parts: Parts::Ragged,
+                    },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
             debug_assert_eq!(reduced.len(), seg.shard.1);
             seg.shard_grad.copy_from_slice(&reduced);
         }
@@ -350,11 +386,18 @@ impl ShardedOptimizer {
         for seg in &self.segments {
             local_sumsq += sumsq(&seg.shard_grad) * seg.spec.norm_weight;
         }
-        let total = self.norm_group.allreduce(
-            self.norm_rank,
-            vec![local_sumsq as f32],
-            ReduceDtype::F32,
-        )[0] as f64;
+        let total = self
+            .norm_group
+            .run(
+                self.norm_rank,
+                CollectiveOp::Allreduce {
+                    data: vec![local_sumsq as f32],
+                    red: Reduce::Sum,
+                    dt: ReduceDtype::F32,
+                },
+            )
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values()[0] as f64;
         self.comm_secs += t0.elapsed().as_secs_f64();
 
         let scale = if clip { clip_scale(total, self.max_grad_norm) } else { 1.0 };
@@ -379,7 +422,13 @@ impl ShardedOptimizer {
             let full = seg
                 .spec
                 .group
-                .allgather_shards(seg.spec.group_rank, mine, seg.spec.len);
+                .run(
+                    seg.spec.group_rank,
+                    CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
+            debug_assert_eq!(full.len(), seg.spec.len);
             params[seg.spec.local_offset..seg.spec.local_offset + seg.spec.len]
                 .copy_from_slice(&full);
         }
@@ -441,11 +490,14 @@ impl ShardedOptimizer {
             let handle = {
                 let seg = &segments[si];
                 let base = seg.spec.local_offset + cs;
-                Arc::clone(&seg.spec.group).allreduce_start(
+                Arc::clone(&seg.spec.group).start(
                     rt,
                     seg.spec.group_rank,
-                    grads[base..base + cl].to_vec(),
-                    dt,
+                    CollectiveOp::Allreduce {
+                        data: grads[base..base + cl].to_vec(),
+                        red: Reduce::Sum,
+                        dt,
+                    },
                 )
             };
             rs_q.push_back(PendingRs { seg_idx: si, start: cs, len: cl, handle });
@@ -463,16 +515,19 @@ impl ShardedOptimizer {
         for seg in segments.iter() {
             local_sumsq += sumsq(&seg.shard_grad) * seg.spec.norm_weight;
         }
-        let mut norm_h = Some(norm_group.allreduce_start(
+        let mut norm_h = Some(Arc::clone(&norm_group).start(
             rt,
             norm_rank,
-            vec![local_sumsq as f32],
-            ReduceDtype::F32,
+            CollectiveOp::Allreduce {
+                data: vec![local_sumsq as f32],
+                red: Reduce::Sum,
+                dt: ReduceDtype::F32,
+            },
         ));
         let mut total = 0.0f64;
         let scale = if clip {
             let t = Instant::now();
-            total = norm_h.take().unwrap().wait()[0] as f64;
+            total = norm_h.take().unwrap().wait().values()[0] as f64;
             exposed += t.elapsed().as_secs_f64();
             clip_scale(total, max_norm)
         } else {
@@ -517,7 +572,11 @@ impl ShardedOptimizer {
                     } else {
                         Vec::new()
                     };
-                    Arc::clone(&seg.spec.group).allgather_start(rt, grank, mine)
+                    Arc::clone(&seg.spec.group).start(
+                        rt,
+                        grank,
+                        CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 },
+                    )
                 };
                 ag_q.push_back(PendingAg { seg_idx: si, chunk_start: cs, slot_len: slot, handle });
                 // bounded in-flight depth keeps memory flat while chunk k
@@ -536,7 +595,7 @@ impl ShardedOptimizer {
         // reduce and gather ops; this just collects the buffered result
         if let Some(h) = norm_h {
             let t = Instant::now();
-            total = h.wait()[0] as f64;
+            total = h.wait().values()[0] as f64;
             exposed += t.elapsed().as_secs_f64();
         }
 
@@ -567,7 +626,7 @@ struct PendingRs {
     /// chunk start within the segment
     start: usize,
     len: usize,
-    handle: CommHandle<Vec<f32>>,
+    handle: CommHandle<CollectiveOut>,
 }
 
 /// Wait one reduced chunk and stage its intersection with the owned
@@ -575,7 +634,7 @@ struct PendingRs {
 /// `reduce_scatter_mean` does). Returns the seconds spent blocked.
 fn drain_reduce_chunk(segments: &mut [Segment], p: PendingRs) -> f64 {
     let t = Instant::now();
-    let summed = p.handle.wait();
+    let summed = p.handle.wait().values();
     let waited = t.elapsed().as_secs_f64();
     let seg = &mut segments[p.seg_idx];
     let (ss, sl) = seg.shard;
@@ -601,7 +660,7 @@ struct PendingAg {
     chunk_start: usize,
     /// chunk length within the slot grid
     slot_len: usize,
-    handle: CommHandle<Vec<f32>>,
+    handle: CommHandle<CollectiveOut>,
 }
 
 /// Chunk `[0, n)` into `chunk`-element ranges (the last may be short).
@@ -621,7 +680,7 @@ fn chunk_ranges(n: usize, chunk: usize) -> Vec<(usize, usize)> {
 /// chunk_start`). Returns the seconds spent blocked on the handle.
 fn drain_allgather_chunk(segments: &[Segment], params: &mut [f32], p: PendingAg) -> f64 {
     let t = Instant::now();
-    let gathered = p.handle.wait();
+    let gathered = p.handle.wait().values();
     let waited = t.elapsed().as_secs_f64();
     let seg = &segments[p.seg_idx];
     let ranges = shard_ranges(seg.spec.len, seg.spec.group.size());
@@ -734,7 +793,7 @@ mod tests {
         clip: bool,
         overlap: Option<usize>,
     ) -> (Vec<Vec<f32>>, Vec<usize>, usize) {
-        let topo = Topology { dp: 2, ep: 2, pp: 1 };
+        let topo = Topology::grid(2, 2, 1);
         let mesh = Mesh::new(topo);
         let handles: Vec<_> = (0..4)
             .map(|r| {
@@ -857,7 +916,7 @@ mod tests {
     #[test]
     fn overlap_accounts_exposed_and_hidden_comm() {
         // one overlapped run: counters populated, lane actually used
-        let topo = Topology { dp: 2, ep: 1, pp: 1 };
+        let topo = Topology::grid(2, 1, 1);
         let mesh = Mesh::new(topo);
         let handles: Vec<_> = (0..2)
             .map(|r| {
@@ -905,7 +964,7 @@ mod tests {
     /// step_tensor`] over a bf16 tensor. Returns per-rank final bf16
     /// storage bits plus rank 0's state bytes.
     fn run_bf16(ne_len: usize, steps: usize) -> (Vec<Vec<u16>>, usize) {
-        let topo = Topology { dp: 2, ep: 1, pp: 1 };
+        let topo = Topology::grid(2, 1, 1);
         let mesh = Mesh::new(topo);
         let handles: Vec<_> = (0..2)
             .map(|r| {

@@ -4,7 +4,7 @@
 //! `train()` surfaces the *root-cause* error (never a peer's panic) —
 //! plus the zero-copy contract of the `Arc`-backed parameter tensor.
 
-use optimus::comm::{CommFault, Group, ReduceDtype, Topology};
+use optimus::comm::{CollectiveOp, CommFault, Group, Reduce, ReduceDtype, Topology};
 use optimus::coordinator::{self, JobSpec};
 use optimus::ft::{classify, FailureKind, HardKillHook};
 use optimus::runtime::{Engine, Tensor};
@@ -68,12 +68,12 @@ fn dp_failure_poisons_mesh_and_surfaces_root_cause() {
 
 #[test]
 fn ep_failure_poisons_mesh_and_surfaces_root_cause() {
-    assert_root_cause_surfaces(Topology { dp: 1, ep: 2, pp: 1 }, "ep");
+    assert_root_cause_surfaces(Topology::grid(1, 2, 1), "ep");
 }
 
 #[test]
 fn pp_failure_poisons_mesh_and_surfaces_root_cause() {
-    assert_root_cause_surfaces(Topology { dp: 1, ep: 1, pp: 2 }, "pp");
+    assert_root_cause_surfaces(Topology::grid(1, 1, 2), "pp");
 }
 
 #[test]
@@ -81,7 +81,7 @@ fn pp_ep_hybrid_failure_poisons_mesh_and_surfaces_root_cause() {
     // in the hybrid topology a dead rank blocks peers on BOTH fabrics —
     // ep-group collectives and p2p stage channels; poisoning must unblock
     // both and still surface the root cause
-    assert_root_cause_surfaces(Topology { dp: 1, ep: 2, pp: 2 }, "pp_ep");
+    assert_root_cause_surfaces(Topology::grid(1, 2, 2), "pp_ep");
 }
 
 // ---- protocol auditor + watchdog (artifact-free: drive the fabric
@@ -101,14 +101,25 @@ fn divergent_program_order_is_an_order_violation_not_a_deadlock() {
         let g = Arc::clone(&g);
         std::thread::Builder::new()
             .name("hf-order-0".into())
-            .spawn(move || g.allreduce_checked(0, vec![1.0, 2.0], ReduceDtype::F32))
+            .spawn(move || {
+                g.run(
+                    0,
+                    CollectiveOp::Allreduce {
+                        data: vec![1.0, 2.0],
+                        red: Reduce::Sum,
+                        dt: ReduceDtype::F32,
+                    },
+                )
+            })
             .unwrap()
     };
     let b = {
         let g = Arc::clone(&g);
         std::thread::Builder::new()
             .name("hf-order-1".into())
-            .spawn(move || g.allgather_checked(1, vec![3.0]))
+            .spawn(move || {
+                g.run(1, CollectiveOp::Allgather { data: vec![3.0], dt: ReduceDtype::F32 })
+            })
             .unwrap()
     };
     let faults = [
@@ -152,7 +163,14 @@ fn stalled_peer_fails_with_a_per_rank_last_op_dump() {
     let g = Group::new_labeled(2, "hf-stall");
     g.set_stall_timeout(std::time::Duration::from_millis(100));
     let e = g
-        .allreduce_checked(0, vec![1.0], ReduceDtype::F32)
+        .run(
+            0,
+            CollectiveOp::Allreduce {
+                data: vec![1.0],
+                red: Reduce::Sum,
+                dt: ReduceDtype::F32,
+            },
+        )
         .unwrap_err();
     let msg = e.to_string();
     assert!(msg.contains("collective protocol violated [stall]"), "{msg}");

@@ -1,0 +1,239 @@
+//! Integration: hierarchical topology-aware collectives (`--node-size`).
+//!
+//! The contract under test: routing a collective through the three-phase
+//! hierarchy (intra-node reduce → inter-node exchange over the leaders →
+//! intra-node broadcast) is a *transport* change, never a numeric one.
+//! With integer-valued inputs — exact in bf16 and order-independent under
+//! summation — every world × node-size × wire-dtype cell must produce
+//! bit-identical results to the flat single-level path. Plus the failure
+//! semantics: a dead peer inside one node's subgroup must fail the whole
+//! family via `[stall]`/`Poisoned` in bounded wall-clock, not hang the
+//! other node's members forever.
+
+use optimus::comm::{CollectiveOp, CollectiveOut, Mesh, Parts, Reduce, ReduceDtype, Topology};
+use std::sync::Arc;
+
+/// Run one collective per rank over the world group of a `world`-rank
+/// dp-only mesh with the given node size; returns each rank's output.
+fn run_ranks(world: usize, node_size: usize, ops: Vec<CollectiveOp>) -> Vec<CollectiveOut> {
+    assert_eq!(ops.len(), world);
+    let mesh = Mesh::new(Topology::dp_only(world).with_node_size(node_size));
+    let handles: Vec<_> = ops
+        .into_iter()
+        .enumerate()
+        .map(|(r, op)| {
+            let mesh = Arc::clone(&mesh);
+            std::thread::spawn(move || mesh.world_group().run(r, op).unwrap())
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Integer-valued per-rank input: exact under bf16 rounding (|v| < 256)
+/// and order-independent under f32 summation, so flat and hierarchical
+/// reduction orders cannot diverge even in the last bit.
+fn rank_data(rank: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| ((rank * 7 + i) % 23) as f32).collect()
+}
+
+fn values(outs: Vec<CollectiveOut>) -> Vec<Vec<f32>> {
+    outs.into_iter().map(CollectiveOut::values).collect()
+}
+
+#[test]
+fn hierarchical_matches_flat_bitwise_across_the_matrix() {
+    // worlds {2,4,8} × node sizes {1,2,4} (where the node size divides
+    // the world) × wire dtypes {f32,bf16} × four reduce/gather shapes
+    for world in [2usize, 4, 8] {
+        for ns in [1usize, 2, 4] {
+            if ns > world || world % ns != 0 {
+                continue;
+            }
+            for dt in [ReduceDtype::F32, ReduceDtype::Bf16] {
+                let tag = format!("world={world} ns={ns} dt={dt:?}");
+                // len 18 exercises ragged shards at world 4 and 8; the
+                // even reduce-scatter gets 16 (divisible by every world)
+                let ops_of = |mk: &dyn Fn(&[f32]) -> CollectiveOp, len: usize| {
+                    (0..world).map(|r| mk(&rank_data(r, len))).collect::<Vec<_>>()
+                };
+                let shapes: Vec<(&str, Box<dyn Fn(&[f32]) -> CollectiveOp>, usize)> = vec![
+                    (
+                        "allreduce-sum",
+                        Box::new(move |d: &[f32]| CollectiveOp::Allreduce {
+                            data: d.to_vec(),
+                            red: Reduce::Sum,
+                            dt,
+                        }),
+                        18,
+                    ),
+                    (
+                        "allreduce-mean",
+                        Box::new(move |d: &[f32]| CollectiveOp::Allreduce {
+                            data: d.to_vec(),
+                            red: Reduce::Mean,
+                            dt,
+                        }),
+                        18,
+                    ),
+                    (
+                        "reduce-scatter-mean-ragged",
+                        Box::new(move |d: &[f32]| CollectiveOp::ReduceScatter {
+                            data: d.to_vec(),
+                            red: Reduce::Mean,
+                            dt,
+                            parts: Parts::Ragged,
+                        }),
+                        18,
+                    ),
+                    (
+                        "reduce-scatter-sum-even",
+                        Box::new(move |d: &[f32]| CollectiveOp::ReduceScatter {
+                            data: d.to_vec(),
+                            red: Reduce::Sum,
+                            dt,
+                            parts: Parts::Even,
+                        }),
+                        16,
+                    ),
+                    (
+                        "allgather",
+                        Box::new(move |d: &[f32]| CollectiveOp::Allgather {
+                            data: d.to_vec(),
+                            dt,
+                        }),
+                        18,
+                    ),
+                ];
+                for (name, mk, len) in &shapes {
+                    let flat = values(run_ranks(world, 1, ops_of(mk.as_ref(), *len)));
+                    let hier = values(run_ranks(world, ns, ops_of(mk.as_ref(), *len)));
+                    for (r, (f, h)) in flat.iter().zip(hier.iter()).enumerate() {
+                        assert_eq!(f.len(), h.len(), "{tag} {name} rank {r}");
+                        for (i, (a, b)) in f.iter().zip(h.iter()).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{tag} {name} rank {r} elem {i}: flat {a} vs hier {b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_bit_allgather_matches_flat() {
+    // the raw-bits (bf16 payload) gather: concat order must equal member
+    // order through the intra → leaders → broadcast relay
+    for world in [4usize, 8] {
+        for ns in [2usize, 4] {
+            if ns > world || world % ns != 0 {
+                continue;
+            }
+            let mk_ops = || {
+                (0..world)
+                    .map(|r| CollectiveOp::AllgatherBits {
+                        data: (0..5u16).map(|i| (r * 100) as u16 + i).collect(),
+                    })
+                    .collect::<Vec<_>>()
+            };
+            let flat: Vec<Vec<u16>> =
+                run_ranks(world, 1, mk_ops()).into_iter().map(CollectiveOut::bits).collect();
+            let hier: Vec<Vec<u16>> =
+                run_ranks(world, ns, mk_ops()).into_iter().map(CollectiveOut::bits).collect();
+            assert_eq!(flat, hier, "world={world} ns={ns}");
+        }
+    }
+}
+
+#[test]
+fn hierarchy_moves_traffic_off_the_inter_node_fabric() {
+    // same collective, flat vs node_size=2: the hierarchical mesh must
+    // report intra-node bytes (the Xe-Link legs) and strictly fewer
+    // inter-node bytes than the flat world-wide rendezvous
+    let run_with = |ns: usize| {
+        let mesh = Mesh::new(Topology::dp_only(4).with_node_size(ns));
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let mesh = Arc::clone(&mesh);
+                std::thread::spawn(move || {
+                    mesh.world_group()
+                        .run(
+                            r,
+                            CollectiveOp::Allreduce {
+                                data: rank_data(r, 64),
+                                red: Reduce::Sum,
+                                dt: ReduceDtype::F32,
+                            },
+                        )
+                        .unwrap()
+                        .values()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        mesh.traffic()
+    };
+    let flat = run_with(1);
+    let hier = run_with(2);
+    assert_eq!(flat.intra_bytes, 0, "flat mesh has no node-local groups");
+    assert!(flat.inter_bytes > 0);
+    assert!(hier.intra_bytes > 0, "hierarchy must use the intra-node legs");
+    assert!(
+        hier.inter_bytes < flat.inter_bytes,
+        "hier {} vs flat {} inter-node bytes",
+        hier.inter_bytes,
+        flat.inter_bytes
+    );
+}
+
+#[test]
+fn dead_peer_in_a_node_subgroup_fails_the_family_in_bounded_time() {
+    // rank 1 (node 0, slot 1) dies before depositing: its intra subgroup
+    // stalls, the fault must poison the parent and the *other* node's
+    // subgroup, and every surviving member must come back — with the
+    // stable `[stall]` violation or the collateral `Poisoned` — instead
+    // of riding its own watchdog or hanging forever
+    let mesh = Mesh::new(Topology::dp_only(4).with_node_size(2));
+    let g = Arc::clone(mesh.world_group());
+    g.set_stall_timeout(std::time::Duration::from_millis(150));
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = [0usize, 2, 3]
+        .into_iter()
+        .map(|r| {
+            let g = Arc::clone(&g);
+            std::thread::spawn(move || {
+                g.run(
+                    r,
+                    CollectiveOp::Allreduce {
+                        data: vec![1.0],
+                        red: Reduce::Sum,
+                        dt: ReduceDtype::F32,
+                    },
+                )
+                .unwrap_err()
+            })
+        })
+        .collect();
+    let msgs: Vec<String> =
+        handles.into_iter().map(|h| h.join().unwrap().to_string()).collect();
+    assert!(
+        t0.elapsed() < optimus::util::time_budget_secs(60),
+        "survivors took {:?} to unblock",
+        t0.elapsed()
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("collective protocol violated [stall]")),
+        "{msgs:?}"
+    );
+    for m in &msgs {
+        assert!(
+            m.contains("[stall]") || m.contains("comm group poisoned"),
+            "unexpected fault: {m}"
+        );
+    }
+}

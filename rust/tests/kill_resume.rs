@@ -98,8 +98,8 @@ fn kill_and_resume_is_bit_identical_across_topologies() {
     let steps = 9;
     for (tag, topo) in [
         ("dp", Topology::dp_only(2)),
-        ("ep", Topology { dp: 1, ep: 2, pp: 1 }),
-        ("ppep", Topology { dp: 1, ep: 2, pp: 2 }),
+        ("ep", Topology::grid(1, 2, 1)),
+        ("ppep", Topology::grid(1, 2, 2)),
     ] {
         // uninterrupted reference (no checkpointing: bit-identity also
         // proves the O(1) snapshot capture never perturbs training)
@@ -145,8 +145,8 @@ fn elastic_resume_dp2ep2_to_dp4_and_back() {
         return;
     };
     let pairs = [
-        ("to-dp4", Topology { dp: 2, ep: 2, pp: 1 }, Topology::dp_only(4)),
-        ("to-dp2ep2", Topology::dp_only(4), Topology { dp: 2, ep: 2, pp: 1 }),
+        ("to-dp4", Topology::grid(2, 2, 1), Topology::dp_only(4)),
+        ("to-dp2ep2", Topology::dp_only(4), Topology::grid(2, 2, 1)),
     ];
     for (tag, save_topo, resume_topo) in pairs {
         // produce a checkpoint at step 6 under the saving topology
@@ -211,7 +211,7 @@ fn elastic_resume_consumes_each_instance_exactly_once_data_order() {
     };
     let ds = Dataset::open(&data_dir()).unwrap();
     for (tag, save_topo, resume_topo) in [
-        ("dp2ep2-to-dp4", Topology { dp: 2, ep: 2, pp: 1 }, Topology::dp_only(4)),
+        ("dp2ep2-to-dp4", Topology::grid(2, 2, 1), Topology::dp_only(4)),
         ("dp2-to-dp4", Topology::dp_only(2), Topology::dp_only(4)),
     ] {
         let ck = ckroot(&format!("order-{tag}"));

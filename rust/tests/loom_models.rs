@@ -17,7 +17,7 @@
 #![cfg(loom)]
 
 use loom::thread;
-use optimus::comm::{CommFault, CommRuntime, Group, ReduceDtype};
+use optimus::comm::{CollectiveOp, CommFault, CommRuntime, Group, Reduce, ReduceDtype};
 use std::sync::Arc;
 
 // ---- Group rendezvous ------------------------------------------------
@@ -37,12 +37,16 @@ fn allreduce_two_ranks_two_rounds() {
                 thread::spawn(move || {
                     for round in 0..2u32 {
                         let v = g
-                            .allreduce_checked(
+                            .run(
                                 r,
-                                vec![r as f32 + round as f32],
-                                ReduceDtype::F32,
+                                CollectiveOp::Allreduce {
+                                    data: vec![r as f32 + round as f32],
+                                    red: Reduce::Sum,
+                                    dt: ReduceDtype::F32,
+                                },
                             )
-                            .unwrap();
+                            .unwrap()
+                            .values();
                         // sum over ranks of (r + round) = 1 + 2*round
                         assert_eq!(v, vec![1.0 + 2.0 * round as f32]);
                     }
@@ -66,7 +70,16 @@ fn allreduce_three_ranks_single_round() {
             .map(|r| {
                 let g = Arc::clone(&g);
                 thread::spawn(move || {
-                    g.allreduce_checked(r, vec![1.0], ReduceDtype::F32).unwrap()
+                    g.run(
+                        r,
+                        CollectiveOp::Allreduce {
+                            data: vec![1.0],
+                            red: Reduce::Sum,
+                            dt: ReduceDtype::F32,
+                        },
+                    )
+                    .unwrap()
+                    .values()
                 })
             })
             .collect();
@@ -88,7 +101,16 @@ fn peer_death_poisons_the_waiting_member() {
         let g = Group::new_labeled(2, "loom-poison");
         let survivor = {
             let g = Arc::clone(&g);
-            thread::spawn(move || g.allreduce_checked(0, vec![1.0], ReduceDtype::F32))
+            thread::spawn(move || {
+                g.run(
+                    0,
+                    CollectiveOp::Allreduce {
+                        data: vec![1.0],
+                        red: Reduce::Sum,
+                        dt: ReduceDtype::F32,
+                    },
+                )
+            })
         };
         let dead = thread::spawn(move || g.poison());
         dead.join().unwrap();
@@ -108,9 +130,20 @@ fn order_violation_fails_both_members_without_hanging() {
         let g = Group::new_labeled(2, "loom-order");
         let a = {
             let g = Arc::clone(&g);
-            thread::spawn(move || g.allreduce_checked(0, vec![1.0], ReduceDtype::F32))
+            thread::spawn(move || {
+                g.run(
+                    0,
+                    CollectiveOp::Allreduce {
+                        data: vec![1.0],
+                        red: Reduce::Sum,
+                        dt: ReduceDtype::F32,
+                    },
+                )
+            })
         };
-        let b = thread::spawn(move || g.allgather_checked(1, vec![2.0]));
+        let b = thread::spawn(move || {
+            g.run(1, CollectiveOp::Allgather { data: vec![2.0], dt: ReduceDtype::F32 })
+        });
         let ra = a.join().unwrap();
         let rb = b.join().unwrap();
         let faults = [ra.unwrap_err(), rb.unwrap_err()];

@@ -78,15 +78,29 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
     let cases = vec![
         Case {
             name: "zero axis",
-            plan: plan(Topology { dp: 0, ep: 1, pp: 1 }),
+            plan: plan(Topology::grid(0, 1, 1)),
             mm: mm.clone(),
             tag: "plan validation failed [topology]",
             fragment: "every mesh axis must be >= 1",
         },
         Case {
+            name: "node size does not divide world",
+            plan: plan(Topology::grid(2, 2, 1).with_node_size(3)),
+            mm: mm.clone(),
+            tag: "plan validation failed [topology]",
+            fragment: "node_size=3 must divide the world size",
+        },
+        Case {
+            name: "node size of zero",
+            plan: plan(Topology::dp_only(2).with_node_size(0)),
+            mm: mm.clone(),
+            tag: "plan validation failed [topology]",
+            fragment: "node_size must be >= 1",
+        },
+        Case {
             name: "dp*ep*pp != world",
             plan: {
-                let mut p = plan(Topology { dp: 2, ep: 2, pp: 1 });
+                let mut p = plan(Topology::grid(2, 2, 1));
                 p.expected_world = Some(8);
                 p
             },
@@ -97,7 +111,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
         Case {
             name: "micro_batches = 0",
             plan: {
-                let mut p = plan(Topology { dp: 1, ep: 1, pp: 2 });
+                let mut p = plan(Topology::grid(1, 1, 2));
                 p.micro_batches = 0;
                 p
             },
@@ -108,7 +122,7 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
         Case {
             name: "micro_batches > 64",
             plan: {
-                let mut p = plan(Topology { dp: 1, ep: 1, pp: 2 });
+                let mut p = plan(Topology::grid(1, 1, 2));
                 p.micro_batches = 65;
                 p
             },
@@ -166,35 +180,35 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
         },
         Case {
             name: "missing PP artifacts for degree",
-            plan: plan(Topology { dp: 1, ep: 1, pp: 4 }),
+            plan: plan(Topology::grid(1, 1, 4)),
             mm: mm.clone(),
             tag: "plan validation failed [pp-artifacts]",
             fragment: "no PP=4 stage artifacts",
         },
         Case {
             name: "missing EP artifacts for degree",
-            plan: plan(Topology { dp: 1, ep: 4, pp: 1 }),
+            plan: plan(Topology::grid(1, 4, 1)),
             mm: mm.clone(),
             tag: "plan validation failed [ep-artifacts]",
             fragment: "no EP=4 artifacts",
         },
         Case {
             name: "hybrid needs the EP degree built",
-            plan: plan(Topology { dp: 1, ep: 4, pp: 2 }),
+            plan: plan(Topology::grid(1, 4, 2)),
             mm: mm.clone(),
             tag: "plan validation failed [ep-artifacts]",
             fragment: "no EP=4 artifacts",
         },
         Case {
             name: "ep does not divide experts",
-            plan: plan(Topology { dp: 1, ep: 3, pp: 1 }),
+            plan: plan(Topology::grid(1, 3, 1)),
             mm: mm.clone(),
             tag: "plan validation failed [expert-split]",
             fragment: "ep=3 does not divide n_experts=4",
         },
         Case {
             name: "pp does not divide layers",
-            plan: plan(Topology { dp: 1, ep: 1, pp: 2 }),
+            plan: plan(Topology::grid(1, 1, 2)),
             mm: {
                 let mut m = mm.clone();
                 m.hyper.n_layers = 5;
@@ -229,9 +243,12 @@ fn every_invalid_plan_fails_with_a_stable_classifiable_error() {
     // valid plans for everything the synthetic manifest supports
     for topo in [
         Topology::dp_only(2),
-        Topology { dp: 1, ep: 2, pp: 1 },
-        Topology { dp: 1, ep: 1, pp: 2 },
-        Topology { dp: 2, ep: 2, pp: 2 },
+        Topology::grid(1, 2, 1),
+        Topology::grid(1, 1, 2),
+        Topology::grid(2, 2, 2),
+        // hierarchical collectives: any node_size dividing the world
+        Topology::grid(2, 2, 1).with_node_size(2),
+        Topology::grid(2, 2, 2).with_node_size(4),
     ] {
         plan(topo).validate(&mm, &ds).unwrap();
     }
@@ -297,7 +314,7 @@ fn batch_plan_geometry_matches_the_engines() {
     // token cursor and `optimus plans` all read this
     let mm = tiny_mm(16); // batch = 2
     let ips = |dp, ep, pp| {
-        ParallelismPlan::new(Topology { dp, ep, pp })
+        ParallelismPlan::new(Topology::grid(dp, ep, pp))
             .batch_plan(&mm)
             .instances_per_step()
     };

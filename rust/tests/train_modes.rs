@@ -42,12 +42,12 @@ fn dp_ep_pp_first_step_losses_agree() {
     };
 
     let dp = coordinator::train(&m, &base(Topology::dp_only(2), 2).build().unwrap()).unwrap();
-    let ep_spec = base(Topology { dp: 1, ep: 2, pp: 1 }, 2)
+    let ep_spec = base(Topology::grid(1, 2, 1), 2)
         .sharding(ShardingMode::Epso)
         .build()
         .unwrap();
     let ep = coordinator::train(&m, &ep_spec).unwrap();
-    let pp_spec = base(Topology { dp: 1, ep: 1, pp: 2 }, 2)
+    let pp_spec = base(Topology::grid(1, 1, 2), 2)
         .micro_batches(2)
         .schedule(Schedule::OneFOneB)
         .build()
@@ -78,7 +78,7 @@ fn every_mode_learns() {
         dp.loss.points
     );
 
-    let ep_spec = base(Topology { dp: 1, ep: 2, pp: 1 }, steps)
+    let ep_spec = base(Topology::grid(1, 2, 1), steps)
         .sharding(ShardingMode::Epso)
         .build()
         .unwrap();
@@ -89,7 +89,7 @@ fn every_mode_learns() {
         ep.loss.points
     );
 
-    let pp_spec = base(Topology { dp: 1, ep: 1, pp: 2 }, steps)
+    let pp_spec = base(Topology::grid(1, 1, 2), steps)
         .micro_batches(2)
         .build()
         .unwrap();
@@ -120,7 +120,7 @@ fn pp_ep_hybrid_matches_dp_and_learns() {
         .unwrap();
     let dp = coordinator::train(&m, &dp_spec).unwrap();
 
-    let hy_spec = base(Topology { dp: 1, ep: 2, pp: 2 }, steps)
+    let hy_spec = base(Topology::grid(1, 2, 2), steps)
         .sharding(ShardingMode::Epso)
         .schedule(Schedule::OneFOneB)
         .micro_batches(1) // one microbatch per data rank = DP's global batch
@@ -163,7 +163,7 @@ fn pp_ep_hybrid_microbatched_gpipe_stays_finite() {
     else {
         return;
     };
-    let spec = base(Topology { dp: 1, ep: 2, pp: 2 }, 4)
+    let spec = base(Topology::grid(1, 2, 2), 4)
         .schedule(Schedule::GPipe)
         .micro_batches(2)
         .build()
@@ -186,7 +186,7 @@ fn overlap_matches_serial_bitwise() {
     else {
         return;
     };
-    for topo in [Topology::dp_only(2), Topology { dp: 2, ep: 2, pp: 1 }] {
+    for topo in [Topology::dp_only(2), Topology::grid(2, 2, 1)] {
         let run = |overlap: bool| {
             let mut b = base(topo, 6).overlap(overlap).overlap_chunk(4096);
             if topo.ep > 1 {
@@ -232,7 +232,7 @@ fn ep_so_and_epso_trajectories_match() {
         return;
     };
     let mk = |mode| {
-        let spec = base(Topology { dp: 2, ep: 2, pp: 1 }, 6)
+        let spec = base(Topology::grid(2, 2, 1), 6)
             .sharding(mode)
             .bf16_grad_reduce(false) // keep reductions exactly associative-ish
             .build()
@@ -261,7 +261,7 @@ fn ep_allgather_and_all2all_agree() {
         return;
     };
     let mk = |policy| {
-        let spec = base(Topology { dp: 1, ep: 2, pp: 1 }, 3)
+        let spec = base(Topology::grid(1, 2, 1), 3)
             .ep_comm(policy)
             .bf16_grad_reduce(false)
             .build()
@@ -281,7 +281,7 @@ fn gpipe_and_1f1b_agree() {
         return;
     };
     let mk = |sched| {
-        let spec = base(Topology { dp: 1, ep: 1, pp: 2 }, 3)
+        let spec = base(Topology::grid(1, 1, 2), 3)
             .schedule(sched)
             .micro_batches(4)
             .bf16_grad_reduce(false)
@@ -357,7 +357,7 @@ fn fur_runs_and_stays_finite() {
     let Some(m) = optimus::manifest_or_skip("train_modes::fur_runs_and_stays_finite") else {
         return;
     };
-    let spec = base(Topology { dp: 1, ep: 2, pp: 1 }, 4)
+    let spec = base(Topology::grid(1, 2, 1), 4)
         .fur(true)
         .build()
         .unwrap();
