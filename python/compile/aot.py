@@ -125,6 +125,9 @@ def ep_artifact_plan(cfg, ep):
          (_spec((pe_n,)), x_all, w_all, i_all, x_all)),
         (f"ep{ep}_head_fwdbwd", model.make_ep_head_fwdbwd(cfg),
          (_spec((h + h * v,)), act, toks)),
+        # serve-only forward head: argmax predictions for the EP decoder
+        (f"ep{ep}_head_fwd", model.make_ep_head_fwd(cfg),
+         (_spec((h + h * v,)), act)),
     ]
 
 

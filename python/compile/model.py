@@ -515,3 +515,22 @@ def make_ep_head_fwdbwd(cfg):
         loss, (dp, dh) = jax.value_and_grad(obj, argnums=(0, 1))(p_flat, h)
         return loss, dh, dp
     return f
+
+
+def make_ep_head_fwd(cfg):
+    """(p_head_flat [H + H*V], h [B,S,H]) -> preds [B,S] i32.
+
+    Serve-only forward head: the same final-norm + head math as
+    ``make_ep_head_fwdbwd``'s objective, but returning the per-position
+    argmax instead of loss/cotangents — what the `optimus serve` EP
+    decoder needs to pick the next token.
+    """
+    h_, v = cfg.hidden, cfg.vocab_size
+
+    def f(p_flat, h):
+        fn = jax.lax.dynamic_slice(p_flat, (0,), (h_,))
+        head = jax.lax.dynamic_slice(p_flat, (h_,), (h_ * v,)).reshape(h_, v)
+        x = rms_norm(h, fn)
+        logits = x @ head
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return f

@@ -15,6 +15,15 @@
 //! hierarchical lane's inter-node bytes at ≤ (n−1)/n of the flat
 //! lane's (n = node size).
 //!
+//! The serving lane replays one seeded open-loop workload through
+//! `optimus serve` under continuous and static batching and writes
+//! `BENCH_SERVE.json` (p50/p99 TTFT, p50/p99 per-token latency,
+//! tokens/sec, decode steps per mode). Greedy decode makes the
+//! completion sets and decode-step counts deterministic, so those gates
+//! are unconditional: both modes must produce identical completions,
+//! leak zero KV pages, and continuous batching must finish in strictly
+//! fewer decode steps — and at strictly higher tokens/sec — than static.
+//!
 //! Baseline entries that are absent, null or zero are *record-only*: the
 //! run prints the measured value and passes, so the gate bootstraps on
 //! the first CI run and tightens once a measured baseline is committed.
@@ -28,6 +37,7 @@ use optimus::config::Manifest;
 use optimus::coordinator::{self, JobSpec, TrainReport};
 use optimus::data::{corpus, preprocess};
 use optimus::runtime::Dtype;
+use optimus::serve::{self, BatchMode, ServeConfig, TrafficConfig};
 use optimus::util::bench::Report;
 use optimus::util::json::Json;
 use std::collections::BTreeMap;
@@ -490,6 +500,173 @@ fn main() -> optimus::Result<()> {
             100.0 * (NODE_SIZE as f64 - 1.0) / NODE_SIZE as f64
         );
     }
+
+    // --- serving lane: continuous vs static batching over one seeded
+    // open-loop workload, into its own BENCH_SERVE.json. The completion
+    // sets, KV accounting and decode-step counts are deterministic, so
+    // those gates are unconditional; tokens/sec gates against the
+    // baseline like the training lanes (record-only until committed). ---
+    let serve_ck = std::env::temp_dir().join(format!(
+        "optimus-perf-gate-serve-ck-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&serve_ck);
+    let spec = JobSpec::new("mula-tiny")
+        .data_dir(data.clone())
+        .topo(Topology::dp_only(1))
+        .steps(5)
+        .warmup_steps(2)
+        .engine_pool(2)
+        .checkpoint_dir(&serve_ck)
+        .ckpt_every(3)
+        .build()?;
+    coordinator::train(&man, &spec)?;
+
+    let traffic = TrafficConfig {
+        seed: 7,
+        requests: 24,
+        rate_rps: 0.0,
+        prompt_len: (4, 8),
+        // a wide generation spread is what continuous batching exploits:
+        // static lanes idle finished slots until the longest request
+        // in the batch drains
+        gen_len: (4, 16),
+        queue_depth: 4,
+    };
+    let mut serve_table = Report::new(
+        "perf-gate — serving, continuous vs static batching (mula-tiny, 24 requests)",
+        &["mode", "tok/s", "ttft p50/p99", "per-tok p50/p99", "steps"],
+    );
+    let mut serve_out = BTreeMap::new();
+    serve_out.insert(
+        "bench".to_string(),
+        Json::Str(
+            "serve perf-gate: optimus serve continuous vs static batching on one \
+             seeded open-loop workload (mula-tiny)"
+                .to_string(),
+        ),
+    );
+    serve_out.insert("model".to_string(), Json::Str("mula-tiny".to_string()));
+    serve_out.insert("requests".to_string(), Json::Num(traffic.requests as f64));
+    let mut reports = Vec::new();
+    for (mode_name, mode) in [("continuous", BatchMode::Continuous), ("static", BatchMode::Static)]
+    {
+        let mut cfg = ServeConfig::new("mula-tiny", &serve_ck);
+        cfg.mode = mode;
+        cfg.traffic = traffic.clone();
+        let r = serve::serve(&man, &cfg)?;
+        serve_table.row(&[
+            mode_name.to_string(),
+            format!("{:.1}", r.tokens_per_sec()),
+            format!("{:.4}/{:.4}s", r.ttft.p50(), r.ttft.p99()),
+            format!("{:.4}/{:.4}s", r.per_token.p50(), r.per_token.p99()),
+            format!("{}", r.decode_steps),
+        ]);
+        serve_out.insert(
+            format!("serve_{mode_name}_tokens_per_sec"),
+            Json::Num(r.tokens_per_sec()),
+        );
+        serve_out.insert(format!("serve_{mode_name}_ttft_p50_secs"), Json::Num(r.ttft.p50()));
+        serve_out.insert(format!("serve_{mode_name}_ttft_p99_secs"), Json::Num(r.ttft.p99()));
+        serve_out.insert(
+            format!("serve_{mode_name}_per_token_p50_secs"),
+            Json::Num(r.per_token.p50()),
+        );
+        serve_out.insert(
+            format!("serve_{mode_name}_per_token_p99_secs"),
+            Json::Num(r.per_token.p99()),
+        );
+        serve_out.insert(
+            format!("serve_{mode_name}_decode_steps"),
+            Json::Num(r.decode_steps as f64),
+        );
+        serve_out.insert(
+            format!("serve_{mode_name}_tokens_generated"),
+            Json::Num(r.tokens_generated as f64),
+        );
+        if r.completions.len() != r.submitted {
+            failures.push(format!(
+                "serve {mode_name}: only {} of {} requests completed",
+                r.completions.len(),
+                r.submitted
+            ));
+        }
+        if r.kv_pages_leaked != 0 {
+            failures.push(format!(
+                "serve {mode_name}: {} KV page(s) leaked",
+                r.kv_pages_leaked
+            ));
+        }
+        let gate_key = format!("serve_{mode_name}_tokens_per_sec");
+        let tps = r.tokens_per_sec();
+        match baseline
+            .as_ref()
+            .and_then(|bl| bl.get(&gate_key))
+            .and_then(Json::as_f64)
+        {
+            Some(base) if base > 0.0 => {
+                let floor = base * (1.0 - tolerance);
+                if tps < floor {
+                    failures.push(format!(
+                        "{gate_key}: {tps:.1} tokens/sec regressed more than \
+                         {:.0}% below baseline {base:.1} (floor {floor:.1})",
+                        tolerance * 100.0
+                    ));
+                } else {
+                    println!("perf-gate: {gate_key} {tps:.1} vs baseline {base:.1} — ok");
+                }
+            }
+            _ => println!("perf-gate: {gate_key} {tps:.1} — no baseline yet, record-only"),
+        }
+        reports.push(r);
+    }
+    serve_table.print();
+    let (cont, stat) = (&reports[0], &reports[1]);
+    if cont.completions != stat.completions {
+        failures.push(
+            "serve: continuous and static batching produced different completion \
+             sets from the same seeded workload"
+                .to_string(),
+        );
+    }
+    // the continuous scheduler's whole claim, in deterministic units:
+    // refilling evicted slots mid-flight finishes the same workload in
+    // strictly fewer fixed-shape decode steps ...
+    if cont.decode_steps >= stat.decode_steps {
+        failures.push(format!(
+            "serve: continuous batching took {} decode steps vs static {} — \
+             slot refill is not raising occupancy",
+            cont.decode_steps, stat.decode_steps
+        ));
+    }
+    // ... and per-step cost is constant (fixed-shape recompute), so the
+    // step advantage must show up as wall-clock throughput too
+    if cont.tokens_per_sec() <= stat.tokens_per_sec() {
+        failures.push(format!(
+            "serve: continuous batching {:.1} tokens/sec is not above static {:.1}",
+            cont.tokens_per_sec(),
+            stat.tokens_per_sec()
+        ));
+    } else {
+        println!(
+            "perf-gate: serve continuous {:.1} tokens/sec vs static {:.1} \
+             ({} vs {} decode steps) — ok",
+            cont.tokens_per_sec(),
+            stat.tokens_per_sec(),
+            cont.decode_steps,
+            stat.decode_steps
+        );
+    }
+    serve_out.insert(
+        "serve_continuous_over_static_speedup".to_string(),
+        Json::Num(cont.tokens_per_sec() / stat.tokens_per_sec().max(1e-9)),
+    );
+    let _ = std::fs::remove_dir_all(&serve_ck);
+    let serve_path = std::env::var("PERF_GATE_SERVE_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("BENCH_SERVE.json"));
+    std::fs::write(&serve_path, Json::Obj(serve_out).to_string())?;
+    println!("perf-gate: wrote {}", serve_path.display());
 
     let path = out_path();
     std::fs::write(&path, Json::Obj(out).to_string())?;

@@ -1103,229 +1103,6 @@ impl Group {
             .map(|v| v.to_bits() as i32)
             .collect()
     }
-
-    // -- deprecated per-op methods --------------------------------------
-    //
-    // One-PR migration shims for the pre-CollectiveOp surface: each is a
-    // thin delegate to `run`/`start` with the equivalent descriptor.
-    // New code states the op; these exist so out-of-tree callers get a
-    // deprecation note instead of a hard break.
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Sum, .. }")]
-    pub fn allreduce(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Sum, dt })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .values()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Sum, .. }")]
-    pub fn allreduce_checked(
-        &self,
-        rank: usize,
-        mine: Vec<f32>,
-        dt: ReduceDtype,
-    ) -> Result<Vec<f32>, CommFault> {
-        self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Sum, dt })
-            .map(CollectiveOut::values)
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Mean, .. }")]
-    pub fn allreduce_mean(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Mean, dt })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .values()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allreduce { red: Reduce::Max, .. }")]
-    pub fn allreduce_max(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        self.run(
-            rank,
-            CollectiveOp::Allreduce { data: mine, red: Reduce::Max, dt: ReduceDtype::F32 },
-        )
-        .unwrap_or_else(|f| panic!("{f}"))
-        .values()
-    }
-
-    #[deprecated(
-        note = "use Group::run with CollectiveOp::ReduceScatter { red: Reduce::Mean, parts: Parts::Ragged, .. }"
-    )]
-    pub fn reduce_scatter_mean(
-        &self,
-        rank: usize,
-        mine: Vec<f32>,
-        dt: ReduceDtype,
-    ) -> Vec<f32> {
-        self.run(
-            rank,
-            CollectiveOp::ReduceScatter {
-                data: mine,
-                red: Reduce::Mean,
-                dt,
-                parts: Parts::Ragged,
-            },
-        )
-        .unwrap_or_else(|f| panic!("{f}"))
-        .values()
-    }
-
-    #[deprecated(
-        note = "use Group::run with CollectiveOp::ReduceScatter { red: Reduce::Sum, parts: Parts::Even, .. }"
-    )]
-    pub fn reduce_scatter_sum_even(
-        &self,
-        rank: usize,
-        mine: Vec<f32>,
-        dt: ReduceDtype,
-    ) -> Vec<f32> {
-        self.run(
-            rank,
-            CollectiveOp::ReduceScatter {
-                data: mine,
-                red: Reduce::Sum,
-                dt,
-                parts: Parts::Even,
-            },
-        )
-        .unwrap_or_else(|f| panic!("{f}"))
-        .values()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allgather")]
-    pub fn allgather(&self, rank: usize, mine: Vec<f32>) -> Vec<f32> {
-        self.run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .values()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allgather")]
-    pub fn allgather_checked(&self, rank: usize, mine: Vec<f32>) -> Result<Vec<f32>, CommFault> {
-        self.run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
-            .map(CollectiveOut::values)
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::AllgatherBits")]
-    pub fn allgather_bf16(&self, rank: usize, mine: Vec<u16>) -> Vec<u16> {
-        self.run(rank, CollectiveOp::AllgatherBits { data: mine })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .bits()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allgather and the wire dtype")]
-    pub fn allgather_values(&self, rank: usize, mine: Vec<f32>, dt: ReduceDtype) -> Vec<f32> {
-        self.run(rank, CollectiveOp::Allgather { data: mine, dt })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .values()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Allgather")]
-    pub fn allgather_shards(&self, rank: usize, mine: Vec<f32>, total: usize) -> Vec<f32> {
-        let out = self
-            .run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .values();
-        debug_assert_eq!(out.len(), total);
-        out
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::AllgatherBits")]
-    pub fn allgather_shards_bf16(&self, rank: usize, mine: Vec<u16>, total: usize) -> Vec<u16> {
-        let out = self
-            .run(rank, CollectiveOp::AllgatherBits { data: mine })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .bits();
-        debug_assert_eq!(out.len(), total);
-        out
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::All2All")]
-    pub fn all2all(&self, rank: usize, mine: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
-        self.run(rank, CollectiveOp::All2All { parts: mine })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .buckets()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Broadcast")]
-    pub fn broadcast(&self, rank: usize, root: usize, mine: Vec<f32>) -> Vec<f32> {
-        self.run(rank, CollectiveOp::Broadcast { root, data: mine })
-            .unwrap_or_else(|f| panic!("{f}"))
-            .values()
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Barrier")]
-    pub fn barrier(&self, rank: usize) {
-        self.run(rank, CollectiveOp::Barrier).unwrap_or_else(|f| panic!("{f}"));
-    }
-
-    #[deprecated(note = "use Group::run with CollectiveOp::Barrier")]
-    pub fn barrier_checked(&self, rank: usize) -> Result<(), CommFault> {
-        self.run(rank, CollectiveOp::Barrier).map(|_| ())
-    }
-
-    #[deprecated(note = "use Group::start with CollectiveOp::Allreduce")]
-    pub fn allreduce_start(
-        self: Arc<Self>,
-        rt: &CommRuntime,
-        rank: usize,
-        mine: Vec<f32>,
-        dt: ReduceDtype,
-    ) -> CommHandle<Vec<f32>> {
-        rt.submit(move || {
-            self.run(rank, CollectiveOp::Allreduce { data: mine, red: Reduce::Sum, dt })
-                .unwrap_or_else(|f| panic!("{f}"))
-                .values()
-        })
-    }
-
-    #[deprecated(note = "use Group::start with CollectiveOp::ReduceScatter")]
-    pub fn reduce_scatter_start(
-        self: Arc<Self>,
-        rt: &CommRuntime,
-        rank: usize,
-        mine: Vec<f32>,
-        dt: ReduceDtype,
-    ) -> CommHandle<Vec<f32>> {
-        rt.submit(move || {
-            self.run(
-                rank,
-                CollectiveOp::ReduceScatter {
-                    data: mine,
-                    red: Reduce::Mean,
-                    dt,
-                    parts: Parts::Ragged,
-                },
-            )
-            .unwrap_or_else(|f| panic!("{f}"))
-            .values()
-        })
-    }
-
-    #[deprecated(note = "use Group::start with CollectiveOp::Allgather")]
-    pub fn allgather_start(
-        self: Arc<Self>,
-        rt: &CommRuntime,
-        rank: usize,
-        mine: Vec<f32>,
-    ) -> CommHandle<Vec<f32>> {
-        rt.submit(move || {
-            self.run(rank, CollectiveOp::Allgather { data: mine, dt: ReduceDtype::F32 })
-                .unwrap_or_else(|f| panic!("{f}"))
-                .values()
-        })
-    }
-
-    #[deprecated(note = "use Group::start with CollectiveOp::AllgatherBits")]
-    pub fn allgather_bf16_start(
-        self: Arc<Self>,
-        rt: &CommRuntime,
-        rank: usize,
-        mine: Vec<u16>,
-    ) -> CommHandle<Vec<u16>> {
-        rt.submit(move || {
-            self.run(rank, CollectiveOp::AllgatherBits { data: mine })
-                .unwrap_or_else(|f| panic!("{f}"))
-                .bits()
-        })
-    }
 }
 
 #[cfg(test)]
@@ -1898,29 +1675,5 @@ mod tests {
             )
             .unwrap_err();
         assert!(matches!(e, CommFault::Poisoned), "{e}");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_route_through_run() {
-        // one-PR migration aids: the old per-op surface must keep its
-        // exact semantics while it carries the deprecation note
-        let g = Group::new(2);
-        let outs = spawn_ranks(2, move |r| {
-            let ar = g.allreduce(r, vec![r as f32, 1.0], ReduceDtype::F32);
-            let am = g.allreduce_mean(r, vec![4.0], ReduceDtype::F32);
-            let ag = g.allgather(r, vec![r as f32]);
-            let rs = g.reduce_scatter_sum_even(r, vec![1.0, 2.0], ReduceDtype::F32);
-            let mx = g.allreduce_max(r, vec![r as f32]);
-            g.barrier(r);
-            (ar, am, ag, rs, mx)
-        });
-        for (r, (ar, am, ag, rs, mx)) in outs.into_iter().enumerate() {
-            assert_eq!(ar, vec![1.0, 2.0]);
-            assert_eq!(am, vec![4.0]);
-            assert_eq!(ag, vec![0.0, 1.0]);
-            assert_eq!(rs, vec![if r == 0 { 2.0 } else { 4.0 }]);
-            assert_eq!(mx, vec![1.0]);
-        }
     }
 }

@@ -35,7 +35,7 @@ use crate::comm::{CollectiveOp, Group, Mesh, Reduce, ReduceDtype};
 use crate::config::ModelManifest;
 use crate::data::{BatchPlan, Dataset, Prefetcher, TokenCursor, TokenStream};
 use crate::ft::checks;
-use crate::metrics::{Curve, Scoped, StepBreakdown};
+use crate::metrics::{Curve, Histogram, Scoped, StepBreakdown};
 use crate::optim::sharded::{SegmentSpec, ShardedOptimizer};
 use crate::runtime::{Engine, Tensor};
 use crate::Result;
@@ -76,6 +76,9 @@ pub struct RankCtx {
     pub resume: Option<Arc<ResumeState>>,
     /// per-rank background batch producer (rank-thread-local)
     prefetch: RefCell<PrefetchSlot>,
+    /// per-fetch prefetch-pop stall samples (rank-thread-local); merged
+    /// into the report's world-wide `data_wait_hist` after the step loop
+    data_wait_hist: RefCell<Histogram>,
 }
 
 impl RankCtx {
@@ -130,8 +133,16 @@ impl RankCtx {
             }
             let mut retire = None;
             if let PrefetchSlot::Running(p) = &mut *slot {
+                let wait0 = breakdown.data_wait_secs;
                 match p.fetch(step, data_rank, mb, &mut breakdown.data_wait_secs) {
-                    Some(batch) => toks = Some(batch?),
+                    Some(batch) => {
+                        // one stall sample per queue pop: the delta the
+                        // producer just added to the additive sum
+                        self.data_wait_hist
+                            .borrow_mut()
+                            .record(breakdown.data_wait_secs - wait0);
+                        toks = Some(batch?);
+                    }
                     // out-of-pattern consumer: retire the producer (its
                     // hidden time survives in Off) and read
                     // synchronously for the rest of the run
@@ -494,6 +505,7 @@ pub fn run<T: RankTrainer + 'static>(
                 ckpt: ckpt.clone(),
                 resume: resume.clone(),
                 prefetch: RefCell::new(PrefetchSlot::Idle),
+                data_wait_hist: RefCell::new(Histogram::new()),
             };
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
@@ -712,6 +724,27 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
     // folded once after the step loop (mirrors the optimizer split)
     breakdown.data_prefetch_secs += ctx.data_prefetch_secs();
 
+    // world-wide data-wait distribution: histogram state is nothing but
+    // bucket counts + a sum, so one Sum allreduce of 65 floats gives every
+    // rank the identical global distribution. Every rank reaches this
+    // point right after its step loop, so the op slots into the same
+    // protocol position world-wide (the comm auditor sees one more
+    // uniform round, never a divergent order).
+    let data_wait_hist = {
+        let local = ctx.data_wait_hist.borrow();
+        let mut wire = local.counts_f32_wire();
+        wire.push(local.sum() as f32);
+        drop(local);
+        let merged = world
+            .run(
+                rank,
+                CollectiveOp::Allreduce { data: wire, red: Reduce::Sum, dt: ReduceDtype::F32 },
+            )
+            .unwrap_or_else(|f| panic!("{f}"))
+            .values();
+        Histogram::from_wire(&merged[..64], merged[64] as f64)
+    };
+
     match trainer.finish(&ctx)? {
         RankFinish::Report(parts) => {
             let mut parts = *parts;
@@ -741,6 +774,7 @@ fn rank_loop<T: RankTrainer>(ctx: RankCtx, shared: &Arc<T::Shared>) -> Result<Ra
                 loss: loss_curve,
                 grad_norm: gn_curve,
                 breakdown,
+                data_wait_hist,
                 step_secs,
                 tokens_per_step: ctx.batches.instances_per_step() * ctx.mm.hyper.seq,
                 instances_consumed,

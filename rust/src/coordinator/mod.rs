@@ -38,6 +38,9 @@ mod train_pp;
 mod train_pp_ep;
 
 pub use ep_layout::EpLayout;
+// the serving engine's expert-parallel decoder reuses the trainer's
+// artifact table and per-step parameter slicing verbatim
+pub(crate) use train_ep::{Arts as EpArts, ParamSlices as EpParamSlices};
 #[allow(deprecated)]
 pub use jobspec::TrainOptions;
 pub use jobspec::{DataTrace, JobSpec, JobSpecBuilder};
@@ -46,7 +49,7 @@ pub use plan::{DEFAULT_OVERLAP_CHUNK, EngineKind, ParallelismPlan, StagePlan};
 use crate::comm::Mesh;
 use crate::config::{Manifest, ModelManifest, RunConfig};
 use crate::data::Dataset;
-use crate::metrics::{Curve, StepBreakdown};
+use crate::metrics::{Curve, Histogram, StepBreakdown};
 use crate::runtime::{Engine, Tensor};
 use crate::util::prng::Prng;
 use crate::Result;
@@ -78,6 +81,12 @@ pub struct TrainReport {
     pub loss: Curve,
     pub grad_norm: Curve,
     pub breakdown: StepBreakdown,
+    /// per-pop distribution of the prefetch-queue stall whose *sum* is
+    /// `breakdown.data_wait_secs`: merged across every rank (one Sum
+    /// allreduce of the bucket counts), so p99 tail stalls are visible
+    /// even when the additive total looks healthy. Empty when prefetch
+    /// is off.
+    pub data_wait_hist: Histogram,
     pub step_secs: Vec<f64>,
     pub tokens_per_step: usize,
     /// total instances consumed through the end of the step budget,

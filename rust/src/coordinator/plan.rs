@@ -342,6 +342,39 @@ impl ParallelismPlan {
         Ok(())
     }
 
+    /// Serving-plan preflight (`optimus serve`). The decode engine reuses
+    /// the training placement machinery — the ordinary spec+model tables
+    /// run first — but supports only the ep-only / dp×ep slice of it and
+    /// has no optimizer, so the training-only knobs must be quiescent.
+    /// Violations fail with the stable `plan validation failed [serve]`
+    /// string before any rank thread spawns.
+    pub fn validate_serve(&self, mm: &ModelManifest) -> Result<()> {
+        self.validate_model(mm)?;
+        let fail = |msg: String| -> Result<()> {
+            Err(checks::err(checks::PLAN, "serve", msg))
+        };
+        if self.topo.pp != 1 {
+            return fail(format!(
+                "serving runs ep-only or dp×ep placements; pp={} has no \
+                 decode engine",
+                self.topo.pp
+            ));
+        }
+        if self.overlap {
+            return fail(
+                "serving has no optimizer step to overlap; drop --overlap".to_string(),
+            );
+        }
+        if self.dtype != Dtype::F32 {
+            return fail(
+                "the decode engine computes in f32 (checkpoint dtype is \
+                 checked separately at load); use an f32 serving plan"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+
     /// Full preflight: every configuration invariant, checked in one
     /// table-driven pass with stable error strings, before any engine
     /// executor or rank thread exists. (The run-demand `[data]` budget

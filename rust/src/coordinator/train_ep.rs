@@ -47,19 +47,21 @@ use crate::Result;
 use std::sync::Arc;
 
 /// Per-layer EP artifact paths (shared with the PP×EP hybrid engine,
-/// which runs the same artifacts per pipeline stage).
-pub(super) struct Arts {
-    pub(super) embed_fwd: std::path::PathBuf,
-    pub(super) embed_bwd: std::path::PathBuf,
-    pub(super) pre_fwd: std::path::PathBuf,
-    pub(super) pre_bwd: std::path::PathBuf,
-    pub(super) expert_fwd: std::path::PathBuf,
-    pub(super) expert_bwd: std::path::PathBuf,
-    pub(super) head: std::path::PathBuf,
+/// which runs the same artifacts per pipeline stage, and with the serving
+/// engine's [`crate::serve`] expert-parallel decoder, which runs the
+/// forward half of them).
+pub(crate) struct Arts {
+    pub(crate) embed_fwd: std::path::PathBuf,
+    pub(crate) embed_bwd: std::path::PathBuf,
+    pub(crate) pre_fwd: std::path::PathBuf,
+    pub(crate) pre_bwd: std::path::PathBuf,
+    pub(crate) expert_fwd: std::path::PathBuf,
+    pub(crate) expert_bwd: std::path::PathBuf,
+    pub(crate) head: std::path::PathBuf,
 }
 
 impl Arts {
-    pub(super) fn load(mm: &ModelManifest, ep: usize) -> Result<Arts> {
+    pub(crate) fn load(mm: &ModelManifest, ep: usize) -> Result<Arts> {
         let p = |n: &str| mm.artifact_path(&format!("ep{ep}_{n}"));
         Ok(Arts {
             embed_fwd: p("embed_fwd")?,
@@ -76,15 +78,15 @@ impl Arts {
 /// Per-step parameter slices (shared by fwd and bwd — params are constant
 /// within a step). Cloning one of these into an exec call is an Arc bump.
 /// Layer slices are indexed by the layout's *local* layer index.
-pub(super) struct ParamSlices {
-    pub(super) emb: Tensor,
-    pub(super) head: Tensor,
-    pub(super) layer_ne: Vec<Tensor>,
-    pub(super) layer_e: Vec<Tensor>,
+pub(crate) struct ParamSlices {
+    pub(crate) emb: Tensor,
+    pub(crate) head: Tensor,
+    pub(crate) layer_ne: Vec<Tensor>,
+    pub(crate) layer_e: Vec<Tensor>,
 }
 
 impl ParamSlices {
-    pub(super) fn new(params: &[f32], layout: &EpLayout) -> ParamSlices {
+    pub(crate) fn new(params: &[f32], layout: &EpLayout) -> ParamSlices {
         let t = |r: &std::ops::Range<usize>| Tensor::f32(params[r.clone()].to_vec(), vec![r.len()]);
         ParamSlices {
             emb: t(&layout.emb),

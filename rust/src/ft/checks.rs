@@ -34,6 +34,11 @@ pub const RESUME: &str = "checkpoint resume failed";
 /// `stall` stays relaunchable — the dominant cause is a dead peer.
 pub const PROTOCOL: &str = "collective protocol violated";
 
+/// Domain prefix for serving-engine startup failures
+/// ([`crate::serve`]). Non-relaunchable: the serve configuration or the
+/// checkpoint it points at is wrong, and a retry replays both.
+pub const SERVE: &str = "serve startup failed";
+
 /// One registered check: a `(domain, name)` pair whose formatted tag is
 /// `"<domain> [<name>]"`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,6 +68,12 @@ pub const CHECKS: &[CheckId] = &[
     // plan validation (data checks)
     CheckId { domain: PLAN, name: "data-context" },
     CheckId { domain: PLAN, name: "data" },
+    // plan validation (serving plans — coordinator/plan.rs::validate_serve)
+    CheckId { domain: PLAN, name: "serve" },
+    // serving engine startup (serve/mod.rs)
+    CheckId { domain: SERVE, name: "plan" },
+    CheckId { domain: SERVE, name: "kv-oom" },
+    CheckId { domain: SERVE, name: "ckpt" },
     // checkpoint resume (ckpt/reshard.rs + ckpt/checkpointer.rs)
     CheckId { domain: RESUME, name: "manifest" },
     CheckId { domain: RESUME, name: "checksum" },

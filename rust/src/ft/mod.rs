@@ -110,6 +110,7 @@ pub fn classify(err: &anyhow::Error) -> FailureKind {
     if s.contains(checks::PLAN)
         || s.contains("parallelism plan mismatch")
         || s.contains(checks::RESUME)
+        || s.contains(checks::SERVE)
         || s.contains("unknown model config")
     {
         FailureKind::Config
@@ -356,6 +357,11 @@ mod tests {
             classify(&anyhow!(
                 "checkpoint resume failed [model]: checkpoint was written for `x`"
             )),
+            FailureKind::Config
+        );
+        // serve startup preflights are deterministic config errors too
+        assert_eq!(
+            classify(&anyhow!("serve startup failed [kv-oom]: pool too small")),
             FailureKind::Config
         );
         assert_eq!(parse_rank(&anyhow!("rank 7: x")), Some(7));

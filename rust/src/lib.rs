@@ -26,6 +26,9 @@
 //! - [`ckpt`]     — sharded `TrainState`/`Checkpointer` with async
 //!   zero-copy snapshots, two-phase commit, topology-elastic reshard (§4)
 //! - [`ft`]       — hard/soft node-failure handling with buffer nodes (§4)
+//! - [`serve`]    — `optimus serve`: expert-parallel inference on the
+//!   training mesh (continuous batching, paged KV cache, open-loop
+//!   traffic generator)
 //! - [`cluster`]  — Aurora analytic performance model (Fig 4b)
 //! - [`eval`]     — synthetic benchmark suite (Table 2, Figs 2-3)
 //! - [`metrics`]  — step timers, loss logs, CSV emitters
@@ -45,6 +48,7 @@ pub mod ft;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type.

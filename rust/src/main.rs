@@ -18,6 +18,14 @@
 //!         [--overlap] [--overlap-chunk N]
 //!         [--ckpt-dir DIR --ckpt-every N --ckpt-sync --ckpt-keep K]
 //!   eval --model M              run the synthetic benchmark suite
+//!   serve --ckpt-dir DIR [--model M --dp N --ep N] [--static]
+//!         [--requests N --rate RPS --seed N] [--prompt-min N --prompt-max N]
+//!         [--gen-min N --gen-max N --queue-depth N]
+//!         [--kv-pages N --kv-page-size N] [--pool N] [--json FILE]
+//!         expert-parallel inference from a training checkpoint: continuous
+//!         batching (or --static for the baseline), paged KV cache, seeded
+//!         open-loop Poisson traffic; exits non-zero if any request of the
+//!         bounded run is lost or any KV page leaks
 //!   plans --world N [--model M] enumerate dp×ep×pp placements of a world
 //!         [--steps N --data DIR] (with --model: instances/tokens per
 //!         step per placement; with --data too: epochs the run consumes)
@@ -53,10 +61,12 @@ use optimus::coordinator::{self, ep::EpComm, JobSpec, ParallelismPlan};
 use optimus::data::{corpus, preprocess};
 use optimus::eval;
 use optimus::optim::ShardingMode;
+use optimus::comm::Topology;
 use optimus::runtime::{Dtype, Engine};
+use optimus::serve::{BatchMode, ServeConfig, TrafficConfig};
 use optimus::util::cli::Args;
 
-const USAGE: &str = "usage: optimus <models|preprocess|train|eval|plans|ckpt|scaling|predict|lint> [flags]\n\
+const USAGE: &str = "usage: optimus <models|preprocess|train|eval|serve|plans|ckpt|scaling|predict|lint> [flags]\n\
                      see rust/src/main.rs header for flags";
 
 const TRAIN_FLAGS: &[&str] = &[
@@ -69,6 +79,11 @@ const CKPT_FLAGS: &[&str] = &[];
 const PREPROCESS_FLAGS: &[&str] =
     &["out", "seed", "files", "docs", "context", "shuffle-seed", "per-shard"];
 const EVAL_FLAGS: &[&str] = &["model", "seed", "cases"];
+const SERVE_FLAGS: &[&str] = &[
+    "model", "ckpt-dir", "dp", "ep", "static", "requests", "rate", "seed", "prompt-min",
+    "prompt-max", "gen-min", "gen-max", "queue-depth", "kv-pages", "kv-page-size", "pool",
+    "json",
+];
 const PLANS_FLAGS: &[&str] = &["world", "model", "steps", "data", "dtype"];
 const SCALING_FLAGS: &[&str] = &["fur", "model"];
 const PREDICT_FLAGS: &[&str] = &["model", "fur"];
@@ -81,6 +96,7 @@ fn main() -> optimus::Result<()> {
         Some("preprocess") => do_preprocess(&args),
         Some("train") => do_train(&args),
         Some("eval") => do_eval(&args),
+        Some("serve") => do_serve(&args),
         Some("plans") => do_plans(&args),
         Some("ckpt") => do_ckpt(&args),
         Some("scaling") => do_scaling(&args),
@@ -330,6 +346,101 @@ fn do_eval(args: &Args) -> optimus::Result<()> {
         println!("{t:<14} {s:6.1}");
     }
     println!("{:<14} {:6.1}", "average", eval::average(&scores));
+    Ok(())
+}
+
+/// `optimus serve` — expert-parallel inference from a training
+/// checkpoint: load + reassemble the newest committed checkpoint, slice
+/// it onto a dp×ep serving mesh, and replay a bounded seeded open-loop
+/// workload through the continuous-batching scheduler and paged KV
+/// cache. The exit code enforces the bounded-run contract — every
+/// offered request completed and zero KV pages leaked — which is what
+/// CI's serve-smoke job runs.
+fn do_serve(args: &Args) -> optimus::Result<()> {
+    check(args, SERVE_FLAGS)?;
+    let model = args.str_or("model", "mula-tiny");
+    let ckpt = args
+        .get("ckpt-dir")
+        .ok_or_else(|| anyhow!("serve needs --ckpt-dir DIR (a training run's checkpoint root)"))?;
+    let man = Manifest::load(&optimus::artifacts_dir())?;
+    let mut cfg = ServeConfig::new(&model, std::path::Path::new(ckpt));
+    cfg.topo = Topology::grid(args.usize_or("dp", 1), args.usize_or("ep", 1), 1);
+    cfg.mode =
+        if args.bool_or("static", false) { BatchMode::Static } else { BatchMode::Continuous };
+    cfg.kv_pages = args.usize_or("kv-pages", 16);
+    cfg.kv_page_size = args.usize_or("kv-page-size", 8);
+    cfg.engine_pool = args.usize_or("pool", 0);
+    cfg.traffic = TrafficConfig {
+        seed: args.usize_or("seed", 0) as u64,
+        requests: args.usize_or("requests", 16),
+        rate_rps: args.f64_or("rate", 0.0),
+        prompt_len: (args.usize_or("prompt-min", 4), args.usize_or("prompt-max", 8)),
+        gen_len: (args.usize_or("gen-min", 4), args.usize_or("gen-max", 12)),
+        queue_depth: args.usize_or("queue-depth", 4),
+    };
+    let r = optimus::serve::serve(&man, &cfg)?;
+    println!(
+        "served {}/{} requests from the step-{} checkpoint on dp{}×ep{} ({})",
+        r.completions.len(),
+        r.submitted,
+        r.resumed_step,
+        cfg.topo.dp,
+        cfg.topo.ep,
+        match cfg.mode {
+            BatchMode::Continuous => "continuous batching",
+            BatchMode::Static => "static batching",
+        },
+    );
+    println!(
+        "ttft p50 {:.4}s p99 {:.4}s; per-token p50 {:.4}s p99 {:.4}s",
+        r.ttft.p50(),
+        r.ttft.p99(),
+        r.per_token.p50(),
+        r.per_token.p99(),
+    );
+    println!(
+        "{} tokens in {} decode steps over {:.3}s — {:.0} tok/s",
+        r.tokens_generated,
+        r.decode_steps,
+        r.wall_secs,
+        r.tokens_per_sec(),
+    );
+    println!(
+        "kv: peak {} of {} pages, {} leaked",
+        r.kv_pages_peak, r.kv_pages_total, r.kv_pages_leaked
+    );
+    if let Some(path) = args.get("json") {
+        let js = format!(
+            "{{\n  \"completed\": {},\n  \"submitted\": {},\n  \"ttft_p50_secs\": {},\n  \
+             \"ttft_p99_secs\": {},\n  \"per_token_p50_secs\": {},\n  \
+             \"per_token_p99_secs\": {},\n  \"tokens_per_sec\": {},\n  \
+             \"decode_steps\": {},\n  \"kv_pages_peak\": {},\n  \"kv_pages_leaked\": {}\n}}\n",
+            r.completions.len(),
+            r.submitted,
+            r.ttft.p50(),
+            r.ttft.p99(),
+            r.per_token.p50(),
+            r.per_token.p99(),
+            r.tokens_per_sec(),
+            r.decode_steps,
+            r.kv_pages_peak,
+            r.kv_pages_leaked,
+        );
+        std::fs::write(path, js).map_err(|e| anyhow!("cannot write --json `{path}`: {e}"))?;
+    }
+    if r.completions.len() != r.submitted {
+        return Err(anyhow!(
+            "incomplete serve run: {} of {} requests completed",
+            r.completions.len(),
+            r.submitted
+        ));
+    }
+    if r.kv_pages_leaked != 0 {
+        return Err(anyhow!(
+            "kv page leak: {} page(s) still held after every lane drained",
+            r.kv_pages_leaked
+        ));
+    }
     Ok(())
 }
 

@@ -109,6 +109,127 @@ impl StepBreakdown {
     }
 }
 
+/// Log-bucketed latency/duration histogram, mergeable across ranks.
+///
+/// Buckets are powers of two over seconds: bucket `i` holds samples in
+/// `[2^(i-32), 2^(i-31))`, so the 64 buckets span ~2.3e-10 s … ~4.3e9 s —
+/// every latency this codebase can observe. State is nothing but counts
+/// and a sum, so a cross-rank merge is pure addition (the serving engine
+/// and the harness ship the bucket counts through one `Allreduce` /
+/// `Reduce::Sum` and every rank ends up with the identical global
+/// distribution).
+///
+/// Quantiles are read off the bucket boundaries (upper edge of the bucket
+/// containing the q-th sample): at most one power of two of relative
+/// error, which is what a p50/p99 report needs — not what a calibration
+/// oracle needs.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// per-bucket sample counts; index = log2(seconds) + 32, clamped
+    counts: [u64; 64],
+    /// total samples (== counts.iter().sum(), kept for O(1) reads)
+    count: u64,
+    /// exact sum of recorded values — `mean()` does not pay the bucket
+    /// quantization
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { counts: [0; 64], count: 0, sum: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    fn bucket(secs: f64) -> usize {
+        if !(secs > 0.0) {
+            return 0; // zero, negative and NaN all land in the floor bucket
+        }
+        let i = secs.log2().floor() as i64 + 32;
+        i.clamp(0, 63) as usize
+    }
+
+    /// Record one sample (seconds, or any nonnegative quantity).
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket(secs)] += 1;
+        self.count += 1;
+        self.sum += secs.max(0.0);
+    }
+
+    /// Fold another histogram in — the cross-rank merge.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Upper edge of the bucket holding the `q`-quantile sample
+    /// (`0.0 < q <= 1.0`); 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 2f64.powi(i as i32 - 31);
+            }
+        }
+        2f64.powi(32) // unreachable: counts sum to count
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Bucket counts as f32 — the wire format for a `Reduce::Sum` merge
+    /// (collectives carry f32 payloads). Counts stay exact through f32 up
+    /// to 2^24 samples per bucket — orders of magnitude past any run here.
+    pub fn counts_f32_wire(&self) -> Vec<f32> {
+        self.counts.iter().map(|&c| c as f32).collect()
+    }
+
+    /// Rebuild from a summed wire (inverse of [`Histogram::counts_f32_wire`]
+    /// after the allreduce) plus the summed scalar `sum`.
+    pub fn from_wire(wire: &[f32], sum: f64) -> Histogram {
+        let mut h = Histogram::default();
+        for (i, &c) in wire.iter().take(64).enumerate() {
+            let c = c.max(0.0).round() as u64;
+            h.counts[i] = c;
+            h.count += c;
+        }
+        h.sum = sum;
+        h
+    }
+}
+
 /// Scoped timer: `let _t = Scoped::new(&mut acc);`
 pub struct Scoped<'a> {
     start: Instant,
@@ -205,6 +326,63 @@ mod tests {
         assert_eq!(b.snapshot_secs, 0.5);
         assert_eq!(b.snapshot_write_secs, 2.5);
         assert_eq!(b.total(), 8.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_bound_samples() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms .. 1s
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+        // bucket-edge quantiles over-estimate by at most one power of two
+        let p50 = h.p50();
+        assert!((0.5..=1.0).contains(&p50), "{p50}");
+        let p99 = h.p99();
+        assert!((0.99..=2.0).contains(&p99), "{p99}");
+        assert!(h.quantile(1.0) >= 1.0);
+        // zero / negative / NaN samples land in the floor bucket, not a panic
+        let mut z = Histogram::new();
+        z.record(0.0);
+        z.record(-1.0);
+        z.record(f64::NAN);
+        assert_eq!(z.count(), 3);
+        assert_eq!(z.sum(), 0.0);
+        assert!(z.p99() > 0.0); // floor bucket's upper edge
+        // empty histogram reads as all-zero
+        let e = Histogram::new();
+        assert_eq!((e.count(), e.mean(), e.p50(), e.p99()), (0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn histogram_merge_matches_union_and_wire_roundtrips() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut u = Histogram::new();
+        for i in 0..200 {
+            let v = 1e-4 * (1.07f64).powi(i % 97);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            u.record(v);
+        }
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), u.count());
+        assert!((m.sum() - u.sum()).abs() < 1e-12);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(m.quantile(q), u.quantile(q), "q={q}");
+        }
+        // the allreduce wire: counts out, summed counts back in
+        let wire = m.counts_f32_wire();
+        assert_eq!(wire.len(), 64);
+        let r = Histogram::from_wire(&wire, m.sum());
+        assert_eq!(r.count(), m.count());
+        assert_eq!(r.p50(), m.p50());
+        assert_eq!(r.p99(), m.p99());
     }
 
     #[test]

@@ -205,6 +205,16 @@ impl Tensor {
         }
     }
 
+    /// Copy-on-write mutable access to i32 storage (same COW discipline
+    /// as [`Tensor::as_f32_mut`]) — what the serving KV pages use to
+    /// append tokens in place while holding free-listed `Arc` blocks.
+    pub fn as_i32_mut(&mut self) -> Result<&mut Vec<i32>> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(Arc::make_mut(data)),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
     /// Take the values as f32: by move when a uniquely owned f32 buffer,
     /// by copy otherwise; bf16 storage decodes (exact).
     pub fn into_f32(self) -> Result<Vec<f32>> {

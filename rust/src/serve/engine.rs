@@ -1,0 +1,220 @@
+//! Decode engines: one batched greedy-decode step over token prefixes.
+//!
+//! The serving engine reuses the training artifacts unchanged, so decode
+//! is windowed full recompute: every step re-runs the forward pass over
+//! each request's whole prefix (EOS-padded to the artifact's fixed
+//! `[batch, seq+1]` shape) and takes the argmax prediction at the
+//! prefix's last position as the next token. Two engines cover the two
+//! serving placements:
+//!
+//! * [`FusedDecoder`] (ep = 1) — the fused `eval_step` artifact with the
+//!   full parameter vector resident per lane; its `preds` output is
+//!   already the per-position argmax.
+//! * [`EpDecoder`] (ep > 1) — the per-layer EP artifacts, running exactly
+//!   the trainer's forward chain (`embed_fwd` → per layer `pre_fwd` →
+//!   Stage-1 allgather exchange → `expert_fwd` → reduce-scatter →
+//!   residual) and finishing with the serve-only `ep{ep}_head_fwd`
+//!   artifact, which maps the final hidden states straight to argmax
+//!   predictions (the training `head_fwdbwd` returns loss + cotangents,
+//!   not predictions). Every rank of an EP group must call [`Decoder::step`]
+//!   in lockstep — the scheduler guarantees that.
+//!
+//! Greedy argmax over a causal model makes each row's output independent
+//! of whatever else shares the batch, so completions are a function of
+//! (checkpoint, prompt) alone — the property the determinism tests and
+//! the continuous-vs-static comparison lean on.
+
+use crate::comm::{CollectiveOp, Group, Parts, Reduce, ReduceDtype};
+use crate::config::ModelManifest;
+use crate::coordinator::ep::exchange_allgather;
+use crate::coordinator::{EpArts, EpLayout, EpParamSlices};
+use crate::data::tokenizer::EOS;
+use crate::runtime::{Engine, Tensor};
+use crate::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub(crate) enum Decoder {
+    Fused(FusedDecoder),
+    Ep(EpDecoder),
+}
+
+impl Decoder {
+    /// One decode step: `rows[i]` is slot `i`'s token prefix (empty for
+    /// an idle slot). Returns the next token per slot (EOS for idle
+    /// slots). `rows.len()` must equal the artifact batch and every
+    /// prefix must fit the sequence window.
+    pub(crate) fn step(&self, engine: &Engine, rows: &[Vec<i32>]) -> Result<Vec<i32>> {
+        match self {
+            Decoder::Fused(d) => d.step(engine, rows),
+            Decoder::Ep(d) => d.step(engine, rows),
+        }
+    }
+}
+
+/// Pack prefixes into the artifact's fixed `[b, s+1]` token block,
+/// EOS-padded — the same packing `eval::run_suite` uses.
+fn pack(rows: &[Vec<i32>], b: usize, s: usize) -> Tensor {
+    debug_assert_eq!(rows.len(), b);
+    let mut toks = vec![EOS as i32; b * (s + 1)];
+    for (r, row) in rows.iter().enumerate() {
+        debug_assert!(row.len() <= s, "prefix of {} exceeds the {s}-token window", row.len());
+        toks[r * (s + 1)..r * (s + 1) + row.len()].copy_from_slice(row);
+    }
+    Tensor::i32(toks, vec![b, s + 1])
+}
+
+/// Pick each row's next token out of the `[b, s]` argmax grid: a prefix
+/// of `L` tokens is continued by the prediction at position `L - 1`.
+fn next_tokens(preds: &[i32], rows: &[Vec<i32>], s: usize) -> Vec<i32> {
+    rows.iter()
+        .enumerate()
+        .map(|(r, row)| {
+            if row.is_empty() {
+                EOS as i32
+            } else {
+                preds[r * s + row.len() - 1]
+            }
+        })
+        .collect()
+}
+
+pub(crate) struct FusedDecoder {
+    key: String,
+    art: PathBuf,
+    /// full parameter vector — `Arc`-backed, shared across lanes
+    params: Tensor,
+    b: usize,
+    s: usize,
+}
+
+impl FusedDecoder {
+    pub(crate) fn new(mm: &ModelManifest, params: Tensor) -> Result<FusedDecoder> {
+        Ok(FusedDecoder {
+            key: format!("{}:eval_step", mm.name),
+            art: mm.artifact_path("eval_step")?,
+            params,
+            b: mm.hyper.batch,
+            s: mm.hyper.seq,
+        })
+    }
+
+    fn step(&self, engine: &Engine, rows: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let toks = pack(rows, self.b, self.s);
+        let outs = engine.exec(&self.key, self.art.clone(), vec![self.params.clone(), toks])?;
+        // eval_step returns (nll [b,s], preds [b,s]); serving only wants
+        // the argmax grid
+        Ok(next_tokens(outs[1].as_i32()?, rows, self.s))
+    }
+}
+
+pub(crate) struct EpDecoder {
+    /// exec-cache key prefix (`<model>:<artifact>`)
+    name: String,
+    arts: EpArts,
+    /// serve-only forward head: `(p_head, h) -> preds [b,s] i32`
+    head_fwd: PathBuf,
+    ps: EpParamSlices,
+    group: Arc<Group>,
+    ep: usize,
+    ep_rank: usize,
+    /// local experts per rank — the index-shift stride
+    nr: usize,
+    n_layers: usize,
+    b: usize,
+    s: usize,
+    hid: usize,
+    k: usize,
+}
+
+impl EpDecoder {
+    pub(crate) fn new(
+        mm: &ModelManifest,
+        ep: usize,
+        ep_rank: usize,
+        full_params: &[f32],
+        group: Arc<Group>,
+    ) -> Result<EpDecoder> {
+        let h = &mm.hyper;
+        let layout = EpLayout::new(mm, ep, ep_rank);
+        let local = layout.extract(full_params);
+        Ok(EpDecoder {
+            name: mm.name.clone(),
+            arts: EpArts::load(mm, ep)?,
+            head_fwd: mm.artifact_path(&format!("ep{ep}_head_fwd"))?,
+            ps: EpParamSlices::new(&local, &layout),
+            group,
+            ep,
+            ep_rank,
+            nr: layout.n_local_experts,
+            n_layers: h.n_layers,
+            b: h.batch,
+            s: h.seq,
+            hid: h.hidden,
+            k: h.top_k,
+        })
+    }
+
+    fn step(&self, engine: &Engine, rows: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let (b, s, hid, k) = (self.b, self.s, self.hid, self.k);
+        let t_local = b * s;
+        let t_all = self.ep * t_local;
+        // serving always computes in f32 (`validate_serve` pins the plan
+        // dtype), so the exchange wire is f32 too
+        let wire = ReduceDtype::F32;
+        let exec = |key: &str, path: &std::path::Path, inputs: Vec<Tensor>| {
+            engine.exec(&format!("{}:{key}", self.name), path.to_path_buf(), inputs)
+        };
+
+        let tokens_t = pack(rows, b, s);
+        // forward chain, identical to the trainer's minus stashes/backward
+        let mut hcur =
+            exec("embed_fwd", &self.arts.embed_fwd, vec![self.ps.emb.clone(), tokens_t])?
+                .remove(0);
+        for l in 0..self.n_layers {
+            let outs = exec("pre_fwd", &self.arts.pre_fwd, vec![
+                self.ps.layer_ne[l].clone(),
+                hcur,
+            ])?;
+            let mut it = outs.into_iter();
+            let a = it.next().unwrap();
+            let x2d = it.next().unwrap().into_f32()?;
+            let w2d = it.next().unwrap().into_f32()?;
+            let idx = it.next().unwrap().as_i32()?.to_vec();
+            // ---- Stage 1: token exchange across the EP group ----
+            let (x_all, w_all, idx_all) =
+                exchange_allgather(&self.group, self.ep_rank, x2d, w2d, &idx, wire);
+            let idx_shift: Vec<i32> =
+                idx_all.iter().map(|&v| v - (self.ep_rank * self.nr) as i32).collect();
+            let partial = exec("expert_fwd", &self.arts.expert_fwd, vec![
+                self.ps.layer_e[l].clone(),
+                Tensor::f32(x_all, vec![t_all, hid]),
+                Tensor::f32(w_all, vec![t_all, k]),
+                Tensor::i32(idx_shift, vec![t_all, k]),
+            ])?
+            .remove(0)
+            .into_f32()?;
+            let moe_local = self
+                .group
+                .run(
+                    self.ep_rank,
+                    CollectiveOp::ReduceScatter {
+                        data: partial,
+                        red: Reduce::Sum,
+                        dt: wire,
+                        parts: Parts::Even,
+                    },
+                )
+                .unwrap_or_else(|f| panic!("{f}"))
+                .values();
+            let mut a_data = a.into_f32()?;
+            for (av, mv) in a_data.iter_mut().zip(moe_local.iter()) {
+                *av += *mv;
+            }
+            hcur = Tensor::f32(a_data, vec![b, s, hid]);
+        }
+        let preds =
+            exec("head_fwd", &self.head_fwd, vec![self.ps.head.clone(), hcur])?.remove(0);
+        Ok(next_tokens(preds.as_i32()?, rows, s))
+    }
+}

@@ -1,0 +1,247 @@
+//! Paged KV-cache allocator for the serving engine.
+//!
+//! The decode artifacts are fixed-shape and recompute attention over the
+//! full token window every step (no incremental K/V tensors cross steps
+//! on the host), so the state a request must keep alive between decode
+//! steps is exactly its token prefix — prompt plus everything generated
+//! so far. That prefix is what gets paged: fixed-size `Arc`-backed i32
+//! [`Tensor`] blocks owned by a [`KvPool`], recycled through a free list,
+//! with each in-flight request holding a [`PageTable`] that maps its
+//! logical token positions onto pool pages. The decode engine reads a
+//! request's window back out of its pages every step, so the pages are
+//! load-bearing, not bookkeeping.
+//!
+//! Exhaustion is a scheduling signal, never an abort: [`PageTable::reserve`]
+//! is all-or-nothing and simply returns `false` when the free list cannot
+//! cover the span, leaving the pool untouched — the scheduler responds by
+//! keeping the request queued (admission backpressure, which the bounded
+//! arrival queue propagates back to the traffic source). The scheduler
+//! reserves a request's *entire* window (prompt + max generation) at
+//! admission, so a request that starts decoding can never die — or stall
+//! its EP lockstep siblings — on a mid-flight allocation.
+
+use crate::runtime::Tensor;
+
+/// Fixed-size page pool. Pages are `Arc`-backed i32 tensors; writes go
+/// through [`Tensor::as_i32_mut`], so a page some snapshot still holds is
+/// copied on write instead of racing it.
+pub struct KvPool {
+    page_size: usize,
+    pages: Vec<Tensor>,
+    /// LIFO free list: the page released last is re-issued first, keeping
+    /// reuse hot and making leak accounting trivial (`total - free`)
+    free: Vec<usize>,
+    /// fewest free pages ever observed → peak occupancy for reports
+    min_free: usize,
+}
+
+impl KvPool {
+    pub fn new(n_pages: usize, page_size: usize) -> KvPool {
+        assert!(n_pages > 0 && page_size > 0, "kv pool needs non-zero geometry");
+        KvPool {
+            page_size,
+            pages: (0..n_pages).map(|_| Tensor::i32(vec![0; page_size], vec![page_size])).collect(),
+            free: (0..n_pages).rev().collect(),
+            min_free: n_pages,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently held by live page tables.
+    pub fn pages_in_use(&self) -> usize {
+        self.pages.len() - self.free.len()
+    }
+
+    /// Most pages ever simultaneously in use.
+    pub fn peak_pages_used(&self) -> usize {
+        self.pages.len() - self.min_free
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    fn alloc_page(&mut self) -> Option<usize> {
+        let p = self.free.pop()?;
+        self.min_free = self.min_free.min(self.free.len());
+        Some(p)
+    }
+
+    fn free_page(&mut self, page: usize) {
+        debug_assert!(!self.free.contains(&page), "double free of kv page {page}");
+        self.free.push(page);
+    }
+
+    fn write(&mut self, page: usize, slot: usize, tok: i32) {
+        self.pages[page].as_i32_mut().expect("kv pages are i32")[slot] = tok;
+    }
+
+    fn read(&self, page: usize, slot: usize) -> i32 {
+        self.pages[page].as_i32().expect("kv pages are i32")[slot]
+    }
+}
+
+/// Per-request mapping from logical token positions onto pool pages.
+/// Dropping a table without [`PageTable::release`] leaks its pages — the
+/// serve report surfaces that as `kv_pages_leaked`, and the tests pin it
+/// at zero.
+#[derive(Default)]
+pub struct PageTable {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+impl PageTable {
+    pub fn new() -> PageTable {
+        PageTable::default()
+    }
+
+    /// Tokens currently stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Token capacity of the pages held so far.
+    pub fn capacity(&self, pool: &KvPool) -> usize {
+        self.pages.len() * pool.page_size()
+    }
+
+    /// Grow the table to hold `total_tokens` tokens. All-or-nothing:
+    /// returns `false` (pool untouched) when the free list cannot cover
+    /// the growth — the caller's backpressure signal.
+    pub fn reserve(&mut self, pool: &mut KvPool, total_tokens: usize) -> bool {
+        let need = pool.pages_for(total_tokens).saturating_sub(self.pages.len());
+        if need > pool.free_pages() {
+            return false;
+        }
+        for _ in 0..need {
+            self.pages.push(pool.alloc_page().expect("free count was just checked"));
+        }
+        true
+    }
+
+    /// Append one token, allocating a page on demand if the reserved
+    /// capacity is exhausted. Returns `false` on pool exhaustion.
+    pub fn append(&mut self, pool: &mut KvPool, tok: i32) -> bool {
+        if self.len == self.capacity(pool) && !self.reserve(pool, self.len + 1) {
+            return false;
+        }
+        let ps = pool.page_size();
+        pool.write(self.pages[self.len / ps], self.len % ps, tok);
+        self.len += 1;
+        true
+    }
+
+    /// Append a run of tokens (reserving up front so a mid-run failure
+    /// cannot leave a half-written suffix).
+    pub fn extend(&mut self, pool: &mut KvPool, toks: &[i32]) -> bool {
+        if !self.reserve(pool, self.len + toks.len()) {
+            return false;
+        }
+        for &t in toks {
+            let ok = self.append(pool, t);
+            debug_assert!(ok, "capacity was reserved");
+        }
+        true
+    }
+
+    /// Reassemble the stored token window in logical order — what the
+    /// decode engine feeds the artifacts each step.
+    pub fn tokens(&self, pool: &KvPool) -> Vec<i32> {
+        let ps = pool.page_size();
+        (0..self.len).map(|i| pool.read(self.pages[i / ps], i % ps)).collect()
+    }
+
+    /// Return every held page to the pool's free list.
+    pub fn release(&mut self, pool: &mut KvPool) {
+        for p in self.pages.drain(..) {
+            pool.free_page(p);
+        }
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_spans_pages_and_reads_back_in_order() {
+        let mut pool = KvPool::new(4, 3);
+        let mut t = PageTable::new();
+        for i in 0..10 {
+            assert!(t.append(&mut pool, i));
+        }
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.tokens(&pool), (0..10).collect::<Vec<i32>>());
+        // 10 tokens at 3 per page = 4 pages
+        assert_eq!(pool.pages_in_use(), 4);
+        assert_eq!(pool.pages_for(10), 4);
+        t.release(&mut pool);
+        assert_eq!(pool.free_pages(), 4);
+    }
+
+    #[test]
+    fn reserve_is_all_or_nothing() {
+        let mut pool = KvPool::new(2, 4);
+        let mut t = PageTable::new();
+        // 3 pages worth on a 2-page pool: refused, nothing allocated
+        assert!(!t.reserve(&mut pool, 9));
+        assert_eq!(pool.free_pages(), 2);
+        assert!(t.reserve(&mut pool, 8));
+        assert_eq!(pool.free_pages(), 0);
+        t.release(&mut pool);
+        assert_eq!(pool.free_pages(), 2);
+    }
+
+    #[test]
+    fn exhaustion_backpressures_and_release_unblocks() {
+        let mut pool = KvPool::new(2, 4);
+        let mut a = PageTable::new();
+        assert!(a.extend(&mut pool, &[1, 2, 3, 4, 5])); // 2 pages
+        let mut b = PageTable::new();
+        // pool exhausted: admission of b must wait
+        assert!(!b.reserve(&mut pool, 1));
+        assert!(!b.append(&mut pool, 9));
+        assert!(b.is_empty());
+        a.release(&mut pool);
+        // freed pages are reused (LIFO) — same physical pages, new owner
+        assert!(b.extend(&mut pool, &[9, 9]));
+        assert_eq!(b.tokens(&pool), vec![9, 9]);
+        // a's release wiped its mapping, not the data path
+        assert_eq!(a.len(), 0);
+        b.release(&mut pool);
+        assert_eq!(pool.free_pages(), pool.total_pages());
+        assert_eq!(pool.peak_pages_used(), 2);
+    }
+
+    #[test]
+    fn pages_are_isolated_between_tables() {
+        let mut pool = KvPool::new(4, 2);
+        let mut a = PageTable::new();
+        let mut b = PageTable::new();
+        assert!(a.extend(&mut pool, &[1, 2, 3]));
+        assert!(b.extend(&mut pool, &[7, 8, 9]));
+        assert_eq!(a.tokens(&pool), vec![1, 2, 3]);
+        assert_eq!(b.tokens(&pool), vec![7, 8, 9]);
+        a.release(&mut pool);
+        b.release(&mut pool);
+        assert_eq!(pool.free_pages(), 4);
+    }
+}

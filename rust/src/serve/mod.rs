@@ -1,0 +1,326 @@
+//! `optimus serve`: expert-parallel inference on the training mesh.
+//!
+//! The serving engine loads any committed training checkpoint through the
+//! topology-elastic reshard path ([`crate::ckpt::ResumeState`]) and
+//! re-slices it onto a *serving* placement — ep-only or dp×ep, validated
+//! by [`ParallelismPlan::validate_serve`] — then runs expert-parallel
+//! autoregressive greedy decode with:
+//!
+//! * a **continuous-batching scheduler** ([`scheduler`]) that admits new
+//!   requests and evicts finished ones at every decode step, per lane
+//!   (= rank), with a static-batching baseline mode for comparison;
+//! * a **paged KV cache** ([`kv_cache`]) of `Arc`-backed tensor pages
+//!   with free-list reuse and per-request page tables, whose exhaustion
+//!   backpressures admission instead of aborting;
+//! * a seeded **open-loop traffic generator** ([`traffic`]) whose
+//!   workload is a pure function of its seed.
+//!
+//! Startup failures use three stable, `ft::classify`-friendly strings:
+//! `serve startup failed [plan]` (bad serve configuration), `[kv-oom]`
+//! (a pool that cannot host even one worst-case request), `[ckpt]` (no
+//! loadable checkpoint). Checkpoint *mismatches* keep their training-side
+//! strings (`checkpoint resume failed [model]`/`[param-count]`/`[dtype]`)
+//! — a bf16 checkpoint offered to the f32 decode engine fails exactly
+//! like a bf16 checkpoint offered to an f32 training plan.
+//!
+//! Report: per-request completions (deterministic — greedy decode makes
+//! them a pure function of checkpoint + prompt), p50/p99 TTFT and
+//! per-token-latency histograms ([`crate::metrics::Histogram`]),
+//! tokens/sec, and KV-page accounting (`kv_pages_leaked` must be 0 —
+//! CI's serve-smoke job and the leak test pin it).
+
+mod engine;
+mod kv_cache;
+mod scheduler;
+mod traffic;
+
+pub use kv_cache::{KvPool, PageTable};
+pub use scheduler::{BatchMode, Completion};
+pub use traffic::{Request, TrafficConfig};
+
+use crate::ckpt::{ResumeState, SavedCheckpoint};
+use crate::comm::{Mesh, Topology};
+use crate::config::{Manifest, ModelManifest};
+use crate::coordinator::ParallelismPlan;
+use crate::ft::checks;
+use crate::metrics::Histogram;
+use crate::runtime::{Engine, Tensor};
+use crate::Result;
+use engine::{Decoder, EpDecoder, FusedDecoder};
+use scheduler::LaneReport;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Everything one serving run needs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    /// checkpoint root (a training run's `--ckpt-dir`)
+    pub ckpt_dir: PathBuf,
+    /// serving placement: ep-only or dp×ep, pp must be 1
+    pub topo: Topology,
+    pub mode: BatchMode,
+    /// KV pages per lane
+    pub kv_pages: usize,
+    /// tokens per KV page
+    pub kv_page_size: usize,
+    /// PJRT executor pool size; 0 → one per rank
+    pub engine_pool: usize,
+    pub traffic: TrafficConfig,
+}
+
+impl ServeConfig {
+    pub fn new(model: &str, ckpt_dir: &Path) -> ServeConfig {
+        ServeConfig {
+            model: model.to_string(),
+            ckpt_dir: ckpt_dir.to_path_buf(),
+            topo: Topology::dp_only(1),
+            mode: BatchMode::Continuous,
+            kv_pages: 16,
+            kv_page_size: 8,
+            engine_pool: 0,
+            traffic: TrafficConfig::default(),
+        }
+    }
+}
+
+/// Aggregated results of a bounded serving run.
+#[derive(Default)]
+pub struct ServeReport {
+    /// requests the traffic generator offered
+    pub submitted: usize,
+    /// finished requests, sorted by id; bounded runs are complete iff
+    /// `completions.len() == submitted`
+    pub completions: Vec<Completion>,
+    /// time-to-first-token distribution (arrival → first decoded token),
+    /// merged over lanes
+    pub ttft: Histogram,
+    /// per-token decode latency distribution, merged over lanes
+    pub per_token: Histogram,
+    pub tokens_generated: u64,
+    /// fixed-shape decode steps executed (summed over lanes) — the
+    /// deterministic cost measure the batching comparison gates on
+    pub decode_steps: u64,
+    pub wall_secs: f64,
+    pub kv_pages_total: usize,
+    /// pages still held after every lane drained — must be 0
+    pub kv_pages_leaked: usize,
+    /// peak simultaneous page occupancy across lanes
+    pub kv_pages_peak: usize,
+    /// training step the served checkpoint was written at
+    pub resumed_step: usize,
+}
+
+impl ServeReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.wall_secs
+    }
+}
+
+/// Load + validate + reassemble the full parameter vector from the newest
+/// loadable checkpoint under `dir`. Corrupt/uncommitted slots fall
+/// through to older ones (the trainer's resume convention); a slot that
+/// *loads* but mismatches the serving run (wrong model, wrong count, bf16
+/// params) fails hard with the stable `checkpoint resume failed [...]`
+/// strings. Returns `(params, step)`.
+pub fn load_params(mm: &ModelManifest, dir: &Path) -> Result<(Vec<f32>, usize)> {
+    let mut last_err: Option<anyhow::Error> = None;
+    for saved in SavedCheckpoint::load_all(dir) {
+        match ResumeState::open(&saved) {
+            Ok(rs) => {
+                rs.validate(&mm.name, mm.param_count)?;
+                // the decode engine computes in f32; a bf16 checkpoint is
+                // rejected the same way an f32 training plan rejects it
+                rs.validate_dtype("f32")?;
+                let params = rs.assemble_params(mm.param_count)?;
+                return Ok((params, rs.step()));
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(checks::err(
+        checks::SERVE,
+        "ckpt",
+        match last_err {
+            Some(e) => format!("no loadable checkpoint under {}: {e:#}", dir.display()),
+            None => format!("no committed checkpoint under {}", dir.display()),
+        },
+    ))
+}
+
+/// Serve-config preflight: everything that must hold before any thread
+/// spawns, with the stable `serve startup failed [plan]` / `[kv-oom]`
+/// strings. The placement itself is checked by
+/// [`ParallelismPlan::validate_serve`] first.
+fn validate_config(cfg: &ServeConfig, mm: &ModelManifest) -> Result<()> {
+    let fail = |msg: String| Err(checks::err(checks::SERVE, "plan", msg));
+    let t = &cfg.traffic;
+    if t.requests == 0 {
+        return fail("traffic offers zero requests; nothing to serve".to_string());
+    }
+    if t.queue_depth == 0 {
+        return fail("queue depth 0 would deadlock admission; use >= 1".to_string());
+    }
+    if t.prompt_len.0 == 0 || t.prompt_len.0 > t.prompt_len.1 {
+        return fail(format!(
+            "prompt length range [{}, {}] must be non-empty and start at >= 1",
+            t.prompt_len.0, t.prompt_len.1
+        ));
+    }
+    if t.gen_len.0 == 0 || t.gen_len.0 > t.gen_len.1 {
+        return fail(format!(
+            "generation length range [{}, {}] must be non-empty and start at >= 1",
+            t.gen_len.0, t.gen_len.1
+        ));
+    }
+    let window = t.prompt_len.1 + t.gen_len.1;
+    if window > mm.hyper.seq {
+        return fail(format!(
+            "worst-case request window {} ({} prompt + {} generated) exceeds the \
+             fixed {}-token artifact window of {}",
+            window,
+            t.prompt_len.1,
+            t.gen_len.1,
+            mm.hyper.seq,
+            mm.name
+        ));
+    }
+    if cfg.kv_pages == 0 || cfg.kv_page_size == 0 {
+        return fail(format!(
+            "kv pool geometry {}x{} must be non-zero",
+            cfg.kv_pages, cfg.kv_page_size
+        ));
+    }
+    // a single worst-case request must fit a lane's pool, or its
+    // admission would head-of-line-block the lane forever
+    let need = window.div_ceil(cfg.kv_page_size);
+    if need > cfg.kv_pages {
+        return Err(checks::err(
+            checks::SERVE,
+            "kv-oom",
+            format!(
+                "a worst-case request needs {need} pages ({window} tokens at \
+                 {} tokens/page) but each lane's pool holds only {} — grow \
+                 --kv-pages or shrink the request distributions",
+                cfg.kv_page_size, cfg.kv_pages
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Run one bounded serving session: load the checkpoint, re-slice it onto
+/// the serving mesh, replay the configured traffic, and aggregate.
+pub fn serve(manifest: &Manifest, cfg: &ServeConfig) -> Result<ServeReport> {
+    let mm = manifest.config(&cfg.model)?;
+    let plan = ParallelismPlan::new(cfg.topo);
+    plan.validate_serve(mm)?;
+    validate_config(cfg, mm)?;
+    let (params, resumed_step) = load_params(mm, &cfg.ckpt_dir)?;
+
+    let topo = cfg.topo;
+    let world = topo.world();
+    let engine = Engine::new_pool(if cfg.engine_pool == 0 { world } else { cfg.engine_pool })?;
+    let mesh = Mesh::new(topo);
+    let (rxs, traffic_handle) = traffic::spawn(cfg.traffic.clone(), world, mm.hyper.vocab_size)?;
+    // Arc-backed: fused lanes share one copy, EP lanes slice their shard
+    let full = Tensor::f32(params, vec![mm.param_count]);
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(world);
+    for (rank, rx) in rxs.into_iter().enumerate() {
+        let mm = mm.clone();
+        let engine = engine.clone();
+        let mesh = Arc::clone(&mesh);
+        let full = full.clone();
+        let mode = cfg.mode;
+        let (kv_pages, kv_page_size) = (cfg.kv_pages, cfg.kv_page_size);
+        let h = std::thread::Builder::new()
+            .name(format!("serve-rank-{rank}"))
+            .spawn(move || -> Result<LaneReport> {
+                let lane = || -> Result<LaneReport> {
+                    let decoder = if topo.ep == 1 {
+                        Decoder::Fused(FusedDecoder::new(&mm, full.clone())?)
+                    } else {
+                        let (group, ep_rank) = mesh.ep_group(rank);
+                        Decoder::Ep(EpDecoder::new(
+                            &mm,
+                            topo.ep,
+                            ep_rank,
+                            full.as_f32()?,
+                            Arc::clone(group),
+                        )?)
+                    };
+                    let lockstep = (topo.ep > 1).then(|| {
+                        let (group, ep_rank) = mesh.ep_group(rank);
+                        (Arc::clone(group), ep_rank)
+                    });
+                    scheduler::run_lane(
+                        &engine,
+                        &decoder,
+                        KvPool::new(kv_pages, kv_page_size),
+                        rx,
+                        mode,
+                        mm.hyper.batch,
+                        lockstep,
+                    )
+                };
+                let r = lane();
+                if r.is_err() {
+                    // dead lane: unblock EP siblings parked in lockstep
+                    // collectives instead of hanging the session
+                    mesh.poison_all();
+                }
+                r
+            })
+            .expect("spawn serve rank");
+        handles.push(h);
+    }
+
+    let mut lanes: Vec<LaneReport> = Vec::with_capacity(world);
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(lr)) => lanes.push(lr),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("serve rank thread panicked"));
+                }
+            }
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    // the producer exits once every send landed or any lane hung up
+    let _ = traffic_handle.join();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    let mut report = ServeReport {
+        submitted: cfg.traffic.requests,
+        wall_secs,
+        kv_pages_total: cfg.kv_pages * world,
+        resumed_step,
+        ..ServeReport::default()
+    };
+    for lr in lanes {
+        report.completions.extend(lr.completions);
+        report.ttft.merge(&lr.ttft);
+        report.per_token.merge(&lr.per_token);
+        report.tokens_generated += lr.tokens_generated;
+        report.decode_steps += lr.decode_steps;
+        report.kv_pages_leaked += lr.pages_leaked;
+        report.kv_pages_peak += lr.pages_peak;
+    }
+    report.completions.sort_by_key(|c| c.id);
+    Ok(report)
+}

@@ -1,0 +1,216 @@
+//! Continuous-batching scheduler: one lane per serving rank.
+//!
+//! A lane owns the rank's `batch` decode slots, its [`KvPool`], and the
+//! bounded arrival queue the traffic source feeds. The lane loop runs the
+//! admission/eviction state machine at every decode step:
+//!
+//! 1. **drain** — pull arrivals off the queue without blocking (blocking
+//!    here would stall EP lockstep siblings);
+//! 2. **admit** — continuous mode seats queued requests into free slots
+//!    whenever the KV pool can reserve their *entire* window (prompt +
+//!    max generation) up front; static mode (the comparison baseline)
+//!    only refills at a batch boundary, once every slot is empty. A
+//!    failed reservation leaves the request queued — head-of-line, so
+//!    admission order stays deterministic — and the bounded queue
+//!    propagates the backpressure to the generator;
+//! 3. **decode** — one fixed-shape step over every active slot, idle
+//!    slots riding along as EOS padding;
+//! 4. **evict** — rows that hit their generation budget emit a
+//!    [`Completion`], release their pages, and free the slot for the
+//!    next iteration's admission.
+//!
+//! EP lockstep: ranks of one EP group share every collective inside
+//! [`Decoder::step`], so they must agree — at every loop iteration — on
+//! whether a step happens. A 2-float `Max` allreduce of (any-active,
+//! any-alive) flags decides: the group decodes while any member has work
+//! and exits only when every member is drained, with idle members padding
+//! until then. `dp` lanes never synchronize with each other.
+
+use super::engine::Decoder;
+use super::kv_cache::{KvPool, PageTable};
+use super::traffic::Request;
+use crate::comm::{CollectiveOp, Group, Reduce, ReduceDtype};
+use crate::ft::checks;
+use crate::metrics::Histogram;
+use crate::runtime::Engine;
+use crate::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Admission policy for a serving run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchMode {
+    /// admit + evict at every decode step (the serving engine proper)
+    Continuous,
+    /// refill only when the whole batch has drained (the baseline the
+    /// perf gate compares against)
+    Static,
+}
+
+/// One finished request. The token vector is a pure function of
+/// (checkpoint, prompt) — greedy decode is batch-independent — so the
+/// set of completions is identical across schedules and reruns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// generated tokens only (prompt excluded)
+    pub tokens: Vec<i32>,
+}
+
+/// Per-lane results, merged into the [`super::ServeReport`] after join.
+#[derive(Default)]
+pub(crate) struct LaneReport {
+    pub completions: Vec<Completion>,
+    pub ttft: Histogram,
+    pub per_token: Histogram,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub pages_leaked: usize,
+    pub pages_peak: usize,
+}
+
+/// An admitted request occupying a decode slot.
+struct Active {
+    req: Request,
+    table: PageTable,
+    generated: usize,
+}
+
+pub(crate) fn run_lane(
+    engine: &Engine,
+    decoder: &Decoder,
+    mut pool: KvPool,
+    rx: Receiver<Request>,
+    mode: BatchMode,
+    slots: usize,
+    lockstep: Option<(Arc<Group>, usize)>,
+) -> Result<LaneReport> {
+    let mut out = LaneReport::default();
+    let mut seats: Vec<Option<Active>> = (0..slots).map(|_| None).collect();
+    let mut pending: VecDeque<Request> = VecDeque::new();
+    let mut rx_open = true;
+    loop {
+        // 1. drain arrivals (non-blocking)
+        while rx_open {
+            match rx.try_recv() {
+                Ok(r) => pending.push_back(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => rx_open = false,
+            }
+        }
+        // 2. admit
+        let active_now = seats.iter().filter(|s| s.is_some()).count();
+        let admit_now = match mode {
+            BatchMode::Continuous => true,
+            // a static batch launches full whenever arrivals can still
+            // fill it; the tail batch launches short
+            BatchMode::Static => active_now == 0 && (pending.len() >= slots || !rx_open),
+        };
+        if admit_now {
+            for seat in seats.iter_mut() {
+                if seat.is_some() {
+                    continue;
+                }
+                let Some(front) = pending.front() else { break };
+                let window = front.prompt.len() + front.max_new;
+                if pool.pages_for(window) > pool.total_pages() {
+                    // can never fit even an empty pool: waiting would
+                    // head-of-line-block forever. The startup sizing
+                    // check prevents this for generated traffic, so
+                    // reaching it means a mis-sized hand-built request.
+                    return Err(checks::err(
+                        checks::SERVE,
+                        "kv-oom",
+                        format!(
+                            "request {} needs {} kv pages for its {window}-token \
+                             window but the lane pool only holds {}",
+                            front.id,
+                            pool.pages_for(window),
+                            pool.total_pages()
+                        ),
+                    ));
+                }
+                let mut table = PageTable::new();
+                if !table.reserve(&mut pool, window) {
+                    // backpressure: pages return when a neighbor finishes
+                    break;
+                }
+                let req = pending.pop_front().expect("front() just matched");
+                let seeded = table.extend(&mut pool, &req.prompt);
+                debug_assert!(seeded, "the full window was just reserved");
+                *seat = Some(Active { req, table, generated: 0 });
+            }
+        }
+        // 3. lockstep agreement on whether this iteration decodes
+        let local_active = seats.iter().any(|s| s.is_some());
+        let local_alive = local_active || !pending.is_empty() || rx_open;
+        let (any_active, any_alive) = match &lockstep {
+            Some((group, ep_rank)) => {
+                let flags = group
+                    .run(
+                        *ep_rank,
+                        CollectiveOp::Allreduce {
+                            data: vec![local_active as u8 as f32, local_alive as u8 as f32],
+                            red: Reduce::Max,
+                            dt: ReduceDtype::F32,
+                        },
+                    )
+                    .unwrap_or_else(|f| panic!("{f}"))
+                    .values();
+                (flags[0] > 0.0, flags[1] > 0.0)
+            }
+            None => (local_active, local_alive),
+        };
+        if !any_alive {
+            break;
+        }
+        if !any_active {
+            // someone still expects arrivals but nobody holds work yet;
+            // idle together and re-vote (the vote keeps the EP group's
+            // collective sequence uniform)
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+        // 4. decode one token for every active slot; idle slots (and
+        // fully idle lockstep lanes) pad with empty rows
+        let rows: Vec<Vec<i32>> =
+            seats.iter().map(|s| s.as_ref().map_or_else(Vec::new, |a| a.table.tokens(&pool))).collect();
+        let t0 = Instant::now();
+        let next = decoder.step(engine, &rows)?;
+        let dt = t0.elapsed().as_secs_f64();
+        out.decode_steps += 1;
+        // 5. record + evict finished rows
+        for (i, seat) in seats.iter_mut().enumerate() {
+            let finished = match seat.as_mut() {
+                None => false,
+                Some(a) => {
+                    let appended = a.table.append(&mut pool, next[i]);
+                    debug_assert!(appended, "admission reserved the full window");
+                    a.generated += 1;
+                    out.tokens_generated += 1;
+                    out.per_token.record(dt);
+                    if a.generated == 1 {
+                        out.ttft.record(a.req.arrival.elapsed().as_secs_f64());
+                    }
+                    a.generated == a.req.max_new
+                }
+            };
+            if finished {
+                let mut a = seat.take().expect("matched Some above");
+                let window = a.table.tokens(&pool);
+                a.table.release(&mut pool);
+                out.completions.push(Completion {
+                    id: a.req.id,
+                    prompt_len: a.req.prompt.len(),
+                    tokens: window[a.req.prompt.len()..].to_vec(),
+                });
+            }
+        }
+    }
+    out.pages_leaked = pool.pages_in_use();
+    out.pages_peak = pool.peak_pages_used();
+    Ok(out)
+}

@@ -1,0 +1,151 @@
+//! Synthetic open-loop traffic generator for the serving engine.
+//!
+//! One named producer thread replays a seeded workload: Poisson arrivals
+//! (exponential inter-arrival gaps at `rate_rps`; `rate <= 0` disables
+//! pacing and offers load as fast as the lanes drain) with per-request
+//! prompt/generation lengths drawn uniformly from configured ranges.
+//! Request *content* is derived from a per-id PRNG fork, so the workload
+//! is a pure function of the seed — identical across reruns, lane
+//! counts, and batching modes regardless of wall-clock arrival jitter.
+//! That is what lets the tests assert same-seed → same completion set
+//! and lets the perf gate compare continuous vs static batching on an
+//! identical request stream.
+//!
+//! Requests fan out round-robin by id over per-lane **bounded** queues
+//! (`sync_channel`, in the prefetcher's mold): when a lane's queue fills
+//! — slots busy, KV pool exhausted — the producer blocks in `send`, which
+//! is exactly where serving backpressure meets the open-loop source.
+//! Dropping the senders after the last request closes every queue, so
+//! lanes observe end-of-traffic as a disconnect and drain to completion.
+
+use crate::util::prng::Prng;
+use crate::Result;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Workload shape for one serving run.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    pub seed: u64,
+    /// total requests to offer (bounded mode — the only mode; a run is
+    /// complete when every one of these has a completion)
+    pub requests: usize,
+    /// Poisson arrival rate in requests/sec; `<= 0` offers load unpaced
+    pub rate_rps: f64,
+    /// inclusive prompt-length range in tokens
+    pub prompt_len: (usize, usize),
+    /// inclusive generation-length range in tokens
+    pub gen_len: (usize, usize),
+    /// per-lane arrival-queue depth (the backpressure bound)
+    pub queue_depth: usize,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> TrafficConfig {
+        TrafficConfig {
+            seed: 0,
+            requests: 16,
+            rate_rps: 0.0,
+            prompt_len: (4, 8),
+            gen_len: (4, 12),
+            queue_depth: 4,
+        }
+    }
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// generation budget (the request completes after exactly this many
+    /// decoded tokens)
+    pub max_new: usize,
+    /// creation time at the source — TTFT measures from here, so queue
+    /// wait under backpressure counts against the server
+    pub arrival: Instant,
+}
+
+/// Deterministic request content: an independent PRNG stream per id, so
+/// content never depends on arrival timing or lane count.
+pub(crate) fn request_content(cfg: &TrafficConfig, id: u64, vocab: usize) -> (Vec<i32>, usize) {
+    let mut rng = Prng::new(cfg.seed).fork(id.wrapping_add(1));
+    let plen = rng.range(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
+    let glen = rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1);
+    let prompt = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+    (prompt, glen)
+}
+
+/// Spawn the producer; returns one bounded receiver per lane plus the
+/// producer's join handle.
+pub(crate) fn spawn(
+    cfg: TrafficConfig,
+    lanes: usize,
+    vocab: usize,
+) -> Result<(Vec<Receiver<Request>>, JoinHandle<()>)> {
+    let (txs, rxs): (Vec<_>, Vec<_>) =
+        (0..lanes).map(|_| sync_channel::<Request>(cfg.queue_depth)).unzip();
+    let handle = std::thread::Builder::new()
+        .name("serve-traffic".to_string())
+        .spawn(move || {
+            // pacing stream is separate from content streams: jitter in
+            // arrival times never perturbs what gets asked
+            let mut clock = Prng::new(cfg.seed).fork(0x0717);
+            for id in 0..cfg.requests as u64 {
+                if cfg.rate_rps > 0.0 {
+                    let gap = -(1.0 - clock.next_f64()).ln() / cfg.rate_rps;
+                    std::thread::sleep(Duration::from_secs_f64(gap.min(1.0)));
+                }
+                let (prompt, max_new) = request_content(&cfg, id, vocab);
+                let lane = (id as usize) % lanes;
+                let req = Request { id, prompt, max_new, arrival: Instant::now() };
+                // bounded queue: a full lane blocks the producer here —
+                // open-loop arrivals feel slot/KV backpressure. A closed
+                // lane (rank error) ends the offered load early.
+                if txs[lane].send(req).is_err() {
+                    return;
+                }
+            }
+            // senders drop here → every lane sees a disconnect
+        })?;
+    Ok((rxs, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_is_a_pure_function_of_seed_and_id() {
+        let cfg = TrafficConfig { seed: 9, ..TrafficConfig::default() };
+        for id in 0..20 {
+            let (p1, g1) = request_content(&cfg, id, 256);
+            let (p2, g2) = request_content(&cfg, id, 256);
+            assert_eq!(p1, p2);
+            assert_eq!(g1, g2);
+            assert!(p1.len() >= 4 && p1.len() <= 8);
+            assert!(g1 >= 4 && g1 <= 12);
+            assert!(p1.iter().all(|&t| (0..256).contains(&t)));
+        }
+        let other = TrafficConfig { seed: 10, ..TrafficConfig::default() };
+        let streams_differ = (0..20).any(|id| {
+            request_content(&cfg, id, 256).0 != request_content(&other, id, 256).0
+        });
+        assert!(streams_differ);
+    }
+
+    #[test]
+    fn producer_round_robins_and_closes_lanes() {
+        let cfg = TrafficConfig { requests: 10, queue_depth: 10, ..TrafficConfig::default() };
+        let (rxs, handle) = spawn(cfg.clone(), 3, 256).unwrap();
+        let mut per_lane = Vec::new();
+        for (lane, rx) in rxs.iter().enumerate() {
+            let ids: Vec<u64> = rx.iter().map(|r| r.id).collect(); // drains until disconnect
+            assert!(ids.iter().all(|id| (*id as usize) % 3 == lane));
+            per_lane.push(ids.len());
+        }
+        assert_eq!(per_lane.iter().sum::<usize>(), 10);
+        handle.join().unwrap();
+    }
+}

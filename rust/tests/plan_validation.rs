@@ -309,6 +309,40 @@ fn data_budget_overrun_fails_before_any_rank_runs() {
 }
 
 #[test]
+fn serve_plan_validation_fires_with_stable_strings() {
+    let mm = tiny_mm(16);
+    let plan = ParallelismPlan::new;
+    // pp > 1 has no decode engine
+    let e = plan(Topology::grid(1, 2, 2)).validate_serve(&mm).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("plan validation failed [serve]"), "{msg}");
+    assert!(msg.contains("pp=2"), "{msg}");
+    assert_eq!(classify(&e), FailureKind::Config);
+    // overlap is a training-only knob
+    let mut p = plan(Topology::grid(2, 2, 1));
+    p.overlap = true;
+    let msg = format!("{:#}", p.validate_serve(&mm).unwrap_err());
+    assert!(msg.contains("plan validation failed [serve]"), "{msg}");
+    // bf16 serving plans are rejected (the decode engine computes in f32;
+    // a bf16 *checkpoint* is instead rejected at load with the
+    // `checkpoint resume failed [dtype]` string — see tests/serve.rs)
+    let mut p = plan(Topology::grid(1, 2, 1));
+    p.dtype = optimus::runtime::Dtype::Bf16;
+    let msg = format!("{:#}", p.validate_serve(&mm).unwrap_err());
+    assert!(msg.contains("plan validation failed [serve]"), "{msg}");
+    // the ordinary spec+model tables still run underneath
+    let msg = format!(
+        "{:#}",
+        plan(Topology::grid(1, 4, 1)).validate_serve(&mm).unwrap_err()
+    );
+    assert!(msg.contains("plan validation failed [ep-artifacts]"), "{msg}");
+    // ep-only, dp×ep and plain-dp placements all serve
+    plan(Topology::grid(1, 2, 1)).validate_serve(&mm).unwrap();
+    plan(Topology::grid(2, 2, 1)).validate_serve(&mm).unwrap();
+    plan(Topology::dp_only(2)).validate_serve(&mm).unwrap();
+}
+
+#[test]
 fn batch_plan_geometry_matches_the_engines() {
     // one source of truth for instances/step: the [data] check, the
     // token cursor and `optimus plans` all read this

@@ -1,0 +1,258 @@
+//! Serving-engine acceptance gates: deterministic completions (same seed
+//! → same completion set, continuous and static alike), KV-page
+//! leak-freedom, cross-topology checkpoint loading (a dp2×ep2 EPSO
+//! checkpoint re-sliced onto ep2 and ep1 serving placements reassembles
+//! bit-identically), and the stable startup/rejection strings
+//! (`serve startup failed [plan]`/`[kv-oom]`/`[ckpt]`,
+//! `checkpoint resume failed [dtype]`).
+
+use optimus::comm::Topology;
+use optimus::coordinator::{self, EpLayout, JobSpec, JobSpecBuilder};
+use optimus::data::{corpus, preprocess};
+use optimus::optim::ShardingMode;
+use optimus::runtime::Dtype;
+use optimus::serve::{self, BatchMode, ServeConfig, TrafficConfig};
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn data_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("optimus-sv-data-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = corpus::data_files(42, 4, 24);
+        preprocess::preprocess(&files, 64, 7, &dir, 256).unwrap();
+        dir
+    })
+    .clone()
+}
+
+fn ckroot(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("optimus-sv-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn base(topo: Topology, steps: usize) -> JobSpecBuilder {
+    let mut b = JobSpec::new("mula-tiny")
+        .data_dir(data_dir())
+        .topo(topo)
+        .steps(steps)
+        .warmup_steps(2)
+        .peak_lr(2e-3)
+        .min_lr(2e-4)
+        .engine_pool(2)
+        .bf16_grad_reduce(false);
+    if topo.ep > 1 {
+        b = b.sharding(ShardingMode::Epso);
+    }
+    b
+}
+
+/// Small bounded workload that always fits the 32-token artifact window.
+fn small_traffic(seed: u64, requests: usize) -> TrafficConfig {
+    TrafficConfig {
+        seed,
+        requests,
+        rate_rps: 0.0,
+        prompt_len: (4, 8),
+        gen_len: (4, 10),
+        queue_depth: 4,
+    }
+}
+
+/// The three serve startup preflights fire with their stable strings
+/// *before* any checkpoint is read or thread spawns — so none of these
+/// need a trained checkpoint, and all classify as non-relaunchable
+/// config errors.
+#[test]
+fn startup_preflights_fire_with_stable_strings() {
+    let Some(m) = optimus::manifest_or_skip("serve::startup_preflights") else {
+        return;
+    };
+    let missing = std::env::temp_dir().join(format!("optimus-sv-none-{}", std::process::id()));
+
+    // [plan]: worst-case prompt+gen window exceeds the fixed artifact seq
+    let mut cfg = ServeConfig::new("mula-tiny", &missing);
+    cfg.traffic.prompt_len = (20, 20);
+    cfg.traffic.gen_len = (20, 20);
+    let e = serve::serve(&m, &cfg).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("serve startup failed [plan]"), "{msg}");
+    assert_eq!(optimus::ft::classify(&e), optimus::ft::FailureKind::Config, "{msg}");
+
+    // [kv-oom]: a pool too small to ever host one worst-case request
+    let mut cfg = ServeConfig::new("mula-tiny", &missing);
+    cfg.traffic = small_traffic(0, 4); // worst case 8 + 10 = 18 tokens
+    cfg.kv_pages = 2;
+    cfg.kv_page_size = 8; // 18 tokens need 3 pages > 2
+    let e = serve::serve(&m, &cfg).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("serve startup failed [kv-oom]"), "{msg}");
+    assert_eq!(optimus::ft::classify(&e), optimus::ft::FailureKind::Config, "{msg}");
+
+    // [ckpt]: a valid config but nothing to load under the directory
+    let mut cfg = ServeConfig::new("mula-tiny", &missing);
+    cfg.traffic = small_traffic(0, 4);
+    let e = serve::serve(&m, &cfg).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("serve startup failed [ckpt]"), "{msg}");
+    assert_eq!(optimus::ft::classify(&e), optimus::ft::FailureKind::Config, "{msg}");
+}
+
+/// Greedy decode over a fixed checkpoint is a pure function of the
+/// request content: rerunning the same seed reproduces the completion
+/// set exactly, and static batching produces the *same* completions as
+/// continuous batching (it only schedules them differently). Every lane
+/// returns all of its KV pages.
+#[test]
+fn completions_are_deterministic_and_pages_leak_free() {
+    let Some(m) = optimus::manifest_or_skip("serve::determinism_and_leaks") else {
+        return;
+    };
+    let ck = ckroot("det");
+    coordinator::train(
+        &m,
+        &base(Topology::dp_only(1), 4)
+            .checkpoint_dir(&ck)
+            .ckpt_every(3)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+
+    let run = |mode: BatchMode| {
+        let mut cfg = ServeConfig::new("mula-tiny", &ck);
+        cfg.mode = mode;
+        cfg.traffic = small_traffic(7, 12);
+        serve::serve(&m, &cfg).unwrap()
+    };
+    let a = run(BatchMode::Continuous);
+    let b = run(BatchMode::Continuous);
+    let c = run(BatchMode::Static);
+    for (tag, r) in [("cont-a", &a), ("cont-b", &b), ("static", &c)] {
+        assert_eq!(r.completions.len(), r.submitted, "{tag}: bounded run incomplete");
+        assert_eq!(r.kv_pages_leaked, 0, "{tag}: leaked KV pages");
+        assert!(r.kv_pages_peak > 0 && r.kv_pages_peak <= r.kv_pages_total, "{tag}");
+        assert!(r.tokens_generated > 0 && r.decode_steps > 0, "{tag}");
+        assert_eq!(r.resumed_step, 3, "{tag}: served the step-3 checkpoint");
+        for comp in &r.completions {
+            assert!(!comp.tokens.is_empty(), "{tag}: empty completion {}", comp.id);
+        }
+    }
+    assert_eq!(a.completions, b.completions, "same seed must reproduce completions");
+    assert_eq!(
+        a.completions, c.completions,
+        "batching mode must not change what gets generated"
+    );
+    // latency percentiles are populated and ordered
+    assert!(a.ttft.count() == a.submitted as u64);
+    assert!(a.ttft.p50() <= a.ttft.p99());
+    assert!(a.per_token.count() == a.tokens_generated);
+    let _ = std::fs::remove_dir_all(&ck);
+}
+
+/// The cross-topology gate: train dp2×ep2 under EPSO, checkpoint, then
+/// serve-load onto ep2 and ep1 placements. The reassembled full
+/// parameter vector is bit-identical to the uninterrupted reference
+/// state, the EP re-slice round-trips bit-exactly, and both serving
+/// topologies drain the same bounded workload leak-free.
+#[test]
+fn dp2ep2_checkpoint_serves_on_ep2_and_ep1() {
+    let Some(m) = optimus::manifest_or_skip("serve::cross_topology_load") else {
+        return;
+    };
+    let mm = m.config("mula-tiny").unwrap();
+    // reference: uninterrupted 6-step run (no checkpointing)
+    let reference = coordinator::train(
+        &m,
+        &base(Topology::grid(2, 2, 1), 6).build().unwrap(),
+    )
+    .unwrap();
+    // producer: 7-step run committing sharded EPSO checkpoints at 3 and 6
+    let ck = ckroot("xtopo");
+    let produced = coordinator::train(
+        &m,
+        &base(Topology::grid(2, 2, 1), 7)
+            .checkpoint_dir(&ck)
+            .ckpt_every(3)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert!(produced.ckpt_commits >= 2, "commits at steps 3 and 6");
+
+    // the serve loader reassembles the sharded checkpoint to the exact
+    // bits the reference run holds after the same number of steps
+    let (params, step) = serve::load_params(mm, &ck).unwrap();
+    assert_eq!(step, 6);
+    let reference_params = reference.final_params.as_f32().unwrap();
+    assert_eq!(params.len(), reference_params.len());
+    for (i, (p, q)) in params.iter().zip(reference_params.iter()).enumerate() {
+        assert_eq!(
+            p.to_bits(),
+            q.to_bits(),
+            "param {i} diverged between checkpoint reassembly and reference: {p} vs {q}"
+        );
+    }
+
+    // ep2 re-slice round-trip: extracting both ranks' serving shards and
+    // scattering them back reconstructs the full vector bit-exactly
+    let mut rebuilt = vec![0.0f32; params.len()];
+    for ep_rank in 0..2 {
+        let layout = EpLayout::new(mm, 2, ep_rank);
+        let local = layout.extract(&params);
+        assert_eq!(local.len(), layout.local_len());
+        layout.scatter(&local, &mut rebuilt);
+    }
+    for (i, (p, q)) in params.iter().zip(rebuilt.iter()).enumerate() {
+        assert_eq!(p.to_bits(), q.to_bits(), "param {i} lost in ep2 re-slice round-trip");
+    }
+
+    // the same checkpoint serves on both placements; each topology is
+    // internally deterministic and leak-free (token streams are not
+    // compared across topologies — fp reduction order differs)
+    for (tag, topo) in [("ep2", Topology::grid(1, 2, 1)), ("ep1", Topology::dp_only(1))] {
+        let run = || {
+            let mut cfg = ServeConfig::new("mula-tiny", &ck);
+            cfg.topo = topo;
+            cfg.traffic = small_traffic(3, 8);
+            serve::serve(&m, &cfg).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completions.len(), 8, "{tag}: bounded run incomplete");
+        assert_eq!(a.kv_pages_leaked, 0, "{tag}: leaked KV pages");
+        assert_eq!(a.resumed_step, 6, "{tag}");
+        assert_eq!(a.completions, b.completions, "{tag}: nondeterministic completions");
+    }
+    let _ = std::fs::remove_dir_all(&ck);
+}
+
+/// A bf16 training checkpoint offered to the f32 decode engine is
+/// refused with the same stable `[dtype]` string the trainer's resume
+/// preflight uses — no silent up-conversion.
+#[test]
+fn serve_rejects_a_bf16_checkpoint() {
+    let Some(m) = optimus::manifest_or_skip("serve::bf16_rejection") else {
+        return;
+    };
+    let ck = ckroot("bf16");
+    coordinator::train(
+        &m,
+        &base(Topology::dp_only(1), 4)
+            .dtype(Dtype::Bf16)
+            .checkpoint_dir(&ck)
+            .ckpt_every(3)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let mut cfg = ServeConfig::new("mula-tiny", &ck);
+    cfg.traffic = small_traffic(0, 4);
+    let e = serve::serve(&m, &cfg).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("checkpoint resume failed [dtype]"), "{msg}");
+    assert_eq!(optimus::ft::classify(&e), optimus::ft::FailureKind::Config, "{msg}");
+    let _ = std::fs::remove_dir_all(&ck);
+}
