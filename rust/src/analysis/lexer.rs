@@ -1,0 +1,474 @@
+//! Comment/string-aware tokenizer for the invariant lint.
+//!
+//! `optimus lint` used to scan sanitized *lines*; the flow-aware passes
+//! (collective-divergence, collective-order, lock-order, poison-path)
+//! need real structure: which tokens sit inside which braces, which
+//! condition guards which call. This module produces that view with no
+//! dependencies: a token stream (idents, punctuation, string contents,
+//! literals — comments and whitespace removed but line-attributed), a
+//! side-channel of comments (doc tags and `// lint:` annotations live
+//! there), and a brace tree ([`Block`]) the passes recurse over.
+//!
+//! The lexer is Rust-shaped, not a Rust parser: it understands `//` and
+//! nesting `/* */` comments, `"…"` strings with escapes, `r#"…"#` raw
+//! strings (any hash count, `b`/`br` prefixes), char literals vs
+//! lifetimes, and numbers — exactly enough that braces, brackets and
+//! identifiers in the token stream are the real program structure.
+
+/// Token kinds. `text` holds the identifier, the string *content*
+/// (escapes kept verbatim), or the single punctuation character.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// identifier or keyword
+    Ident,
+    /// one punctuation character (multi-char operators arrive as runs)
+    Punct,
+    /// string literal — `text` is the content between the quotes
+    Str,
+    /// char literal (content irrelevant to every pass)
+    Char,
+    /// numeric literal
+    Num,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+}
+
+/// One `//` comment: 1-based line + the text after the slashes
+/// (doc-comment text therefore starts with `/` or `!`).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// A parsed `// lint: <rule> <reason>` suppression annotation. The
+/// reason is mandatory — an annotation with an empty reason suppresses
+/// nothing, so the underlying finding still fires.
+#[derive(Clone, Debug)]
+pub struct Annotation {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Lexer output: the token stream plus the comment side-channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub annos: Vec<Annotation>,
+}
+
+/// Tokenize `text`. Never fails: unterminated constructs run to EOF.
+pub fn lex(text: &str) -> Lexed {
+    let cs: Vec<char> = text.chars().collect();
+    let mut out = Lexed::default();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. /// and //! docs): capture to the side
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < cs.len() && cs[j] != '\n' {
+                j += 1;
+            }
+            let body: String = cs[start..j].iter().collect();
+            // a doc comment's text begins with '/' or '!', so quoting the
+            // annotation grammar in docs can never register as one
+            let t = body.trim();
+            if let Some(rest) = t.strip_prefix("lint:") {
+                let rest = rest.trim_start();
+                let (rule, reason) = match rest.find(char::is_whitespace) {
+                    Some(sp) => (&rest[..sp], rest[sp..].trim()),
+                    None => (rest, ""),
+                };
+                if !rule.is_empty() {
+                    out.annos.push(Annotation {
+                        line,
+                        rule: rule.to_string(),
+                        reason: reason.to_string(),
+                    });
+                }
+            }
+            out.comments.push(Comment { line, text: body });
+            i = j;
+            continue;
+        }
+        // nesting block comment
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte-raw string: r"…", r#"…"#, br#"…"# …
+        if (c == 'r' || c == 'b') && !prev_is_ident(&cs, i) {
+            let mut j = i;
+            if c == 'b' && cs.get(j + 1) == Some(&'r') {
+                j += 1;
+            }
+            if cs[j] == 'r' || j > i {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while cs.get(k) == Some(&'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if cs.get(k) == Some(&'"') {
+                    k += 1;
+                    let content = k;
+                    while k < cs.len() {
+                        if cs[k] == '"' && (0..hashes).all(|h| cs.get(k + 1 + h) == Some(&'#')) {
+                            break;
+                        }
+                        k += 1;
+                    }
+                    let body: String = cs[content..k.min(cs.len())].iter().collect();
+                    out.toks.push(Tok { kind: Kind::Str, text: body.clone(), line });
+                    line += body.matches('\n').count();
+                    i = (k + 1 + hashes).min(cs.len());
+                    continue;
+                }
+            }
+        }
+        // plain (or byte) string with escapes; content kept verbatim
+        if c == '"' || (c == 'b' && cs.get(i + 1) == Some(&'"') && !prev_is_ident(&cs, i)) {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let start_line = line;
+            let mut body = String::new();
+            while j < cs.len() && cs[j] != '"' {
+                if cs[j] == '\\' {
+                    body.push(cs[j]);
+                    if let Some(&n) = cs.get(j + 1) {
+                        body.push(n);
+                        if n == '\n' {
+                            line += 1;
+                        }
+                    }
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                body.push(cs[j]);
+                j += 1;
+            }
+            out.toks.push(Tok { kind: Kind::Str, text: body, line: start_line });
+            i = j + 1;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if cs.get(i + 1) == Some(&'\\') {
+                // escaped char: '\n', '\'', '\u{1F600}'
+                let mut j = i + 2;
+                if cs.get(j) == Some(&'u') {
+                    while j < cs.len() && cs[j] != '\'' {
+                        j += 1;
+                    }
+                } else {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: Kind::Char, text: String::new(), line });
+                i = (j + 1).min(cs.len());
+                continue;
+            }
+            if cs.get(i + 2) == Some(&'\'') {
+                // plain char — may hold '{' or '"'
+                out.toks.push(Tok { kind: Kind::Char, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            // lifetime: consume the tick + ident so 'a never opens a char
+            let mut j = i + 1;
+            while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok { kind: Kind::Punct, text: "'".into(), line });
+            i = j.max(i + 1);
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i + 1;
+            while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok { kind: Kind::Ident, text: cs[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        // number (floats: a '.' only binds when a digit follows, so
+        // `1..n` stays two range dots)
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < cs.len() {
+                let d = cs[j];
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.' && cs.get(j + 1).is_some_and(char::is_ascii_digit) {
+                    j += 2;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok { kind: Kind::Num, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_' || cs[i - 1] == '"')
+}
+
+// ---------------------------------------------------------------------
+// brace tree
+// ---------------------------------------------------------------------
+
+/// A node of the brace tree: either a token (by index into the lexed
+/// stream) or a nested `{ … }` block.
+#[derive(Debug)]
+pub enum Node {
+    Tok(usize),
+    Block(Block),
+}
+
+/// One `{ … }` span. The synthetic root block covers the whole file.
+#[derive(Debug)]
+pub struct Block {
+    /// line of the opening brace (the file's first line for the root)
+    pub open_line: usize,
+    /// line of the closing brace (the file's last line for the root)
+    pub close_line: usize,
+    pub nodes: Vec<Node>,
+}
+
+/// Build the brace tree over a token stream. Tolerant of imbalance:
+/// a stray `}` is dropped, an unclosed `{` closes at EOF.
+pub fn tree(toks: &[Tok]) -> Block {
+    let mut stack: Vec<Block> = vec![Block {
+        open_line: 1,
+        close_line: toks.last().map_or(1, |t| t.line),
+        nodes: Vec::new(),
+    }];
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_punct('{') {
+            stack.push(Block { open_line: t.line, close_line: t.line, nodes: Vec::new() });
+        } else if t.is_punct('}') {
+            if stack.len() > 1 {
+                let mut b = stack.pop().expect("brace stack");
+                b.close_line = t.line;
+                stack.last_mut().expect("root block").nodes.push(Node::Block(b));
+            }
+        } else {
+            stack.last_mut().expect("block stack").nodes.push(Node::Tok(i));
+        }
+    }
+    while stack.len() > 1 {
+        let mut b = stack.pop().expect("brace stack");
+        b.close_line = toks.last().map_or(b.open_line, |t| t.line);
+        stack.last_mut().expect("root block").nodes.push(Node::Block(b));
+    }
+    stack.pop().expect("root block")
+}
+
+/// Per-token `is this test code?` marks. A whole-file flag covers
+/// `tests/` and `benches/`; otherwise every `#[cfg(test)]`-attributed
+/// item (its braces found by counting on the token stream, so braces in
+/// strings can't skew the depth) is marked, plus the attribute itself.
+pub fn test_marks(toks: &[Tok], whole_file_is_test: bool) -> Vec<bool> {
+    let mut marks = vec![whole_file_is_test; toks.len()];
+    if whole_file_is_test {
+        return marks;
+    }
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            // mark from the attribute through the item's brace span (or
+            // to the `;` of a braceless gated item, e.g. a `use`)
+            let mut j = i;
+            let mut depth = 0usize;
+            while j < toks.len() {
+                marks[j] = true;
+                if toks[j].is_punct('{') {
+                    depth += 1;
+                } else if toks[j].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth == 0 && toks[j].is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    marks
+}
+
+/// `# [ cfg ( … test … ) ]` starting at token `i`?
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    if !(toks[i].is_punct('#')
+        && toks.get(i + 1).is_some_and(|t| t.is_punct('['))
+        && toks.get(i + 2).is_some_and(|t| t.is_ident("cfg"))
+        && toks.get(i + 3).is_some_and(|t| t.is_punct('(')))
+    {
+        return false;
+    }
+    let mut depth = 1usize;
+    let mut j = i + 4;
+    while j < toks.len() && depth > 0 {
+        if toks[j].is_punct('(') {
+            depth += 1;
+        } else if toks[j].is_punct(')') {
+            depth -= 1;
+        } else if toks[j].is_ident("test") {
+            return true;
+        }
+        j += 1;
+    }
+    false
+}
+
+/// Index of the `)` matching the `(` at `open` (which must be a `(`),
+/// or `toks.len()` when unterminated.
+pub fn match_paren(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_strings_and_chars_never_reach_the_token_stream() {
+        let lx = lex("let a = 1; // x.lock().unwrap()\n/* {{{ */ let s = \"{ } [x]\";\nlet c = '{';\n");
+        assert!(!lx.toks.iter().any(|t| t.is_ident("unwrap")));
+        // the brace inside the string/char is content, not structure
+        assert!(!lx.toks.iter().any(|t| t.is_punct('{')));
+        let s = lx.toks.iter().find(|t| t.kind == Kind::Str).expect("string token");
+        assert_eq!(s.text, "{ } [x]");
+        assert_eq!(s.line, 2);
+        assert_eq!(lx.comments.len(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes_lex_cleanly() {
+        let lx = lex("let j = r#\"{\"a\": 1}\"#;\nfn f<'a>(x: &'a str) {}\nlet b = br\"[y]\";\n");
+        let raws: Vec<&Tok> = lx.toks.iter().filter(|t| t.kind == Kind::Str).collect();
+        assert_eq!(raws.len(), 2);
+        assert_eq!(raws[0].text, "{\"a\": 1}");
+        assert_eq!(raws[1].text, "[y]");
+        // exactly the fn body's braces survive as structure
+        assert_eq!(lx.toks.iter().filter(|t| t.is_punct('{')).count(), 1);
+        assert!(lx.toks.iter().any(|t| t.is_ident("str")));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_attribution() {
+        let lx = lex("let s = \"one\ntwo\";\nlet t = 3;\n");
+        let t3 = lx.toks.iter().find(|t| t.kind == Kind::Num).expect("number");
+        assert_eq!(t3.line, 3);
+    }
+
+    #[test]
+    fn annotations_parse_rule_and_reason() {
+        let lx = lex(
+            "// lint: rank-uniform every leader reaches this leg\n\
+             // lint: poison-path\n\
+             /// `// lint: rank-uniform <why>` (doc quote, not an annotation)\n",
+        );
+        assert_eq!(lx.annos.len(), 2);
+        assert_eq!(lx.annos[0].rule, "rank-uniform");
+        assert_eq!(lx.annos[0].reason, "every leader reaches this leg");
+        assert_eq!(lx.annos[1].rule, "poison-path");
+        assert_eq!(lx.annos[1].reason, "", "reason-less annotation carries no reason");
+    }
+
+    #[test]
+    fn tree_nests_blocks_and_keeps_token_order() {
+        let lx = lex("fn a() { if x { y(); } z(); }\n");
+        let root = tree(&lx.toks);
+        // root: fn a ( ) <block>
+        let Node::Block(body) = root.nodes.last().expect("fn body") else {
+            panic!("expected fn body block")
+        };
+        let inner_blocks =
+            body.nodes.iter().filter(|n| matches!(n, Node::Block(_))).count();
+        assert_eq!(inner_blocks, 1, "one nested if-arm block");
+    }
+
+    #[test]
+    fn cfg_test_regions_mark_their_braces() {
+        let lx = lex(
+            "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { let s = \"}\"; }\n}\nfn c() {}\n",
+        );
+        let marks = test_marks(&lx.toks, false);
+        let b_ix = lx.toks.iter().position(|t| t.is_ident("b")).expect("fn b");
+        let c_ix = lx.toks.iter().position(|t| t.is_ident("c")).expect("fn c");
+        let a_ix = lx.toks.iter().position(|t| t.is_ident("a")).expect("fn a");
+        assert!(marks[b_ix]);
+        assert!(!marks[c_ix]);
+        assert!(!marks[a_ix]);
+    }
+}

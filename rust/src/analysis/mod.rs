@@ -1,38 +1,51 @@
 //! `optimus lint` — the repo's own invariant lint over the crate sources.
 //!
 //! Generic tooling can't know this codebase's contracts; this pass can.
-//! It walks `src/**.rs` and `tests/*.rs` with a small Rust-shaped line
-//! scanner (comment-, string- and raw-string-aware — no parser, no new
-//! dependencies) and enforces four rules the rest of the crate relies on:
+//! It walks `src/**.rs` and `tests/*.rs` with a dependency-free,
+//! Rust-shaped **token + block-structure analyzer** ([`lexer`]): a
+//! comment/string/raw-string-aware token stream, a brace tree, and a
+//! per-token `#[cfg(test)]` mark. Nine passes ([`passes`], see
+//! [`RULES`]) run over that view:
 //!
-//! 1. **check-strings** — every stable failure tag of the shape
-//!    `"<domain> [<name>]"` (domains end in `failed`/`violated`, see
-//!    [`crate::ft::checks`]) must name a registered check. A typo'd tag
-//!    would silently escape [`crate::ft::classify`] and every runbook
-//!    grep.
-//! 2. **check-coverage** — the reverse direction: every registered check
-//!    must be asserted, as its full stable literal, by at least one test
-//!    (a `#[cfg(test)]` region or an integration test file). A check
-//!    nobody tests is a check that silently rots.
-//! 3. **named-spawn** — no bare `thread::spawn` outside tests: threads
-//!    must come from `std::thread::Builder` with a name (so stall dumps
-//!    and panics identify the thread) or `comm::lsync::spawn_named`.
-//! 4. **lock-discipline** — no `.lock().unwrap()` outside `comm/` and
-//!    `ckpt/` (whose rendezvous/writer protocols poison deliberately and
-//!    re-panic by design): shared-state readers elsewhere must use the
-//!    poison-tolerant [`crate::util::lock`] so one dead rank thread
-//!    doesn't cascade into every thread that later peeks at a counter.
-//! 5. **metrics-class** — every `f64` field of
-//!    [`crate::metrics::StepBreakdown`] must carry a
-//!    `class: additive|concurrent|contained` doc tag so `total()` can
-//!    never silently double-count a concurrent component.
+//! * **check-strings** — every stable failure tag of the shape
+//!   `"<domain> [<name>]"` (domains end in `failed`/`violated`, see
+//!   [`crate::ft::checks`]) must name a registered check. A typo'd tag
+//!   would silently escape [`crate::ft::classify`] and every runbook
+//!   grep.
+//! * **check-coverage** — the reverse direction: every registered check
+//!   must be asserted, as its full stable literal, by at least one test
+//!   (a `#[cfg(test)]` region or an integration test file). A check
+//!   nobody tests is a check that silently rots.
+//! * **named-spawn** — no bare `thread::spawn` outside tests, and every
+//!   `std::thread::Builder` chain that reaches `.spawn(..)` must have
+//!   called `.name(..)` (so stall dumps and panics identify the
+//!   thread); `comm::lsync::spawn_named` is the loom-aware wrapper.
+//! * **lock-discipline** — no `.lock().unwrap()` outside `comm/` and
+//!   `ckpt/` (whose rendezvous/writer protocols poison deliberately and
+//!   re-panic by design): shared-state readers elsewhere must use the
+//!   poison-tolerant [`crate::util::lock`].
+//! * **metrics-class** — every `f64` field of
+//!   [`crate::metrics::StepBreakdown`] must carry a
+//!   `class: additive|concurrent|contained` doc tag so `total()` can
+//!   never silently double-count a concurrent component.
+//! * **collective-divergence** — a collective call site reachable only
+//!   under a rank-dependent condition deadlocks the rest of the group;
+//!   flagged unless annotated `// lint: rank-uniform <why>`.
+//! * **collective-order** — sibling arms of a rank-dependent branch
+//!   must issue identical collective-kind sequences.
+//! * **lock-order** — no lock pair acquired in both orders anywhere
+//!   across `comm/`, `ckpt/`, `serve/` (the AB/BA deadlock shape).
+//! * **poison-path** — `unwrap`/`expect`/`panic!` inside rank/lane
+//!   worker closures must route through the poison protocol.
 //!
-//! The scanner is line-based on a sanitized view of each file: comments
-//! are stripped everywhere (so `[<check>]` placeholders in docs don't
-//! trip rule 1), and for structural rules (2, 3 and the `#[cfg(test)]`
-//! region tracker) string contents are dropped too (so braces inside
-//! format strings don't corrupt region tracking, and rule text quoting a
-//! forbidden pattern doesn't flag itself).
+//! Output: human `file:line: [rule] message` lines, [`to_json`] for
+//! machines, and [`to_sarif`] (SARIF 2.1.0) for GitHub code scanning.
+//! DESIGN.md §12 documents the pass catalog and the annotation grammar.
+
+pub mod lexer;
+mod passes;
+
+pub use passes::RULES;
 
 use crate::ft::checks;
 use crate::Result;
@@ -70,9 +83,28 @@ pub struct SrcFile {
 
 impl SrcFile {
     /// Integration tests and benches are all-test: exempt from the
-    /// structural rules, still scanned (and counted) by rules 1–2.
+    /// structural rules, still scanned (and counted) by the check-string
+    /// rules.
     fn is_test_file(&self) -> bool {
         self.rel.starts_with("tests/") || self.rel.starts_with("benches/")
+    }
+}
+
+/// One file, fully analyzed: the token stream, the brace tree and the
+/// per-token test mark every pass shares.
+pub(crate) struct FileView<'a> {
+    pub f: &'a SrcFile,
+    pub lx: lexer::Lexed,
+    pub root: lexer::Block,
+    pub test: Vec<bool>,
+}
+
+impl<'a> FileView<'a> {
+    fn new(f: &'a SrcFile) -> FileView<'a> {
+        let lx = lexer::lex(&f.text);
+        let root = lexer::tree(&lx.toks);
+        let test = lexer::test_marks(&lx.toks, f.is_test_file());
+        FileView { f, lx, root, test }
     }
 }
 
@@ -124,380 +156,124 @@ pub fn run(root: &Path) -> Result<Vec<Violation>> {
 }
 
 /// Pure core: lint an in-memory file set (what the self-tests seed).
+/// Runs every pass, then sorts findings by `(file, line, rule)`.
 pub fn scan(files: &[SrcFile]) -> Vec<Violation> {
+    let views: Vec<FileView<'_>> = files.iter().map(FileView::new).collect();
     let mut domains: Vec<&'static str> = checks::CHECKS.iter().map(|c| c.domain).collect();
+    domains.sort_unstable();
     domains.dedup();
 
     let mut v = Vec::new();
     let mut asserted: BTreeSet<(&'static str, &'static str)> = BTreeSet::new();
-    for f in files {
-        let with_strings = sanitize(&f.text, true);
-        let code_only = sanitize(&f.text, false);
-        let mask = test_mask(&code_only, f.is_test_file());
-        check_strings(f, &with_strings, &mask, &domains, &mut v, &mut asserted);
-        if !f.is_test_file() {
-            spawn_rule(f, &code_only, &mask, &mut v);
-            lock_rule(f, &code_only, &mask, &mut v);
-        }
-        if f.rel.ends_with("metrics/mod.rs") {
-            metrics_rule(f, &mut v);
-        }
-    }
-    for c in checks::CHECKS {
-        if !asserted.contains(&(c.domain, c.name)) {
-            v.push(Violation {
-                file: "src/ft/checks.rs".into(),
-                line: 0,
-                rule: "check-coverage",
-                msg: format!(
-                    "registered check `{} [{}]` is asserted by no test — add a test \
-                     containing its full stable string",
-                    c.domain, c.name
-                ),
-            });
+    let mut pairs = passes::PairTable::new();
+    for view in &views {
+        passes::check_strings(view, &domains, &mut v, &mut asserted);
+        passes::named_spawn(view, &mut v);
+        passes::lock_discipline(view, &mut v);
+        passes::collective_flow(view, &mut v);
+        passes::poison_path(view, &mut v);
+        if view.f.rel.starts_with("src/comm/")
+            || view.f.rel.starts_with("src/ckpt/")
+            || view.f.rel.starts_with("src/serve/")
+        {
+            passes::lock_order_collect(view, &mut pairs);
         }
     }
+    // metrics-class runs wherever the struct lives; if it vanished from
+    // the canonical file entirely, that file reports the not-found guard
+    let has_bd = |w: &&FileView<'_>| {
+        w.lx.toks
+            .windows(2)
+            .any(|p| p[0].is_ident("struct") && p[1].is_ident("StepBreakdown"))
+    };
+    match views.iter().find(has_bd) {
+        Some(w) => passes::metrics_class(w, &mut v),
+        None => {
+            if let Some(w) = views.iter().find(|w| w.f.rel == "src/metrics/mod.rs") {
+                passes::metrics_class(w, &mut v);
+            }
+        }
+    }
+    passes::check_coverage(&views, &asserted, &mut v);
+    passes::lock_order_finalize(&pairs, &mut v);
+
+    v.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.msg).cmp(&(&b.file, b.line, b.rule, &b.msg))
+    });
+    v.dedup_by(|a, b| a.file == b.file && a.line == b.line && a.rule == b.rule && a.msg == b.msg);
     v
 }
 
-/// Rule 1 + the assertion census for rule 2. Runs on comment-stripped
-/// text *with* string contents kept (the tags live in string literals),
-/// over every line — a typo'd tag in a test assertion is as wrong as one
-/// in an error site.
-fn check_strings(
-    f: &SrcFile,
-    text: &str,
-    mask: &[bool],
-    domains: &[&'static str],
-    v: &mut Vec<Violation>,
-    asserted: &mut BTreeSet<(&'static str, &'static str)>,
-) {
-    for (ix, line) in text.lines().enumerate() {
-        for (bpos, _) in line.match_indices('[') {
-            let rest = &line[bpos + 1..];
-            let Some(end) = rest.find(']') else { continue };
-            let name = &rest[..end];
-            let tag_shaped = !name.is_empty()
-                && name
-                    .chars()
-                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
-            if !tag_shaped {
-                continue;
-            }
-            let before = &line[..bpos];
-            if !(before.ends_with("failed ") || before.ends_with("violated ")) {
-                continue;
-            }
-            let head = &before[..before.len() - 1];
-            match domains.iter().find(|d| head.ends_with(**d)) {
-                Some(d) => match checks::CHECKS
-                    .iter()
-                    .find(|c| c.domain == **d && c.name == name)
-                {
-                    Some(c) => {
-                        if mask.get(ix) == Some(&true) {
-                            asserted.insert((c.domain, c.name));
-                        }
-                    }
-                    None => v.push(Violation {
-                        file: f.rel.clone(),
-                        line: ix + 1,
-                        rule: "check-strings",
-                        msg: format!(
-                            "`{d} [{name}]` is not registered in ft::checks::CHECKS"
-                        ),
-                    }),
-                },
-                None => v.push(Violation {
-                    file: f.rel.clone(),
-                    line: ix + 1,
-                    rule: "check-strings",
-                    msg: format!(
-                        "check-shaped tag `[{name}]` follows an unknown failure domain \
-                         (`...{}`) — route it through ft::checks",
-                        &head[head.len().saturating_sub(30)..]
-                    ),
-                }),
-            }
+/// Minimal JSON string escape for the emitters below.
+fn esc(s: &str) -> String {
+    let mut o = String::with_capacity(s.len() + 8);
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\t' => o.push_str("\\t"),
+            '\r' => o.push_str("\\r"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
         }
     }
+    o
 }
 
-/// Rule 3: bare `thread::spawn` outside tests. The loom shim is the one
-/// place allowed to call it (loom's spawn has no named builder).
-fn spawn_rule(f: &SrcFile, code: &str, mask: &[bool], v: &mut Vec<Violation>) {
-    if f.rel == "src/comm/lsync.rs" {
-        return;
+/// Machine-readable findings: `{"violations":[{file,line,rule,msg}]}`.
+pub fn to_json(v: &[Violation]) -> String {
+    let mut out = String::from("{\"violations\":[");
+    for (i, x) in v.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"msg\":\"{}\"}}",
+            esc(&x.file),
+            x.line,
+            x.rule,
+            esc(&x.msg)
+        ));
     }
-    for (ix, line) in code.lines().enumerate() {
-        if mask.get(ix) == Some(&true) {
-            continue;
-        }
-        if line.contains("thread::spawn") {
-            v.push(Violation {
-                file: f.rel.clone(),
-                line: ix + 1,
-                rule: "named-spawn",
-                msg: "bare thread::spawn — use std::thread::Builder::new().name(..) \
-                      (joinable, shows up in stall dumps) or comm::lsync::spawn_named"
-                    .into(),
-            });
-        }
-    }
-}
-
-/// Rule 4: `.lock().unwrap()` outside `comm/` and `ckpt/`.
-fn lock_rule(f: &SrcFile, code: &str, mask: &[bool], v: &mut Vec<Violation>) {
-    if f.rel.starts_with("src/comm/") || f.rel.starts_with("src/ckpt/") {
-        return;
-    }
-    for (ix, line) in code.lines().enumerate() {
-        if mask.get(ix) == Some(&true) {
-            continue;
-        }
-        if line.contains(".lock().unwrap()") {
-            v.push(Violation {
-                file: f.rel.clone(),
-                line: ix + 1,
-                rule: "lock-discipline",
-                msg: "`.lock().unwrap()` outside comm/ and ckpt/ — use the \
-                      poison-tolerant crate::util::lock so one panicked thread \
-                      doesn't cascade"
-                    .into(),
-            });
-        }
-    }
-}
-
-/// Rule 5: every `StepBreakdown` `f64` field documents its accounting
-/// class, so `total()` can be audited against the tags.
-fn metrics_rule(f: &SrcFile, v: &mut Vec<Violation>) {
-    let lines: Vec<&str> = f.text.lines().collect();
-    let Some(start) = lines.iter().position(|l| l.contains("pub struct StepBreakdown")) else {
-        v.push(Violation {
-            file: f.rel.clone(),
-            line: 0,
-            rule: "metrics-class",
-            msg: "pub struct StepBreakdown not found — if it moved, update \
-                  analysis::metrics_rule"
-                .into(),
-        });
-        return;
-    };
-    for ix in start + 1..lines.len() {
-        let t = lines[ix].trim();
-        if t == "}" {
-            break;
-        }
-        if !(t.starts_with("pub ") && t.contains(": f64")) {
-            continue;
-        }
-        let mut classified = false;
-        let mut j = ix;
-        while j > start + 1 {
-            j -= 1;
-            let d = lines[j].trim();
-            if !d.starts_with("///") {
-                break;
-            }
-            if d.contains("class: additive")
-                || d.contains("class: concurrent")
-                || d.contains("class: contained")
-            {
-                classified = true;
-            }
-        }
-        if !classified {
-            v.push(Violation {
-                file: f.rel.clone(),
-                line: ix + 1,
-                rule: "metrics-class",
-                msg: format!(
-                    "StepBreakdown field `{}` lacks a `class: \
-                     additive|concurrent|contained` doc tag",
-                    t.trim_end_matches(',')
-                ),
-            });
-        }
-    }
-}
-
-/// Sanitize Rust source for line scanning: strip `//` and (nesting)
-/// `/* */` comments; handle `"…"`, `r"…"`/`r#"…"#` and char literals.
-/// With `keep_strings` the string *contents* survive (rule 1 reads
-/// them); without, only the bare quotes survive (structural rules).
-/// Newlines are preserved everywhere, so line numbers map 1:1.
-fn sanitize(text: &str, keep_strings: bool) -> String {
-    let cs: Vec<char> = text.chars().collect();
-    let mut out = String::with_capacity(cs.len());
-    let mut i = 0;
-    while i < cs.len() {
-        let c = cs[i];
-        if c == '/' && cs.get(i + 1) == Some(&'/') {
-            while i < cs.len() && cs[i] != '\n' {
-                i += 1;
-            }
-            continue; // the newline itself is emitted by the fall-through
-        }
-        if c == '/' && cs.get(i + 1) == Some(&'*') {
-            let mut depth = 1usize;
-            i += 2;
-            while i < cs.len() && depth > 0 {
-                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
-                    depth += 1;
-                    i += 2;
-                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
-                    depth -= 1;
-                    i += 2;
-                } else {
-                    if cs[i] == '\n' {
-                        out.push('\n');
-                    }
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        if c == 'r' && !prev_is_ident(&cs, i) {
-            // raw string r"…" / r#"…"# (any hash count)
-            let mut j = i + 1;
-            let mut hashes = 0usize;
-            while cs.get(j) == Some(&'#') {
-                hashes += 1;
-                j += 1;
-            }
-            if cs.get(j) == Some(&'"') {
-                j += 1;
-                let content = j;
-                while j < cs.len() {
-                    if cs[j] == '"'
-                        && (0..hashes).all(|k| cs.get(j + 1 + k) == Some(&'#'))
-                    {
-                        break;
-                    }
-                    j += 1;
-                }
-                out.push('"');
-                for &ch in &cs[content..j.min(cs.len())] {
-                    if keep_strings || ch == '\n' {
-                        out.push(ch);
-                    }
-                }
-                out.push('"');
-                i = (j + 1 + hashes).min(cs.len());
-                continue;
-            }
-        }
-        if c == '"' {
-            out.push('"');
-            i += 1;
-            while i < cs.len() && cs[i] != '"' {
-                if cs[i] == '\\' {
-                    if keep_strings {
-                        out.push(cs[i]);
-                        if let Some(&n) = cs.get(i + 1) {
-                            out.push(n);
-                        }
-                    } else if cs.get(i + 1) == Some(&'\n') {
-                        out.push('\n');
-                    }
-                    i += 2;
-                    continue;
-                }
-                if keep_strings || cs[i] == '\n' {
-                    out.push(cs[i]);
-                }
-                i += 1;
-            }
-            out.push('"');
-            i += 1;
-            continue;
-        }
-        if c == '\'' {
-            if cs.get(i + 1) == Some(&'\\') {
-                // escaped char literal: '\n', '\'', '\u{1F600}'
-                let mut j = i + 2;
-                if cs.get(j) == Some(&'u') {
-                    while j < cs.len() && cs[j] != '\'' {
-                        j += 1;
-                    }
-                } else {
-                    j += 1;
-                }
-                out.push('\'');
-                i = (j + 1).min(cs.len());
-                continue;
-            }
-            if cs.get(i + 2) == Some(&'\'') {
-                // plain char literal — may hold '{' or '"'
-                out.push('\'');
-                i += 3;
-                continue;
-            }
-            // lifetime
-            out.push(c);
-            i += 1;
-            continue;
-        }
-        out.push(c);
-        i += 1;
-    }
+    out.push_str("]}\n");
     out
 }
 
-fn prev_is_ident(cs: &[char], i: usize) -> bool {
-    i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_' || cs[i - 1] == '"')
-}
-
-/// Per-line `is this line test code?` mask. `#[cfg(test)]` arms the
-/// tracker; the braces of the next item (on string-stripped text, so
-/// format-string braces can't skew the depth) delimit the region.
-fn test_mask(code: &str, whole_file_is_test: bool) -> Vec<bool> {
-    let lines: Vec<&str> = code.lines().collect();
-    if whole_file_is_test {
-        return vec![true; lines.len()];
-    }
-    let mut mask = vec![false; lines.len()];
-    let mut pending = false;
-    let mut in_test = false;
-    let mut depth: i64 = 0;
-    for (ix, line) in lines.iter().enumerate() {
-        let opens = line.matches('{').count() as i64;
-        let closes = line.matches('}').count() as i64;
-        if in_test {
-            mask[ix] = true;
-            depth += opens - closes;
-            if depth <= 0 {
-                in_test = false;
-            }
-            continue;
-        }
-        if pending {
-            mask[ix] = true;
-            if opens > 0 {
-                pending = false;
-                depth = opens - closes;
-                if depth > 0 {
-                    in_test = true;
-                }
-            } else if line.trim_end().ends_with(';') {
-                pending = false; // braceless item, e.g. a gated `use`
-            }
-            continue;
-        }
-        if line.contains("#[cfg(test)]") {
-            mask[ix] = true;
-            if opens > 0 {
-                depth = opens - closes;
-                if depth > 0 {
-                    in_test = true;
-                }
-            } else {
-                pending = true;
-            }
-        }
-    }
-    mask
+/// SARIF 2.1.0 for GitHub code scanning. `uri_prefix` rebases the
+/// crate-relative paths onto the repository root (CI passes `"rust/"`).
+pub fn to_sarif(v: &[Violation], uri_prefix: &str) -> String {
+    let rules: Vec<String> = RULES
+        .iter()
+        .map(|r| format!("{{\"id\":\"{r}\",\"name\":\"{r}\"}}"))
+        .collect();
+    let results: Vec<String> = v
+        .iter()
+        .map(|x| {
+            format!(
+                "{{\"ruleId\":\"{}\",\"level\":\"error\",\
+                 \"message\":{{\"text\":\"{}\"}},\
+                 \"locations\":[{{\"physicalLocation\":{{\
+                 \"artifactLocation\":{{\"uri\":\"{}{}\"}},\
+                 \"region\":{{\"startLine\":{}}}}}}}]}}",
+                x.rule,
+                esc(&x.msg),
+                esc(uri_prefix),
+                esc(&x.file),
+                x.line.max(1)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"$schema\":\"https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json\",\
+         \"version\":\"2.1.0\",\
+         \"runs\":[{{\"tool\":{{\"driver\":{{\"name\":\"optimus-lint\",\
+         \"informationUri\":\"DESIGN.md\",\
+         \"rules\":[{}]}}}},\
+         \"results\":[{}]}}]}}\n",
+        rules.join(","),
+        results.join(",")
+    )
 }
 
 #[cfg(test)]
@@ -510,36 +286,6 @@ mod tests {
 
     fn rules(v: &[Violation], rule: &str) -> usize {
         v.iter().filter(|x| x.rule == rule).count()
-    }
-
-    #[test]
-    fn sanitizer_strips_comments_and_strings() {
-        let t = "let a = 1; // x.lock().unwrap()\n/* {{{ */ let s = \"{ } [x]\";\n";
-        let code = sanitize(t, false);
-        assert!(!code.contains("lock"), "{code}");
-        assert!(!code.contains('['), "{code}");
-        assert_eq!(code.lines().count(), t.lines().count());
-        let kept = sanitize(t, true);
-        assert!(kept.contains("[x]"), "{kept}");
-        assert!(!kept.contains("unwrap"), "{kept}");
-    }
-
-    #[test]
-    fn sanitizer_handles_raw_strings_and_char_literals() {
-        let t = "let j = r#\"{\"a\": {\"b\": 1}}\"#;\nlet c = '{';\nlet s = \"one \\\n two\";\nfn f<'a>(x: &'a str) {}\n";
-        let code = sanitize(t, false);
-        // every brace inside the raw string / char literal is gone
-        assert_eq!(code.matches('{').count(), 1, "{code}");
-        assert_eq!(code.matches('}').count(), 1, "{code}");
-        assert_eq!(code.lines().count(), t.lines().count());
-        assert!(code.contains("<'a>"), "{code}");
-    }
-
-    #[test]
-    fn test_regions_are_tracked_by_braces() {
-        let t = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { let s = \"}\"; }\n}\nfn c() {}\n";
-        let mask = test_mask(&sanitize(t, false), false);
-        assert_eq!(mask, vec![false, true, true, true, true, false]);
     }
 
     #[test]
@@ -607,11 +353,278 @@ mod tests {
     }
 
     #[test]
+    fn builder_chain_must_name_before_spawn() {
+        // the tightened contract: using Builder is not enough
+        let t = "fn f() {\n    std::thread::Builder::new().spawn(|| {}).unwrap();\n}\n";
+        let v = scan(&[src("src/foo.rs", t)]);
+        assert_eq!(rules(&v, "named-spawn"), 1, "{v:?}");
+        assert!(v.iter().any(|x| x.msg.contains("without .name")), "{v:?}");
+
+        let t = "fn f() {\n    std::thread::Builder::new().name(\"w\".into()).spawn(|| {}).unwrap();\n}\n";
+        let v = scan(&[src("src/foo.rs", t)]);
+        assert_eq!(rules(&v, "named-spawn"), 0, "{v:?}");
+    }
+
+    #[test]
     fn unclassified_breakdown_field_is_flagged() {
         let m = "pub struct StepBreakdown {\n    /// class: additive\n    pub a_secs: f64,\n    /// no tag here\n    pub b_secs: f64,\n}\n";
         let v = scan(&[src("src/metrics/mod.rs", m)]);
         assert_eq!(rules(&v, "metrics-class"), 1, "{v:?}");
         assert!(v.iter().any(|x| x.msg.contains("b_secs")), "{v:?}");
+    }
+
+    fn divergent_fixture() -> &'static str {
+        "use crate::comm::{CollectiveOp, Group};
+pub fn f(g: &Group, rank: usize, data: Vec<f32>) {
+    if rank == 0 {
+        g.run(rank, CollectiveOp::Broadcast { root: 0, data }).unwrap();
+    }
+}
+"
+    }
+
+    #[test]
+    fn divergent_collective_is_flagged() {
+        let v = scan(&[src("src/comm/fx1.rs", divergent_fixture())]);
+        assert_eq!(rules(&v, "collective-divergence"), 1, "{v:?}");
+        let f = v.iter().find(|x| x.rule == "collective-divergence").unwrap();
+        assert!(
+            f.to_string().starts_with("src/comm/fx1.rs:4: [collective-divergence]"),
+            "{f}"
+        );
+        assert!(f.msg.contains("Broadcast"), "{f}");
+    }
+
+    #[test]
+    fn rank_uniform_annotation_suppresses_divergence() {
+        let t = "use crate::comm::{CollectiveOp, Group};
+pub fn f(g: &Group, rank: usize, data: Vec<f32>) {
+    if rank == 0 {
+        // lint: rank-uniform every peer posts the matching recv in the same round
+        g.run(rank, CollectiveOp::Broadcast { root: 0, data }).unwrap();
+    }
+}
+";
+        let v = scan(&[src("src/comm/fx1.rs", t)]);
+        assert_eq!(rules(&v, "collective-divergence"), 0, "{v:?}");
+
+        // an annotation without a reason suppresses nothing
+        let t = "use crate::comm::{CollectiveOp, Group};
+pub fn f(g: &Group, rank: usize, data: Vec<f32>) {
+    if rank == 0 {
+        // lint: rank-uniform
+        g.run(rank, CollectiveOp::Broadcast { root: 0, data }).unwrap();
+    }
+}
+";
+        let v = scan(&[src("src/comm/fx1.rs", t)]);
+        assert_eq!(rules(&v, "collective-divergence"), 1, "reason is mandatory: {v:?}");
+    }
+
+    #[test]
+    fn sibling_arms_must_issue_identical_order() {
+        let t = "use crate::comm::{CollectiveOp, Group};
+pub fn f(g: &Group, is_leader: bool, r: usize, d: Vec<f32>) {
+    if is_leader {
+        g.run(r, CollectiveOp::Allreduce { data: d.clone(), red, dt }).unwrap();
+        g.run(r, CollectiveOp::Allgather { data: d.clone(), dt }).unwrap();
+    } else {
+        g.run(r, CollectiveOp::Allgather { data: d.clone(), dt }).unwrap();
+        g.run(r, CollectiveOp::Allreduce { data: d, red, dt }).unwrap();
+    }
+}
+";
+        let v = scan(&[src("src/comm/fx2.rs", t)]);
+        assert_eq!(rules(&v, "collective-order"), 1, "{v:?}");
+        let f = v.iter().find(|x| x.rule == "collective-order").unwrap();
+        assert!(f.to_string().starts_with("src/comm/fx2.rs:3: [collective-order]"), "{f}");
+
+        // identical sequences across both arms: clean
+        let t = "use crate::comm::{CollectiveOp, Group};
+pub fn f(g: &Group, is_leader: bool, r: usize, d: Vec<f32>) {
+    if is_leader {
+        g.run(r, CollectiveOp::Allreduce { data: d.clone(), red, dt }).unwrap();
+    } else {
+        g.run(r, CollectiveOp::Allreduce { data: d, red, dt }).unwrap();
+    }
+}
+";
+        let v = scan(&[src("src/comm/fx2.rs", t)]);
+        assert_eq!(rules(&v, "collective-order") + rules(&v, "collective-divergence"), 0, "{v:?}");
+    }
+
+    #[test]
+    fn inverted_lock_pair_is_flagged() {
+        let t = "pub fn a(s: &S) {
+    let g1 = s.alpha.lock().unwrap();
+    let g2 = s.beta.lock().unwrap();
+    drop(g2);
+    drop(g1);
+}
+pub fn b(s: &S) {
+    let h1 = s.beta.lock().unwrap();
+    let h2 = s.alpha.lock().unwrap();
+    drop(h2);
+    drop(h1);
+}
+";
+        let v = scan(&[src("src/comm/fx3.rs", t)]);
+        assert_eq!(rules(&v, "lock-order"), 1, "{v:?}");
+        let f = v.iter().find(|x| x.rule == "lock-order").unwrap();
+        assert!(f.to_string().starts_with("src/comm/fx3.rs:9: [lock-order]"), "{f}");
+        assert!(f.msg.contains("alpha") && f.msg.contains("beta"), "{f}");
+
+        // same order in both functions: no inversion
+        let t = "pub fn a(s: &S) {
+    let g1 = s.alpha.lock().unwrap();
+    let g2 = s.beta.lock().unwrap();
+    drop(g2);
+    drop(g1);
+}
+pub fn b(s: &S) {
+    let h1 = s.alpha.lock().unwrap();
+    let h2 = s.beta.lock().unwrap();
+    drop(h2);
+    drop(h1);
+}
+";
+        let v = scan(&[src("src/comm/fx3.rs", t)]);
+        assert_eq!(rules(&v, "lock-order"), 0, "{v:?}");
+    }
+
+    #[test]
+    fn bare_unwrap_in_lane_worker_is_flagged() {
+        let t = "pub fn f(n: usize) {
+    let h = std::thread::Builder::new()
+        .name(format!(\"lane-{n}\"))
+        .spawn(move || {
+            step().unwrap();
+        })
+        .expect(\"spawn lane\");
+    h.join().ok();
+}
+";
+        let v = scan(&[src("src/serve/fx4.rs", t)]);
+        assert_eq!(rules(&v, "poison-path"), 1, "{v:?}");
+        let f = v.iter().find(|x| x.rule == "poison-path").unwrap();
+        assert!(f.to_string().starts_with("src/serve/fx4.rs:5: [poison-path]"), "{f}");
+
+        // routing through the poison protocol makes the same shape clean
+        let t = "pub fn f(n: usize, g: Arc<Group>) {
+    let h = std::thread::Builder::new()
+        .name(format!(\"lane-{n}\"))
+        .spawn(move || {
+            let _guard = PoisonGuard::new(&g);
+            step().unwrap();
+        })
+        .expect(\"spawn lane\");
+    h.join().ok();
+}
+";
+        let v = scan(&[src("src/serve/fx4.rs", t)]);
+        assert_eq!(rules(&v, "poison-path"), 0, "{v:?}");
+
+        // a thread whose name is not rank/lane-scoped is out of scope
+        let t = "pub fn f() {
+    std::thread::Builder::new()
+        .name(\"background-io\".into())
+        .spawn(|| { step().unwrap(); })
+        .expect(\"spawn io\");
+}
+";
+        let v = scan(&[src("src/serve/fx4.rs", t)]);
+        assert_eq!(rules(&v, "poison-path"), 0, "{v:?}");
+    }
+
+    #[test]
+    fn lint_rules_are_registered_checks() {
+        // the stable LINT tags, verbatim: this doubles as the coverage
+        // assertion for the lint's own registry entries
+        let tags = [
+            "lint invariant violated [check-strings]",
+            "lint invariant violated [check-coverage]",
+            "lint invariant violated [named-spawn]",
+            "lint invariant violated [lock-discipline]",
+            "lint invariant violated [metrics-class]",
+            "lint invariant violated [collective-divergence]",
+            "lint invariant violated [collective-order]",
+            "lint invariant violated [lock-order]",
+            "lint invariant violated [poison-path]",
+        ];
+        assert_eq!(RULES.len(), tags.len());
+        for (rule, tag) in RULES.iter().zip(tags) {
+            assert!(checks::is_registered(checks::LINT, rule), "{rule}");
+            assert_eq!(checks::tag(checks::LINT, rule), tag);
+        }
+    }
+
+    #[test]
+    fn json_and_sarif_round_trip() {
+        let v = scan(&[src("src/comm/fx1.rs", divergent_fixture())]);
+        let div: Vec<&Violation> =
+            v.iter().filter(|x| x.rule == "collective-divergence").collect();
+        assert_eq!(div.len(), 1);
+
+        let j = crate::util::json::Json::parse(&to_json(&v)).expect("to_json parses");
+        let arr = j.req("violations").as_arr().unwrap();
+        assert_eq!(arr.len(), v.len());
+        let jd = arr
+            .iter()
+            .find(|x| x.req("rule").as_str() == Some("collective-divergence"))
+            .unwrap();
+        assert_eq!(jd.req("file").as_str(), Some("src/comm/fx1.rs"));
+        assert_eq!(jd.req("line").as_usize(), Some(4));
+        assert_eq!(jd.req("msg").as_str(), Some(div[0].msg.as_str()));
+
+        let s = crate::util::json::Json::parse(&to_sarif(&v, "rust/")).expect("sarif parses");
+        assert_eq!(s.req("version").as_str(), Some("2.1.0"));
+        let run = &s.req("runs").as_arr().unwrap()[0];
+        assert_eq!(
+            run.req("tool").req("driver").req("name").as_str(),
+            Some("optimus-lint")
+        );
+        let results = run.req("results").as_arr().unwrap();
+        assert_eq!(results.len(), v.len());
+        let rd = results
+            .iter()
+            .find(|x| x.req("ruleId").as_str() == Some("collective-divergence"))
+            .unwrap();
+        assert_eq!(rd.req("message").req("text").as_str(), Some(div[0].msg.as_str()));
+        let loc = &rd.req("locations").as_arr().unwrap()[0];
+        let phys = loc.req("physicalLocation");
+        assert_eq!(
+            phys.req("artifactLocation").req("uri").as_str(),
+            Some("rust/src/comm/fx1.rs")
+        );
+        assert_eq!(phys.req("region").req("startLine").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn rank_uniform_annotation_budget() {
+        // acceptance: the real repo carries at most 10 rank-uniform
+        // annotations, every one with a reason
+        let files = collect(&default_root()).unwrap();
+        let mut n = 0usize;
+        for f in &files {
+            if f.is_test_file() {
+                continue;
+            }
+            for a in &lexer::lex(&f.text).annos {
+                if a.rule == "rank-uniform" {
+                    n += 1;
+                    assert!(
+                        !a.reason.is_empty(),
+                        "{}:{}: rank-uniform annotation without a reason",
+                        f.rel,
+                        a.line
+                    );
+                }
+            }
+        }
+        assert!(
+            (1..=10).contains(&n),
+            "expected 1..=10 rank-uniform annotations, found {n}"
+        );
     }
 
     #[test]

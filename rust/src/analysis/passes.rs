@@ -1,0 +1,1139 @@
+//! The nine lint passes, all running over the token/block view built by
+//! [`super::lexer`].
+//!
+//! Migrated from the PR 7 line scanner: **check-strings**,
+//! **check-coverage**, **named-spawn** (tightened: a
+//! `std::thread::Builder` chain must actually call `.name(..)` before
+//! `.spawn(..)`), **lock-discipline**, **metrics-class**.
+//!
+//! New flow-aware passes:
+//!
+//! * **collective-divergence** — a `Group::run`/`Group::start` call site
+//!   carrying a `CollectiveOp` that executes only under a rank-dependent
+//!   condition (`rank`, `slot`, `lane`, `is_leader`, `*_rank`,
+//!   `*_coord`, …) deadlocks every peer parked in the same round. Flagged
+//!   unless the condition's sibling arms issue the identical collective
+//!   sequence, or the site carries a `// lint: rank-uniform <why>`
+//!   annotation inside its enclosing block.
+//! * **collective-order** — when *every* arm of a rank-dependent branch
+//!   issues collectives but the kind sequences differ, ranks taking
+//!   different arms disagree on program order: the runtime `[order]`
+//!   auditor fires on the lucky runs and a silent hang eats the unlucky
+//!   ones. One finding per branch point.
+//! * **lock-order** — per-function lock-acquisition sequences across
+//!   `comm/`, `ckpt/` and `serve/`; any two locks taken in both orders
+//!   anywhere in that surface is the classic AB/BA deadlock loom can
+//!   only find where a model exists. `let`-bound guards are treated as
+//!   held to the end of their block (RAII); temporaries (no `let`, or a
+//!   chain continuing past the lock) participate only as second
+//!   acquisitions.
+//! * **poison-path** — inside rank-thread / lane-worker spawn closures
+//!   (thread name contains `rank` or `lane`), a bare
+//!   `unwrap`/`expect`/`panic!` strands every peer of the dead rank
+//!   unless the closure routes panics through the poison protocol
+//!   (`Group::poison`/`poison_all`/`PoisonGuard`/`catch_unwind`).
+//!
+//! All heuristics are intraprocedural and token-shaped: conditions are
+//! judged rank-dependent by identifier, collective kinds by the
+//! `CollectiveOp::<Kind>` constructor at the call site, and calls into
+//! helpers are not traced. The runtime auditor, watchdog and loom models
+//! (DESIGN.md §12) stay the backstop for what a lint cannot see.
+
+use super::lexer::{match_paren, Block, Kind, Node, Tok};
+use super::{FileView, Violation};
+use crate::ft::checks;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Every pass, by stable rule slug — also the `ft::checks` LINT registry
+/// names the CLI summary emits.
+pub const RULES: &[&str] = &[
+    "check-strings",
+    "check-coverage",
+    "named-spawn",
+    "lock-discipline",
+    "metrics-class",
+    "collective-divergence",
+    "collective-order",
+    "lock-order",
+    "poison-path",
+];
+
+/// Identifiers that make a condition rank-dependent: a branch on any of
+/// these can differ across members of one collective family.
+fn rankish_ident(s: &str) -> bool {
+    matches!(s, "rank" | "slot" | "lane" | "node" | "leader" | "is_leader" | "is_last" | "is_first" | "coord" | "stage")
+        || s.ends_with("_rank")
+        || s.ends_with("_slot")
+        || s.ends_with("_lane")
+        || s.ends_with("_coord")
+        || s.ends_with("_stage")
+}
+
+// ---------------------------------------------------------------------
+// check-strings + the check-coverage census
+// ---------------------------------------------------------------------
+
+/// Scan every string literal for `<domain> [<name>]` failure tags:
+/// unknown names/domains are violations; tags seen in test code feed the
+/// coverage census (`asserted`).
+pub fn check_strings(
+    view: &FileView<'_>,
+    domains: &[&'static str],
+    v: &mut Vec<Violation>,
+    asserted: &mut BTreeSet<(&'static str, &'static str)>,
+) {
+    for (i, t) in view.lx.toks.iter().enumerate() {
+        if t.kind != Kind::Str {
+            continue;
+        }
+        let s = &t.text;
+        for word in ["failed", "violated"] {
+            let pat = format!("{word} [");
+            let mut from = 0usize;
+            while let Some(off) = s[from..].find(&pat) {
+                let p = from + off;
+                let after = p + pat.len();
+                from = after;
+                let Some(end) = s[after..].find(']') else { continue };
+                let name = &s[after..after + end];
+                let tag_shaped = !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
+                if !tag_shaped {
+                    continue;
+                }
+                let line = t.line + s[..p].matches('\n').count();
+                let head = &s[..p + word.len()];
+                match domains.iter().find(|d| head.ends_with(**d)) {
+                    Some(d) => match checks::CHECKS
+                        .iter()
+                        .find(|c| c.domain == *d && c.name == name)
+                    {
+                        Some(c) => {
+                            if view.test[i] {
+                                asserted.insert((c.domain, c.name));
+                            }
+                        }
+                        None => v.push(Violation {
+                            file: view.f.rel.clone(),
+                            line,
+                            rule: "check-strings",
+                            msg: format!("`{d} [{name}]` is not registered in ft::checks::CHECKS"),
+                        }),
+                    },
+                    None => {
+                        let tail: String = {
+                            let mut cs: Vec<char> = head.chars().rev().take(30).collect();
+                            cs.reverse();
+                            cs.into_iter().collect()
+                        };
+                        v.push(Violation {
+                            file: view.f.rel.clone(),
+                            line,
+                            rule: "check-strings",
+                            msg: format!(
+                                "check-shaped tag `[{name}]` follows an unknown failure domain \
+                                 (`...{tail}`) — route it through ft::checks"
+                            ),
+                        })
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Coverage direction: every registered check must have been seen (as
+/// its full stable literal) in at least one test. The finding anchors to
+/// the check's registry row when the registry file is in the scanned
+/// set.
+pub fn check_coverage(
+    files: &[FileView<'_>],
+    asserted: &BTreeSet<(&'static str, &'static str)>,
+    v: &mut Vec<Violation>,
+) {
+    let registry = files.iter().find(|f| f.f.rel.ends_with("ft/checks.rs"));
+    for c in checks::CHECKS {
+        if asserted.contains(&(c.domain, c.name)) {
+            continue;
+        }
+        // point at the CheckId row: the name appears as a string literal
+        let line = registry
+            .and_then(|r| {
+                r.lx.toks
+                    .iter()
+                    .find(|t| t.kind == Kind::Str && t.text == c.name)
+                    .map(|t| t.line)
+            })
+            .unwrap_or(0);
+        v.push(Violation {
+            file: "src/ft/checks.rs".into(),
+            line,
+            rule: "check-coverage",
+            msg: format!(
+                "registered check `{} [{}]` is asserted by no test — add a test \
+                 containing its full stable string",
+                c.domain, c.name
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// named-spawn
+// ---------------------------------------------------------------------
+
+/// No bare `thread::spawn` outside tests, and — the tightened contract —
+/// every `std::thread::Builder` chain that reaches `.spawn(..)` must
+/// have called `.name(..)` on the way.
+pub fn named_spawn(view: &FileView<'_>, v: &mut Vec<Violation>) {
+    if view.f.rel == "src/comm/lsync.rs" {
+        // the loom shim: loom's spawn has no named builder
+        return;
+    }
+    let toks = &view.lx.toks;
+    for i in 0..toks.len() {
+        if view.test[i] {
+            continue;
+        }
+        if toks[i].is_ident("thread")
+            && punct2(toks, i + 1, ':', ':')
+            && toks.get(i + 3).is_some_and(|t| t.is_ident("spawn"))
+        {
+            v.push(Violation {
+                file: view.f.rel.clone(),
+                line: toks[i].line,
+                rule: "named-spawn",
+                msg: "bare thread::spawn — use std::thread::Builder::new().name(..) \
+                      (joinable, shows up in stall dumps) or comm::lsync::spawn_named"
+                    .into(),
+            });
+            continue;
+        }
+        if !toks[i].is_ident("Builder") {
+            continue;
+        }
+        let from_thread = i >= 3
+            && punct2(toks, i - 2, ':', ':')
+            && toks[i - 3].is_ident("thread");
+        let to_new = punct2(toks, i + 1, ':', ':')
+            && toks.get(i + 3).is_some_and(|t| t.is_ident("new"));
+        if !(from_thread || to_new) {
+            continue;
+        }
+        // walk the method chain: receiver-position method names are the
+        // `.m(` at zero bracket depth before the statement ends
+        let (mut has_name, mut has_spawn) = (false, false);
+        let (mut pd, mut bd) = (0i64, 0i64);
+        let mut j = i + 1;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('(') || t.is_punct('[') {
+                pd += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                pd -= 1;
+            } else if t.is_punct('{') {
+                bd += 1;
+            } else if t.is_punct('}') {
+                bd -= 1;
+                if bd < 0 {
+                    break;
+                }
+            } else if pd == 0 && bd == 0 {
+                if t.is_punct(';') {
+                    break;
+                }
+                if t.is_punct('.') {
+                    if let Some(m) = toks.get(j + 1) {
+                        has_name |= m.is_ident("name");
+                        has_spawn |= m.is_ident("spawn");
+                    }
+                }
+            }
+            j += 1;
+        }
+        if has_spawn && !has_name {
+            v.push(Violation {
+                file: view.f.rel.clone(),
+                line: toks[i].line,
+                rule: "named-spawn",
+                msg: "thread::Builder chain reaches .spawn(..) without .name(..) — \
+                      unnamed threads are unattributable in stall dumps and panics"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn punct2(toks: &[Tok], i: usize, a: char, b: char) -> bool {
+    toks.get(i).is_some_and(|t| t.is_punct(a)) && toks.get(i + 1).is_some_and(|t| t.is_punct(b))
+}
+
+// ---------------------------------------------------------------------
+// lock-discipline
+// ---------------------------------------------------------------------
+
+/// `.lock().unwrap()` stays confined to `comm/` and `ckpt/` (whose
+/// protocols poison deliberately); everyone else uses the
+/// poison-tolerant `crate::util::lock`.
+pub fn lock_discipline(view: &FileView<'_>, v: &mut Vec<Violation>) {
+    if view.f.rel.starts_with("src/comm/") || view.f.rel.starts_with("src/ckpt/") {
+        return;
+    }
+    let toks = &view.lx.toks;
+    for i in 0..toks.len() {
+        if view.test[i] {
+            continue;
+        }
+        if toks[i].is_punct('.')
+            && toks.get(i + 1).is_some_and(|t| t.is_ident("lock"))
+            && punct2(toks, i + 2, '(', ')')
+            && toks.get(i + 4).is_some_and(|t| t.is_punct('.'))
+            && toks.get(i + 5).is_some_and(|t| t.is_ident("unwrap"))
+        {
+            v.push(Violation {
+                file: view.f.rel.clone(),
+                line: toks[i + 1].line,
+                rule: "lock-discipline",
+                msg: "`.lock().unwrap()` outside comm/ and ckpt/ — use the \
+                      poison-tolerant crate::util::lock so one panicked thread \
+                      doesn't cascade"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// metrics-class
+// ---------------------------------------------------------------------
+
+/// Every `f64` field of `StepBreakdown` documents its accounting class,
+/// so `total()` can be audited against the tags.
+pub fn metrics_class(view: &FileView<'_>, v: &mut Vec<Violation>) {
+    let toks = &view.lx.toks;
+    let Some(at) = toks
+        .windows(2)
+        .position(|w| w[0].is_ident("struct") && w[1].is_ident("StepBreakdown"))
+    else {
+        v.push(Violation {
+            file: view.f.rel.clone(),
+            line: 0,
+            rule: "metrics-class",
+            msg: "pub struct StepBreakdown not found — if it moved, update \
+                  analysis::passes::metrics_class"
+                .into(),
+        });
+        return;
+    };
+    let Some(open) = (at..toks.len()).find(|&j| toks[j].is_punct('{')) else { return };
+    let mut depth = 0i64;
+    let mut anchor = toks[open].line;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].is_punct('{') {
+            depth += 1;
+        } else if toks[j].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if depth == 1
+            && toks[j].is_ident("pub")
+            && toks.get(j + 1).is_some_and(|t| t.kind == Kind::Ident)
+            && toks.get(j + 2).is_some_and(|t| t.is_punct(':'))
+            && toks.get(j + 3).is_some_and(|t| t.is_ident("f64"))
+        {
+            let field = &toks[j + 1];
+            let classified = view.lx.comments.iter().any(|c| {
+                c.line > anchor
+                    && c.line < field.line
+                    && (c.text.contains("class: additive")
+                        || c.text.contains("class: concurrent")
+                        || c.text.contains("class: contained"))
+            });
+            if !classified {
+                v.push(Violation {
+                    file: view.f.rel.clone(),
+                    line: field.line,
+                    rule: "metrics-class",
+                    msg: format!(
+                        "StepBreakdown field `{}: f64` lacks a `class: \
+                         additive|concurrent|contained` doc tag",
+                        field.text
+                    ),
+                });
+            }
+            anchor = field.line;
+            j += 4;
+            continue;
+        }
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// collective-divergence + collective-order
+// ---------------------------------------------------------------------
+
+/// One collective call site: the `CollectiveOp` constructor kind and the
+/// line of the `.run(`/`.start(` call.
+#[derive(Clone, Debug)]
+struct Site {
+    kind: String,
+    line: usize,
+}
+
+/// Is token `i` the `.` of a `.run(`/`.start(` call whose arguments
+/// construct a `CollectiveOp`? Returns the site and the index past the
+/// closing paren.
+fn collective_at(toks: &[Tok], i: usize) -> Option<(Site, usize)> {
+    if !toks[i].is_punct('.') {
+        return None;
+    }
+    let m = toks.get(i + 1)?;
+    if !(m.is_ident("run") || m.is_ident("start")) {
+        return None;
+    }
+    if !toks.get(i + 2)?.is_punct('(') {
+        return None;
+    }
+    let close = match_paren(toks, i + 2);
+    let mut kind = None;
+    for k in i + 3..close.min(toks.len()) {
+        if toks[k].is_ident("CollectiveOp") && punct2(toks, k + 1, ':', ':') {
+            kind = toks.get(k + 3).map(|t| t.text.clone());
+            break;
+        }
+    }
+    kind.map(|kind| (Site { kind, line: m.line }, close + 1))
+}
+
+/// Split a `match` body into per-arm node regions: pattern tokens up to
+/// `=>`, then either a block arm or an expression arm running to the
+/// `,` at arm depth.
+fn match_arms<'b>(view: &FileView<'_>, body: &'b [Node]) -> Vec<Vec<&'b Node>> {
+    let toks = &view.lx.toks;
+    let mut arms = Vec::new();
+    let mut i = 0usize;
+    while i < body.len() {
+        // skip the pattern: to `=>` at paren depth 0
+        let mut pd = 0i64;
+        let mut found = false;
+        while i < body.len() {
+            if let Node::Tok(t) = &body[i] {
+                if toks[*t].is_punct('(') || toks[*t].is_punct('[') {
+                    pd += 1;
+                } else if toks[*t].is_punct(')') || toks[*t].is_punct(']') {
+                    pd -= 1;
+                } else if pd == 0
+                    && toks[*t].is_punct('=')
+                    && toks.get(t + 1).is_some_and(|n| n.is_punct('>'))
+                {
+                    i += 1; // the '>' token node
+                    found = true;
+                }
+            }
+            i += 1;
+            if found {
+                break;
+            }
+        }
+        if !found {
+            break;
+        }
+        // the arm value: nodes to the `,` at depth 0 (blocks included)
+        let mut arm: Vec<&'b Node> = Vec::new();
+        let mut pd = 0i64;
+        while i < body.len() {
+            match &body[i] {
+                Node::Tok(t) => {
+                    if toks[*t].is_punct('(') || toks[*t].is_punct('[') {
+                        pd += 1;
+                    } else if toks[*t].is_punct(')') || toks[*t].is_punct(']') {
+                        pd -= 1;
+                    } else if pd == 0 && toks[*t].is_punct(',') {
+                        i += 1;
+                        break;
+                    }
+                    arm.push(&body[i]);
+                }
+                Node::Block(_) => {
+                    arm.push(&body[i]);
+                    // a block arm may omit the trailing comma
+                    if pd == 0 {
+                        if let Some(Node::Tok(t)) = body.get(i + 1) {
+                            if toks[*t].is_punct(',') {
+                                i += 1;
+                            }
+                        }
+                        i += 1;
+                        break;
+                    }
+                }
+            }
+            i += 1;
+        }
+        arms.push(arm);
+    }
+    arms
+}
+
+/// Collect the collective sequence of a region: `uncond` sites always
+/// execute when the region does (loops assumed uniform-trip); `cond`
+/// sites sit under a further branch inside the region, so they may or
+/// may not execute.
+fn collect_seq(view: &FileView<'_>, nodes: &[&Node], uncond: &mut Vec<Site>, cond: &mut Vec<Site>) {
+    let toks = &view.lx.toks;
+    let mut i = 0usize;
+    while i < nodes.len() {
+        match nodes[i] {
+            Node::Block(b) => {
+                let inner: Vec<&Node> = b.nodes.iter().collect();
+                collect_seq(view, &inner, uncond, cond);
+                i += 1;
+            }
+            Node::Tok(t) => {
+                let t = *t;
+                if (toks[t].is_ident("if") || toks[t].is_ident("match")) && !view.test[t] {
+                    if let Some(br) = parse_branch_refs(view, nodes, i) {
+                        for arm in &br.arms {
+                            let mut u = Vec::new();
+                            let mut c = Vec::new();
+                            collect_seq(view, arm, &mut u, &mut c);
+                            cond.extend(u);
+                            cond.extend(c);
+                        }
+                        cond.extend(br.cond_sites.iter().cloned());
+                        i = br.next;
+                        continue;
+                    }
+                }
+                if !view.test[t] {
+                    if let Some((s, _)) = collective_at(toks, t) {
+                        uncond.push(s);
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// One parsed branch point — an `if`/`else if`/`else` chain or a
+/// `match` — over a `&[&Node]` region (arms are slices of refs).
+struct BranchRefs<'b> {
+    rankish: bool,
+    line: usize,
+    cond: String,
+    arms: Vec<Vec<&'b Node>>,
+    open_ended: bool,
+    next: usize,
+    cond_sites: Vec<Site>,
+}
+
+/// Parse the branch construct starting at `nodes[at]` (an `if` or
+/// `match` token). Returns `None` when the shape is unrecognizable.
+fn parse_branch_refs<'b>(
+    view: &FileView<'_>,
+    nodes: &[&'b Node],
+    at: usize,
+) -> Option<BranchRefs<'b>> {
+    let toks = &view.lx.toks;
+    let first = match nodes.get(at) {
+        Some(Node::Tok(t)) => *t,
+        _ => return None,
+    };
+    let line = toks[first].line;
+    let is_match = toks[first].is_ident("match");
+    let mut rankish = false;
+    let mut cond = String::new();
+    let mut cond_sites = Vec::new();
+    let mut arms: Vec<Vec<&'b Node>> = Vec::new();
+    let mut i = at;
+
+    let mut scan_cond = |i: &mut usize, rankish: &mut bool, cond: &mut String| -> Option<usize> {
+        let mut pd = 0i64;
+        let mut in_let_pattern = false;
+        let mut seen_any = false;
+        *i += 1;
+        while *i < nodes.len() {
+            match nodes[*i] {
+                Node::Block(_) if pd == 0 => return Some(*i),
+                Node::Block(_) => {}
+                Node::Tok(t) => {
+                    let t = *t;
+                    if !seen_any && toks[t].is_ident("let") {
+                        in_let_pattern = true;
+                    }
+                    seen_any = true;
+                    if toks[t].is_punct('(') || toks[t].is_punct('[') {
+                        pd += 1;
+                    } else if toks[t].is_punct(')') || toks[t].is_punct(']') {
+                        pd -= 1;
+                    } else if in_let_pattern
+                        && pd == 0
+                        && toks[t].is_punct('=')
+                        && !toks.get(t + 1).is_some_and(|n| n.is_punct('='))
+                        && !punct2(toks, t.saturating_sub(1), '=', '=')
+                    {
+                        in_let_pattern = false;
+                    } else if !in_let_pattern && toks[t].kind == Kind::Ident {
+                        if rankish_ident(&toks[t].text) {
+                            *rankish = true;
+                        }
+                        if cond.len() < 48 {
+                            if !cond.is_empty() {
+                                cond.push(' ');
+                            }
+                            cond.push_str(&toks[t].text);
+                        }
+                    }
+                    if let Some((s, _)) = collective_at(toks, t) {
+                        cond_sites.push(s);
+                    }
+                }
+            }
+            *i += 1;
+        }
+        None
+    };
+
+    if is_match {
+        let body = scan_cond(&mut i, &mut rankish, &mut cond)?;
+        let Node::Block(b) = nodes[body] else { return None };
+        arms = match_arms(view, &b.nodes);
+        return Some(BranchRefs { rankish, line, cond, arms, open_ended: false, next: body + 1, cond_sites });
+    }
+    let mut open_ended = true;
+    loop {
+        let arm_at = scan_cond(&mut i, &mut rankish, &mut cond)?;
+        let Node::Block(b) = nodes[arm_at] else { return None };
+        arms.push(b.nodes.iter().collect());
+        i = arm_at + 1;
+        let next_is_else = matches!(nodes.get(i), Some(Node::Tok(t)) if toks[*t].is_ident("else"));
+        if !next_is_else {
+            break;
+        }
+        i += 1;
+        match nodes.get(i) {
+            Some(Node::Tok(t)) if toks[*t].is_ident("if") => continue,
+            Some(Node::Block(b)) => {
+                arms.push(b.nodes.iter().collect());
+                open_ended = false;
+                i += 1;
+                break;
+            }
+            _ => break,
+        }
+    }
+    Some(BranchRefs { rankish, line, cond, arms, open_ended, next: i, cond_sites })
+}
+
+/// The divergence/order walker over one file.
+pub fn collective_flow(view: &FileView<'_>, v: &mut Vec<Violation>) {
+    let region: Vec<&Node> = view.root.nodes.iter().collect();
+    flow_region(view, &region, v);
+}
+
+fn flow_region(view: &FileView<'_>, nodes: &[&Node], v: &mut Vec<Violation>) {
+    let toks = &view.lx.toks;
+    let mut i = 0usize;
+    while i < nodes.len() {
+        match nodes[i] {
+            Node::Block(b) => {
+                let inner: Vec<&Node> = b.nodes.iter().collect();
+                flow_region(view, &inner, v);
+                i += 1;
+            }
+            Node::Tok(t) => {
+                let t = *t;
+                if (toks[t].is_ident("if") || toks[t].is_ident("match")) && !view.test[t] {
+                    if let Some(br) = parse_branch_refs(view, nodes, i) {
+                        analyze_branch(view, &br, nodes, v);
+                        for arm in &br.arms {
+                            flow_region(view, arm, v);
+                        }
+                        i = br.next;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Does an arm contain a top-level `return` (directly, not under a
+/// nested block)? Gates early-return promotion.
+fn arm_returns(view: &FileView<'_>, arm: &[&Node]) -> bool {
+    arm.iter().any(|n| matches!(n, Node::Tok(t) if view.lx.toks[*t].is_ident("return")))
+}
+
+fn analyze_branch(
+    view: &FileView<'_>,
+    br: &BranchRefs<'_>,
+    nodes: &[&Node],
+    v: &mut Vec<Violation>,
+) {
+    if !br.rankish {
+        return;
+    }
+    let mut seqs: Vec<(Vec<Site>, Vec<Site>)> = Vec::new();
+    for arm in &br.arms {
+        let mut u = Vec::new();
+        let mut c = Vec::new();
+        collect_seq(view, arm, &mut u, &mut c);
+        seqs.push((u, c));
+    }
+    if br.open_ended {
+        // `if rank-dep { … return }` guards: the code after the chain is
+        // the implicit else arm. Without returns it's an empty arm.
+        if !br.arms.is_empty() && br.arms.iter().all(|a| arm_returns(view, a)) {
+            let rest: Vec<&Node> = nodes[br.next..].to_vec();
+            let mut u = Vec::new();
+            let mut c = Vec::new();
+            collect_seq(view, &rest, &mut u, &mut c);
+            seqs.push((u, c));
+        } else {
+            seqs.push((Vec::new(), Vec::new()));
+        }
+    }
+    let total: usize = seqs.iter().map(|(u, c)| u.len() + c.len()).sum::<usize>()
+        + br.cond_sites.len();
+    if total == 0 {
+        return;
+    }
+    let kinds = |u: &[Site]| u.iter().map(|s| s.kind.clone()).collect::<Vec<_>>();
+    let all_equal = seqs.iter().all(|(_, c)| c.is_empty())
+        && br.cond_sites.is_empty()
+        && seqs.windows(2).all(|w| kinds(&w[0].0) == kinds(&w[1].0));
+    if all_equal {
+        return;
+    }
+    let order_case = !seqs.is_empty()
+        && seqs.iter().all(|(u, c)| !u.is_empty() && c.is_empty())
+        && br.cond_sites.is_empty();
+    if order_case {
+        if !suppressed(view, "rank-uniform", br.line) {
+            let shown: Vec<String> =
+                seqs.iter().map(|(u, _)| kinds(u).join(",")).collect();
+            v.push(Violation {
+                file: view.f.rel.clone(),
+                line: br.line,
+                rule: "collective-order",
+                msg: format!(
+                    "arms of the rank-dependent branch on `{}` issue different \
+                     collective sequences ({}) — every rank must see the identical \
+                     program order, or the family deadlocks/fails `[order]` at run time",
+                    br.cond,
+                    shown.join(" vs ")
+                ),
+            });
+        }
+        return;
+    }
+    for site in seqs
+        .iter()
+        .flat_map(|(u, c)| u.iter().chain(c.iter()))
+        .chain(br.cond_sites.iter())
+    {
+        if suppressed(view, "rank-uniform", site.line) {
+            continue;
+        }
+        v.push(Violation {
+            file: view.f.rel.clone(),
+            line: site.line,
+            rule: "collective-divergence",
+            msg: format!(
+                "collective {} is reachable only under the rank-dependent \
+                 condition `{}` — a subset of the group entering a round deadlocks \
+                 the rest; prove uniformity and annotate \
+                 `// lint: rank-uniform <why>`, or hoist the call",
+                site.kind, br.cond
+            ),
+        });
+    }
+}
+
+/// Does an enabled annotation of `rule` cover `line`? Coverage is the
+/// annotation's innermost enclosing block — put the annotation inside
+/// the guarded arm, next to the call it vouches for.
+fn suppressed(view: &FileView<'_>, rule: &str, line: usize) -> bool {
+    view.lx
+        .annos
+        .iter()
+        .filter(|a| a.rule == rule && !a.reason.is_empty())
+        .any(|a| {
+            let span = innermost_span(&view.root, a.line);
+            line >= span.0 && line <= span.1
+        })
+}
+
+fn innermost_span(root: &Block, line: usize) -> (usize, usize) {
+    let mut best = (root.open_line, root.close_line.max(root.open_line));
+    fn rec(b: &Block, line: usize, best: &mut (usize, usize)) {
+        if line < b.open_line || line > b.close_line {
+            return;
+        }
+        if b.close_line - b.open_line <= best.1 - best.0 {
+            *best = (b.open_line, b.close_line);
+        }
+        for n in &b.nodes {
+            if let Node::Block(c) = n {
+                rec(c, line, best);
+            }
+        }
+    }
+    rec(root, line, &mut best);
+    best
+}
+
+// ---------------------------------------------------------------------
+// lock-order
+// ---------------------------------------------------------------------
+
+/// First witness of an ordered pair of lock acquisitions.
+#[derive(Clone, Debug)]
+pub struct PairWitness {
+    pub file: String,
+    pub line: usize,
+    pub func: String,
+}
+
+pub type PairTable = BTreeMap<(String, String), PairWitness>;
+
+/// Collect per-function ordered lock pairs for one file (only called for
+/// `comm/`, `ckpt/`, `serve/`).
+pub fn lock_order_collect(view: &FileView<'_>, table: &mut PairTable) {
+    let region: Vec<&Node> = view.root.nodes.iter().collect();
+    each_fn(view, &region, &mut |name, body| {
+        let inner: Vec<&Node> = body.nodes.iter().collect();
+        let mut held: Vec<String> = Vec::new();
+        walk_locks(view, &inner, &mut held, name, table);
+    });
+}
+
+/// Find `fn NAME … { … }` items in a region, recursing into every block
+/// (impls, modules, nested fns).
+fn each_fn(view: &FileView<'_>, nodes: &[&Node], cb: &mut impl FnMut(&str, &Block)) {
+    let toks = &view.lx.toks;
+    let mut i = 0usize;
+    while i < nodes.len() {
+        match nodes[i] {
+            Node::Block(b) => {
+                let inner: Vec<&Node> = b.nodes.iter().collect();
+                each_fn(view, &inner, cb);
+                i += 1;
+            }
+            Node::Tok(t) => {
+                let t = *t;
+                if toks[t].is_ident("fn")
+                    && !view.test[t]
+                    && matches!(nodes.get(i + 1), Some(Node::Tok(n)) if toks[*n].kind == Kind::Ident)
+                {
+                    let name = match nodes[i + 1] {
+                        Node::Tok(n) => view.lx.toks[*n].text.clone(),
+                        _ => unreachable!("checked ident"),
+                    };
+                    // body = first sibling block before a `;`
+                    let mut j = i + 2;
+                    while j < nodes.len() {
+                        match nodes[j] {
+                            Node::Tok(s) if toks[*s].is_punct(';') => break,
+                            Node::Block(b) => {
+                                cb(&name, b);
+                                break;
+                            }
+                            _ => j += 1,
+                        }
+                    }
+                    i = j + 1;
+                    continue;
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+struct LockAcq {
+    name: String,
+    line: usize,
+    held: bool,
+}
+
+fn walk_locks(
+    view: &FileView<'_>,
+    nodes: &[&Node],
+    held: &mut Vec<String>,
+    func: &str,
+    table: &mut PairTable,
+) {
+    let base = held.len();
+    let toks = &view.lx.toks;
+    for n in nodes {
+        match n {
+            Node::Block(b) => {
+                let inner: Vec<&Node> = b.nodes.iter().collect();
+                walk_locks(view, &inner, held, func, table);
+            }
+            Node::Tok(t) => {
+                if view.test[*t] {
+                    continue;
+                }
+                if let Some(acq) = lock_acq_at(toks, *t) {
+                    for h in held.iter() {
+                        if *h != acq.name {
+                            table
+                                .entry((h.clone(), acq.name.clone()))
+                                .or_insert_with(|| PairWitness {
+                                    file: view.f.rel.clone(),
+                                    line: acq.line,
+                                    func: func.to_string(),
+                                });
+                        }
+                    }
+                    if acq.held {
+                        held.push(acq.name);
+                    }
+                }
+            }
+        }
+    }
+    held.truncate(base);
+}
+
+/// Recognize a lock acquisition at token `t`: `<chain>.lock()` (std
+/// mutex) or `lock(&<chain>)` / `util::lock(&<chain>)` (the
+/// poison-tolerant wrapper). The lock's name is the nearest field/var
+/// identifier; `let`-bound-and-statement-final acquisitions are held.
+fn lock_acq_at(toks: &[Tok], t: usize) -> Option<LockAcq> {
+    // `<chain> . lock ( )`
+    if toks[t].is_punct('.')
+        && toks.get(t + 1).is_some_and(|x| x.is_ident("lock"))
+        && punct2(toks, t + 2, '(', ')')
+    {
+        let name = chain_name_before(toks, t)?;
+        let mut j = t + 4;
+        if toks.get(j).is_some_and(|x| x.is_punct('.'))
+            && toks.get(j + 1).is_some_and(|x| x.is_ident("unwrap"))
+            && punct2(toks, j + 2, '(', ')')
+        {
+            j += 4;
+        }
+        let stmt_final = toks.get(j).is_some_and(|x| x.is_punct(';'));
+        return Some(LockAcq {
+            name,
+            line: toks[t + 1].line,
+            held: stmt_final && stmt_starts_with_let(toks, t),
+        });
+    }
+    // `lock ( & <chain> )` — the util::lock wrapper (possibly
+    // path-qualified); exclude method position `.lock(`
+    if toks[t].is_ident("lock")
+        && toks.get(t + 1).is_some_and(|x| x.is_punct('('))
+        && !(t > 0 && toks[t - 1].is_punct('.'))
+    {
+        let close = match_paren(toks, t + 1);
+        if close >= toks.len() {
+            return None;
+        }
+        let name = (t + 2..close)
+            .rev()
+            .find(|&k| toks[k].kind == Kind::Ident)
+            .map(|k| toks[k].text.clone())?;
+        let stmt_final = toks.get(close + 1).is_some_and(|x| x.is_punct(';'));
+        return Some(LockAcq {
+            name,
+            line: toks[t].line,
+            held: stmt_final && stmt_starts_with_let(toks, t),
+        });
+    }
+    None
+}
+
+/// Walk back over `a.b[c].d` to the chain's base-most *field* ident —
+/// the token just before the final `.`, skipping `[…]` index groups.
+fn chain_name_before(toks: &[Tok], dot: usize) -> Option<String> {
+    let mut k = dot;
+    loop {
+        if k == 0 {
+            return None;
+        }
+        k -= 1;
+        if toks[k].is_punct(']') {
+            let mut depth = 1usize;
+            while k > 0 && depth > 0 {
+                k -= 1;
+                if toks[k].is_punct(']') {
+                    depth += 1;
+                } else if toks[k].is_punct('[') {
+                    depth -= 1;
+                }
+            }
+            continue;
+        }
+        if toks[k].is_punct(')') {
+            // method-call result, e.g. `self.q().lock()`: name by method
+            let mut depth = 1usize;
+            while k > 0 && depth > 0 {
+                k -= 1;
+                if toks[k].is_punct(')') {
+                    depth += 1;
+                } else if toks[k].is_punct('(') {
+                    depth -= 1;
+                }
+            }
+            continue;
+        }
+        if toks[k].kind == Kind::Ident {
+            return Some(toks[k].text.clone());
+        }
+        return None;
+    }
+}
+
+/// Does the statement containing token `t` begin with `let`? Backscan to
+/// the nearest statement delimiter.
+fn stmt_starts_with_let(toks: &[Tok], t: usize) -> bool {
+    let mut k = t;
+    while k > 0 {
+        k -= 1;
+        let x = &toks[k];
+        if x.is_punct(';') || x.is_punct('{') || x.is_punct('}') {
+            return toks.get(k + 1).is_some_and(|n| n.is_ident("let"));
+        }
+    }
+    toks.first().is_some_and(|n| n.is_ident("let"))
+}
+
+/// Cross-file finalization: any pair present in both orders is an AB/BA
+/// inversion.
+pub fn lock_order_finalize(table: &PairTable, v: &mut Vec<Violation>) {
+    for ((a, b), w_ab) in table {
+        if a >= b {
+            continue;
+        }
+        let Some(w_ba) = table.get(&(b.clone(), a.clone())) else { continue };
+        v.push(Violation {
+            file: w_ba.file.clone(),
+            line: w_ba.line,
+            rule: "lock-order",
+            msg: format!(
+                "locks `{a}` and `{b}` are acquired in both orders: \
+                 {}:{} ({}) takes `{a}` then `{b}`, but {}:{} ({}) takes \
+                 `{b}` then `{a}` — two threads interleaving these deadlock; \
+                 pick one global order",
+                w_ab.file, w_ab.line, w_ab.func, w_ba.file, w_ba.line, w_ba.func
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// poison-path
+// ---------------------------------------------------------------------
+
+/// In rank-thread / lane-worker spawn closures (thread name mentions
+/// `rank` or `lane`), `unwrap`/`expect`/`panic!` must sit behind the
+/// poison protocol so a panic can never strand the peers parked in the
+/// same collective round. `CommRuntime::submit` closures are exempt by
+/// contract (catch_unwind + re-throw at `wait()`).
+pub fn poison_path(view: &FileView<'_>, v: &mut Vec<Violation>) {
+    let toks = &view.lx.toks;
+    for i in 0..toks.len() {
+        if view.test[i] {
+            continue;
+        }
+        let (arg_open, name_region) = if toks[i].is_punct('.')
+            && toks.get(i + 1).is_some_and(|t| t.is_ident("spawn"))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct('('))
+        {
+            (i + 2, builder_name_region(toks, i))
+        } else if toks[i].is_ident("spawn_named")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+        {
+            (i + 1, first_arg_region(toks, i + 1))
+        } else {
+            continue;
+        };
+        let Some((ns, ne)) = name_region else { continue };
+        let scoped = (ns..ne).any(|k| {
+            (toks[k].kind == Kind::Str || toks[k].kind == Kind::Ident)
+                && (toks[k].text.contains("rank") || toks[k].text.contains("lane"))
+        });
+        if !scoped {
+            continue;
+        }
+        let close = match_paren(toks, arg_open);
+        let routed = (arg_open + 1..close.min(toks.len())).any(|k| {
+            toks[k].kind == Kind::Ident
+                && (toks[k].text.to_ascii_lowercase().contains("poison")
+                    || toks[k].text == "catch_unwind")
+        });
+        if routed {
+            continue;
+        }
+        for k in arg_open + 1..close.min(toks.len()) {
+            let offender = (toks[k].is_ident("unwrap") || toks[k].is_ident("expect"))
+                && k > 0
+                && toks[k - 1].is_punct('.')
+                || (toks[k].is_ident("panic")
+                    && toks.get(k + 1).is_some_and(|t| t.is_punct('!')));
+            if offender && !suppressed(view, "poison-path", toks[k].line) {
+                v.push(Violation {
+                    file: view.f.rel.clone(),
+                    line: toks[k].line,
+                    rule: "poison-path",
+                    msg: format!(
+                        "`{}` inside a rank/lane worker closure — a panic here \
+                         strands every peer in the current round; route it \
+                         through Group::poison / a PoisonGuard (or annotate \
+                         `// lint: poison-path <why>`)",
+                        toks[k].text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// For a `.spawn(` at `dot`, find the `.name(..)` argument region of the
+/// same builder chain (backscan within the statement).
+fn builder_name_region(toks: &[Tok], dot: usize) -> Option<(usize, usize)> {
+    let mut k = dot;
+    while k > 0 {
+        k -= 1;
+        let t = &toks[k];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            return None;
+        }
+        if t.is_ident("name")
+            && k > 0
+            && toks[k - 1].is_punct('.')
+            && toks.get(k + 1).is_some_and(|x| x.is_punct('('))
+        {
+            return Some((k + 2, match_paren(toks, k + 1)));
+        }
+    }
+    None
+}
+
+/// First argument of the call whose `(` sits at `open`: tokens up to the
+/// `,` at depth 1 (or the close paren).
+fn first_arg_region(toks: &[Tok], open: usize) -> Option<(usize, usize)> {
+    let close = match_paren(toks, open);
+    let mut depth = 0i64;
+    for k in open..close.min(toks.len()) {
+        if toks[k].is_punct('(') || toks[k].is_punct('[') {
+            depth += 1;
+        } else if toks[k].is_punct(')') || toks[k].is_punct(']') {
+            depth -= 1;
+        } else if depth == 1 && toks[k].is_punct(',') {
+            return Some((open + 1, k));
+        }
+    }
+    Some((open + 1, close.min(toks.len())))
+}

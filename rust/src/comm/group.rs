@@ -1013,6 +1013,7 @@ impl Group {
                         .run(slot, CollectiveOp::Allgather { data, dt })?
                         .values();
                     let full = if slot == 0 {
+                        // lint: rank-uniform leaders is the slot-0 subgroup: every node's slot 0 takes this arm, the rest wait on the bcast below
                         let full = h
                             .leaders
                             .run(node, CollectiveOp::Allgather { data: node_cat, dt })?
@@ -1054,6 +1055,7 @@ impl Group {
             .run(slot, CollectiveOp::Allreduce { data, red: Reduce::Sum, dt })?
             .values();
         let full = if slot == 0 {
+            // lint: rank-uniform leaders is the slot-0 subgroup: every node's slot 0 takes this arm, the rest wait on the bcast below
             let total = h
                 .leaders
                 .run(node, CollectiveOp::Allreduce { data: partial, red: Reduce::Sum, dt })?
@@ -1080,6 +1082,7 @@ impl Group {
         let intra = &h.intra[node];
         let node_cat = intra.run(slot, CollectiveOp::AllgatherBits { data: bits })?.bits();
         let full = if slot == 0 {
+            // lint: rank-uniform leaders is the slot-0 subgroup: every node's slot 0 takes this arm, the rest wait on the bcast below
             let full = h
                 .leaders
                 .run(node, CollectiveOp::AllgatherBits { data: node_cat })?

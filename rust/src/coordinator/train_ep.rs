@@ -439,6 +439,7 @@ impl RankTrainer for EpTrainer {
             // into_f32 moves the buffer when no snapshot handle is still
             // alive (the steady state) instead of copying the shard
             let local = self.params.into_f32()?;
+            // lint: rank-uniform the gathers_at_finish legs below put every sibling of rank 0's ep group into this same allgather round
             let all_locals = self
                 .ep_group
                 .run(
@@ -463,6 +464,7 @@ impl RankTrainer for EpTrainer {
         // non-zero ranks of rank 0's ep group must still rendezvous
         if self.gathers_at_finish {
             let local = self.params.into_f32()?;
+            // lint: rank-uniform set exactly for the siblings of rank 0's ep group, matching the reporting rank's gather above
             self.ep_group
                 .run(
                     self.ep_rank,

@@ -39,6 +39,12 @@ pub const PROTOCOL: &str = "collective protocol violated";
 /// checkpoint it points at is wrong, and a retry replays both.
 pub const SERVE: &str = "serve startup failed";
 
+/// Domain prefix for `optimus lint` findings ([`crate::analysis`]) —
+/// one registered name per pass, so CI summaries and runbook greps key
+/// on the same stable tags as every other failure domain.
+/// Non-relaunchable: a lint finding is a source defect.
+pub const LINT: &str = "lint invariant violated";
+
 /// One registered check: a `(domain, name)` pair whose formatted tag is
 /// `"<domain> [<name>]"`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +93,16 @@ pub const CHECKS: &[CheckId] = &[
     CheckId { domain: PROTOCOL, name: "shape" },
     CheckId { domain: PROTOCOL, name: "dtype" },
     CheckId { domain: PROTOCOL, name: "stall" },
+    // static analysis passes (analysis/passes.rs::RULES, same order)
+    CheckId { domain: LINT, name: "check-strings" },
+    CheckId { domain: LINT, name: "check-coverage" },
+    CheckId { domain: LINT, name: "named-spawn" },
+    CheckId { domain: LINT, name: "lock-discipline" },
+    CheckId { domain: LINT, name: "metrics-class" },
+    CheckId { domain: LINT, name: "collective-divergence" },
+    CheckId { domain: LINT, name: "collective-order" },
+    CheckId { domain: LINT, name: "lock-order" },
+    CheckId { domain: LINT, name: "poison-path" },
 ];
 
 /// Is `(domain, name)` a registered check?

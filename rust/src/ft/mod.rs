@@ -111,6 +111,7 @@ pub fn classify(err: &anyhow::Error) -> FailureKind {
         || s.contains("parallelism plan mismatch")
         || s.contains(checks::RESUME)
         || s.contains(checks::SERVE)
+        || s.contains(checks::LINT)
         || s.contains("unknown model config")
     {
         FailureKind::Config
@@ -362,6 +363,14 @@ mod tests {
         // serve startup preflights are deterministic config errors too
         assert_eq!(
             classify(&anyhow!("serve startup failed [kv-oom]: pool too small")),
+            FailureKind::Config
+        );
+        // lint findings are source defects: relaunching can't fix them
+        assert_eq!(
+            classify(&anyhow!(
+                "{}",
+                checks::msg(checks::LINT, "collective-divergence", "src/x.rs:4")
+            )),
             FailureKind::Config
         );
         assert_eq!(parse_rank(&anyhow!("rank 7: x")), Some(7));

@@ -37,9 +37,11 @@
 //!         measured perf-gate bench file (BENCH_PR8.json or the committed
 //!         ci/bench_baseline.json) and report per-term prediction error
 //!         [--model M --fur]; absent/zero bench values are record-only
-//!   lint [--root DIR]           repo invariant lint: stable check-string
-//!         registry/coverage, named-thread, lock-discipline and metrics
-//!         classification rules over rust/src + rust/tests
+//!   lint [--root DIR]           repo invariant lint: nine token-structured
+//!         passes over rust/src + rust/tests — check-string registry and
+//!         coverage, named-thread, lock-discipline, metrics classification,
+//!         collective divergence/order, lock-order, poison-path
+//!         [--json FILE --sarif FILE for machine-readable findings]
 //!
 //! `--ckpt-dir` enables sharded async checkpointing AND auto-resume: if
 //! the directory already holds a committed checkpoint of the same model,
@@ -87,7 +89,7 @@ const SERVE_FLAGS: &[&str] = &[
 const PLANS_FLAGS: &[&str] = &["world", "model", "steps", "data", "dtype"];
 const SCALING_FLAGS: &[&str] = &["fur", "model"];
 const PREDICT_FLAGS: &[&str] = &["model", "fur"];
-const LINT_FLAGS: &[&str] = &["root"];
+const LINT_FLAGS: &[&str] = &["root", "json", "sarif"];
 
 fn main() -> optimus::Result<()> {
     let args = Args::from_env();
@@ -517,21 +519,42 @@ fn do_plans(args: &Args) -> optimus::Result<()> {
 /// `optimus lint` — run the crate's invariant lint (see
 /// `optimus::analysis`) and fail loudly on any violation. CI runs this
 /// as a blocking job; `--root` points it at a different checkout.
+/// `--json`/`--sarif` write machine-readable findings (SARIF feeds
+/// GitHub code scanning) carrying exactly the human-format findings.
 fn do_lint(args: &Args) -> optimus::Result<()> {
+    use optimus::ft::checks;
     check(args, LINT_FLAGS)?;
     let root = args
         .get("root")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(optimus::analysis::default_root);
+    let t0 = std::time::Instant::now();
     let violations = optimus::analysis::run(&root)?;
+    let secs = t0.elapsed().as_secs_f64();
+    if let Some(p) = args.get("json") {
+        std::fs::write(p, optimus::analysis::to_json(&violations))?;
+    }
+    if let Some(p) = args.get("sarif") {
+        std::fs::write(p, optimus::analysis::to_sarif(&violations, "rust/"))?;
+    }
     if violations.is_empty() {
-        println!("lint clean: {} registered checks, 0 violations", optimus::ft::checks::CHECKS.len());
+        println!(
+            "lint clean: {} passes, {} registered checks, 0 violations ({secs:.2}s)",
+            optimus::analysis::RULES.len(),
+            checks::CHECKS.len()
+        );
         return Ok(());
     }
     for v in &violations {
         eprintln!("{v}");
     }
-    Err(anyhow!("lint failed with {} violation(s)", violations.len()))
+    for rule in optimus::analysis::RULES {
+        let n = violations.iter().filter(|v| v.rule == *rule).count();
+        if n > 0 {
+            eprintln!("{}", checks::msg(checks::LINT, *rule, format_args!("{n} finding(s)")));
+        }
+    }
+    Err(anyhow!("lint failed with {} violation(s) in {secs:.2}s", violations.len()))
 }
 
 /// `optimus predict <bench.json>` — run the cluster analytic model
